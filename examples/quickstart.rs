@@ -1,0 +1,59 @@
+//! Quickstart: the 60-second NNCG tour.
+//!
+//! 1. Build the paper's ball classifier (Table I).
+//! 2. Generate its ANSI C, compile it, dlopen it.
+//! 3. Classify a synthetic ball patch and time it against the naive
+//!    interpreter.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use nncg::bench_harness::{bench, BenchConfig};
+use nncg::cc::CompiledCnn;
+use nncg::codegen::{generate_c, CodegenOptions};
+use nncg::graph::zoo;
+use nncg::interp;
+use nncg::util::XorShift64;
+use nncg::vision::render;
+
+fn main() -> anyhow::Result<()> {
+    // A trained model would come from `nncg::model::load("models/ball")`;
+    // random weights keep the example self-contained (latency is
+    // weight-independent).
+    let model = zoo::ball_classifier().with_random_weights(2020);
+    println!("{}", model.describe());
+
+    // The paper's artifact: one dependency-free C file.
+    let opts = CodegenOptions::sse3_full_unroll();
+    let c_src = generate_c(&model, &opts)?;
+    println!(
+        "generated {} lines of C ({} bytes), ISA/unroll = {}",
+        c_src.lines().count(),
+        c_src.len(),
+        opts.tag()
+    );
+
+    // Compile + load + run.
+    let work = std::env::temp_dir().join("nncg-quickstart");
+    let cnn = CompiledCnn::build(&model, &opts, &work)?;
+    let mut rng = XorShift64::new(7);
+    let patch = render::ball_patch(true, &mut rng);
+    let probs = cnn.infer(&patch)?;
+    println!("P(no-ball, ball) = ({:.4}, {:.4})", probs.data()[0], probs.data()[1]);
+
+    // Generated C vs interpreter: correctness + speed.
+    let reference = interp::run(&model, &patch)?;
+    println!("max |C - interp| = {:.2e}", probs.max_abs_diff(&reference)?);
+
+    let cfg = BenchConfig::small();
+    let mut out = vec![0.0f32; 2];
+    let fast = bench(&cfg, || cnn.infer_into(patch.data(), &mut out));
+    let slow = bench(&BenchConfig { iters: 500, ..cfg }, || {
+        let _ = interp::run(&model, &patch).unwrap();
+    });
+    println!("generated C: {}", fast.summary());
+    println!("interpreter: {}", slow.summary());
+    println!("speed-up: {:.1}x", slow.median_us / fast.median_us);
+    Ok(())
+}

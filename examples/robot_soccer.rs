@@ -1,0 +1,98 @@
+//! End-to-end driver (the repo's E2E validation): the paper's robot-soccer
+//! scenario on a full serving stack.
+//!
+//! Per frame: render a synthetic soccer scene → scanline segmentation +
+//! circle fitting extracts ball candidates (§III-A, ~20/frame in the
+//! paper) → every 16×16 candidate patch is classified by the ball CNN
+//! through the coordinator → detections assembled with NMS.
+//!
+//! Runs the same pipeline over three interchangeable engines (generated C,
+//! naive interpreter, XLA/PJRT artifact) and reports per-frame latency —
+//! the paper's central claim rendered as one table. With trained weights
+//! in `models/` it also reports detection recall against ground truth.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example robot_soccer
+//! ```
+
+use nncg::bench_harness::Table;
+use nncg::codegen::CodegenOptions;
+use nncg::coordinator;
+use nncg::experiments::{build_engine, default_artifacts_dir, default_weights_dir, default_work_dir, load_model};
+use nncg::runtime::EngineKind;
+use nncg::tensor::Tensor;
+use nncg::util::{fmt_us, XorShift64};
+use nncg::vision::{ball, nms, render};
+
+const FRAMES: usize = 40;
+
+fn main() -> anyhow::Result<()> {
+    let model = load_model("ball", &default_weights_dir())?;
+    let trained = default_weights_dir().join("ball.nncgw").exists();
+    println!(
+        "ball classifier: {} params, weights: {}",
+        model.num_params(),
+        if trained { "trained (models/)" } else { "seeded random" }
+    );
+
+    let mut table = Table::new(
+        &format!("robot_soccer: {FRAMES} frames end-to-end (extract + classify + NMS)"),
+        &["engine", "frames/s", "candidates/frame", "extract µs/frame", "classify µs/frame", "recall"],
+    );
+
+    for kind in [EngineKind::Nncg, EngineKind::Interp, EngineKind::Xla] {
+        let engine = match build_engine(kind, &model, &CodegenOptions::sse3(), &default_artifacts_dir(), &default_work_dir()) {
+            Ok(e) => e,
+            Err(e) => {
+                eprintln!("{}: unavailable ({e})", kind.name());
+                continue;
+            }
+        };
+        let handle = coordinator::serve_single("ball", engine, 1);
+
+        let mut rng = XorShift64::new(4242);
+        let (mut n_cand, mut extract_us, mut classify_us) = (0usize, 0.0f64, 0.0f64);
+        let (mut gt_balls, mut hits) = (0usize, 0usize);
+        let t_start = std::time::Instant::now();
+        for _ in 0..FRAMES {
+            let (img, truth) = render::soccer_frame(60, 80, 1 + rng.below(2), rng.below(3), &mut rng);
+            let t0 = std::time::Instant::now();
+            let cands = ball::extract_candidates(&img, &ball::BallExtractorConfig::default());
+            extract_us += t0.elapsed().as_secs_f64() * 1e6;
+            n_cand += cands.len();
+
+            let patches: Vec<Tensor> = cands.iter().map(|c| ball::candidate_patch(&img, c)).collect();
+            let t1 = std::time::Instant::now();
+            let outs = if patches.is_empty() { vec![] } else { handle.infer_burst("ball", patches)? };
+            classify_us += t1.elapsed().as_secs_f64() * 1e6;
+
+            let dets: Vec<_> = cands
+                .iter()
+                .zip(&outs)
+                .filter(|(_, o)| o.data()[1] > 0.5)
+                .map(|(c, o)| ball::to_detection(c, o.data()[1]))
+                .collect();
+            let dets = nms(dets, 0.3);
+            gt_balls += truth.balls.len();
+            for gt in &truth.balls {
+                if dets.iter().any(|d| d.iou(gt) > 0.25) {
+                    hits += 1;
+                }
+            }
+        }
+        let wall = t_start.elapsed().as_secs_f64();
+        handle.shutdown();
+
+        table.row(vec![
+            kind.name().to_string(),
+            format!("{:.1}", FRAMES as f64 / wall),
+            format!("{:.1}", n_cand as f64 / FRAMES as f64),
+            fmt_us(extract_us / FRAMES as f64),
+            fmt_us(classify_us / FRAMES as f64),
+            if trained { format!("{:.0}%", 100.0 * hits as f64 / gt_balls.max(1) as f64) } else { "n/a (untrained)".into() },
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(recall is only meaningful after `make train`; latency columns are the paper's story)");
+    Ok(())
+}

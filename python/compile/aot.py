@@ -1,0 +1,115 @@
+"""AOT lowering: JAX model (+ Pallas kernels) -> HLO text artifacts.
+
+For every model, bakes the exported weights (``models/<name>.nncgw``, or
+seeded init if absent) into the computation as constants — the paper's
+principle P3 at the HLO level — and lowers
+
+    f(x_flat: f32[in_numel]) -> (f32[out_numel],)
+
+to HLO **text** at ``artifacts/<name>.hlo.txt``. The Rust runtime
+(``rust/src/runtime``) loads the text, compiles it once on the PJRT CPU
+client, and executes it on the request path; Python is never loaded again.
+
+HLO text, not ``.serialize()``: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .export import read_nncgw
+from .model import ARCHS, forward_pallas, init_params
+
+
+def load_params(name: str, models_dir: str):
+    """Exported weights if present, else seeded init (matching export.py)."""
+    path = os.path.join(models_dir, f"{name}.nncgw")
+    if not os.path.exists(path):
+        return init_params(name, seed=1234)
+    recs = read_nncgw(path)
+    params = []
+    for i, (kind, _cfg) in enumerate(ARCHS[name]["layers"]):
+        if kind == "conv":
+            params.append(
+                {"w": jnp.asarray(recs[f"layer{i}.weights"]), "b": jnp.asarray(recs[f"layer{i}.bias"])}
+            )
+        elif kind == "batchnorm":
+            params.append(
+                {
+                    "gamma": jnp.asarray(recs[f"layer{i}.gamma"]),
+                    "beta": jnp.asarray(recs[f"layer{i}.beta"]),
+                    "mean": jnp.asarray(recs[f"layer{i}.mean"]),
+                    "var": jnp.asarray(recs[f"layer{i}.variance"]),
+                }
+            )
+        else:
+            params.append(None)
+    return params
+
+
+def flat_fn(name: str, params, use_pallas: bool = True):
+    """The exported computation: flat f32 in, 1-tuple flat f32 out."""
+    spec = ARCHS[name]
+    in_shape = spec["input"]
+
+    def f(x_flat):
+        x = x_flat.reshape(in_shape)
+        if use_pallas:
+            y = forward_pallas(params, x, name, interpret=True)
+        else:
+            from .model import forward
+
+            y = forward(params, x, name)
+        return (y.reshape(-1),)
+
+    return f, int(np.prod(in_shape))
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe route).
+
+    ``as_hlo_text(True)`` = ``print_large_constants=True``: the default
+    printer elides big weight tensors as ``constant({...})``, which the old
+    text parser silently reads back as *zeros* — the baked weights (P3!)
+    must be printed in full.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def lower_model(name: str, models_dir: str, use_pallas: bool = True) -> str:
+    params = load_params(name, models_dir)
+    f, in_numel = flat_fn(name, params, use_pallas)
+    spec = jax.ShapeDtypeStruct((in_numel,), jnp.float32)
+    return to_hlo_text(jax.jit(f).lower(spec))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models-dir", default="../models")
+    ap.add_argument("--models", nargs="*", default=list(ARCHS))
+    ap.add_argument("--no-pallas", action="store_true", help="lower the pure-jnp path instead")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.models:
+        text = lower_model(name, args.models_dir, use_pallas=not args.no_pallas)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"{name}: wrote {len(text)} chars to {path}")
+
+
+if __name__ == "__main__":
+    main()

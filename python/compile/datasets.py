@@ -1,0 +1,155 @@
+"""Synthetic datasets standing in for the paper's corpora.
+
+Paper datasets (not available offline):
+* ball: 455,107 RoboCup candidate patches (125,615 positives), 16x16.
+* pedestrian: Daimler benchmark, 49,000 crops (24,000 positives), 18x36.
+* robot: RoboCup scenes for the YOLO-style detector.
+
+These generators produce structurally analogous data — high-contrast
+ball-like discs vs field clutter, dark pedestrian silhouettes vs street
+texture, rendered soccer scenes with robot boxes — mirroring the Rust
+renderer (``rust/src/vision/render.rs``). Inference *latency*, the paper's
+measured quantity, is independent of the pixels; the datasets exist to
+prove the train -> export -> codegen -> deploy pipeline end to end with
+honest accuracy numbers on a learnable task.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def ball_batch(n: int, rng: np.random.Generator):
+    """(x, y): x (n,16,16,1) f32 in [0,1]; y (n,) int {0: no-ball, 1: ball}."""
+    xs = np.empty((n, 16, 16, 1), np.float32)
+    ys = rng.integers(0, 2, n)
+    for i in range(n):
+        xs[i] = _ball_patch(bool(ys[i]), rng)
+    return xs, ys.astype(np.int32)
+
+
+def _ball_patch(positive: bool, rng: np.random.Generator):
+    img = 0.3 + 0.15 * rng.random((16, 16, 1), np.float32)
+    if positive:
+        r = int(rng.integers(4, 7))
+        cy, cx = 8 + int(rng.integers(-1, 2)), 8 + int(rng.integers(-1, 2))
+        yy, xx = np.mgrid[0:16, 0:16]
+        d = np.sqrt((yy - cy) ** 2 + (xx - cx) ** 2)
+        disc = d <= r
+        img[..., 0][disc] = 0.95 - 0.1 * (d[disc] / r)
+        for _ in range(3):  # dark spots
+            a = rng.random() * 2 * np.pi
+            rr = rng.random() * 0.6 * r
+            sy, sx = cy + rr * np.sin(a), cx + rr * np.cos(a)
+            spot = np.sqrt((yy - sy) ** 2 + (xx - sx) ** 2) < 0.3 * r
+            img[..., 0][spot & disc] = 0.15
+    else:
+        kind = rng.integers(0, 3)
+        if kind == 0:  # field line
+            row = int(rng.integers(0, 16))
+            img[row, :, 0] = 0.8
+        elif kind == 1:  # bright blob (robot limb)
+            t, l = int(rng.integers(0, 8)), int(rng.integers(0, 8))
+            img[t : t + 8, l : l + 4, 0] = 0.85
+        # kind == 2: plain field
+    return img
+
+
+def pedestrian_batch(n: int, rng: np.random.Generator):
+    """(x, y): x (n,36,18,1); y (n,) int {0: none, 1: pedestrian}."""
+    xs = np.empty((n, 36, 18, 1), np.float32)
+    ys = rng.integers(0, 2, n)
+    for i in range(n):
+        xs[i] = _pedestrian_patch(bool(ys[i]), rng)
+    return xs, ys.astype(np.int32)
+
+
+def _pedestrian_patch(positive: bool, rng: np.random.Generator):
+    img = 0.4 + 0.2 * rng.random((36, 18, 1), np.float32)
+    if positive:
+        cx = 9 + int(rng.integers(-1, 2))
+        img[2:8, max(cx - 2, 0) : cx + 3, 0] = 0.12 + 0.05 * rng.random()  # head
+        img[8:22, max(cx - 3, 0) : cx + 4, 0] = 0.15 + 0.05 * rng.random()  # torso
+        img[22:34, max(cx - 2, 0) : cx, 0] = 0.18 + 0.05 * rng.random()  # legs
+        img[22:34, cx + 1 : cx + 3, 0] = 0.18 + 0.05 * rng.random()
+    elif rng.random() < 0.5:  # pole distractor
+        col = int(rng.integers(0, 18))
+        img[:, col, 0] = 0.2
+    return img
+
+
+# --- robot detector (YOLO-style targets) -----------------------------------
+
+GRID_H, GRID_W, N_ANCHORS = 15, 20, 4
+ANCHORS = [(0.8, 2.0), (1.2, 3.0), (1.8, 4.0), (2.5, 5.0)]  # (w, h) in cells
+IMG_H, IMG_W = 60.0, 80.0
+
+
+def robot_scene(rng: np.random.Generator):
+    """One (60,80,3) scene and its list of ground-truth boxes
+    (y, x, h, w in pixels)."""
+    img = np.empty((60, 80, 3), np.float32)
+    base = 0.35 + 0.1 * (np.arange(60, dtype=np.float32) / 60.0)[:, None]
+    img[...] = (base + 0.03 * (rng.random((60, 80), np.float32) - 0.5))[..., None]
+    img[30, :, :] = 0.8  # field line
+    boxes = []
+    for _ in range(int(rng.integers(1, 3))):
+        rh, rw = int(rng.integers(16, 24)), int(rng.integers(6, 12))
+        top = int(rng.integers(0, 60 - rh))
+        left = int(rng.integers(0, 80 - rw))
+        frac = (np.arange(top, top + rh, dtype=np.float32) - top) / rh
+        body = 0.85 - 0.15 * np.abs(np.sin(frac * 6.0))
+        img[top : top + rh, left : left + rw, :] = body[:, None, None]
+        boxes.append((float(top), float(left), float(rh), float(rw)))
+    return img, boxes
+
+
+def robot_target(boxes):
+    """Encode ground-truth boxes into a (15,20,20) YOLO target + mask.
+
+    Returns (target, obj_mask, box_mask): target holds the regression
+    values at responsible cells, obj_mask marks objectness channels
+    (positive AND negative), box_mask marks box channels at positives only.
+    Mirrors ``rust/src/vision/yolo.rs::encode_target``.
+    """
+    cell_h, cell_w = IMG_H / GRID_H, IMG_W / GRID_W
+    target = np.zeros((GRID_H, GRID_W, N_ANCHORS * 5), np.float32)
+    obj_mask = np.zeros_like(target)
+    box_mask = np.zeros_like(target)
+    # all objectness channels are supervised (negatives toward 0)
+    for a in range(N_ANCHORS):
+        obj_mask[:, :, a * 5 + 4] = 1.0
+        target[:, :, a * 5 + 4] = -4.0  # logit of ~0.018
+    logit = lambda p: float(np.log(np.clip(p, 1e-4, 1 - 1e-4) / (1 - np.clip(p, 1e-4, 1 - 1e-4))))
+    for (y, x, h, w) in boxes:
+        cy, cx = y + h / 2, x + w / 2
+        gy, gx = min(int(cy / cell_h), GRID_H - 1), min(int(cx / cell_w), GRID_W - 1)
+        best_a, best_iou = 0, -1.0
+        for a, (aw, ah) in enumerate(ANCHORS):
+            aw_px, ah_px = aw * cell_w, ah * cell_h
+            inter = min(w, aw_px) * min(h, ah_px)
+            union = w * h + aw_px * ah_px - inter
+            if inter / union > best_iou:
+                best_iou, best_a = inter / union, a
+        aw, ah = ANCHORS[best_a]
+        base = best_a * 5
+        target[gy, gx, base + 0] = logit(cx / cell_w - gx)
+        target[gy, gx, base + 1] = logit(cy / cell_h - gy)
+        target[gy, gx, base + 2] = float(np.log(w / (aw * cell_w)))
+        target[gy, gx, base + 3] = float(np.log(h / (ah * cell_h)))
+        target[gy, gx, base + 4] = logit(0.95)
+        box_mask[gy, gx, base : base + 4] = 1.0
+    return target, obj_mask, box_mask
+
+
+def robot_batch(n: int, rng: np.random.Generator):
+    """(x, target, obj_mask, box_mask) arrays for n scenes."""
+    xs = np.empty((n, 60, 80, 3), np.float32)
+    ts = np.empty((n, GRID_H, GRID_W, N_ANCHORS * 5), np.float32)
+    oms = np.empty_like(ts)
+    bms = np.empty_like(ts)
+    for i in range(n):
+        img, boxes = robot_scene(rng)
+        xs[i] = img
+        ts[i], oms[i], bms[i] = robot_target(boxes)
+    return xs, ts, oms, bms

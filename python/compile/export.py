@@ -1,0 +1,142 @@
+"""Export trained parameters to the Rust interchange formats.
+
+Writes ``<out>/<name>.json`` (architecture, the schema of
+``rust/src/model/mod.rs``) and ``<out>/<name>.nncgw`` (binary weights, the
+format of ``rust/src/model/weights.rs``). Record names are ``layer{i}.*``
+with ``i`` indexing the spec's layer list — identical to the Rust zoo's
+layer ordering.
+
+``python -m compile.export --init`` writes seeded Glorot weights without
+training, so ``make artifacts`` works before ``make train`` has run.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+
+import numpy as np
+
+from .model import ARCHS, init_params
+
+MAGIC = b"NNCGW1\x00\x00"
+
+
+def arch_json(name: str) -> str:
+    """Architecture JSON matching rust/src/model schema."""
+    spec = ARCHS[name]
+    layers = []
+    for kind, cfg in spec["layers"]:
+        if kind == "conv":
+            layers.append(
+                {
+                    "kind": "conv2d",
+                    "c_out": cfg["c_out"],
+                    "kernel": list(cfg["kernel"]),
+                    "stride": list(cfg["stride"]),
+                    "padding": cfg["padding"],
+                    "activation": "none",
+                }
+            )
+        elif kind == "maxpool":
+            layers.append({"kind": "maxpool", "pool": list(cfg["pool"]), "stride": list(cfg["stride"])})
+        elif kind == "relu":
+            layers.append({"kind": "relu"})
+        elif kind == "leaky_relu":
+            layers.append({"kind": "leaky_relu", "alpha": cfg["alpha"]})
+        elif kind == "softmax":
+            layers.append({"kind": "softmax"})
+        elif kind == "batchnorm":
+            layers.append({"kind": "batchnorm", "channels": cfg["channels"], "epsilon": 1e-3})
+        elif kind == "dropout":
+            layers.append({"kind": "dropout", "rate": cfg["rate"]})
+        else:
+            raise ValueError(kind)
+    return json.dumps({"name": name, "input": list(spec["input"]), "layers": layers})
+
+
+def weight_records(name: str, params) -> list[tuple[str, np.ndarray]]:
+    """Named tensors in Rust loader order."""
+    records = []
+    for i, (kind, _cfg) in enumerate(ARCHS[name]["layers"]):
+        p = params[i]
+        if kind == "conv":
+            records.append((f"layer{i}.weights", np.asarray(p["w"], np.float32)))
+            records.append((f"layer{i}.bias", np.asarray(p["b"], np.float32)))
+        elif kind == "batchnorm":
+            records.append((f"layer{i}.gamma", np.asarray(p["gamma"], np.float32)))
+            records.append((f"layer{i}.beta", np.asarray(p["beta"], np.float32)))
+            records.append((f"layer{i}.mean", np.asarray(p["mean"], np.float32)))
+            records.append((f"layer{i}.variance", np.asarray(p["var"], np.float32)))
+    return records
+
+
+def write_nncgw(path: str, records: list[tuple[str, np.ndarray]]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(records)))
+        for name, arr in records:
+            arr = np.ascontiguousarray(arr, np.float32)
+            nb = name.encode()
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_nncgw(path: str) -> dict[str, np.ndarray]:
+    """Read the binary format back (round-trip tests)."""
+    with open(path, "rb") as f:
+        data = f.read()
+    assert data[:8] == MAGIC, "bad magic"
+    pos = 8
+    (count,) = struct.unpack_from("<I", data, pos)
+    pos += 4
+    out = {}
+    for _ in range(count):
+        (nlen,) = struct.unpack_from("<I", data, pos)
+        pos += 4
+        name = data[pos : pos + nlen].decode()
+        pos += nlen
+        (rank,) = struct.unpack_from("<I", data, pos)
+        pos += 4
+        dims = struct.unpack_from(f"<{rank}I", data, pos)
+        pos += 4 * rank
+        n = int(np.prod(dims)) if rank else 1
+        arr = np.frombuffer(data, np.float32, n, pos).reshape(dims)
+        pos += 4 * n
+        out[name] = arr
+    assert pos == len(data), "trailing bytes"
+    return out
+
+
+def export_model(name: str, params, out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        f.write(arch_json(name))
+    write_nncgw(os.path.join(out_dir, f"{name}.nncgw"), weight_records(name, params))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../models")
+    ap.add_argument("--init", action="store_true", help="write seeded untrained weights")
+    ap.add_argument("--only-missing", action="store_true", help="skip models that already have files")
+    ap.add_argument("--models", nargs="*", default=list(ARCHS))
+    args = ap.parse_args()
+    for name in args.models:
+        stem = os.path.join(args.out, name)
+        if args.only_missing and os.path.exists(stem + ".json") and os.path.exists(stem + ".nncgw"):
+            print(f"{name}: exists, skipping")
+            continue
+        params = init_params(name, seed=1234)
+        export_model(name, params, args.out)
+        print(f"{name}: wrote {stem}.json / .nncgw ({'untrained' if args.init else 'init'} weights)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Pallas direct-convolution kernel (Layer 1).
+
+TPU adaptation of the paper's NNCG convolution (DESIGN.md
+SSHardware-Adaptation):
+
+* The zero-padded input x-hat (Eq. 1) is materialized once outside the
+  kernel (``jnp.pad``), exactly like the generated C's ``nncg_pad`` buffer,
+  so the kernel body is branch-free.
+* The grid runs over **output rows**; each program instance computes one
+  (w_out, c_out) row block -- the BlockSpec analogue of the paper's "keep
+  the two outermost loops" unroll level.
+* Kernel taps (n, m) are Python loops, unrolled at trace time because the
+  kernel extent is a compile-time constant -- principle P1.
+* The inner reduction is ``(w_out, c_in) @ (c_in, c_out)`` with channels
+  minor, mapping the paper's SIMD-over-output-channels (P4) onto the
+  MXU/VPU lane dimension.
+* Activations are fused on the accumulator via ``jnp.where``/``maximum``
+  (P2: predication instead of branches).
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU performance is estimated analytically in
+EXPERIMENTS.md SSPerf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _same_pad(in_size: int, k: int, s: int) -> tuple[int, int]:
+    """Keras 'same' padding split (Eq. 1): returns (before, after)."""
+    out = -(-in_size // s)  # ceil
+    total = max((out - 1) * s + k - in_size, 0)
+    return total // 2, total - total // 2
+
+
+def _conv_row_kernel(x_ref, w_ref, b_ref, o_ref, *, h_k, w_k, sh, sw, w_out, act, alpha):
+    """One grid step: compute output row ``i`` for all channels."""
+    i = pl.program_id(0)
+    x = x_ref[...]  # (ph, pw, c_in) -- whole padded input resident in VMEM
+    w = w_ref[...]  # (h_k, w_k, c_in, c_out)
+    b = b_ref[...]  # (c_out,)
+    c_out = b.shape[0]
+    acc = jnp.zeros((w_out, c_out), jnp.float32) + b[None, :]
+    for n in range(h_k):  # P1: unrolled at trace time
+        row = jax.lax.dynamic_slice_in_dim(x, i * sh + n, 1, axis=0)[0]  # (pw, c_in)
+        for m in range(w_k):
+            # strided column gather: inputs for all w_out outputs at tap m
+            cols = jax.lax.slice_in_dim(row, m, m + sw * (w_out - 1) + 1, sw, axis=0)
+            acc = acc + cols.astype(jnp.float32) @ w[n, m].astype(jnp.float32)  # P4: MXU matmul
+    if act == "relu":
+        acc = jnp.maximum(acc, 0.0)  # P2: predication
+    elif act == "leaky_relu":
+        acc = jnp.maximum(acc, alpha * acc)
+    o_ref[0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("stride", "padding", "act", "alpha", "interpret")
+)
+def conv2d_pallas(x, w, b, stride=(1, 1), padding="valid", act="none", alpha=0.1, interpret=True):
+    """Pallas conv over one HWC image; numerically equal to ``ref.conv2d``
+    (+ fused activation).
+
+    x: (h, w, c_in) f32; w: (hk, wk, c_in, c_out); b: (c_out,).
+    """
+    h_in, w_in, c_in = x.shape
+    h_k, w_k, _, c_out = w.shape
+    sh, sw = stride
+    if padding == "same":
+        (pt, pb) = _same_pad(h_in, h_k, sh)
+        (pl_, pr) = _same_pad(w_in, w_k, sw)
+        x = jnp.pad(x, ((pt, pb), (pl_, pr), (0, 0)))  # Eq. 1 materialized
+    elif padding != "valid":
+        raise ValueError(f"unknown padding {padding!r}")
+    ph, pw, _ = x.shape
+    h_out = (ph - h_k) // sh + 1
+    w_out = (pw - w_k) // sw + 1
+
+    kernel = functools.partial(
+        _conv_row_kernel, h_k=h_k, w_k=w_k, sh=sh, sw=sw, w_out=w_out, act=act, alpha=alpha
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(h_out,),
+        in_specs=[
+            # whole padded input per step: these nets are tiny (<< VMEM)
+            pl.BlockSpec((ph, pw, c_in), lambda i: (0, 0, 0)),
+            pl.BlockSpec((h_k, w_k, c_in, c_out), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((c_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, w_out, c_out), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h_out, w_out, c_out), x.dtype),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def vmem_report(x_shape, w_shape, stride=(1, 1), padding="valid"):
+    """Analytic VMEM footprint of one grid step, for the perf analysis
+    (interpret mode has no real VMEM; see EXPERIMENTS.md SSPerf)."""
+    h_in, w_in, c_in = x_shape
+    h_k, w_k, _, c_out = w_shape
+    if padding == "same":
+        ph = h_in + sum(_same_pad(h_in, h_k, stride[0]))
+        pw = w_in + sum(_same_pad(w_in, w_k, stride[1]))
+    else:
+        ph, pw = h_in, w_in
+    w_out = (pw - w_k) // stride[1] + 1
+    bytes_in = ph * pw * c_in * 4
+    bytes_w = h_k * w_k * c_in * c_out * 4
+    bytes_out = w_out * c_out * 4
+    total = bytes_in + bytes_w + bytes_out
+    return {
+        "input_bytes": bytes_in,
+        "weight_bytes": bytes_w,
+        "out_row_bytes": bytes_out,
+        "total_bytes": total,
+        "vmem_fraction_16MiB": total / (16 * 1024 * 1024),
+        "macs_per_step": w_out * c_out * h_k * w_k * c_in,
+        "lane_utilization_cout": min(c_out / 128.0, 1.0),
+    }

@@ -1,0 +1,43 @@
+"""Pallas max-pooling kernel (Layer 1), Eq. 3.
+
+Same schedule shape as the conv kernel: grid over output rows, window taps
+unrolled at trace time, channel-minor maxima on the VPU lanes (the paper's
+SSE ``maxps`` over channel groups, P2+P4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_row_kernel(x_ref, o_ref, *, pool, stride, w_out):
+    i = pl.program_id(0)
+    x = x_ref[...]  # (h_in, w_in, c)
+    acc = None
+    for n in range(pool[0]):  # unrolled taps
+        row = jax.lax.dynamic_slice_in_dim(x, i * stride[0] + n, 1, axis=0)[0]  # (w_in, c)
+        for m in range(pool[1]):
+            cols = jax.lax.slice_in_dim(row, m, m + stride[1] * (w_out - 1) + 1, stride[1], axis=0)
+            acc = cols if acc is None else jnp.maximum(acc, cols)  # P2: predicated max
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("pool", "stride", "interpret"))
+def maxpool2d_pallas(x, pool=(2, 2), stride=(2, 2), interpret=True):
+    """Pallas max-pool over one HWC image; equals ``ref.maxpool2d``."""
+    h_in, w_in, c = x.shape
+    h_out = (h_in - pool[0]) // stride[0] + 1
+    w_out = (w_in - pool[1]) // stride[1] + 1
+    kernel = functools.partial(_pool_row_kernel, pool=pool, stride=stride, w_out=w_out)
+    return pl.pallas_call(
+        kernel,
+        grid=(h_out,),
+        in_specs=[pl.BlockSpec((h_in, w_in, c), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((1, w_out, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h_out, w_out, c), x.dtype),
+        interpret=interpret,
+    )(x)

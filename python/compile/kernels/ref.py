@@ -1,0 +1,78 @@
+"""Pure-jnp reference implementations (the correctness oracle).
+
+Direct transcriptions of the paper's Eq. 1-6 using stock jax ops. Every
+Pallas kernel in this package is pytest-verified against these, and the
+trainer differentiates through them (they are cheap and jit-friendly).
+
+Layout conventions match the Rust side: activations HWC (channel-minor),
+conv weights HWIO.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d(x, w, b, stride=(1, 1), padding="valid"):
+    """2-d convolution over one HWC image (no batch dim), Eq. 2.
+
+    x: (h, w, c_in); w: (hk, wk, c_in, c_out); b: (c_out,).
+    padding: "same" (Keras semantics, Eq. 1) or "valid".
+    """
+    lhs = x[None]  # NHWC
+    out = jax.lax.conv_general_dilated(
+        lhs,
+        w,
+        window_strides=stride,
+        padding=padding.upper(),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out[0] + b
+
+
+def maxpool2d(x, pool=(2, 2), stride=(2, 2)):
+    """Max pooling, Eq. 3 (valid windows only)."""
+    out = jax.lax.reduce_window(
+        x[None],
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, pool[0], pool[1], 1),
+        window_strides=(1, stride[0], stride[1], 1),
+        padding="VALID",
+    )
+    return out[0]
+
+
+def relu(x):
+    """Eq. 4."""
+    return jnp.maximum(x, 0.0)
+
+
+def leaky_relu(x, alpha=0.1):
+    """Eq. 5 — expressed as a predicated select (the paper's cmov)."""
+    return jnp.where(x > 0, x, alpha * x)
+
+
+def softmax(x):
+    """Numerically-stable softmax over the flattened tensor."""
+    flat = x.reshape(-1)
+    m = jnp.max(flat)
+    e = jnp.exp(flat - m)
+    return (e / jnp.sum(e)).reshape(x.shape)
+
+
+def batchnorm(x, gamma, beta, mean, var, eps=1e-3):
+    """Inference-mode batch normalization, Eq. 6 with learned affine."""
+    scale = gamma / jnp.sqrt(var + eps)
+    return x * scale + (beta - mean * scale)
+
+
+def fold_batchnorm(w, b, gamma, beta, mean, var, eps=1e-3):
+    """Fold BN into the preceding conv (paper §II-B.4).
+
+    Returns (w', b') with w'[..., k] = w[..., k] * s_k and
+    b' = s * b + (beta - mean * s).
+    """
+    scale = gamma / jnp.sqrt(var + eps)
+    return w * scale, b * scale + (beta - mean * scale)

@@ -1,0 +1,31 @@
+"""Pallas softmax kernel (Layer 1).
+
+Single-program kernel (the classifier heads are 1x1x2); numerically stable
+via max subtraction, like both the reference and the generated C.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    flat = x.reshape(-1)
+    m = jnp.max(flat)
+    e = jnp.exp(flat - m)
+    o_ref[...] = (e / jnp.sum(e)).reshape(x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def softmax_pallas(x, interpret=True):
+    """Pallas softmax over the flattened tensor; equals ``ref.softmax``."""
+    return pl.pallas_call(
+        _softmax_kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,272 @@
+"""Layer 2: the paper's CNNs (Tables I-III) as JAX functions.
+
+Architecture specs mirror ``rust/src/graph/zoo.rs`` exactly (same layer
+order, shapes and HWC/HWIO layouts), so weights exported from here load
+directly into the Rust side, and the AOT artifacts compute the same
+function as the generated C.
+
+Two forward paths over the same parameters:
+
+* ``forward(params, x, spec)``            — pure-jnp reference (trainable).
+* ``forward_pallas(params, x, spec)``     — calls the Layer-1 Pallas kernels
+  (conv/maxpool/softmax), used for the AOT export. pytest asserts the two
+  are numerically equal.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.conv2d import conv2d_pallas
+from .kernels.maxpool import maxpool2d_pallas
+from .kernels.softmax import softmax_pallas
+
+# ---------------------------------------------------------------------------
+# Architecture specs (paper Tables I-III). Input shapes are HWC.
+# ---------------------------------------------------------------------------
+
+ARCHS = {
+    # Table I: ball classifier, 16x16 grayscale.
+    "ball": {
+        "input": (16, 16, 1),
+        "layers": [
+            ("conv", dict(c_out=8, kernel=(5, 5), stride=(2, 2), padding="same")),
+            ("relu", {}),
+            ("maxpool", dict(pool=(2, 2), stride=(2, 2))),
+            ("conv", dict(c_out=12, kernel=(3, 3), stride=(1, 1), padding="valid")),
+            ("relu", {}),
+            ("conv", dict(c_out=2, kernel=(2, 2), stride=(1, 1), padding="valid")),
+            ("softmax", {}),
+        ],
+    },
+    # Table II: pedestrian classifier, 18x36 (HWC: [36, 18, 1]).
+    "pedestrian": {
+        "input": (36, 18, 1),
+        "layers": [
+            ("conv", dict(c_out=12, kernel=(3, 3), stride=(1, 1), padding="same")),
+            ("relu", {}),
+            ("maxpool", dict(pool=(2, 2), stride=(2, 2))),
+            ("conv", dict(c_out=32, kernel=(3, 3), stride=(1, 1), padding="same")),
+            ("leaky_relu", dict(alpha=0.1)),
+            ("maxpool", dict(pool=(2, 2), stride=(2, 2))),
+            ("conv", dict(c_out=64, kernel=(3, 3), stride=(1, 1), padding="same")),
+            ("leaky_relu", dict(alpha=0.1)),
+            ("maxpool", dict(pool=(2, 2), stride=(2, 2))),
+            ("dropout", dict(rate=0.3)),
+            ("conv", dict(c_out=2, kernel=(4, 2), stride=(1, 1), padding="valid")),
+            ("softmax", {}),
+        ],
+    },
+    # Table III: robot detector, 80x60 RGB (HWC: [60, 80, 3]).
+    "robot": {
+        "input": (60, 80, 3),
+        "layers": [
+            ("conv", dict(c_out=8, kernel=(3, 3), stride=(1, 1), padding="same")),
+            ("batchnorm", dict(channels=8)),
+            ("leaky_relu", dict(alpha=0.1)),
+            ("maxpool", dict(pool=(2, 2), stride=(2, 2))),
+            ("conv", dict(c_out=12, kernel=(3, 3), stride=(1, 1), padding="same")),
+            ("batchnorm", dict(channels=12)),
+            ("leaky_relu", dict(alpha=0.1)),
+            ("conv", dict(c_out=8, kernel=(3, 3), stride=(1, 1), padding="same")),
+            ("batchnorm", dict(channels=8)),
+            ("leaky_relu", dict(alpha=0.1)),
+            ("maxpool", dict(pool=(2, 2), stride=(2, 2))),
+            ("conv", dict(c_out=16, kernel=(3, 3), stride=(1, 1), padding="same")),
+            ("batchnorm", dict(channels=16)),
+            ("leaky_relu", dict(alpha=0.1)),
+            ("conv", dict(c_out=20, kernel=(3, 3), stride=(1, 1), padding="same")),
+            ("batchnorm", dict(channels=20)),
+            ("leaky_relu", dict(alpha=0.1)),
+        ],
+    },
+}
+
+
+def init_params(name: str, seed: int = 0):
+    """Glorot-uniform parameters for an architecture, as a list aligned
+    with the spec's layers (non-parametric layers get ``None``)."""
+    spec = ARCHS[name]
+    rng = np.random.default_rng(seed)
+    params = []
+    c_in = spec["input"][2]
+    for kind, cfg in spec["layers"]:
+        if kind == "conv":
+            hk, wk = cfg["kernel"]
+            c_out = cfg["c_out"]
+            fan_in, fan_out = hk * wk * c_in, hk * wk * c_out
+            limit = np.sqrt(6.0 / (fan_in + fan_out))
+            params.append(
+                {
+                    "w": jnp.asarray(rng.uniform(-limit, limit, (hk, wk, c_in, c_out)), jnp.float32),
+                    "b": jnp.zeros((c_out,), jnp.float32),
+                }
+            )
+            c_in = c_out
+        elif kind == "batchnorm":
+            c = cfg["channels"]
+            params.append(
+                {
+                    "gamma": jnp.ones((c,), jnp.float32),
+                    "beta": jnp.zeros((c,), jnp.float32),
+                    "mean": jnp.zeros((c,), jnp.float32),
+                    "var": jnp.ones((c,), jnp.float32),
+                }
+            )
+        else:
+            params.append(None)
+    return params
+
+
+def forward(params, x, name: str, train: bool = False):
+    """Reference forward pass (pure jnp). With ``train=True`` BatchNorm
+    uses batch statistics computed over the spatial dims of this sample and
+    dropout stays identity (the synthetic task does not need it)."""
+    spec = ARCHS[name]
+    for p, (kind, cfg) in zip(params, spec["layers"]):
+        if kind == "conv":
+            x = ref.conv2d(x, p["w"], p["b"], cfg["stride"], cfg["padding"])
+        elif kind == "relu":
+            x = ref.relu(x)
+        elif kind == "leaky_relu":
+            x = ref.leaky_relu(x, cfg["alpha"])
+        elif kind == "maxpool":
+            x = ref.maxpool2d(x, cfg["pool"], cfg["stride"])
+        elif kind == "softmax":
+            x = ref.softmax(x)
+        elif kind == "batchnorm":
+            if train:
+                mu = jnp.mean(x, axis=(0, 1))
+                var = jnp.var(x, axis=(0, 1))
+                x = ref.batchnorm(x, p["gamma"], p["beta"], mu, var)
+            else:
+                x = ref.batchnorm(x, p["gamma"], p["beta"], p["mean"], p["var"])
+        elif kind == "dropout":
+            pass  # inference no-op (paper: dropout only regularizes training)
+        else:
+            raise ValueError(f"unknown layer kind {kind!r}")
+    return x
+
+
+def forward_pallas(params, x, name: str, interpret: bool = True):
+    """Forward pass through the Layer-1 Pallas kernels. BatchNorm is folded
+    into the preceding conv first (paper §II-B.4) so the kernel sequence
+    matches the generated C exactly."""
+    folded, spec = fold_bn_params(params, name)
+    for p, (kind, cfg) in zip(folded, spec):
+        if kind == "conv":
+            x = conv2d_pallas(
+                x,
+                p["w"],
+                p["b"],
+                stride=cfg["stride"],
+                padding=cfg["padding"],
+                act=cfg.get("fused_act", "none"),
+                alpha=cfg.get("alpha", 0.1),
+                interpret=interpret,
+            )
+        elif kind == "maxpool":
+            x = maxpool2d_pallas(x, cfg["pool"], cfg["stride"], interpret=interpret)
+        elif kind == "softmax":
+            x = softmax_pallas(x, interpret=interpret)
+        elif kind == "relu":
+            x = ref.relu(x)  # unfused standalone (after pool)
+        elif kind == "leaky_relu":
+            x = ref.leaky_relu(x, cfg["alpha"])
+        else:
+            raise ValueError(f"unexpected layer kind after folding: {kind!r}")
+    return x
+
+
+def fold_bn_params(params, name: str):
+    """Fold BN into convs and fuse directly-following activations, mirroring
+    ``rust/src/passes``. Returns (folded_params, folded_spec) where the spec
+    is a list of (kind, cfg) with dropout removed and activations fused into
+    ``cfg['fused_act']`` where possible."""
+    spec = ARCHS[name]["layers"]
+    out_params, out_spec = [], []
+    i = 0
+    while i < len(spec):
+        kind, cfg = spec[i]
+        p = params[i]
+        if kind == "conv":
+            w, b = p["w"], p["b"]
+            cfg = dict(cfg)
+            j = i + 1
+            # fold a following batchnorm
+            if j < len(spec) and spec[j][0] == "batchnorm":
+                bn = params[j]
+                w, b = ref.fold_batchnorm(w, b, bn["gamma"], bn["beta"], bn["mean"], bn["var"])
+                j += 1
+            # fuse a following activation
+            if j < len(spec) and spec[j][0] in ("relu", "leaky_relu"):
+                cfg["fused_act"] = spec[j][0]
+                cfg["alpha"] = spec[j][1].get("alpha", 0.1)
+                j += 1
+            out_params.append({"w": w, "b": b})
+            out_spec.append(("conv", cfg))
+            i = j
+        elif kind == "dropout":
+            i += 1
+        elif kind == "batchnorm":
+            raise ValueError("BatchNorm not preceded by conv cannot be folded")
+        else:
+            out_params.append(None)
+            out_spec.append((kind, cfg))
+            i += 1
+    return out_params, out_spec
+
+
+def calibrate_bn(params, name: str, xs):
+    """Estimate BatchNorm running statistics from a calibration set.
+
+    Training normalizes with per-batch statistics; inference (and every
+    exported artifact) uses the stored mean/var. Walks the net layer by
+    layer over `xs` (n, h, w, c), using batch statistics *up to* each BN —
+    matching what the layer saw during training — and writes the pooled
+    mean/var into the params. Returns the updated params.
+    """
+    import jax
+
+    spec = ARCHS[name]
+    out = [dict(p) if isinstance(p, dict) else None for p in params]
+    x = jnp.asarray(xs)
+
+    def batched(f):
+        return jax.vmap(f)
+
+    for i, (kind, cfg) in enumerate(spec["layers"]):
+        p = out[i]
+        if kind == "conv":
+            x = batched(lambda im: ref.conv2d(im, p["w"], p["b"], cfg["stride"], cfg["padding"]))(x)
+        elif kind == "relu":
+            x = ref.relu(x)
+        elif kind == "leaky_relu":
+            x = ref.leaky_relu(x, cfg["alpha"])
+        elif kind == "maxpool":
+            x = batched(lambda im: ref.maxpool2d(im, cfg["pool"], cfg["stride"]))(x)
+        elif kind == "softmax":
+            x = batched(ref.softmax)(x)
+        elif kind == "batchnorm":
+            mu = jnp.mean(x, axis=(0, 1, 2))
+            var = jnp.var(x, axis=(0, 1, 2))
+            out[i] = dict(p, mean=mu, var=var)
+            x = ref.batchnorm(x, p["gamma"], p["beta"], mu, var)
+        elif kind == "dropout":
+            pass
+        else:
+            raise ValueError(kind)
+    return out
+
+
+def output_shape(name: str):
+    """Static output shape of a model (via an abstract trace)."""
+    import jax
+
+    spec = ARCHS[name]
+    x = jax.ShapeDtypeStruct(spec["input"], jnp.float32)
+    params = init_params(name, 0)
+    return jax.eval_shape(lambda p, xx: forward(p, xx, name), params, x).shape

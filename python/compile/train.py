@@ -1,0 +1,188 @@
+"""Training (build-time only): the paper's three CNNs on the synthetic
+datasets, with a hand-rolled Adam (optax is not in the offline env).
+
+* ball / pedestrian: binary cross-entropy on the softmax head.
+  Paper accuracies on the real corpora: 99.975% / 99.02%; EXPERIMENTS.md
+  records what we reach on the synthetic stand-ins.
+* robot: YOLO-style loss (masked MSE on box regression + objectness
+  logits) against the targets of ``datasets.robot_target``.
+
+Run via ``make train``; writes ``models/<name>.{json,nncgw}`` and appends
+the loss curves to ``models/train_log_<name>.txt``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets
+from .export import export_model
+from .model import ARCHS, forward, init_params
+
+# --------------------------------------------------------------------------
+# Hand-rolled Adam
+# --------------------------------------------------------------------------
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - b2 ** t.astype(jnp.float32))
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps), params, m, v
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+# --------------------------------------------------------------------------
+# Losses
+# --------------------------------------------------------------------------
+
+
+def classifier_loss(params, xs, ys, name):
+    """Mean NLL of the softmax head over a batch (classes on channel dim)."""
+
+    def one(x, y):
+        p = forward(params, x, name, train=True).reshape(-1)
+        return -jnp.log(p[y] + 1e-9)
+
+    return jnp.mean(jax.vmap(one)(xs, ys))
+
+
+def yolo_loss(params, xs, targets, obj_masks, box_masks, name):
+    """Masked MSE on raw head values (targets are pre-encoded logits).
+
+    Positive objectness cells are ~1:1200 against negatives, so the two
+    populations are normalized separately (YOLO's no-object weighting);
+    positive cells are identified by their target logit being the
+    logit(0.95) encoding rather than the -4 background fill.
+    """
+
+    def one(x, t, om, bm):
+        h = forward(params, x, name, train=True)
+        pos = om * (t > 0).astype(jnp.float32)  # positive objectness channels
+        neg = om * (t <= 0).astype(jnp.float32)
+        obj_pos = jnp.sum(pos * (h - t) ** 2) / (jnp.sum(pos) + 1e-9)
+        obj_neg = jnp.sum(neg * (h - t) ** 2) / (jnp.sum(neg) + 1e-9)
+        box = jnp.sum(bm * (h - t) ** 2) / (jnp.sum(bm) + 1e-9)
+        return 2.0 * obj_pos + 0.5 * obj_neg + 5.0 * box
+
+    return jnp.mean(jax.vmap(one)(xs, targets, obj_masks, box_masks))
+
+
+# --------------------------------------------------------------------------
+# Training loops
+# --------------------------------------------------------------------------
+
+
+def train_classifier(name, steps, batch, lr, seed, log):
+    rng = np.random.default_rng(seed)
+    params = init_params(name, seed)
+    state = adam_init(params)
+    gen = {"ball": datasets.ball_batch, "pedestrian": datasets.pedestrian_batch}[name]
+
+    @jax.jit
+    def step(params, state, xs, ys):
+        loss, grads = jax.value_and_grad(classifier_loss)(params, xs, ys, name)
+        params, state = adam_update(params, grads, state, lr)
+        return params, state, loss
+
+    t0 = time.time()
+    for i in range(steps):
+        xs, ys = gen(batch, rng)
+        params, state, loss = step(params, state, jnp.asarray(xs), jnp.asarray(ys))
+        if i % 20 == 0 or i == steps - 1:
+            log(f"step {i:4d} loss {float(loss):.4f} ({time.time()-t0:.1f}s)")
+
+    # held-out accuracy
+    xs, ys = gen(512, rng)
+    acc = accuracy(params, jnp.asarray(xs), np.asarray(ys), name)
+    log(f"final: steps={steps} eval_accuracy={acc:.4%}")
+    return params, acc
+
+
+def accuracy(params, xs, ys, name):
+    @jax.jit
+    def probs(x):
+        return forward(params, x, name).reshape(-1)
+
+    preds = np.array([int(jnp.argmax(probs(x))) for x in xs])
+    return float((preds == ys).mean())
+
+
+def train_robot(steps, batch, lr, seed, log):
+    name = "robot"
+    rng = np.random.default_rng(seed)
+    params = init_params(name, seed)
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, xs, ts, oms, bms):
+        loss, grads = jax.value_and_grad(yolo_loss)(params, xs, ts, oms, bms, name)
+        params, state = adam_update(params, grads, state, lr)
+        return params, state, loss
+
+    t0 = time.time()
+    first = last = None
+    for i in range(steps):
+        xs, ts, oms, bms = datasets.robot_batch(batch, rng)
+        params, state, loss = step(params, state, jnp.asarray(xs), jnp.asarray(ts), jnp.asarray(oms), jnp.asarray(bms))
+        if first is None:
+            first = float(loss)
+        last = float(loss)
+        if i % 20 == 0 or i == steps - 1:
+            log(f"step {i:4d} loss {float(loss):.4f} ({time.time()-t0:.1f}s)")
+    # Inference uses stored BN statistics, training used batch statistics:
+    # calibrate the stored stats on a held-out set before export.
+    from .model import calibrate_bn
+
+    xs, _, _, _ = datasets.robot_batch(32, rng)
+    params = calibrate_bn(params, name, xs)
+    log(f"final: steps={steps} loss {first:.4f} -> {last:.4f} (BN calibrated on 32 scenes)")
+    return params, last
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../models")
+    ap.add_argument("--models", nargs="*", default=list(ARCHS))
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.models:
+        log_path = os.path.join(args.out, f"train_log_{name}.txt")
+        with open(log_path, "w") as logf:
+
+            def log(msg, _f=logf, _n=name):
+                line = f"[{_n}] {msg}"
+                print(line, flush=True)
+                _f.write(line + "\n")
+
+            if name in ("ball", "pedestrian"):
+                params, metric = train_classifier(name, args.steps, args.batch, args.lr, args.seed, log)
+            else:
+                params, metric = train_robot(args.steps, args.batch, args.lr, args.seed, log)
+            export_model(name, params, args.out)
+            log(f"exported to {os.path.join(args.out, name)}.json/.nncgw")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,163 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/strides/padding per the reproduction brief; every
+case asserts allclose against ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import ref
+from compile.kernels.conv2d import conv2d_pallas, vmem_report
+from compile.kernels.maxpool import maxpool2d_pallas
+from compile.kernels.softmax import softmax_pallas
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def rand(rng, shape, lo=-1.0, hi=1.0):
+    return jnp.asarray(rng.uniform(lo, hi, shape), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# conv2d
+# --------------------------------------------------------------------------
+
+conv_cases = st.tuples(
+    st.integers(5, 14),            # h_in
+    st.integers(5, 14),            # w_in
+    st.integers(1, 3),             # c_in
+    st.integers(1, 8),             # c_out
+    st.sampled_from([(1, 1), (2, 2), (3, 3), (5, 5), (2, 3), (4, 2)]),  # kernel
+    st.sampled_from([(1, 1), (2, 2), (1, 2), (2, 1), (3, 3)]),          # stride
+    st.sampled_from(["same", "valid"]),
+    st.integers(0, 2 ** 31 - 1),   # seed
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(conv_cases)
+def test_conv2d_matches_ref(case):
+    h, w, ci, co, k, s, pad, seed = case
+    if pad == "valid" and (k[0] > h or k[1] > w):
+        return  # invalid geometry
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (h, w, ci))
+    wt = rand(rng, (k[0], k[1], ci, co))
+    b = rand(rng, (co,))
+    got = conv2d_pallas(x, wt, b, s, pad)
+    want = ref.conv2d(x, wt, b, s, pad)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("act", ["relu", "leaky_relu"])
+def test_conv2d_fused_activation(act):
+    rng = np.random.default_rng(3)
+    x = rand(rng, (8, 8, 2))
+    wt = rand(rng, (3, 3, 2, 4))
+    b = rand(rng, (4,))
+    got = conv2d_pallas(x, wt, b, (1, 1), "same", act=act, alpha=0.1)
+    base = ref.conv2d(x, wt, b, (1, 1), "same")
+    want = ref.relu(base) if act == "relu" else ref.leaky_relu(base, 0.1)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_conv2d_paper_ball_geometry():
+    """Table I first layer: 16x16x1, 8 filters 5x5, stride 2, same."""
+    rng = np.random.default_rng(0)
+    x = rand(rng, (16, 16, 1), 0, 1)
+    wt = rand(rng, (5, 5, 1, 8))
+    b = rand(rng, (8,))
+    got = conv2d_pallas(x, wt, b, (2, 2), "same")
+    assert got.shape == (8, 8, 8)
+    np.testing.assert_allclose(got, ref.conv2d(x, wt, b, (2, 2), "same"), rtol=RTOL, atol=ATOL)
+
+
+def test_conv2d_rejects_unknown_padding():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        conv2d_pallas(rand(rng, (4, 4, 1)), rand(rng, (3, 3, 1, 2)), rand(rng, (2,)), (1, 1), "full")
+
+
+def test_vmem_report_small_models_fit():
+    """The paper's nets are tiny: one grid step must be far below VMEM."""
+    rep = vmem_report((60, 80, 3), (3, 3, 3, 8), (1, 1), "same")
+    assert rep["vmem_fraction_16MiB"] < 0.01
+    assert rep["macs_per_step"] > 0
+
+
+# --------------------------------------------------------------------------
+# maxpool
+# --------------------------------------------------------------------------
+
+pool_cases = st.tuples(
+    st.integers(4, 16),
+    st.integers(4, 16),
+    st.integers(1, 8),
+    st.sampled_from([(2, 2), (3, 3), (2, 3)]),
+    st.sampled_from([(1, 1), (2, 2), (3, 3)]),
+    st.integers(0, 2 ** 31 - 1),
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(pool_cases)
+def test_maxpool_matches_ref(case):
+    h, w, c, pool, stride, seed = case
+    if pool[0] > h or pool[1] > w:
+        return
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (h, w, c))
+    got = maxpool2d_pallas(x, pool, stride)
+    want = ref.maxpool2d(x, pool, stride)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_maxpool_negative_values():
+    x = jnp.asarray(np.full((4, 4, 1), -5.0, np.float32))
+    got = maxpool2d_pallas(x, (2, 2), (2, 2))
+    assert float(got.max()) == -5.0
+
+
+# --------------------------------------------------------------------------
+# softmax
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_softmax_matches_ref(h, w, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, (h, w, c), -5, 5)
+    got = softmax_pallas(x)
+    np.testing.assert_allclose(got, ref.softmax(x), rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(float(jnp.sum(got)), 1.0, rtol=1e-5)
+
+
+def test_softmax_is_stable_for_large_logits():
+    x = jnp.asarray([[[1000.0, 1001.0]]], jnp.float32)
+    got = softmax_pallas(x)
+    assert bool(jnp.all(jnp.isfinite(got)))
+
+
+# --------------------------------------------------------------------------
+# batchnorm folding (Eq. 7)
+# --------------------------------------------------------------------------
+
+
+def test_fold_batchnorm_equivalence():
+    rng = np.random.default_rng(5)
+    x = rand(rng, (6, 6, 2))
+    w = rand(rng, (3, 3, 2, 4))
+    b = rand(rng, (4,))
+    gamma, beta = rand(rng, (4,), 0.5, 1.5), rand(rng, (4,), -0.2, 0.2)
+    mean, var = rand(rng, (4,), -0.5, 0.5), rand(rng, (4,), 0.25, 1.0)
+    y1 = ref.batchnorm(ref.conv2d(x, w, b, (1, 1), "same"), gamma, beta, mean, var)
+    wf, bf = ref.fold_batchnorm(w, b, gamma, beta, mean, var)
+    y2 = ref.conv2d(x, wf, bf, (1, 1), "same")
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,154 @@
+"""Layer-2 tests: model shapes, pallas-vs-ref forward equality, BN folding,
+and export/AOT plumbing."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import datasets
+from compile.export import arch_json, read_nncgw, weight_records, write_nncgw
+from compile.model import ARCHS, fold_bn_params, forward, forward_pallas, init_params, output_shape
+
+SHAPES = {"ball": (16, 16, 1), "pedestrian": (36, 18, 1), "robot": (60, 80, 3)}
+OUT_SHAPES = {"ball": (1, 1, 2), "pedestrian": (1, 1, 2), "robot": (15, 20, 20)}
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_output_shapes_match_paper(name):
+    assert output_shape(name) == OUT_SHAPES[name]
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_pallas_forward_equals_ref(name):
+    rng = np.random.default_rng(7)
+    params = init_params(name, 11)
+    x = jnp.asarray(rng.uniform(0, 1, SHAPES[name]), jnp.float32)
+    y_ref = forward(params, x, name)
+    y_pal = forward_pallas(params, x, name)
+    np.testing.assert_allclose(y_pal, y_ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_classifier_heads_are_distributions(name):
+    if name == "robot":
+        pytest.skip("detector head is not a softmax")
+    rng = np.random.default_rng(3)
+    params = init_params(name, 5)
+    x = jnp.asarray(rng.uniform(0, 1, SHAPES[name]), jnp.float32)
+    y = forward(params, x, name).reshape(-1)
+    np.testing.assert_allclose(float(jnp.sum(y)), 1.0, rtol=1e-5)
+
+
+def test_fold_bn_removes_bn_and_dropout():
+    params = init_params("robot", 1)
+    folded, spec = fold_bn_params(params, "robot")
+    kinds = [k for k, _ in spec]
+    assert "batchnorm" not in kinds
+    assert "dropout" not in kinds
+    # all leaky_relus fused into convs
+    assert all(k in ("conv", "maxpool") for k in kinds), kinds
+
+
+def test_fold_bn_preserves_numerics_with_nontrivial_stats():
+    rng = np.random.default_rng(2)
+    params = init_params("robot", 3)
+    # perturb BN stats away from identity
+    for p, (kind, _) in zip(params, ARCHS["robot"]["layers"]):
+        if kind == "batchnorm" and p is not None:
+            c = p["gamma"].shape[0]
+            p["gamma"] = jnp.asarray(rng.uniform(0.5, 1.5, c), jnp.float32)
+            p["beta"] = jnp.asarray(rng.uniform(-0.3, 0.3, c), jnp.float32)
+            p["mean"] = jnp.asarray(rng.uniform(-0.5, 0.5, c), jnp.float32)
+            p["var"] = jnp.asarray(rng.uniform(0.3, 1.2, c), jnp.float32)
+    x = jnp.asarray(rng.uniform(0, 1, SHAPES["robot"]), jnp.float32)
+    y_ref = forward(params, x, "robot")
+    y_pal = forward_pallas(params, x, "robot")
+    np.testing.assert_allclose(y_pal, y_ref, rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# export format
+# --------------------------------------------------------------------------
+
+
+def test_arch_json_is_valid_and_complete():
+    for name in ARCHS:
+        doc = json.loads(arch_json(name))
+        assert doc["name"] == name
+        assert len(doc["layers"]) == len(ARCHS[name]["layers"])
+        assert len(doc["input"]) == 3
+
+
+def test_nncgw_round_trip(tmp_path):
+    params = init_params("ball", 9)
+    recs = weight_records("ball", params)
+    path = os.path.join(tmp_path, "ball.nncgw")
+    write_nncgw(path, recs)
+    back = read_nncgw(path)
+    assert set(back) == {n for n, _ in recs}
+    for n, arr in recs:
+        np.testing.assert_array_equal(back[n], np.asarray(arr))
+
+
+def test_weight_records_cover_all_parametric_layers():
+    params = init_params("robot", 0)
+    names = {n for n, _ in weight_records("robot", params)}
+    # 5 convs (w+b) + 5 batchnorms (4 each) = 30 records
+    assert len(names) == 5 * 2 + 5 * 4
+
+
+# --------------------------------------------------------------------------
+# datasets
+# --------------------------------------------------------------------------
+
+
+def test_ball_batch_shapes_and_determinism():
+    a = datasets.ball_batch(8, np.random.default_rng(1))
+    b = datasets.ball_batch(8, np.random.default_rng(1))
+    assert a[0].shape == (8, 16, 16, 1)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    assert set(np.unique(a[1])).issubset({0, 1})
+
+
+def test_pedestrian_batch_positive_is_darker_in_center():
+    xs, ys = datasets.pedestrian_batch(64, np.random.default_rng(2))
+    pos = xs[ys == 1][..., 0][:, 10:20, 7:12].mean()
+    neg = xs[ys == 0][..., 0][:, 10:20, 7:12].mean()
+    assert pos < neg, (pos, neg)
+
+
+def test_robot_targets_are_decodable():
+    rng = np.random.default_rng(3)
+    img, boxes = datasets.robot_scene(rng)
+    assert img.shape == (60, 80, 3)
+    assert boxes
+    t, om, bm = datasets.robot_target(boxes)
+    assert t.shape == (15, 20, 20)
+    # objectness supervised everywhere; boxes only at positives
+    assert om.sum() == 15 * 20 * 4
+    assert bm.sum() == 4 * len({(int((y + h / 2) // 4), int((x + w / 2) // 4)) for (y, x, h, w) in boxes}) or bm.sum() > 0
+
+
+def test_calibrate_bn_aligns_inference_with_training_stats():
+    """After calibration, inference-mode forward (stored stats) must track
+    train-mode forward (batch stats) on the calibration distribution."""
+    import jax.numpy as jnp
+    from compile.model import calibrate_bn
+
+    rng = np.random.default_rng(11)
+    params = init_params("robot", 4)
+    xs = rng.uniform(0, 1, (8, 60, 80, 3)).astype(np.float32)
+    calibrated = calibrate_bn(params, "robot", xs)
+    x = jnp.asarray(xs[0])
+    y_train = forward(params, x, "robot", train=True)
+    y_uncal = forward(params, x, "robot", train=False)
+    y_cal = forward(calibrated, x, "robot", train=False)
+    err_uncal = float(jnp.abs(y_train - y_uncal).max())
+    err_cal = float(jnp.abs(y_train - y_cal).max())
+    assert err_cal < err_uncal, (err_cal, err_uncal)
+    assert err_cal < 2.0, err_cal  # same scale as batch-stat outputs

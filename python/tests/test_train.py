@@ -1,0 +1,53 @@
+"""Trainer smoke tests: a few dozen steps must reduce the loss and the
+tiny classifiers must beat chance on held-out synthetic data."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from compile import datasets
+from compile.model import forward, init_params
+from compile.train import accuracy, adam_init, adam_update, classifier_loss, train_classifier, train_robot
+
+
+def test_adam_reduces_quadratic():
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = adam_init(params)
+    import jax
+
+    loss = lambda p: jnp.sum(p["x"] ** 2)
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = adam_update(params, g, state, lr=0.1)
+    assert float(loss(params)) < 1e-2
+
+
+def test_ball_training_reduces_loss_and_beats_chance():
+    logs = []
+    params, acc = train_classifier("ball", steps=60, batch=16, lr=2e-3, seed=0, log=logs.append)
+    # loss trend from the log lines
+    losses = [float(l.split("loss ")[1].split(" ")[0]) for l in logs if l.startswith("step")]
+    assert losses[-1] < losses[0], losses
+    assert acc > 0.75, f"accuracy {acc} (chance = 0.5)"
+
+
+def test_robot_training_reduces_loss():
+    logs = []
+    _params, last = train_robot(steps=8, batch=4, lr=1e-3, seed=0, log=logs.append)
+    first = float(logs[0].split("loss ")[1].split(" ")[0])
+    assert last < first, (first, last)
+
+
+def test_classifier_loss_is_finite_and_positive():
+    params = init_params("ball", 2)
+    xs, ys = datasets.ball_batch(4, np.random.default_rng(0))
+    l = classifier_loss(params, jnp.asarray(xs), jnp.asarray(ys), "ball")
+    assert np.isfinite(float(l)) and float(l) > 0
+
+
+def test_accuracy_of_untrained_is_near_chance():
+    params = init_params("ball", 3)
+    xs, ys = datasets.ball_batch(64, np.random.default_rng(1))
+    acc = accuracy(params, jnp.asarray(xs), ys, "ball")
+    assert 0.2 <= acc <= 0.8, acc

@@ -1,0 +1,10 @@
+//! Reproduces the paper's §III-C GPU observations on the simulated GTX
+//! 1050: single-image latency ~5.6ms regardless of CNN size, flat below
+//! ~100 images, amortizing only at large batches — versus the measured
+//! host CPU latency of the generated C.
+
+fn main() -> anyhow::Result<()> {
+    let result = nncg::experiments::run_gpu_throughput()?;
+    println!("{}", result.rendered);
+    Ok(())
+}

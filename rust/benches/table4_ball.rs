@@ -1,0 +1,10 @@
+//! Reproduces paper Table IV: execution time of the ball classifier.
+//! Host rows are measured; paper platforms are cost-model simulated.
+//! `NNCG_BENCH_QUICK=1` shortens the run for CI-style smoke checks.
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("NNCG_BENCH_QUICK").is_ok();
+    let result = nncg::experiments::run_table4(quick)?;
+    println!("{}", result.rendered);
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Reproduces paper Table V: execution time of the pedestrian classifier.
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("NNCG_BENCH_QUICK").is_ok();
+    let result = nncg::experiments::run_table5(quick)?;
+    println!("{}", result.rendered);
+    Ok(())
+}

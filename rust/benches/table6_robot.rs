@@ -1,0 +1,8 @@
+//! Reproduces paper Table VI: execution time of the robot detector.
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("NNCG_BENCH_QUICK").is_ok();
+    let result = nncg::experiments::run_table6(quick)?;
+    println!("{}", result.rendered);
+    Ok(())
+}

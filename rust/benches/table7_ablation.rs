@@ -1,0 +1,54 @@
+//! Reproduces paper Table VII: the feature ablation (general ISA vs SSSE3
+//! vs SSSE3 + full unroll) on the ball classifier, plus an extended sweep
+//! over every (ISA × unroll × const-mode) combination — the ablation for
+//! the design choices called out in DESIGN.md.
+
+use nncg::bench_harness::{bench, BenchConfig, Table};
+use nncg::cc::CompiledCnn;
+use nncg::codegen::{CodegenOptions, ConstMode, Isa, Unroll};
+use nncg::experiments::{default_weights_dir, default_work_dir, load_model};
+use nncg::tensor::Tensor;
+use nncg::util::{fmt_us, XorShift64};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("NNCG_BENCH_QUICK").is_ok();
+    // The paper's three-column table.
+    let result = nncg::experiments::run_table7(quick)?;
+    println!("{}", result.rendered);
+
+    // Extended ablation: full option matrix.
+    let model = load_model("ball", &default_weights_dir())?;
+    let mut rng = XorShift64::new(7);
+    let input = Tensor::rand(model.input.dims(), 0.0, 1.0, &mut rng);
+    let mut out = vec![0.0f32; model.output_shape()?.numel()];
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::small() };
+
+    let mut t = Table::new(
+        "EXTENDED ABLATION: ball classifier, all codegen option combinations",
+        &["isa", "unroll", "constants", "median", "C size"],
+    );
+    for isa in [Isa::Generic, Isa::Sse3, Isa::Avx2] {
+        for unroll in [Unroll::None, Unroll::KeepOuter2, Unroll::KeepOuter1, Unroll::Full] {
+            let const_modes: &[Option<ConstMode>] = if unroll == Unroll::None {
+                &[Some(ConstMode::Array)]
+            } else {
+                &[Some(ConstMode::Inline), Some(ConstMode::Array)]
+            };
+            for &const_mode in const_modes {
+                let opts = CodegenOptions { isa, unroll, const_mode, ..Default::default() };
+                let src = nncg::codegen::generate_c(&model, &opts)?;
+                let cnn = CompiledCnn::from_source(&model, &opts, &src, default_work_dir())?;
+                let stats = bench(&cfg, || cnn.infer_into(input.data(), &mut out));
+                t.row(vec![
+                    format!("{isa:?}"),
+                    unroll.name().into(),
+                    format!("{:?}", opts.effective_const_mode()),
+                    fmt_us(stats.median_us),
+                    format!("{}K", src.len() / 1024),
+                ]);
+            }
+        }
+    }
+    println!("{}", t.render());
+    Ok(())
+}

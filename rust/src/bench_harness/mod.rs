@@ -1,0 +1,84 @@
+//! Hand-rolled micro-benchmark harness (criterion is unavailable in the
+//! offline crate set).
+//!
+//! Follows the paper's methodology (§III-C): warm up, run N iterations
+//! (100,000 for the small classifiers, 1,000 for the robot detector), and
+//! report the mean; we additionally keep median/p95/stddev because single
+//! shared-machine runs are noisy.
+
+mod stats;
+mod table;
+
+pub use stats::Stats;
+pub use table::Table;
+
+use std::time::Instant;
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    /// Batch inner iterations per timestamp to amortize clock overhead for
+    /// sub-µs functions.
+    pub inner: usize,
+}
+
+impl BenchConfig {
+    /// Paper settings for the small classifiers ("ran small networks
+    /// 100.000 times"), scaled down 10× to keep the full suite fast; the
+    /// mean is stable well before that.
+    pub fn small() -> Self {
+        BenchConfig { warmup_iters: 200, iters: 10_000, inner: 1 }
+    }
+
+    /// Paper settings for the larger robot detector ("1000 times").
+    pub fn large() -> Self {
+        BenchConfig { warmup_iters: 20, iters: 1_000, inner: 1 }
+    }
+
+    /// Quick settings for tests.
+    pub fn quick() -> Self {
+        BenchConfig { warmup_iters: 5, iters: 50, inner: 1 }
+    }
+}
+
+/// Time a closure per the config; returns per-call statistics in µs.
+pub fn bench<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Stats {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples_us = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        let t0 = Instant::now();
+        for _ in 0..cfg.inner {
+            f();
+        }
+        let el = t0.elapsed();
+        samples_us.push(el.as_secs_f64() * 1e6 / cfg.inner as f64);
+    }
+    Stats::from_samples(samples_us)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_calls() {
+        let mut calls = 0usize;
+        let cfg = BenchConfig { warmup_iters: 3, iters: 10, inner: 2 };
+        let s = bench(&cfg, || calls += 1);
+        assert_eq!(calls, 3 + 10 * 2);
+        assert_eq!(s.n, 10);
+        assert!(s.mean_us >= 0.0);
+    }
+
+    #[test]
+    fn bench_measures_sleeps_roughly() {
+        let cfg = BenchConfig { warmup_iters: 1, iters: 20, inner: 1 };
+        let s = bench(&cfg, || std::thread::sleep(std::time::Duration::from_micros(200)));
+        assert!(s.mean_us > 150.0 && s.mean_us < 5000.0, "mean={}", s.mean_us);
+        assert!(s.median_us > 150.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Sample statistics for benchmark runs.
+
+/// Summary statistics over per-call samples (µs).
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub n: usize,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub p95_us: f64,
+    pub min_us: f64,
+    pub max_us: f64,
+    pub stddev_us: f64,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Stats {
+        assert!(!samples.is_empty(), "no samples");
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        Stats {
+            n,
+            mean_us: mean,
+            median_us: percentile(&samples, 50.0),
+            p95_us: percentile(&samples, 95.0),
+            min_us: samples[0],
+            max_us: samples[n - 1],
+            stddev_us: var.sqrt(),
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "mean {} | median {} | p95 {} | min {} | sd {:.2} (n={})",
+            crate::util::fmt_us(self.mean_us),
+            crate::util::fmt_us(self.median_us),
+            crate::util::fmt_us(self.p95_us),
+            crate::util::fmt_us(self.min_us),
+            self.stddev_us,
+            self.n
+        )
+    }
+}
+
+/// Percentile over a pre-sorted slice (nearest-rank with interpolation).
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean_us, 3.0);
+        assert_eq!(s.median_us, 3.0);
+        assert_eq!(s.min_us, 1.0);
+        assert_eq!(s.max_us, 5.0);
+        assert!((s.stddev_us - 2.0f64.sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        let s = Stats::from_samples(vec![5.0, 1.0, 3.0]);
+        assert_eq!(s.median_us, 3.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = vec![0.0, 10.0];
+        assert_eq!(percentile(&v, 50.0), 5.0);
+        assert_eq!(percentile(&v, 0.0), 0.0);
+        assert_eq!(percentile(&v, 100.0), 10.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_panics() {
+        Stats::from_samples(vec![]);
+    }
+}

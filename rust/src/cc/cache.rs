@@ -1,0 +1,88 @@
+//! Content-addressed cache of generated C files and compiled objects.
+//!
+//! Keyed on a hash of (source text, option tag, compiler). Benches sweep
+//! many option combinations over the same models; recompiling identical
+//! sources would dominate wall-clock otherwise.
+
+use super::driver::{CcDriver, CcTarget};
+use crate::util::fxhash;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Cache rooted at a working directory.
+pub struct ObjectCache {
+    root: PathBuf,
+}
+
+impl ObjectCache {
+    pub fn new(root: impl AsRef<Path>) -> Self {
+        ObjectCache { root: root.as_ref().to_path_buf() }
+    }
+
+    /// Path pair for a cache key.
+    fn paths(&self, ident: &str, tag: &str, key: u64) -> (PathBuf, PathBuf) {
+        let stem = format!("{ident}-{tag}-{key:016x}");
+        (self.root.join(format!("{stem}.c")), self.root.join(format!("{stem}.so")))
+    }
+
+    /// Return (c_path, so_path), compiling only if the object is absent.
+    pub fn get_or_compile(&self, ident: &str, tag: &str, source: &str, driver: &CcDriver) -> Result<(PathBuf, PathBuf)> {
+        std::fs::create_dir_all(&self.root)
+            .with_context(|| format!("creating cache dir {}", self.root.display()))?;
+        let key = fxhash::hash_str(&format!("{source}\x00{tag}\x00{}", driver.cc));
+        let (c_path, so_path) = self.paths(ident, tag, key);
+        if so_path.exists() {
+            return Ok((c_path, so_path));
+        }
+        std::fs::write(&c_path, source)?;
+        driver.compile(&c_path, Some(&so_path), CcTarget::NativeShared)?;
+        Ok((c_path, so_path))
+    }
+
+    /// Remove all cached artifacts (tests).
+    pub fn clear(&self) -> Result<()> {
+        if self.root.exists() {
+            for entry in std::fs::read_dir(&self.root)? {
+                let p = entry?.path();
+                if p.extension().map_or(false, |e| e == "c" || e == "so") {
+                    std::fs::remove_file(p)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn different_sources_get_different_objects() {
+        let dir = std::env::temp_dir().join("nncg-cache-distinct");
+        let cache = ObjectCache::new(&dir);
+        cache.clear().unwrap();
+        let driver = CcDriver::detect().unwrap();
+        let src_a = "void a_inference(const float *x, float *y) { y[0] = x[0]; }\n";
+        let src_b = "void a_inference(const float *x, float *y) { y[0] = x[0] * 2.0f; }\n";
+        let (_, so_a) = cache.get_or_compile("a", "t", src_a, &driver).unwrap();
+        let (_, so_b) = cache.get_or_compile("a", "t", src_b, &driver).unwrap();
+        assert_ne!(so_a, so_b);
+        assert!(so_a.exists() && so_b.exists());
+    }
+
+    #[test]
+    fn same_source_reuses_object() {
+        let dir = std::env::temp_dir().join("nncg-cache-reuse");
+        let cache = ObjectCache::new(&dir);
+        cache.clear().unwrap();
+        let driver = CcDriver::detect().unwrap();
+        let src = "void r_inference(const float *x, float *y) { y[0] = x[0]; }\n";
+        let (_, so1) = cache.get_or_compile("r", "t", src, &driver).unwrap();
+        let mtime1 = std::fs::metadata(&so1).unwrap().modified().unwrap();
+        let (_, so2) = cache.get_or_compile("r", "t", src, &driver).unwrap();
+        let mtime2 = std::fs::metadata(&so2).unwrap().modified().unwrap();
+        assert_eq!(so1, so2);
+        assert_eq!(mtime1, mtime2, "object must not be recompiled");
+    }
+}

@@ -1,0 +1,153 @@
+//! C compiler detection and invocation.
+//!
+//! Mirrors the paper's deployment scenarios (§III-B): native optimized
+//! builds for the host, strict-ANSI checks (any "ANSI C compiler" must
+//! accept the generic output), 32-bit cross builds (the Nao's Atom Z530)
+//! and `-march` retargeting (the Atom J1900's bonnell).
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::process::Command;
+
+/// Compilation target flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CcTarget {
+    /// Native shared object, `-O3 -march=native` (the benchmark path).
+    NativeShared,
+    /// Native standalone executable (generated harness `main()`).
+    NativeExe,
+    /// Strict ANSI conformance check: `-std=c89 -pedantic -Werror`,
+    /// compile-only. Proves "any ANSI C compiler can take the file".
+    StrictAnsiCheck,
+    /// 32-bit compile (`-m32`), compile-only — the Nao scenario.
+    M32Check,
+    /// Retarget to a named micro-architecture, compile-only — the J1900
+    /// scenario (`-march=bonnell`-style cross builds).
+    MarchCheck(&'static str),
+}
+
+/// A detected C compiler.
+#[derive(Debug, Clone)]
+pub struct CcDriver {
+    /// Compiler executable (cc/gcc/clang).
+    pub cc: String,
+}
+
+/// Find a working C compiler on PATH. Prefers `cc`, falls back to gcc/clang.
+pub fn detect_compiler() -> Result<String> {
+    for cand in ["cc", "gcc", "clang"] {
+        if Command::new(cand)
+            .arg("--version")
+            .output()
+            .map(|o| o.status.success())
+            .unwrap_or(false)
+        {
+            return Ok(cand.to_string());
+        }
+    }
+    bail!("no C compiler found on PATH (tried cc, gcc, clang)")
+}
+
+impl CcDriver {
+    pub fn detect() -> Result<Self> {
+        Ok(CcDriver { cc: detect_compiler()? })
+    }
+
+    /// Flags for a target flavor.
+    pub fn flags(&self, target: CcTarget) -> Vec<String> {
+        let s = |v: &[&str]| v.iter().map(|x| x.to_string()).collect::<Vec<_>>();
+        match target {
+            CcTarget::NativeShared => s(&["-O3", "-march=native", "-shared", "-fPIC", "-lm"]),
+            CcTarget::NativeExe => s(&["-O3", "-march=native", "-lm"]),
+            CcTarget::StrictAnsiCheck => s(&["-std=c89", "-pedantic", "-Werror", "-fsyntax-only"]),
+            CcTarget::M32Check => s(&["-m32", "-O2", "-fsyntax-only"]),
+            CcTarget::MarchCheck(arch) => {
+                vec!["-O2".into(), format!("-march={arch}"), "-c".into(), "-o".into(), "/dev/null".into()]
+            }
+        }
+    }
+
+    /// Compile `c_path` to `out_path` (ignored for compile-only targets).
+    /// Returns the compiler's stderr on failure.
+    pub fn compile(&self, c_path: &Path, out_path: Option<&Path>, target: CcTarget) -> Result<()> {
+        let mut cmd = Command::new(&self.cc);
+        cmd.arg(c_path);
+        // Output file comes before -l flags; libs go last for ld ordering.
+        let flags = self.flags(target);
+        let (libs, opts): (Vec<_>, Vec<_>) = flags.into_iter().partition(|f| f.starts_with("-l"));
+        cmd.args(&opts);
+        if let Some(out) = out_path {
+            cmd.arg("-o").arg(out);
+        }
+        cmd.args(&libs);
+        let out = cmd.output().with_context(|| format!("running {}", self.cc))?;
+        if !out.status.success() {
+            bail!(
+                "{} failed on {} ({:?}):\n{}",
+                self.cc,
+                c_path.display(),
+                target,
+                String::from_utf8_lossy(&out.stderr)
+            );
+        }
+        Ok(())
+    }
+
+    /// Probe whether a compile-only target is supported by the toolchain
+    /// (e.g. `-m32` needs multilib). Returns Ok(true/false) rather than an
+    /// error so the deploy matrix can report "toolchain gate".
+    pub fn probe(&self, target: CcTarget) -> Result<bool> {
+        let dir = std::env::temp_dir().join("nncg-cc-probe");
+        std::fs::create_dir_all(&dir)?;
+        let probe = dir.join("probe.c");
+        std::fs::write(&probe, "int nncg_probe(int x) { return x + 1; }\n")?;
+        Ok(self.compile(&probe, None, target).is_ok())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn detects_a_compiler() {
+        let cc = detect_compiler().unwrap();
+        assert!(!cc.is_empty());
+    }
+
+    #[test]
+    fn strict_ansi_accepts_ansi_and_rejects_c99() {
+        let driver = CcDriver::detect().unwrap();
+        let dir = std::env::temp_dir().join("nncg-cc-ansi");
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let good = dir.join("good.c");
+        std::fs::write(&good, "int f(int x) { int y; y = x + 1; return y; }\n").unwrap();
+        assert!(driver.compile(&good, None, CcTarget::StrictAnsiCheck).is_ok());
+
+        let bad = dir.join("bad.c");
+        // C99 declaration-after-statement + // comment: must be rejected.
+        std::fs::write(&bad, "int f(int x) { x += 1; int y = x; // c99\n return y; }\n").unwrap();
+        assert!(driver.compile(&bad, None, CcTarget::StrictAnsiCheck).is_err());
+    }
+
+    #[test]
+    fn compile_error_includes_stderr() {
+        let driver = CcDriver::detect().unwrap();
+        let dir = std::env::temp_dir().join("nncg-cc-err");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = dir.join("syntax.c");
+        std::fs::write(&bad, "this is not C\n").unwrap();
+        let err = driver.compile(&bad, None, CcTarget::StrictAnsiCheck).unwrap_err().to_string();
+        assert!(err.contains("error"), "{err}");
+    }
+
+    #[test]
+    fn probe_reports_bool() {
+        let driver = CcDriver::detect().unwrap();
+        // Native syntax-only must always work.
+        assert!(driver.probe(CcTarget::StrictAnsiCheck).unwrap());
+        // m32 may or may not be available; must not error either way.
+        let _ = driver.probe(CcTarget::M32Check).unwrap();
+    }
+}

@@ -1,0 +1,96 @@
+//! Tiny flag parser: `--key value`, `--flag` (boolean), `-o value`.
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Parsed flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    /// Positional arguments.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--").or_else(|| a.strip_prefix('-').filter(|_| a.len() == 2)) {
+                // Peek: value or boolean flag?
+                if i + 1 < argv.len() && !argv[i + 1].starts_with('-') {
+                    args.values.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    args.flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                args.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{key} expects an integer, got {v:?}"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn key_values_and_flags() {
+        let a = parse(&["--model", "ball", "--quick", "--trials", "5", "pos1"]);
+        assert_eq!(a.get("model"), Some("ball"));
+        assert!(a.has_flag("quick"));
+        assert_eq!(a.get_usize("trials", 1).unwrap(), 5);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn short_flag_with_value() {
+        let a = parse(&["-o", "out.c"]);
+        assert_eq!(a.get("o"), Some("out.c"));
+    }
+
+    #[test]
+    fn bad_integer_errors() {
+        let a = parse(&["--trials", "many"]);
+        assert!(a.get_usize("trials", 1).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("model", "ball"), "ball");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,356 @@
+//! CLI subcommand implementations.
+
+use super::args::Args;
+use crate::cc::{CcDriver, CcTarget, CompiledCnn};
+use crate::codegen::{generate_c, CodegenOptions, Isa, Unroll};
+use crate::coordinator;
+use crate::experiments::{self, build_engine, load_model};
+use crate::platform::{paper_platforms, GpuModel};
+use crate::runtime::EngineKind;
+use crate::tensor::Tensor;
+use crate::util::XorShift64;
+use crate::vision::{ball, render};
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+fn opts_from_args(args: &Args) -> Result<CodegenOptions> {
+    let isa = match args.get_or("isa", "sse3") {
+        "generic" => Isa::Generic,
+        "sse3" => Isa::Sse3,
+        "avx2" => Isa::Avx2,
+        other => bail!("unknown --isa {other:?} (generic|sse3|avx2)"),
+    };
+    let unroll = Unroll::from_name(args.get_or("unroll", "keep-outer-2"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --unroll (none|2|1|full)"))?;
+    Ok(CodegenOptions { isa, unroll, test_harness: args.has_flag("harness"), ..Default::default() })
+}
+
+fn weights_dir(args: &Args) -> PathBuf {
+    args.get("weights-dir").map(PathBuf::from).unwrap_or_else(experiments::default_weights_dir)
+}
+
+fn model_from_args(args: &Args) -> Result<crate::graph::Model> {
+    load_model(args.get_or("model", "ball"), &weights_dir(args))
+}
+
+pub fn describe(args: &Args) -> Result<i32> {
+    let model = model_from_args(args)?;
+    print!("{}", model.describe());
+    let hist = crate::passes::layer_histogram(&model);
+    let parts: Vec<String> = hist.iter().map(|(k, c)| format!("{k}×{c}")).collect();
+    println!("layers: {}", parts.join(", "));
+    Ok(0)
+}
+
+pub fn generate(args: &Args) -> Result<i32> {
+    let model = model_from_args(args)?;
+    let opts = opts_from_args(args)?;
+    let src = generate_c(&model, &opts)?;
+    match args.get("o") {
+        Some(path) => {
+            std::fs::write(path, &src)?;
+            eprintln!("wrote {} bytes ({} lines) to {path}", src.len(), src.lines().count());
+        }
+        None => print!("{src}"),
+    }
+    Ok(0)
+}
+
+pub fn verify(args: &Args) -> Result<i32> {
+    let model = model_from_args(args)?;
+    let opts = opts_from_args(args)?;
+    let trials = args.get_usize("trials", 5)?;
+    let err = crate::cc::verify_against_interp(&model, &opts, experiments::default_work_dir(), trials, 42)?;
+    println!("model={} opts={} trials={trials} max_abs_err={err:.3e}", model.name, opts.tag());
+    if err < 1e-4 {
+        println!("VERIFY OK");
+        Ok(0)
+    } else {
+        println!("VERIFY FAILED");
+        Ok(1)
+    }
+}
+
+pub fn run_once(args: &Args) -> Result<i32> {
+    let model = model_from_args(args)?;
+    let kind = EngineKind::from_name(args.get_or("engine", "nncg"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --engine (nncg|interp|xla)"))?;
+    let artifacts = args.get("artifacts").map(PathBuf::from).unwrap_or_else(experiments::default_artifacts_dir);
+    let engine = build_engine(kind, &model, &opts_from_args(args)?, &artifacts, &experiments::default_work_dir())?;
+    let mut rng = XorShift64::new(args.get_usize("seed", 1)? as u64);
+    let input = Tensor::rand(model.input.dims(), 0.0, 1.0, &mut rng);
+    let t0 = std::time::Instant::now();
+    let out = engine.infer(&input)?;
+    let us = t0.elapsed().as_secs_f64() * 1e6;
+    println!("engine={} model={} latency={:.2}us", engine.name(), model.name, us);
+    let show = out.data().iter().take(8).map(|v| format!("{v:.5}")).collect::<Vec<_>>();
+    println!("output[..{}] = [{}] argmax={}", show.len(), show.join(", "), out.argmax());
+    Ok(0)
+}
+
+pub fn bench(args: &Args) -> Result<i32> {
+    let quick = args.has_flag("quick");
+    let which = args.get_or("table", "all");
+    let run = |name: &str| -> Result<()> {
+        let result = match name {
+            "4" => experiments::run_table4(quick)?,
+            "5" => experiments::run_table5(quick)?,
+            "6" => experiments::run_table6(quick)?,
+            "7" => experiments::run_table7(quick)?,
+            "gpu" => experiments::run_gpu_throughput()?,
+            other => bail!("unknown --table {other:?} (4|5|6|7|gpu|all)"),
+        };
+        println!("{}", result.rendered);
+        Ok(())
+    };
+    if which == "all" {
+        for t in ["4", "5", "6", "7", "gpu"] {
+            run(t)?;
+        }
+    } else {
+        run(which)?;
+    }
+    Ok(0)
+}
+
+pub fn serve(args: &Args) -> Result<i32> {
+    // End-to-end robot-soccer serving loop: synthetic frames → ball
+    // candidates → classification via the coordinator.
+    let model = load_model("ball", &weights_dir(args))?;
+    let kind = EngineKind::from_name(args.get_or("engine", "nncg")).unwrap_or(EngineKind::Nncg);
+    let artifacts = args.get("artifacts").map(PathBuf::from).unwrap_or_else(experiments::default_artifacts_dir);
+    let engine = build_engine(kind, &model, &CodegenOptions::sse3(), &artifacts, &experiments::default_work_dir())?;
+    let handle = coordinator::serve_single("ball", engine, args.get_usize("workers", 1)?);
+
+    let frames = args.get_usize("frames", 30)?;
+    let mut rng = XorShift64::new(99);
+    let mut total_candidates = 0usize;
+    let mut total_balls = 0usize;
+    let t0 = std::time::Instant::now();
+    for _ in 0..frames {
+        let (img, _truth) = render::soccer_frame(60, 80, 1 + rng.below(2), rng.below(2), &mut rng);
+        let cands = ball::extract_candidates(&img, &ball::BallExtractorConfig::default());
+        total_candidates += cands.len();
+        let patches: Vec<Tensor> = cands.iter().map(|c| ball::candidate_patch(&img, c)).collect();
+        if patches.is_empty() {
+            continue;
+        }
+        let outs = handle.infer_burst("ball", patches)?;
+        total_balls += outs.iter().filter(|o| o.argmax() == 1).count();
+    }
+    let total_s = t0.elapsed().as_secs_f64();
+    let snap = handle.metrics.snapshot();
+    println!(
+        "frames={frames} candidates={total_candidates} classified-ball={total_balls} wall={:.3}s ({:.1} fps)",
+        total_s,
+        frames as f64 / total_s
+    );
+    for (model, q_mean, i_mean, p50, p99, n) in &snap.models {
+        println!("model={model} n={n} queue_mean={q_mean:.1}us infer_mean={i_mean:.1}us p50<{p50:.0}us p99<{p99:.0}us");
+    }
+    handle.shutdown();
+    Ok(0)
+}
+
+pub fn platforms(_args: &Args) -> Result<i32> {
+    println!("Simulated CPU platforms (rates calibrated on paper Table IV, ball = 16352 MACs):\n");
+    for p in paper_platforms() {
+        println!(
+            "  {:<22} {:.2} GHz | NNCG {:.3} GMAC/s | XLA {} | Glow {}",
+            p.name,
+            p.freq_ghz,
+            p.nncg_gmacs,
+            p.xla_gmacs.map(|v| format!("{v:.3} GMAC/s")).unwrap_or_else(|| "N/A".into()),
+            p.glow_gmacs.map(|v| format!("{v:.3} GMAC/s")).unwrap_or_else(|| "N/A".into()),
+        );
+    }
+    let gpu = GpuModel::gtx_1050();
+    println!(
+        "\n  {:<22} overhead {:.0}us | PCIe {:.0} GB/s | peak {:.0} GMAC/s | batch-1 eff {:.1}%",
+        gpu.name,
+        gpu.overhead_us,
+        gpu.pcie_gbps,
+        gpu.peak_gmacs,
+        gpu.batch1_efficiency * 100.0
+    );
+    println!("\nPer-model predictions (µs):");
+    for name in crate::graph::zoo::PAPER_MODELS {
+        let m = load_model(name, &experiments::default_weights_dir())?;
+        let macs = m.macs()?;
+        print!("  {name:<11} ({macs:>8} MACs)");
+        for p in paper_platforms() {
+            let v = p.predict_us(EngineKind::Nncg, macs).unwrap();
+            print!("  {}={v:.1}", p.name.split_whitespace().last().unwrap_or("?"));
+        }
+        println!();
+    }
+    Ok(0)
+}
+
+pub fn export_figures(args: &Args) -> Result<i32> {
+    let out = PathBuf::from(args.get_or("out", "figures"));
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let mut rng = XorShift64::new(2020);
+
+    if which == "fig1" || which == "all" {
+        // Fig. 1: three positive + three negative ball patches.
+        for i in 0..3 {
+            render::write_pgm(&render::ball_patch(true, &mut rng), &out.join(format!("fig1_pos{i}.pgm")))?;
+            render::write_pgm(&render::ball_patch(false, &mut rng), &out.join(format!("fig1_neg{i}.pgm")))?;
+        }
+        println!("fig1: wrote 6 ball patches to {}", out.display());
+    }
+    if which == "fig2" || which == "all" {
+        for i in 0..3 {
+            render::write_pgm(&render::pedestrian_patch(true, &mut rng), &out.join(format!("fig2_pos{i}.pgm")))?;
+            render::write_pgm(&render::pedestrian_patch(false, &mut rng), &out.join(format!("fig2_neg{i}.pgm")))?;
+        }
+        println!("fig2: wrote 6 pedestrian patches to {}", out.display());
+    }
+    if which == "fig3" || which == "all" {
+        // Fig. 3: a soccer scene with robots, plus the detector's boxes
+        // burned in (white border) when the robot model is available.
+        let (mut img, truth) = render::soccer_frame(60, 80, 1, 2, &mut rng);
+        let model = load_model("robot", &weights_dir(args))?;
+        let engine = build_engine(
+            EngineKind::Nncg,
+            &model,
+            &CodegenOptions::sse3(),
+            &experiments::default_artifacts_dir(),
+            &experiments::default_work_dir(),
+        )?;
+        // model input is RGB [60,80,3]; tile grayscale to 3 channels
+        let mut rgb = Tensor::zeros(&[60, 80, 3]);
+        for i in 0..60 {
+            for j in 0..80 {
+                for k in 0..3 {
+                    *rgb.at3_mut(i, j, k) = img.at3(i, j, 0);
+                }
+            }
+        }
+        let head = engine.infer(&rgb)?;
+        let dets = crate::vision::yolo::decode(&head, &crate::vision::yolo::YoloConfig::default())?;
+        for d in dets.iter().chain(truth.robots.iter()) {
+            draw_box(&mut img, d);
+        }
+        render::write_pgm(&img, &out.join("fig3_robots.pgm"))?;
+        println!("fig3: wrote annotated scene ({} detections, {} ground truth) to {}", dets.len(), truth.robots.len(), out.display());
+    }
+    Ok(0)
+}
+
+fn draw_box(img: &mut Tensor, d: &crate::vision::Detection) {
+    let (h, w) = (img.dims()[0] as f32, img.dims()[1] as f32);
+    let y0 = d.y.clamp(0.0, h - 1.0) as usize;
+    let x0 = d.x.clamp(0.0, w - 1.0) as usize;
+    let y1 = (d.y + d.h).clamp(0.0, h - 1.0) as usize;
+    let x1 = (d.x + d.w).clamp(0.0, w - 1.0) as usize;
+    for j in x0..=x1 {
+        *img.at3_mut(y0, j, 0) = 1.0;
+        *img.at3_mut(y1, j, 0) = 1.0;
+    }
+    for i in y0..=y1 {
+        *img.at3_mut(i, x0, 0) = 1.0;
+        *img.at3_mut(i, x1, 0) = 1.0;
+    }
+}
+
+/// Deployment matrix check used by `examples/deploy_matrix.rs` and tests:
+/// compile the generated C for each scenario the paper walks through.
+/// (public so examples/deploy_matrix.rs and integration tests can reuse it)
+pub fn deploy_matrix(model_name: &str) -> Result<Vec<(String, bool, String)>> {
+    let model = load_model(model_name, &experiments::default_weights_dir())?;
+    let driver = CcDriver::detect()?;
+    let dir = experiments::default_work_dir().join("deploy");
+    std::fs::create_dir_all(&dir)?;
+
+    let mut results = Vec::new();
+    let scenarios: Vec<(&str, CodegenOptions, CcTarget)> = vec![
+        (
+            "native -O3 (host, SSE)",
+            CodegenOptions::sse3(),
+            CcTarget::NativeShared,
+        ),
+        (
+            "strict ANSI C89 (generic ISA)",
+            CodegenOptions::general(),
+            CcTarget::StrictAnsiCheck,
+        ),
+        (
+            "32-bit target (-m32, Nao scenario)",
+            CodegenOptions::general(),
+            CcTarget::M32Check,
+        ),
+        (
+            "retarget -march=x86-64 (J1900-style cross build)",
+            CodegenOptions::general(),
+            CcTarget::MarchCheck("x86-64"),
+        ),
+    ];
+    for (label, opts, target) in scenarios {
+        let src = generate_c(&model, &opts)?;
+        let c_path = dir.join(format!("{}-{}.c", model.name, opts.tag()));
+        std::fs::write(&c_path, &src)?;
+        let out_so = dir.join(format!("{}-{}.so", model.name, opts.tag()));
+        let result = match target {
+            CcTarget::NativeShared => driver.compile(&c_path, Some(&out_so), target),
+            _ => driver.compile(&c_path, None, target),
+        };
+        match result {
+            Ok(()) => results.push((label.to_string(), true, String::new())),
+            Err(e) => {
+                let msg = e.to_string().lines().next().unwrap_or("").to_string();
+                results.push((label.to_string(), false, msg));
+            }
+        }
+    }
+    // Sanity: native build must also load + run.
+    let _ = CompiledCnn::build(&model, &CodegenOptions::sse3(), &dir)?;
+    Ok(results)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn opts_parsing() {
+        let o = opts_from_args(&args(&["--isa", "generic", "--unroll", "full"])).unwrap();
+        assert_eq!(o.isa, Isa::Generic);
+        assert_eq!(o.unroll, Unroll::Full);
+        assert!(opts_from_args(&args(&["--isa", "avx512"])).is_err());
+    }
+
+    #[test]
+    fn describe_runs() {
+        assert_eq!(describe(&args(&["--model", "ball"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn generate_to_file() {
+        let out = std::env::temp_dir().join("nncg-cli-gen.c");
+        let code = generate(&args(&["--model", "ball", "-o", out.to_str().unwrap()])).unwrap();
+        assert_eq!(code, 0);
+        let src = std::fs::read_to_string(&out).unwrap();
+        assert!(src.contains("ball_inference"));
+    }
+
+    #[test]
+    fn verify_ball_passes() {
+        let code = verify(&args(&["--model", "tiny", "--trials", "2"])).unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn deploy_matrix_native_and_ansi_succeed() {
+        let results = deploy_matrix("ball").unwrap();
+        let native = results.iter().find(|(l, _, _)| l.starts_with("native")).unwrap();
+        assert!(native.1, "{:?}", native);
+        let ansi = results.iter().find(|(l, _, _)| l.contains("ANSI")).unwrap();
+        assert!(ansi.1, "generic output must be strict ANSI C89: {}", ansi.2);
+    }
+}

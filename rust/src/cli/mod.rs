@@ -1,0 +1,69 @@
+//! Command-line interface (hand-rolled; clap is unavailable offline).
+//!
+//! ```text
+//! nncg describe --model ball
+//! nncg generate --model ball --isa sse3 --unroll full -o ball.c
+//! nncg verify   --model ball [--trials 5]
+//! nncg run      --model ball --engine nncg|interp|xla
+//! nncg bench    --table 4|5|6|7|gpu
+//! nncg serve    --model ball --frames 50
+//! nncg platforms
+//! nncg export-figures [fig1|fig2|fig3|all]
+//! ```
+
+mod args;
+pub mod commands;
+
+pub use args::Args;
+
+use anyhow::Result;
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn run(argv: &[String]) -> Result<i32> {
+    if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" || argv[0] == "-h" {
+        print!("{}", usage());
+        return Ok(0);
+    }
+    let cmd = argv[0].clone();
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "describe" => commands::describe(&args),
+        "generate" => commands::generate(&args),
+        "verify" => commands::verify(&args),
+        "run" => commands::run_once(&args),
+        "bench" => commands::bench(&args),
+        "serve" => commands::serve(&args),
+        "platforms" => commands::platforms(&args),
+        "export-figures" => commands::export_figures(&args),
+        other => {
+            eprintln!("unknown command {other:?}\n{}", usage());
+            Ok(2)
+        }
+    }
+}
+
+pub fn usage() -> String {
+    "\
+nncg — C code generator for fast CNN inference (paper reproduction)
+
+USAGE: nncg <command> [flags]
+
+COMMANDS:
+  describe        print a model architecture table (--model ball|pedestrian|robot)
+  generate        emit the C file for a model (--model, --isa generic|sse3|avx2,
+                  --unroll none|2|1|full, --harness, -o FILE)
+  verify          compile generated C and compare against the interpreter
+                  (--model, --isa, --unroll, --trials N)
+  run             classify one synthetic input (--model, --engine nncg|interp|xla,
+                  --artifacts DIR for xla)
+  bench           reproduce a paper table (--table 4|5|6|7|gpu, --quick)
+  serve           run the serving coordinator over synthetic frames
+                  (--model ball, --frames N, --engine ...)
+  platforms       print the simulated platform models and predictions
+  export-figures  write Fig. 1-3 sample images (--out DIR)
+
+Weights: models load trained weights from --weights-dir (default models/)
+if present, else use seeded random weights (latency is weight-independent).
+"
+    .to_string()
+}

@@ -1,0 +1,113 @@
+//! Standalone activation emitters (ReLU / leaky ReLU after non-conv layers,
+//! softmax heads) and the buffer-copy helper.
+
+use super::conv::scalar_act;
+use super::cwriter::{fmt_f32, CWriter};
+use super::simd::{emit_vec_activation, VecSpec};
+use super::{LayerCtx, Unroll};
+use crate::graph::Activation;
+use anyhow::Result;
+
+pub(crate) fn emit_activation(w: &mut CWriter, ctx: &LayerCtx<'_>, act: Activation) -> Result<()> {
+    let n = ctx.in_shape.numel();
+    match act {
+        Activation::None => {
+            if ctx.src != ctx.dst {
+                emit_copy(w, ctx);
+            }
+        }
+        Activation::Softmax => {
+            if ctx.src != ctx.dst {
+                emit_copy(w, ctx);
+            }
+            emit_softmax_over(w, ctx, ctx.dst, n);
+        }
+        Activation::Relu | Activation::LeakyRelu(_) => {
+            // Elementwise over the flat buffer; vectorize when the count
+            // divides the lane width.
+            let vec = VecSpec::for_channels(ctx.opts.isa, n);
+            if ctx.opts.unroll == Unroll::Full {
+                if let Some(v) = vec {
+                    for i0 in (0..n).step_by(v.width) {
+                        w.open("");
+                        w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("{} + {i0}", ctx.src))));
+                        emit_vec_activation(w, v, act, "a");
+                        w.line(&v.storeu(&format!("{} + {i0}", ctx.dst), "a"));
+                        w.close();
+                    }
+                } else {
+                    for i in 0..n {
+                        let val = format!("{}[{i}]", ctx.src);
+                        w.line(&format!("{}[{i}] = {};", ctx.dst, scalar_act(&val, act)));
+                    }
+                }
+            } else if let Some(v) = vec {
+                w.open(&format!("for (i = 0; i < {n}; i += {})", v.width));
+                w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("{} + i", ctx.src))));
+                emit_vec_activation(w, v, act, "a");
+                w.line(&v.storeu(&format!("{} + i", ctx.dst), "a"));
+                w.close();
+            } else {
+                w.open(&format!("for (i = 0; i < {n}; i++)"));
+                let val = format!("{}[i]", ctx.src);
+                w.line(&format!("{}[i] = {};", ctx.dst, scalar_act(&val, act)));
+                w.close();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Copy `numel` floats from src to dst.
+pub(crate) fn emit_copy(w: &mut CWriter, ctx: &LayerCtx<'_>) {
+    let n = ctx.in_shape.numel();
+    if ctx.opts.unroll == Unroll::Full {
+        for i in 0..n {
+            w.line(&format!("{}[{i}] = {}[{i}];", ctx.dst, ctx.src));
+        }
+    } else {
+        w.open(&format!("for (i = 0; i < {n}; i++)"));
+        w.line(&format!("{}[i] = {}[i];", ctx.dst, ctx.src));
+        w.close();
+    }
+}
+
+/// Numerically-stable softmax computed in place over `buf[0..n]`.
+///
+/// Uses `exp` from math.h (ANSI C89 has no `expf`); the cast keeps single
+/// precision. The head maps are tiny (1×1×2 for the paper's classifiers),
+/// so this is never on the profile.
+pub(crate) fn emit_softmax_over(w: &mut CWriter, ctx: &LayerCtx<'_>, buf: &str, n: usize) {
+    w.line("/* softmax (numerically stable) */");
+    if ctx.opts.unroll == Unroll::Full {
+        w.open("");
+        w.line(&format!("float mx = {buf}[0];"));
+        w.line(&format!("float sum = {};", fmt_f32(0.0)));
+        for i in 1..n {
+            w.line(&format!("mx = {buf}[{i}] > mx ? {buf}[{i}] : mx;"));
+        }
+        for i in 0..n {
+            w.line(&format!("{buf}[{i}] = (float)exp((double)({buf}[{i}] - mx));"));
+            w.line(&format!("sum += {buf}[{i}];"));
+        }
+        for i in 0..n {
+            w.line(&format!("{buf}[{i}] /= sum;"));
+        }
+        w.close();
+    } else {
+        w.open("");
+        w.line(&format!("float mx = {buf}[0];"));
+        w.line("float sum = 0.0f;");
+        w.open(&format!("for (i = 1; i < {n}; i++)"));
+        w.line(&format!("mx = {buf}[i] > mx ? {buf}[i] : mx;"));
+        w.close();
+        w.open(&format!("for (i = 0; i < {n}; i++)"));
+        w.line(&format!("{buf}[i] = (float)exp((double)({buf}[i] - mx));"));
+        w.line(&format!("sum += {buf}[i];"));
+        w.close();
+        w.open(&format!("for (i = 0; i < {n}; i++)"));
+        w.line(&format!("{buf}[i] /= sum;"));
+        w.close();
+        w.close();
+    }
+}

@@ -1,0 +1,453 @@
+//! Convolution emitter — the heart of NNCG (paper §II-B.1).
+//!
+//! Strategy per the paper, adapted as described in `codegen`:
+//!
+//! 1. If the layer pads, materialize x̂ (Eq. 1) into the shared scratch
+//!    buffer `nncg_pad` so the compute loops are branch-free (P3: the pad
+//!    geometry is constant-folded at *generation* time).
+//! 2. Emit the 6-deep loop nest of Eq. 2 at the configured unroll level:
+//!    spatial loops (`i`, `j`) optionally kept, kernel/channel loops
+//!    (`n`, `m`, `o`, `k`) unrolled with inline weight constants, or kept
+//!    with `static const` weight arrays.
+//! 3. SSE mode vectorizes over `k` (output channels) in groups of 4 — the
+//!    paper's P4 choice, possible because C is the minor-most axis.
+
+use super::cwriter::{fmt_f32, CWriter};
+use super::simd::{emit_vec_activation, VecSpec};
+use super::{ConstMode, LayerCtx, Unroll};
+use crate::graph::{Activation, Padding};
+use crate::tensor::{Shape, Tensor};
+use anyhow::{bail, Result};
+
+/// Padded input extent `(h, w)` for a conv layer (equals the input extent
+/// when the layer does not pad).
+pub(crate) fn padded_extent(input: &Shape, wdims: &[usize], stride: (usize, usize), padding: Padding) -> Result<(usize, usize)> {
+    let (oh, _) = padding.resolve(input.h(), wdims[0], stride.0)?;
+    let (ow, _) = padding.resolve(input.w(), wdims[1], stride.1)?;
+    let th = match padding {
+        Padding::Same => ((oh - 1) * stride.0 + wdims[0]).saturating_sub(input.h()),
+        Padding::Valid => 0,
+    };
+    let tw = match padding {
+        Padding::Same => ((ow - 1) * stride.1 + wdims[1]).saturating_sub(input.w()),
+        Padding::Valid => 0,
+    };
+    Ok((input.h() + th, input.w() + tw))
+}
+
+pub(crate) fn emit_conv(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    weights: &Tensor,
+    bias: &Tensor,
+    stride: (usize, usize),
+    padding: Padding,
+    activation: Activation,
+) -> Result<()> {
+    let wd = weights.dims();
+    let (h_k, w_k, c_in, c_out) = (wd[0], wd[1], wd[2], wd[3]);
+    let (h_in, w_in) = (ctx.in_shape.h(), ctx.in_shape.w());
+    let (h_out, w_out) = (ctx.out_shape.h(), ctx.out_shape.w());
+    let (ph, pw) = padded_extent(ctx.in_shape, wd, stride, padding)?;
+    let pads = (ph, pw) != (h_in, w_in);
+    let (pad_top, pad_left) = match padding {
+        Padding::Same => {
+            let (_, pt) = padding.resolve(h_in, h_k, stride.0)?;
+            let (_, pl) = padding.resolve(w_in, w_k, stride.1)?;
+            (pt, pl)
+        }
+        Padding::Valid => (0, 0),
+    };
+
+    // --- Step 1: padded input (Eq. 1) -------------------------------------
+    let src: String = if pads {
+        emit_pad_fill_public(w, ctx, h_in, w_in, ctx.in_shape.c(), ph, pw, pad_top, pad_left)?;
+        ctx.padbuf.to_string()
+    } else {
+        ctx.src.to_string()
+    };
+
+    // --- Step 2/3: compute loops ------------------------------------------
+    let vec = VecSpec::for_channels(ctx.opts.isa, c_out);
+    let geom = ConvGeom {
+        src,
+        dst: ctx.dst.to_string(),
+        h_k,
+        w_k,
+        c_in,
+        c_out,
+        pw_elems: pw * c_in,
+        stride,
+        h_out,
+        w_out,
+        idx: ctx.idx,
+    };
+
+    match ctx.opts.unroll {
+        Unroll::None => emit_conv_loops(w, ctx, &geom, weights, bias, activation, vec)?,
+        Unroll::KeepOuter2 => {
+            w.open(&format!("for (i = 0; i < {h_out}; i++)"));
+            w.open(&format!("for (j = 0; j < {w_out}; j++)"));
+            w.line(&format!(
+                "const float *s = {} + i*{} + j*{};",
+                geom.src,
+                stride.0 * geom.pw_elems,
+                stride.1 * c_in
+            ));
+            w.line(&format!("float *d = {} + i*{} + j*{};", geom.dst, w_out * c_out, c_out));
+            emit_cell(w, ctx, &geom, weights, bias, activation, vec, "s", 0, "d", 0);
+            w.close();
+            w.close();
+        }
+        Unroll::KeepOuter1 => {
+            w.open(&format!("for (i = 0; i < {h_out}; i++)"));
+            w.line(&format!("const float *s = {} + i*{};", geom.src, stride.0 * geom.pw_elems));
+            w.line(&format!("float *d = {} + i*{};", geom.dst, w_out * c_out));
+            for j in 0..w_out {
+                emit_cell(w, ctx, &geom, weights, bias, activation, vec, "s", j * stride.1 * c_in, "d", j * c_out);
+            }
+            w.close();
+        }
+        Unroll::Full => {
+            for i in 0..h_out {
+                for j in 0..w_out {
+                    emit_cell(
+                        w,
+                        ctx,
+                        &geom,
+                        weights,
+                        bias,
+                        activation,
+                        vec,
+                        &geom.src.clone(),
+                        i * stride.0 * geom.pw_elems + j * stride.1 * c_in,
+                        &geom.dst.clone(),
+                        (i * w_out + j) * c_out,
+                    );
+                }
+            }
+        }
+    }
+
+    // Fused softmax runs once over the final map.
+    if activation == Activation::Softmax {
+        super::activation::emit_softmax_over(w, ctx, &geom.dst, ctx.out_shape.numel());
+    }
+    Ok(())
+}
+
+/// Geometry shared by the cell emitters.
+struct ConvGeom {
+    src: String,
+    dst: String,
+    h_k: usize,
+    w_k: usize,
+    c_in: usize,
+    c_out: usize,
+    /// Elements per padded input row (`pw * c_in`).
+    pw_elems: usize,
+    stride: (usize, usize),
+    h_out: usize,
+    w_out: usize,
+    idx: usize,
+}
+
+/// Emit the zero-pad + copy of the input into `nncg_pad` (shared with the
+/// depthwise emitter).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn emit_pad_fill_public(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    h_in: usize,
+    w_in: usize,
+    c: usize,
+    ph: usize,
+    pw: usize,
+    pad_top: usize,
+    pad_left: usize,
+) -> Result<()> {
+    w.line(&format!("/* zero-pad {}x{}x{c} -> {ph}x{pw}x{c} (Eq. 1) */", h_in, w_in));
+    if ctx.opts.unroll == Unroll::Full {
+        // Straight-line: one store per padded cell.
+        for r in 0..ph {
+            for q in 0..pw {
+                let inside = r >= pad_top && r < pad_top + h_in && q >= pad_left && q < pad_left + w_in;
+                for o in 0..c {
+                    let pidx = (r * pw + q) * c + o;
+                    if inside {
+                        let sidx = ((r - pad_top) * w_in + (q - pad_left)) * c + o;
+                        w.line(&format!("{}[{}] = {}[{}];", ctx.padbuf, pidx, ctx.src, sidx));
+                    } else {
+                        w.line(&format!("{}[{}] = 0.0f;", ctx.padbuf, pidx));
+                    }
+                }
+            }
+        }
+    } else {
+        w.open(&format!("for (i = 0; i < {}; i++)", ph * pw * c));
+        w.line(&format!("{}[i] = 0.0f;", ctx.padbuf));
+        w.close();
+        w.open(&format!("for (i = 0; i < {h_in}; i++)"));
+        w.open(&format!("for (j = 0; j < {}; j++)", w_in * c));
+        w.line(&format!(
+            "{}[(i + {pad_top})*{} + {} + j] = {}[i*{} + j];",
+            ctx.padbuf,
+            pw * c,
+            pad_left * c,
+            ctx.src,
+            w_in * c
+        ));
+        w.close();
+        w.close();
+    }
+    Ok(())
+}
+
+/// Emit one output cell (all `c_out` channels at `(i, j)`), with the source
+/// base expressed as `s_name[s_off + tap]` and dest as `d_name[d_off + k]`.
+#[allow(clippy::too_many_arguments)]
+fn emit_cell(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    geom: &ConvGeom,
+    weights: &Tensor,
+    bias: &Tensor,
+    activation: Activation,
+    vec: Option<VecSpec>,
+    s_name: &str,
+    s_off: usize,
+    d_name: &str,
+    d_off: usize,
+) {
+    let inline = ctx.opts.effective_const_mode() == ConstMode::Inline;
+    if let Some(v) = vec {
+        // Multi-accumulator emission (§Perf optimization 1, EXPERIMENTS.md):
+        // one broadcast input feeds ALL channel groups of a chunk, instead
+        // of reloading the input scalar per group. Chunked to at most 8
+        // live accumulators to stay within the register file.
+        const CHUNK_GROUPS: usize = 8;
+        let mut k0 = 0;
+        while k0 < geom.c_out {
+            let groups = ((geom.c_out - k0) / v.width).min(CHUNK_GROUPS);
+            emit_vec_chunk(w, ctx, geom, weights, bias, activation, v, k0, groups, s_name, s_off, d_name, d_off, inline);
+            k0 += groups * v.width;
+        }
+    } else {
+        for k in 0..geom.c_out {
+            emit_scalar_block(w, ctx, geom, weights, bias, activation, k, s_name, s_off, d_name, d_off, inline);
+        }
+    }
+}
+
+/// Index of tap `(n, m, o)` relative to the cell's source base.
+fn tap_off(geom: &ConvGeom, n: usize, m: usize, o: usize) -> usize {
+    n * geom.pw_elems + m * geom.c_in + o
+}
+
+/// Scalar accumulator block for one output channel `k`.
+#[allow(clippy::too_many_arguments)]
+fn emit_scalar_block(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    geom: &ConvGeom,
+    weights: &Tensor,
+    bias: &Tensor,
+    activation: Activation,
+    k: usize,
+    s_name: &str,
+    s_off: usize,
+    d_name: &str,
+    d_off: usize,
+    inline: bool,
+) {
+    w.open("");
+    if inline {
+        w.line(&format!("float a = {};", fmt_f32(bias.data()[k])));
+        for n in 0..geom.h_k {
+            for m in 0..geom.w_k {
+                for o in 0..geom.c_in {
+                    let wv = weights.at4(n, m, o, k);
+                    if ctx.opts.skip_zero_weights && wv == 0.0 {
+                        continue;
+                    }
+                    let off = s_off + tap_off(geom, n, m, o);
+                    w.line(&format!("a += {s_name}[{off}] * {};", fmt_f32(wv)));
+                }
+            }
+        }
+    } else {
+        w.line(&format!("float a = b{}[{k}];", geom.idx));
+        for n in 0..geom.h_k {
+            for m in 0..geom.w_k {
+                for o in 0..geom.c_in {
+                    let widx = ((n * geom.w_k + m) * geom.c_in + o) * geom.c_out + k;
+                    let off = s_off + tap_off(geom, n, m, o);
+                    w.line(&format!("a += {s_name}[{off}] * w{}[{widx}];", geom.idx));
+                }
+            }
+        }
+    }
+    w.line(&format!("{d_name}[{}] = {};", d_off + k, scalar_act("a", activation)));
+    w.close();
+}
+
+/// Vector chunk covering output channels `k0 .. k0 + groups*width` with
+/// one accumulator register per lane group: each input scalar is broadcast
+/// once and multiplied into every group, cutting input loads by a factor
+/// of `groups` compared with per-group emission.
+#[allow(clippy::too_many_arguments)]
+fn emit_vec_chunk(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    geom: &ConvGeom,
+    weights: &Tensor,
+    bias: &Tensor,
+    activation: Activation,
+    v: VecSpec,
+    k0: usize,
+    groups: usize,
+    s_name: &str,
+    s_off: usize,
+    d_name: &str,
+    d_off: usize,
+    inline: bool,
+) {
+    w.open("");
+    let b = bias.data();
+    for g in 0..groups {
+        let k = k0 + g * v.width;
+        if inline {
+            w.line(&format!("{} a{g} = {};", v.ty, v.setr(&b[k..k + v.width])));
+        } else {
+            w.line(&format!("{} a{g} = {};", v.ty, v.loadu(&format!("b{} + {k}", geom.idx))));
+        }
+    }
+    w.line(&format!("{} t;", v.ty));
+    for n in 0..geom.h_k {
+        for m in 0..geom.w_k {
+            for o in 0..geom.c_in {
+                // group weights for this tap; skip the whole tap if all zero
+                let tap_w: Vec<Vec<f32>> = (0..groups)
+                    .map(|g| (0..v.width).map(|l| weights.at4(n, m, o, k0 + g * v.width + l)).collect())
+                    .collect();
+                let live: Vec<usize> = (0..groups)
+                    .filter(|&g| !(ctx.opts.skip_zero_weights && inline && tap_w[g].iter().all(|&x| x == 0.0)))
+                    .collect();
+                if live.is_empty() {
+                    continue;
+                }
+                let off = s_off + tap_off(geom, n, m, o);
+                w.line(&format!("t = {};", v.set1(&format!("{s_name}[{off}]"))));
+                for &g in &live {
+                    if inline {
+                        w.line(&v.mul_add(&format!("a{g}"), "t", &v.setr(&tap_w[g])));
+                    } else {
+                        let widx = ((n * geom.w_k + m) * geom.c_in + o) * geom.c_out + k0 + g * v.width;
+                        w.line(&v.mul_add(&format!("a{g}"), "t", &v.loadu(&format!("w{} + {widx}", geom.idx))));
+                    }
+                }
+            }
+        }
+    }
+    for g in 0..groups {
+        emit_vec_activation(w, v, activation, &format!("a{g}"));
+        w.line(&v.storeu(&format!("{d_name} + {}", d_off + k0 + g * v.width), &format!("a{g}")));
+    }
+    w.close();
+}
+
+/// The paper's loop-form emission (`Unroll::None`): all six loops kept,
+/// weights in `static const` arrays.
+fn emit_conv_loops(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    geom: &ConvGeom,
+    _weights: &Tensor,
+    _bias: &Tensor,
+    activation: Activation,
+    vec: Option<VecSpec>,
+) -> Result<()> {
+    if ctx.opts.effective_const_mode() != ConstMode::Array {
+        bail!("Unroll::None requires ConstMode::Array (inline constants need unrolled loops)");
+    }
+    let (sh, sw) = geom.stride;
+    w.open(&format!("for (i = 0; i < {}; i++)", geom.h_out));
+    w.open(&format!("for (j = 0; j < {}; j++)", geom.w_out));
+    w.line(&format!("const float *s = {} + i*{} + j*{};", geom.src, sh * geom.pw_elems, sw * geom.c_in));
+    w.line(&format!("float *d = {} + i*{} + j*{};", geom.dst, geom.w_out * geom.c_out, geom.c_out));
+    if let Some(v) = vec {
+        w.open(&format!("for (k = 0; k < {}; k += {})", geom.c_out, v.width));
+        w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("b{} + k", geom.idx))));
+        w.open(&format!("for (n = 0; n < {}; n++)", geom.h_k));
+        w.open(&format!("for (m = 0; m < {}; m++)", geom.w_k));
+        w.open(&format!("for (o = 0; o < {}; o++)", geom.c_in));
+        w.line(&v.mul_add(
+            "a",
+            &v.set1(&format!("s[n*{} + m*{} + o]", geom.pw_elems, geom.c_in)),
+            &v.loadu(&format!(
+                "w{} + ((n*{} + m)*{} + o)*{} + k",
+                geom.idx, geom.w_k, geom.c_in, geom.c_out
+            )),
+        ));
+        w.close();
+        w.close();
+        w.close();
+        emit_vec_activation(w, v, activation, "a");
+        w.line(&v.storeu("d + k", "a"));
+        w.close();
+    } else {
+        w.open(&format!("for (k = 0; k < {}; k++)", geom.c_out));
+        w.line(&format!("float a = b{}[k];", geom.idx));
+        w.open(&format!("for (n = 0; n < {}; n++)", geom.h_k));
+        w.open(&format!("for (m = 0; m < {}; m++)", geom.w_k));
+        w.open(&format!("for (o = 0; o < {}; o++)", geom.c_in));
+        w.line(&format!(
+            "a += s[n*{} + m*{} + o] * w{}[((n*{} + m)*{} + o)*{} + k];",
+            geom.pw_elems, geom.c_in, geom.idx, geom.w_k, geom.c_in, geom.c_out
+        ));
+        w.close();
+        w.close();
+        w.close();
+        w.line(&format!("d[k] = {};", scalar_act("a", activation)));
+        w.close();
+    }
+    w.close();
+    w.close();
+    Ok(())
+}
+
+/// Scalar activation expression over accumulator `a` (P2: ternary form).
+pub(crate) fn scalar_act(a: &str, activation: Activation) -> String {
+    match activation {
+        Activation::None | Activation::Softmax => a.to_string(),
+        Activation::Relu => format!("{a} > 0.0f ? {a} : 0.0f"),
+        Activation::LeakyRelu(alpha) => format!("{a} > 0.0f ? {a} : {} * {a}", fmt_f32(alpha)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_extent_same() {
+        // 16x16, k5, s2: out 8, total pad = 7*2+5-16 = 3 → padded 19
+        let s = Shape::new(&[16, 16, 1]);
+        let (ph, pw) = padded_extent(&s, &[5, 5, 1, 8], (2, 2), Padding::Same).unwrap();
+        assert_eq!((ph, pw), (19, 19));
+    }
+
+    #[test]
+    fn padded_extent_valid_is_input() {
+        let s = Shape::new(&[10, 12, 3]);
+        let (ph, pw) = padded_extent(&s, &[3, 3, 3, 4], (1, 1), Padding::Valid).unwrap();
+        assert_eq!((ph, pw), (10, 12));
+    }
+
+    #[test]
+    fn scalar_act_ternaries() {
+        assert_eq!(scalar_act("a", Activation::Relu), "a > 0.0f ? a : 0.0f");
+        assert!(scalar_act("a", Activation::LeakyRelu(0.1)).contains("0.1f * a"));
+        assert_eq!(scalar_act("a", Activation::None), "a");
+    }
+}

@@ -1,0 +1,143 @@
+//! Low-level C source emission: indentation, float literals, identifiers.
+
+/// Accumulates C source text with indentation management.
+#[derive(Debug, Default)]
+pub struct CWriter {
+    buf: String,
+    indent: usize,
+}
+
+impl CWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Emit one line at the current indent.
+    pub fn line(&mut self, s: &str) {
+        for _ in 0..self.indent {
+            self.buf.push_str("    ");
+        }
+        self.buf.push_str(s);
+        self.buf.push('\n');
+    }
+
+    /// Emit a blank line.
+    pub fn blank(&mut self) {
+        self.buf.push('\n');
+    }
+
+    /// Emit raw text without indent handling (multi-line blocks).
+    pub fn raw(&mut self, s: &str) {
+        self.buf.push_str(s);
+    }
+
+    /// Open a block: `line` + `{`, increasing indent.
+    pub fn open(&mut self, s: &str) {
+        self.line(&format!("{s} {{"));
+        self.indent += 1;
+    }
+
+    /// Close a block: `}`.
+    pub fn close(&mut self) {
+        assert!(self.indent > 0, "unbalanced close()");
+        self.indent -= 1;
+        self.line("}");
+    }
+
+    pub fn finish(self) -> String {
+        assert_eq!(self.indent, 0, "unbalanced blocks at finish()");
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Format an f32 as a C literal that round-trips exactly.
+///
+/// Rust's `{:?}` prints the shortest decimal that parses back to the same
+/// f32; appending `f` makes it a C float literal evaluated in single
+/// precision (principle P3 — weights become compile-time constants with
+/// zero precision loss).
+pub fn fmt_f32(v: f32) -> String {
+    assert!(v.is_finite(), "non-finite weight {v} cannot be emitted");
+    let s = format!("{v:?}");
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        format!("{s}f")
+    } else {
+        format!("{s}.0f")
+    }
+}
+
+/// Sanitize a model name into a C identifier prefix.
+pub fn c_ident(name: &str) -> String {
+    let mut s: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' })
+        .collect();
+    if s.is_empty() || s.chars().next().unwrap().is_ascii_digit() {
+        s.insert(0, 'n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indentation_and_blocks() {
+        let mut w = CWriter::new();
+        w.open("void f(void)");
+        w.line("int x = 0;");
+        w.open("for (;;)");
+        w.line("x++;");
+        w.close();
+        w.close();
+        let s = w.finish();
+        assert_eq!(s, "void f(void) {\n    int x = 0;\n    for (;;) {\n        x++;\n    }\n}\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn unbalanced_finish_panics() {
+        let mut w = CWriter::new();
+        w.open("if (1)");
+        let _ = w.finish();
+    }
+
+    #[test]
+    fn float_literals_round_trip() {
+        for v in [0.0f32, -0.0, 1.0, -1.5, 0.1, 1.0 / 3.0, 1e-30, 3.4e38, -2.75e-12] {
+            let lit = fmt_f32(v);
+            assert!(lit.ends_with('f'), "{lit}");
+            let parsed: f32 = lit[..lit.len() - 1].parse().unwrap();
+            assert_eq!(parsed.to_bits(), v.to_bits(), "{v} -> {lit}");
+        }
+    }
+
+    #[test]
+    fn integral_floats_get_a_decimal_point() {
+        assert_eq!(fmt_f32(2.0), "2.0f");
+        assert_eq!(fmt_f32(-3.0), "-3.0f");
+    }
+
+    #[test]
+    #[should_panic]
+    fn nan_rejected() {
+        fmt_f32(f32::NAN);
+    }
+
+    #[test]
+    fn ident_sanitization() {
+        assert_eq!(c_ident("ball"), "ball");
+        assert_eq!(c_ident("my-model.v2"), "my_model_v2");
+        assert_eq!(c_ident("3net"), "n3net");
+        assert_eq!(c_ident(""), "n");
+    }
+}

@@ -1,0 +1,242 @@
+//! Depthwise convolution and average-pooling emitters (paper future work:
+//! "more layer types to support modern widely known CNN structures" —
+//! together with 1×1 convs these are the MobileNet building blocks the
+//! paper's size anecdote refers to).
+//!
+//! Depthwise conv is the best case for the paper's channel-minor SIMD
+//! scheme (P4): each tap is a pure elementwise `y[k] += w[n,m,k] * x[k]`
+//! across channels — a vector multiply with **no broadcast at all**.
+
+use super::conv::{padded_extent, scalar_act};
+use super::cwriter::{fmt_f32, CWriter};
+use super::simd::{emit_vec_activation, VecSpec};
+use super::{ConstMode, LayerCtx, Unroll};
+use crate::graph::{Activation, Padding};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+pub(crate) fn emit_depthwise(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    weights: &Tensor,
+    bias: &Tensor,
+    stride: (usize, usize),
+    padding: Padding,
+    activation: Activation,
+) -> Result<()> {
+    let wd = weights.dims();
+    let (h_k, w_k, c) = (wd[0], wd[1], wd[2]);
+    let (h_in, w_in) = (ctx.in_shape.h(), ctx.in_shape.w());
+    let (h_out, w_out) = (ctx.out_shape.h(), ctx.out_shape.w());
+    // Reuse the conv padding machinery via a pseudo-HWIO dims slice.
+    let pseudo = [h_k, w_k, c, c];
+    let (ph, pw) = padded_extent(ctx.in_shape, &pseudo, stride, padding)?;
+    let pads = (ph, pw) != (h_in, w_in);
+    let (pad_top, pad_left) = match padding {
+        Padding::Same => {
+            let (_, pt) = padding.resolve(h_in, h_k, stride.0)?;
+            let (_, pl) = padding.resolve(w_in, w_k, stride.1)?;
+            (pt, pl)
+        }
+        Padding::Valid => (0, 0),
+    };
+    let src = if pads {
+        super::conv::emit_pad_fill_public(w, ctx, h_in, w_in, c, ph, pw, pad_top, pad_left)?;
+        ctx.padbuf.to_string()
+    } else {
+        ctx.src.to_string()
+    };
+
+    let vec = VecSpec::for_channels(ctx.opts.isa, c);
+    let inline = ctx.opts.effective_const_mode() == ConstMode::Inline;
+    let pw_elems = pw * c;
+
+    // Array-mode weights are emitted by mod.rs as w{idx}/b{idx} with layout
+    // [(n*w_k + m)*c + k].
+    let cell = |w: &mut CWriter, s_name: &str, s_off: usize, d_name: &str, d_off: usize| {
+        if let Some(v) = vec {
+            for k0 in (0..c).step_by(v.width) {
+                w.open("");
+                if inline {
+                    let b: Vec<f32> = (0..v.width).map(|l| bias.data()[k0 + l]).collect();
+                    w.line(&format!("{} a = {};", v.ty, v.setr(&b)));
+                } else {
+                    w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("b{} + {k0}", ctx.idx))));
+                }
+                for n in 0..h_k {
+                    for m in 0..w_k {
+                        let off = s_off + n * pw_elems + m * c + k0;
+                        if inline {
+                            let ws: Vec<f32> =
+                                (0..v.width).map(|l| weights.data()[(n * w_k + m) * c + k0 + l]).collect();
+                            if ctx.opts.skip_zero_weights && ws.iter().all(|&x| x == 0.0) {
+                                continue;
+                            }
+                            w.line(&v.mul_add("a", &v.loadu(&format!("{s_name} + {off}")), &v.setr(&ws)));
+                        } else {
+                            let widx = (n * w_k + m) * c + k0;
+                            w.line(&v.mul_add(
+                                "a",
+                                &v.loadu(&format!("{s_name} + {off}")),
+                                &v.loadu(&format!("w{} + {widx}", ctx.idx)),
+                            ));
+                        }
+                    }
+                }
+                emit_vec_activation(w, v, activation, "a");
+                w.line(&v.storeu(&format!("{d_name} + {}", d_off + k0), "a"));
+                w.close();
+            }
+        } else {
+            for k in 0..c {
+                w.open("");
+                if inline {
+                    w.line(&format!("float a = {};", fmt_f32(bias.data()[k])));
+                } else {
+                    w.line(&format!("float a = b{}[{k}];", ctx.idx));
+                }
+                for n in 0..h_k {
+                    for m in 0..w_k {
+                        let off = s_off + n * pw_elems + m * c + k;
+                        if inline {
+                            let wv = weights.data()[(n * w_k + m) * c + k];
+                            if ctx.opts.skip_zero_weights && wv == 0.0 {
+                                continue;
+                            }
+                            w.line(&format!("a += {s_name}[{off}] * {};", fmt_f32(wv)));
+                        } else {
+                            w.line(&format!("a += {s_name}[{off}] * w{}[{}];", ctx.idx, (n * w_k + m) * c + k));
+                        }
+                    }
+                }
+                w.line(&format!("{d_name}[{}] = {};", d_off + k, scalar_act("a", activation)));
+                w.close();
+            }
+        }
+    };
+
+    match ctx.opts.unroll {
+        Unroll::None | Unroll::KeepOuter2 => {
+            if ctx.opts.unroll == Unroll::None && inline {
+                bail!("Unroll::None requires ConstMode::Array");
+            }
+            w.open(&format!("for (i = 0; i < {h_out}; i++)"));
+            w.open(&format!("for (j = 0; j < {w_out}; j++)"));
+            w.line(&format!("const float *s = {src} + i*{} + j*{};", stride.0 * pw_elems, stride.1 * c));
+            w.line(&format!("float *d = {} + i*{} + j*{};", ctx.dst, w_out * c, c));
+            cell(w, "s", 0, "d", 0);
+            w.close();
+            w.close();
+        }
+        Unroll::KeepOuter1 => {
+            w.open(&format!("for (i = 0; i < {h_out}; i++)"));
+            w.line(&format!("const float *s = {src} + i*{};", stride.0 * pw_elems));
+            w.line(&format!("float *d = {} + i*{};", ctx.dst, w_out * c));
+            for j in 0..w_out {
+                cell(w, "s", j * stride.1 * c, "d", j * c);
+            }
+            w.close();
+        }
+        Unroll::Full => {
+            for i in 0..h_out {
+                for j in 0..w_out {
+                    cell(
+                        w,
+                        &src,
+                        i * stride.0 * pw_elems + j * stride.1 * c,
+                        ctx.dst,
+                        (i * w_out + j) * c,
+                    );
+                }
+            }
+        }
+    }
+
+    if activation == Activation::Softmax {
+        super::activation::emit_softmax_over(w, ctx, ctx.dst, ctx.out_shape.numel());
+    }
+    Ok(())
+}
+
+/// Average pooling: like max-pool but accumulate + scale by 1/window.
+pub(crate) fn emit_avgpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, usize), stride: (usize, usize)) -> Result<()> {
+    let (h_out, w_out, c) = (ctx.out_shape.h(), ctx.out_shape.w(), ctx.out_shape.c());
+    let w_in = ctx.in_shape.w();
+    let vec = VecSpec::for_channels(ctx.opts.isa, c);
+    let inv = fmt_f32(1.0 / (pool.0 * pool.1) as f32);
+
+    let window = |w: &mut CWriter, s_name: &str, s_off: usize, d_name: &str, d_off: usize| {
+        if let Some(v) = vec {
+            for k0 in (0..c).step_by(v.width) {
+                w.open("");
+                w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("{s_name} + {}", s_off + k0))));
+                for n in 0..pool.0 {
+                    for m in 0..pool.1 {
+                        if n == 0 && m == 0 {
+                            continue;
+                        }
+                        let off = s_off + (n * w_in + m) * c + k0;
+                        w.line(&format!(
+                            "a = {}_add_ps(a, {});",
+                            v.pfx,
+                            v.loadu(&format!("{s_name} + {off}"))
+                        ));
+                    }
+                }
+                w.line(&format!("a = {}_mul_ps(a, {});", v.pfx, v.set1(&inv)));
+                w.line(&v.storeu(&format!("{d_name} + {}", d_off + k0), "a"));
+                w.close();
+            }
+        } else {
+            for k in 0..c {
+                w.open("");
+                w.line(&format!("float a = {s_name}[{}];", s_off + k));
+                for n in 0..pool.0 {
+                    for m in 0..pool.1 {
+                        if n == 0 && m == 0 {
+                            continue;
+                        }
+                        w.line(&format!("a += {s_name}[{}];", s_off + (n * w_in + m) * c + k));
+                    }
+                }
+                w.line(&format!("{d_name}[{}] = a * {inv};", d_off + k));
+                w.close();
+            }
+        }
+    };
+
+    match ctx.opts.unroll {
+        Unroll::None | Unroll::KeepOuter2 => {
+            w.open(&format!("for (i = 0; i < {h_out}; i++)"));
+            w.open(&format!("for (j = 0; j < {w_out}; j++)"));
+            w.line(&format!("const float *s = {} + i*{} + j*{};", ctx.src, stride.0 * w_in * c, stride.1 * c));
+            w.line(&format!("float *d = {} + i*{} + j*{};", ctx.dst, w_out * c, c));
+            window(w, "s", 0, "d", 0);
+            w.close();
+            w.close();
+        }
+        Unroll::KeepOuter1 => {
+            w.open(&format!("for (i = 0; i < {h_out}; i++)"));
+            w.line(&format!("const float *s = {} + i*{};", ctx.src, stride.0 * w_in * c));
+            w.line(&format!("float *d = {} + i*{};", ctx.dst, w_out * c));
+            for j in 0..w_out {
+                window(w, "s", j * stride.1 * c, "d", j * c);
+            }
+            w.close();
+        }
+        Unroll::Full => {
+            for i in 0..h_out {
+                for j in 0..w_out {
+                    window(
+                        w,
+                        ctx.src,
+                        (i * stride.0 * w_in + j * stride.1) * c,
+                        ctx.dst,
+                        (i * w_out + j) * c,
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}

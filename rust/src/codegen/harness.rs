@@ -1,0 +1,54 @@
+//! Optional self-contained `main()` appended to the generated C file.
+//!
+//! Turns the generated file into a standalone benchmark/verification
+//! executable — the form used for cross-compile deployment checks: it needs
+//! nothing but a C compiler on the target (paper §III-B).
+//!
+//! ```text
+//! ./ball 100000            # bench: 100000 inferences on a seeded input
+//! ./ball 1 input.raw       # classify raw f32 HWC input from a file
+//! ```
+
+use super::cwriter::CWriter;
+
+pub(crate) fn emit_test_harness(w: &mut CWriter, ident: &str, input_size: usize, output_size: usize) {
+    w.blank();
+    w.line("/* ---- standalone test & benchmark harness (not part of the library) ---- */");
+    w.line("#include <stdio.h>");
+    w.line("#include <stdlib.h>");
+    w.line("#include <time.h>");
+    w.blank();
+    w.open("int main(int argc, char **argv)");
+    w.line(&format!("static float in[{input_size}];"));
+    w.line(&format!("static float out[{output_size}];"));
+    w.line("int iters = argc > 1 ? atoi(argv[1]) : 1000;");
+    w.line("int i;");
+    w.line("unsigned long s = 88172645463325252UL;");
+    w.line("/* deterministic pseudo-random input (same on every platform) */");
+    w.open(&format!("for (i = 0; i < {input_size}; i++)"));
+    w.line("s ^= s << 13; s ^= s >> 7; s ^= s << 17;");
+    w.line("in[i] = (float)((s >> 24) & 1023u) / 1023.0f;");
+    w.close();
+    w.open("if (argc > 2)");
+    w.line("FILE *f = fopen(argv[2], \"rb\");");
+    w.line(&format!(
+        "if (!f || fread(in, sizeof(float), {input_size}, f) != {input_size}) {{ fprintf(stderr, \"bad input file\\n\"); return 2; }}"
+    ));
+    w.line("fclose(f);");
+    w.close();
+    w.open("");
+    w.line("struct timespec t0, t1;");
+    w.line("double el;");
+    w.line(&format!("{ident}_inference(in, out); /* warmup */"));
+    w.line("clock_gettime(CLOCK_MONOTONIC, &t0);");
+    w.line(&format!("for (i = 0; i < iters; i++) {ident}_inference(in, out);"));
+    w.line("clock_gettime(CLOCK_MONOTONIC, &t1);");
+    w.line("el = (double)(t1.tv_sec - t0.tv_sec) * 1e6 + (double)(t1.tv_nsec - t0.tv_nsec) / 1e3;");
+    w.line("printf(\"iters=%d total_us=%.1f per_inference_us=%.4f\\n\", iters, el, el / iters);");
+    w.close();
+    w.open(&format!("for (i = 0; i < {output_size}; i++)"));
+    w.line("printf(\"out[%d]=%.9g\\n\", i, (double)out[i]);");
+    w.close();
+    w.line("return 0;");
+    w.close();
+}

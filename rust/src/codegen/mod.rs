@@ -1,0 +1,566 @@
+//! NNCG code generation: trained CNN → single ANSI C file.
+//!
+//! This is the paper's contribution. The generated file contains one
+//! function `void <name>_inference(const float *x_in, float *x_out)` with
+//! **no dependencies** beyond `math.h` (softmax) and, in SSE mode, x86
+//! intrinsics — so it cross-compiles to any ANSI C target.
+//!
+//! The four design principles (paper §II-A) map to:
+//!
+//! * **P1 loop unrolling** — [`Unroll`]: from keeping every loop
+//!   (`Unroll::None`) to emitting one straight-line statement per MAC
+//!   (`Unroll::Full`), with the paper's intermediate levels that keep the
+//!   one/two outermost (spatial) loops.
+//! * **P2 conditional moves** — (leaky) ReLU is emitted as a C ternary on
+//!   the accumulator (scalar) or as `max(x, alpha*x)` (SSE `maxps`), never
+//!   as an `if`.
+//! * **P3 constants** — weights are printed into the expression text
+//!   ([`ConstMode::Inline`]) or as `static const` arrays
+//!   ([`ConstMode::Array`]); zero-padding is resolved at generation time by
+//!   materializing the padded input (Eq. 1's x̂) into a scratch buffer, so
+//!   the hot loops contain no bounds checks at all.
+//! * **P4 SIMD** — [`Isa::Sse3`] vectorizes over the output-channel
+//!   dimension (channel-minor layout, groups of 4, exactly the paper's
+//!   scheme); layers whose `c_out % 4 != 0` fall back to the generic path.
+
+mod activation;
+mod conv;
+mod cwriter;
+mod dense;
+mod depthwise;
+mod harness;
+mod pool;
+mod simd;
+
+pub use cwriter::{c_ident, fmt_f32, CWriter};
+
+use crate::graph::{Activation, Layer, Model};
+use crate::tensor::Shape;
+use anyhow::{bail, Result};
+
+/// Instruction-set target for generated code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// Pure ANSI C — compiles anywhere (the paper's "general architecture").
+    Generic,
+    /// x86 SSE/SSSE3 intrinsics, 4-wide f32 over output channels.
+    Sse3,
+    /// x86 AVX2+FMA, 8-wide f32 over output channels (the paper's stated
+    /// future work: "an extension of NNCG to other instruction sets like
+    /// AVX ... can be realized rapidly").
+    Avx2,
+}
+
+/// Loop unrolling level (paper §II-A.1: "level 0 all loops are unrolled,
+/// level 1 does not unroll the outermost loop and so forth").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Unroll {
+    /// Keep every loop; weights live in `static const` arrays.
+    None,
+    /// Keep the two outer (spatial) loops, unroll kernel/channel loops.
+    KeepOuter2,
+    /// Keep only the outermost (row) loop.
+    KeepOuter1,
+    /// Unroll everything into straight-line code.
+    Full,
+}
+
+impl Unroll {
+    /// True if the spatial column loop is kept.
+    pub fn keeps_cols(&self) -> bool {
+        matches!(self, Unroll::None | Unroll::KeepOuter2)
+    }
+
+    /// True if the spatial row loop is kept.
+    pub fn keeps_rows(&self) -> bool {
+        !matches!(self, Unroll::Full)
+    }
+
+    /// True if the inner (kernel/channel) loops are kept.
+    pub fn keeps_inner(&self) -> bool {
+        matches!(self, Unroll::None)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Unroll::None => "none",
+            Unroll::KeepOuter2 => "keep-outer-2",
+            Unroll::KeepOuter1 => "keep-outer-1",
+            Unroll::Full => "full",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Unroll> {
+        Some(match s {
+            "none" => Unroll::None,
+            "keep-outer-2" | "2" => Unroll::KeepOuter2,
+            "keep-outer-1" | "1" => Unroll::KeepOuter1,
+            "full" | "0" => Unroll::Full,
+            _ => return None,
+        })
+    }
+}
+
+/// Where weight constants go (principle P3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConstMode {
+    /// Printed directly into the expressions (needs unrolled inner loops).
+    Inline,
+    /// `static const float` arrays indexed in the loops.
+    Array,
+}
+
+/// Code generation options.
+#[derive(Debug, Clone)]
+pub struct CodegenOptions {
+    pub isa: Isa,
+    pub unroll: Unroll,
+    /// `None` picks the paper default: inline when inner loops are
+    /// unrolled, array otherwise.
+    pub const_mode: Option<ConstMode>,
+    /// Skip multiply-adds whose weight is exactly 0.0 (only possible with
+    /// inline constants; free sparsity from the generator's knowledge).
+    pub skip_zero_weights: bool,
+    /// Refuse to generate more than this many statements (a full unroll of
+    /// a big net produces C files compilers choke on — the paper's
+    /// MobileNetV2 anecdote).
+    pub max_statements: usize,
+    /// Append a self-contained `main()` benchmark/test harness.
+    pub test_harness: bool,
+}
+
+impl Default for CodegenOptions {
+    fn default() -> Self {
+        CodegenOptions {
+            isa: Isa::Sse3,
+            unroll: Unroll::KeepOuter2,
+            const_mode: None,
+            skip_zero_weights: true,
+            max_statements: 2_000_000,
+            test_harness: false,
+        }
+    }
+}
+
+impl CodegenOptions {
+    /// Table VII column 1: generic ISA, outer loops kept.
+    pub fn general() -> Self {
+        CodegenOptions { isa: Isa::Generic, unroll: Unroll::KeepOuter2, ..Default::default() }
+    }
+
+    /// Table VII column 2: SSE, outer loops kept.
+    pub fn sse3() -> Self {
+        CodegenOptions { isa: Isa::Sse3, unroll: Unroll::KeepOuter2, ..Default::default() }
+    }
+
+    /// Table VII column 3: SSE + full unroll.
+    pub fn sse3_full_unroll() -> Self {
+        CodegenOptions { isa: Isa::Sse3, unroll: Unroll::Full, ..Default::default() }
+    }
+
+    /// AVX2+FMA, outer loops kept (the paper's future-work ISA).
+    pub fn avx2() -> Self {
+        CodegenOptions { isa: Isa::Avx2, unroll: Unroll::KeepOuter2, ..Default::default() }
+    }
+
+    /// Effective constant mode (resolves the paper default).
+    pub fn effective_const_mode(&self) -> ConstMode {
+        self.const_mode.unwrap_or(match self.unroll {
+            Unroll::None => ConstMode::Array,
+            _ => ConstMode::Inline,
+        })
+    }
+
+    /// Short tag used in cache keys and bench labels.
+    pub fn tag(&self) -> String {
+        format!(
+            "{}-{}-{}",
+            match self.isa {
+                Isa::Generic => "generic",
+                Isa::Sse3 => "sse3",
+                Isa::Avx2 => "avx2",
+            },
+            self.unroll.name(),
+            match self.effective_const_mode() {
+                ConstMode::Inline => "inline",
+                ConstMode::Array => "array",
+            }
+        )
+    }
+}
+
+/// Per-layer emission context handed to the layer emitters.
+pub(crate) struct LayerCtx<'a> {
+    /// Layer index (names weight arrays `w{idx}` / `b{idx}`).
+    pub idx: usize,
+    /// Input shape of this layer.
+    pub in_shape: &'a Shape,
+    /// Output shape of this layer.
+    pub out_shape: &'a Shape,
+    /// C expression for the input buffer (e.g. `x_in`, `nncg_bufa`).
+    pub src: &'a str,
+    /// C expression for the output buffer.
+    pub dst: &'a str,
+    /// Name of the shared padding scratch buffer.
+    pub padbuf: &'a str,
+    pub opts: &'a CodegenOptions,
+}
+
+/// Generate the complete C source for a model.
+///
+/// Runs the standard pass pipeline (BN fold, dropout elision, activation
+/// fusion) first, so callers can hand in the raw zoo/Keras-shaped model.
+pub fn generate_c(model: &Model, opts: &CodegenOptions) -> Result<String> {
+    let model = crate::passes::optimize(model.clone())?;
+    let shapes = model.infer_shapes()?;
+
+    // Cost guard: estimate emitted statements before doing the work.
+    let est = estimate_statements(&model, opts)?;
+    if est > opts.max_statements {
+        bail!(
+            "unroll level {:?} would emit ~{est} statements for model {:?} (limit {}); \
+             use a coarser unroll level",
+            opts.unroll,
+            model.name,
+            opts.max_statements
+        );
+    }
+
+    let ident = c_ident(&model.name);
+    let mut w = CWriter::new();
+    emit_prelude(&mut w, &model, &ident, opts, &shapes);
+
+    // Buffer planning: ping-pong between two scratch buffers sized to the
+    // largest intermediate; a third buffer holds the zero-padded input of
+    // conv layers (Eq. 1's x̂), sized to the largest padded extent.
+    let plan = plan_buffers(&model, &shapes)?;
+    w.line(&format!("static float nncg_bufa[{}];", plan.main_size.max(1)));
+    w.line(&format!("static float nncg_bufb[{}];", plan.main_size.max(1)));
+    if plan.pad_size > 0 {
+        w.line(&format!("static float nncg_pad[{}];", plan.pad_size));
+    }
+    w.blank();
+
+    // Weight arrays (ConstMode::Array).
+    if opts.effective_const_mode() == ConstMode::Array {
+        for (i, layer) in model.layers.iter().enumerate() {
+            emit_weight_arrays(&mut w, i, layer);
+        }
+        w.blank();
+    }
+
+    w.line("/* Single-function CNN inference (paper's deployment model):");
+    w.line(&format!(" * input:  float[{}] in HWC order {}", shapes[0].numel(), shapes[0]));
+    w.line(&format!(" * output: float[{}] {}", shapes.last().unwrap().numel(), shapes.last().unwrap()));
+    w.line(" */");
+    w.open(&format!("void {ident}_inference(const float *x_in, float *x_out)"));
+    if needs_loop_vars(opts) {
+        w.line("int i, j, k, n, m, o;");
+        w.line("(void)i; (void)j; (void)k; (void)n; (void)m; (void)o;");
+    }
+
+    let n_layers = model.layers.len();
+    let mut cur_src: String = "x_in".to_string();
+    let mut ping = true;
+    for (i, layer) in model.layers.iter().enumerate() {
+        let is_last = i == n_layers - 1;
+        let dst = if is_last {
+            "x_out".to_string()
+        } else if is_inplace(layer) && cur_src != "x_in" {
+            cur_src.clone()
+        } else {
+            let d = if ping { "nncg_bufa" } else { "nncg_bufb" };
+            ping = !ping;
+            d.to_string()
+        };
+        let ctx = LayerCtx {
+            idx: i,
+            in_shape: &shapes[i],
+            out_shape: &shapes[i + 1],
+            src: &cur_src,
+            dst: &dst,
+            padbuf: "nncg_pad",
+            opts,
+        };
+        w.blank();
+        w.line(&format!(
+            "/* layer {i}: {} {} -> {} */",
+            layer.kind_name(),
+            shapes[i],
+            shapes[i + 1]
+        ));
+        emit_layer(&mut w, layer, &ctx)?;
+        cur_src = dst;
+    }
+    w.close();
+
+    if opts.test_harness {
+        harness::emit_test_harness(&mut w, &ident, shapes[0].numel(), shapes.last().unwrap().numel());
+    }
+
+    Ok(w.finish())
+}
+
+/// True when the generated code needs the shared loop variables.
+fn needs_loop_vars(opts: &CodegenOptions) -> bool {
+    opts.unroll != Unroll::Full
+}
+
+/// Layers that may write over their own input buffer.
+fn is_inplace(layer: &Layer) -> bool {
+    matches!(layer, Layer::Activation(_) | Layer::Flatten)
+}
+
+fn emit_prelude(w: &mut CWriter, model: &Model, ident: &str, opts: &CodegenOptions, shapes: &[Shape]) {
+    w.line("/*");
+    w.line(&format!(" * {ident}.c — generated by NNCG (rust reimplementation)"));
+    w.line(&format!(
+        " * model: {} | isa: {:?} | unroll: {} | constants: {:?}",
+        model.name,
+        opts.isa,
+        opts.unroll.name(),
+        opts.effective_const_mode()
+    ));
+    w.line(&format!(" * params: {} | MACs/inference: {}", model.num_params(), model.macs().unwrap_or(0)));
+    match opts.isa {
+        Isa::Generic => w.line(" * Plain ANSI C — only depends on math.h."),
+        Isa::Sse3 => w.line(" * ANSI C + x86 SSE intrinsics (needs an SSE-capable target)."),
+        Isa::Avx2 => w.line(" * ANSI C + x86 AVX2/FMA intrinsics (needs an AVX2-capable target)."),
+    }
+    w.line(" */");
+    let uses_softmax = model.layers.iter().any(|l| {
+        matches!(l, Layer::Activation(Activation::Softmax))
+            || matches!(l, Layer::Conv2D { activation: Activation::Softmax, .. })
+            || matches!(l, Layer::Dense { activation: Activation::Softmax, .. })
+    });
+    if uses_softmax {
+        w.line("#include <math.h>");
+    }
+    match opts.isa {
+        Isa::Generic => {}
+        Isa::Sse3 => w.line("#include <emmintrin.h>"),
+        Isa::Avx2 => w.line("#include <immintrin.h>"),
+    }
+    w.blank();
+    w.line(&format!("#define {}_INPUT_SIZE {}", ident.to_uppercase(), shapes[0].numel()));
+    w.line(&format!("#define {}_OUTPUT_SIZE {}", ident.to_uppercase(), shapes.last().unwrap().numel()));
+    w.blank();
+}
+
+/// Emit `static const float w{i}[] = {...}` / `b{i}` for Array mode.
+fn emit_weight_arrays(w: &mut CWriter, idx: usize, layer: &Layer) {
+    let mut emit = |name: String, data: &[f32]| {
+        w.line(&format!("static const float {name}[{}] = {{", data.len()));
+        for chunk in data.chunks(8) {
+            let vals: Vec<String> = chunk.iter().map(|&v| fmt_f32(v)).collect();
+            w.line(&format!("    {},", vals.join(", ")));
+        }
+        w.line("};");
+    };
+    match layer {
+        Layer::Conv2D { weights, bias, .. }
+        | Layer::Dense { weights, bias, .. }
+        | Layer::DepthwiseConv2D { weights, bias, .. } => {
+            emit(format!("w{idx}"), weights.data());
+            emit(format!("b{idx}"), bias.data());
+        }
+        _ => {}
+    }
+}
+
+fn emit_layer(w: &mut CWriter, layer: &Layer, ctx: &LayerCtx<'_>) -> Result<()> {
+    match layer {
+        Layer::Conv2D { weights, bias, stride, padding, activation } => {
+            conv::emit_conv(w, ctx, weights, bias, *stride, *padding, *activation)
+        }
+        Layer::MaxPool2D { pool, stride } => pool::emit_maxpool(w, ctx, *pool, *stride),
+        Layer::AvgPool2D { pool, stride } => depthwise::emit_avgpool(w, ctx, *pool, *stride),
+        Layer::DepthwiseConv2D { weights, bias, stride, padding, activation } => {
+            depthwise::emit_depthwise(w, ctx, weights, bias, *stride, *padding, *activation)
+        }
+        Layer::Activation(a) => activation::emit_activation(w, ctx, *a),
+        Layer::Flatten => {
+            // HWC is already flat; only copy if src/dst differ.
+            if ctx.src != ctx.dst {
+                activation::emit_copy(w, ctx);
+            }
+            Ok(())
+        }
+        Layer::Dense { weights, bias, activation } => dense::emit_dense(w, ctx, weights, bias, *activation),
+        Layer::BatchNorm { .. } => bail!("BatchNorm must be folded before codegen (passes::optimize)"),
+        Layer::Dropout { .. } => bail!("Dropout must be elided before codegen (passes::optimize)"),
+    }
+}
+
+struct BufferPlan {
+    main_size: usize,
+    pad_size: usize,
+}
+
+fn plan_buffers(model: &Model, shapes: &[Shape]) -> Result<BufferPlan> {
+    let mut main_size = 0usize;
+    let mut pad_size = 0usize;
+    for (i, layer) in model.layers.iter().enumerate() {
+        // Every intermediate may land in a scratch buffer (also the first
+        // in-place layer copies x_in into scratch).
+        main_size = main_size.max(shapes[i].numel());
+        main_size = main_size.max(shapes[i + 1].numel());
+        match layer {
+            Layer::Conv2D { weights, stride, padding, .. } => {
+                let (ph, pw) = conv::padded_extent(&shapes[i], weights.dims(), *stride, *padding)?;
+                if (ph, pw) != (shapes[i].h(), shapes[i].w()) {
+                    pad_size = pad_size.max(ph * pw * shapes[i].c());
+                }
+            }
+            Layer::DepthwiseConv2D { weights, stride, padding, .. } => {
+                let d = weights.dims();
+                let pseudo = [d[0], d[1], d[2], d[2]];
+                let (ph, pw) = conv::padded_extent(&shapes[i], &pseudo, *stride, *padding)?;
+                if (ph, pw) != (shapes[i].h(), shapes[i].w()) {
+                    pad_size = pad_size.max(ph * pw * shapes[i].c());
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(BufferPlan { main_size, pad_size })
+}
+
+/// Rough statement-count estimate for the cost guard.
+fn estimate_statements(model: &Model, opts: &CodegenOptions) -> Result<usize> {
+    let shapes = model.infer_shapes()?;
+    let mut total = 0usize;
+    for (i, layer) in model.layers.iter().enumerate() {
+        let out = &shapes[i + 1];
+        let body = match layer {
+            Layer::Conv2D { weights, .. } => {
+                let d = weights.dims();
+                let taps = d[0] * d[1] * d[2];
+                // SIMD groups of 4 channels share a statement.
+                let lanes = simd::VecSpec::for_channels(opts.isa, d[3]).map_or(1, |v| v.width);
+                taps * d[3] / lanes
+            }
+            Layer::MaxPool2D { pool, .. } | Layer::AvgPool2D { pool, .. } => pool.0 * pool.1 * out.c(),
+            Layer::DepthwiseConv2D { weights, .. } => {
+                let d = weights.dims();
+                let lanes = simd::VecSpec::for_channels(opts.isa, d[2]).map_or(1, |v| v.width);
+                d[0] * d[1] * d[2] / lanes
+            }
+            Layer::Dense { weights, .. } => weights.numel(),
+            _ => out.numel().max(1),
+        };
+        // Spatial extent only exists for image-shaped layers; dense/flat
+        // layers behave as a single cell.
+        let (rows, cols) = match layer {
+            Layer::Conv2D { .. }
+            | Layer::MaxPool2D { .. }
+            | Layer::AvgPool2D { .. }
+            | Layer::DepthwiseConv2D { .. } => (out.h(), out.w()),
+            _ => (1, 1),
+        };
+        total += match opts.unroll {
+            Unroll::None => 16, // constant-size loop nest
+            Unroll::KeepOuter2 => body,
+            Unroll::KeepOuter1 => body * cols.max(1),
+            Unroll::Full => body * rows * cols,
+        };
+    }
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    fn gen(model: &str, opts: &CodegenOptions) -> String {
+        let m = zoo::by_name(model).unwrap().with_random_weights(13);
+        generate_c(&m, opts).unwrap()
+    }
+
+    #[test]
+    fn ball_generic_contains_expected_structure() {
+        let src = gen("ball", &CodegenOptions::general());
+        assert!(src.contains("void ball_inference(const float *x_in, float *x_out)"));
+        assert!(src.contains("#define BALL_INPUT_SIZE 256"));
+        assert!(src.contains("#define BALL_OUTPUT_SIZE 2"));
+        assert!(src.contains("#include <math.h>")); // softmax
+        assert!(!src.contains("emmintrin")); // generic must be ANSI only
+        // P2: ternary conditional move present (ReLU)
+        assert!(src.contains('?'), "expected ternary operator for cmov principle");
+    }
+
+    #[test]
+    fn sse_mode_uses_intrinsics() {
+        let src = gen("ball", &CodegenOptions::sse3());
+        assert!(src.contains("#include <emmintrin.h>"));
+        assert!(src.contains("_mm_add_ps"));
+        assert!(src.contains("_mm_max_ps")); // relu via maxps
+    }
+
+    #[test]
+    fn full_unroll_has_no_loops() {
+        let src = gen("ball", &CodegenOptions::sse3_full_unroll());
+        assert!(!src.contains("for ("), "full unroll must emit straight-line code");
+    }
+
+    #[test]
+    fn no_unroll_uses_weight_arrays() {
+        let opts = CodegenOptions { isa: Isa::Generic, unroll: Unroll::None, ..Default::default() };
+        let src = gen("ball", &opts);
+        assert!(src.contains("static const float w0["));
+        assert!(src.contains("for ("));
+    }
+
+    #[test]
+    fn statement_guard_rejects_absurd_unroll() {
+        let m = zoo::pedestrian_classifier().with_random_weights(3);
+        let opts = CodegenOptions { unroll: Unroll::Full, max_statements: 10_000, ..Default::default() };
+        assert!(generate_c(&m, &opts).is_err());
+    }
+
+    #[test]
+    fn all_paper_models_generate_under_default_options() {
+        for name in zoo::PAPER_MODELS {
+            let src = gen(name, &CodegenOptions::default());
+            assert!(src.len() > 1000, "{name}");
+            // Balanced braces is a decent smoke test for emitter bugs.
+            let open = src.matches('{').count();
+            let close = src.matches('}').count();
+            assert_eq!(open, close, "{name}: unbalanced braces");
+        }
+    }
+
+    #[test]
+    fn options_tags_are_distinct() {
+        let a = CodegenOptions::general().tag();
+        let b = CodegenOptions::sse3().tag();
+        let c = CodegenOptions::sse3_full_unroll().tag();
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+    }
+
+    #[test]
+    fn robot_bn_is_folded_by_pipeline() {
+        let src = gen("robot", &CodegenOptions::sse3());
+        assert!(src.contains("robot_inference"));
+        assert!(!src.to_lowercase().contains("batch"), "BN must be folded away");
+    }
+
+    #[test]
+    fn avx2_mode_uses_wide_intrinsics() {
+        let src = gen("ball", &CodegenOptions::avx2());
+        assert!(src.contains("#include <immintrin.h>"));
+        assert!(src.contains("_mm256_fmadd_ps"));
+        // ball's first conv has c_out=8 -> one 8-wide group
+        assert!(src.contains("__m256"));
+    }
+
+    #[test]
+    fn unroll_from_name_round_trips() {
+        for u in [Unroll::None, Unroll::KeepOuter2, Unroll::KeepOuter1, Unroll::Full] {
+            assert_eq!(Unroll::from_name(u.name()), Some(u));
+        }
+        assert_eq!(Unroll::from_name("bogus"), None);
+    }
+}

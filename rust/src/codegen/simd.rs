@@ -1,0 +1,145 @@
+//! SIMD emission helpers shared by the conv/pool/dense/activation
+//! emitters.
+//!
+//! The paper ships SSSE3 (4-wide f32) and names AVX/NEON as immediate
+//! future work; [`Isa::Avx2`] implements the AVX path (8-wide f32 + FMA).
+//! Everything is parameterized over a [`VecSpec`] so adding an ISA means
+//! adding a table entry, exactly the "can be realized rapidly" claim.
+
+use super::cwriter::fmt_f32;
+use super::Isa;
+
+/// One vector flavor: register type + intrinsic naming.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct VecSpec {
+    /// f32 lanes per register.
+    pub width: usize,
+    /// C register type (`__m128` / `__m256`).
+    pub ty: &'static str,
+    /// Intrinsic prefix (`_mm` / `_mm256`).
+    pub pfx: &'static str,
+    /// Whether fused multiply-add is available (`_mm256_fmadd_ps`).
+    pub fma: bool,
+}
+
+pub(crate) const SSE: VecSpec = VecSpec { width: 4, ty: "__m128", pfx: "_mm", fma: false };
+pub(crate) const AVX2: VecSpec = VecSpec { width: 8, ty: "__m256", pfx: "_mm256", fma: true };
+
+impl VecSpec {
+    /// Pick the widest vector flavor usable for a channel count under an
+    /// ISA; `None` = scalar fallback (the paper's rule: the channel count
+    /// must divide the lane width).
+    pub fn for_channels(isa: Isa, channels: usize) -> Option<VecSpec> {
+        match isa {
+            Isa::Generic => None,
+            Isa::Sse3 => (channels % 4 == 0).then_some(SSE),
+            Isa::Avx2 => {
+                if channels % 8 == 0 {
+                    Some(AVX2)
+                } else if channels % 4 == 0 {
+                    Some(SSE) // AVX2 hosts run SSE fine; keep partial layers vectorized
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// `_mm*_set1_ps(expr)`.
+    pub fn set1(&self, expr: &str) -> String {
+        format!("{}_set1_ps({expr})", self.pfx)
+    }
+
+    /// `_mm*_setr_ps(c0, ..., cw)` from weight constants.
+    pub fn setr(&self, vals: &[f32]) -> String {
+        debug_assert_eq!(vals.len(), self.width);
+        let parts: Vec<String> = vals.iter().map(|&v| fmt_f32(v)).collect();
+        format!("{}_setr_ps({})", self.pfx, parts.join(", "))
+    }
+
+    /// `_mm*_loadu_ps(addr)`.
+    pub fn loadu(&self, addr: &str) -> String {
+        format!("{}_loadu_ps({addr})", self.pfx)
+    }
+
+    /// `reg = _mm*_storeu_ps(addr, reg)` statement.
+    pub fn storeu(&self, addr: &str, reg: &str) -> String {
+        format!("{}_storeu_ps({addr}, {reg});", self.pfx)
+    }
+
+    /// `acc = acc + t * w` — FMA when the ISA has it.
+    pub fn mul_add(&self, acc: &str, t: &str, w: &str) -> String {
+        if self.fma {
+            format!("{acc} = {}_fmadd_ps({t}, {w}, {acc});", self.pfx)
+        } else {
+            format!("{acc} = {}_add_ps({acc}, {}_mul_ps({t}, {w}));", self.pfx, self.pfx)
+        }
+    }
+
+    /// `a = max(a, b)` statement.
+    pub fn max(&self, a: &str, b: &str) -> String {
+        format!("{a} = {}_max_ps({a}, {b});", self.pfx)
+    }
+
+    /// Zero register expression.
+    pub fn zero(&self) -> String {
+        format!("{}_setzero_ps()", self.pfx)
+    }
+
+    /// Header needed for this flavor.
+    #[allow(dead_code)]
+    pub fn header(&self) -> &'static str {
+        if self.width == 8 {
+            "immintrin.h"
+        } else {
+            "emmintrin.h"
+        }
+    }
+}
+
+/// Activation applied to a named vector register (P2 as predicated max).
+pub(crate) fn emit_vec_activation(
+    w: &mut super::cwriter::CWriter,
+    v: VecSpec,
+    activation: crate::graph::Activation,
+    reg: &str,
+) {
+    use crate::graph::Activation;
+    match activation {
+        Activation::None | Activation::Softmax => {}
+        Activation::Relu => w.line(&v.max(reg, &v.zero())),
+        // 0 <= alpha < 1 ⇒ max(x, alpha x) == leaky_relu(x)
+        Activation::LeakyRelu(alpha) => {
+            w.line(&format!(
+                "{reg} = {}_max_ps({reg}, {}_mul_ps({reg}, {}));",
+                v.pfx,
+                v.pfx,
+                v.set1(&fmt_f32(alpha))
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_channels_picks_widest() {
+        assert_eq!(VecSpec::for_channels(Isa::Generic, 8), None);
+        assert_eq!(VecSpec::for_channels(Isa::Sse3, 8).unwrap().width, 4);
+        assert_eq!(VecSpec::for_channels(Isa::Avx2, 8).unwrap().width, 8);
+        assert_eq!(VecSpec::for_channels(Isa::Avx2, 12).unwrap().width, 4);
+        assert_eq!(VecSpec::for_channels(Isa::Avx2, 6), None);
+        assert_eq!(VecSpec::for_channels(Isa::Sse3, 6), None);
+    }
+
+    #[test]
+    fn intrinsic_text() {
+        assert_eq!(SSE.set1("x[0]"), "_mm_set1_ps(x[0])");
+        assert!(AVX2.mul_add("a0", "t", "w").contains("_mm256_fmadd_ps"));
+        assert!(SSE.mul_add("a0", "t", "w").contains("_mm_add_ps"));
+        assert_eq!(AVX2.header(), "immintrin.h");
+        assert_eq!(SSE.setr(&[1.0, 2.0, 3.0, 4.0]), "_mm_setr_ps(1.0f, 2.0f, 3.0f, 4.0f)");
+    }
+}

@@ -1,0 +1,115 @@
+//! Micro-batching policy.
+//!
+//! The paper's latency argument (§I-A, §III-C): for small CNNs, waiting to
+//! accumulate a batch only pays off on throughput-oriented hardware (GPU);
+//! on the embedded CPU path the batcher should flush immediately. The
+//! policy object makes that trade-off explicit and testable, and the GPU
+//! throughput bench sweeps it.
+
+use std::time::{Duration, Instant};
+
+/// When to flush a pending batch.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherPolicy {
+    /// Flush as soon as this many items are pending.
+    pub max_batch: usize,
+    /// Flush when the oldest item has waited this long.
+    pub max_wait: Duration,
+}
+
+impl BatcherPolicy {
+    /// Latency-first: every item is its own batch (the embedded CPU path).
+    pub fn immediate() -> Self {
+        BatcherPolicy { max_batch: 1, max_wait: Duration::ZERO }
+    }
+
+    /// Throughput-oriented batching (the GPU path).
+    pub fn batched(max_batch: usize, max_wait: Duration) -> Self {
+        BatcherPolicy { max_batch: max_batch.max(1), max_wait }
+    }
+}
+
+/// Accumulates items and reports when a flush is due.
+pub struct Batcher<T> {
+    policy: BatcherPolicy,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatcherPolicy) -> Self {
+        Batcher { policy, pending: Vec::new(), oldest: None }
+    }
+
+    /// Add an item; returns a full batch if the size trigger fired.
+    pub fn push(&mut self, item: T) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.policy.max_batch {
+            return Some(self.flush());
+        }
+        None
+    }
+
+    /// True if the deadline trigger has fired.
+    pub fn deadline_due(&self) -> bool {
+        match self.oldest {
+            Some(t) => !self.pending.is_empty() && t.elapsed() >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Take the pending batch (possibly empty).
+    pub fn flush(&mut self) -> Vec<T> {
+        self.oldest = None;
+        std::mem::take(&mut self.pending)
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn immediate_policy_flushes_every_item() {
+        let mut b = Batcher::new(BatcherPolicy::immediate());
+        assert_eq!(b.push(1), Some(vec![1]));
+        assert_eq!(b.push(2), Some(vec![2]));
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn size_trigger() {
+        let mut b = Batcher::new(BatcherPolicy::batched(3, Duration::from_secs(10)));
+        assert_eq!(b.push(1), None);
+        assert_eq!(b.push(2), None);
+        assert_eq!(b.push(3), Some(vec![1, 2, 3]));
+    }
+
+    #[test]
+    fn deadline_trigger() {
+        let mut b = Batcher::new(BatcherPolicy::batched(100, Duration::from_millis(5)));
+        assert_eq!(b.push(7), None);
+        assert!(!b.deadline_due() || b.pending_len() == 1);
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(b.deadline_due());
+        assert_eq!(b.flush(), vec![7]);
+        assert!(!b.deadline_due());
+    }
+
+    #[test]
+    fn flush_empties() {
+        let mut b = Batcher::new(BatcherPolicy::batched(10, Duration::from_secs(1)));
+        b.push(1);
+        b.push(2);
+        assert_eq!(b.flush(), vec![1, 2]);
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.flush(), Vec::<i32>::new());
+    }
+}

@@ -1,0 +1,147 @@
+//! Request latency metrics: lock-free-ish counters + log-bucketed
+//! histograms (no external metrics crates offline).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Histogram with logarithmic µs buckets: [<1, <2, <4, ..., <2^19, inf).
+const BUCKETS: usize = 21;
+
+#[derive(Default)]
+struct Histo {
+    counts: [u64; BUCKETS],
+    sum_us: f64,
+    n: u64,
+}
+
+impl Histo {
+    fn record(&mut self, us: f64) {
+        let mut idx = 0usize;
+        let mut bound = 1.0f64;
+        while us >= bound && idx < BUCKETS - 1 {
+            bound *= 2.0;
+            idx += 1;
+        }
+        self.counts[idx] += 1;
+        self.sum_us += us;
+        self.n += 1;
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 2f64.powi(idx as i32); // bucket upper bound
+            }
+        }
+        2f64.powi(BUCKETS as i32)
+    }
+
+    fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum_us / self.n as f64
+        }
+    }
+}
+
+/// Concurrent latency recorder shared by workers.
+pub struct LatencyRecorder {
+    total: AtomicU64,
+    errors: AtomicU64,
+    per_model: Mutex<HashMap<String, (Histo, Histo)>>, // (queue, infer)
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub total_requests: u64,
+    pub errors: u64,
+    /// model → (mean queue µs, mean infer µs, p50 infer µs, p99 infer µs, n)
+    pub models: Vec<(String, f64, f64, f64, f64, u64)>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        LatencyRecorder { total: AtomicU64::new(0), errors: AtomicU64::new(0), per_model: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn record(&self, model: &str, queue_us: f64, infer_us: f64, ok: bool) {
+        self.total.fetch_add(1, Ordering::Relaxed);
+        if !ok {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut map = self.per_model.lock().unwrap();
+        let entry = map.entry(model.to_string()).or_default();
+        entry.0.record(queue_us);
+        entry.1.record(infer_us);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let map = self.per_model.lock().unwrap();
+        let mut models: Vec<_> = map
+            .iter()
+            .map(|(name, (q, i))| (name.clone(), q.mean(), i.mean(), i.quantile(0.5), i.quantile(0.99), i.n))
+            .collect();
+        models.sort_by(|a, b| a.0.cmp(&b.0));
+        MetricsSnapshot {
+            total_requests: self.total.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            models,
+        }
+    }
+}
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let r = LatencyRecorder::new();
+        r.record("ball", 1.0, 10.0, true);
+        r.record("ball", 2.0, 20.0, true);
+        r.record("ball", 3.0, 30.0, false);
+        let s = r.snapshot();
+        assert_eq!(s.total_requests, 3);
+        assert_eq!(s.errors, 1);
+        let (name, q_mean, i_mean, _, _, n) = &s.models[0];
+        assert_eq!(name, "ball");
+        assert_eq!(*n, 3);
+        assert!((q_mean - 2.0).abs() < 1e-9);
+        assert!((i_mean - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_upper_bounds() {
+        let mut h = Histo::default();
+        for us in [1.0, 3.0, 5.0, 100.0, 1000.0] {
+            h.record(us);
+        }
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(p50 >= 3.0, "p50={p50}");
+        assert!(p99 >= 1000.0, "p99={p99}");
+    }
+
+    #[test]
+    fn empty_histogram_quantile_zero() {
+        let h = Histo::default();
+        assert_eq!(h.quantile(0.99), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

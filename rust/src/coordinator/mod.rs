@@ -1,0 +1,180 @@
+//! Serving coordinator — the L3 runtime that owns the event loop.
+//!
+//! The paper's deployment story is an embedded vision loop: frames arrive,
+//! candidate patches are extracted, and a batch of small CNN inferences
+//! must complete with minimal *latency* (not throughput — §I-A motivates
+//! why). The coordinator provides:
+//!
+//! * [`Router`] — model registry mapping names to [`InferenceEngine`]s
+//!   (generated-C, interpreter, or XLA/PJRT backends are interchangeable).
+//! * [`Batcher`] — size/deadline micro-batching policy, used to quantify
+//!   the latency-vs-throughput trade-off the paper discusses for GPUs.
+//! * [`serve`] — a worker-thread request loop (std mpsc; tokio is not in
+//!   the offline crate set) with per-request latency metrics.
+
+mod batcher;
+mod metrics;
+mod router;
+
+pub use batcher::{Batcher, BatcherPolicy};
+pub use metrics::{LatencyRecorder, MetricsSnapshot};
+pub use router::Router;
+
+use crate::runtime::InferenceEngine;
+use crate::tensor::Tensor;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One inference request flowing through the coordinator.
+pub struct Request {
+    pub model: String,
+    pub input: Tensor,
+    /// Reply channel; the worker sends the result exactly once.
+    pub reply: mpsc::Sender<Result<Tensor>>,
+    /// Enqueue timestamp for latency accounting.
+    pub enqueued: Instant,
+}
+
+/// Handle to a running coordinator.
+pub struct ServerHandle {
+    tx: mpsc::Sender<Request>,
+    stop: Arc<AtomicBool>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<LatencyRecorder>,
+}
+
+impl ServerHandle {
+    /// Submit a request and wait for the reply (client-side latency).
+    pub fn infer(&self, model: &str, input: Tensor) -> Result<Tensor> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Request { model: model.to_string(), input, reply: reply_tx, enqueued: Instant::now() })
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        reply_rx.recv().map_err(|_| anyhow::anyhow!("worker dropped reply"))?
+    }
+
+    /// Fire-and-collect a burst of requests (per-frame candidate batch).
+    pub fn infer_burst(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let mut receivers = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            self.tx
+                .send(Request { model: model.to_string(), input, reply: reply_tx, enqueued: Instant::now() })
+                .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+            receivers.push(reply_rx);
+        }
+        receivers
+            .into_iter()
+            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("worker dropped reply"))?)
+            .collect()
+    }
+
+    /// Stop workers and join them.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        drop(self.tx);
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start the coordinator with `n_workers` threads over a router.
+pub fn serve(router: Arc<Router>, n_workers: usize) -> ServerHandle {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let rx = Arc::new(std::sync::Mutex::new(rx));
+    let stop = Arc::new(AtomicBool::new(false));
+    let metrics = Arc::new(LatencyRecorder::new());
+    let mut workers = Vec::new();
+    for _ in 0..n_workers.max(1) {
+        let rx = Arc::clone(&rx);
+        let router = Arc::clone(&router);
+        let stop = Arc::clone(&stop);
+        let metrics = Arc::clone(&metrics);
+        workers.push(std::thread::spawn(move || {
+            loop {
+                let req = {
+                    let guard = rx.lock().unwrap();
+                    match guard.recv_timeout(std::time::Duration::from_millis(50)) {
+                        Ok(r) => r,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            if stop.load(Ordering::SeqCst) {
+                                return;
+                            }
+                            continue;
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => return,
+                    }
+                };
+                let queue_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
+                let t0 = Instant::now();
+                let result = router.infer(&req.model, &req.input);
+                let infer_us = t0.elapsed().as_secs_f64() * 1e6;
+                metrics.record(&req.model, queue_us, infer_us, result.is_ok());
+                let _ = req.reply.send(result);
+            }
+        }));
+    }
+    ServerHandle { tx, stop, workers, metrics }
+}
+
+/// Convenience: a coordinator over a single engine registered as `model`.
+pub fn serve_single(model: &str, engine: Arc<dyn InferenceEngine>, n_workers: usize) -> ServerHandle {
+    let mut router = Router::new();
+    router.register(model, engine);
+    serve(Arc::new(router), n_workers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::interp::InterpEngine;
+    use crate::util::XorShift64;
+
+    fn tiny_engine() -> Arc<dyn InferenceEngine> {
+        Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(3)).unwrap())
+    }
+
+    #[test]
+    fn serve_round_trip() {
+        let h = serve_single("tiny", tiny_engine(), 2);
+        let mut rng = XorShift64::new(1);
+        let x = Tensor::rand(&[8, 8, 1], 0.0, 1.0, &mut rng);
+        let y = h.infer("tiny", x).unwrap();
+        assert_eq!(y.dims(), &[2, 2, 2]);
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.total_requests, 1);
+        assert_eq!(snap.errors, 0);
+        h.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_is_an_error_reply() {
+        let h = serve_single("tiny", tiny_engine(), 1);
+        let res = h.infer("nonexistent", Tensor::zeros(&[8, 8, 1]));
+        assert!(res.is_err());
+        assert_eq!(h.metrics.snapshot().errors, 1);
+        h.shutdown();
+    }
+
+    #[test]
+    fn burst_of_candidates() {
+        let h = serve_single("tiny", tiny_engine(), 2);
+        let mut rng = XorShift64::new(2);
+        let inputs: Vec<Tensor> = (0..20).map(|_| Tensor::rand(&[8, 8, 1], 0.0, 1.0, &mut rng)).collect();
+        let outs = h.infer_burst("tiny", inputs).unwrap();
+        assert_eq!(outs.len(), 20);
+        assert_eq!(h.metrics.snapshot().total_requests, 20);
+        h.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_cleanly() {
+        let h = serve_single("tiny", tiny_engine(), 3);
+        h.shutdown(); // must not hang
+    }
+}

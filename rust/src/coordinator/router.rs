@@ -1,0 +1,74 @@
+//! Model registry and request routing.
+
+use crate::runtime::InferenceEngine;
+use crate::tensor::Tensor;
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Maps model names to engines. Multiple names may share an engine, and a
+/// model can be re-registered to hot-swap backends (e.g. interp → generated
+/// C once compilation finishes).
+#[derive(Default)]
+pub struct Router {
+    engines: HashMap<String, Arc<dyn InferenceEngine>>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Router { engines: HashMap::new() }
+    }
+
+    /// Register (or replace) a model's engine.
+    pub fn register(&mut self, model: &str, engine: Arc<dyn InferenceEngine>) {
+        self.engines.insert(model.to_string(), engine);
+    }
+
+    pub fn engine(&self, model: &str) -> Result<Arc<dyn InferenceEngine>> {
+        self.engines
+            .get(model)
+            .cloned()
+            .ok_or_else(|| anyhow!("no engine registered for model {model:?} (have: {:?})", self.models()))
+    }
+
+    /// Route one inference.
+    pub fn infer(&self, model: &str, input: &Tensor) -> Result<Tensor> {
+        self.engine(model)?.infer(input)
+    }
+
+    /// Registered model names, sorted.
+    pub fn models(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.engines.keys().cloned().collect();
+        names.sort();
+        names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::interp::InterpEngine;
+
+    #[test]
+    fn register_and_route() {
+        let mut r = Router::new();
+        r.register("tiny", Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(1)).unwrap()));
+        assert_eq!(r.models(), vec!["tiny"]);
+        let y = r.infer("tiny", &Tensor::zeros(&[8, 8, 1])).unwrap();
+        assert_eq!(y.dims(), &[2, 2, 2]);
+        assert!(r.infer("other", &Tensor::zeros(&[8, 8, 1])).is_err());
+    }
+
+    #[test]
+    fn hot_swap_replaces_engine() {
+        let mut r = Router::new();
+        let a = Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(1)).unwrap());
+        let b = Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(2)).unwrap());
+        r.register("m", a);
+        let y1 = r.infer("m", &Tensor::zeros(&[8, 8, 1])).unwrap();
+        r.register("m", b);
+        let y2 = r.infer("m", &Tensor::zeros(&[8, 8, 1])).unwrap();
+        assert_ne!(y1, y2, "swapped engine should produce different outputs");
+    }
+}

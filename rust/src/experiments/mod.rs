@@ -1,0 +1,107 @@
+//! Reproduction drivers for every table and figure in the paper's
+//! evaluation (§III). Shared by the CLI (`nncg bench`) and the cargo bench
+//! targets (`rust/benches/*.rs`).
+//!
+//! Output convention for Tables IV–VI: host rows are **measured** on this
+//! machine; the paper's platform rows are **simulated** via the calibrated
+//! cost models in [`crate::platform`] and marked `(sim)`. Paper values are
+//! printed alongside for comparison.
+
+mod tables;
+
+pub use tables::{
+    run_gpu_throughput, run_table4, run_table5, run_table6, run_table7, ExecTimeRow, TableResult,
+};
+
+use crate::cc::CompiledCnn;
+use crate::codegen::CodegenOptions;
+use crate::graph::Model;
+use crate::interp::InterpEngine;
+use crate::runtime::{EngineKind, InferenceEngine, XlaEngine};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Where compiled C objects are cached during benches/CLI runs.
+pub fn default_work_dir() -> PathBuf {
+    std::env::temp_dir().join("nncg-work")
+}
+
+/// Load a model with trained weights from `weights_dir` if present
+/// (written by `make train`), falling back to seeded random weights —
+/// latency does not depend on weight values, so benches work either way.
+pub fn load_model(name: &str, weights_dir: &Path) -> Result<Model> {
+    let stem = weights_dir.join(name);
+    if stem.with_extension("json").exists() && stem.with_extension("nncgw").exists() {
+        crate::model::load(&stem).with_context(|| format!("loading trained model {name}"))
+    } else {
+        crate::graph::zoo::by_name(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown model {name:?}"))
+            .map(|m| m.with_random_weights(0xC0FFEE))
+    }
+}
+
+/// Construct an engine of the requested kind for a model.
+pub fn build_engine(
+    kind: EngineKind,
+    model: &Model,
+    opts: &CodegenOptions,
+    artifacts_dir: &Path,
+    work_dir: &Path,
+) -> Result<Arc<dyn InferenceEngine>> {
+    Ok(match kind {
+        EngineKind::Nncg => Arc::new(CompiledCnn::build(model, opts, work_dir)?),
+        EngineKind::Interp => Arc::new(InterpEngine::new(model.clone())?),
+        EngineKind::Xla => {
+            let hlo = XlaEngine::artifact_path(artifacts_dir, &model.name);
+            Arc::new(XlaEngine::load(
+                &hlo,
+                &model.name,
+                model.input.dims(),
+                model.output_shape()?.dims(),
+            )?)
+        }
+    })
+}
+
+/// Default artifacts directory (repo-level `artifacts/`), overridable with
+/// `NNCG_ARTIFACTS`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("NNCG_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+/// Default trained-weights directory (`models/`), overridable with
+/// `NNCG_MODELS`.
+pub fn default_weights_dir() -> PathBuf {
+    std::env::var("NNCG_MODELS").map(PathBuf::from).unwrap_or_else(|_| PathBuf::from("models"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::CodegenOptions;
+
+    #[test]
+    fn load_model_falls_back_to_random() {
+        let m = load_model("ball", Path::new("/nonexistent")).unwrap();
+        assert_eq!(m.name, "ball");
+        m.validate().unwrap();
+    }
+
+    #[test]
+    fn load_model_unknown_errors() {
+        assert!(load_model("mobilenet", Path::new("/nonexistent")).is_err());
+    }
+
+    #[test]
+    fn build_engine_nncg_and_interp() {
+        let m = load_model("ball", Path::new("/nonexistent")).unwrap();
+        let wd = default_work_dir();
+        let e = build_engine(EngineKind::Nncg, &m, &CodegenOptions::sse3(), Path::new("artifacts"), &wd).unwrap();
+        assert_eq!(e.name(), "ball");
+        let e2 = build_engine(EngineKind::Interp, &m, &CodegenOptions::sse3(), Path::new("artifacts"), &wd).unwrap();
+        assert_eq!(e2.name(), "interp");
+    }
+}

@@ -1,0 +1,288 @@
+//! Table IV–VII and GPU-throughput reproduction logic.
+
+use super::{build_engine, default_artifacts_dir, default_weights_dir, default_work_dir, load_model};
+use crate::bench_harness::{bench, BenchConfig, Stats, Table};
+use crate::codegen::CodegenOptions;
+use crate::platform::{paper_platforms, GpuModel};
+use crate::runtime::EngineKind;
+use crate::tensor::Tensor;
+use crate::util::{fmt_us, XorShift64};
+use anyhow::Result;
+
+/// One engine's result on one platform row.
+#[derive(Debug, Clone)]
+pub struct ExecTimeRow {
+    pub platform: String,
+    /// (engine label, measured-or-simulated µs, paper µs if reported)
+    pub cells: Vec<(String, Option<f64>, Option<f64>)>,
+    pub simulated: bool,
+}
+
+/// A rendered table plus its raw rows (benches print the table; tests and
+/// EXPERIMENTS.md tooling read the rows).
+#[derive(Debug)]
+pub struct TableResult {
+    pub title: String,
+    pub rows: Vec<ExecTimeRow>,
+    pub rendered: String,
+    /// Measured host speed-up of NNCG over the XLA path.
+    pub host_speedup_vs_xla: Option<f64>,
+}
+
+/// Paper values for Tables IV–VI, in µs.
+/// (platform, nncg, glow, xla) — None = N/A in the paper.
+type PaperRow = (&'static str, Option<f64>, Option<f64>, Option<f64>);
+
+const PAPER_TABLE4: [PaperRow; 4] = [
+    ("Intel i7 (8650U)", Some(2.10), Some(7.53), Some(24.81)),
+    ("Intel Atom (J1900)", Some(17.51), None, Some(69.12)),
+    ("Intel Atom (Z530)", Some(46.50), None, None),
+    ("NVIDIA 1050", None, None, Some(5630.0)),
+];
+
+const PAPER_TABLE5: [PaperRow; 4] = [
+    ("Intel i7 (8650U)", Some(135.7), None, Some(191.8)),
+    ("Intel Atom (J1900)", Some(1020.3), None, Some(1757.2)),
+    ("Intel Atom (Z530)", Some(2938.6), None, None),
+    ("NVIDIA 1050", None, None, Some(5762.0)),
+];
+
+const PAPER_TABLE6: [PaperRow; 2] = [
+    ("Intel i7 (8650U)", Some(474.0), None, Some(2457.0)),
+    ("Intel Atom (J1900)", Some(1109.0), None, Some(6797.0)),
+];
+
+/// Measure one engine's single-image latency on the host.
+fn measure_engine(kind: EngineKind, model_name: &str, cfg: &BenchConfig) -> Result<Stats> {
+    let model = load_model(model_name, &default_weights_dir())?;
+    let engine = build_engine(kind, &model, &CodegenOptions::sse3(), &default_artifacts_dir(), &default_work_dir())?;
+    let mut rng = XorShift64::new(7);
+    let input = Tensor::rand(model.input.dims(), 0.0, 1.0, &mut rng);
+    // warm any lazy state
+    engine.infer(&input)?;
+    Ok(bench(cfg, || {
+        let _ = engine.infer(&input).unwrap();
+    }))
+}
+
+/// Shared driver for Tables IV/V/VI.
+fn run_exec_time_table(
+    table_no: usize,
+    model_name: &str,
+    paper: &[PaperRow],
+    include_gpu: bool,
+    cfg: &BenchConfig,
+) -> Result<TableResult> {
+    let model = load_model(model_name, &default_weights_dir())?;
+    let macs = model.macs()?;
+    let in_bytes = model.input.numel() * 4;
+
+    // --- measured host row ---
+    let nncg = measure_engine(EngineKind::Nncg, model_name, cfg)?;
+    let interp = measure_engine(EngineKind::Interp, model_name, cfg)?;
+    let xla = measure_engine(EngineKind::Xla, model_name, cfg).ok(); // needs artifacts
+
+    let mut rows = Vec::new();
+    rows.push(ExecTimeRow {
+        platform: "This host (measured)".into(),
+        cells: vec![
+            ("NNCG".into(), Some(nncg.median_us), None),
+            ("Glow*".into(), Some(interp.median_us), None),
+            ("TF XLA".into(), xla.as_ref().map(|s| s.median_us), None),
+        ],
+        simulated: false,
+    });
+
+    // --- simulated paper platforms ---
+    for (plat, paper_row) in paper_platforms().iter().zip(paper.iter()) {
+        rows.push(ExecTimeRow {
+            platform: format!("{} (sim)", plat.name),
+            cells: vec![
+                ("NNCG".into(), plat.predict_us(EngineKind::Nncg, macs), paper_row.1),
+                ("Glow*".into(), plat.predict_us(EngineKind::Interp, macs), paper_row.2),
+                ("TF XLA".into(), plat.predict_us(EngineKind::Xla, macs), paper_row.3),
+            ],
+            simulated: true,
+        });
+    }
+    if include_gpu {
+        let gpu = GpuModel::gtx_1050();
+        let paper_gpu = paper.last().unwrap();
+        rows.push(ExecTimeRow {
+            platform: format!("{} (sim)", gpu.name),
+            cells: vec![
+                ("NNCG".into(), None, None),
+                ("Glow*".into(), None, None),
+                ("TF XLA".into(), Some(gpu.latency_us(macs, in_bytes, 1)), paper_gpu.3),
+            ],
+            simulated: true,
+        });
+    }
+
+    let title = format!(
+        "TABLE {}: EXECUTION TIME OF {} ({} MACs; *Glow column = naive-interpreter stand-in)",
+        ["IV", "V", "VI"][table_no - 4],
+        model_name.to_uppercase(),
+        macs
+    );
+    let mut t = Table::new(&title, &["Platform", "NNCG", "Glow*", "TF XLA", "paper NNCG", "paper XLA"]);
+    for row in &rows {
+        let cell = |v: &Option<f64>| v.map(fmt_us).unwrap_or_else(|| "N/A".into());
+        t.row(vec![
+            row.platform.clone(),
+            cell(&row.cells[0].1),
+            cell(&row.cells[1].1),
+            cell(&row.cells[2].1),
+            cell(&row.cells[0].2),
+            cell(&row.cells[2].2),
+        ]);
+    }
+    let host_speedup = xla.as_ref().map(|x| x.median_us / nncg.median_us);
+    let mut rendered = t.render();
+    if let Some(s) = host_speedup {
+        rendered.push_str(&format!(
+            "host speed-up NNCG vs TF XLA: {s:.2}x | vs interp: {:.2}x\n",
+            interp.median_us / nncg.median_us
+        ));
+    }
+    Ok(TableResult { title, rows, rendered, host_speedup_vs_xla: host_speedup })
+}
+
+/// Table IV: ball classifier.
+pub fn run_table4(quick: bool) -> Result<TableResult> {
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::small() };
+    run_exec_time_table(4, "ball", &PAPER_TABLE4, true, &cfg)
+}
+
+/// Table V: pedestrian classifier.
+pub fn run_table5(quick: bool) -> Result<TableResult> {
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig { iters: 2_000, ..BenchConfig::small() } };
+    run_exec_time_table(5, "pedestrian", &PAPER_TABLE5, true, &cfg)
+}
+
+/// Table VI: robot detector.
+pub fn run_table6(quick: bool) -> Result<TableResult> {
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::large() };
+    run_exec_time_table(6, "robot", &PAPER_TABLE6, false, &cfg)
+}
+
+/// Table VII: feature ablation on the ball classifier (host-measured, the
+/// paper also measures this on one machine). Columns: general ISA /
+/// SSSE3 / SSSE3 + full unroll. Paper: 12.94µs / 2.64µs / 2.10µs.
+pub fn run_table7(quick: bool) -> Result<TableResult> {
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::small() };
+    let model = load_model("ball", &default_weights_dir())?;
+    let mut rng = XorShift64::new(7);
+    let input = Tensor::rand(model.input.dims(), 0.0, 1.0, &mut rng);
+
+    let configs: Vec<(&str, CodegenOptions, f64)> = vec![
+        ("General", CodegenOptions::general(), 12.94),
+        ("SSSE3", CodegenOptions::sse3(), 2.64),
+        ("SSSE3 + Full Unroll", CodegenOptions::sse3_full_unroll(), 2.10),
+    ];
+    let mut cells = Vec::new();
+    for (label, opts, paper) in &configs {
+        let cnn = crate::cc::CompiledCnn::build(&model, opts, default_work_dir())?;
+        let mut out = vec![0.0f32; model.output_shape()?.numel()];
+        let stats = bench(&cfg, || cnn.infer_into(input.data(), &mut out));
+        cells.push((label.to_string(), Some(stats.median_us), Some(*paper)));
+    }
+
+    let title = "TABLE VII: SPEED COMPARISON OF DIFFERENT FEATURES (ball classifier)".to_string();
+    let mut t = Table::new(&title, &["Feature set", "measured", "paper (i7)"]);
+    for (label, v, p) in &cells {
+        t.row(vec![
+            label.clone(),
+            v.map(fmt_us).unwrap_or_default(),
+            p.map(fmt_us).unwrap_or_default(),
+        ]);
+    }
+    let mut rendered = t.render();
+    if let (Some(g), Some(s), Some(f)) = (cells[0].1, cells[1].1, cells[2].1) {
+        rendered.push_str(&format!(
+            "SIMD speed-up: {:.2}x (paper 4.9x) | full-unroll extra: {:.0}% (paper 26%)\n",
+            g / s,
+            (s / f - 1.0) * 100.0
+        ));
+    }
+    Ok(TableResult {
+        title,
+        rows: vec![ExecTimeRow { platform: "host".into(), cells, simulated: false }],
+        rendered,
+        host_speedup_vs_xla: None,
+    })
+}
+
+/// GPU throughput sweep (§III-C): per-image latency vs batch size on the
+/// simulated GTX 1050, demonstrating the flat-under-100-images claim.
+pub fn run_gpu_throughput() -> Result<TableResult> {
+    let model = load_model("ball", &default_weights_dir())?;
+    let macs = model.macs()?;
+    let in_bytes = model.input.numel() * 4;
+    let gpu = GpuModel::gtx_1050();
+
+    let title = "GPU THROUGHPUT (simulated GTX 1050, TF XLA path, ball classifier)".to_string();
+    let mut t = Table::new(&title, &["batch", "total latency", "per image", "vs host NNCG"]);
+    // quick host reference
+    let host = measure_engine(EngineKind::Nncg, "ball", &BenchConfig::quick())?;
+    let mut rows = Vec::new();
+    for batch in [1usize, 2, 4, 8, 16, 32, 64, 100, 128, 256, 512, 1024, 4096] {
+        let total = gpu.latency_us(macs, in_bytes, batch);
+        let per = total / batch as f64;
+        t.row(vec![
+            batch.to_string(),
+            fmt_us(total),
+            fmt_us(per),
+            format!("{:.1}x", per / host.median_us),
+        ]);
+        rows.push(ExecTimeRow {
+            platform: format!("batch {batch}"),
+            cells: vec![("gpu-per-image".into(), Some(per), None)],
+            simulated: true,
+        });
+    }
+    Ok(TableResult { title, rows, rendered: t.render(), host_speedup_vs_xla: None })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table7_shape_holds() {
+        // Full iteration count: the quick config is too noisy to order
+        // configurations reliably on a shared single-core machine.
+        let r = run_table7(false).unwrap();
+        let cells = &r.rows[0].cells;
+        let general = cells[0].1.unwrap();
+        let sse = cells[1].1.unwrap();
+        // The paper's core ablation claim: explicit SIMD wins. (Paper: 4.9x
+        // with clang 6; modern gcc auto-vectorizes the generic code far
+        // better, narrowing the factor — see EXPERIMENTS.md — so we assert
+        // the ordering with a modest margin rather than the 2018 factor.)
+        assert!(general > sse * 1.1, "general={general} sse={sse}");
+    }
+
+    #[test]
+    fn table4_quick_runs_without_artifacts() {
+        // XLA column may be N/A if artifacts are not built yet; the table
+        // must still render with measured NNCG/interp host cells.
+        let r = run_table4(true).unwrap();
+        assert!(r.rendered.contains("NNCG"));
+        let host = &r.rows[0];
+        assert!(host.cells[0].1.unwrap() > 0.0);
+        assert!(host.cells[1].1.unwrap() > host.cells[0].1.unwrap(), "interp must be slower than generated C");
+    }
+
+    #[test]
+    fn gpu_throughput_flat_then_amortized() {
+        let r = run_gpu_throughput().unwrap();
+        let per = |i: usize| r.rows[i].cells[0].1.unwrap();
+        let total1 = per(0);
+        // batch 100 total ≈ batch 1 total (flat latency claim): index 7 is batch 100
+        let total100 = per(7) * 100.0;
+        assert!(total100 < total1 * 1.2 * 100.0);
+        // large batches amortize: per-image at 4096 far below at 1
+        assert!(per(12) < per(0) / 100.0);
+    }
+}

@@ -1,0 +1,558 @@
+//! Layer definitions and per-layer shape/weight logic.
+
+use crate::tensor::{Shape, Tensor};
+use crate::util::XorShift64;
+use anyhow::{bail, Result};
+
+/// Padding mode, Keras semantics (the paper generates from Keras models).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// Output spatial size = ceil(in / stride); zero-pad as needed (Eq. 1).
+    Same,
+    /// No padding: out = floor((in - k) / stride) + 1.
+    Valid,
+}
+
+impl Padding {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Padding::Same => "same",
+            Padding::Valid => "valid",
+        }
+    }
+
+    /// (out_size, pad_begin) for one spatial dim.
+    pub fn resolve(&self, input: usize, kernel: usize, stride: usize) -> Result<(usize, usize)> {
+        match self {
+            Padding::Same => {
+                let out = (input + stride - 1) / stride;
+                let total = ((out - 1) * stride + kernel).saturating_sub(input);
+                Ok((out, total / 2))
+            }
+            Padding::Valid => {
+                if kernel > input {
+                    bail!("kernel {kernel} larger than input {input} with valid padding");
+                }
+                Ok(((input - kernel) / stride + 1, 0))
+            }
+        }
+    }
+}
+
+/// Activation function, either fused into a conv or standalone.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Activation {
+    None,
+    /// max(x, 0) — paper Eq. 4.
+    Relu,
+    /// x if x > 0 else alpha * x — paper Eq. 5.
+    LeakyRelu(f32),
+    /// Channel-wise softmax over the flattened output.
+    Softmax,
+}
+
+impl Activation {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Activation::None => "none",
+            Activation::Relu => "ReLU",
+            Activation::LeakyRelu(_) => "Leaky-ReLU",
+            Activation::Softmax => "Soft-Max",
+        }
+    }
+
+    /// Apply to a scalar (softmax is handled at the tensor level).
+    #[inline]
+    pub fn apply(&self, x: f32) -> f32 {
+        match self {
+            Activation::None => x,
+            Activation::Relu => x.max(0.0),
+            Activation::LeakyRelu(a) => {
+                if x > 0.0 {
+                    x
+                } else {
+                    a * x
+                }
+            }
+            Activation::Softmax => x, // normalized later over the channel dim
+        }
+    }
+}
+
+/// One layer of the sequential CNN IR.
+#[derive(Debug, Clone)]
+pub enum Layer {
+    /// 2-d convolution, HWIO weights `[h_k, w_k, c_in, c_out]` + bias
+    /// `[c_out]`, with an optionally fused activation (paper fuses BN and
+    /// activation into the conv loop; the fusion pass produces this form).
+    Conv2D {
+        weights: Tensor,
+        bias: Tensor,
+        stride: (usize, usize),
+        padding: Padding,
+        activation: Activation,
+    },
+    /// Max-pooling over `pool` windows with `stride` (paper Eq. 3).
+    MaxPool2D { pool: (usize, usize), stride: (usize, usize) },
+    /// Average pooling (paper future work: "more layer types to support
+    /// modern widely known CNN structures" — MobileNet heads use it).
+    AvgPool2D { pool: (usize, usize), stride: (usize, usize) },
+    /// Depthwise convolution (multiplier 1): weights `[h_k, w_k, c]`,
+    /// bias `[c]`. The MobileNet building block the paper discusses.
+    DepthwiseConv2D {
+        weights: Tensor,
+        bias: Tensor,
+        stride: (usize, usize),
+        padding: Padding,
+        activation: Activation,
+    },
+    /// Standalone activation layer (the zoo mirrors the paper's table rows;
+    /// the fusion pass folds these into the preceding conv).
+    Activation(Activation),
+    /// Batch normalization with per-channel learned affine + running stats
+    /// (paper Eq. 6); folded into the preceding conv by `passes::fold_bn`.
+    BatchNorm {
+        gamma: Tensor,
+        beta: Tensor,
+        mean: Tensor,
+        variance: Tensor,
+        epsilon: f32,
+    },
+    /// Inference no-op (paper Table II lists Dropout 0.3); elided by passes.
+    Dropout { rate: f32 },
+    /// Reshape HWC → flat vector.
+    Flatten,
+    /// Fully connected: weights `[in, out]`, bias `[out]`.
+    Dense { weights: Tensor, bias: Tensor, activation: Activation },
+}
+
+impl Layer {
+    /// Conv constructor with placeholder (empty) weights — call
+    /// `Model::with_random_weights` or load real weights before use.
+    pub fn conv2d(c_out: usize, h_k: usize, w_k: usize, stride: (usize, usize), padding: Padding, activation: Activation) -> Layer {
+        Layer::Conv2D {
+            // c_in unknown until shape inference; encode the intent in dims
+            // [h_k, w_k, 0, c_out] and fix up in randomize/load.
+            weights: Tensor::zeros(&[h_k, w_k, 0, c_out]),
+            bias: Tensor::zeros(&[c_out]),
+            stride,
+            padding,
+            activation,
+        }
+    }
+
+    pub fn maxpool(size: usize, stride: usize) -> Layer {
+        Layer::MaxPool2D { pool: (size, size), stride: (stride, stride) }
+    }
+
+    pub fn avgpool(size: usize, stride: usize) -> Layer {
+        Layer::AvgPool2D { pool: (size, size), stride: (stride, stride) }
+    }
+
+    /// Depthwise conv constructor with placeholder weights (channel count
+    /// resolved against the input shape like `conv2d`).
+    pub fn depthwise(h_k: usize, w_k: usize, stride: (usize, usize), padding: Padding, activation: Activation) -> Layer {
+        Layer::DepthwiseConv2D {
+            weights: Tensor::zeros(&[h_k, w_k, 0]),
+            bias: Tensor::zeros(&[0]),
+            stride,
+            padding,
+            activation,
+        }
+    }
+
+    pub fn relu() -> Layer {
+        Layer::Activation(Activation::Relu)
+    }
+
+    pub fn leaky_relu(alpha: f32) -> Layer {
+        Layer::Activation(Activation::LeakyRelu(alpha))
+    }
+
+    pub fn softmax() -> Layer {
+        Layer::Activation(Activation::Softmax)
+    }
+
+    pub fn batchnorm(channels: usize) -> Layer {
+        Layer::BatchNorm {
+            gamma: Tensor::from_vec(&[channels], vec![1.0; channels]).unwrap(),
+            beta: Tensor::zeros(&[channels]),
+            mean: Tensor::zeros(&[channels]),
+            variance: Tensor::from_vec(&[channels], vec![1.0; channels]).unwrap(),
+            epsilon: 1e-3,
+        }
+    }
+
+    pub fn dense(out: usize, activation: Activation) -> Layer {
+        Layer::Dense { weights: Tensor::zeros(&[0, out]), bias: Tensor::zeros(&[out]), activation }
+    }
+
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Layer::Conv2D { .. } => "Conv",
+            Layer::MaxPool2D { .. } => "Max-Pool",
+            Layer::AvgPool2D { .. } => "Avg-Pool",
+            Layer::DepthwiseConv2D { .. } => "DW-Conv",
+            Layer::Activation(a) => a.name(),
+            Layer::BatchNorm { .. } => "Batch Norm.",
+            Layer::Dropout { .. } => "Dropout",
+            Layer::Flatten => "Flatten",
+            Layer::Dense { .. } => "Dense",
+        }
+    }
+
+    /// Output shape given the input shape.
+    pub fn output_shape(&self, input: &Shape) -> Result<Shape> {
+        match self {
+            Layer::Conv2D { weights, stride, padding, .. } => {
+                let d = weights.dims();
+                let (h_k, w_k, c_out) = (d[0], d[1], d[3]);
+                if input.rank() != 3 {
+                    bail!("conv input must be HWC, got {input}");
+                }
+                let (oh, _) = padding.resolve(input.h(), h_k, stride.0)?;
+                let (ow, _) = padding.resolve(input.w(), w_k, stride.1)?;
+                if oh == 0 || ow == 0 {
+                    bail!("conv produces empty output from {input}");
+                }
+                Ok(Shape::new(&[oh, ow, c_out]))
+            }
+            Layer::MaxPool2D { pool, stride } | Layer::AvgPool2D { pool, stride } => {
+                if input.rank() != 3 {
+                    bail!("pool input must be HWC, got {input}");
+                }
+                if pool.0 > input.h() || pool.1 > input.w() {
+                    bail!("pool window {pool:?} larger than input {input}");
+                }
+                let oh = (input.h() - pool.0) / stride.0 + 1;
+                let ow = (input.w() - pool.1) / stride.1 + 1;
+                Ok(Shape::new(&[oh, ow, input.c()]))
+            }
+            Layer::DepthwiseConv2D { weights, stride, padding, .. } => {
+                let d = weights.dims();
+                if input.rank() != 3 {
+                    bail!("depthwise input must be HWC, got {input}");
+                }
+                let (oh, _) = padding.resolve(input.h(), d[0], stride.0)?;
+                let (ow, _) = padding.resolve(input.w(), d[1], stride.1)?;
+                Ok(Shape::new(&[oh, ow, input.c()]))
+            }
+            Layer::Activation(_) | Layer::BatchNorm { .. } | Layer::Dropout { .. } => Ok(input.clone()),
+            Layer::Flatten => Ok(Shape::new(&[input.numel()])),
+            Layer::Dense { weights, .. } => {
+                let out = weights.dims()[1];
+                Ok(Shape::new(&[out]))
+            }
+        }
+    }
+
+    /// Check weight tensors are consistent with the incoming shape.
+    pub fn validate_weights(&self, input: &Shape) -> Result<()> {
+        match self {
+            Layer::Conv2D { weights, bias, .. } => {
+                let d = weights.dims();
+                if d.len() != 4 {
+                    bail!("conv weights must be 4-d HWIO, got {:?}", d);
+                }
+                if d[2] != input.c() {
+                    bail!("conv expects c_in={}, weights have {}", input.c(), d[2]);
+                }
+                if bias.dims() != [d[3]] {
+                    bail!("conv bias shape {:?} != [c_out={}]", bias.dims(), d[3]);
+                }
+                if weights.numel() == 0 {
+                    bail!("conv weights are empty (placeholder not initialized)");
+                }
+                Ok(())
+            }
+            Layer::BatchNorm { gamma, beta, mean, variance, .. } => {
+                let c = input.c();
+                for (name, t) in [("gamma", gamma), ("beta", beta), ("mean", mean), ("variance", variance)] {
+                    if t.dims() != [c] {
+                        bail!("batchnorm {name} shape {:?} != [{c}]", t.dims());
+                    }
+                }
+                Ok(())
+            }
+            Layer::DepthwiseConv2D { weights, bias, .. } => {
+                let d = weights.dims();
+                if d.len() != 3 {
+                    bail!("depthwise weights must be 3-d [hk, wk, c], got {:?}", d);
+                }
+                if d[2] != input.c() {
+                    bail!("depthwise expects c={}, weights have {}", input.c(), d[2]);
+                }
+                if bias.dims() != [d[2]] {
+                    bail!("depthwise bias shape {:?} != [{}]", bias.dims(), d[2]);
+                }
+                if weights.numel() == 0 {
+                    bail!("depthwise weights are empty");
+                }
+                Ok(())
+            }
+            Layer::Dense { weights, bias, .. } => {
+                let d = weights.dims();
+                if d.len() != 2 {
+                    bail!("dense weights must be 2-d, got {:?}", d);
+                }
+                if d[0] != input.numel() {
+                    bail!("dense expects in={}, weights have {}", input.numel(), d[0]);
+                }
+                if bias.dims() != [d[1]] {
+                    bail!("dense bias shape {:?} != [{}]", bias.dims(), d[1]);
+                }
+                if weights.numel() == 0 {
+                    bail!("dense weights are empty");
+                }
+                Ok(())
+            }
+            _ => Ok(()),
+        }
+    }
+
+    pub fn num_params(&self) -> usize {
+        match self {
+            Layer::Conv2D { weights, bias, .. } => weights.numel() + bias.numel(),
+            Layer::DepthwiseConv2D { weights, bias, .. } => weights.numel() + bias.numel(),
+            Layer::BatchNorm { gamma, beta, mean, variance, .. } => {
+                gamma.numel() + beta.numel() + mean.numel() + variance.numel()
+            }
+            Layer::Dense { weights, bias, .. } => weights.numel() + bias.numel(),
+            _ => 0,
+        }
+    }
+
+    /// MAC count for this layer given its input shape.
+    pub fn macs(&self, input: &Shape) -> Result<u64> {
+        Ok(match self {
+            Layer::Conv2D { weights, .. } => {
+                let out = self.output_shape(input)?;
+                let d = weights.dims();
+                (out.h() * out.w() * d[3] * d[0] * d[1] * d[2]) as u64
+            }
+            Layer::DepthwiseConv2D { weights, .. } => {
+                let out = self.output_shape(input)?;
+                let d = weights.dims();
+                (out.h() * out.w() * d[2] * d[0] * d[1]) as u64
+            }
+            Layer::Dense { weights, .. } => weights.numel() as u64,
+            _ => 0,
+        })
+    }
+
+    /// Fill placeholder weights with Glorot noise; resolves the deferred
+    /// `c_in` of conv/dense placeholders. Requires being called in model
+    /// order (the `Model::with_random_weights` driver does this).
+    pub fn randomize_weights(&mut self, rng: &mut XorShift64) {
+        // c_in resolution happens via a shape-inference pass in Model; here
+        // we only know local dims, so Model passes shapes through the
+        // `resolve_placeholder` call below. For convenience, this method is
+        // only invoked through Model::with_random_weights which first calls
+        // resolve. (Kept separate so loading real weights shares the code.)
+        match self {
+            Layer::Conv2D { weights, bias, .. } => {
+                let d = weights.dims().to_vec();
+                *weights = Tensor::glorot(&d, rng);
+                let b = bias.numel();
+                *bias = Tensor::rand(&[b], -0.05, 0.05, rng);
+            }
+            Layer::BatchNorm { gamma, beta, mean, variance, .. } => {
+                let c = gamma.numel();
+                *gamma = Tensor::rand(&[c], 0.5, 1.5, rng);
+                *beta = Tensor::rand(&[c], -0.2, 0.2, rng);
+                *mean = Tensor::rand(&[c], -0.5, 0.5, rng);
+                *variance = Tensor::rand(&[c], 0.25, 1.0, rng);
+            }
+            Layer::DepthwiseConv2D { weights, bias, .. } => {
+                let d = weights.dims().to_vec();
+                *weights = Tensor::rand(&d, -0.5, 0.5, rng);
+                let b = bias.numel();
+                *bias = Tensor::rand(&[b], -0.05, 0.05, rng);
+            }
+            Layer::Dense { weights, bias, .. } => {
+                let d = weights.dims().to_vec();
+                *weights = Tensor::glorot(&d, rng);
+                let b = bias.numel();
+                *bias = Tensor::rand(&[b], -0.05, 0.05, rng);
+            }
+            _ => {}
+        }
+    }
+
+    /// Resolve a deferred `c_in`/`in` placeholder dimension now that the
+    /// input shape is known.
+    pub fn resolve_placeholder(&mut self, input: &Shape) {
+        match self {
+            Layer::Conv2D { weights, .. } => {
+                let d = weights.dims().to_vec();
+                if d[2] == 0 {
+                    *weights = Tensor::zeros(&[d[0], d[1], input.c(), d[3]]);
+                }
+            }
+            Layer::DepthwiseConv2D { weights, bias, .. } => {
+                let d = weights.dims().to_vec();
+                if d[2] == 0 {
+                    *weights = Tensor::zeros(&[d[0], d[1], input.c()]);
+                    *bias = Tensor::zeros(&[input.c()]);
+                }
+            }
+            Layer::Dense { weights, .. } => {
+                let d = weights.dims().to_vec();
+                if d[0] == 0 {
+                    *weights = Tensor::zeros(&[input.numel(), d[1]]);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// One row of the paper-style architecture table.
+    pub fn describe_row(&self, out: &Shape) -> String {
+        match self {
+            Layer::Conv2D { weights, stride, padding, activation, .. } => {
+                let d = weights.dims();
+                let mut row = format!(
+                    "{:<14} {:>5} {:>9} {:>8} {:>8}   {}",
+                    "Conv",
+                    d[3],
+                    format!("{}x{}", d[0], d[1]),
+                    format!("{}x{}", stride.0, stride.1),
+                    padding.name(),
+                    out
+                );
+                if *activation != Activation::None {
+                    row.push_str(&format!("  (+{})", activation.name()));
+                }
+                row
+            }
+            Layer::DepthwiseConv2D { weights, stride, padding, activation, .. } => {
+                let d = weights.dims();
+                let mut row = format!(
+                    "{:<14} {:>5} {:>9} {:>8} {:>8}   {}",
+                    "DW-Conv",
+                    d[2],
+                    format!("{}x{}", d[0], d[1]),
+                    format!("{}x{}", stride.0, stride.1),
+                    padding.name(),
+                    out
+                );
+                if *activation != Activation::None {
+                    row.push_str(&format!("  (+{})", activation.name()));
+                }
+                row
+            }
+            Layer::AvgPool2D { pool, stride } => format!(
+                "{:<14} {:>5} {:>9} {:>8} {:>8}   {}",
+                "Avg-Pool",
+                "",
+                format!("{}x{}", pool.0, pool.1),
+                format!("{}x{}", stride.0, stride.1),
+                "",
+                out
+            ),
+            Layer::MaxPool2D { pool, stride } => format!(
+                "{:<14} {:>5} {:>9} {:>8} {:>8}   {}",
+                "Max-Pool",
+                "",
+                format!("{}x{}", pool.0, pool.1),
+                format!("{}x{}", stride.0, stride.1),
+                "",
+                out
+            ),
+            Layer::Activation(a) => match a {
+                Activation::LeakyRelu(alpha) => {
+                    format!("{:<14} {:>5} {:>9} {:>8} {:>8}   {}", a.name(), "", format!("a={alpha}"), "", "", out)
+                }
+                _ => format!("{:<14} {:>5} {:>9} {:>8} {:>8}   {}", a.name(), "", "", "", "", out),
+            },
+            Layer::BatchNorm { .. } => format!("{:<14} {:>5} {:>9} {:>8} {:>8}   {}", "Batch Norm.", "", "", "", "", out),
+            Layer::Dropout { rate } => {
+                format!("{:<14} {:>5} {:>9} {:>8} {:>8}   {}", "Dropout", "", format!("{rate}"), "", "", out)
+            }
+            Layer::Flatten => format!("{:<14} {:>5} {:>9} {:>8} {:>8}   {}", "Flatten", "", "", "", "", out),
+            Layer::Dense { weights, activation, .. } => {
+                let mut row = format!(
+                    "{:<14} {:>5} {:>9} {:>8} {:>8}   {}",
+                    "Dense",
+                    weights.dims()[1],
+                    "",
+                    "",
+                    "",
+                    out
+                );
+                if *activation != Activation::None {
+                    row.push_str(&format!("  (+{})", activation.name()));
+                }
+                row
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_padding_keras_semantics() {
+        // 16x16 input, 5x5 kernel, stride 2, same → ceil(16/2)=8, pad=(7*2+5-16)/2=1
+        let (out, pad) = Padding::Same.resolve(16, 5, 2).unwrap();
+        assert_eq!((out, pad), (8, 1));
+        // stride 1 same keeps size, pad=(k-1)/2
+        let (out, pad) = Padding::Same.resolve(18, 3, 1).unwrap();
+        assert_eq!((out, pad), (18, 1));
+    }
+
+    #[test]
+    fn valid_padding() {
+        let (out, pad) = Padding::Valid.resolve(6, 3, 1).unwrap();
+        assert_eq!((out, pad), (4, 0));
+        let (out, _) = Padding::Valid.resolve(7, 2, 2).unwrap();
+        assert_eq!(out, 3);
+        assert!(Padding::Valid.resolve(2, 3, 1).is_err());
+    }
+
+    #[test]
+    fn activation_scalars() {
+        assert_eq!(Activation::Relu.apply(-1.0), 0.0);
+        assert_eq!(Activation::Relu.apply(2.0), 2.0);
+        assert_eq!(Activation::LeakyRelu(0.1).apply(-2.0), -0.2);
+        assert_eq!(Activation::LeakyRelu(0.1).apply(3.0), 3.0);
+        assert_eq!(Activation::None.apply(-5.0), -5.0);
+    }
+
+    #[test]
+    fn maxpool_shape() {
+        let l = Layer::maxpool(2, 2);
+        let s = l.output_shape(&Shape::new(&[9, 18, 12])).unwrap();
+        // Keras valid pooling: floor((9-2)/2)+1 = 4
+        assert_eq!(s.dims(), &[4, 9, 12]);
+    }
+
+    #[test]
+    fn conv_macs() {
+        let mut l = Layer::conv2d(8, 5, 5, (2, 2), Padding::Same, Activation::None);
+        l.resolve_placeholder(&Shape::new(&[16, 16, 1]));
+        // out 8x8x8, per-output 5*5*1 macs
+        assert_eq!(l.macs(&Shape::new(&[16, 16, 1])).unwrap(), 8 * 8 * 8 * 25);
+    }
+
+    #[test]
+    fn batchnorm_validation() {
+        let l = Layer::batchnorm(8);
+        assert!(l.validate_weights(&Shape::new(&[4, 4, 8])).is_ok());
+        assert!(l.validate_weights(&Shape::new(&[4, 4, 7])).is_err());
+    }
+
+    #[test]
+    fn dense_shapes() {
+        let mut l = Layer::dense(10, Activation::None);
+        l.resolve_placeholder(&Shape::new(&[4, 4, 2]));
+        assert_eq!(l.output_shape(&Shape::new(&[4, 4, 2])).unwrap().dims(), &[10]);
+        if let Layer::Dense { weights, .. } = &l {
+            assert_eq!(weights.dims(), &[32, 10]);
+        } else {
+            unreachable!()
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! CNN graph IR: the layer sequence NNCG compiles.
+//!
+//! The paper targets small, *sequential* CNNs (Tables I–III): the IR is a
+//! straight-line list of layers with static shapes, which is exactly what
+//! makes whole-model specialization (unrolling, constant baking) tractable.
+
+mod layer;
+pub mod zoo;
+
+pub use layer::{Activation, Layer, Padding};
+
+use crate::tensor::{Shape, Tensor};
+use crate::util::XorShift64;
+use anyhow::{bail, Context, Result};
+
+/// A trained (or to-be-trained) CNN: architecture + weights.
+#[derive(Debug, Clone)]
+pub struct Model {
+    /// Human-readable name; also used for artifact file stems.
+    pub name: String,
+    /// HWC input shape.
+    pub input: Shape,
+    /// Straight-line layer sequence.
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    pub fn new(name: &str, input: &[usize]) -> Self {
+        Model { name: name.to_string(), input: Shape::new(input), layers: Vec::new() }
+    }
+
+    /// Append a layer (builder style).
+    pub fn push(mut self, layer: Layer) -> Self {
+        self.layers.push(layer);
+        self
+    }
+
+    /// Run shape inference over the whole model, returning every
+    /// intermediate shape: `shapes[0]` is the input, `shapes[i+1]` the output
+    /// of `layers[i]`. Fails on any inconsistency (kernel larger than input,
+    /// channel mismatch, non-positive output dims).
+    pub fn infer_shapes(&self) -> Result<Vec<Shape>> {
+        let mut shapes = vec![self.input.clone()];
+        for (idx, layer) in self.layers.iter().enumerate() {
+            let next = layer
+                .output_shape(shapes.last().unwrap())
+                .with_context(|| format!("layer {} ({})", idx, layer.kind_name()))?;
+            shapes.push(next);
+        }
+        Ok(shapes)
+    }
+
+    /// Output shape of the full model.
+    pub fn output_shape(&self) -> Result<Shape> {
+        Ok(self.infer_shapes()?.pop().unwrap())
+    }
+
+    /// Validate architecture + weight tensor shapes together.
+    pub fn validate(&self) -> Result<()> {
+        let shapes = self.infer_shapes()?;
+        for (idx, layer) in self.layers.iter().enumerate() {
+            layer
+                .validate_weights(&shapes[idx])
+                .with_context(|| format!("layer {} ({})", idx, layer.kind_name()))?;
+        }
+        Ok(())
+    }
+
+    /// Number of scalar weights in the model.
+    pub fn num_params(&self) -> usize {
+        self.layers.iter().map(|l| l.num_params()).sum()
+    }
+
+    /// Multiply–accumulate count for a single inference (conv + dense only),
+    /// used by the platform cost model.
+    pub fn macs(&self) -> Result<u64> {
+        let shapes = self.infer_shapes()?;
+        let mut macs: u64 = 0;
+        for (idx, layer) in self.layers.iter().enumerate() {
+            macs += layer.macs(&shapes[idx])?;
+        }
+        Ok(macs)
+    }
+
+    /// Replace all weights with Glorot-uniform random values (deterministic
+    /// in the seed). Used by tests and benches that don't need trained
+    /// weights — the paper's latency numbers do not depend on weight values.
+    pub fn with_random_weights(mut self, seed: u64) -> Self {
+        let mut rng = XorShift64::new(seed);
+        let mut shape = self.input.clone();
+        for layer in &mut self.layers {
+            layer.resolve_placeholder(&shape);
+            layer.randomize_weights(&mut rng);
+            shape = layer.output_shape(&shape).expect("shape inference while randomizing weights");
+        }
+        self
+    }
+
+    /// Resolve deferred `c_in`/`in` placeholder dims (builder constructors
+    /// defer them until the input shape is known). Used by the weight
+    /// loader before installing trained tensors.
+    pub fn resolve_placeholders(&mut self) -> Result<()> {
+        let mut shape = self.input.clone();
+        for layer in &mut self.layers {
+            layer.resolve_placeholder(&shape);
+            shape = layer.output_shape(&shape)?;
+        }
+        Ok(())
+    }
+
+    /// Pretty-print the architecture as the paper's Tables I–III do.
+    pub fn describe(&self) -> String {
+        let shapes = match self.infer_shapes() {
+            Ok(s) => s,
+            Err(e) => return format!("<invalid model: {e}>"),
+        };
+        let mut out = String::new();
+        out.push_str(&format!("Model: {}  ({} params, {} MACs)\n", self.name, self.num_params(), self.macs().unwrap_or(0)));
+        out.push_str(&format!("{:<14} {:>5} {:>9} {:>8} {:>8}   {}\n", "Layer", "#", "Size", "Stride", "Padding", "Output"));
+        out.push_str(&format!("{:<14} {:>5} {:>9} {:>8} {:>8}   {}\n", "Input", self.input.c(), format!("{}x{}", self.input.w(), self.input.h()), "", "", shapes[0]));
+        for (i, l) in self.layers.iter().enumerate() {
+            out.push_str(&l.describe_row(&shapes[i + 1]));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Run the model on an input with the naive interpreter (convenience
+    /// re-export used widely in tests).
+    pub fn run_interp(&self, input: &Tensor) -> Result<Tensor> {
+        crate::interp::run(self, input)
+    }
+
+    /// True if every conv layer's output channel count is a multiple of
+    /// `lanes` — the paper's prerequisite for SIMD over output channels.
+    pub fn simd_friendly(&self, lanes: usize) -> bool {
+        self.layers.iter().all(|l| match l {
+            Layer::Conv2D { weights, .. } => weights.dims()[3] % lanes == 0,
+            _ => true,
+        })
+    }
+}
+
+/// Check an input tensor matches the model's declared input shape.
+pub fn check_input(model: &Model, input: &Tensor) -> Result<()> {
+    if input.dims() != model.input.dims() {
+        bail!("input shape {:?} does not match model input {:?}", input.dims(), model.input.dims());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Model {
+        Model::new("tiny", &[8, 8, 1])
+            .push(Layer::conv2d(4, 3, 3, (1, 1), Padding::Same, Activation::Relu))
+            .push(Layer::maxpool(2, 2))
+            .push(Layer::conv2d(2, 3, 3, (1, 1), Padding::Valid, Activation::None))
+            .push(Layer::softmax())
+            .with_random_weights(1)
+    }
+
+    #[test]
+    fn shape_inference_tiny() {
+        let m = tiny();
+        let shapes = m.infer_shapes().unwrap();
+        assert_eq!(shapes[1].dims(), &[8, 8, 4]); // same pad conv
+        assert_eq!(shapes[2].dims(), &[4, 4, 4]); // pool /2
+        assert_eq!(shapes[3].dims(), &[2, 2, 2]); // valid conv 3x3
+        assert_eq!(shapes[4].dims(), &[2, 2, 2]); // softmax preserves
+    }
+
+    #[test]
+    fn validate_catches_missing_weights() {
+        let m = Model::new("bad", &[8, 8, 1]).push(Layer::conv2d(4, 3, 3, (1, 1), Padding::Same, Activation::None));
+        // conv2d() creates zero-sized weights until randomized/loaded
+        assert!(m.validate().is_err());
+        assert!(m.with_random_weights(3).validate().is_ok());
+    }
+
+    #[test]
+    fn kernel_too_large_fails() {
+        let m = Model::new("bad", &[4, 4, 1])
+            .push(Layer::conv2d(2, 7, 7, (1, 1), Padding::Valid, Activation::None));
+        assert!(m.infer_shapes().is_err());
+    }
+
+    #[test]
+    fn num_params_counts_weights_and_bias() {
+        let m = Model::new("p", &[8, 8, 2])
+            .push(Layer::conv2d(4, 3, 3, (1, 1), Padding::Same, Activation::None))
+            .with_random_weights(1);
+        assert_eq!(m.num_params(), 3 * 3 * 2 * 4 + 4);
+    }
+
+    #[test]
+    fn macs_positive() {
+        assert!(tiny().macs().unwrap() > 0);
+    }
+
+    #[test]
+    fn describe_contains_rows() {
+        let d = tiny().describe();
+        assert!(d.contains("Conv"), "{d}");
+        assert!(d.contains("Max-Pool"), "{d}");
+        assert!(d.contains("Soft-Max"), "{d}");
+    }
+
+    #[test]
+    fn simd_friendly_checks_cout() {
+        assert!(tiny().simd_friendly(2));
+        assert!(!tiny().simd_friendly(8)); // last conv has c_out=2
+    }
+}

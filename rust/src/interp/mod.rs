@@ -1,0 +1,141 @@
+//! Naive runtime interpreter.
+//!
+//! Two roles:
+//! 1. **Correctness oracle** on the Rust side: a direct transcription of the
+//!    paper's Eq. 1–6, kept as simple as possible, against which generated C
+//!    and the XLA runtime are compared.
+//! 2. **Framework baseline** ("Glow column" stand-in): this is exactly the
+//!    execution model the paper attributes to generic frameworks — weights
+//!    in heap arrays, loop bounds read from layer structs at run time, no
+//!    model-specific specialization. Measuring it quantifies what NNCG's
+//!    specialization buys.
+
+mod ops;
+
+pub use ops::{avgpool2d, batchnorm, conv2d, dense, depthwise_conv2d, leaky_relu, maxpool2d, relu, softmax};
+
+use crate::graph::{check_input, Activation, Layer, Model};
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// Run a full model on one input image, returning the final output tensor.
+pub fn run(model: &Model, input: &Tensor) -> Result<Tensor> {
+    check_input(model, input)?;
+    model.validate()?;
+    let mut x = input.clone();
+    for layer in &model.layers {
+        x = run_layer(layer, &x)?;
+    }
+    Ok(x)
+}
+
+/// Run a single layer.
+pub fn run_layer(layer: &Layer, x: &Tensor) -> Result<Tensor> {
+    Ok(match layer {
+        Layer::Conv2D { weights, bias, stride, padding, activation } => {
+            let y = conv2d(x, weights, bias, *stride, *padding)?;
+            apply_activation(&y, *activation)
+        }
+        Layer::MaxPool2D { pool, stride } => maxpool2d(x, *pool, *stride)?,
+        Layer::AvgPool2D { pool, stride } => avgpool2d(x, *pool, *stride)?,
+        Layer::DepthwiseConv2D { weights, bias, stride, padding, activation } => {
+            let y = depthwise_conv2d(x, weights, bias, *stride, *padding)?;
+            apply_activation(&y, *activation)
+        }
+        Layer::Activation(a) => apply_activation(x, *a),
+        Layer::BatchNorm { gamma, beta, mean, variance, epsilon } => {
+            batchnorm(x, gamma, beta, mean, variance, *epsilon)?
+        }
+        Layer::Dropout { .. } => x.clone(), // inference: identity
+        Layer::Flatten => {
+            let mut y = x.clone();
+            let n = y.numel();
+            y.reshape(&[n])?;
+            y
+        }
+        Layer::Dense { weights, bias, activation } => {
+            let y = dense(x, weights, bias)?;
+            apply_activation(&y, *activation)
+        }
+    })
+}
+
+fn apply_activation(x: &Tensor, a: Activation) -> Tensor {
+    match a {
+        Activation::None => x.clone(),
+        Activation::Relu => relu(x),
+        Activation::LeakyRelu(alpha) => leaky_relu(x, alpha),
+        Activation::Softmax => softmax(x),
+    }
+}
+
+/// Engine wrapper so the interpreter plugs into the coordinator's
+/// [`crate::runtime::InferenceEngine`] trait.
+pub struct InterpEngine {
+    model: Model,
+}
+
+impl InterpEngine {
+    pub fn new(model: Model) -> Result<Self> {
+        model.validate()?;
+        Ok(InterpEngine { model })
+    }
+
+    pub fn model(&self) -> &Model {
+        &self.model
+    }
+}
+
+impl crate::runtime::InferenceEngine for InterpEngine {
+    fn name(&self) -> &str {
+        "interp"
+    }
+
+    fn infer(&self, input: &Tensor) -> Result<Tensor> {
+        run(&self.model, input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::util::XorShift64;
+
+    #[test]
+    fn run_all_paper_models() {
+        let mut rng = XorShift64::new(10);
+        for name in zoo::PAPER_MODELS {
+            let m = zoo::by_name(name).unwrap().with_random_weights(7);
+            let input = Tensor::rand(m.input.dims(), 0.0, 1.0, &mut rng);
+            let out = run(&m, &input).unwrap();
+            assert_eq!(out.dims(), m.output_shape().unwrap().dims(), "{name}");
+            assert!(out.data().iter().all(|v| v.is_finite()), "{name}");
+        }
+    }
+
+    #[test]
+    fn classifier_outputs_are_probabilities() {
+        let mut rng = XorShift64::new(11);
+        let m = zoo::ball_classifier().with_random_weights(8);
+        let input = Tensor::rand(&[16, 16, 1], 0.0, 1.0, &mut rng);
+        let out = run(&m, &input).unwrap();
+        let sum: f32 = out.data().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "softmax should sum to 1, got {sum}");
+        assert!(out.data().iter().all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn rejects_wrong_input_shape() {
+        let m = zoo::ball_classifier().with_random_weights(9);
+        let bad = Tensor::zeros(&[8, 8, 1]);
+        assert!(run(&m, &bad).is_err());
+    }
+
+    #[test]
+    fn dropout_is_identity() {
+        let x = Tensor::from_vec(&[1, 1, 2], vec![3.0, -4.0]).unwrap();
+        let y = run_layer(&Layer::Dropout { rate: 0.5 }, &x).unwrap();
+        assert_eq!(x, y);
+    }
+}

@@ -1,0 +1,369 @@
+//! Direct transcriptions of the paper's layer equations (Eq. 1–6).
+//!
+//! Deliberately unspecialized: runtime loop bounds, heap weights, no
+//! fusion. See module docs in [`super`].
+
+use crate::graph::Padding;
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// 2-d convolution, paper Eq. 2 with zero padding per Eq. 1.
+///
+/// * `x` — input `[h_in, w_in, c_in]`
+/// * `w` — weights `[h_k, w_k, c_in, c_out]` (HWIO)
+/// * `b` — bias `[c_out]`
+pub fn conv2d(x: &Tensor, w: &Tensor, b: &Tensor, stride: (usize, usize), padding: Padding) -> Result<Tensor> {
+    let (h_in, w_in, c_in) = (x.dims()[0], x.dims()[1], x.dims()[2]);
+    let wd = w.dims();
+    let (h_k, w_k, c_out) = (wd[0], wd[1], wd[3]);
+    if wd[2] != c_in {
+        bail!("conv c_in mismatch: input {c_in}, weights {}", wd[2]);
+    }
+    let (h_out, p_h) = padding.resolve(h_in, h_k, stride.0)?;
+    let (w_out, p_w) = padding.resolve(w_in, w_k, stride.1)?;
+
+    let mut y = Tensor::zeros(&[h_out, w_out, c_out]);
+    for i in 0..h_out {
+        for j in 0..w_out {
+            for k in 0..c_out {
+                let mut acc = b.data()[k];
+                for n in 0..h_k {
+                    for m in 0..w_k {
+                        // Eq. 1: zero outside bounds.
+                        let ii = (i * stride.0 + n) as isize - p_h as isize;
+                        let jj = (j * stride.1 + m) as isize - p_w as isize;
+                        if ii < 0 || jj < 0 || ii >= h_in as isize || jj >= w_in as isize {
+                            continue;
+                        }
+                        for o in 0..c_in {
+                            acc += w.at4(n, m, o, k) * x.at3(ii as usize, jj as usize, o);
+                        }
+                    }
+                }
+                *y.at3_mut(i, j, k) = acc;
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Max pooling, paper Eq. 3 (valid semantics: windows fully inside).
+pub fn maxpool2d(x: &Tensor, pool: (usize, usize), stride: (usize, usize)) -> Result<Tensor> {
+    let (h_in, w_in, c) = (x.dims()[0], x.dims()[1], x.dims()[2]);
+    if pool.0 > h_in || pool.1 > w_in {
+        bail!("pool window {:?} larger than input [{h_in},{w_in}]", pool);
+    }
+    let h_out = (h_in - pool.0) / stride.0 + 1;
+    let w_out = (w_in - pool.1) / stride.1 + 1;
+    let mut y = Tensor::zeros(&[h_out, w_out, c]);
+    for i in 0..h_out {
+        for j in 0..w_out {
+            for k in 0..c {
+                let mut best = f32::NEG_INFINITY;
+                for n in 0..pool.0 {
+                    for m in 0..pool.1 {
+                        best = best.max(x.at3(i * stride.0 + n, j * stride.1 + m, k));
+                    }
+                }
+                *y.at3_mut(i, j, k) = best;
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Average pooling over valid windows.
+pub fn avgpool2d(x: &Tensor, pool: (usize, usize), stride: (usize, usize)) -> Result<Tensor> {
+    let (h_in, w_in, c) = (x.dims()[0], x.dims()[1], x.dims()[2]);
+    if pool.0 > h_in || pool.1 > w_in {
+        bail!("pool window {:?} larger than input [{h_in},{w_in}]", pool);
+    }
+    let h_out = (h_in - pool.0) / stride.0 + 1;
+    let w_out = (w_in - pool.1) / stride.1 + 1;
+    let inv = 1.0 / (pool.0 * pool.1) as f32;
+    let mut y = Tensor::zeros(&[h_out, w_out, c]);
+    for i in 0..h_out {
+        for j in 0..w_out {
+            for k in 0..c {
+                let mut acc = 0.0;
+                for n in 0..pool.0 {
+                    for m in 0..pool.1 {
+                        acc += x.at3(i * stride.0 + n, j * stride.1 + m, k);
+                    }
+                }
+                *y.at3_mut(i, j, k) = acc * inv;
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Depthwise convolution (multiplier 1): one filter per input channel.
+///
+/// * `x` — input `[h_in, w_in, c]`
+/// * `w` — weights `[h_k, w_k, c]`
+/// * `b` — bias `[c]`
+pub fn depthwise_conv2d(x: &Tensor, w: &Tensor, b: &Tensor, stride: (usize, usize), padding: Padding) -> Result<Tensor> {
+    let (h_in, w_in, c) = (x.dims()[0], x.dims()[1], x.dims()[2]);
+    let wd = w.dims();
+    let (h_k, w_k) = (wd[0], wd[1]);
+    if wd[2] != c {
+        bail!("depthwise channel mismatch: input {c}, weights {}", wd[2]);
+    }
+    let (h_out, p_h) = padding.resolve(h_in, h_k, stride.0)?;
+    let (w_out, p_w) = padding.resolve(w_in, w_k, stride.1)?;
+    let mut y = Tensor::zeros(&[h_out, w_out, c]);
+    for i in 0..h_out {
+        for j in 0..w_out {
+            for k in 0..c {
+                let mut acc = b.data()[k];
+                for n in 0..h_k {
+                    for m in 0..w_k {
+                        let ii = (i * stride.0 + n) as isize - p_h as isize;
+                        let jj = (j * stride.1 + m) as isize - p_w as isize;
+                        if ii < 0 || jj < 0 || ii >= h_in as isize || jj >= w_in as isize {
+                            continue;
+                        }
+                        acc += w.data()[(n * w_k + m) * c + k] * x.at3(ii as usize, jj as usize, k);
+                    }
+                }
+                *y.at3_mut(i, j, k) = acc;
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// ReLU, paper Eq. 4.
+pub fn relu(x: &Tensor) -> Tensor {
+    let mut y = x.clone();
+    for v in y.data_mut() {
+        *v = v.max(0.0);
+    }
+    y
+}
+
+/// Leaky ReLU, paper Eq. 5.
+pub fn leaky_relu(x: &Tensor, alpha: f32) -> Tensor {
+    let mut y = x.clone();
+    for v in y.data_mut() {
+        if *v <= 0.0 {
+            *v *= alpha;
+        }
+    }
+    y
+}
+
+/// Numerically stable softmax over the *entire* tensor (the paper's
+/// classifier heads end in a 1×1×2 map, so "channel" softmax and "flat"
+/// softmax coincide; for larger maps this is the flattened-logits variant
+/// the generated C also implements).
+pub fn softmax(x: &Tensor) -> Tensor {
+    let mut y = x.clone();
+    let max = y.data().iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in y.data_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in y.data_mut() {
+        *v /= sum;
+    }
+    y
+}
+
+/// Batch normalization at inference, paper Eq. 6 with learned affine:
+/// `y = gamma * (x - mean) / sqrt(var + eps) + beta`, per channel.
+pub fn batchnorm(x: &Tensor, gamma: &Tensor, beta: &Tensor, mean: &Tensor, variance: &Tensor, eps: f32) -> Result<Tensor> {
+    let c = x.dims()[x.dims().len() - 1];
+    if gamma.numel() != c {
+        bail!("batchnorm expects {c} channels, gamma has {}", gamma.numel());
+    }
+    let mut y = x.clone();
+    // Precompute per-channel scale/shift (this is also what fold_bn bakes
+    // into conv weights).
+    let scales: Vec<f32> = (0..c)
+        .map(|k| gamma.data()[k] / (variance.data()[k] + eps).sqrt())
+        .collect();
+    let shifts: Vec<f32> = (0..c).map(|k| beta.data()[k] - mean.data()[k] * scales[k]).collect();
+    for (idx, v) in y.data_mut().iter_mut().enumerate() {
+        let k = idx % c;
+        *v = *v * scales[k] + shifts[k];
+    }
+    Ok(y)
+}
+
+/// Dense layer: `y = W^T x + b`, weights `[in, out]`.
+pub fn dense(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let n_in = x.numel();
+    let wd = w.dims();
+    if wd[0] != n_in {
+        bail!("dense in mismatch: input {n_in}, weights {}", wd[0]);
+    }
+    let n_out = wd[1];
+    let mut y = Tensor::zeros(&[n_out]);
+    for j in 0..n_out {
+        let mut acc = b.data()[j];
+        for i in 0..n_in {
+            acc += x.data()[i] * w.data()[i * n_out + j];
+        }
+        y.data_mut()[j] = acc;
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel with weight 1 reproduces the input.
+        let x = Tensor::from_vec(&[2, 2, 1], vec![1., 2., 3., 4.]).unwrap();
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![1.0]).unwrap();
+        let b = Tensor::zeros(&[1]);
+        let y = conv2d(&x, &w, &b, (1, 1), Padding::Valid).unwrap();
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn conv_known_values_same_padding() {
+        // 3x3 input, 3x3 all-ones kernel, same padding: center output is the
+        // sum of all 9; corner output sums the 4 in-bounds values.
+        let x = Tensor::from_vec(&[3, 3, 1], (1..=9).map(|v| v as f32).collect()).unwrap();
+        let w = Tensor::from_vec(&[3, 3, 1, 1], vec![1.0; 9]).unwrap();
+        let b = Tensor::zeros(&[1]);
+        let y = conv2d(&x, &w, &b, (1, 1), Padding::Same).unwrap();
+        assert_eq!(y.at3(1, 1, 0), 45.0);
+        assert_eq!(y.at3(0, 0, 0), 1. + 2. + 4. + 5.);
+        assert_eq!(y.at3(2, 2, 0), 5. + 6. + 8. + 9.);
+    }
+
+    #[test]
+    fn conv_stride_two() {
+        let x = Tensor::from_vec(&[4, 4, 1], (0..16).map(|v| v as f32).collect()).unwrap();
+        let w = Tensor::from_vec(&[1, 1, 1, 1], vec![2.0]).unwrap();
+        let b = Tensor::from_vec(&[1], vec![1.0]).unwrap();
+        let y = conv2d(&x, &w, &b, (2, 2), Padding::Valid).unwrap();
+        assert_eq!(y.dims(), &[2, 2, 1]);
+        assert_eq!(y.data(), &[1., 5., 17., 21.]); // 2*x + 1 at (0,0),(0,2),(2,0),(2,2)
+    }
+
+    #[test]
+    fn conv_bias_applied_per_output_channel() {
+        let x = Tensor::from_vec(&[1, 1, 1], vec![0.0]).unwrap();
+        let w = Tensor::zeros(&[1, 1, 1, 3]);
+        let b = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]).unwrap();
+        let y = conv2d(&x, &w, &b, (1, 1), Padding::Valid).unwrap();
+        assert_eq!(y.data(), &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn maxpool_known() {
+        let x = Tensor::from_vec(&[2, 2, 1], vec![1., 5., 3., 2.]).unwrap();
+        let y = maxpool2d(&x, (2, 2), (2, 2)).unwrap();
+        assert_eq!(y.data(), &[5.0]);
+    }
+
+    #[test]
+    fn maxpool_with_negative_values() {
+        let x = Tensor::from_vec(&[2, 2, 1], vec![-1., -5., -3., -2.]).unwrap();
+        let y = maxpool2d(&x, (2, 2), (2, 2)).unwrap();
+        assert_eq!(y.data(), &[-1.0]);
+    }
+
+    #[test]
+    fn maxpool_channels_independent() {
+        let x = Tensor::from_vec(&[2, 2, 2], vec![1., 10., 2., 20., 3., 30., 4., 40.]).unwrap();
+        let y = maxpool2d(&x, (2, 2), (2, 2)).unwrap();
+        assert_eq!(y.data(), &[4.0, 40.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let x = Tensor::from_vec(&[3], vec![1000.0, 1001.0, 1002.0]).unwrap();
+        let y = softmax(&x);
+        let sum: f32 = y.data().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        assert!(y.data().iter().all(|v| v.is_finite()));
+        assert!(y.data()[2] > y.data()[1] && y.data()[1] > y.data()[0]);
+    }
+
+    #[test]
+    fn batchnorm_known_values() {
+        // gamma=2, beta=1, mean=3, var=4, eps=0 → y = 2*(x-3)/2 + 1 = x - 2
+        let x = Tensor::from_vec(&[1, 1, 1], vec![5.0]).unwrap();
+        let y = batchnorm(
+            &x,
+            &Tensor::from_vec(&[1], vec![2.0]).unwrap(),
+            &Tensor::from_vec(&[1], vec![1.0]).unwrap(),
+            &Tensor::from_vec(&[1], vec![3.0]).unwrap(),
+            &Tensor::from_vec(&[1], vec![4.0]).unwrap(),
+            0.0,
+        )
+        .unwrap();
+        assert!((y.data()[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn dense_known() {
+        let x = Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        let w = Tensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]).unwrap(); // [in,out]
+        let b = Tensor::from_vec(&[2], vec![0.5, -0.5]).unwrap();
+        let y = dense(&x, &w, &b).unwrap();
+        // y0 = 1*1 + 2*3 + 0.5 = 7.5 ; y1 = 1*2 + 2*4 - 0.5 = 9.5
+        assert_eq!(y.data(), &[7.5, 9.5]);
+    }
+
+    #[test]
+    fn avgpool_known() {
+        let x = Tensor::from_vec(&[2, 2, 1], vec![1., 5., 3., 3.]).unwrap();
+        let y = avgpool2d(&x, (2, 2), (2, 2)).unwrap();
+        assert_eq!(y.data(), &[3.0]);
+    }
+
+    #[test]
+    fn avgpool_rejects_oversize_window() {
+        let x = Tensor::zeros(&[2, 2, 1]);
+        assert!(avgpool2d(&x, (3, 3), (1, 1)).is_err());
+    }
+
+    #[test]
+    fn depthwise_identity_kernel() {
+        // 1x1 depthwise with weight 1 per channel reproduces the input.
+        let x = Tensor::from_vec(&[2, 2, 2], vec![1., 10., 2., 20., 3., 30., 4., 40.]).unwrap();
+        let w = Tensor::from_vec(&[1, 1, 2], vec![1.0, 1.0]).unwrap();
+        let b = Tensor::zeros(&[2]);
+        let y = depthwise_conv2d(&x, &w, &b, (1, 1), Padding::Valid).unwrap();
+        assert_eq!(y.data(), x.data());
+    }
+
+    #[test]
+    fn depthwise_channels_do_not_mix() {
+        // channel 0 filter zero, channel 1 filter one: channel 0 output is
+        // pure bias, channel 1 passes through.
+        let x = Tensor::from_vec(&[1, 1, 2], vec![7.0, 9.0]).unwrap();
+        let w = Tensor::from_vec(&[1, 1, 2], vec![0.0, 1.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![0.5, 0.0]).unwrap();
+        let y = depthwise_conv2d(&x, &w, &b, (1, 1), Padding::Valid).unwrap();
+        assert_eq!(y.data(), &[0.5, 9.0]);
+    }
+
+    #[test]
+    fn depthwise_same_padding() {
+        // 3x3 ones kernel on 3x3 ones input, same pad: corner=4, center=9
+        let x = Tensor::from_vec(&[3, 3, 1], vec![1.0; 9]).unwrap();
+        let w = Tensor::from_vec(&[3, 3, 1], vec![1.0; 9]).unwrap();
+        let b = Tensor::zeros(&[1]);
+        let y = depthwise_conv2d(&x, &w, &b, (1, 1), Padding::Same).unwrap();
+        assert_eq!(y.at3(0, 0, 0), 4.0);
+        assert_eq!(y.at3(1, 1, 0), 9.0);
+    }
+
+    #[test]
+    fn leaky_relu_matches_eq5() {
+        let x = Tensor::from_vec(&[2], vec![-10.0, 10.0]).unwrap();
+        let y = leaky_relu(&x, 0.1);
+        assert_eq!(y.data(), &[-1.0, 10.0]);
+    }
+}

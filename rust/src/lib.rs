@@ -1,0 +1,36 @@
+//! # nncg — a C code generator for fast CNN inference on resource-constrained systems
+//!
+//! Reproduction of Urbann et al., *"A C Code Generator for Fast Inference and
+//! Simple Deployment of Convolutional Neural Networks on Resource Constrained
+//! Systems"* (2020), as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the NNCG compiler itself ([`codegen`]), the
+//!   cc/dlopen execution engine ([`cc`]), a naive runtime interpreter used as
+//!   the framework-overhead baseline ([`interp`]), the XLA/PJRT runtime that
+//!   executes the JAX-lowered artifacts ([`runtime`]), the platform cost-model
+//!   simulator for the paper's Atom/Nao/GPU rows ([`platform`]), and the
+//!   serving coordinator ([`coordinator`]) with the paper's robotics vision
+//!   pipelines ([`vision`]).
+//! * **Layer 2 (`python/compile/model.py`)** — the paper's CNNs in JAX, lowered
+//!   once to HLO text (`artifacts/*.hlo.txt`), never on the request path.
+//! * **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for the compute
+//!   hot-spots, verified against a pure-jnp oracle.
+
+pub mod bench_harness;
+pub mod cc;
+pub mod cli;
+pub mod codegen;
+pub mod coordinator;
+pub mod experiments;
+pub mod graph;
+pub mod interp;
+pub mod model;
+pub mod passes;
+pub mod platform;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+pub mod vision;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,13 @@
+//! `nncg` — leader binary: CLI over the code generator, engines, benches
+//! and the serving coordinator.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match nncg::cli::run(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,391 @@
+//! Model (de)serialization: architecture JSON + `.nncgw` binary weights.
+//!
+//! The Python trainer (`python/compile/export.py`) writes both files; the
+//! Rust side loads them into a [`Model`]. Both directions are implemented in
+//! Rust too so tests can round-trip without Python.
+
+pub mod json;
+mod weights;
+
+pub use weights::{read_weights, write_weights, WeightRecord};
+
+use crate::graph::{Activation, Layer, Model, Padding};
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use json::Value;
+use std::path::Path;
+
+/// Load a model from `<stem>.json` (architecture) + `<stem>.nncgw` (weights).
+pub fn load(stem: &Path) -> Result<Model> {
+    let arch_path = stem.with_extension("json");
+    let weights_path = stem.with_extension("nncgw");
+    let arch = std::fs::read_to_string(&arch_path)
+        .with_context(|| format!("reading {}", arch_path.display()))?;
+    let mut model = model_from_json(&arch)?;
+    let records = read_weights(&weights_path)?;
+    install_weights(&mut model, &records)?;
+    model.validate()?;
+    Ok(model)
+}
+
+/// Save a model as `<stem>.json` + `<stem>.nncgw`.
+pub fn save(model: &Model, stem: &Path) -> Result<()> {
+    model.validate()?;
+    if let Some(dir) = stem.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(stem.with_extension("json"), model_to_json(model))?;
+    write_weights(&stem.with_extension("nncgw"), &collect_weights(model))?;
+    Ok(())
+}
+
+/// Parse an architecture JSON document into a model with placeholder weights.
+pub fn model_from_json(text: &str) -> Result<Model> {
+    let v = json::parse(text)?;
+    let name = v.get("name")?.as_str()?.to_string();
+    let input = v.get("input")?.as_usize_vec()?;
+    if input.len() != 3 {
+        bail!("input must be [h, w, c], got {input:?}");
+    }
+    let mut model = Model::new(&name, &input);
+    for (idx, lv) in v.get("layers")?.as_array()?.iter().enumerate() {
+        let layer = layer_from_json(lv).with_context(|| format!("layer {idx}"))?;
+        model.layers.push(layer);
+    }
+    model.resolve_placeholders()?;
+    Ok(model)
+}
+
+fn activation_from_json(v: &Value) -> Result<Activation> {
+    Ok(match v {
+        Value::Str(s) => match s.as_str() {
+            "none" => Activation::None,
+            "relu" => Activation::Relu,
+            "softmax" => Activation::Softmax,
+            other => bail!("unknown activation {other:?}"),
+        },
+        Value::Object(_) => {
+            let alpha = v.get("leaky_relu")?.as_f64()? as f32;
+            Activation::LeakyRelu(alpha)
+        }
+        _ => bail!("bad activation {v:?}"),
+    })
+}
+
+fn activation_to_json(a: &Activation) -> Value {
+    match a {
+        Activation::None => Value::Str("none".into()),
+        Activation::Relu => Value::Str("relu".into()),
+        Activation::Softmax => Value::Str("softmax".into()),
+        Activation::LeakyRelu(alpha) => {
+            Value::Object(vec![("leaky_relu".into(), Value::Num(*alpha as f64))])
+        }
+    }
+}
+
+fn layer_from_json(v: &Value) -> Result<Layer> {
+    let kind = v.get("kind")?.as_str()?;
+    Ok(match kind {
+        "conv2d" => {
+            let c_out = v.get("c_out")?.as_usize()?;
+            let k = v.get("kernel")?.as_usize_vec()?;
+            if k.len() != 2 {
+                bail!("kernel must be [h_k, w_k]");
+            }
+            let stride = match v.get_opt("stride") {
+                Some(s) => {
+                    let s = s.as_usize_vec()?;
+                    (s[0], s[1])
+                }
+                None => (1, 1),
+            };
+            let padding = match v.get("padding")?.as_str()? {
+                "same" => Padding::Same,
+                "valid" => Padding::Valid,
+                p => bail!("unknown padding {p:?}"),
+            };
+            let activation = match v.get_opt("activation") {
+                Some(a) => activation_from_json(a)?,
+                None => Activation::None,
+            };
+            Layer::conv2d(c_out, k[0], k[1], stride, padding, activation)
+        }
+        "avgpool" => {
+            let pl = v.get("pool")?.as_usize_vec()?;
+            let stride = match v.get_opt("stride") {
+                Some(s) => {
+                    let s = s.as_usize_vec()?;
+                    (s[0], s[1])
+                }
+                None => (pl[0], pl[1]),
+            };
+            Layer::AvgPool2D { pool: (pl[0], pl[1]), stride }
+        }
+        "depthwise" => {
+            let k = v.get("kernel")?.as_usize_vec()?;
+            let stride = match v.get_opt("stride") {
+                Some(s) => {
+                    let s = s.as_usize_vec()?;
+                    (s[0], s[1])
+                }
+                None => (1, 1),
+            };
+            let padding = match v.get("padding")?.as_str()? {
+                "same" => Padding::Same,
+                "valid" => Padding::Valid,
+                p => bail!("unknown padding {p:?}"),
+            };
+            let activation = match v.get_opt("activation") {
+                Some(a) => activation_from_json(a)?,
+                None => Activation::None,
+            };
+            Layer::depthwise(k[0], k[1], stride, padding, activation)
+        }
+        "maxpool" => {
+            let p = v.get("pool")?.as_usize_vec()?;
+            let stride = match v.get_opt("stride") {
+                Some(s) => {
+                    let s = s.as_usize_vec()?;
+                    (s[0], s[1])
+                }
+                None => (p[0], p[1]),
+            };
+            Layer::MaxPool2D { pool: (p[0], p[1]), stride }
+        }
+        "relu" => Layer::relu(),
+        "leaky_relu" => Layer::leaky_relu(v.get("alpha")?.as_f64()? as f32),
+        "softmax" => Layer::softmax(),
+        "batchnorm" => {
+            let mut l = Layer::batchnorm(v.get("channels")?.as_usize()?);
+            if let Some(eps) = v.get_opt("epsilon") {
+                if let Layer::BatchNorm { epsilon, .. } = &mut l {
+                    *epsilon = eps.as_f64()? as f32;
+                }
+            }
+            l
+        }
+        "dropout" => Layer::Dropout { rate: v.get("rate")?.as_f64()? as f32 },
+        "flatten" => Layer::Flatten,
+        "dense" => {
+            let out = v.get("out")?.as_usize()?;
+            let activation = match v.get_opt("activation") {
+                Some(a) => activation_from_json(a)?,
+                None => Activation::None,
+            };
+            Layer::dense(out, activation)
+        }
+        other => bail!("unknown layer kind {other:?}"),
+    })
+}
+
+/// Serialize a model's architecture (no weights) to JSON text.
+pub fn model_to_json(model: &Model) -> String {
+    let layers: Vec<Value> = model.layers.iter().map(layer_to_json).collect();
+    Value::Object(vec![
+        ("name".into(), Value::Str(model.name.clone())),
+        (
+            "input".into(),
+            Value::Array(model.input.dims().iter().map(|&d| Value::Num(d as f64)).collect()),
+        ),
+        ("layers".into(), Value::Array(layers)),
+    ])
+    .to_json()
+}
+
+fn usize_pair(a: usize, b: usize) -> Value {
+    Value::Array(vec![Value::Num(a as f64), Value::Num(b as f64)])
+}
+
+fn layer_to_json(l: &Layer) -> Value {
+    match l {
+        Layer::Conv2D { weights, stride, padding, activation, .. } => {
+            let d = weights.dims();
+            Value::Object(vec![
+                ("kind".into(), Value::Str("conv2d".into())),
+                ("c_out".into(), Value::Num(d[3] as f64)),
+                ("kernel".into(), usize_pair(d[0], d[1])),
+                ("stride".into(), usize_pair(stride.0, stride.1)),
+                ("padding".into(), Value::Str(padding.name().into())),
+                ("activation".into(), activation_to_json(activation)),
+            ])
+        }
+        Layer::MaxPool2D { pool, stride } => Value::Object(vec![
+            ("kind".into(), Value::Str("maxpool".into())),
+            ("pool".into(), usize_pair(pool.0, pool.1)),
+            ("stride".into(), usize_pair(stride.0, stride.1)),
+        ]),
+        Layer::AvgPool2D { pool, stride } => Value::Object(vec![
+            ("kind".into(), Value::Str("avgpool".into())),
+            ("pool".into(), usize_pair(pool.0, pool.1)),
+            ("stride".into(), usize_pair(stride.0, stride.1)),
+        ]),
+        Layer::DepthwiseConv2D { weights, stride, padding, activation, .. } => {
+            let d = weights.dims();
+            Value::Object(vec![
+                ("kind".into(), Value::Str("depthwise".into())),
+                ("kernel".into(), usize_pair(d[0], d[1])),
+                ("stride".into(), usize_pair(stride.0, stride.1)),
+                ("padding".into(), Value::Str(padding.name().into())),
+                ("activation".into(), activation_to_json(activation)),
+            ])
+        }
+        Layer::Activation(Activation::Relu) => {
+            Value::Object(vec![("kind".into(), Value::Str("relu".into()))])
+        }
+        Layer::Activation(Activation::LeakyRelu(a)) => Value::Object(vec![
+            ("kind".into(), Value::Str("leaky_relu".into())),
+            ("alpha".into(), Value::Num(*a as f64)),
+        ]),
+        Layer::Activation(Activation::Softmax) => {
+            Value::Object(vec![("kind".into(), Value::Str("softmax".into()))])
+        }
+        Layer::Activation(Activation::None) => {
+            Value::Object(vec![("kind".into(), Value::Str("relu".into()))]) // unreachable in practice
+        }
+        Layer::BatchNorm { gamma, epsilon, .. } => Value::Object(vec![
+            ("kind".into(), Value::Str("batchnorm".into())),
+            ("channels".into(), Value::Num(gamma.numel() as f64)),
+            ("epsilon".into(), Value::Num(*epsilon as f64)),
+        ]),
+        Layer::Dropout { rate } => Value::Object(vec![
+            ("kind".into(), Value::Str("dropout".into())),
+            ("rate".into(), Value::Num(*rate as f64)),
+        ]),
+        Layer::Flatten => Value::Object(vec![("kind".into(), Value::Str("flatten".into()))]),
+        Layer::Dense { weights, activation, .. } => Value::Object(vec![
+            ("kind".into(), Value::Str("dense".into())),
+            ("out".into(), Value::Num(weights.dims()[1] as f64)),
+            ("activation".into(), activation_to_json(activation)),
+        ]),
+    }
+}
+
+/// Collect all weight tensors as named records (`layer{i}.{field}`).
+pub fn collect_weights(model: &Model) -> Vec<WeightRecord> {
+    let mut records = Vec::new();
+    for (i, l) in model.layers.iter().enumerate() {
+        let mut push = |field: &str, t: &Tensor| {
+            records.push(WeightRecord {
+                name: format!("layer{i}.{field}"),
+                dims: t.dims().to_vec(),
+                data: t.data().to_vec(),
+            });
+        };
+        match l {
+            Layer::Conv2D { weights, bias, .. } | Layer::DepthwiseConv2D { weights, bias, .. } => {
+                push("weights", weights);
+                push("bias", bias);
+            }
+            Layer::BatchNorm { gamma, beta, mean, variance, .. } => {
+                push("gamma", gamma);
+                push("beta", beta);
+                push("mean", mean);
+                push("variance", variance);
+            }
+            Layer::Dense { weights, bias, .. } => {
+                push("weights", weights);
+                push("bias", bias);
+            }
+            _ => {}
+        }
+    }
+    records
+}
+
+/// Install named weight records into a model (shapes must match).
+pub fn install_weights(model: &mut Model, records: &[WeightRecord]) -> Result<()> {
+    model.resolve_placeholders()?;
+    let find = |name: &str| -> Result<&WeightRecord> {
+        records
+            .iter()
+            .find(|r| r.name == name)
+            .ok_or_else(|| anyhow::anyhow!("missing weight record {name:?}"))
+    };
+    for (i, l) in model.layers.iter_mut().enumerate() {
+        let set = |field: &str, t: &mut Tensor| -> Result<()> {
+            let r = find(&format!("layer{i}.{field}"))?;
+            if r.dims != t.dims() {
+                bail!("layer{i}.{field}: shape {:?} != expected {:?}", r.dims, t.dims());
+            }
+            *t = Tensor::from_vec(&r.dims, r.data.clone())?;
+            Ok(())
+        };
+        match l {
+            Layer::Conv2D { weights, bias, .. } | Layer::DepthwiseConv2D { weights, bias, .. } => {
+                set("weights", weights)?;
+                set("bias", bias)?;
+            }
+            Layer::BatchNorm { gamma, beta, mean, variance, .. } => {
+                set("gamma", gamma)?;
+                set("beta", beta)?;
+                set("mean", mean)?;
+                set("variance", variance)?;
+            }
+            Layer::Dense { weights, bias, .. } => {
+                set("weights", weights)?;
+                set("bias", bias)?;
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::interp;
+    use crate::util::XorShift64;
+
+    #[test]
+    fn json_round_trip_all_paper_models() {
+        for name in zoo::PAPER_MODELS {
+            let m = zoo::by_name(name).unwrap().with_random_weights(1);
+            let text = model_to_json(&m);
+            let m2 = model_from_json(&text).unwrap().with_random_weights(1);
+            assert_eq!(m2.name, m.name);
+            assert_eq!(m2.layers.len(), m.layers.len(), "{name}");
+            assert_eq!(m2.output_shape().unwrap(), m.output_shape().unwrap(), "{name}");
+        }
+    }
+
+    #[test]
+    fn save_load_round_trip_preserves_numerics() {
+        let dir = std::env::temp_dir().join("nncg-test-model-rt");
+        let m = zoo::ball_classifier().with_random_weights(99);
+        save(&m, &dir.join("ball")).unwrap();
+        let m2 = load(&dir.join("ball")).unwrap();
+
+        let mut rng = XorShift64::new(5);
+        let x = crate::tensor::Tensor::rand(&[16, 16, 1], 0.0, 1.0, &mut rng);
+        let y0 = interp::run(&m, &x).unwrap();
+        let y1 = interp::run(&m2, &x).unwrap();
+        assert_eq!(y0, y1);
+    }
+
+    #[test]
+    fn install_rejects_shape_mismatch() {
+        let mut m = zoo::tiny_test_net();
+        let mut records = collect_weights(&zoo::tiny_test_net().with_random_weights(3));
+        records[0].dims = vec![1, 1, 1, 4];
+        records[0].data = vec![0.0; 4];
+        assert!(install_weights(&mut m, &records).is_err());
+    }
+
+    #[test]
+    fn install_rejects_missing_record() {
+        let mut m = zoo::tiny_test_net();
+        let records = vec![];
+        assert!(install_weights(&mut m, &records).is_err());
+    }
+
+    #[test]
+    fn arch_json_errors_are_descriptive() {
+        assert!(model_from_json("{}").is_err());
+        assert!(model_from_json(r#"{"name":"x","input":[1,2],"layers":[]}"#).is_err());
+        let bad_layer = r#"{"name":"x","input":[4,4,1],"layers":[{"kind":"warp"}]}"#;
+        let err = model_from_json(bad_layer).unwrap_err().to_string();
+        assert!(err.contains("layer 0"), "{err}");
+    }
+}

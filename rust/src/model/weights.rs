@@ -1,0 +1,167 @@
+//! `.nncgw` — the weights interchange format between the Python trainer and
+//! the Rust side.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! magic   8 bytes  b"NNCGW1\0\0"
+//! count   u32      number of records
+//! per record:
+//!   name_len u32, name bytes (utf-8)
+//!   rank     u32, dims u32 × rank
+//!   data     f32 × prod(dims)
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"NNCGW1\0\0";
+
+/// One named tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WeightRecord {
+    pub name: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+/// Write records to a `.nncgw` file.
+pub fn write_weights(path: &Path, records: &[WeightRecord]) -> Result<()> {
+    let mut buf: Vec<u8> = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(records.len() as u32).to_le_bytes());
+    for r in records {
+        let numel: usize = r.dims.iter().product();
+        if numel != r.data.len() {
+            bail!("record {:?}: dims {:?} want {numel} values, have {}", r.name, r.dims, r.data.len());
+        }
+        buf.extend_from_slice(&(r.name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(r.name.as_bytes());
+        buf.extend_from_slice(&(r.dims.len() as u32).to_le_bytes());
+        for &d in &r.dims {
+            buf.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &v in &r.data {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    let mut f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(&buf)?;
+    Ok(())
+}
+
+/// Read records from a `.nncgw` file.
+pub fn read_weights(path: &Path) -> Result<Vec<WeightRecord>> {
+    let mut bytes = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut bytes)?;
+    parse_weights(&bytes)
+}
+
+/// Parse the binary format from a byte slice.
+pub fn parse_weights(bytes: &[u8]) -> Result<Vec<WeightRecord>> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            bail!("truncated nncgw file at byte {}", *pos);
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let take_u32 = |pos: &mut usize| -> Result<u32> {
+        Ok(u32::from_le_bytes(take(pos, 4)?.try_into().unwrap()))
+    };
+
+    if take(&mut pos, 8)? != MAGIC {
+        bail!("bad magic — not a .nncgw file");
+    }
+    let count = take_u32(&mut pos)? as usize;
+    if count > 10_000 {
+        bail!("implausible record count {count}");
+    }
+    let mut records = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = take_u32(&mut pos)? as usize;
+        if name_len > 4096 {
+            bail!("implausible name length {name_len}");
+        }
+        let name = std::str::from_utf8(take(&mut pos, name_len)?)
+            .context("weight name is not utf-8")?
+            .to_string();
+        let rank = take_u32(&mut pos)? as usize;
+        if rank > 8 {
+            bail!("implausible rank {rank}");
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(take_u32(&mut pos)? as usize);
+        }
+        let numel: usize = dims.iter().product();
+        if numel > 100_000_000 {
+            bail!("implausible tensor size {numel}");
+        }
+        let raw = take(&mut pos, numel * 4)?;
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        records.push(WeightRecord { name, dims, data });
+    }
+    if pos != bytes.len() {
+        bail!("{} trailing bytes after last record", bytes.len() - pos);
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<WeightRecord> {
+        vec![
+            WeightRecord { name: "layer0.weights".into(), dims: vec![2, 2, 1, 2], data: (0..8).map(|v| v as f32 * 0.5).collect() },
+            WeightRecord { name: "layer0.bias".into(), dims: vec![2], data: vec![1.0, -1.0] },
+        ]
+    }
+
+    #[test]
+    fn round_trip() {
+        let path = std::env::temp_dir().join("nncg-test-weights.nncgw");
+        write_weights(&path, &sample()).unwrap();
+        let back = read_weights(&path).unwrap();
+        assert_eq!(back, sample());
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(parse_weights(b"NOTMAGIC\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_boundary() {
+        let path = std::env::temp_dir().join("nncg-test-trunc.nncgw");
+        write_weights(&path, &sample()).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Any strict prefix must fail (either truncated or trailing-byte check).
+        for cut in [7, 11, 13, 20, full.len() - 1] {
+            assert!(parse_weights(&full[..cut]).is_err(), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_dims_data_mismatch_on_write() {
+        let bad = vec![WeightRecord { name: "x".into(), dims: vec![3], data: vec![1.0] }];
+        let path = std::env::temp_dir().join("nncg-test-bad.nncgw");
+        assert!(write_weights(&path, &bad).is_err());
+    }
+
+    #[test]
+    fn empty_file_of_records_is_valid() {
+        let path = std::env::temp_dir().join("nncg-test-empty.nncgw");
+        write_weights(&path, &[]).unwrap();
+        assert_eq!(read_weights(&path).unwrap(), vec![]);
+    }
+}

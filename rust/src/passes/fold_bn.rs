@@ -1,0 +1,127 @@
+//! BatchNorm folding (paper §II-B.4).
+//!
+//! For `bn(conv(x))` with per-channel scale `s_k = gamma_k / sqrt(var_k+eps)`
+//! and shift `t_k = beta_k - mean_k * s_k`:
+//!
+//! ```text
+//! bn(conv(x))_k = s_k * (sum_i x_i w_ik + b_k) + t_k
+//!               = sum_i x_i (s_k w_ik) + (s_k b_k + t_k)
+//! ```
+//!
+//! i.e. scale every weight of output channel `k` by `s_k` and replace the
+//! bias. This removes the BatchNorm layer entirely from the generated code —
+//! the strongest form of the paper's "constants" principle.
+
+use crate::graph::{Layer, Model};
+use anyhow::{bail, Result};
+
+/// Fold every BatchNorm that directly follows a Conv2D into that conv.
+/// BatchNorm in any other position (e.g. model starts with one) is an error:
+/// the paper's nets never do this, and the C emitter does not implement a
+/// standalone BN (by design — it should always be folded).
+pub fn fold_batchnorm(model: &mut Model) -> Result<()> {
+    let mut out: Vec<Layer> = Vec::with_capacity(model.layers.len());
+    for layer in model.layers.drain(..) {
+        match layer {
+            Layer::BatchNorm { gamma, beta, mean, variance, epsilon } => {
+                let prev = out.last_mut();
+                match prev {
+                    Some(Layer::Conv2D { weights, bias, .. }) => {
+                        let c_out = weights.dims()[3];
+                        if gamma.numel() != c_out {
+                            bail!("BN channels {} != conv c_out {}", gamma.numel(), c_out);
+                        }
+                        let scale: Vec<f32> = (0..c_out)
+                            .map(|k| gamma.data()[k] / (variance.data()[k] + epsilon).sqrt())
+                            .collect();
+                        // w[n,m,o,k] *= s_k  — k is innermost in HWIO layout.
+                        for (idx, w) in weights.data_mut().iter_mut().enumerate() {
+                            *w *= scale[idx % c_out];
+                        }
+                        for k in 0..c_out {
+                            let b = bias.data()[k];
+                            bias.data_mut()[k] = scale[k] * b + (beta.data()[k] - mean.data()[k] * scale[k]);
+                        }
+                    }
+                    Some(Layer::DepthwiseConv2D { weights, bias, .. }) => {
+                        // depthwise weights [hk, wk, c]: c is minor, same
+                        // scale-per-output-channel folding as dense conv.
+                        let c = weights.dims()[2];
+                        if gamma.numel() != c {
+                            bail!("BN channels {} != depthwise c {}", gamma.numel(), c);
+                        }
+                        let scale: Vec<f32> = (0..c)
+                            .map(|k| gamma.data()[k] / (variance.data()[k] + epsilon).sqrt())
+                            .collect();
+                        for (idx, w) in weights.data_mut().iter_mut().enumerate() {
+                            *w *= scale[idx % c];
+                        }
+                        for k in 0..c {
+                            let b = bias.data()[k];
+                            bias.data_mut()[k] = scale[k] * b + (beta.data()[k] - mean.data()[k] * scale[k]);
+                        }
+                    }
+                    _ => bail!("BatchNorm not preceded by a convolution — cannot fold"),
+                }
+            }
+            other => out.push(other),
+        }
+    }
+    model.layers = out;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Activation, Padding};
+    use crate::interp;
+    use crate::tensor::Tensor;
+    use crate::util::XorShift64;
+
+    fn conv_bn_model() -> Model {
+        Model::new("cb", &[6, 6, 2])
+            .push(Layer::conv2d(4, 3, 3, (1, 1), Padding::Same, Activation::None))
+            .push(Layer::batchnorm(4))
+            .with_random_weights(77)
+    }
+
+    #[test]
+    fn fold_matches_unfolded_numerics() {
+        let m = conv_bn_model();
+        let mut folded = m.clone();
+        fold_batchnorm(&mut folded).unwrap();
+        assert_eq!(folded.layers.len(), 1);
+
+        let mut rng = XorShift64::new(3);
+        for _ in 0..5 {
+            let x = Tensor::rand(&[6, 6, 2], -2.0, 2.0, &mut rng);
+            let y0 = interp::run(&m, &x).unwrap();
+            let y1 = interp::run(&folded, &x).unwrap();
+            assert!(y0.max_abs_diff(&y1).unwrap() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn orphan_bn_is_an_error() {
+        let mut m = Model::new("orphan", &[4, 4, 3]).push(Layer::batchnorm(3));
+        assert!(fold_batchnorm(&mut m).is_err());
+    }
+
+    #[test]
+    fn bn_after_pool_is_an_error() {
+        let mut m = Model::new("bp", &[4, 4, 3])
+            .push(Layer::maxpool(2, 2))
+            .push(Layer::batchnorm(3));
+        assert!(fold_batchnorm(&mut m).is_err());
+    }
+
+    #[test]
+    fn channel_mismatch_is_an_error() {
+        let mut m = Model::new("cm", &[6, 6, 2])
+            .push(Layer::conv2d(4, 3, 3, (1, 1), Padding::Same, Activation::None))
+            .push(Layer::batchnorm(5))
+            .with_random_weights(7);
+        assert!(fold_batchnorm(&mut m).is_err());
+    }
+}

@@ -1,0 +1,88 @@
+//! Fuse standalone activation layers into the preceding Conv2D/Dense.
+//!
+//! The paper's generated C applies (leaky) ReLU directly on the accumulator
+//! of the convolution that produced the value — one pass over memory instead
+//! of two. Softmax also fuses (it runs once on the final 1×1×C map).
+//! Activations that cannot fuse (e.g. ReLU after max-pool) are kept
+//! standalone; the C emitter handles both forms.
+
+use crate::graph::{Activation, Layer, Model};
+
+/// Fuse activation layers into a directly preceding conv/dense that has no
+/// activation yet. Anything else stays in place.
+pub fn fuse_activations(model: &mut Model) {
+    let mut out: Vec<Layer> = Vec::with_capacity(model.layers.len());
+    for layer in model.layers.drain(..) {
+        if let Layer::Activation(act) = layer {
+            match out.last_mut() {
+                Some(Layer::Conv2D { activation, .. })
+                | Some(Layer::DepthwiseConv2D { activation, .. })
+                | Some(Layer::Dense { activation, .. })
+                    if *activation == Activation::None =>
+                {
+                    *activation = act;
+                    continue;
+                }
+                _ => {}
+            }
+            out.push(Layer::Activation(act));
+        } else {
+            out.push(layer);
+        }
+    }
+    model.layers = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{zoo, Padding};
+    use crate::interp;
+    use crate::tensor::Tensor;
+    use crate::util::XorShift64;
+
+    #[test]
+    fn fuses_relu_into_conv() {
+        let mut m = zoo::ball_classifier().with_random_weights(2);
+        let before = m.layers.len();
+        fuse_activations(&mut m);
+        assert!(m.layers.len() < before);
+        match &m.layers[0] {
+            Layer::Conv2D { activation, .. } => assert_eq!(*activation, Activation::Relu),
+            other => panic!("expected conv, got {}", other.kind_name()),
+        }
+    }
+
+    #[test]
+    fn activation_after_pool_stays_standalone() {
+        let mut m = Model::new("ap", &[4, 4, 2])
+            .push(Layer::maxpool(2, 2))
+            .push(Layer::relu());
+        fuse_activations(&mut m);
+        assert_eq!(m.layers.len(), 2);
+        assert!(matches!(m.layers[1], Layer::Activation(Activation::Relu)));
+    }
+
+    #[test]
+    fn does_not_overwrite_existing_fused_activation() {
+        let mut m = Model::new("double", &[4, 4, 1])
+            .push(Layer::conv2d(2, 1, 1, (1, 1), Padding::Valid, Activation::Relu))
+            .push(Layer::softmax())
+            .with_random_weights(4);
+        fuse_activations(&mut m);
+        // softmax cannot fuse into a conv that already has ReLU
+        assert_eq!(m.layers.len(), 2);
+    }
+
+    #[test]
+    fn fusion_preserves_semantics() {
+        let m = zoo::pedestrian_classifier().with_random_weights(42);
+        let mut fused = m.clone();
+        fuse_activations(&mut fused);
+        let mut rng = XorShift64::new(9);
+        let x = Tensor::rand(m.input.dims(), 0.0, 1.0, &mut rng);
+        let y0 = interp::run(&m, &x).unwrap();
+        let y1 = interp::run(&fused, &x).unwrap();
+        assert!(y0.max_abs_diff(&y1).unwrap() < 1e-5);
+    }
+}

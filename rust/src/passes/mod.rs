@@ -1,0 +1,91 @@
+//! Graph optimization passes run before code generation.
+//!
+//! The paper folds BatchNorm into the preceding convolution (§II-B.4, the
+//! `bn(conv(x))` derivation) and fuses activations into the conv loop so the
+//! generated C applies them on the accumulator. Dropout is an inference
+//! no-op. The pass pipeline here reproduces that, with a validation pass
+//! asserting semantic equivalence on random inputs (used by tests).
+
+mod fold_bn;
+mod fuse_activation;
+
+pub use fold_bn::fold_batchnorm;
+pub use fuse_activation::fuse_activations;
+
+use crate::graph::{Layer, Model};
+use anyhow::Result;
+
+/// Remove inference no-ops (Dropout).
+pub fn elide_dropout(model: &mut Model) {
+    model.layers.retain(|l| !matches!(l, Layer::Dropout { .. }));
+}
+
+/// The standard NNCG pipeline: BN fold → dropout elision → activation
+/// fusion. Returns the optimized model (input is consumed).
+pub fn optimize(mut model: Model) -> Result<Model> {
+    model.resolve_placeholders()?;
+    model.validate()?;
+    fold_batchnorm(&mut model)?;
+    elide_dropout(&mut model);
+    fuse_activations(&mut model);
+    model.validate()?;
+    Ok(model)
+}
+
+/// Count layers of each coarse kind — used by tests and the CLI `describe`.
+pub fn layer_histogram(model: &Model) -> Vec<(&'static str, usize)> {
+    let mut hist: Vec<(&'static str, usize)> = Vec::new();
+    for l in &model.layers {
+        let name = l.kind_name();
+        if let Some(e) = hist.iter_mut().find(|(n, _)| *n == name) {
+            e.1 += 1;
+        } else {
+            hist.push((name, 1));
+        }
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::interp;
+    use crate::tensor::Tensor;
+    use crate::util::XorShift64;
+
+    /// The central invariant: optimization must not change the function.
+    #[test]
+    fn optimize_preserves_semantics_on_all_paper_models() {
+        let mut rng = XorShift64::new(21);
+        for name in zoo::PAPER_MODELS {
+            let m = zoo::by_name(name).unwrap().with_random_weights(31);
+            let opt = optimize(m.clone()).unwrap();
+            for trial in 0..3 {
+                let x = Tensor::rand(m.input.dims(), -1.0, 1.0, &mut rng);
+                let y0 = interp::run(&m, &x).unwrap();
+                let y1 = interp::run(&opt, &x).unwrap();
+                let err = y0.max_abs_diff(&y1).unwrap();
+                assert!(err < 1e-4, "{name} trial {trial}: err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn optimize_removes_bn_dropout_and_standalone_activations() {
+        let m = zoo::robot_detector().with_random_weights(5);
+        let opt = optimize(m).unwrap();
+        assert!(!opt.layers.iter().any(|l| matches!(l, Layer::BatchNorm { .. })));
+        assert!(!opt.layers.iter().any(|l| matches!(l, Layer::Dropout { .. })));
+        // all leaky-relus fused into convs
+        assert!(!opt.layers.iter().any(|l| matches!(l, Layer::Activation(crate::graph::Activation::LeakyRelu(_)))));
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let m = zoo::ball_classifier();
+        let h = layer_histogram(&m);
+        assert!(h.iter().any(|&(n, c)| n == "Conv" && c == 3));
+        assert!(h.iter().any(|&(n, c)| n == "ReLU" && c == 2));
+    }
+}

@@ -1,0 +1,138 @@
+//! PJRT-backed engine: load HLO text → compile once → execute many.
+
+use super::InferenceEngine;
+use crate::tensor::Tensor;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use std::sync::Mutex;
+
+/// An inference engine backed by the XLA PJRT CPU client.
+///
+/// The artifact is the HLO text written by `python/compile/aot.py`; it was
+/// lowered with `return_tuple=True`, so execution results unwrap with
+/// `to_tuple1`.
+pub struct XlaEngine {
+    // xla::PjRtLoadedExecutable is not Sync; executions are serialized.
+    // (PJRT CPU execution is single-threaded here anyway — the container
+    // has one core, and the paper's latency story is single-image.)
+    exe: Mutex<xla::PjRtLoadedExecutable>,
+    name: String,
+    input_dims: Vec<usize>,
+    output_dims: Vec<usize>,
+}
+
+// SAFETY: the `xla` crate's executable holds raw PJRT pointers and an `Rc`
+// to the client, making it neither Send nor Sync by default. Every access
+// in this engine goes through the `Mutex` (including drop order: the
+// executable and its client are owned exclusively by this struct), and the
+// PJRT *CPU* client has no thread affinity, so serialized cross-thread use
+// is sound.
+unsafe impl Send for XlaEngine {}
+unsafe impl Sync for XlaEngine {}
+
+impl XlaEngine {
+    /// Load an HLO-text artifact and compile it on the CPU PJRT client.
+    ///
+    /// `input_dims`/`output_dims` are the logical HWC shapes of the model;
+    /// the artifact itself operates on the flattened f32 buffer (the AOT
+    /// path exports `f(x: f32[numel]) -> f32[out_numel]` to keep the ABI
+    /// layout-free).
+    pub fn load(hlo_path: &Path, name: &str, input_dims: &[usize], output_dims: &[usize]) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("XLA compile")?;
+        Ok(XlaEngine {
+            exe: Mutex::new(exe),
+            name: format!("xla:{name}"),
+            input_dims: input_dims.to_vec(),
+            output_dims: output_dims.to_vec(),
+        })
+    }
+
+    /// Standard artifact location for a model name.
+    pub fn artifact_path(artifacts_dir: &Path, model: &str) -> std::path::PathBuf {
+        artifacts_dir.join(format!("{model}.hlo.txt"))
+    }
+
+    /// Execute on a raw f32 buffer (flattened HWC).
+    pub fn infer_flat(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let expect: usize = self.input_dims.iter().product();
+        if input.len() != expect {
+            bail!("input has {} values, model wants {expect}", input.len());
+        }
+        let lit = xla::Literal::vec1(input);
+        let exe = self.exe.lock().unwrap();
+        let result = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+impl InferenceEngine for XlaEngine {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn infer(&self, input: &Tensor) -> Result<Tensor> {
+        if input.dims() != self.input_dims {
+            bail!("input shape {:?} != expected {:?}", input.dims(), self.input_dims);
+        }
+        let out = self.infer_flat(input.data())?;
+        Tensor::from_vec(&self.output_dims, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Round-trip an identity-ish HLO module through PJRT. Written as HLO
+    /// text by hand (the same format aot.py produces), so this test runs
+    /// without the Python artifacts.
+    const DOUBLE_HLO: &str = r#"
+HloModule jit_f, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY main.5 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  constant.2 = f32[] constant(2)
+  broadcast.3 = f32[4]{0} broadcast(constant.2), dimensions={}
+  multiply.4 = f32[4]{0} multiply(Arg_0.1, broadcast.3)
+  ROOT tuple.5 = (f32[4]{0}) tuple(multiply.4)
+}
+"#;
+
+    fn write_artifact() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("nncg-runtime-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("double.hlo.txt");
+        std::fs::write(&p, DOUBLE_HLO).unwrap();
+        p
+    }
+
+    #[test]
+    fn loads_and_executes_hlo_text() {
+        let p = write_artifact();
+        let eng = XlaEngine::load(&p, "double", &[2, 2, 1], &[2, 2, 1]).unwrap();
+        let x = Tensor::from_vec(&[2, 2, 1], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let y = eng.infer(&x).unwrap();
+        assert_eq!(y.data(), &[2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn rejects_wrong_shapes() {
+        let p = write_artifact();
+        let eng = XlaEngine::load(&p, "double", &[2, 2, 1], &[2, 2, 1]).unwrap();
+        assert!(eng.infer(&Tensor::zeros(&[3, 1, 1])).is_err());
+        assert!(eng.infer_flat(&[0.0; 7]).is_err());
+    }
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let err = XlaEngine::load(Path::new("/nonexistent/x.hlo.txt"), "x", &[1], &[1]);
+        assert!(err.is_err());
+    }
+}

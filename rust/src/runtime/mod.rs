@@ -1,0 +1,79 @@
+//! XLA/PJRT runtime — executes the JAX-lowered artifacts from
+//! `artifacts/*.hlo.txt` on the request path, entirely from Rust.
+//!
+//! This is the reproduction's **TensorFlow XLA baseline** (same compiler
+//! lineage, same AOT workflow as the paper's `tfcompile`) *and* the bridge
+//! that proves the three-layer architecture: Python/JAX/Pallas authored the
+//! computation at build time; Rust loads the HLO text, compiles it once via
+//! PJRT, and executes it with zero Python at run time.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+mod engine;
+
+pub use engine::XlaEngine;
+
+use crate::tensor::Tensor;
+use anyhow::Result;
+
+/// The interface every execution backend implements; the coordinator
+/// routes requests to `dyn InferenceEngine`.
+pub trait InferenceEngine: Send + Sync {
+    /// Engine label for metrics/tables.
+    fn name(&self) -> &str;
+
+    /// Run one inference.
+    fn infer(&self, input: &Tensor) -> Result<Tensor>;
+
+    /// Run a batch. The default loops `infer` (what a latency-oriented
+    /// embedded deployment does); engines with real batch support (XLA,
+    /// GPU models) override.
+    fn infer_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        inputs.iter().map(|x| self.infer(x)).collect()
+    }
+}
+
+/// Engine selector used across CLI / benches / coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// NNCG generated C via cc + dlopen.
+    Nncg,
+    /// Naive runtime interpreter (framework baseline / Glow stand-in).
+    Interp,
+    /// XLA via PJRT CPU client (TF-XLA baseline).
+    Xla,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Nncg => "nncg",
+            EngineKind::Interp => "interp",
+            EngineKind::Xla => "xla",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Self> {
+        Some(match s {
+            "nncg" => EngineKind::Nncg,
+            "interp" => EngineKind::Interp,
+            "xla" => EngineKind::Xla,
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_kind_names_round_trip() {
+        for k in [EngineKind::Nncg, EngineKind::Interp, EngineKind::Xla] {
+            assert_eq!(EngineKind::from_name(k.name()), Some(k));
+        }
+        assert_eq!(EngineKind::from_name("tf"), None);
+    }
+}

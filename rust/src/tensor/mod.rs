@@ -1,0 +1,236 @@
+//! Dense f32 tensors in HWC layout (batch size is always 1 — the paper's
+//! whole point is single-image latency on embedded CPUs).
+//!
+//! Layout convention throughout the crate:
+//! * activations: `[h, w, c]`, C innermost (channel-minor) — this is what the
+//!   paper's SIMD-over-output-channels principle (§II-A.4) requires, and it
+//!   matches Keras/JAX NHWC.
+//! * conv weights: `[h_k, w_k, c_in, c_out]` (HWIO), `c_out` innermost.
+
+mod shape;
+pub use shape::Shape;
+
+use crate::util::XorShift64;
+use anyhow::{bail, Result};
+
+/// A dense f32 tensor with up to 4 dimensions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Shape,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    /// Tensor from a flat vec; length must match the shape product.
+    pub fn from_vec(dims: &[usize], data: Vec<f32>) -> Result<Self> {
+        let shape = Shape::new(dims);
+        if shape.numel() != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", dims, shape.numel(), data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    /// Uniformly random tensor in [lo, hi), deterministic in the seed.
+    pub fn rand(dims: &[usize], lo: f32, hi: f32, rng: &mut XorShift64) -> Self {
+        let shape = Shape::new(dims);
+        let data = (0..shape.numel()).map(|_| rng.uniform(lo, hi)).collect();
+        Tensor { shape, data }
+    }
+
+    /// Glorot-uniform initialized tensor (fan_in/fan_out from first/last dims
+    /// for dense, receptive-field-aware for 4-d conv weights).
+    pub fn glorot(dims: &[usize], rng: &mut XorShift64) -> Self {
+        let (fan_in, fan_out) = match dims.len() {
+            4 => {
+                let rf = dims[0] * dims[1];
+                (rf * dims[2], rf * dims[3])
+            }
+            2 => (dims[0], dims[1]),
+            _ => {
+                let n = dims.iter().product::<usize>().max(1);
+                (n, n)
+            }
+        };
+        let limit = (6.0 / (fan_in + fan_out) as f32).sqrt();
+        Self::rand(dims, -limit, limit, rng)
+    }
+
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Index into a 3-d `[h, w, c]` tensor.
+    #[inline]
+    pub fn at3(&self, i: usize, j: usize, k: usize) -> f32 {
+        let d = self.shape.dims();
+        debug_assert_eq!(d.len(), 3);
+        self.data[(i * d[1] + j) * d[2] + k]
+    }
+
+    /// Mutable index into a 3-d `[h, w, c]` tensor.
+    #[inline]
+    pub fn at3_mut(&mut self, i: usize, j: usize, k: usize) -> &mut f32 {
+        let d = self.shape.dims();
+        debug_assert_eq!(d.len(), 3);
+        let idx = (i * d[1] + j) * d[2] + k;
+        &mut self.data[idx]
+    }
+
+    /// Index into a 4-d `[h_k, w_k, c_in, c_out]` weight tensor.
+    #[inline]
+    pub fn at4(&self, n: usize, m: usize, o: usize, k: usize) -> f32 {
+        let d = self.shape.dims();
+        debug_assert_eq!(d.len(), 4);
+        self.data[((n * d[1] + m) * d[2] + o) * d[3] + k]
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(&mut self, dims: &[usize]) -> Result<()> {
+        let s = Shape::new(dims);
+        if s.numel() != self.data.len() {
+            bail!("cannot reshape {} elements to {:?}", self.data.len(), dims);
+        }
+        self.shape = s;
+        Ok(())
+    }
+
+    /// Maximum absolute difference against another tensor of the same shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("shape mismatch: {:?} vs {:?}", self.dims(), other.dims());
+        }
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max))
+    }
+
+    /// Relative L2 error ‖a−b‖ / max(‖b‖, ε).
+    pub fn rel_l2(&self, other: &Tensor) -> Result<f32> {
+        if self.shape != other.shape {
+            bail!("shape mismatch: {:?} vs {:?}", self.dims(), other.dims());
+        }
+        let num: f32 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        let den: f32 = other.data.iter().map(|b| b * b).sum::<f32>().sqrt().max(1e-12);
+        Ok(num / den)
+    }
+
+    /// Argmax over the flat data (used on classifier logits/probs).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_numel() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert!(t.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn from_vec_rejects_bad_len() {
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 3]).is_err());
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn indexing_is_channel_minor() {
+        // [h=1, w=2, c=3]: data laid out (0,0,:) then (0,1,:).
+        let t = Tensor::from_vec(&[1, 2, 3], vec![0., 1., 2., 10., 11., 12.]).unwrap();
+        assert_eq!(t.at3(0, 0, 2), 2.0);
+        assert_eq!(t.at3(0, 1, 0), 10.0);
+    }
+
+    #[test]
+    fn at4_weight_layout() {
+        // [1,1,2,2]: (o=0,k=0),(o=0,k=1),(o=1,k=0),(o=1,k=1)
+        let t = Tensor::from_vec(&[1, 1, 2, 2], vec![1., 2., 3., 4.]).unwrap();
+        assert_eq!(t.at4(0, 0, 0, 1), 2.0);
+        assert_eq!(t.at4(0, 0, 1, 0), 3.0);
+    }
+
+    #[test]
+    fn rand_deterministic_in_seed() {
+        let mut r1 = XorShift64::new(1);
+        let mut r2 = XorShift64::new(1);
+        let a = Tensor::rand(&[4, 4], -1.0, 1.0, &mut r1);
+        let b = Tensor::rand(&[4, 4], -1.0, 1.0, &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn glorot_limit_respected() {
+        let mut r = XorShift64::new(2);
+        let t = Tensor::glorot(&[3, 3, 8, 16], &mut r);
+        let limit = (6.0f32 / ((9 * 8 + 9 * 16) as f32)).sqrt();
+        assert!(t.data().iter().all(|v| v.abs() <= limit));
+    }
+
+    #[test]
+    fn diff_metrics() {
+        let a = Tensor::from_vec(&[2], vec![1.0, 2.0]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![1.5, 2.0]).unwrap();
+        assert!((a.max_abs_diff(&b).unwrap() - 0.5).abs() < 1e-6);
+        assert!(a.rel_l2(&b).unwrap() > 0.0);
+        let c = Tensor::zeros(&[3]);
+        assert!(a.max_abs_diff(&c).is_err());
+    }
+
+    #[test]
+    fn argmax_picks_largest() {
+        let t = Tensor::from_vec(&[4], vec![0.1, 0.7, 0.15, 0.05]).unwrap();
+        assert_eq!(t.argmax(), 1);
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let mut t = Tensor::zeros(&[2, 6]);
+        assert!(t.reshape(&[3, 4]).is_ok());
+        assert!(t.reshape(&[5]).is_err());
+    }
+}

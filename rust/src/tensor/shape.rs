@@ -1,0 +1,73 @@
+//! Shape type shared by tensors and the graph IR's shape inference.
+
+use std::fmt;
+
+/// A tensor shape (up to 4 dims in practice; stored as a small vec).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape {
+    dims: Vec<usize>,
+}
+
+impl Shape {
+    pub fn new(dims: &[usize]) -> Self {
+        Shape { dims: dims.to_vec() }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Height of an HWC shape.
+    pub fn h(&self) -> usize {
+        self.dims[0]
+    }
+
+    /// Width of an HWC shape.
+    pub fn w(&self) -> usize {
+        self.dims[1]
+    }
+
+    /// Channels of an HWC shape.
+    pub fn c(&self) -> usize {
+        self.dims[2]
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[")?;
+        for (i, d) in self.dims.iter().enumerate() {
+            if i > 0 {
+                write!(f, "x")?;
+            }
+            write!(f, "{d}")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accessors() {
+        let s = Shape::new(&[16, 16, 1]);
+        assert_eq!((s.h(), s.w(), s.c()), (16, 16, 1));
+        assert_eq!(s.numel(), 256);
+        assert_eq!(s.rank(), 3);
+    }
+
+    #[test]
+    fn display() {
+        assert_eq!(Shape::new(&[3, 80, 60]).to_string(), "[3x80x60]");
+    }
+}

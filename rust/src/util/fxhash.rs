@@ -1,0 +1,40 @@
+//! FxHash-style 64-bit content hash, used to key the codegen/object cache
+//! (`cc::cache`) on generated source text + compiler flags.
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Hash a byte slice to 64 bits. Stable across runs and platforms.
+pub fn hash_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        let v = u64::from_le_bytes(c.try_into().unwrap());
+        h = (h.rotate_left(5) ^ v).wrapping_mul(SEED);
+    }
+    for &b in chunks.remainder() {
+        h = (h.rotate_left(5) ^ b as u64).wrapping_mul(SEED);
+    }
+    h
+}
+
+/// Hash a str.
+pub fn hash_str(s: &str) -> u64 {
+    hash_bytes(s.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_and_distinguishing() {
+        assert_eq!(hash_str("abc"), hash_str("abc"));
+        assert_ne!(hash_str("abc"), hash_str("abd"));
+        assert_ne!(hash_str(""), hash_str("a"));
+    }
+
+    #[test]
+    fn remainder_bytes_matter() {
+        assert_ne!(hash_bytes(&[1, 2, 3, 4, 5, 6, 7, 8, 9]), hash_bytes(&[1, 2, 3, 4, 5, 6, 7, 8, 10]));
+    }
+}

@@ -1,0 +1,43 @@
+//! Small shared utilities: deterministic PRNG, hashing, timing helpers.
+
+pub mod prng;
+pub mod fxhash;
+
+pub use prng::XorShift64;
+
+/// Format a duration in the paper's unit (µs) with sensible precision.
+pub fn fmt_us(us: f64) -> String {
+    if us >= 1000.0 {
+        format!("{:.0}\u{b5}s", us)
+    } else if us >= 100.0 {
+        format!("{:.1}\u{b5}s", us)
+    } else {
+        format!("{:.2}\u{b5}s", us)
+    }
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn div_ceil(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_us_scales_precision() {
+        assert_eq!(fmt_us(2.1), "2.10\u{b5}s");
+        assert_eq!(fmt_us(135.7), "135.7\u{b5}s");
+        assert_eq!(fmt_us(5630.0), "5630\u{b5}s");
+    }
+
+    #[test]
+    fn div_ceil_basic() {
+        assert_eq!(div_ceil(0, 4), 0);
+        assert_eq!(div_ceil(1, 4), 1);
+        assert_eq!(div_ceil(4, 4), 1);
+        assert_eq!(div_ceil(5, 4), 2);
+    }
+}

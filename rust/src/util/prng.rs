@@ -1,0 +1,113 @@
+//! Deterministic xorshift64* PRNG.
+//!
+//! The offline crate set has no `rand`, and determinism matters more than
+//! statistical quality here: the same seed must produce the same weights on
+//! the Rust and test sides so generated-C vs interpreter comparisons are
+//! reproducible.
+
+/// xorshift64* generator. Never returns the zero state.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    /// Create a generator from a seed. A zero seed is remapped to a fixed
+    /// non-zero constant (xorshift has a zero fixed point).
+    pub fn new(seed: u64) -> Self {
+        Self {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        // 24 mantissa bits of uniformity.
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Uniform usize in [0, n). `n` must be > 0.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Approximate standard normal via sum of 4 uniforms (Irwin–Hall),
+    /// adequate for weight initialization.
+    pub fn normal(&mut self) -> f32 {
+        let s: f32 = (0..4).map(|_| self.next_f32()).sum();
+        (s - 2.0) * (12.0f32 / 4.0).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = XorShift64::new(7);
+        let mut b = XorShift64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn zero_seed_ok() {
+        let mut r = XorShift64::new(0);
+        assert_ne!(r.next_u64(), 0);
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut r = XorShift64::new(3);
+        for _ in 0..10_000 {
+            let v = r.next_f32();
+            assert!((0.0..1.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn uniform_respects_bounds() {
+        let mut r = XorShift64::new(11);
+        for _ in 0..10_000 {
+            let v = r.uniform(-0.5, 0.5);
+            assert!((-0.5..0.5).contains(&v));
+        }
+    }
+
+    #[test]
+    fn normal_roughly_centered() {
+        let mut r = XorShift64::new(5);
+        let n = 20_000;
+        let mean: f32 = (0..n).map(|_| r.normal()).sum::<f32>() / n as f32;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn below_in_range() {
+        let mut r = XorShift64::new(9);
+        for _ in 0..1000 {
+            assert!(r.below(7) < 7);
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! Robotics vision pipelines from the paper's evaluation scenarios
+//! (§III-A) plus the synthetic scene renderer that stands in for the
+//! paper's datasets (no RoboCup logs or Daimler corpus offline).
+//!
+//! * [`ball`] — the R-CNN-style candidate pipeline: scanline segmentation
+//!   over a camera frame, edge-point extraction, circle fitting; each
+//!   candidate patch (16×16) goes to the ball classifier CNN. The paper
+//!   reports ~20 candidates/frame.
+//! * [`pedestrian`] — sliding-window scan feeding 18×36 patches to the
+//!   pedestrian classifier.
+//! * [`yolo`] — decoding of the robot detector's 15×20×20 output grid into
+//!   boxes (YOLO-v2-style objectness + box regression).
+//! * [`render`] — deterministic synthetic soccer-field / street scenes with
+//!   ground-truth annotations.
+
+pub mod ball;
+pub mod pedestrian;
+pub mod render;
+pub mod yolo;
+
+/// A grayscale or RGB image in HWC f32, values in [0, 1].
+pub type Image = crate::tensor::Tensor;
+
+/// An axis-aligned detection with a confidence score.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Detection {
+    /// Top-left row.
+    pub y: f32,
+    /// Top-left column.
+    pub x: f32,
+    pub h: f32,
+    pub w: f32,
+    pub score: f32,
+    /// Class id (pipeline-specific).
+    pub class: usize,
+}
+
+impl Detection {
+    /// Intersection-over-union with another box.
+    pub fn iou(&self, other: &Detection) -> f32 {
+        let x1 = self.x.max(other.x);
+        let y1 = self.y.max(other.y);
+        let x2 = (self.x + self.w).min(other.x + other.w);
+        let y2 = (self.y + self.h).min(other.y + other.h);
+        let inter = (x2 - x1).max(0.0) * (y2 - y1).max(0.0);
+        let union = self.w * self.h + other.w * other.h - inter;
+        if union <= 0.0 {
+            0.0
+        } else {
+            inter / union
+        }
+    }
+}
+
+/// Greedy non-maximum suppression.
+pub fn nms(mut dets: Vec<Detection>, iou_thresh: f32) -> Vec<Detection> {
+    dets.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+    let mut keep: Vec<Detection> = Vec::new();
+    for d in dets {
+        if keep.iter().all(|k| k.iou(&d) < iou_thresh) {
+            keep.push(d);
+        }
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn det(x: f32, y: f32, s: f32) -> Detection {
+        Detection { x, y, w: 10.0, h: 10.0, score: s, class: 0 }
+    }
+
+    #[test]
+    fn iou_identical_is_one() {
+        let a = det(0.0, 0.0, 1.0);
+        assert!((a.iou(&a) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn iou_disjoint_is_zero() {
+        assert_eq!(det(0.0, 0.0, 1.0).iou(&det(100.0, 100.0, 1.0)), 0.0);
+    }
+
+    #[test]
+    fn nms_suppresses_overlaps_keeps_best() {
+        let dets = vec![det(0.0, 0.0, 0.5), det(1.0, 1.0, 0.9), det(50.0, 50.0, 0.3)];
+        let kept = nms(dets, 0.3);
+        assert_eq!(kept.len(), 2);
+        assert_eq!(kept[0].score, 0.9);
+        assert!(kept.iter().any(|d| d.x == 50.0));
+    }
+}

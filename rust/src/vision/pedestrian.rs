@@ -1,0 +1,106 @@
+//! Sliding-window pedestrian scan feeding the 18×36 classifier
+//! (paper §III-A, Daimler benchmark scenario).
+
+use super::render::extract_patch;
+use super::{Detection, Image};
+
+/// Scan configuration.
+#[derive(Debug, Clone)]
+pub struct ScanConfig {
+    /// Window stride in pixels.
+    pub stride: usize,
+    /// Scales applied to the base 18×36 window.
+    pub scales: Vec<f32>,
+    /// Classifier probability threshold for a detection.
+    pub threshold: f32,
+}
+
+impl Default for ScanConfig {
+    fn default() -> Self {
+        ScanConfig { stride: 6, scales: vec![1.0, 1.5], threshold: 0.5 }
+    }
+}
+
+/// All candidate windows over a frame (the classifier then scores each).
+pub fn windows(img: &Image, cfg: &ScanConfig) -> Vec<(f32, f32, f32, f32)> {
+    let (h, w) = (img.dims()[0] as f32, img.dims()[1] as f32);
+    let mut out = Vec::new();
+    for &scale in &cfg.scales {
+        let wh = 36.0 * scale;
+        let ww = 18.0 * scale;
+        if wh > h || ww > w {
+            continue;
+        }
+        let mut y = 0.0;
+        while y + wh <= h {
+            let mut x = 0.0;
+            while x + ww <= w {
+                out.push((y + wh / 2.0, x + ww / 2.0, wh, ww));
+                x += cfg.stride as f32 * scale;
+            }
+            y += cfg.stride as f32 * scale;
+        }
+    }
+    out
+}
+
+/// Cut the CNN input patch ([36, 18, 1]) for a window.
+pub fn window_patch(img: &Image, win: (f32, f32, f32, f32)) -> Image {
+    extract_patch(img, win.0, win.1, win.2, win.3, 36, 18)
+}
+
+/// Assemble detections from per-window pedestrian probabilities.
+pub fn detections_from_scores(wins: &[(f32, f32, f32, f32)], scores: &[f32], cfg: &ScanConfig) -> Vec<Detection> {
+    wins.iter()
+        .zip(scores)
+        .filter(|(_, &s)| s >= cfg.threshold)
+        .map(|(&(cy, cx, wh, ww), &s)| Detection {
+            y: cy - wh / 2.0,
+            x: cx - ww / 2.0,
+            h: wh,
+            w: ww,
+            score: s,
+            class: 0,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn windows_cover_frame() {
+        let img = Tensor::zeros(&[72, 90, 1]);
+        let wins = windows(&img, &ScanConfig::default());
+        assert!(!wins.is_empty());
+        // all inside bounds
+        for (cy, cx, wh, ww) in &wins {
+            assert!(cy - wh / 2.0 >= -0.01 && cy + wh / 2.0 <= 72.01);
+            assert!(cx - ww / 2.0 >= -0.01 && cx + ww / 2.0 <= 90.01);
+        }
+    }
+
+    #[test]
+    fn too_small_frame_has_no_windows() {
+        let img = Tensor::zeros(&[20, 10, 1]);
+        assert!(windows(&img, &ScanConfig::default()).is_empty());
+    }
+
+    #[test]
+    fn patch_shape_matches_model_input() {
+        let img = Tensor::zeros(&[72, 90, 1]);
+        let wins = windows(&img, &ScanConfig::default());
+        let p = window_patch(&img, wins[0]);
+        assert_eq!(p.dims(), &[36, 18, 1]);
+    }
+
+    #[test]
+    fn score_threshold_filters() {
+        let wins = vec![(18.0, 9.0, 36.0, 18.0), (18.0, 30.0, 36.0, 18.0)];
+        let dets = detections_from_scores(&wins, &[0.9, 0.2], &ScanConfig::default());
+        assert_eq!(dets.len(), 1);
+        assert_eq!(dets[0].score, 0.9);
+    }
+}

@@ -1,0 +1,279 @@
+//! Synthetic scene renderer — deterministic stand-in for the paper's
+//! datasets (RoboCup camera logs, Daimler pedestrian corpus).
+//!
+//! Scenes carry ground truth so the pipelines and the end-to-end examples
+//! can report detection quality, and the figure exporter (Figs. 1–3) dumps
+//! sample grids from the same generators the Python trainer uses
+//! (structurally equivalent implementations; both are seeded).
+
+use super::{Detection, Image};
+use crate::tensor::Tensor;
+use crate::util::XorShift64;
+
+/// Ground-truth annotation for a rendered scene.
+#[derive(Debug, Clone)]
+pub struct SceneTruth {
+    pub balls: Vec<Detection>,
+    pub robots: Vec<Detection>,
+}
+
+/// Render a grayscale soccer-field frame of `h`×`w` with `n_balls` balls
+/// (bright circles with dark spots) and `n_robots` robot-ish blobs.
+pub fn soccer_frame(h: usize, w: usize, n_balls: usize, n_robots: usize, rng: &mut XorShift64) -> (Image, SceneTruth) {
+    let mut img = Tensor::zeros(&[h, w, 1]);
+    // field: mid-gray with mild vertical gradient + noise
+    for i in 0..h {
+        for j in 0..w {
+            let g = 0.35 + 0.1 * (i as f32 / h as f32) + 0.03 * (rng.next_f32() - 0.5);
+            *img.at3_mut(i, j, 0) = g;
+        }
+    }
+    // field lines
+    for j in 0..w {
+        let line_row = h / 2;
+        if line_row < h {
+            *img.at3_mut(line_row, j, 0) = 0.8;
+        }
+    }
+
+    let mut truth = SceneTruth { balls: Vec::new(), robots: Vec::new() };
+
+    for _ in 0..n_robots {
+        let rh = (h / 3).max(8);
+        let rw = (w / 8).max(4);
+        let top = rng.below(h.saturating_sub(rh).max(1));
+        let left = rng.below(w.saturating_sub(rw).max(1));
+        draw_robot(&mut img, top, left, rh, rw, rng);
+        truth.robots.push(Detection { y: top as f32, x: left as f32, h: rh as f32, w: rw as f32, score: 1.0, class: 0 });
+    }
+
+    for _ in 0..n_balls {
+        let r = 3 + rng.below(((h.min(w)) / 10).max(2));
+        let cy = r + rng.below(h.saturating_sub(2 * r).max(1));
+        let cx = r + rng.below(w.saturating_sub(2 * r).max(1));
+        draw_ball(&mut img, cy, cx, r, rng);
+        truth.balls.push(Detection {
+            y: (cy - r) as f32,
+            x: (cx - r) as f32,
+            h: (2 * r) as f32,
+            w: (2 * r) as f32,
+            score: 1.0,
+            class: 0,
+        });
+    }
+    (img, truth)
+}
+
+/// Draw a RoboCup-style ball: bright disc with dark pentagon-ish spots.
+pub fn draw_ball(img: &mut Image, cy: usize, cx: usize, r: usize, rng: &mut XorShift64) {
+    let (h, w) = (img.dims()[0], img.dims()[1]);
+    let rf = r as f32;
+    // a few dark spot centers on the disc
+    let spots: Vec<(f32, f32)> = (0..3)
+        .map(|_| {
+            let a = rng.next_f32() * std::f32::consts::TAU;
+            let d = rng.next_f32() * 0.6 * rf;
+            (a.cos() * d, a.sin() * d)
+        })
+        .collect();
+    for i in cy.saturating_sub(r)..(cy + r + 1).min(h) {
+        for j in cx.saturating_sub(r)..(cx + r + 1).min(w) {
+            let dy = i as f32 - cy as f32;
+            let dx = j as f32 - cx as f32;
+            let d = (dy * dy + dx * dx).sqrt();
+            if d <= rf {
+                let mut v = 0.95 - 0.1 * (d / rf);
+                for (sy, sx) in &spots {
+                    let sd = ((dy - sy).powi(2) + (dx - sx).powi(2)).sqrt();
+                    if sd < 0.3 * rf {
+                        v = 0.15;
+                    }
+                }
+                *img.at3_mut(i, j, 0) = v;
+            }
+        }
+    }
+}
+
+/// Draw a Nao-robot-ish white vertical blob with darker joints.
+fn draw_robot(img: &mut Image, top: usize, left: usize, rh: usize, rw: usize, rng: &mut XorShift64) {
+    let (h, w) = (img.dims()[0], img.dims()[1]);
+    for i in top..(top + rh).min(h) {
+        for j in left..(left + rw).min(w) {
+            let frac = (i - top) as f32 / rh as f32;
+            let body = 0.85 - 0.15 * (frac * 6.0).sin().abs();
+            *img.at3_mut(i, j, 0) = body + 0.02 * (rng.next_f32() - 0.5);
+        }
+    }
+}
+
+/// Extract a patch `[ph, pw, c]` centered at (cy, cx), zero-padded at
+/// borders, optionally rescaled from a source box of `sh`×`sw` via nearest
+/// neighbor (candidates come at many scales; the CNN wants a fixed size).
+pub fn extract_patch(img: &Image, cy: f32, cx: f32, sh: f32, sw: f32, ph: usize, pw: usize) -> Image {
+    let (h, w, c) = (img.dims()[0], img.dims()[1], img.dims()[2]);
+    let mut patch = Tensor::zeros(&[ph, pw, c]);
+    for i in 0..ph {
+        for j in 0..pw {
+            // map patch pixel to source coordinates
+            let sy = cy - sh / 2.0 + (i as f32 + 0.5) * sh / ph as f32;
+            let sx = cx - sw / 2.0 + (j as f32 + 0.5) * sw / pw as f32;
+            if sy >= 0.0 && sx >= 0.0 && (sy as usize) < h && (sx as usize) < w {
+                for k in 0..c {
+                    *patch.at3_mut(i, j, k) = img.at3(sy as usize, sx as usize, k);
+                }
+            }
+        }
+    }
+    patch
+}
+
+/// A 16×16 ball-candidate patch like the paper's Fig. 1: positive =
+/// centered ball; negative = field/line/robot clutter.
+pub fn ball_patch(positive: bool, rng: &mut XorShift64) -> Image {
+    let mut img = Tensor::zeros(&[16, 16, 1]);
+    for v in img.data_mut() {
+        *v = 0.3 + 0.15 * rng.next_f32();
+    }
+    if positive {
+        let r = 4 + rng.below(3);
+        let cy = 8 + rng.below(3) as isize - 1;
+        let cx = 8 + rng.below(3) as isize - 1;
+        draw_ball(&mut img, cy as usize, cx as usize, r, rng);
+    } else {
+        // clutter: random bright streak or blob that is not ball-like
+        match rng.below(3) {
+            0 => {
+                let row = rng.below(16);
+                for j in 0..16 {
+                    *img.at3_mut(row, j, 0) = 0.8;
+                }
+            }
+            1 => {
+                let top = rng.below(8);
+                let left = rng.below(8);
+                for i in top..(top + 8).min(16) {
+                    for j in left..(left + 4).min(16) {
+                        *img.at3_mut(i, j, 0) = 0.85;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    img
+}
+
+/// An 18-wide × 36-tall pedestrian patch like Fig. 2 (HWC [36, 18, 1]).
+pub fn pedestrian_patch(positive: bool, rng: &mut XorShift64) -> Image {
+    let mut img = Tensor::zeros(&[36, 18, 1]);
+    for v in img.data_mut() {
+        *v = 0.4 + 0.2 * rng.next_f32();
+    }
+    if positive {
+        // head + torso + legs silhouette, darker than background
+        let cx = 9 + rng.below(3) as isize - 1;
+        for i in 2..8 {
+            for j in -2i32..3 {
+                let jj = cx as i32 + j;
+                if (0..18).contains(&jj) {
+                    *img.at3_mut(i, jj as usize, 0) = 0.12 + 0.05 * rng.next_f32();
+                }
+            }
+        }
+        for i in 8..22 {
+            for j in -3i32..4 {
+                let jj = cx as i32 + j;
+                if (0..18).contains(&jj) {
+                    *img.at3_mut(i, jj as usize, 0) = 0.15 + 0.05 * rng.next_f32();
+                }
+            }
+        }
+        for (leg, span) in [(-2i32, 0i32), (1, 3)] {
+            for i in 22..34 {
+                for j in leg..span {
+                    let jj = cx as i32 + j;
+                    if (0..18).contains(&jj) {
+                        *img.at3_mut(i, jj as usize, 0) = 0.18 + 0.05 * rng.next_f32();
+                    }
+                }
+            }
+        }
+    } else if rng.below(2) == 0 {
+        // vertical pole distractor
+        let col = rng.below(18);
+        for i in 0..36 {
+            *img.at3_mut(i, col, 0) = 0.2;
+        }
+    }
+    img
+}
+
+/// Write a tensor as a PGM (grayscale) image file — figure export format.
+pub fn write_pgm(img: &Image, path: &std::path::Path) -> anyhow::Result<()> {
+    let (h, w) = (img.dims()[0], img.dims()[1]);
+    let mut data = format!("P2\n{w} {h}\n255\n");
+    for i in 0..h {
+        let row: Vec<String> = (0..w)
+            .map(|j| format!("{}", (img.at3(i, j, 0).clamp(0.0, 1.0) * 255.0) as u8))
+            .collect();
+        data.push_str(&row.join(" "));
+        data.push('\n');
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, data)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn soccer_frame_has_truth() {
+        let mut rng = XorShift64::new(1);
+        let (img, truth) = soccer_frame(60, 80, 2, 1, &mut rng);
+        assert_eq!(img.dims(), &[60, 80, 1]);
+        assert_eq!(truth.balls.len(), 2);
+        assert_eq!(truth.robots.len(), 1);
+        assert!(img.data().iter().all(|v| (0.0..=1.1).contains(v)));
+    }
+
+    #[test]
+    fn ball_patch_positive_is_brighter_in_center() {
+        let mut rng = XorShift64::new(2);
+        let pos = ball_patch(true, &mut rng);
+        // center pixel should be ball-bright or spot-dark, not background
+        let c = pos.at3(8, 8, 0);
+        assert!(c > 0.6 || c < 0.25, "center={c}");
+    }
+
+    #[test]
+    fn patches_are_deterministic_in_seed() {
+        let a = ball_patch(true, &mut XorShift64::new(7));
+        let b = ball_patch(true, &mut XorShift64::new(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn extract_patch_handles_borders() {
+        let mut rng = XorShift64::new(3);
+        let (img, _) = soccer_frame(30, 40, 0, 0, &mut rng);
+        let p = extract_patch(&img, 0.0, 0.0, 16.0, 16.0, 16, 16);
+        assert_eq!(p.dims(), &[16, 16, 1]);
+        // top-left corner patch has zero-padded area
+        assert_eq!(p.at3(0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn pgm_write_produces_valid_header() {
+        let mut rng = XorShift64::new(4);
+        let img = ball_patch(true, &mut rng);
+        let path = std::env::temp_dir().join("nncg-test-fig/ball.pgm");
+        write_pgm(&img, &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("P2\n16 16\n255\n"));
+    }
+}

@@ -1,0 +1,184 @@
+//! YOLO-v2-style decoding of the robot detector head (paper Table III:
+//! final 15×20×20 grid over an 80×60 input; pipeline per Redmon et al.).
+//!
+//! Channel layout per grid cell (20 channels = 4 anchors × 5 values):
+//! `[tx, ty, tw, th, to] × 4` — box offsets, log-scales and objectness.
+
+use super::{nms, Detection};
+use crate::tensor::Tensor;
+use anyhow::{bail, Result};
+
+/// Decoder configuration.
+#[derive(Debug, Clone)]
+pub struct YoloConfig {
+    /// Input image extent the grid maps back to.
+    pub img_h: f32,
+    pub img_w: f32,
+    /// Anchor box sizes in grid-cell units (w, h).
+    pub anchors: Vec<(f32, f32)>,
+    pub obj_threshold: f32,
+    pub nms_iou: f32,
+}
+
+impl Default for YoloConfig {
+    fn default() -> Self {
+        YoloConfig {
+            img_h: 60.0,
+            img_w: 80.0,
+            // Nao robots are tall boxes; anchors in cell units.
+            anchors: vec![(0.8, 2.0), (1.2, 3.0), (1.8, 4.0), (2.5, 5.0)],
+            obj_threshold: 0.9,
+            nms_iou: 0.45,
+        }
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Decode a `[gh, gw, anchors*5]` head tensor into detections.
+pub fn decode(head: &Tensor, cfg: &YoloConfig) -> Result<Vec<Detection>> {
+    let dims = head.dims();
+    if dims.len() != 3 {
+        bail!("yolo head must be 3-d, got {:?}", dims);
+    }
+    let (gh, gw, c) = (dims[0], dims[1], dims[2]);
+    let na = cfg.anchors.len();
+    if c != na * 5 {
+        bail!("head channels {c} != anchors*5 = {}", na * 5);
+    }
+    let cell_h = cfg.img_h / gh as f32;
+    let cell_w = cfg.img_w / gw as f32;
+
+    let mut dets = Vec::new();
+    for gy in 0..gh {
+        for gx in 0..gw {
+            for a in 0..na {
+                let base = a * 5;
+                let tx = head.at3(gy, gx, base);
+                let ty = head.at3(gy, gx, base + 1);
+                let tw = head.at3(gy, gx, base + 2);
+                let th = head.at3(gy, gx, base + 3);
+                let to = head.at3(gy, gx, base + 4);
+                let score = sigmoid(to);
+                if score < cfg.obj_threshold {
+                    continue;
+                }
+                let (aw, ah) = cfg.anchors[a];
+                let cx = (gx as f32 + sigmoid(tx)) * cell_w;
+                let cy = (gy as f32 + sigmoid(ty)) * cell_h;
+                let bw = aw * tw.clamp(-4.0, 4.0).exp() * cell_w;
+                let bh = ah * th.clamp(-4.0, 4.0).exp() * cell_h;
+                dets.push(Detection {
+                    y: cy - bh / 2.0,
+                    x: cx - bw / 2.0,
+                    h: bh,
+                    w: bw,
+                    score,
+                    class: 0,
+                });
+            }
+        }
+    }
+    Ok(nms(dets, cfg.nms_iou))
+}
+
+/// Inverse of [`decode`] for one target box — used by tests and by the
+/// synthetic trainer's target construction (Python mirrors this).
+pub fn encode_target(det: &Detection, cfg: &YoloConfig, gh: usize, gw: usize) -> Result<(usize, usize, usize, [f32; 5])> {
+    let cell_h = cfg.img_h / gh as f32;
+    let cell_w = cfg.img_w / gw as f32;
+    let cy = det.y + det.h / 2.0;
+    let cx = det.x + det.w / 2.0;
+    let gy = (cy / cell_h) as usize;
+    let gx = (cx / cell_w) as usize;
+    if gy >= gh || gx >= gw {
+        bail!("box center outside grid");
+    }
+    // best anchor by IoU of (w, h) only
+    let (mut best_a, mut best_iou) = (0usize, -1.0f32);
+    for (a, &(aw, ah)) in cfg.anchors.iter().enumerate() {
+        let (aw, ah) = (aw * cell_w, ah * cell_h);
+        let inter = det.w.min(aw) * det.h.min(ah);
+        let union = det.w * det.h + aw * ah - inter;
+        let iou = inter / union;
+        if iou > best_iou {
+            best_iou = iou;
+            best_a = a;
+        }
+    }
+    let (aw, ah) = cfg.anchors[best_a];
+    let fx = cx / cell_w - gx as f32;
+    let fy = cy / cell_h - gy as f32;
+    let logit = |p: f32| (p.clamp(1e-4, 1.0 - 1e-4) / (1.0 - p.clamp(1e-4, 1.0 - 1e-4))).ln();
+    let vals = [
+        logit(fx),
+        logit(fy),
+        (det.w / (aw * cell_w)).ln(),
+        (det.h / (ah * cell_h)).ln(),
+        logit(0.95), // objectness target
+    ];
+    Ok((gy, gx, best_a, vals))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_head_decodes_to_nothing() {
+        // all-zero logits → sigmoid(0)=0.5 objectness; threshold 0.6 rejects
+        let head = Tensor::zeros(&[15, 20, 20]);
+        let cfg = YoloConfig { obj_threshold: 0.6, ..Default::default() };
+        assert!(decode(&head, &cfg).unwrap().is_empty());
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let cfg = YoloConfig::default();
+        let gt = Detection { y: 10.0, x: 30.0, h: 24.0, w: 10.0, score: 1.0, class: 0 };
+        let (gy, gx, a, vals) = encode_target(&gt, &cfg, 15, 20).unwrap();
+        let mut head = Tensor::zeros(&[15, 20, 20]);
+        // strongly negative objectness everywhere else
+        for cell in head.data_mut().iter_mut() {
+            *cell = 0.0;
+        }
+        for gyy in 0..15 {
+            for gxx in 0..20 {
+                for aa in 0..4 {
+                    *head.at3_mut(gyy, gxx, aa * 5 + 4) = -10.0;
+                }
+            }
+        }
+        for (i, v) in vals.iter().enumerate() {
+            *head.at3_mut(gy, gx, a * 5 + i) = *v;
+        }
+        let dets = decode(&head, &cfg).unwrap();
+        assert_eq!(dets.len(), 1);
+        let d = &dets[0];
+        assert!((d.x - gt.x).abs() < 1.5, "{d:?}");
+        assert!((d.y - gt.y).abs() < 1.5, "{d:?}");
+        assert!((d.w - gt.w).abs() / gt.w < 0.15);
+        assert!((d.h - gt.h).abs() / gt.h < 0.15);
+    }
+
+    #[test]
+    fn rejects_wrong_channel_count() {
+        let head = Tensor::zeros(&[15, 20, 19]);
+        assert!(decode(&head, &YoloConfig::default()).is_err());
+    }
+
+    #[test]
+    fn nms_is_applied() {
+        let cfg = YoloConfig { obj_threshold: 0.4, ..Default::default() };
+        // objectness 0.5 everywhere → a flood of 15*20*4 = 1200 boxes; the
+        // four same-cell anchors overlap heavily, so NMS must thin the set
+        // substantially below the raw count.
+        let head = Tensor::zeros(&[15, 20, 20]);
+        let dets = decode(&head, &cfg).unwrap();
+        assert!(!dets.is_empty());
+        assert!(dets.len() < 15 * 20 * 4 * 3 / 4, "nms did not thin: {}", dets.len());
+    }
+}

@@ -1,0 +1,138 @@
+//! Cross-engine equivalence — the reproduction's strongest correctness
+//! statement: the SAME trained weights produce the SAME function through
+//! three entirely different execution paths:
+//!
+//! 1. NNCG-generated C (cc + dlopen)         — the paper's contribution,
+//! 2. the naive Rust interpreter             — Eq. 1–6 transcription,
+//! 3. the JAX/Pallas-authored HLO via PJRT   — the three-layer AOT bridge.
+//!
+//! Paths 1↔2 are always checked. Path 3 additionally requires the
+//! artifacts built by `make artifacts`; those tests self-skip (with a
+//! note) when artifacts are absent so `cargo test` works standalone.
+
+use nncg::cc::CompiledCnn;
+use nncg::codegen::CodegenOptions;
+use nncg::experiments::{build_engine, default_artifacts_dir, default_weights_dir, default_work_dir, load_model};
+use nncg::runtime::{EngineKind, InferenceEngine};
+use nncg::tensor::Tensor;
+use nncg::util::XorShift64;
+
+fn artifacts_available(model: &str) -> bool {
+    default_artifacts_dir().join(format!("{model}.hlo.txt")).exists()
+}
+
+fn weights_available(model: &str) -> bool {
+    default_weights_dir().join(format!("{model}.nncgw")).exists()
+}
+
+/// |a - b| must be tiny relative to f32 conv accumulation error.
+const TOL: f32 = 2e-4;
+
+fn check_three_way(model_name: &str, trials: usize) {
+    if !weights_available(model_name) || !artifacts_available(model_name) {
+        eprintln!("SKIP three-way {model_name}: run `make artifacts` first");
+        return;
+    }
+    let model = load_model(model_name, &default_weights_dir()).unwrap();
+    let opts = CodegenOptions::sse3();
+    let nncg = build_engine(EngineKind::Nncg, &model, &opts, &default_artifacts_dir(), &default_work_dir()).unwrap();
+    let interp = build_engine(EngineKind::Interp, &model, &opts, &default_artifacts_dir(), &default_work_dir()).unwrap();
+    let xla = build_engine(EngineKind::Xla, &model, &opts, &default_artifacts_dir(), &default_work_dir()).unwrap();
+
+    let mut rng = XorShift64::new(0xE2E);
+    for t in 0..trials {
+        let x = Tensor::rand(model.input.dims(), 0.0, 1.0, &mut rng);
+        let y_interp = interp.infer(&x).unwrap();
+        let y_nncg = nncg.infer(&x).unwrap();
+        let y_xla = xla.infer(&x).unwrap();
+        let e_cn = y_nncg.max_abs_diff(&y_interp).unwrap();
+        let e_xla = y_xla.max_abs_diff(&y_interp).unwrap();
+        assert!(e_cn < TOL, "{model_name} trial {t}: C vs interp err {e_cn}");
+        assert!(e_xla < TOL, "{model_name} trial {t}: XLA vs interp err {e_xla}");
+    }
+}
+
+#[test]
+fn three_way_equivalence_ball() {
+    check_three_way("ball", 5);
+}
+
+#[test]
+fn three_way_equivalence_pedestrian() {
+    check_three_way("pedestrian", 3);
+}
+
+#[test]
+fn three_way_equivalence_robot() {
+    check_three_way("robot", 2);
+}
+
+/// Full option-matrix verification on the real paper models (the lib test
+/// covers the tiny net; this is the heavyweight version).
+#[test]
+fn generated_c_matches_interp_on_paper_models_all_isas() {
+    use nncg::codegen::{Isa, Unroll};
+    for name in ["ball", "pedestrian"] {
+        let model = load_model(name, &default_weights_dir()).unwrap();
+        for isa in [Isa::Generic, Isa::Sse3] {
+            for unroll in [Unroll::None, Unroll::KeepOuter2] {
+                let opts = CodegenOptions { isa, unroll, ..Default::default() };
+                let err =
+                    nncg::cc::verify_against_interp(&model, &opts, default_work_dir(), 2, 7).unwrap();
+                assert!(err < TOL, "{name} {}: err {err}", opts.tag());
+            }
+        }
+    }
+}
+
+/// Full-unroll on the ball net (the paper's fastest configuration).
+#[test]
+fn full_unroll_ball_matches_interp() {
+    let model = load_model("ball", &default_weights_dir()).unwrap();
+    let err = nncg::cc::verify_against_interp(
+        &model,
+        &CodegenOptions::sse3_full_unroll(),
+        default_work_dir(),
+        3,
+        13,
+    )
+    .unwrap();
+    assert!(err < TOL, "err {err}");
+}
+
+/// Robot detector (BN folding + leaky ReLU) through generated C.
+#[test]
+fn robot_with_batchnorm_matches_interp() {
+    let model = load_model("robot", &default_weights_dir()).unwrap();
+    let err =
+        nncg::cc::verify_against_interp(&model, &CodegenOptions::sse3(), default_work_dir(), 2, 3).unwrap();
+    assert!(err < TOL, "err {err}");
+}
+
+/// The dlopen engine must be reusable across threads (coordinator workers).
+#[test]
+fn compiled_cnn_is_thread_safe() {
+    let model = load_model("ball", &default_weights_dir()).unwrap();
+    let cnn = std::sync::Arc::new(
+        CompiledCnn::build(&model, &CodegenOptions::sse3(), default_work_dir()).unwrap(),
+    );
+    let mut rng = XorShift64::new(5);
+    let x = Tensor::rand(&[16, 16, 1], 0.0, 1.0, &mut rng);
+    let expected = cnn.infer(&x).unwrap();
+    let handles: Vec<_> = (0..4)
+        .map(|_| {
+            let cnn = std::sync::Arc::clone(&cnn);
+            let x = x.clone();
+            let expected = expected.clone();
+            std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let y = cnn.infer(&x).unwrap();
+                    assert_eq!(y, expected);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,156 @@
+//! End-to-end pipeline tests: full serving stack over synthetic frames,
+//! model save/load/deploy round trips, and failure injection.
+
+use nncg::cc::CompiledCnn;
+use nncg::codegen::CodegenOptions;
+use nncg::coordinator;
+use nncg::experiments::{default_weights_dir, default_work_dir, load_model};
+use nncg::graph::zoo;
+use nncg::interp::InterpEngine;
+use nncg::tensor::Tensor;
+use nncg::util::XorShift64;
+use nncg::vision::{ball, nms, render};
+use std::sync::Arc;
+
+/// Frame → candidates → classify → NMS through the coordinator with the
+/// generated-C engine. The structural assertion is that every candidate
+/// gets classified and metrics add up.
+#[test]
+fn frame_pipeline_end_to_end_with_generated_c() {
+    let model = load_model("ball", &default_weights_dir()).unwrap();
+    let cnn = CompiledCnn::build(&model, &CodegenOptions::sse3(), default_work_dir()).unwrap();
+    let handle = coordinator::serve_single("ball", Arc::new(cnn), 2);
+
+    let mut rng = XorShift64::new(31);
+    let mut total = 0usize;
+    for _ in 0..5 {
+        let (img, _) = render::soccer_frame(60, 80, 2, 1, &mut rng);
+        let cands = ball::extract_candidates(&img, &ball::BallExtractorConfig::default());
+        let patches: Vec<Tensor> = cands.iter().map(|c| ball::candidate_patch(&img, c)).collect();
+        total += patches.len();
+        if patches.is_empty() {
+            continue;
+        }
+        let outs = handle.infer_burst("ball", patches).unwrap();
+        assert_eq!(outs.len(), cands.len());
+        let dets: Vec<_> = cands
+            .iter()
+            .zip(&outs)
+            .map(|(c, o)| ball::to_detection(c, o.data()[1]))
+            .collect();
+        let kept = nms(dets.clone(), 0.3);
+        assert!(kept.len() <= dets.len());
+    }
+    let snap = handle.metrics.snapshot();
+    assert_eq!(snap.total_requests as usize, total);
+    assert_eq!(snap.errors, 0);
+    handle.shutdown();
+}
+
+/// Save → load → generate → compile → infer must agree with the original.
+#[test]
+fn save_load_codegen_round_trip() {
+    let dir = std::env::temp_dir().join("nncg-e2e-roundtrip");
+    let model = zoo::pedestrian_classifier().with_random_weights(88);
+    nncg::model::save(&model, &dir.join("pedestrian")).unwrap();
+    let loaded = nncg::model::load(&dir.join("pedestrian")).unwrap();
+
+    let cnn_a = CompiledCnn::build(&model, &CodegenOptions::sse3(), &dir).unwrap();
+    let cnn_b = CompiledCnn::build(&loaded, &CodegenOptions::sse3(), &dir).unwrap();
+    let mut rng = XorShift64::new(9);
+    let x = Tensor::rand(&[36, 18, 1], 0.0, 1.0, &mut rng);
+    assert_eq!(cnn_a.infer(&x).unwrap(), cnn_b.infer(&x).unwrap());
+}
+
+/// The exported architecture JSON from Python must parse into the same
+/// shapes as the Rust zoo (schema lock between the two sides).
+#[test]
+fn python_arch_json_matches_rust_zoo() {
+    for name in zoo::PAPER_MODELS {
+        let path = default_weights_dir().join(format!("{name}.json"));
+        if !path.exists() {
+            eprintln!("SKIP schema check {name}: run `make artifacts` first");
+            continue;
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let from_py = nncg::model::model_from_json(&text).unwrap();
+        let from_zoo = zoo::by_name(name).unwrap().with_random_weights(1);
+        assert_eq!(from_py.input, from_zoo.input, "{name}");
+        assert_eq!(from_py.layers.len(), from_zoo.layers.len(), "{name}");
+        assert_eq!(
+            from_py.output_shape().unwrap(),
+            from_zoo.output_shape().unwrap(),
+            "{name}"
+        );
+    }
+}
+
+/// Failure injection: corrupt weights file, wrong shapes, bad JSON.
+#[test]
+fn corrupted_weight_files_are_rejected() {
+    let dir = std::env::temp_dir().join("nncg-e2e-corrupt");
+    std::fs::create_dir_all(&dir).unwrap();
+    let model = zoo::ball_classifier().with_random_weights(3);
+    nncg::model::save(&model, &dir.join("ball")).unwrap();
+
+    // truncate the weights file
+    let wpath = dir.join("ball.nncgw");
+    let bytes = std::fs::read(&wpath).unwrap();
+    std::fs::write(&wpath, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(nncg::model::load(&dir.join("ball")).is_err());
+
+    // flip the magic
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xFF;
+    std::fs::write(&wpath, &bad).unwrap();
+    assert!(nncg::model::load(&dir.join("ball")).is_err());
+
+    // valid weights, corrupted architecture JSON
+    std::fs::write(&wpath, &bytes).unwrap();
+    std::fs::write(dir.join("ball.json"), "{not json").unwrap();
+    assert!(nncg::model::load(&dir.join("ball")).is_err());
+}
+
+/// Coordinator must survive an engine that errors (oversized inputs) and
+/// keep serving good requests afterwards.
+#[test]
+fn coordinator_recovers_from_bad_requests() {
+    let engine = Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(2)).unwrap());
+    let handle = coordinator::serve_single("tiny", engine, 1);
+    assert!(handle.infer("tiny", Tensor::zeros(&[3, 3, 3])).is_err());
+    assert!(handle.infer("tiny", Tensor::zeros(&[8, 8, 1])).is_ok());
+    let snap = handle.metrics.snapshot();
+    assert_eq!(snap.total_requests, 2);
+    assert_eq!(snap.errors, 1);
+    handle.shutdown();
+}
+
+/// Trained-weights path: if `make train` has run, the ball classifier must
+/// actually separate synthetic positives from negatives through the
+/// *generated C* (the full train→export→codegen→deploy chain).
+#[test]
+fn trained_ball_classifier_separates_classes_through_generated_c() {
+    let wdir = default_weights_dir();
+    let log = wdir.join("train_log_ball.txt");
+    if !log.exists() {
+        eprintln!("SKIP trained-accuracy check: run `make train` first");
+        return;
+    }
+    let model = load_model("ball", &wdir).unwrap();
+    let cnn = CompiledCnn::build(&model, &CodegenOptions::sse3(), default_work_dir()).unwrap();
+    let mut rng = XorShift64::new(1717);
+    let (mut correct, n) = (0usize, 100usize);
+    for i in 0..n {
+        let positive = i % 2 == 0;
+        let patch = render::ball_patch(positive, &mut rng);
+        let probs = cnn.infer(&patch).unwrap();
+        let pred_ball = probs.data()[1] > 0.5;
+        if pred_ball == positive {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / n as f64;
+    // Rust renderer differs slightly from the python training distribution;
+    // demand clearly-better-than-chance rather than the training accuracy.
+    assert!(acc > 0.7, "generated-C accuracy {acc} on synthetic patches");
+}
