@@ -1,7 +1,10 @@
 //! Reproduces paper Table VII: the feature ablation (general ISA vs SSSE3
-//! vs SSSE3 + full unroll) on the ball classifier, plus an extended sweep
-//! over every (ISA × unroll × const-mode) combination — the ablation for
-//! the design choices called out in DESIGN.md.
+//! vs SSSE3 + full unroll) on the ball classifier, plus the pad/tile
+//! ablation (pad-copy vs padless × untiled vs tiled) over every paper
+//! model — written to `BENCH_table7.json` (override the path with
+//! `NNCG_BENCH_JSON`) so future sessions can track the perf trajectory —
+//! plus an extended sweep over every (ISA × unroll × const-mode)
+//! combination.
 
 use nncg::bench_harness::{bench, BenchConfig, Table};
 use nncg::cc::CompiledCnn;
@@ -12,11 +15,18 @@ use nncg::util::{fmt_us, XorShift64};
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("NNCG_BENCH_QUICK").is_ok();
-    // The paper's three-column table.
+    // The paper's three-column table (+ padless/tiled rows).
     let result = nncg::experiments::run_table7(quick)?;
     println!("{}", result.rendered);
 
-    // Extended ablation: full option matrix.
+    // Pad/tile ablation over all paper models → BENCH_table7.json.
+    let rows = nncg::experiments::run_pad_tile_ablation(quick)?;
+    println!("{}", nncg::experiments::render_ablation(&rows));
+    let json_path = std::env::var("NNCG_BENCH_JSON").unwrap_or_else(|_| "BENCH_table7.json".to_string());
+    nncg::experiments::write_bench_json(std::path::Path::new(&json_path), &rows, "measured")?;
+    println!("wrote {json_path} ({} rows)\n", rows.len());
+
+    // Extended ablation: full option matrix on the ball classifier.
     let model = load_model("ball", &default_weights_dir())?;
     let mut rng = XorShift64::new(7);
     let input = Tensor::rand(model.input.dims(), 0.0, 1.0, &mut rng);

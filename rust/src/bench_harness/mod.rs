@@ -5,6 +5,12 @@
 //! (100,000 for the small classifiers, 1,000 for the robot detector), and
 //! report the mean; we additionally keep median/p95/stddev because single
 //! shared-machine runs are noisy.
+//!
+//! Sub-µs kernels (the ball classifier runs in ~2µs) would otherwise be
+//! dominated by `Instant::now()` overhead, so each timestamped sample
+//! batches `inner` calls. `inner == AUTO_INNER` (the preset default)
+//! calibrates that batch size from a short probe run instead of
+//! hardcoding 1.
 
 mod stats;
 mod table;
@@ -14,13 +20,27 @@ pub use table::Table;
 
 use std::time::Instant;
 
+/// Sentinel: calibrate `inner` from a probe run (see [`BenchConfig`]).
+pub const AUTO_INNER: usize = 0;
+
+/// Probe calls used by the auto-calibration.
+const CAL_PROBES: usize = 9;
+
+/// Target wall-clock per timestamped batch, µs. Large against clock
+/// overhead (~20ns), small against the shortest test budgets.
+const CAL_TARGET_US: f64 = 64.0;
+
+/// Upper bound on the calibrated batch size.
+const CAL_MAX_INNER: usize = 4096;
+
 /// Benchmark configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchConfig {
     pub warmup_iters: usize,
     pub iters: usize,
     /// Batch inner iterations per timestamp to amortize clock overhead for
-    /// sub-µs functions.
+    /// sub-µs functions. [`AUTO_INNER`] (0) calibrates it from a probe run
+    /// after warmup; any other value is used as-is.
     pub inner: usize,
 }
 
@@ -29,18 +49,36 @@ impl BenchConfig {
     /// 100.000 times"), scaled down 10× to keep the full suite fast; the
     /// mean is stable well before that.
     pub fn small() -> Self {
-        BenchConfig { warmup_iters: 200, iters: 10_000, inner: 1 }
+        BenchConfig { warmup_iters: 200, iters: 10_000, inner: AUTO_INNER }
     }
 
     /// Paper settings for the larger robot detector ("1000 times").
     pub fn large() -> Self {
-        BenchConfig { warmup_iters: 20, iters: 1_000, inner: 1 }
+        BenchConfig { warmup_iters: 20, iters: 1_000, inner: AUTO_INNER }
     }
 
-    /// Quick settings for tests.
+    /// Quick settings for tests (fixed inner keeps call counts exact).
     pub fn quick() -> Self {
         BenchConfig { warmup_iters: 5, iters: 50, inner: 1 }
     }
+}
+
+/// Pick an inner-batch size so one timestamped batch takes about
+/// [`CAL_TARGET_US`]: median single-call time over a few probes, clamped
+/// to `[1, CAL_MAX_INNER]`.
+fn calibrate_inner<F: FnMut()>(f: &mut F) -> usize {
+    let mut probes = [0.0f64; CAL_PROBES];
+    for p in probes.iter_mut() {
+        let t0 = Instant::now();
+        f();
+        *p = t0.elapsed().as_secs_f64() * 1e6;
+    }
+    probes.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = probes[CAL_PROBES / 2];
+    if median <= 0.0 {
+        return CAL_MAX_INNER;
+    }
+    ((CAL_TARGET_US / median).ceil() as usize).clamp(1, CAL_MAX_INNER)
 }
 
 /// Time a closure per the config; returns per-call statistics in µs.
@@ -48,14 +86,15 @@ pub fn bench<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Stats {
     for _ in 0..cfg.warmup_iters {
         f();
     }
+    let inner = if cfg.inner == AUTO_INNER { calibrate_inner(&mut f) } else { cfg.inner };
     let mut samples_us = Vec::with_capacity(cfg.iters);
     for _ in 0..cfg.iters {
         let t0 = Instant::now();
-        for _ in 0..cfg.inner {
+        for _ in 0..inner {
             f();
         }
         let el = t0.elapsed();
-        samples_us.push(el.as_secs_f64() * 1e6 / cfg.inner as f64);
+        samples_us.push(el.as_secs_f64() * 1e6 / inner as f64);
     }
     Stats::from_samples(samples_us)
 }
@@ -80,5 +119,35 @@ mod tests {
         let s = bench(&cfg, || std::thread::sleep(std::time::Duration::from_micros(200)));
         assert!(s.mean_us > 150.0 && s.mean_us < 5000.0, "mean={}", s.mean_us);
         assert!(s.median_us > 150.0);
+    }
+
+    #[test]
+    fn auto_inner_scales_up_for_fast_functions() {
+        // A ~ns closure: calibration must batch many calls per timestamp.
+        let mut calls = 0usize;
+        let cfg = BenchConfig { warmup_iters: 1, iters: 5, inner: AUTO_INNER };
+        let s = bench(&cfg, || calls += 1);
+        assert_eq!(s.n, 5);
+        // warmup(1) + probes(9) + iters*inner; inner > 1 for a no-op body.
+        assert!(calls > 1 + 9 + 5, "auto inner did not batch: {calls} calls");
+    }
+
+    #[test]
+    fn auto_inner_stays_at_one_for_slow_functions() {
+        let mut calls = 0usize;
+        let cfg = BenchConfig { warmup_iters: 0, iters: 3, inner: AUTO_INNER };
+        bench(&cfg, || {
+            calls += 1;
+            std::thread::sleep(std::time::Duration::from_micros(300));
+        });
+        // probes(9) + iters*1 — a >CAL_TARGET_US call must not be batched.
+        assert_eq!(calls, 9 + 3);
+    }
+
+    #[test]
+    fn presets_use_auto_inner() {
+        assert_eq!(BenchConfig::small().inner, AUTO_INNER);
+        assert_eq!(BenchConfig::large().inner, AUTO_INNER);
+        assert_eq!(BenchConfig::quick().inner, 1);
     }
 }

@@ -2,7 +2,7 @@
 
 use super::args::Args;
 use crate::cc::{CcDriver, CcTarget, CompiledCnn};
-use crate::codegen::{generate_c, CodegenOptions, Isa, Unroll};
+use crate::codegen::{generate_c, CodegenOptions, Isa, PadMode, TileMode, Unroll};
 use crate::coordinator;
 use crate::experiments::{self, build_engine, load_model};
 use crate::platform::{paper_platforms, GpuModel};
@@ -22,7 +22,18 @@ fn opts_from_args(args: &Args) -> Result<CodegenOptions> {
     };
     let unroll = Unroll::from_name(args.get_or("unroll", "keep-outer-2"))
         .ok_or_else(|| anyhow::anyhow!("unknown --unroll (none|2|1|full)"))?;
-    Ok(CodegenOptions { isa, unroll, test_harness: args.has_flag("harness"), ..Default::default() })
+    let pad_mode = PadMode::from_name(args.get_or("pad-mode", "auto"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --pad-mode (auto|copy|padless)"))?;
+    let tile = TileMode::from_name(args.get_or("tile", "auto"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --tile (auto|off|2..8)"))?;
+    Ok(CodegenOptions {
+        isa,
+        unroll,
+        pad_mode,
+        tile,
+        test_harness: args.has_flag("harness"),
+        ..Default::default()
+    })
 }
 
 fn weights_dir(args: &Args) -> PathBuf {
@@ -322,7 +333,21 @@ mod tests {
         let o = opts_from_args(&args(&["--isa", "generic", "--unroll", "full"])).unwrap();
         assert_eq!(o.isa, Isa::Generic);
         assert_eq!(o.unroll, Unroll::Full);
+        assert_eq!(o.pad_mode, PadMode::Auto);
+        assert_eq!(o.tile, TileMode::Auto);
         assert!(opts_from_args(&args(&["--isa", "avx512"])).is_err());
+    }
+
+    #[test]
+    fn pad_and_tile_knobs_parse() {
+        let o = opts_from_args(&args(&["--pad-mode", "copy", "--tile", "off"])).unwrap();
+        assert_eq!(o.pad_mode, PadMode::Copy);
+        assert_eq!(o.tile, TileMode::Off);
+        let o = opts_from_args(&args(&["--pad-mode", "padless", "--tile", "4"])).unwrap();
+        assert_eq!(o.pad_mode, PadMode::Padless);
+        assert_eq!(o.tile, TileMode::Fixed(4));
+        assert!(opts_from_args(&args(&["--pad-mode", "mirror"])).is_err());
+        assert!(opts_from_args(&args(&["--tile", "16"])).is_err());
     }
 
     #[test]

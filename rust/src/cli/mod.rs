@@ -51,9 +51,10 @@ USAGE: nncg <command> [flags]
 COMMANDS:
   describe        print a model architecture table (--model ball|pedestrian|robot)
   generate        emit the C file for a model (--model, --isa generic|sse3|avx2,
-                  --unroll none|2|1|full, --harness, -o FILE)
+                  --unroll none|2|1|full, --pad-mode auto|copy|padless,
+                  --tile auto|off|2..8, --harness, -o FILE)
   verify          compile generated C and compare against the interpreter
-                  (--model, --isa, --unroll, --trials N)
+                  (--model, --isa, --unroll, --pad-mode, --tile, --trials N)
   run             classify one synthetic input (--model, --engine nncg|interp|xla,
                   --artifacts DIR for xla)
   bench           reproduce a paper table (--table 4|5|6|7|gpu, --quick)

@@ -3,7 +3,7 @@
 
 use super::conv::scalar_act;
 use super::cwriter::{fmt_f32, CWriter};
-use super::simd::{emit_vec_activation, VecSpec};
+use super::simd::{emit_vec_activation, ChannelSchedule};
 use super::{LayerCtx, Unroll};
 use crate::graph::Activation;
 use anyhow::Result;
@@ -23,35 +23,44 @@ pub(crate) fn emit_activation(w: &mut CWriter, ctx: &LayerCtx<'_>, act: Activati
             emit_softmax_over(w, ctx, ctx.dst, n);
         }
         Activation::Relu | Activation::LeakyRelu(_) => {
-            // Elementwise over the flat buffer; vectorize when the count
-            // divides the lane width.
-            let vec = VecSpec::for_channels(ctx.opts.isa, n);
+            // Elementwise over the flat buffer, lane-scheduled: vector
+            // groups over the divisible prefix, scalar remainder tail.
+            let sched = ChannelSchedule::for_channels(ctx.opts.isa, n);
             if ctx.opts.unroll == Unroll::Full {
-                if let Some(v) = vec {
-                    for i0 in (0..n).step_by(v.width) {
-                        w.open("");
-                        w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("{} + {i0}", ctx.src))));
-                        emit_vec_activation(w, v, act, "a");
-                        w.line(&v.storeu(&format!("{} + {i0}", ctx.dst), "a"));
-                        w.close();
-                    }
-                } else {
-                    for i in 0..n {
-                        let val = format!("{}[{i}]", ctx.src);
-                        w.line(&format!("{}[{i}] = {};", ctx.dst, scalar_act(&val, act)));
+                for seg in &sched.segments {
+                    if let Some(v) = seg.vec {
+                        for i0 in (seg.start..seg.end()).step_by(v.width) {
+                            w.open("");
+                            w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("{} + {i0}", ctx.src))));
+                            emit_vec_activation(w, v, act, "a");
+                            w.line(&v.storeu(&format!("{} + {i0}", ctx.dst), "a"));
+                            w.close();
+                        }
+                    } else {
+                        for i in seg.start..seg.end() {
+                            let val = format!("{}[{i}]", ctx.src);
+                            w.line(&format!("{}[{i}] = {};", ctx.dst, scalar_act(&val, act)));
+                        }
                     }
                 }
-            } else if let Some(v) = vec {
-                w.open(&format!("for (i = 0; i < {n}; i += {})", v.width));
-                w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("{} + i", ctx.src))));
-                emit_vec_activation(w, v, act, "a");
-                w.line(&v.storeu(&format!("{} + i", ctx.dst), "a"));
-                w.close();
             } else {
-                w.open(&format!("for (i = 0; i < {n}; i++)"));
-                let val = format!("{}[i]", ctx.src);
-                w.line(&format!("{}[i] = {};", ctx.dst, scalar_act(&val, act)));
-                w.close();
+                for seg in &sched.segments {
+                    if seg.len == 0 {
+                        continue;
+                    }
+                    if let Some(v) = seg.vec {
+                        w.open(&format!("for (i = {}; i < {}; i += {})", seg.start, seg.end(), v.width));
+                        w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("{} + i", ctx.src))));
+                        emit_vec_activation(w, v, act, "a");
+                        w.line(&v.storeu(&format!("{} + i", ctx.dst), "a"));
+                        w.close();
+                    } else {
+                        w.open(&format!("for (i = {}; i < {}; i++)", seg.start, seg.end()));
+                        let val = format!("{}[i]", ctx.src);
+                        w.line(&format!("{}[i] = {};", ctx.dst, scalar_act(&val, act)));
+                        w.close();
+                    }
+                }
             }
         }
     }

@@ -1,19 +1,26 @@
 //! Convolution emitter — the heart of NNCG (paper §II-B.1).
 //!
-//! Strategy per the paper, adapted as described in `codegen`:
+//! Strategy per the paper, extended as described in `codegen`:
 //!
-//! 1. If the layer pads, materialize x̂ (Eq. 1) into the shared scratch
-//!    buffer `nncg_pad` so the compute loops are branch-free (P3: the pad
-//!    geometry is constant-folded at *generation* time).
-//! 2. Emit the 6-deep loop nest of Eq. 2 at the configured unroll level:
-//!    spatial loops (`i`, `j`) optionally kept, kernel/channel loops
-//!    (`n`, `m`, `o`, `k`) unrolled with inline weight constants, or kept
-//!    with `static const` weight arrays.
-//! 3. SSE mode vectorizes over `k` (output channels) in groups of 4 — the
-//!    paper's P4 choice, possible because C is the minor-most axis.
+//! 1. Padding is resolved at *generation* time (P3). In the default
+//!    **padless** mode the generator splits the output plane into an
+//!    interior region (full kernel window in bounds — a branch-free loop
+//!    that indexes the source directly) plus peeled border rows/columns
+//!    whose out-of-bounds taps are simply *dropped* (zero-padding means
+//!    those MACs contribute nothing). The legacy **copy** mode
+//!    materializes x̂ (Eq. 1) into the shared `nncg_pad` scratch buffer.
+//! 2. The channel dimension follows a [`ChannelSchedule`]: full vector
+//!    groups, then narrower vectors, then scalar remainder lanes — so
+//!    `c_out % width != 0` layers keep a vectorized main body.
+//! 3. Interior columns are register-tiled: a block of `tile` output
+//!    pixels shares one weight-stationary register per tap (the weight
+//!    vector is materialized once and FMA'd into every pixel's
+//!    accumulators), cutting weight loads/materializations by the block
+//!    width.
 
 use super::cwriter::{fmt_f32, CWriter};
-use super::simd::{emit_vec_activation, VecSpec};
+use super::schedule::{self, AxisPlan, PadStrategy};
+use super::simd::{emit_vec_activation, ChannelSchedule, VecSpec};
 use super::{ConstMode, LayerCtx, Unroll};
 use crate::graph::{Activation, Padding};
 use crate::tensor::{Shape, Tensor};
@@ -33,6 +40,176 @@ pub(crate) fn padded_extent(input: &Shape, wdims: &[usize], stride: (usize, usiz
         Padding::Valid => 0,
     };
     Ok((input.h() + th, input.w() + tw))
+}
+
+/// Valid kernel-tap ranges for one emitted cell block (constant at
+/// generation time; border cells get trimmed windows).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct TapWindow {
+    pub n0: usize,
+    pub n1: usize,
+    pub m0: usize,
+    pub m1: usize,
+}
+
+/// Spatial region walker shared by the conv and depthwise emitters.
+///
+/// Walks output rows/columns per the two [`AxisPlan`]s and the unroll
+/// level, peeling border cells and blocking interior columns into
+/// register tiles, then hands each block to the layer-specific cell
+/// emitter: `block(w, window, s_name, s_offs, d_name, d_offs)` where
+/// `s_offs[t]` addresses cell `t`'s first valid tap relative to `s_name`
+/// and `d_offs[t]` its output cell.
+pub(crate) struct SpatialWalk {
+    pub rows: AxisPlan,
+    pub cols: AxisPlan,
+    /// Interior column-block width (1 = untiled).
+    pub tile: usize,
+    pub unroll: Unroll,
+    pub src: String,
+    pub dst: String,
+    /// Source elements per row.
+    pub row_elems: usize,
+    /// Source elements per column step (the channel-minor extent).
+    pub cmin: usize,
+    /// Output elements per cell.
+    pub out_minor: usize,
+}
+
+/// `i*stride - pad` as a C int expression (non-negative where emitted).
+fn lin(var: &str, stride: usize, pad: usize) -> String {
+    if pad == 0 {
+        format!("{var}*{stride}")
+    } else {
+        format!("{var}*{stride} - {pad}")
+    }
+}
+
+impl SpatialWalk {
+    pub fn emit<F>(&self, w: &mut CWriter, mut block: F)
+    where
+        F: FnMut(&mut CWriter, TapWindow, &str, &[usize], &str, &[usize]),
+    {
+        match self.unroll {
+            Unroll::None => unreachable!("loop-form layers are emitted separately"),
+            Unroll::Full => {
+                for i in 0..self.rows.out {
+                    self.emit_row_fixed(w, i, &mut block);
+                }
+            }
+            Unroll::KeepOuter1 | Unroll::KeepOuter2 => {
+                for i in 0..self.rows.lo {
+                    self.emit_row_fixed(w, i, &mut block);
+                }
+                if self.rows.lo < self.rows.hi {
+                    w.open(&format!("for (i = {}; i < {}; i++)", self.rows.lo, self.rows.hi));
+                    w.line(&format!(
+                        "const float *s = {} + ({})*{};",
+                        self.src,
+                        lin("i", self.rows.stride, self.rows.pad),
+                        self.row_elems
+                    ));
+                    w.line(&format!("float *d = {} + i*{};", self.dst, self.cols.out * self.out_minor));
+                    self.emit_cols(w, 0, self.rows.kernel, &mut block);
+                    w.close();
+                }
+                for i in self.rows.hi..self.rows.out {
+                    self.emit_row_fixed(w, i, &mut block);
+                }
+            }
+        }
+    }
+
+    /// A row at a generation-time-constant coordinate (border rows, and
+    /// every row under full unroll).
+    fn emit_row_fixed<F>(&self, w: &mut CWriter, i: usize, block: &mut F)
+    where
+        F: FnMut(&mut CWriter, TapWindow, &str, &[usize], &str, &[usize]),
+    {
+        let (n0, n1) = self.rows.window(i);
+        w.open("");
+        w.line(&format!("const float *s = {} + {};", self.src, self.rows.src_start(i) * self.row_elems));
+        w.line(&format!("float *d = {} + {};", self.dst, i * self.cols.out * self.out_minor));
+        self.emit_cols(w, n0, n1, block);
+        w.close();
+    }
+
+    fn emit_cols<F>(&self, w: &mut CWriter, n0: usize, n1: usize, block: &mut F)
+    where
+        F: FnMut(&mut CWriter, TapWindow, &str, &[usize], &str, &[usize]),
+    {
+        for j in 0..self.cols.lo {
+            self.emit_col_fixed(w, n0, n1, j, block);
+        }
+        if self.cols.lo < self.cols.hi {
+            let interior = self.cols.hi - self.cols.lo;
+            if self.unroll.keeps_cols() {
+                let tb = self.tile.min(interior).max(1);
+                if tb > 1 {
+                    w.open(&format!(
+                        "for (j = {}; j + {} <= {}; j += {})",
+                        self.cols.lo, tb, self.cols.hi, tb
+                    ));
+                    self.emit_interior_body(w, n0, n1, tb, block);
+                    w.close();
+                    let rest = self.cols.lo + (interior / tb) * tb;
+                    if rest < self.cols.hi {
+                        w.open(&format!("for (j = {}; j < {}; j++)", rest, self.cols.hi));
+                        self.emit_interior_body(w, n0, n1, 1, block);
+                        w.close();
+                    }
+                } else {
+                    w.open(&format!("for (j = {}; j < {}; j++)", self.cols.lo, self.cols.hi));
+                    self.emit_interior_body(w, n0, n1, 1, block);
+                    w.close();
+                }
+            } else {
+                // Columns unrolled: block consecutive interior cells.
+                let mut j = self.cols.lo;
+                while j < self.cols.hi {
+                    let b = self.tile.min(self.cols.hi - j).max(1);
+                    let s_offs: Vec<usize> = (0..b)
+                        .map(|t| ((j + t) * self.cols.stride - self.cols.pad) * self.cmin)
+                        .collect();
+                    let d_offs: Vec<usize> = (0..b).map(|t| (j + t) * self.out_minor).collect();
+                    let win = TapWindow { n0, n1, m0: 0, m1: self.cols.kernel };
+                    block(w, win, "s", &s_offs, "d", &d_offs);
+                    j += b;
+                }
+            }
+        }
+        for j in self.cols.hi..self.cols.out {
+            self.emit_col_fixed(w, n0, n1, j, block);
+        }
+    }
+
+    /// Body of the kept interior-column loop (`j` symbolic).
+    fn emit_interior_body<F>(&self, w: &mut CWriter, n0: usize, n1: usize, b: usize, block: &mut F)
+    where
+        F: FnMut(&mut CWriter, TapWindow, &str, &[usize], &str, &[usize]),
+    {
+        w.line(&format!(
+            "const float *sj = s + ({})*{};",
+            lin("j", self.cols.stride, self.cols.pad),
+            self.cmin
+        ));
+        w.line(&format!("float *dj = d + j*{};", self.out_minor));
+        let s_offs: Vec<usize> = (0..b).map(|t| t * self.cols.stride * self.cmin).collect();
+        let d_offs: Vec<usize> = (0..b).map(|t| t * self.out_minor).collect();
+        let win = TapWindow { n0, n1, m0: 0, m1: self.cols.kernel };
+        block(w, win, "sj", &s_offs, "dj", &d_offs);
+    }
+
+    /// A border column at a constant coordinate.
+    fn emit_col_fixed<F>(&self, w: &mut CWriter, n0: usize, n1: usize, j: usize, block: &mut F)
+    where
+        F: FnMut(&mut CWriter, TapWindow, &str, &[usize], &str, &[usize]),
+    {
+        let (m0, m1) = self.cols.window(j);
+        let win = TapWindow { n0, n1, m0, m1 };
+        let s_off = self.cols.src_start(j) * self.cmin;
+        block(w, win, "s", &[s_off], "d", &[j * self.out_minor]);
+    }
 }
 
 pub(crate) fn emit_conv(
@@ -59,101 +236,261 @@ pub(crate) fn emit_conv(
         Padding::Valid => (0, 0),
     };
 
-    // --- Step 1: padded input (Eq. 1) -------------------------------------
-    let src: String = if pads {
-        emit_pad_fill_public(w, ctx, h_in, w_in, ctx.in_shape.c(), ph, pw, pad_top, pad_left)?;
+    let sched = ChannelSchedule::for_channels(ctx.opts.isa, c_out);
+    let padless = pads && schedule::pad_strategy(ctx.opts) == PadStrategy::Padless;
+
+    // --- Step 1: padding strategy -----------------------------------------
+    let src: String = if pads && !padless {
+        emit_pad_fill_public(w, ctx, h_in, w_in, c_in, ph, pw, pad_top, pad_left)?;
         ctx.padbuf.to_string()
     } else {
         ctx.src.to_string()
     };
 
     // --- Step 2/3: compute loops ------------------------------------------
-    let vec = VecSpec::for_channels(ctx.opts.isa, c_out);
-    let geom = ConvGeom {
+    if ctx.opts.unroll == Unroll::None {
+        return emit_conv_loops(w, ctx, &src, h_k, w_k, c_in, c_out, pw * c_in, stride, h_out, w_out, activation, &sched);
+    }
+
+    let (rows, cols) = if padless {
+        (
+            AxisPlan::padless(h_out, stride.0, h_k, pad_top, h_in),
+            AxisPlan::padless(w_out, stride.1, w_k, pad_left, w_in),
+        )
+    } else {
+        let (src_h, src_w) = if pads { (ph, pw) } else { (h_in, w_in) };
+        (AxisPlan::full(h_out, stride.0, h_k, src_h), AxisPlan::full(w_out, stride.1, w_k, src_w))
+    };
+    let row_elems = cols.input * c_in;
+    let tile = schedule::tile_width(ctx.opts, &sched, cols.interior());
+
+    let walk = SpatialWalk {
+        rows,
+        cols,
+        tile,
+        unroll: ctx.opts.unroll,
         src,
         dst: ctx.dst.to_string(),
-        h_k,
+        row_elems,
+        cmin: c_in,
+        out_minor: c_out,
+    };
+    let cells = ConvCells {
+        ctx,
+        weights,
+        bias,
+        activation,
+        sched: &sched,
+        row_elems,
         w_k,
         c_in,
         c_out,
-        pw_elems: pw * c_in,
-        stride,
-        h_out,
-        w_out,
-        idx: ctx.idx,
     };
+    walk.emit(w, |w, win, s, so, d, dofs| cells.emit_block(w, win, s, so, d, dofs));
 
-    match ctx.opts.unroll {
-        Unroll::None => emit_conv_loops(w, ctx, &geom, weights, bias, activation, vec)?,
-        Unroll::KeepOuter2 => {
-            w.open(&format!("for (i = 0; i < {h_out}; i++)"));
-            w.open(&format!("for (j = 0; j < {w_out}; j++)"));
-            w.line(&format!(
-                "const float *s = {} + i*{} + j*{};",
-                geom.src,
-                stride.0 * geom.pw_elems,
-                stride.1 * c_in
-            ));
-            w.line(&format!("float *d = {} + i*{} + j*{};", geom.dst, w_out * c_out, c_out));
-            emit_cell(w, ctx, &geom, weights, bias, activation, vec, "s", 0, "d", 0);
-            w.close();
-            w.close();
-        }
-        Unroll::KeepOuter1 => {
-            w.open(&format!("for (i = 0; i < {h_out}; i++)"));
-            w.line(&format!("const float *s = {} + i*{};", geom.src, stride.0 * geom.pw_elems));
-            w.line(&format!("float *d = {} + i*{};", geom.dst, w_out * c_out));
-            for j in 0..w_out {
-                emit_cell(w, ctx, &geom, weights, bias, activation, vec, "s", j * stride.1 * c_in, "d", j * c_out);
-            }
-            w.close();
-        }
-        Unroll::Full => {
-            for i in 0..h_out {
-                for j in 0..w_out {
-                    emit_cell(
-                        w,
-                        ctx,
-                        &geom,
-                        weights,
-                        bias,
-                        activation,
-                        vec,
-                        &geom.src.clone(),
-                        i * stride.0 * geom.pw_elems + j * stride.1 * c_in,
-                        &geom.dst.clone(),
-                        (i * w_out + j) * c_out,
-                    );
+    // Fused softmax runs once over the final map.
+    if activation == Activation::Softmax {
+        super::activation::emit_softmax_over(w, ctx, ctx.dst, ctx.out_shape.numel());
+    }
+    Ok(())
+}
+
+/// Cell-block emitter for the standard convolution.
+struct ConvCells<'a> {
+    ctx: &'a LayerCtx<'a>,
+    weights: &'a Tensor,
+    bias: &'a Tensor,
+    activation: Activation,
+    sched: &'a ChannelSchedule,
+    row_elems: usize,
+    w_k: usize,
+    c_in: usize,
+    c_out: usize,
+}
+
+impl ConvCells<'_> {
+    fn inline(&self) -> bool {
+        self.ctx.opts.effective_const_mode() == ConstMode::Inline
+    }
+
+    /// Flat index into the HWIO weight array.
+    fn widx(&self, n: usize, m: usize, o: usize, k: usize) -> usize {
+        ((n * self.w_k + m) * self.c_in + o) * self.c_out + k
+    }
+
+    /// Tap offset relative to a cell's first valid tap.
+    fn rel(&self, win: &TapWindow, n: usize, m: usize, o: usize) -> usize {
+        (n - win.n0) * self.row_elems + (m - win.m0) * self.c_in + o
+    }
+
+    /// Emit all channels of a block of cells sharing one tap window.
+    fn emit_block(
+        &self,
+        w: &mut CWriter,
+        win: TapWindow,
+        s_name: &str,
+        s_offs: &[usize],
+        d_name: &str,
+        d_offs: &[usize],
+    ) {
+        for seg in &self.sched.segments {
+            match seg.vec {
+                Some(v) => {
+                    let total_groups = seg.len / v.width;
+                    let max_g = schedule::max_groups_per_chunk(s_offs.len());
+                    let mut g0 = 0usize;
+                    while g0 < total_groups {
+                        let gc = (total_groups - g0).min(max_g);
+                        self.emit_vec_chunk(w, v, seg.start + g0 * v.width, gc, &win, s_name, s_offs, d_name, d_offs);
+                        g0 += gc;
+                    }
+                }
+                None => {
+                    for k in seg.start..seg.end() {
+                        for (&so, &dof) in s_offs.iter().zip(d_offs) {
+                            self.emit_scalar_cell(w, k, &win, s_name, so, d_name, dof);
+                        }
+                    }
                 }
             }
         }
     }
 
-    // Fused softmax runs once over the final map.
-    if activation == Activation::Softmax {
-        super::activation::emit_softmax_over(w, ctx, &geom.dst, ctx.out_shape.numel());
+    /// Vector chunk covering channels `k0 .. k0 + gc*width` for every cell
+    /// of the block. Single-cell blocks are input-stationary (one
+    /// broadcast feeds all channel groups); multi-cell blocks are
+    /// weight-stationary (one weight register per tap feeds all cells).
+    #[allow(clippy::too_many_arguments)]
+    fn emit_vec_chunk(
+        &self,
+        w: &mut CWriter,
+        v: VecSpec,
+        k0: usize,
+        gc: usize,
+        win: &TapWindow,
+        s_name: &str,
+        s_offs: &[usize],
+        d_name: &str,
+        d_offs: &[usize],
+    ) {
+        let b = s_offs.len();
+        let inline = self.inline();
+        let bias = self.bias.data();
+        w.open("");
+        for t in 0..b {
+            for g in 0..gc {
+                let k = k0 + g * v.width;
+                let init = if inline {
+                    v.setr(&bias[k..k + v.width])
+                } else {
+                    v.loadu(&format!("b{} + {k}", self.ctx.idx))
+                };
+                w.line(&format!("{} a{t}_{g} = {};", v.ty, init));
+            }
+        }
+        if b == 1 {
+            w.line(&format!("{} t0;", v.ty));
+        } else {
+            w.line(&format!("{} wv;", v.ty));
+            for t in 0..b {
+                w.line(&format!("{} t{t};", v.ty));
+            }
+        }
+        for n in win.n0..win.n1 {
+            for m in win.m0..win.m1 {
+                for o in 0..self.c_in {
+                    let tap_w: Vec<Vec<f32>> = (0..gc)
+                        .map(|g| (0..v.width).map(|l| self.weights.at4(n, m, o, k0 + g * v.width + l)).collect())
+                        .collect();
+                    let live: Vec<usize> = (0..gc)
+                        .filter(|&g| {
+                            !(self.ctx.opts.skip_zero_weights
+                                && inline
+                                && tap_w[g].iter().all(|&x| x == 0.0))
+                        })
+                        .collect();
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let rel = self.rel(win, n, m, o);
+                    let wexpr = |g: usize| {
+                        if inline {
+                            v.setr(&tap_w[g])
+                        } else {
+                            v.loadu(&format!("w{} + {}", self.ctx.idx, self.widx(n, m, o, k0 + g * v.width)))
+                        }
+                    };
+                    if b == 1 {
+                        w.line(&format!("t0 = {};", v.set1(&format!("{s_name}[{}]", s_offs[0] + rel))));
+                        for &g in &live {
+                            w.line(&v.mul_add(&format!("a0_{g}"), "t0", &wexpr(g)));
+                        }
+                    } else {
+                        for (t, &so) in s_offs.iter().enumerate() {
+                            w.line(&format!("t{t} = {};", v.set1(&format!("{s_name}[{}]", so + rel))));
+                        }
+                        for &g in &live {
+                            w.line(&format!("wv = {};", wexpr(g)));
+                            for t in 0..b {
+                                w.line(&v.mul_add(&format!("a{t}_{g}"), &format!("t{t}"), "wv"));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        for t in 0..b {
+            for g in 0..gc {
+                let reg = format!("a{t}_{g}");
+                emit_vec_activation(w, v, self.activation, &reg);
+                w.line(&v.storeu(&format!("{d_name} + {}", d_offs[t] + k0 + g * v.width), &reg));
+            }
+        }
+        w.close();
     }
-    Ok(())
-}
 
-/// Geometry shared by the cell emitters.
-struct ConvGeom {
-    src: String,
-    dst: String,
-    h_k: usize,
-    w_k: usize,
-    c_in: usize,
-    c_out: usize,
-    /// Elements per padded input row (`pw * c_in`).
-    pw_elems: usize,
-    stride: (usize, usize),
-    h_out: usize,
-    w_out: usize,
-    idx: usize,
+    /// Scalar accumulator for one output channel of one cell.
+    #[allow(clippy::too_many_arguments)]
+    fn emit_scalar_cell(
+        &self,
+        w: &mut CWriter,
+        k: usize,
+        win: &TapWindow,
+        s_name: &str,
+        s_off: usize,
+        d_name: &str,
+        d_off: usize,
+    ) {
+        let inline = self.inline();
+        w.open("");
+        if inline {
+            w.line(&format!("float a = {};", fmt_f32(self.bias.data()[k])));
+        } else {
+            w.line(&format!("float a = b{}[{k}];", self.ctx.idx));
+        }
+        for n in win.n0..win.n1 {
+            for m in win.m0..win.m1 {
+                for o in 0..self.c_in {
+                    let off = s_off + self.rel(win, n, m, o);
+                    if inline {
+                        let wv = self.weights.at4(n, m, o, k);
+                        if self.ctx.opts.skip_zero_weights && wv == 0.0 {
+                            continue;
+                        }
+                        w.line(&format!("a += {s_name}[{off}] * {};", fmt_f32(wv)));
+                    } else {
+                        w.line(&format!("a += {s_name}[{off}] * w{}[{}];", self.ctx.idx, self.widx(n, m, o, k)));
+                    }
+                }
+            }
+        }
+        w.line(&format!("{d_name}[{}] = {};", d_off + k, scalar_act("a", self.activation)));
+        w.close();
+    }
 }
 
 /// Emit the zero-pad + copy of the input into `nncg_pad` (shared with the
-/// depthwise emitter).
+/// depthwise emitter; used by the copy pad strategy).
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn emit_pad_fill_public(
     w: &mut CWriter,
@@ -203,216 +540,78 @@ pub(crate) fn emit_pad_fill_public(
     Ok(())
 }
 
-/// Emit one output cell (all `c_out` channels at `(i, j)`), with the source
-/// base expressed as `s_name[s_off + tap]` and dest as `d_name[d_off + k]`.
-#[allow(clippy::too_many_arguments)]
-fn emit_cell(
-    w: &mut CWriter,
-    ctx: &LayerCtx<'_>,
-    geom: &ConvGeom,
-    weights: &Tensor,
-    bias: &Tensor,
-    activation: Activation,
-    vec: Option<VecSpec>,
-    s_name: &str,
-    s_off: usize,
-    d_name: &str,
-    d_off: usize,
-) {
-    let inline = ctx.opts.effective_const_mode() == ConstMode::Inline;
-    if let Some(v) = vec {
-        // Multi-accumulator emission (§Perf optimization 1, EXPERIMENTS.md):
-        // one broadcast input feeds ALL channel groups of a chunk, instead
-        // of reloading the input scalar per group. Chunked to at most 8
-        // live accumulators to stay within the register file.
-        const CHUNK_GROUPS: usize = 8;
-        let mut k0 = 0;
-        while k0 < geom.c_out {
-            let groups = ((geom.c_out - k0) / v.width).min(CHUNK_GROUPS);
-            emit_vec_chunk(w, ctx, geom, weights, bias, activation, v, k0, groups, s_name, s_off, d_name, d_off, inline);
-            k0 += groups * v.width;
-        }
-    } else {
-        for k in 0..geom.c_out {
-            emit_scalar_block(w, ctx, geom, weights, bias, activation, k, s_name, s_off, d_name, d_off, inline);
-        }
-    }
-}
-
-/// Index of tap `(n, m, o)` relative to the cell's source base.
-fn tap_off(geom: &ConvGeom, n: usize, m: usize, o: usize) -> usize {
-    n * geom.pw_elems + m * geom.c_in + o
-}
-
-/// Scalar accumulator block for one output channel `k`.
-#[allow(clippy::too_many_arguments)]
-fn emit_scalar_block(
-    w: &mut CWriter,
-    ctx: &LayerCtx<'_>,
-    geom: &ConvGeom,
-    weights: &Tensor,
-    bias: &Tensor,
-    activation: Activation,
-    k: usize,
-    s_name: &str,
-    s_off: usize,
-    d_name: &str,
-    d_off: usize,
-    inline: bool,
-) {
-    w.open("");
-    if inline {
-        w.line(&format!("float a = {};", fmt_f32(bias.data()[k])));
-        for n in 0..geom.h_k {
-            for m in 0..geom.w_k {
-                for o in 0..geom.c_in {
-                    let wv = weights.at4(n, m, o, k);
-                    if ctx.opts.skip_zero_weights && wv == 0.0 {
-                        continue;
-                    }
-                    let off = s_off + tap_off(geom, n, m, o);
-                    w.line(&format!("a += {s_name}[{off}] * {};", fmt_f32(wv)));
-                }
-            }
-        }
-    } else {
-        w.line(&format!("float a = b{}[{k}];", geom.idx));
-        for n in 0..geom.h_k {
-            for m in 0..geom.w_k {
-                for o in 0..geom.c_in {
-                    let widx = ((n * geom.w_k + m) * geom.c_in + o) * geom.c_out + k;
-                    let off = s_off + tap_off(geom, n, m, o);
-                    w.line(&format!("a += {s_name}[{off}] * w{}[{widx}];", geom.idx));
-                }
-            }
-        }
-    }
-    w.line(&format!("{d_name}[{}] = {};", d_off + k, scalar_act("a", activation)));
-    w.close();
-}
-
-/// Vector chunk covering output channels `k0 .. k0 + groups*width` with
-/// one accumulator register per lane group: each input scalar is broadcast
-/// once and multiplied into every group, cutting input loads by a factor
-/// of `groups` compared with per-group emission.
-#[allow(clippy::too_many_arguments)]
-fn emit_vec_chunk(
-    w: &mut CWriter,
-    ctx: &LayerCtx<'_>,
-    geom: &ConvGeom,
-    weights: &Tensor,
-    bias: &Tensor,
-    activation: Activation,
-    v: VecSpec,
-    k0: usize,
-    groups: usize,
-    s_name: &str,
-    s_off: usize,
-    d_name: &str,
-    d_off: usize,
-    inline: bool,
-) {
-    w.open("");
-    let b = bias.data();
-    for g in 0..groups {
-        let k = k0 + g * v.width;
-        if inline {
-            w.line(&format!("{} a{g} = {};", v.ty, v.setr(&b[k..k + v.width])));
-        } else {
-            w.line(&format!("{} a{g} = {};", v.ty, v.loadu(&format!("b{} + {k}", geom.idx))));
-        }
-    }
-    w.line(&format!("{} t;", v.ty));
-    for n in 0..geom.h_k {
-        for m in 0..geom.w_k {
-            for o in 0..geom.c_in {
-                // group weights for this tap; skip the whole tap if all zero
-                let tap_w: Vec<Vec<f32>> = (0..groups)
-                    .map(|g| (0..v.width).map(|l| weights.at4(n, m, o, k0 + g * v.width + l)).collect())
-                    .collect();
-                let live: Vec<usize> = (0..groups)
-                    .filter(|&g| !(ctx.opts.skip_zero_weights && inline && tap_w[g].iter().all(|&x| x == 0.0)))
-                    .collect();
-                if live.is_empty() {
-                    continue;
-                }
-                let off = s_off + tap_off(geom, n, m, o);
-                w.line(&format!("t = {};", v.set1(&format!("{s_name}[{off}]"))));
-                for &g in &live {
-                    if inline {
-                        w.line(&v.mul_add(&format!("a{g}"), "t", &v.setr(&tap_w[g])));
-                    } else {
-                        let widx = ((n * geom.w_k + m) * geom.c_in + o) * geom.c_out + k0 + g * v.width;
-                        w.line(&v.mul_add(&format!("a{g}"), "t", &v.loadu(&format!("w{} + {widx}", geom.idx))));
-                    }
-                }
-            }
-        }
-    }
-    for g in 0..groups {
-        emit_vec_activation(w, v, activation, &format!("a{g}"));
-        w.line(&v.storeu(&format!("{d_name} + {}", d_off + k0 + g * v.width), &format!("a{g}")));
-    }
-    w.close();
-}
-
 /// The paper's loop-form emission (`Unroll::None`): all six loops kept,
-/// weights in `static const` arrays.
+/// weights in `static const` arrays. The channel loop is emitted once per
+/// lane segment, so odd channel counts get a vector main loop plus a
+/// scalar tail loop instead of falling back to all-scalar code.
+#[allow(clippy::too_many_arguments)]
 fn emit_conv_loops(
     w: &mut CWriter,
     ctx: &LayerCtx<'_>,
-    geom: &ConvGeom,
-    _weights: &Tensor,
-    _bias: &Tensor,
+    src: &str,
+    h_k: usize,
+    w_k: usize,
+    c_in: usize,
+    c_out: usize,
+    row_elems: usize,
+    stride: (usize, usize),
+    h_out: usize,
+    w_out: usize,
     activation: Activation,
-    vec: Option<VecSpec>,
+    sched: &ChannelSchedule,
 ) -> Result<()> {
     if ctx.opts.effective_const_mode() != ConstMode::Array {
         bail!("Unroll::None requires ConstMode::Array (inline constants need unrolled loops)");
     }
-    let (sh, sw) = geom.stride;
-    w.open(&format!("for (i = 0; i < {}; i++)", geom.h_out));
-    w.open(&format!("for (j = 0; j < {}; j++)", geom.w_out));
-    w.line(&format!("const float *s = {} + i*{} + j*{};", geom.src, sh * geom.pw_elems, sw * geom.c_in));
-    w.line(&format!("float *d = {} + i*{} + j*{};", geom.dst, geom.w_out * geom.c_out, geom.c_out));
-    if let Some(v) = vec {
-        w.open(&format!("for (k = 0; k < {}; k += {})", geom.c_out, v.width));
-        w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("b{} + k", geom.idx))));
-        w.open(&format!("for (n = 0; n < {}; n++)", geom.h_k));
-        w.open(&format!("for (m = 0; m < {}; m++)", geom.w_k));
-        w.open(&format!("for (o = 0; o < {}; o++)", geom.c_in));
-        w.line(&v.mul_add(
-            "a",
-            &v.set1(&format!("s[n*{} + m*{} + o]", geom.pw_elems, geom.c_in)),
-            &v.loadu(&format!(
-                "w{} + ((n*{} + m)*{} + o)*{} + k",
-                geom.idx, geom.w_k, geom.c_in, geom.c_out
-            )),
-        ));
-        w.close();
-        w.close();
-        w.close();
-        emit_vec_activation(w, v, activation, "a");
-        w.line(&v.storeu("d + k", "a"));
-        w.close();
-    } else {
-        w.open(&format!("for (k = 0; k < {}; k++)", geom.c_out));
-        w.line(&format!("float a = b{}[k];", geom.idx));
-        w.open(&format!("for (n = 0; n < {}; n++)", geom.h_k));
-        w.open(&format!("for (m = 0; m < {}; m++)", geom.w_k));
-        w.open(&format!("for (o = 0; o < {}; o++)", geom.c_in));
-        w.line(&format!(
-            "a += s[n*{} + m*{} + o] * w{}[((n*{} + m)*{} + o)*{} + k];",
-            geom.pw_elems, geom.c_in, geom.idx, geom.w_k, geom.c_in, geom.c_out
-        ));
-        w.close();
-        w.close();
-        w.close();
-        w.line(&format!("d[k] = {};", scalar_act("a", activation)));
-        w.close();
+    let (sh, sw) = stride;
+    let idx = ctx.idx;
+    w.open(&format!("for (i = 0; i < {h_out}; i++)"));
+    w.open(&format!("for (j = 0; j < {w_out}; j++)"));
+    w.line(&format!("const float *s = {src} + i*{} + j*{};", sh * row_elems, sw * c_in));
+    w.line(&format!("float *d = {} + i*{} + j*{};", ctx.dst, w_out * c_out, c_out));
+    for seg in &sched.segments {
+        if seg.len == 0 {
+            continue;
+        }
+        if let Some(v) = seg.vec {
+            w.open(&format!("for (k = {}; k < {}; k += {})", seg.start, seg.end(), v.width));
+            w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("b{idx} + k"))));
+            w.open(&format!("for (n = 0; n < {h_k}; n++)"));
+            w.open(&format!("for (m = 0; m < {w_k}; m++)"));
+            w.open(&format!("for (o = 0; o < {c_in}; o++)"));
+            w.line(&v.mul_add(
+                "a",
+                &v.set1(&format!("s[n*{row_elems} + m*{c_in} + o]")),
+                &v.loadu(&format!("w{idx} + ((n*{w_k} + m)*{c_in} + o)*{c_out} + k")),
+            ));
+            w.close();
+            w.close();
+            w.close();
+            emit_vec_activation(w, v, activation, "a");
+            w.line(&v.storeu("d + k", "a"));
+            w.close();
+        } else {
+            w.open(&format!("for (k = {}; k < {}; k++)", seg.start, seg.end()));
+            w.line(&format!("float a = b{idx}[k];"));
+            w.open(&format!("for (n = 0; n < {h_k}; n++)"));
+            w.open(&format!("for (m = 0; m < {w_k}; m++)"));
+            w.open(&format!("for (o = 0; o < {c_in}; o++)"));
+            w.line(&format!(
+                "a += s[n*{row_elems} + m*{c_in} + o] * w{idx}[((n*{w_k} + m)*{c_in} + o)*{c_out} + k];"
+            ));
+            w.close();
+            w.close();
+            w.close();
+            w.line(&format!("d[k] = {};", scalar_act("a", activation)));
+            w.close();
+        }
     }
     w.close();
     w.close();
+    // Fused softmax runs once over the final map.
+    if activation == Activation::Softmax {
+        super::activation::emit_softmax_over(w, ctx, ctx.dst, ctx.out_shape.numel());
+    }
     Ok(())
 }
 

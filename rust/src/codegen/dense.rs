@@ -2,11 +2,12 @@
 //!
 //! Weights are `[in, out]` with `out` minor, so the vector path runs over
 //! output neurons in lane groups — the same channel-minor scheme as the
-//! convolution (P4).
+//! convolution (P4). Output counts that do not divide the lane width keep
+//! a vectorized main body plus a scalar tail ([`ChannelSchedule`]).
 
 use super::conv::scalar_act;
 use super::cwriter::{fmt_f32, CWriter};
-use super::simd::{emit_vec_activation, VecSpec};
+use super::simd::{emit_vec_activation, ChannelSchedule};
 use super::{ConstMode, LayerCtx};
 use crate::graph::Activation;
 use crate::tensor::Tensor;
@@ -21,81 +22,90 @@ pub(crate) fn emit_dense(
 ) -> Result<()> {
     let n_in = weights.dims()[0];
     let n_out = weights.dims()[1];
-    let vec = VecSpec::for_channels(ctx.opts.isa, n_out);
+    let sched = ChannelSchedule::for_channels(ctx.opts.isa, n_out);
     let inline = ctx.opts.effective_const_mode() == ConstMode::Inline;
 
     if ctx.opts.unroll.keeps_inner() {
-        // Loop form with weight arrays.
-        if let Some(v) = vec {
-            w.open(&format!("for (k = 0; k < {n_out}; k += {})", v.width));
-            w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("b{} + k", ctx.idx))));
-            w.open(&format!("for (i = 0; i < {n_in}; i++)"));
-            w.line(&v.mul_add(
-                "a",
-                &v.set1(&format!("{}[i]", ctx.src)),
-                &v.loadu(&format!("w{} + i*{n_out} + k", ctx.idx)),
-            ));
-            w.close();
-            emit_vec_activation(w, v, activation, "a");
-            w.line(&v.storeu(&format!("{} + k", ctx.dst), "a"));
-            w.close();
-        } else {
-            w.open(&format!("for (k = 0; k < {n_out}; k++)"));
-            w.line(&format!("float a = b{}[k];", ctx.idx));
-            w.open(&format!("for (i = 0; i < {n_in}; i++)"));
-            w.line(&format!("a += {}[i] * w{}[i*{n_out} + k];", ctx.src, ctx.idx));
-            w.close();
-            w.line(&format!("{}[k] = {};", ctx.dst, scalar_act("a", activation)));
-            w.close();
-        }
-    } else if let Some(v) = vec {
-        for k0 in (0..n_out).step_by(v.width) {
-            w.open("");
-            if inline {
-                let b = bias.data();
-                w.line(&format!("{} a = {};", v.ty, v.setr(&b[k0..k0 + v.width])));
+        // Loop form with weight arrays: one neuron loop per lane segment.
+        for seg in &sched.segments {
+            if seg.len == 0 {
+                continue;
+            }
+            if let Some(v) = seg.vec {
+                w.open(&format!("for (k = {}; k < {}; k += {})", seg.start, seg.end(), v.width));
+                w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("b{} + k", ctx.idx))));
+                w.open(&format!("for (i = 0; i < {n_in}; i++)"));
+                w.line(&v.mul_add(
+                    "a",
+                    &v.set1(&format!("{}[i]", ctx.src)),
+                    &v.loadu(&format!("w{} + i*{n_out} + k", ctx.idx)),
+                ));
+                w.close();
+                emit_vec_activation(w, v, activation, "a");
+                w.line(&v.storeu(&format!("{} + k", ctx.dst), "a"));
+                w.close();
             } else {
-                w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("b{} + {k0}", ctx.idx))));
+                w.open(&format!("for (k = {}; k < {}; k++)", seg.start, seg.end()));
+                w.line(&format!("float a = b{}[k];", ctx.idx));
+                w.open(&format!("for (i = 0; i < {n_in}; i++)"));
+                w.line(&format!("a += {}[i] * w{}[i*{n_out} + k];", ctx.src, ctx.idx));
+                w.close();
+                w.line(&format!("{}[k] = {};", ctx.dst, scalar_act("a", activation)));
+                w.close();
             }
-            for i in 0..n_in {
-                if inline {
-                    let ws: Vec<f32> = (0..v.width).map(|l| weights.data()[i * n_out + k0 + l]).collect();
-                    if ctx.opts.skip_zero_weights && ws.iter().all(|&x| x == 0.0) {
-                        continue;
-                    }
-                    w.line(&v.mul_add("a", &v.set1(&format!("{}[{i}]", ctx.src)), &v.setr(&ws)));
-                } else {
-                    w.line(&v.mul_add(
-                        "a",
-                        &v.set1(&format!("{}[{i}]", ctx.src)),
-                        &v.loadu(&format!("w{} + {}", ctx.idx, i * n_out + k0)),
-                    ));
-                }
-            }
-            emit_vec_activation(w, v, activation, "a");
-            w.line(&v.storeu(&format!("{} + {k0}", ctx.dst), "a"));
-            w.close();
         }
     } else {
-        for k in 0..n_out {
-            w.open("");
-            if inline {
-                w.line(&format!("float a = {};", fmt_f32(bias.data()[k])));
-                for i in 0..n_in {
-                    let wv = weights.data()[i * n_out + k];
-                    if ctx.opts.skip_zero_weights && wv == 0.0 {
-                        continue;
+        for seg in &sched.segments {
+            if let Some(v) = seg.vec {
+                for k0 in (seg.start..seg.end()).step_by(v.width) {
+                    w.open("");
+                    if inline {
+                        let b = bias.data();
+                        w.line(&format!("{} a = {};", v.ty, v.setr(&b[k0..k0 + v.width])));
+                    } else {
+                        w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("b{} + {k0}", ctx.idx))));
                     }
-                    w.line(&format!("a += {}[{i}] * {};", ctx.src, fmt_f32(wv)));
+                    for i in 0..n_in {
+                        if inline {
+                            let ws: Vec<f32> = (0..v.width).map(|l| weights.data()[i * n_out + k0 + l]).collect();
+                            if ctx.opts.skip_zero_weights && ws.iter().all(|&x| x == 0.0) {
+                                continue;
+                            }
+                            w.line(&v.mul_add("a", &v.set1(&format!("{}[{i}]", ctx.src)), &v.setr(&ws)));
+                        } else {
+                            w.line(&v.mul_add(
+                                "a",
+                                &v.set1(&format!("{}[{i}]", ctx.src)),
+                                &v.loadu(&format!("w{} + {}", ctx.idx, i * n_out + k0)),
+                            ));
+                        }
+                    }
+                    emit_vec_activation(w, v, activation, "a");
+                    w.line(&v.storeu(&format!("{} + {k0}", ctx.dst), "a"));
+                    w.close();
                 }
             } else {
-                w.line(&format!("float a = b{}[{k}];", ctx.idx));
-                for i in 0..n_in {
-                    w.line(&format!("a += {}[{i}] * w{}[{}];", ctx.src, ctx.idx, i * n_out + k));
+                for k in seg.start..seg.end() {
+                    w.open("");
+                    if inline {
+                        w.line(&format!("float a = {};", fmt_f32(bias.data()[k])));
+                        for i in 0..n_in {
+                            let wv = weights.data()[i * n_out + k];
+                            if ctx.opts.skip_zero_weights && wv == 0.0 {
+                                continue;
+                            }
+                            w.line(&format!("a += {}[{i}] * {};", ctx.src, fmt_f32(wv)));
+                        }
+                    } else {
+                        w.line(&format!("float a = b{}[{k}];", ctx.idx));
+                        for i in 0..n_in {
+                            w.line(&format!("a += {}[{i}] * w{}[{}];", ctx.src, ctx.idx, i * n_out + k));
+                        }
+                    }
+                    w.line(&format!("{}[{k}] = {};", ctx.dst, scalar_act("a", activation)));
+                    w.close();
                 }
             }
-            w.line(&format!("{}[{k}] = {};", ctx.dst, scalar_act("a", activation)));
-            w.close();
         }
     }
 

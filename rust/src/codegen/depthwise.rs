@@ -6,10 +6,14 @@
 //! Depthwise conv is the best case for the paper's channel-minor SIMD
 //! scheme (P4): each tap is a pure elementwise `y[k] += w[n,m,k] * x[k]`
 //! across channels — a vector multiply with **no broadcast at all**.
+//! It shares the conv emitter's spatial machinery: padless region-split
+//! borders, lane-scheduled channels (vector groups + scalar tail), and
+//! weight-stationary register tiles across interior columns.
 
-use super::conv::{padded_extent, scalar_act};
+use super::conv::{padded_extent, scalar_act, SpatialWalk, TapWindow};
 use super::cwriter::{fmt_f32, CWriter};
-use super::simd::{emit_vec_activation, VecSpec};
+use super::schedule::{self, AxisPlan, PadStrategy};
+use super::simd::{emit_vec_activation, ChannelSchedule, VecSpec};
 use super::{ConstMode, LayerCtx, Unroll};
 use crate::graph::{Activation, Padding};
 use crate::tensor::Tensor;
@@ -40,117 +44,49 @@ pub(crate) fn emit_depthwise(
         }
         Padding::Valid => (0, 0),
     };
-    let src = if pads {
+
+    let inline = ctx.opts.effective_const_mode() == ConstMode::Inline;
+    if ctx.opts.unroll == Unroll::None && inline {
+        bail!("Unroll::None requires ConstMode::Array");
+    }
+
+    let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
+    let padless = pads && schedule::pad_strategy(ctx.opts) == PadStrategy::Padless;
+    let src = if pads && !padless {
         super::conv::emit_pad_fill_public(w, ctx, h_in, w_in, c, ph, pw, pad_top, pad_left)?;
         ctx.padbuf.to_string()
     } else {
         ctx.src.to_string()
     };
 
-    let vec = VecSpec::for_channels(ctx.opts.isa, c);
-    let inline = ctx.opts.effective_const_mode() == ConstMode::Inline;
-    let pw_elems = pw * c;
-
-    // Array-mode weights are emitted by mod.rs as w{idx}/b{idx} with layout
-    // [(n*w_k + m)*c + k].
-    let cell = |w: &mut CWriter, s_name: &str, s_off: usize, d_name: &str, d_off: usize| {
-        if let Some(v) = vec {
-            for k0 in (0..c).step_by(v.width) {
-                w.open("");
-                if inline {
-                    let b: Vec<f32> = (0..v.width).map(|l| bias.data()[k0 + l]).collect();
-                    w.line(&format!("{} a = {};", v.ty, v.setr(&b)));
-                } else {
-                    w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("b{} + {k0}", ctx.idx))));
-                }
-                for n in 0..h_k {
-                    for m in 0..w_k {
-                        let off = s_off + n * pw_elems + m * c + k0;
-                        if inline {
-                            let ws: Vec<f32> =
-                                (0..v.width).map(|l| weights.data()[(n * w_k + m) * c + k0 + l]).collect();
-                            if ctx.opts.skip_zero_weights && ws.iter().all(|&x| x == 0.0) {
-                                continue;
-                            }
-                            w.line(&v.mul_add("a", &v.loadu(&format!("{s_name} + {off}")), &v.setr(&ws)));
-                        } else {
-                            let widx = (n * w_k + m) * c + k0;
-                            w.line(&v.mul_add(
-                                "a",
-                                &v.loadu(&format!("{s_name} + {off}")),
-                                &v.loadu(&format!("w{} + {widx}", ctx.idx)),
-                            ));
-                        }
-                    }
-                }
-                emit_vec_activation(w, v, activation, "a");
-                w.line(&v.storeu(&format!("{d_name} + {}", d_off + k0), "a"));
-                w.close();
-            }
-        } else {
-            for k in 0..c {
-                w.open("");
-                if inline {
-                    w.line(&format!("float a = {};", fmt_f32(bias.data()[k])));
-                } else {
-                    w.line(&format!("float a = b{}[{k}];", ctx.idx));
-                }
-                for n in 0..h_k {
-                    for m in 0..w_k {
-                        let off = s_off + n * pw_elems + m * c + k;
-                        if inline {
-                            let wv = weights.data()[(n * w_k + m) * c + k];
-                            if ctx.opts.skip_zero_weights && wv == 0.0 {
-                                continue;
-                            }
-                            w.line(&format!("a += {s_name}[{off}] * {};", fmt_f32(wv)));
-                        } else {
-                            w.line(&format!("a += {s_name}[{off}] * w{}[{}];", ctx.idx, (n * w_k + m) * c + k));
-                        }
-                    }
-                }
-                w.line(&format!("{d_name}[{}] = {};", d_off + k, scalar_act("a", activation)));
-                w.close();
-            }
-        }
+    let (rows, cols) = if padless {
+        (
+            AxisPlan::padless(h_out, stride.0, h_k, pad_top, h_in),
+            AxisPlan::padless(w_out, stride.1, w_k, pad_left, w_in),
+        )
+    } else {
+        let (src_h, src_w) = if pads { (ph, pw) } else { (h_in, w_in) };
+        (AxisPlan::full(h_out, stride.0, h_k, src_h), AxisPlan::full(w_out, stride.1, w_k, src_w))
     };
+    let row_elems = cols.input * c;
+    let tile = schedule::tile_width(ctx.opts, &sched, cols.interior());
 
-    match ctx.opts.unroll {
-        Unroll::None | Unroll::KeepOuter2 => {
-            if ctx.opts.unroll == Unroll::None && inline {
-                bail!("Unroll::None requires ConstMode::Array");
-            }
-            w.open(&format!("for (i = 0; i < {h_out}; i++)"));
-            w.open(&format!("for (j = 0; j < {w_out}; j++)"));
-            w.line(&format!("const float *s = {src} + i*{} + j*{};", stride.0 * pw_elems, stride.1 * c));
-            w.line(&format!("float *d = {} + i*{} + j*{};", ctx.dst, w_out * c, c));
-            cell(w, "s", 0, "d", 0);
-            w.close();
-            w.close();
-        }
-        Unroll::KeepOuter1 => {
-            w.open(&format!("for (i = 0; i < {h_out}; i++)"));
-            w.line(&format!("const float *s = {src} + i*{};", stride.0 * pw_elems));
-            w.line(&format!("float *d = {} + i*{};", ctx.dst, w_out * c));
-            for j in 0..w_out {
-                cell(w, "s", j * stride.1 * c, "d", j * c);
-            }
-            w.close();
-        }
-        Unroll::Full => {
-            for i in 0..h_out {
-                for j in 0..w_out {
-                    cell(
-                        w,
-                        &src,
-                        i * stride.0 * pw_elems + j * stride.1 * c,
-                        ctx.dst,
-                        (i * w_out + j) * c,
-                    );
-                }
-            }
-        }
-    }
+    // The depthwise kernel loops are always unrolled (they are tiny), so
+    // the loop-form level shares the kept-spatial-loop walk.
+    let walk_unroll = if ctx.opts.unroll == Unroll::None { Unroll::KeepOuter2 } else { ctx.opts.unroll };
+    let walk = SpatialWalk {
+        rows,
+        cols,
+        tile,
+        unroll: walk_unroll,
+        src,
+        dst: ctx.dst.to_string(),
+        row_elems,
+        cmin: c,
+        out_minor: c,
+    };
+    let cells = DwCells { ctx, weights, bias, activation, sched: &sched, row_elems, w_k, c };
+    walk.emit(w, |w, win, s, so, d, dofs| cells.emit_block(w, win, s, so, d, dofs));
 
     if activation == Activation::Softmax {
         super::activation::emit_softmax_over(w, ctx, ctx.dst, ctx.out_shape.numel());
@@ -158,49 +94,200 @@ pub(crate) fn emit_depthwise(
     Ok(())
 }
 
+/// Cell-block emitter for depthwise convolution.
+struct DwCells<'a> {
+    ctx: &'a LayerCtx<'a>,
+    weights: &'a Tensor,
+    bias: &'a Tensor,
+    activation: Activation,
+    sched: &'a ChannelSchedule,
+    row_elems: usize,
+    w_k: usize,
+    c: usize,
+}
+
+impl DwCells<'_> {
+    fn inline(&self) -> bool {
+        self.ctx.opts.effective_const_mode() == ConstMode::Inline
+    }
+
+    fn rel(&self, win: &TapWindow, n: usize, m: usize) -> usize {
+        (n - win.n0) * self.row_elems + (m - win.m0) * self.c
+    }
+
+    fn emit_block(
+        &self,
+        w: &mut CWriter,
+        win: TapWindow,
+        s_name: &str,
+        s_offs: &[usize],
+        d_name: &str,
+        d_offs: &[usize],
+    ) {
+        for seg in &self.sched.segments {
+            match seg.vec {
+                Some(v) => {
+                    let mut k0 = seg.start;
+                    while k0 < seg.end() {
+                        self.emit_vec_group(w, v, k0, &win, s_name, s_offs, d_name, d_offs);
+                        k0 += v.width;
+                    }
+                }
+                None => {
+                    for k in seg.start..seg.end() {
+                        for (&so, &dof) in s_offs.iter().zip(d_offs) {
+                            self.emit_scalar_cell(w, k, &win, s_name, so, d_name, dof);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// One vector channel group over every cell of the block. Multi-cell
+    /// blocks load each tap's weight vector once (weight-stationary).
+    #[allow(clippy::too_many_arguments)]
+    fn emit_vec_group(
+        &self,
+        w: &mut CWriter,
+        v: VecSpec,
+        k0: usize,
+        win: &TapWindow,
+        s_name: &str,
+        s_offs: &[usize],
+        d_name: &str,
+        d_offs: &[usize],
+    ) {
+        let b = s_offs.len();
+        let inline = self.inline();
+        w.open("");
+        for t in 0..b {
+            let init = if inline {
+                let bv: Vec<f32> = (0..v.width).map(|l| self.bias.data()[k0 + l]).collect();
+                v.setr(&bv)
+            } else {
+                v.loadu(&format!("b{} + {k0}", self.ctx.idx))
+            };
+            w.line(&format!("{} a{t} = {};", v.ty, init));
+        }
+        if b > 1 {
+            w.line(&format!("{} wv;", v.ty));
+        }
+        for n in win.n0..win.n1 {
+            for m in win.m0..win.m1 {
+                let widx = (n * self.w_k + m) * self.c + k0;
+                let ws: Vec<f32> = (0..v.width).map(|l| self.weights.data()[widx + l]).collect();
+                if inline && self.ctx.opts.skip_zero_weights && ws.iter().all(|&x| x == 0.0) {
+                    continue;
+                }
+                let wexpr = if inline {
+                    v.setr(&ws)
+                } else {
+                    v.loadu(&format!("w{} + {widx}", self.ctx.idx))
+                };
+                let rel = self.rel(win, n, m) + k0;
+                if b == 1 {
+                    w.line(&v.mul_add("a0", &v.loadu(&format!("{s_name} + {}", s_offs[0] + rel)), &wexpr));
+                } else {
+                    w.line(&format!("wv = {wexpr};"));
+                    for (t, &so) in s_offs.iter().enumerate() {
+                        w.line(&v.mul_add(&format!("a{t}"), &v.loadu(&format!("{s_name} + {}", so + rel)), "wv"));
+                    }
+                }
+            }
+        }
+        for t in 0..b {
+            let reg = format!("a{t}");
+            emit_vec_activation(w, v, self.activation, &reg);
+            w.line(&v.storeu(&format!("{d_name} + {}", d_offs[t] + k0), &reg));
+        }
+        w.close();
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn emit_scalar_cell(
+        &self,
+        w: &mut CWriter,
+        k: usize,
+        win: &TapWindow,
+        s_name: &str,
+        s_off: usize,
+        d_name: &str,
+        d_off: usize,
+    ) {
+        let inline = self.inline();
+        w.open("");
+        if inline {
+            w.line(&format!("float a = {};", fmt_f32(self.bias.data()[k])));
+        } else {
+            w.line(&format!("float a = b{}[{k}];", self.ctx.idx));
+        }
+        for n in win.n0..win.n1 {
+            for m in win.m0..win.m1 {
+                let widx = (n * self.w_k + m) * self.c + k;
+                let off = s_off + self.rel(win, n, m) + k;
+                if inline {
+                    let wv = self.weights.data()[widx];
+                    if self.ctx.opts.skip_zero_weights && wv == 0.0 {
+                        continue;
+                    }
+                    w.line(&format!("a += {s_name}[{off}] * {};", fmt_f32(wv)));
+                } else {
+                    w.line(&format!("a += {s_name}[{off}] * w{}[{widx}];", self.ctx.idx));
+                }
+            }
+        }
+        w.line(&format!("{d_name}[{}] = {};", d_off + k, scalar_act("a", self.activation)));
+        w.close();
+    }
+}
+
 /// Average pooling: like max-pool but accumulate + scale by 1/window.
+/// Channels follow the lane schedule (vector groups + scalar tail).
 pub(crate) fn emit_avgpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, usize), stride: (usize, usize)) -> Result<()> {
     let (h_out, w_out, c) = (ctx.out_shape.h(), ctx.out_shape.w(), ctx.out_shape.c());
     let w_in = ctx.in_shape.w();
-    let vec = VecSpec::for_channels(ctx.opts.isa, c);
+    let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
     let inv = fmt_f32(1.0 / (pool.0 * pool.1) as f32);
 
     let window = |w: &mut CWriter, s_name: &str, s_off: usize, d_name: &str, d_off: usize| {
-        if let Some(v) = vec {
-            for k0 in (0..c).step_by(v.width) {
-                w.open("");
-                w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("{s_name} + {}", s_off + k0))));
-                for n in 0..pool.0 {
-                    for m in 0..pool.1 {
-                        if n == 0 && m == 0 {
-                            continue;
+        for seg in &sched.segments {
+            if let Some(v) = seg.vec {
+                for k0 in (seg.start..seg.end()).step_by(v.width) {
+                    w.open("");
+                    w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("{s_name} + {}", s_off + k0))));
+                    for n in 0..pool.0 {
+                        for m in 0..pool.1 {
+                            if n == 0 && m == 0 {
+                                continue;
+                            }
+                            let off = s_off + (n * w_in + m) * c + k0;
+                            w.line(&format!(
+                                "a = {}_add_ps(a, {});",
+                                v.pfx,
+                                v.loadu(&format!("{s_name} + {off}"))
+                            ));
                         }
-                        let off = s_off + (n * w_in + m) * c + k0;
-                        w.line(&format!(
-                            "a = {}_add_ps(a, {});",
-                            v.pfx,
-                            v.loadu(&format!("{s_name} + {off}"))
-                        ));
                     }
+                    w.line(&format!("a = {}_mul_ps(a, {});", v.pfx, v.set1(&inv)));
+                    w.line(&v.storeu(&format!("{d_name} + {}", d_off + k0), "a"));
+                    w.close();
                 }
-                w.line(&format!("a = {}_mul_ps(a, {});", v.pfx, v.set1(&inv)));
-                w.line(&v.storeu(&format!("{d_name} + {}", d_off + k0), "a"));
-                w.close();
-            }
-        } else {
-            for k in 0..c {
-                w.open("");
-                w.line(&format!("float a = {s_name}[{}];", s_off + k));
-                for n in 0..pool.0 {
-                    for m in 0..pool.1 {
-                        if n == 0 && m == 0 {
-                            continue;
+            } else {
+                for k in seg.start..seg.end() {
+                    w.open("");
+                    w.line(&format!("float a = {s_name}[{}];", s_off + k));
+                    for n in 0..pool.0 {
+                        for m in 0..pool.1 {
+                            if n == 0 && m == 0 {
+                                continue;
+                            }
+                            w.line(&format!("a += {s_name}[{}];", s_off + (n * w_in + m) * c + k));
                         }
-                        w.line(&format!("a += {s_name}[{}];", s_off + (n * w_in + m) * c + k));
                     }
+                    w.line(&format!("{d_name}[{}] = a * {inv};", d_off + k));
+                    w.close();
                 }
-                w.line(&format!("{d_name}[{}] = a * {inv};", d_off + k));
-                w.close();
             }
         }
     };

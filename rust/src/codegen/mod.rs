@@ -16,12 +16,26 @@
 //!   as an `if`.
 //! * **P3 constants** — weights are printed into the expression text
 //!   ([`ConstMode::Inline`]) or as `static const` arrays
-//!   ([`ConstMode::Array`]); zero-padding is resolved at generation time by
-//!   materializing the padded input (Eq. 1's x̂) into a scratch buffer, so
-//!   the hot loops contain no bounds checks at all.
+//!   ([`ConstMode::Array`]); zero-padding is resolved at generation time.
+//!   In the default **padless** mode ([`PadMode`]) the generator splits
+//!   each Same-padded conv into a branch-free interior region that indexes
+//!   the source directly plus peeled border rows/columns whose
+//!   out-of-bounds taps are dropped outright (they would multiply zeros),
+//!   deleting the extra read+write pass and the `nncg_pad` scratch buffer
+//!   of the legacy copy mode ([`PadMode::Copy`], Eq. 1's x̂) entirely.
 //! * **P4 SIMD** — [`Isa::Sse3`] vectorizes over the output-channel
-//!   dimension (channel-minor layout, groups of 4, exactly the paper's
-//!   scheme); layers whose `c_out % 4 != 0` fall back to the generic path.
+//!   dimension (channel-minor layout, exactly the paper's scheme);
+//!   [`Isa::Avx2`] is the paper's stated future work. Channel counts that
+//!   do not divide the lane width no longer fall back to scalar code:
+//!   a *lane schedule* covers them with full-width vector groups, then
+//!   narrower vectors (SSE under AVX2), then scalar remainder lanes.
+//!
+//! Beyond the paper, interior columns are **register-tiled** ([`TileMode`],
+//! `--tile`): a block of 2–4 output pixels shares one weight-stationary
+//! register per tap — each weight vector is materialized once per tap and
+//! FMA'd into every pixel's accumulators — cutting weight loads by the
+//! block width. `codegen/schedule.rs` picks the block width and padding
+//! strategy per layer from its geometry and [`CodegenOptions`].
 
 mod activation;
 mod conv;
@@ -30,6 +44,7 @@ mod dense;
 mod depthwise;
 mod harness;
 mod pool;
+mod schedule;
 mod simd;
 
 pub use cwriter::{c_ident, fmt_f32, CWriter};
@@ -110,6 +125,71 @@ pub enum ConstMode {
     Array,
 }
 
+/// Zero-padding strategy for Same-padded conv/depthwise layers
+/// (`--pad-mode`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PadMode {
+    /// Padless whenever the unroll level allows it (everything except
+    /// `Unroll::None`, whose kernel loops stay symbolic).
+    Auto,
+    /// Always materialize the zero-padded input (Eq. 1) into `nncg_pad` —
+    /// the paper's original scheme; one extra read+write pass per layer.
+    Copy,
+    /// Region-split padless emission (falls back to the copy only for
+    /// `Unroll::None`).
+    Padless,
+}
+
+impl PadMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PadMode::Auto => "auto",
+            PadMode::Copy => "copy",
+            PadMode::Padless => "padless",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<PadMode> {
+        Some(match s {
+            "auto" => PadMode::Auto,
+            "copy" => PadMode::Copy,
+            "padless" => PadMode::Padless,
+            _ => return None,
+        })
+    }
+}
+
+/// Register-tiling knob (`--tile`): how many interior output pixels share
+/// one weight-stationary register tile in conv-like layers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileMode {
+    /// Pick per layer from geometry (4 when the interior is wide enough,
+    /// else 2, else untiled; always untiled without vector lanes).
+    Auto,
+    /// Never tile (one output pixel at a time — the paper's scheme).
+    Off,
+    /// Force a block width (clamped to 1..=8).
+    Fixed(usize),
+}
+
+impl TileMode {
+    pub fn name(&self) -> String {
+        match self {
+            TileMode::Auto => "auto".to_string(),
+            TileMode::Off => "off".to_string(),
+            TileMode::Fixed(n) => n.to_string(),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<TileMode> {
+        Some(match s {
+            "auto" => TileMode::Auto,
+            "off" | "1" => TileMode::Off,
+            other => TileMode::Fixed(other.parse::<usize>().ok().filter(|&n| (2..=8).contains(&n))?),
+        })
+    }
+}
+
 /// Code generation options.
 #[derive(Debug, Clone)]
 pub struct CodegenOptions {
@@ -127,6 +207,10 @@ pub struct CodegenOptions {
     pub max_statements: usize,
     /// Append a self-contained `main()` benchmark/test harness.
     pub test_harness: bool,
+    /// Zero-padding strategy for Same-padded layers.
+    pub pad_mode: PadMode,
+    /// Register-tiling of interior output columns.
+    pub tile: TileMode,
 }
 
 impl Default for CodegenOptions {
@@ -138,6 +222,8 @@ impl Default for CodegenOptions {
             skip_zero_weights: true,
             max_statements: 2_000_000,
             test_harness: false,
+            pad_mode: PadMode::Auto,
+            tile: TileMode::Auto,
         }
     }
 }
@@ -163,6 +249,12 @@ impl CodegenOptions {
         CodegenOptions { isa: Isa::Avx2, unroll: Unroll::KeepOuter2, ..Default::default() }
     }
 
+    /// The paper's original emission scheme: pad-copy buffers, no tiling.
+    /// Used as the ablation baseline.
+    pub fn paper_baseline(isa: Isa) -> Self {
+        CodegenOptions { isa, pad_mode: PadMode::Copy, tile: TileMode::Off, ..Default::default() }
+    }
+
     /// Effective constant mode (resolves the paper default).
     pub fn effective_const_mode(&self) -> ConstMode {
         self.const_mode.unwrap_or(match self.unroll {
@@ -174,7 +266,7 @@ impl CodegenOptions {
     /// Short tag used in cache keys and bench labels.
     pub fn tag(&self) -> String {
         format!(
-            "{}-{}-{}",
+            "{}-{}-{}-pad{}-t{}",
             match self.isa {
                 Isa::Generic => "generic",
                 Isa::Sse3 => "sse3",
@@ -184,7 +276,9 @@ impl CodegenOptions {
             match self.effective_const_mode() {
                 ConstMode::Inline => "inline",
                 ConstMode::Array => "array",
-            }
+            },
+            self.pad_mode.name(),
+            self.tile.name(),
         )
     }
 }
@@ -231,9 +325,10 @@ pub fn generate_c(model: &Model, opts: &CodegenOptions) -> Result<String> {
     emit_prelude(&mut w, &model, &ident, opts, &shapes);
 
     // Buffer planning: ping-pong between two scratch buffers sized to the
-    // largest intermediate; a third buffer holds the zero-padded input of
-    // conv layers (Eq. 1's x̂), sized to the largest padded extent.
-    let plan = plan_buffers(&model, &shapes)?;
+    // largest intermediate. Copy-mode padding additionally needs a third
+    // buffer holding the zero-padded input (Eq. 1's x̂); padless emission
+    // does not, shrinking the static footprint.
+    let plan = plan_buffers(&model, &shapes, opts)?;
     w.line(&format!("static float nncg_bufa[{}];", plan.main_size.max(1)));
     w.line(&format!("static float nncg_bufb[{}];", plan.main_size.max(1)));
     if plan.pad_size > 0 {
@@ -315,11 +410,13 @@ fn emit_prelude(w: &mut CWriter, model: &Model, ident: &str, opts: &CodegenOptio
     w.line("/*");
     w.line(&format!(" * {ident}.c — generated by NNCG (rust reimplementation)"));
     w.line(&format!(
-        " * model: {} | isa: {:?} | unroll: {} | constants: {:?}",
+        " * model: {} | isa: {:?} | unroll: {} | constants: {:?} | pad: {} | tile: {}",
         model.name,
         opts.isa,
         opts.unroll.name(),
-        opts.effective_const_mode()
+        opts.effective_const_mode(),
+        opts.pad_mode.name(),
+        opts.tile.name(),
     ));
     w.line(&format!(" * params: {} | MACs/inference: {}", model.num_params(), model.macs().unwrap_or(0)));
     match opts.isa {
@@ -397,7 +494,8 @@ struct BufferPlan {
     pad_size: usize,
 }
 
-fn plan_buffers(model: &Model, shapes: &[Shape]) -> Result<BufferPlan> {
+fn plan_buffers(model: &Model, shapes: &[Shape], opts: &CodegenOptions) -> Result<BufferPlan> {
+    let uses_pad_buffer = schedule::pad_strategy(opts) == schedule::PadStrategy::Copy;
     let mut main_size = 0usize;
     let mut pad_size = 0usize;
     for (i, layer) in model.layers.iter().enumerate() {
@@ -405,6 +503,9 @@ fn plan_buffers(model: &Model, shapes: &[Shape]) -> Result<BufferPlan> {
         // in-place layer copies x_in into scratch).
         main_size = main_size.max(shapes[i].numel());
         main_size = main_size.max(shapes[i + 1].numel());
+        if !uses_pad_buffer {
+            continue;
+        }
         match layer {
             Layer::Conv2D { weights, stride, padding, .. } => {
                 let (ph, pw) = conv::padded_extent(&shapes[i], weights.dims(), *stride, *padding)?;
@@ -428,6 +529,7 @@ fn plan_buffers(model: &Model, shapes: &[Shape]) -> Result<BufferPlan> {
 
 /// Rough statement-count estimate for the cost guard.
 fn estimate_statements(model: &Model, opts: &CodegenOptions) -> Result<usize> {
+    use simd::ChannelSchedule;
     let shapes = model.infer_shapes()?;
     let mut total = 0usize;
     for (i, layer) in model.layers.iter().enumerate() {
@@ -436,15 +538,15 @@ fn estimate_statements(model: &Model, opts: &CodegenOptions) -> Result<usize> {
             Layer::Conv2D { weights, .. } => {
                 let d = weights.dims();
                 let taps = d[0] * d[1] * d[2];
-                // SIMD groups of 4 channels share a statement.
-                let lanes = simd::VecSpec::for_channels(opts.isa, d[3]).map_or(1, |v| v.width);
-                taps * d[3] / lanes
+                // One statement per vector group + one per scalar lane.
+                taps * ChannelSchedule::for_channels(opts.isa, d[3]).cost_per_tap()
             }
-            Layer::MaxPool2D { pool, .. } | Layer::AvgPool2D { pool, .. } => pool.0 * pool.1 * out.c(),
+            Layer::MaxPool2D { pool, .. } | Layer::AvgPool2D { pool, .. } => {
+                pool.0 * pool.1 * ChannelSchedule::for_channels(opts.isa, out.c()).cost_per_tap()
+            }
             Layer::DepthwiseConv2D { weights, .. } => {
                 let d = weights.dims();
-                let lanes = simd::VecSpec::for_channels(opts.isa, d[2]).map_or(1, |v| v.width);
-                d[0] * d[1] * d[2] / lanes
+                d[0] * d[1] * ChannelSchedule::for_channels(opts.isa, d[2]).cost_per_tap()
             }
             Layer::Dense { weights, .. } => weights.numel(),
             _ => out.numel().max(1),
@@ -538,6 +640,11 @@ mod tests {
         let c = CodegenOptions::sse3_full_unroll().tag();
         assert_ne!(a, b);
         assert_ne!(b, c);
+        // The new knobs must reach the tag (cache keys, bench labels).
+        let d = CodegenOptions { pad_mode: PadMode::Copy, ..CodegenOptions::sse3() }.tag();
+        let e = CodegenOptions { tile: TileMode::Off, ..CodegenOptions::sse3() }.tag();
+        assert_ne!(b, d);
+        assert_ne!(b, e);
     }
 
     #[test]
@@ -562,5 +669,92 @@ mod tests {
             assert_eq!(Unroll::from_name(u.name()), Some(u));
         }
         assert_eq!(Unroll::from_name("bogus"), None);
+    }
+
+    #[test]
+    fn pad_and_tile_names_round_trip() {
+        for p in [PadMode::Auto, PadMode::Copy, PadMode::Padless] {
+            assert_eq!(PadMode::from_name(p.name()), Some(p));
+        }
+        assert_eq!(PadMode::from_name("zeropad"), None);
+        assert_eq!(TileMode::from_name("auto"), Some(TileMode::Auto));
+        assert_eq!(TileMode::from_name("off"), Some(TileMode::Off));
+        assert_eq!(TileMode::from_name("4"), Some(TileMode::Fixed(4)));
+        assert_eq!(TileMode::from_name("17"), None);
+    }
+
+    #[test]
+    fn padless_default_emits_no_pad_buffer() {
+        // ball + robot both have Same-padded convs; under the default
+        // (Auto → padless) the scratch pad must be gone entirely.
+        for opts in [CodegenOptions::sse3(), CodegenOptions::general(), CodegenOptions::sse3_full_unroll()] {
+            let src = gen("ball", &opts);
+            assert!(!src.contains("nncg_pad"), "ball {}: padless mode must not reference nncg_pad", opts.tag());
+        }
+        let src = gen("robot", &CodegenOptions::sse3());
+        assert!(!src.contains("nncg_pad"), "robot: padless mode must not reference nncg_pad");
+    }
+
+    #[test]
+    fn pad_copy_mode_still_materializes() {
+        let opts = CodegenOptions { pad_mode: PadMode::Copy, ..CodegenOptions::sse3() };
+        let src = gen("ball", &opts);
+        assert!(src.contains("static float nncg_pad["));
+        assert!(src.contains("/* zero-pad"));
+        // Loop form always takes the copy, whatever the knob says.
+        let loops = CodegenOptions { unroll: Unroll::None, pad_mode: PadMode::Padless, ..CodegenOptions::sse3() };
+        let src = gen("ball", &loops);
+        assert!(src.contains("nncg_pad"));
+    }
+
+    #[test]
+    fn odd_channels_keep_vector_body_under_sse_and_avx2() {
+        // c_out = 6: one 4-wide SSE group + 2 scalar lanes. The paper's
+        // original rule would have dropped the whole layer to scalar.
+        use crate::graph::{Activation, Layer, Padding};
+        let m = Model::new("oddc", &[8, 8, 3])
+            .push(Layer::conv2d(6, 3, 3, (1, 1), Padding::Same, Activation::Relu))
+            .push(Layer::conv2d(10, 3, 3, (2, 2), Padding::Same, Activation::None))
+            .push(Layer::softmax())
+            .with_random_weights(5);
+        for isa in [Isa::Sse3, Isa::Avx2] {
+            let opts = CodegenOptions { isa, ..Default::default() };
+            let src = generate_c(&m, &opts).unwrap();
+            let pfx = if isa == Isa::Avx2 { "_mm256_" } else { "_mm_" };
+            assert!(src.contains(&format!("{pfx}loadu_ps")) || src.contains(&format!("{pfx}setr_ps")),
+                "{isa:?}: expected vector intrinsics for odd channel counts");
+            // Scalar remainder lanes exist too.
+            assert!(src.contains("float a ="), "{isa:?}: expected scalar tail lanes");
+        }
+    }
+
+    #[test]
+    fn tiled_emission_shares_weight_registers() {
+        // Interior columns of ball conv1 are wide enough for a 4-block;
+        // the weight-stationary form materializes `wv` once per tap.
+        let opts = CodegenOptions { tile: TileMode::Fixed(4), ..CodegenOptions::sse3() };
+        let src = gen("ball", &opts);
+        assert!(src.contains("wv = "), "expected weight-stationary register in tiled emission");
+        let untiled = gen("ball", &CodegenOptions { tile: TileMode::Off, ..CodegenOptions::sse3() });
+        assert!(!untiled.contains("wv = "));
+        // Tiling must not change the statement estimator's verdict or brace balance.
+        assert_eq!(src.matches('{').count(), src.matches('}').count());
+    }
+
+    #[test]
+    fn pad_modes_and_tiles_generate_for_all_paper_models() {
+        for name in zoo::PAPER_MODELS {
+            for pad_mode in [PadMode::Auto, PadMode::Copy, PadMode::Padless] {
+                for tile in [TileMode::Auto, TileMode::Off, TileMode::Fixed(2)] {
+                    for unroll in [Unroll::None, Unroll::KeepOuter2, Unroll::KeepOuter1] {
+                        let opts = CodegenOptions { pad_mode, tile, unroll, ..Default::default() };
+                        let src = gen(name, &opts);
+                        let open = src.matches('{').count();
+                        let close = src.matches('}').count();
+                        assert_eq!(open, close, "{name} {}: unbalanced braces", opts.tag());
+                    }
+                }
+            }
+        }
     }
 }

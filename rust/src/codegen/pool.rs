@@ -1,18 +1,19 @@
 //! Max-pooling emitter (paper §II-B.2, Eq. 3).
 //!
 //! Same unroll/SIMD regime as the convolution: spatial loops optionally
-//! kept, window loops unrolled, vector `maxps` over channel groups. The
-//! scalar max uses the ternary operator (P2 — conditional moves).
+//! kept, window loops unrolled, vector `maxps` over channel lane groups
+//! with a scalar tail for channel counts that do not divide the width.
+//! The scalar max uses the ternary operator (P2 — conditional moves).
 
 use super::cwriter::CWriter;
-use super::simd::VecSpec;
+use super::simd::ChannelSchedule;
 use super::{LayerCtx, Unroll};
 use anyhow::Result;
 
 pub(crate) fn emit_maxpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, usize), stride: (usize, usize)) -> Result<()> {
     let (h_out, w_out, c) = (ctx.out_shape.h(), ctx.out_shape.w(), ctx.out_shape.c());
     let w_in = ctx.in_shape.w();
-    let vec = VecSpec::for_channels(ctx.opts.isa, c);
+    let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
     let geom = PoolGeom { src: ctx.src.to_string(), dst: ctx.dst.to_string(), pool, stride, w_in, w_out, c };
 
     match ctx.opts.unroll {
@@ -20,28 +21,33 @@ pub(crate) fn emit_maxpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
             w.open(&format!("for (i = 0; i < {h_out}; i++)"));
             w.open(&format!("for (j = 0; j < {w_out}; j++)"));
             emit_bases(w, &geom);
-            if let Some(v) = vec {
-                w.open(&format!("for (k = 0; k < {c}; k += {})", v.width));
-                w.line(&format!("{} v = {};", v.ty, v.loadu("s + k")));
-                w.open(&format!("for (n = 0; n < {}; n++)", pool.0));
-                w.open(&format!("for (m = 0; m < {}; m++)", pool.1));
-                w.line(&v.max("v", &v.loadu(&format!("s + (n*{} + m)*{c} + k", w_in))));
-                w.close();
-                w.close();
-                w.line(&v.storeu("d + k", "v"));
-                w.close();
-            } else {
-                w.open(&format!("for (k = 0; k < {c}; k++)"));
-                w.line("float v = s[k];");
-                w.line("float t;");
-                w.open(&format!("for (n = 0; n < {}; n++)", pool.0));
-                w.open(&format!("for (m = 0; m < {}; m++)", pool.1));
-                w.line(&format!("t = s[(n*{} + m)*{c} + k];", w_in));
-                w.line("v = t > v ? t : v;");
-                w.close();
-                w.close();
-                w.line("d[k] = v;");
-                w.close();
+            for seg in &sched.segments {
+                if seg.len == 0 {
+                    continue;
+                }
+                if let Some(v) = seg.vec {
+                    w.open(&format!("for (k = {}; k < {}; k += {})", seg.start, seg.end(), v.width));
+                    w.line(&format!("{} v = {};", v.ty, v.loadu("s + k")));
+                    w.open(&format!("for (n = 0; n < {}; n++)", pool.0));
+                    w.open(&format!("for (m = 0; m < {}; m++)", pool.1));
+                    w.line(&v.max("v", &v.loadu(&format!("s + (n*{} + m)*{c} + k", w_in))));
+                    w.close();
+                    w.close();
+                    w.line(&v.storeu("d + k", "v"));
+                    w.close();
+                } else {
+                    w.open(&format!("for (k = {}; k < {}; k++)", seg.start, seg.end()));
+                    w.line("float v = s[k];");
+                    w.line("float t;");
+                    w.open(&format!("for (n = 0; n < {}; n++)", pool.0));
+                    w.open(&format!("for (m = 0; m < {}; m++)", pool.1));
+                    w.line(&format!("t = s[(n*{} + m)*{c} + k];", w_in));
+                    w.line("v = t > v ? t : v;");
+                    w.close();
+                    w.close();
+                    w.line("d[k] = v;");
+                    w.close();
+                }
             }
             w.close();
             w.close();
@@ -50,7 +56,7 @@ pub(crate) fn emit_maxpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
             w.open(&format!("for (i = 0; i < {h_out}; i++)"));
             w.open(&format!("for (j = 0; j < {w_out}; j++)"));
             emit_bases(w, &geom);
-            emit_window(w, &geom, vec, "s", 0, "d", 0);
+            emit_window(w, &geom, &sched, "s", 0, "d", 0);
             w.close();
             w.close();
         }
@@ -59,7 +65,7 @@ pub(crate) fn emit_maxpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
             w.line(&format!("const float *s = {} + i*{};", geom.src, stride.0 * w_in * c));
             w.line(&format!("float *d = {} + i*{};", geom.dst, w_out * c));
             for j in 0..w_out {
-                emit_window(w, &geom, vec, "s", j * stride.1 * c, "d", j * c);
+                emit_window(w, &geom, &sched, "s", j * stride.1 * c, "d", j * c);
             }
             w.close();
         }
@@ -69,7 +75,7 @@ pub(crate) fn emit_maxpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
                     emit_window(
                         w,
                         &geom,
-                        vec,
+                        &sched,
                         &geom.src.clone(),
                         (i * stride.0 * w_in + j * stride.1) * c,
                         &geom.dst.clone(),
@@ -97,41 +103,51 @@ fn emit_bases(w: &mut CWriter, g: &PoolGeom) {
     w.line(&format!("float *d = {} + i*{} + j*{};", g.dst, g.w_out * g.c, g.c));
 }
 
-/// Fully unrolled window max for one output cell.
-fn emit_window(w: &mut CWriter, g: &PoolGeom, vec: Option<VecSpec>, s_name: &str, s_off: usize, d_name: &str, d_off: usize) {
-    if let Some(v) = vec {
-        for k0 in (0..g.c).step_by(v.width) {
-            w.open("");
-            w.line(&format!("{} v = {};", v.ty, v.loadu(&format!("{s_name} + {}", s_off + k0))));
-            for n in 0..g.pool.0 {
-                for m in 0..g.pool.1 {
-                    if n == 0 && m == 0 {
-                        continue;
+/// Fully unrolled window max for one output cell, per lane segment.
+fn emit_window(
+    w: &mut CWriter,
+    g: &PoolGeom,
+    sched: &ChannelSchedule,
+    s_name: &str,
+    s_off: usize,
+    d_name: &str,
+    d_off: usize,
+) {
+    for seg in &sched.segments {
+        if let Some(v) = seg.vec {
+            for k0 in (seg.start..seg.end()).step_by(v.width) {
+                w.open("");
+                w.line(&format!("{} v = {};", v.ty, v.loadu(&format!("{s_name} + {}", s_off + k0))));
+                for n in 0..g.pool.0 {
+                    for m in 0..g.pool.1 {
+                        if n == 0 && m == 0 {
+                            continue;
+                        }
+                        let off = s_off + (n * g.w_in + m) * g.c + k0;
+                        w.line(&v.max("v", &v.loadu(&format!("{s_name} + {off}"))));
                     }
-                    let off = s_off + (n * g.w_in + m) * g.c + k0;
-                    w.line(&v.max("v", &v.loadu(&format!("{s_name} + {off}"))));
                 }
+                w.line(&v.storeu(&format!("{d_name} + {}", d_off + k0), "v"));
+                w.close();
             }
-            w.line(&v.storeu(&format!("{d_name} + {}", d_off + k0), "v"));
-            w.close();
-        }
-    } else {
-        for k in 0..g.c {
-            w.open("");
-            w.line(&format!("float v = {s_name}[{}];", s_off + k));
-            w.line("float t;");
-            for n in 0..g.pool.0 {
-                for m in 0..g.pool.1 {
-                    if n == 0 && m == 0 {
-                        continue;
+        } else {
+            for k in seg.start..seg.end() {
+                w.open("");
+                w.line(&format!("float v = {s_name}[{}];", s_off + k));
+                w.line("float t;");
+                for n in 0..g.pool.0 {
+                    for m in 0..g.pool.1 {
+                        if n == 0 && m == 0 {
+                            continue;
+                        }
+                        let off = s_off + (n * g.w_in + m) * g.c + k;
+                        w.line(&format!("t = {s_name}[{off}];"));
+                        w.line("v = t > v ? t : v;");
                     }
-                    let off = s_off + (n * g.w_in + m) * g.c + k;
-                    w.line(&format!("t = {s_name}[{off}];"));
-                    w.line("v = t > v ? t : v;");
                 }
+                w.line(&format!("{d_name}[{}] = v;", d_off + k));
+                w.close();
             }
-            w.line(&format!("{d_name}[{}] = v;", d_off + k));
-            w.close();
         }
     }
 }

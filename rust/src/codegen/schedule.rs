@@ -1,0 +1,229 @@
+//! Per-layer emission planning: padding strategy, register-tile width, and
+//! the spatial region split that powers padless emission.
+//!
+//! Everything here is resolved at *generation* time (principle P3): the
+//! planner looks at layer geometry plus [`CodegenOptions`] and hands the
+//! emitters a fully-static plan — which columns are interior (full kernel
+//! in bounds), which border rows/columns need edge-trimmed taps, how many
+//! output pixels share one register tile, and how many vector channel
+//! groups may be live per emitted chunk.
+
+use super::simd::ChannelSchedule;
+use super::{CodegenOptions, PadMode, TileMode, Unroll};
+
+/// Resolved padding strategy for one Same-padded layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum PadStrategy {
+    /// Materialize the zero-padded input (Eq. 1) into `nncg_pad`.
+    Copy,
+    /// Region-split emission: no scratch buffer, out-of-bounds taps are
+    /// dropped by the generator (they multiply zeros anyway).
+    Padless,
+}
+
+/// The padding strategy these options give every Same-padded layer.
+///
+/// `Unroll::None` keeps the kernel loops symbolic, so taps cannot be
+/// dropped per-region without emitting branches; it always takes the copy.
+/// Mirrored by `plan_buffers`, which sizes `nncg_pad` only when this
+/// returns [`PadStrategy::Copy`].
+pub(crate) fn pad_strategy(opts: &CodegenOptions) -> PadStrategy {
+    match opts.pad_mode {
+        PadMode::Copy => PadStrategy::Copy,
+        PadMode::Auto | PadMode::Padless => {
+            if opts.unroll == Unroll::None {
+                PadStrategy::Copy
+            } else {
+                PadStrategy::Padless
+            }
+        }
+    }
+}
+
+/// Column-block width for a conv-like layer: how many output pixels share
+/// one weight-stationary register tile. 1 = untiled.
+pub(crate) fn tile_width(opts: &CodegenOptions, sched: &ChannelSchedule, interior_cols: usize) -> usize {
+    // Loop form keeps the kernel/channel loops symbolic — no layer type
+    // can tile there, whatever the knob says.
+    if opts.unroll == Unroll::None {
+        return 1;
+    }
+    match opts.tile {
+        TileMode::Off => 1,
+        TileMode::Fixed(n) => n.clamp(1, 8).min(interior_cols.max(1)),
+        TileMode::Auto => {
+            if !sched.has_vector() {
+                1
+            } else if interior_cols >= 4 {
+                4
+            } else if interior_cols >= 2 {
+                2
+            } else {
+                1
+            }
+        }
+    }
+}
+
+/// Max vector channel-groups per emitted chunk so one block's live
+/// registers — `block` broadcast registers + 1 weight register +
+/// `block·groups` accumulators — fit a 16-register file with a scratch
+/// register to spare.
+pub(crate) fn max_groups_per_chunk(block: usize) -> usize {
+    if block <= 1 {
+        // Input-stationary single-cell form: 1 broadcast + G accumulators.
+        8
+    } else {
+        ((14 - block) / block).clamp(1, 8)
+    }
+}
+
+/// One spatial axis of a conv-like layer, split into edge regions (output
+/// coordinates whose kernel window hangs past the source) and an interior.
+///
+/// For copy-mode emission the source is the padded buffer, every window is
+/// in bounds, and the split degenerates to "all interior".
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct AxisPlan {
+    /// Output extent along this axis.
+    pub out: usize,
+    /// Stride along this axis.
+    pub stride: usize,
+    /// Kernel extent along this axis.
+    pub kernel: usize,
+    /// Leading zero-pad resolved away at generation time.
+    pub pad: usize,
+    /// Source extent along this axis.
+    pub input: usize,
+    /// Output coords [0, lo) are leading-edge border cells.
+    pub lo: usize,
+    /// Output coords [hi, out) are trailing-edge border cells.
+    pub hi: usize,
+}
+
+impl AxisPlan {
+    /// Padless split: interior coords see the full kernel window inside
+    /// the unpadded source.
+    pub fn padless(out: usize, stride: usize, kernel: usize, pad: usize, input: usize) -> AxisPlan {
+        let lo = crate::util::div_ceil(pad, stride).min(out);
+        let hi = if input + pad >= kernel {
+            (((input + pad - kernel) / stride) + 1).clamp(lo, out)
+        } else {
+            lo
+        };
+        AxisPlan { out, stride, kernel, pad, input, lo, hi }
+    }
+
+    /// Copy-mode split over an already-padded source of extent `input`:
+    /// no border regions at all.
+    pub fn full(out: usize, stride: usize, kernel: usize, input: usize) -> AxisPlan {
+        debug_assert!(out == 0 || (out - 1) * stride + kernel <= input);
+        AxisPlan { out, stride, kernel, pad: 0, input, lo: 0, hi: out }
+    }
+
+    /// Valid kernel-tap range `[k0, k1)` for output coordinate `i`.
+    pub fn window(&self, i: usize) -> (usize, usize) {
+        let base = i * self.stride;
+        let k0 = self.pad.saturating_sub(base);
+        let k1 = self.kernel.min((self.input + self.pad).saturating_sub(base));
+        (k0, k1.max(k0))
+    }
+
+    /// Source coordinate of the first valid tap of output coordinate `i`.
+    pub fn src_start(&self, i: usize) -> usize {
+        i * self.stride + self.window(i).0 - self.pad
+    }
+
+    /// Number of interior output coordinates.
+    pub fn interior(&self) -> usize {
+        self.hi - self.lo
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{Isa, TileMode};
+
+    #[test]
+    fn pad_strategy_follows_mode_and_unroll() {
+        let mut opts = CodegenOptions::default();
+        assert_eq!(pad_strategy(&opts), PadStrategy::Padless); // Auto + KeepOuter2
+        opts.pad_mode = PadMode::Copy;
+        assert_eq!(pad_strategy(&opts), PadStrategy::Copy);
+        opts.pad_mode = PadMode::Padless;
+        opts.unroll = Unroll::None;
+        assert_eq!(pad_strategy(&opts), PadStrategy::Copy); // loop form keeps the copy
+        opts.unroll = Unroll::Full;
+        assert_eq!(pad_strategy(&opts), PadStrategy::Padless);
+    }
+
+    #[test]
+    fn axis_split_ball_conv1() {
+        // 16 input, k5, s2, pad 1 → 8 outputs; row 0 and row 7 are borders.
+        let a = AxisPlan::padless(8, 2, 5, 1, 16);
+        assert_eq!((a.lo, a.hi), (1, 7));
+        assert_eq!(a.window(0), (1, 5)); // top row drops one tap row
+        assert_eq!(a.window(1), (0, 5)); // first interior row
+        assert_eq!(a.window(7), (0, 3)); // bottom row drops two tap rows
+        assert_eq!(a.src_start(0), 0);
+        assert_eq!(a.src_start(1), 1);
+        assert_eq!(a.src_start(7), 13);
+        assert_eq!(a.interior(), 6);
+    }
+
+    #[test]
+    fn axis_split_stride1_3x3() {
+        // 8 input, k3, s1, pad 1 → 8 outputs; one border cell each side.
+        let a = AxisPlan::padless(8, 1, 3, 1, 8);
+        assert_eq!((a.lo, a.hi), (1, 7));
+        assert_eq!(a.window(0), (1, 3));
+        assert_eq!(a.window(7), (0, 2));
+        for i in 1..7 {
+            assert_eq!(a.window(i), (0, 3), "i={i}");
+        }
+    }
+
+    #[test]
+    fn axis_split_no_pad_is_all_interior() {
+        // Same padding with k1 needs no pad at all.
+        let a = AxisPlan::padless(9, 1, 1, 0, 9);
+        assert_eq!((a.lo, a.hi), (0, 9));
+        // Copy-mode over the padded extent: also all interior.
+        let f = AxisPlan::full(8, 2, 5, 19);
+        assert_eq!((f.lo, f.hi), (0, 8));
+        assert_eq!(f.window(0), (0, 5));
+        assert_eq!(f.src_start(3), 6);
+    }
+
+    #[test]
+    fn tile_width_rules() {
+        let vec4 = ChannelSchedule::for_channels(Isa::Sse3, 8);
+        let scalar = ChannelSchedule::for_channels(Isa::Generic, 8);
+        let opts = CodegenOptions::default(); // tile Auto
+        assert_eq!(tile_width(&opts, &vec4, 8), 4);
+        assert_eq!(tile_width(&opts, &vec4, 3), 2);
+        assert_eq!(tile_width(&opts, &vec4, 1), 1);
+        assert_eq!(tile_width(&opts, &scalar, 8), 1);
+        let off = CodegenOptions { tile: TileMode::Off, ..Default::default() };
+        assert_eq!(tile_width(&off, &vec4, 8), 1);
+        let fixed = CodegenOptions { tile: TileMode::Fixed(2), ..Default::default() };
+        assert_eq!(tile_width(&fixed, &vec4, 8), 2);
+        let loops = CodegenOptions { unroll: Unroll::None, ..Default::default() };
+        assert_eq!(tile_width(&loops, &vec4, 8), 1);
+        // Fixed is also overridden by the loop form (consistent across
+        // conv and depthwise emitters).
+        let loops_fixed =
+            CodegenOptions { unroll: Unroll::None, tile: TileMode::Fixed(4), ..Default::default() };
+        assert_eq!(tile_width(&loops_fixed, &vec4, 8), 1);
+    }
+
+    #[test]
+    fn chunk_budget_shrinks_with_block_width() {
+        assert_eq!(max_groups_per_chunk(1), 8);
+        assert_eq!(max_groups_per_chunk(2), 6);
+        assert_eq!(max_groups_per_chunk(3), 3);
+        assert_eq!(max_groups_per_chunk(4), 2);
+        assert!(max_groups_per_chunk(8) >= 1);
+    }
+}

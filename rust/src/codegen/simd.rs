@@ -5,6 +5,14 @@
 //! future work; [`Isa::Avx2`] implements the AVX path (8-wide f32 + FMA).
 //! Everything is parameterized over a [`VecSpec`] so adding an ISA means
 //! adding a table entry, exactly the "can be realized rapidly" claim.
+//!
+//! [`ChannelSchedule`] generalizes the paper's divisibility rule ("the
+//! number of filters should be a multiple of 4") into a *lane schedule*:
+//! a channel count that does not divide the vector width is covered by as
+//! many full-width vector groups as fit, then narrower vector groups
+//! (AVX2 hosts run SSE fine), then scalar remainder lanes — so odd channel
+//! counts keep their main body vectorized instead of falling off a cliff
+//! to fully scalar code.
 
 use super::cwriter::fmt_f32;
 use super::Isa;
@@ -27,8 +35,10 @@ pub(crate) const AVX2: VecSpec = VecSpec { width: 8, ty: "__m256", pfx: "_mm256"
 
 impl VecSpec {
     /// Pick the widest vector flavor usable for a channel count under an
-    /// ISA; `None` = scalar fallback (the paper's rule: the channel count
-    /// must divide the lane width).
+    /// ISA; `None` = scalar fallback (the paper's original all-or-nothing
+    /// rule: the channel count must divide the lane width). Documents the
+    /// paper's rule; emitters now use [`ChannelSchedule`] instead.
+    #[allow(dead_code)]
     pub fn for_channels(isa: Isa, channels: usize) -> Option<VecSpec> {
         match isa {
             Isa::Generic => None,
@@ -42,6 +52,15 @@ impl VecSpec {
                     None
                 }
             }
+        }
+    }
+
+    /// Vector flavors available under an ISA, widest first.
+    pub fn flavors(isa: Isa) -> &'static [VecSpec] {
+        match isa {
+            Isa::Generic => &[],
+            Isa::Sse3 => &[SSE],
+            Isa::Avx2 => &[AVX2, SSE],
         }
     }
 
@@ -97,6 +116,68 @@ impl VecSpec {
     }
 }
 
+/// A contiguous run of channels emitted with one strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct LaneSegment {
+    /// First channel covered.
+    pub start: usize,
+    /// Number of channels covered (a multiple of the vector width for
+    /// vector segments).
+    pub len: usize,
+    /// Vector flavor, or `None` for scalar lanes.
+    pub vec: Option<VecSpec>,
+}
+
+impl LaneSegment {
+    /// One past the last channel covered.
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+/// How a channel (or neuron, or flat-element) range is carved into vector
+/// groups plus a scalar tail.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct ChannelSchedule {
+    pub segments: Vec<LaneSegment>,
+}
+
+impl ChannelSchedule {
+    /// Greedy widest-first schedule for `channels` lanes under `isa`.
+    pub fn for_channels(isa: Isa, channels: usize) -> ChannelSchedule {
+        let mut segments = Vec::new();
+        let mut at = 0usize;
+        for &v in VecSpec::flavors(isa) {
+            let n = (channels - at) / v.width * v.width;
+            if n > 0 {
+                segments.push(LaneSegment { start: at, len: n, vec: Some(v) });
+                at += n;
+            }
+        }
+        if at < channels || channels == 0 {
+            segments.push(LaneSegment { start: at, len: channels - at, vec: None });
+        }
+        ChannelSchedule { segments }
+    }
+
+    /// True if any segment is vectorized.
+    pub fn has_vector(&self) -> bool {
+        self.segments.iter().any(|s| s.vec.is_some())
+    }
+
+    /// Emitted statements per tap: one per vector group plus one per
+    /// scalar lane (the cost-guard estimate).
+    pub fn cost_per_tap(&self) -> usize {
+        self.segments
+            .iter()
+            .map(|s| match s.vec {
+                Some(v) => s.len / v.width,
+                None => s.len,
+            })
+            .sum()
+    }
+}
+
 /// Activation applied to a named vector register (P2 as predicated max).
 pub(crate) fn emit_vec_activation(
     w: &mut super::cwriter::CWriter,
@@ -141,5 +222,45 @@ mod tests {
         assert!(SSE.mul_add("a0", "t", "w").contains("_mm_add_ps"));
         assert_eq!(AVX2.header(), "immintrin.h");
         assert_eq!(SSE.setr(&[1.0, 2.0, 3.0, 4.0]), "_mm_setr_ps(1.0f, 2.0f, 3.0f, 4.0f)");
+    }
+
+    #[test]
+    fn schedule_covers_odd_channels_with_vectors_plus_tail() {
+        let s = ChannelSchedule::for_channels(Isa::Sse3, 6);
+        assert_eq!(s.segments.len(), 2);
+        assert_eq!((s.segments[0].start, s.segments[0].len), (0, 4));
+        assert_eq!(s.segments[0].vec.unwrap().width, 4);
+        assert_eq!((s.segments[1].start, s.segments[1].len), (4, 2));
+        assert!(s.segments[1].vec.is_none());
+        assert!(s.has_vector());
+        assert_eq!(s.cost_per_tap(), 3); // one SSE group + two scalar lanes
+    }
+
+    #[test]
+    fn schedule_avx2_mixes_flavors() {
+        // 13 = one 8-wide group + one 4-wide group + one scalar lane
+        let s = ChannelSchedule::for_channels(Isa::Avx2, 13);
+        let widths: Vec<Option<usize>> = s.segments.iter().map(|g| g.vec.map(|v| v.width)).collect();
+        assert_eq!(widths, vec![Some(8), Some(4), None]);
+        assert_eq!(s.segments[2].len, 1);
+        assert_eq!(s.cost_per_tap(), 3);
+        assert_eq!(s.segments[1].end(), 12);
+    }
+
+    #[test]
+    fn schedule_generic_is_all_scalar() {
+        let s = ChannelSchedule::for_channels(Isa::Generic, 5);
+        assert_eq!(s.segments.len(), 1);
+        assert!(s.segments[0].vec.is_none());
+        assert!(!s.has_vector());
+        assert_eq!(s.cost_per_tap(), 5);
+    }
+
+    #[test]
+    fn schedule_exact_multiple_has_no_tail() {
+        let s = ChannelSchedule::for_channels(Isa::Sse3, 8);
+        assert_eq!(s.segments.len(), 1);
+        assert_eq!(s.segments[0].len, 8);
+        assert_eq!(s.cost_per_tap(), 2);
     }
 }

@@ -10,7 +10,8 @@
 mod tables;
 
 pub use tables::{
-    run_gpu_throughput, run_table4, run_table5, run_table6, run_table7, ExecTimeRow, TableResult,
+    render_ablation, run_gpu_throughput, run_pad_tile_ablation, run_table4, run_table5, run_table6,
+    run_table7, write_bench_json, AblationRow, ExecTimeRow, TableResult, ABLATION_VARIANTS,
 };
 
 use crate::cc::CompiledCnn;

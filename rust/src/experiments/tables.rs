@@ -2,12 +2,13 @@
 
 use super::{build_engine, default_artifacts_dir, default_weights_dir, default_work_dir, load_model};
 use crate::bench_harness::{bench, BenchConfig, Stats, Table};
-use crate::codegen::CodegenOptions;
+use crate::codegen::{CodegenOptions, Isa, PadMode, TileMode};
 use crate::platform::{paper_platforms, GpuModel};
 use crate::runtime::EngineKind;
 use crate::tensor::Tensor;
 use crate::util::{fmt_us, XorShift64};
 use anyhow::Result;
+use std::path::Path;
 
 /// One engine's result on one platform row.
 #[derive(Debug, Clone)]
@@ -167,25 +168,44 @@ pub fn run_table6(quick: bool) -> Result<TableResult> {
 }
 
 /// Table VII: feature ablation on the ball classifier (host-measured, the
-/// paper also measures this on one machine). Columns: general ISA /
-/// SSSE3 / SSSE3 + full unroll. Paper: 12.94µs / 2.64µs / 2.10µs.
+/// paper also measures this on one machine). The paper's three columns —
+/// general ISA / SSSE3 / SSSE3 + full unroll (12.94µs / 2.64µs / 2.10µs)
+/// — run with the paper's original emission scheme (pad-copy, untiled);
+/// two extra rows ablate this repo's padless + register-tiled emission.
 pub fn run_table7(quick: bool) -> Result<TableResult> {
     let cfg = if quick { BenchConfig::quick() } else { BenchConfig::small() };
     let model = load_model("ball", &default_weights_dir())?;
     let mut rng = XorShift64::new(7);
     let input = Tensor::rand(model.input.dims(), 0.0, 1.0, &mut rng);
 
-    let configs: Vec<(&str, CodegenOptions, f64)> = vec![
-        ("General", CodegenOptions::general(), 12.94),
-        ("SSSE3", CodegenOptions::sse3(), 2.64),
-        ("SSSE3 + Full Unroll", CodegenOptions::sse3_full_unroll(), 2.10),
+    let configs: Vec<(&str, CodegenOptions, Option<f64>)> = vec![
+        ("General", CodegenOptions::paper_baseline(Isa::Generic), Some(12.94)),
+        ("SSSE3", CodegenOptions::paper_baseline(Isa::Sse3), Some(2.64)),
+        (
+            "SSSE3 + Full Unroll",
+            CodegenOptions {
+                unroll: crate::codegen::Unroll::Full,
+                ..CodegenOptions::paper_baseline(Isa::Sse3)
+            },
+            Some(2.10),
+        ),
+        (
+            "SSSE3 + padless",
+            CodegenOptions { pad_mode: PadMode::Padless, tile: TileMode::Off, ..CodegenOptions::sse3() },
+            None,
+        ),
+        (
+            "SSSE3 + padless + tiled",
+            CodegenOptions { pad_mode: PadMode::Padless, tile: TileMode::Auto, ..CodegenOptions::sse3() },
+            None,
+        ),
     ];
     let mut cells = Vec::new();
     for (label, opts, paper) in &configs {
         let cnn = crate::cc::CompiledCnn::build(&model, opts, default_work_dir())?;
         let mut out = vec![0.0f32; model.output_shape()?.numel()];
         let stats = bench(&cfg, || cnn.infer_into(input.data(), &mut out));
-        cells.push((label.to_string(), Some(stats.median_us), Some(*paper)));
+        cells.push((label.to_string(), Some(stats.median_us), *paper));
     }
 
     let title = "TABLE VII: SPEED COMPARISON OF DIFFERENT FEATURES (ball classifier)".to_string();
@@ -244,6 +264,122 @@ pub fn run_gpu_throughput() -> Result<TableResult> {
     Ok(TableResult { title, rows, rendered: t.render(), host_speedup_vs_xla: None })
 }
 
+/// One (model × emission-variant) measurement of the pad/tile ablation.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub model: String,
+    pub variant: String,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub p95_us: f64,
+    /// Size of the generated C source, bytes.
+    pub c_bytes: usize,
+}
+
+/// The four emission variants the ablation sweeps (all SSE, outer loops
+/// kept): pad-copy vs padless × untiled vs tiled.
+pub const ABLATION_VARIANTS: [(&str, PadMode, TileMode); 4] = [
+    ("pad-copy+untiled", PadMode::Copy, TileMode::Off),
+    ("padless+untiled", PadMode::Padless, TileMode::Off),
+    ("pad-copy+tiled", PadMode::Copy, TileMode::Auto),
+    ("padless+tiled", PadMode::Padless, TileMode::Auto),
+];
+
+/// Measure every paper model under every pad/tile variant.
+pub fn run_pad_tile_ablation(quick: bool) -> Result<Vec<AblationRow>> {
+    let mut rows = Vec::new();
+    for name in crate::graph::zoo::PAPER_MODELS {
+        let model = load_model(name, &default_weights_dir())?;
+        let cfg = if quick {
+            BenchConfig::quick()
+        } else if name == "robot" {
+            BenchConfig::large()
+        } else {
+            BenchConfig::small()
+        };
+        let mut rng = XorShift64::new(7);
+        let input = Tensor::rand(model.input.dims(), 0.0, 1.0, &mut rng);
+        let mut out = vec![0.0f32; model.output_shape()?.numel()];
+        for (variant, pad_mode, tile) in ABLATION_VARIANTS {
+            let opts = CodegenOptions { pad_mode, tile, ..CodegenOptions::sse3() };
+            let src = crate::codegen::generate_c(&model, &opts)?;
+            let cnn = crate::cc::CompiledCnn::from_source(&model, &opts, &src, default_work_dir())?;
+            let stats = bench(&cfg, || cnn.infer_into(input.data(), &mut out));
+            rows.push(AblationRow {
+                model: name.to_string(),
+                variant: variant.to_string(),
+                mean_us: stats.mean_us,
+                median_us: stats.median_us,
+                p95_us: stats.p95_us,
+                c_bytes: src.len(),
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// Render the ablation rows as the extended Table VII columns.
+pub fn render_ablation(rows: &[AblationRow]) -> String {
+    let mut t = Table::new(
+        "PAD/TILE ABLATION: pad-copy vs padless × untiled vs tiled (SSE, outer loops kept)",
+        &["model", "variant", "mean", "median", "p95", "C size"],
+    );
+    for r in rows {
+        t.row(vec![
+            r.model.clone(),
+            r.variant.clone(),
+            fmt_us(r.mean_us),
+            fmt_us(r.median_us),
+            fmt_us(r.p95_us),
+            format!("{}K", r.c_bytes / 1024),
+        ]);
+    }
+    let mut out = t.render();
+    for name in crate::graph::zoo::PAPER_MODELS {
+        let find = |variant: &str| {
+            rows.iter().find(|r| r.model == name && r.variant == variant).map(|r| r.median_us)
+        };
+        if let (Some(base), Some(best)) = (find("pad-copy+untiled"), find("padless+tiled")) {
+            out.push_str(&format!("{name}: padless+tiled vs pad-copy+untiled = {:.2}x\n", base / best));
+        }
+    }
+    out
+}
+
+/// Write the ablation rows as `BENCH_table7.json` so future sessions can
+/// track the perf trajectory. `source` records how the numbers were
+/// obtained (`"measured"` from the bench, `"cost-model"` for projections).
+pub fn write_bench_json(path: &Path, rows: &[AblationRow], source: &str) -> Result<()> {
+    use crate::model::json::Value;
+    let rows_json: Vec<Value> = rows
+        .iter()
+        .map(|r| {
+            Value::Object(vec![
+                ("model".to_string(), Value::Str(r.model.clone())),
+                ("variant".to_string(), Value::Str(r.variant.clone())),
+                ("mean_us".to_string(), Value::Num(round3(r.mean_us))),
+                ("median_us".to_string(), Value::Num(round3(r.median_us))),
+                ("p95_us".to_string(), Value::Num(round3(r.p95_us))),
+                ("c_bytes".to_string(), Value::Num(r.c_bytes as f64)),
+            ])
+        })
+        .collect();
+    let doc = Value::Object(vec![
+        ("bench".to_string(), Value::Str("table7_pad_tile_ablation".to_string())),
+        ("source".to_string(), Value::Str(source.to_string())),
+        ("variants".to_string(), Value::Array(
+            ABLATION_VARIANTS.iter().map(|(n, _, _)| Value::Str(n.to_string())).collect(),
+        )),
+        ("rows".to_string(), Value::Array(rows_json)),
+    ]);
+    std::fs::write(path, doc.to_json() + "\n")?;
+    Ok(())
+}
+
+fn round3(v: f64) -> f64 {
+    (v * 1000.0).round() / 1000.0
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -272,6 +408,19 @@ mod tests {
         let host = &r.rows[0];
         assert!(host.cells[0].1.unwrap() > 0.0);
         assert!(host.cells[1].1.unwrap() > host.cells[0].1.unwrap(), "interp must be slower than generated C");
+    }
+
+    #[test]
+    fn pad_tile_ablation_quick_runs_and_serializes() {
+        let rows = run_pad_tile_ablation(true).unwrap();
+        assert_eq!(rows.len(), ABLATION_VARIANTS.len() * crate::graph::zoo::PAPER_MODELS.len());
+        let path = std::env::temp_dir().join("nncg-bench-table7-test.json");
+        write_bench_json(&path, &rows, "measured").unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = crate::model::json::parse(&text).unwrap();
+        assert_eq!(doc.get("source").unwrap().as_str().unwrap(), "measured");
+        assert_eq!(doc.get("rows").unwrap().as_array().unwrap().len(), rows.len());
+        assert!(text.contains("padless+tiled"));
     }
 
     #[test]

@@ -109,6 +109,71 @@ fn robot_with_batchnorm_matches_interp() {
     assert!(err < TOL, "err {err}");
 }
 
+/// Odd channel counts (c_out ∈ {3, 6, 10}) and strided Same-padded convs
+/// through the full (isa × unroll × pad-mode × tile) matrix: generated C
+/// must match the interpreter within TOL on every combination, padless
+/// output must never reference the `nncg_pad` scratch buffer, and odd
+/// channel counts must keep vector intrinsics under SSE (remainder lanes,
+/// not a scalar cliff).
+#[test]
+fn odd_channel_strided_same_parity_across_pad_and_tile_matrix() {
+    use nncg::codegen::{Isa, PadMode, TileMode, Unroll};
+    use nncg::graph::{Activation, Layer, Model, Padding};
+    let model = Model::new("oddmix", &[9, 8, 1])
+        .push(Layer::conv2d(3, 3, 3, (2, 2), Padding::Same, Activation::Relu))
+        .push(Layer::conv2d(6, 3, 3, (1, 1), Padding::Same, Activation::None))
+        .push(Layer::leaky_relu(0.1))
+        .push(Layer::conv2d(10, 2, 2, (2, 2), Padding::Same, Activation::None))
+        .push(Layer::softmax())
+        .with_random_weights(2027);
+    let work = default_work_dir();
+    for isa in [Isa::Generic, Isa::Sse3] {
+        for unroll in [Unroll::None, Unroll::KeepOuter2, Unroll::KeepOuter1, Unroll::Full] {
+            for pad_mode in [PadMode::Copy, PadMode::Padless] {
+                for tile in [TileMode::Off, TileMode::Auto] {
+                    let opts = CodegenOptions { isa, unroll, pad_mode, tile, ..Default::default() };
+                    let src = nncg::codegen::generate_c(&model, &opts).unwrap();
+                    if pad_mode == PadMode::Padless && unroll != Unroll::None {
+                        assert!(
+                            !src.contains("nncg_pad"),
+                            "{}: padless output must not reference nncg_pad",
+                            opts.tag()
+                        );
+                    }
+                    if isa == Isa::Sse3 {
+                        assert!(
+                            src.contains("_mm_"),
+                            "{}: odd channel counts must keep vector intrinsics",
+                            opts.tag()
+                        );
+                    }
+                    let err = nncg::cc::verify_against_interp(&model, &opts, &work, 2, 11).unwrap();
+                    assert!(err < TOL, "{}: err {err}", opts.tag());
+                }
+            }
+        }
+    }
+}
+
+/// Paper models through the padless + tiled emission (the new default
+/// fast path) against the interpreter.
+#[test]
+fn paper_models_padless_tiled_match_interp() {
+    use nncg::codegen::{PadMode, TileMode};
+    for name in ["ball", "pedestrian"] {
+        let model = load_model(name, &default_weights_dir()).unwrap();
+        let opts = CodegenOptions {
+            pad_mode: PadMode::Padless,
+            tile: TileMode::Auto,
+            ..CodegenOptions::sse3()
+        };
+        let src = nncg::codegen::generate_c(&model, &opts).unwrap();
+        assert!(!src.contains("nncg_pad"), "{name}: padless output references nncg_pad");
+        let err = nncg::cc::verify_against_interp(&model, &opts, default_work_dir(), 2, 21).unwrap();
+        assert!(err < TOL, "{name}: err {err}");
+    }
+}
+
 /// The dlopen engine must be reusable across threads (coordinator workers).
 #[test]
 fn compiled_cnn_is_thread_safe() {

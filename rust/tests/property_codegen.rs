@@ -7,7 +7,7 @@
 //! random kernel/stride/padding geometry, odd channel counts (SSE fallback
 //! paths), BN in every legal position, dense heads, activation placement.
 
-use nncg::codegen::{CodegenOptions, Isa, Unroll};
+use nncg::codegen::{CodegenOptions, Isa, PadMode, TileMode, Unroll};
 use nncg::graph::{Activation, Layer, Model, Padding};
 use nncg::tensor::Tensor;
 use nncg::util::XorShift64;
@@ -80,7 +80,17 @@ fn check(seed: u64, trials: usize) {
             2 => Unroll::KeepOuter1,
             _ => Unroll::Full,
         };
-        let opts = CodegenOptions { isa, unroll, ..Default::default() };
+        let pad_mode = match rng.below(3) {
+            0 => PadMode::Auto,
+            1 => PadMode::Copy,
+            _ => PadMode::Padless,
+        };
+        let tile = match rng.below(3) {
+            0 => TileMode::Auto,
+            1 => TileMode::Off,
+            _ => TileMode::Fixed(2 + rng.below(3)),
+        };
+        let opts = CodegenOptions { isa, unroll, pad_mode, tile, ..Default::default() };
         let err = nncg::cc::verify_against_interp(&model, &opts, &work, 2, seed + t as u64)
             .unwrap_or_else(|e| panic!("model {} opts {}: {e:#}", model.describe(), opts.tag()));
         assert!(
@@ -198,6 +208,53 @@ fn avx2_backend_matches_interp() {
             let opts = CodegenOptions { isa: Isa::Avx2, unroll, ..Default::default() };
             let err = nncg::cc::verify_against_interp(&model, &opts, &work, 2, 17).unwrap();
             assert!(err < 5e-4, "{name} {}: {err}", opts.tag());
+        }
+    }
+}
+
+/// AVX2 remainder lanes: odd channel counts must keep 8-wide groups where
+/// they fit, drop to SSE for the 4-lane remainder, and finish scalar —
+/// and still match the interpreter. Skips when the host lacks AVX2.
+#[test]
+fn avx2_remainder_lanes_match_interp() {
+    if !std::arch::is_x86_feature_detected!("avx2") || !std::arch::is_x86_feature_detected!("fma") {
+        eprintln!("SKIP avx2 remainder test: host lacks AVX2/FMA");
+        return;
+    }
+    let model = Model::new("avx2odd", &[8, 8, 2])
+        .push(Layer::conv2d(13, 3, 3, (1, 1), Padding::Same, Activation::Relu))
+        .push(Layer::conv2d(6, 3, 3, (2, 2), Padding::Same, Activation::None))
+        .push(Layer::softmax())
+        .with_random_weights(909);
+    let work = std::env::temp_dir().join("nncg-fuzz-avx2-odd");
+    for tile in [TileMode::Off, TileMode::Auto] {
+        let opts = CodegenOptions { isa: Isa::Avx2, tile, ..Default::default() };
+        let src = nncg::codegen::generate_c(&model, &opts).unwrap();
+        // c_out=13 → one 8-wide group, one 4-wide group, one scalar lane.
+        assert!(src.contains("_mm256_"), "{}: expected 8-wide groups", opts.tag());
+        assert!(src.contains("_mm_"), "{}: expected a 4-wide remainder group", opts.tag());
+        let err = nncg::cc::verify_against_interp(&model, &opts, &work, 2, 31).unwrap();
+        assert!(err < 5e-4, "{}: {err}", opts.tag());
+    }
+}
+
+/// Padless emission is byte-stable and never references the pad buffer,
+/// for both conv and depthwise layers.
+#[test]
+fn padless_depthwise_matches_interp_and_drops_pad_buffer() {
+    let model = Model::new("dwpadless", &[10, 9, 6])
+        .push(Layer::depthwise(3, 3, (2, 2), Padding::Same, Activation::Relu))
+        .push(Layer::conv2d(5, 1, 1, (1, 1), Padding::Valid, Activation::None))
+        .push(Layer::softmax())
+        .with_random_weights(77);
+    let work = std::env::temp_dir().join("nncg-fuzz-dw-padless");
+    for isa in [Isa::Generic, Isa::Sse3] {
+        for unroll in [Unroll::KeepOuter2, Unroll::Full] {
+            let opts = CodegenOptions { isa, unroll, pad_mode: PadMode::Padless, ..Default::default() };
+            let src = nncg::codegen::generate_c(&model, &opts).unwrap();
+            assert!(!src.contains("nncg_pad"), "{}", opts.tag());
+            let err = nncg::cc::verify_against_interp(&model, &opts, &work, 2, 41).unwrap();
+            assert!(err < 1e-4, "{}: {err}", opts.tag());
         }
     }
 }

@@ -1,0 +1,167 @@
+//! Minimal offline stand-in for the `libloading` crate (Unix only).
+//!
+//! Wraps `dlopen`/`dlsym`/`dlclose` with the same call shapes nncg uses:
+//! `unsafe { Library::new(path) }`, `lib.get::<T>(b"symbol\0")` returning a
+//! [`Symbol<T>`] that derefs to the raw function pointer.
+
+#![cfg(unix)]
+
+use std::ffi::{CStr, CString, OsStr};
+use std::fmt;
+use std::marker::PhantomData;
+use std::os::raw::{c_char, c_int, c_void};
+use std::os::unix::ffi::OsStrExt;
+
+#[cfg_attr(target_os = "linux", link(name = "dl"))]
+extern "C" {
+    fn dlopen(filename: *const c_char, flags: c_int) -> *mut c_void;
+    fn dlsym(handle: *mut c_void, symbol: *const c_char) -> *mut c_void;
+    fn dlclose(handle: *mut c_void) -> c_int;
+    fn dlerror() -> *mut c_char;
+}
+
+const RTLD_NOW: c_int = 2;
+
+/// Library loading / symbol resolution error.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+unsafe fn take_dlerror(fallback: &str) -> Error {
+    let p = dlerror();
+    let msg = if p.is_null() {
+        fallback.to_string()
+    } else {
+        CStr::from_ptr(p).to_string_lossy().into_owned()
+    };
+    Error { msg }
+}
+
+/// A loaded shared object. Closed (dlclose) on drop.
+pub struct Library {
+    handle: *mut c_void,
+}
+
+// SAFETY: a dlopen handle is process-global state; dlsym/dlclose on it are
+// thread-safe per POSIX.
+unsafe impl Send for Library {}
+unsafe impl Sync for Library {}
+
+impl Library {
+    /// Load a shared object.
+    ///
+    /// # Safety
+    /// Loading a library executes its initializers.
+    pub unsafe fn new<P: AsRef<OsStr>>(path: P) -> Result<Library, Error> {
+        let c = CString::new(path.as_ref().as_bytes())
+            .map_err(|_| Error { msg: "library path contains NUL".into() })?;
+        let _ = dlerror(); // clear any stale error
+        let handle = dlopen(c.as_ptr(), RTLD_NOW);
+        if handle.is_null() {
+            return Err(take_dlerror("dlopen failed"));
+        }
+        Ok(Library { handle })
+    }
+
+    /// Resolve a symbol. The byte string may or may not be NUL-terminated.
+    ///
+    /// # Safety
+    /// The caller asserts the symbol really has type `T` (which must be
+    /// pointer-sized, e.g. a function pointer).
+    pub unsafe fn get<'lib, T>(&'lib self, symbol: &[u8]) -> Result<Symbol<'lib, T>, Error> {
+        assert_eq!(
+            std::mem::size_of::<T>(),
+            std::mem::size_of::<*mut c_void>(),
+            "Symbol<T> requires a pointer-sized T (function pointer)"
+        );
+        let owned: Vec<u8> = match symbol.last() {
+            Some(0) => symbol[..symbol.len() - 1].to_vec(),
+            _ => symbol.to_vec(),
+        };
+        let c = CString::new(owned).map_err(|_| Error { msg: "symbol contains interior NUL".into() })?;
+        let _ = dlerror();
+        let ptr = dlsym(self.handle, c.as_ptr());
+        if ptr.is_null() {
+            return Err(take_dlerror("dlsym returned NULL"));
+        }
+        Ok(Symbol {
+            value: std::mem::transmute_copy::<*mut c_void, T>(&ptr),
+            _lib: PhantomData,
+        })
+    }
+}
+
+impl Drop for Library {
+    fn drop(&mut self) {
+        unsafe {
+            let _ = dlclose(self.handle);
+        }
+    }
+}
+
+impl fmt::Debug for Library {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Library({:p})", self.handle)
+    }
+}
+
+/// A resolved symbol, borrowing the [`Library`] it came from.
+pub struct Symbol<'lib, T> {
+    value: T,
+    _lib: PhantomData<&'lib Library>,
+}
+
+impl<'lib, T> std::ops::Deref for Symbol<'lib, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        &self.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loading_a_missing_library_errors() {
+        let err = unsafe { Library::new("/nonexistent/libnope.so") };
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn loads_libm_and_calls_cos() {
+        // libm ships with every glibc install; fall back over sonames.
+        let lib = ["libm.so.6", "libm.so"]
+            .iter()
+            .find_map(|n| unsafe { Library::new(n) }.ok());
+        let lib = match lib {
+            Some(l) => l,
+            None => return, // unusual libc layout; skip
+        };
+        let cos: Symbol<unsafe extern "C" fn(f64) -> f64> =
+            unsafe { lib.get(b"cos\0").unwrap() };
+        let v = unsafe { (*cos)(0.0) };
+        assert!((v - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn missing_symbol_errors() {
+        let lib = match unsafe { Library::new("libm.so.6") } {
+            Ok(l) => l,
+            Err(_) => return,
+        };
+        let r: Result<Symbol<unsafe extern "C" fn()>, Error> =
+            unsafe { lib.get(b"definitely_not_a_symbol") };
+        assert!(r.is_err());
+    }
+}

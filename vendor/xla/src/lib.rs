@@ -1,0 +1,448 @@
+//! Minimal offline stand-in for the `xla` PJRT bindings.
+//!
+//! The real crate links the native `xla_extension` runtime, which is not
+//! available in this container. This shim keeps the same API shapes nncg
+//! uses (`PjRtClient::cpu`, `HloModuleProto::from_text_file`,
+//! `XlaComputation::from_proto`, `client.compile`, `exe.execute`,
+//! `Literal`) and backs them with a tiny HLO-*text* interpreter covering
+//! elementwise f32 modules: `parameter`, `constant`, `broadcast` (scalar),
+//! `add`, `subtract`, `multiply`, `divide`, `maximum`, `tuple`.
+//!
+//! Modules using any other op (e.g. `convolution` from real CNN lowerings)
+//! fail at `compile()` with a clear error, which callers already treat as
+//! "XLA backend unavailable" (N/A columns, skipped tests).
+
+use std::fmt;
+
+/// Error type for parse/compile/execute failures.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// Element types this shim evaluates (f32 only).
+pub trait NativeType: Copy {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+/// A dense f32 literal, possibly a tuple of literals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<usize>,
+    data: Vec<f32>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(v: &[f32]) -> Literal {
+        Literal { dims: vec![v.len()], data: v.to_vec(), tuple: None }
+    }
+
+    fn scalar(v: f32) -> Literal {
+        Literal { dims: vec![], data: vec![v], tuple: None }
+    }
+
+    fn dense(dims: Vec<usize>, data: Vec<f32>) -> Literal {
+        Literal { dims, data, tuple: None }
+    }
+
+    fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { dims: vec![], data: vec![], tuple: Some(parts) }
+    }
+
+    fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Unwrap a 1-element tuple (jax `return_tuple=True` convention).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        match &self.tuple {
+            Some(parts) if parts.len() == 1 => Ok(parts[0].clone()),
+            Some(parts) => Err(Error::new(format!("expected 1-tuple, got {}-tuple", parts.len()))),
+            None => Err(Error::new("literal is not a tuple")),
+        }
+    }
+
+    /// Copy out the flat element data.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error::new("cannot convert a tuple literal to a flat vec"));
+        }
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+}
+
+/// One parsed HLO instruction.
+#[derive(Debug, Clone)]
+struct Instr {
+    name: String,
+    dims: Vec<usize>,
+    is_tuple_type: bool,
+    op: String,
+    args: Vec<String>,
+}
+
+/// A parsed HLO module (entry computation only).
+#[derive(Debug, Clone)]
+struct HloModule {
+    instrs: Vec<Instr>,
+    root: usize,
+}
+
+const SUPPORTED_OPS: [&str; 9] = [
+    "parameter", "constant", "broadcast", "add", "subtract", "multiply", "divide", "maximum",
+    "tuple",
+];
+
+fn parse_shape(s: &str) -> Result<(Vec<usize>, bool)> {
+    // "(f32[4]{0})" → tuple of one; "f32[4]{0}" / "f32[]" / "f32[2,3]{1,0}"
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('(') {
+        let inner = inner.strip_suffix(')').ok_or_else(|| Error::new("unbalanced tuple type"))?;
+        // Only single-element tuple types are needed here.
+        let (dims, _) = parse_shape(inner)?;
+        return Ok((dims, true));
+    }
+    let rest = s
+        .strip_prefix("f32")
+        .ok_or_else(|| Error::new(format!("unsupported element type in {s:?} (only f32)")))?;
+    let open = rest.find('[').ok_or_else(|| Error::new(format!("missing [dims] in {s:?}")))?;
+    let close = rest.find(']').ok_or_else(|| Error::new(format!("missing ] in {s:?}")))?;
+    let dims_str = &rest[open + 1..close];
+    let dims: Vec<usize> = if dims_str.trim().is_empty() {
+        vec![]
+    } else {
+        dims_str
+            .split(',')
+            .map(|d| d.trim().parse::<usize>().map_err(|_| Error::new(format!("bad dim {d:?}"))))
+            .collect::<Result<Vec<usize>>>()?
+    };
+    Ok((dims, false))
+}
+
+fn parse_instruction(line: &str) -> Result<(bool, Instr)> {
+    let (is_root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let eq = line.find(" = ").ok_or_else(|| Error::new(format!("no `=` in instruction {line:?}")))?;
+    let name = line[..eq].trim().to_string();
+    let rhs = line[eq + 3..].trim();
+
+    // The type token: balanced parens for tuple types, else up to first space.
+    let type_end = if rhs.starts_with('(') {
+        let mut depth = 0usize;
+        let mut end = 0usize;
+        for (i, c) in rhs.char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if end == 0 {
+            return Err(Error::new(format!("unbalanced type in {line:?}")));
+        }
+        end
+    } else {
+        rhs.find(' ').ok_or_else(|| Error::new(format!("no op after type in {line:?}")))?
+    };
+    let (dims, is_tuple_type) = parse_shape(&rhs[..type_end])?;
+    let rest = rhs[type_end..].trim();
+
+    let paren = rest.find('(').ok_or_else(|| Error::new(format!("no operand list in {line:?}")))?;
+    let op = rest[..paren].trim().to_string();
+    let close = rest[paren..]
+        .find(')')
+        .map(|i| paren + i)
+        .ok_or_else(|| Error::new(format!("unterminated operand list in {line:?}")))?;
+    let args: Vec<String> = rest[paren + 1..close]
+        .split(',')
+        .map(|a| a.trim().to_string())
+        .filter(|a| !a.is_empty())
+        .collect();
+    // Trailing attributes (", dimensions={}" etc.) are ignored.
+    Ok((is_root, Instr { name, dims, is_tuple_type, op, args }))
+}
+
+fn parse_module(text: &str) -> Result<HloModule> {
+    let mut instrs = Vec::new();
+    let mut root = None;
+    let mut in_entry = false;
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("HloModule") || line.starts_with("//") {
+            continue;
+        }
+        if line.starts_with("ENTRY ") {
+            in_entry = true;
+            continue;
+        }
+        if !in_entry {
+            // Non-entry computations (fusions, reducers) are unsupported.
+            if line.contains(" = ") {
+                return Err(Error::new("non-entry computations are not supported by the xla shim"));
+            }
+            continue;
+        }
+        if line == "}" {
+            in_entry = false;
+            continue;
+        }
+        let (is_root, instr) = parse_instruction(line)?;
+        if is_root {
+            root = Some(instrs.len());
+        }
+        instrs.push(instr);
+    }
+    let root = root.ok_or_else(|| Error::new("module has no ROOT instruction"))?;
+    Ok(HloModule { instrs, root })
+}
+
+/// Parsed HLO module handle (mirrors `xla::HloModuleProto`).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    module: HloModule,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file (the format `python/compile/aot.py` writes).
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::new(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { module: parse_module(&text)? })
+    }
+}
+
+/// A computation ready for compilation (mirrors `xla::XlaComputation`).
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    module: HloModule,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.module.clone() }
+    }
+}
+
+/// CPU "client" (the shim has no devices; it interprets in-process).
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    /// Validate that the module only uses ops the interpreter supports.
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        for instr in &computation.module.instrs {
+            if !SUPPORTED_OPS.contains(&instr.op.as_str()) {
+                return Err(Error::new(format!(
+                    "HLO op {:?} is not supported by the offline xla shim",
+                    instr.op
+                )));
+            }
+        }
+        Ok(PjRtLoadedExecutable { module: computation.module.clone() })
+    }
+}
+
+/// An executable module (mirrors `xla::PjRtLoadedExecutable`).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    module: HloModule,
+}
+
+/// A device buffer holding a result (mirrors `xla::PjRtBuffer`).
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute on host literals; returns per-device, per-output buffers
+    /// (one device, one output here).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(&self, args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let args: Vec<&Literal> = args.iter().map(|a| a.borrow()).collect();
+        let result = interpret(&self.module, &args)?;
+        Ok(vec![vec![PjRtBuffer { literal: result }]])
+    }
+}
+
+fn interpret(module: &HloModule, args: &[&Literal]) -> Result<Literal> {
+    let mut env: Vec<Literal> = Vec::with_capacity(module.instrs.len());
+    let lookup = |env: &[Literal], instrs: &[Instr], name: &str| -> Result<Literal> {
+        instrs
+            .iter()
+            .position(|i| i.name == name)
+            .and_then(|i| env.get(i).cloned())
+            .ok_or_else(|| Error::new(format!("operand {name:?} not yet defined")))
+    };
+    for instr in &module.instrs {
+        let value = match instr.op.as_str() {
+            "parameter" => {
+                let idx: usize = instr
+                    .args
+                    .first()
+                    .and_then(|a| a.parse().ok())
+                    .ok_or_else(|| Error::new("bad parameter index"))?;
+                let arg = args
+                    .get(idx)
+                    .ok_or_else(|| Error::new(format!("missing argument {idx}")))?;
+                let want: usize = instr.dims.iter().product();
+                if arg.numel() != want {
+                    return Err(Error::new(format!(
+                        "argument {idx} has {} elements, parameter wants {want}",
+                        arg.numel()
+                    )));
+                }
+                Literal::dense(instr.dims.clone(), arg.data.clone())
+            }
+            "constant" => {
+                let v: f32 = instr
+                    .args
+                    .first()
+                    .and_then(|a| a.parse().ok())
+                    .ok_or_else(|| Error::new("non-scalar constants are not supported"))?;
+                Literal::scalar(v)
+            }
+            "broadcast" => {
+                let src = lookup(&env, &module.instrs, &instr.args[0])?;
+                let n: usize = instr.dims.iter().product();
+                if src.numel() == 1 {
+                    Literal::dense(instr.dims.clone(), vec![src.data[0]; n])
+                } else if src.numel() == n {
+                    Literal::dense(instr.dims.clone(), src.data)
+                } else {
+                    return Err(Error::new("only scalar broadcast is supported"));
+                }
+            }
+            "add" | "subtract" | "multiply" | "divide" | "maximum" => {
+                let a = lookup(&env, &module.instrs, &instr.args[0])?;
+                let b = lookup(&env, &module.instrs, &instr.args[1])?;
+                if a.numel() != b.numel() {
+                    return Err(Error::new("elementwise operands differ in size"));
+                }
+                let data: Vec<f32> = a
+                    .data
+                    .iter()
+                    .zip(&b.data)
+                    .map(|(&x, &y)| match instr.op.as_str() {
+                        "add" => x + y,
+                        "subtract" => x - y,
+                        "multiply" => x * y,
+                        "divide" => x / y,
+                        _ => x.max(y),
+                    })
+                    .collect();
+                Literal::dense(instr.dims.clone(), data)
+            }
+            "tuple" => {
+                let parts = instr
+                    .args
+                    .iter()
+                    .map(|a| lookup(&env, &module.instrs, a))
+                    .collect::<Result<Vec<Literal>>>()?;
+                Literal::tuple(parts)
+            }
+            other => return Err(Error::new(format!("unsupported op {other:?}"))),
+        };
+        let _ = instr.is_tuple_type;
+        env.push(value);
+    }
+    Ok(env[module.root].clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+HloModule jit_f, entry_computation_layout={(f32[4]{0})->(f32[4]{0})}
+
+ENTRY main.5 {
+  Arg_0.1 = f32[4]{0} parameter(0)
+  constant.2 = f32[] constant(2)
+  broadcast.3 = f32[4]{0} broadcast(constant.2), dimensions={}
+  multiply.4 = f32[4]{0} multiply(Arg_0.1, broadcast.3)
+  ROOT tuple.5 = (f32[4]{0}) tuple(multiply.4)
+}
+"#;
+
+    fn run(text: &str, input: &[f32]) -> Result<Vec<f32>> {
+        let module = parse_module(text)?;
+        let comp = XlaComputation { module };
+        let exe = PjRtClient::cpu()?.compile(&comp)?;
+        let lit = Literal::vec1(input);
+        let out = exe.execute::<Literal>(&[lit])?[0][0].to_literal_sync()?;
+        out.to_tuple1()?.to_vec::<f32>()
+    }
+
+    #[test]
+    fn doubles_through_the_full_api() {
+        let y = run(SAMPLE, &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        assert_eq!(y, vec![2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn unsupported_ops_fail_at_compile() {
+        let text = SAMPLE.replace("multiply", "convolution");
+        let module = parse_module(&text).unwrap();
+        let comp = XlaComputation { module };
+        assert!(PjRtClient::cpu().unwrap().compile(&comp).is_err());
+    }
+
+    #[test]
+    fn wrong_arity_is_an_execute_error() {
+        let module = parse_module(SAMPLE).unwrap();
+        let exe = PjRtClient::cpu().unwrap().compile(&XlaComputation { module }).unwrap();
+        let out = exe.execute::<Literal>(&[Literal::vec1(&[1.0])]);
+        assert!(out.is_err());
+    }
+
+    #[test]
+    fn shape_parser() {
+        assert_eq!(parse_shape("f32[4]{0}").unwrap(), (vec![4], false));
+        assert_eq!(parse_shape("f32[]").unwrap(), (vec![], false));
+        assert_eq!(parse_shape("f32[2,3]{1,0}").unwrap(), (vec![2, 3], false));
+        assert_eq!(parse_shape("(f32[4]{0})").unwrap(), (vec![4], true));
+        assert!(parse_shape("s32[4]").is_err());
+    }
+}
