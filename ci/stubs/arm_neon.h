@@ -1,0 +1,24 @@
+/*
+ * Declaration-only stand-in for <arm_neon.h>, used to SYNTAX-CHECK
+ * NNCG's NEON-generated C on x86 CI hosts (gcc -fsyntax-only -isystem
+ * ci/stubs). It declares exactly the vocabulary the generator's NEON
+ * OpTable emits (rust/src/codegen/simd.rs) — nothing here is callable;
+ * never link against this. Real ARM builds use the toolchain header.
+ */
+#ifndef NNCG_STUB_ARM_NEON_H
+#define NNCG_STUB_ARM_NEON_H
+
+typedef struct {
+    float nncg_stub_lanes[4];
+} float32x4_t;
+
+float32x4_t vld1q_f32(const float *ptr);
+void vst1q_f32(float *ptr, float32x4_t val);
+float32x4_t vdupq_n_f32(float value);
+float32x4_t vaddq_f32(float32x4_t a, float32x4_t b);
+float32x4_t vmulq_f32(float32x4_t a, float32x4_t b);
+float32x4_t vmaxq_f32(float32x4_t a, float32x4_t b);
+float32x4_t vfmaq_f32(float32x4_t a, float32x4_t b, float32x4_t c);
+float vaddvq_f32(float32x4_t a);
+
+#endif /* NNCG_STUB_ARM_NEON_H */

@@ -2,7 +2,7 @@
 
 use super::args::Args;
 use crate::cc::{CcDriver, CcTarget, CompiledCnn};
-use crate::codegen::{generate_c, CodegenOptions, Isa, PadMode, TileMode, Unroll};
+use crate::codegen::{generate_c, AlignMode, CodegenOptions, Isa, PadMode, TileMode, Unroll};
 use crate::coordinator;
 use crate::experiments::{self, build_engine, load_model};
 use crate::platform::{paper_platforms, GpuModel};
@@ -14,23 +14,23 @@ use anyhow::{bail, Result};
 use std::path::PathBuf;
 
 fn opts_from_args(args: &Args) -> Result<CodegenOptions> {
-    let isa = match args.get_or("isa", "sse3") {
-        "generic" => Isa::Generic,
-        "sse3" => Isa::Sse3,
-        "avx2" => Isa::Avx2,
-        other => bail!("unknown --isa {other:?} (generic|sse3|avx2)"),
-    };
+    let isa_name = args.get_or("isa", "sse3");
+    let isa = Isa::from_name(isa_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --isa {isa_name:?} (generic|sse3|avx2|neon)"))?;
     let unroll = Unroll::from_name(args.get_or("unroll", "keep-outer-2"))
         .ok_or_else(|| anyhow::anyhow!("unknown --unroll (none|2|1|full)"))?;
     let pad_mode = PadMode::from_name(args.get_or("pad-mode", "auto"))
         .ok_or_else(|| anyhow::anyhow!("unknown --pad-mode (auto|copy|padless)"))?;
     let tile = TileMode::from_name(args.get_or("tile", "auto"))
-        .ok_or_else(|| anyhow::anyhow!("unknown --tile (auto|off|2..8)"))?;
+        .ok_or_else(|| anyhow::anyhow!("unknown --tile (auto|off|2..8|RxC e.g. 2x4)"))?;
+    let align = AlignMode::from_name(args.get_or("align", "auto"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --align (auto|off)"))?;
     Ok(CodegenOptions {
         isa,
         unroll,
         pad_mode,
         tile,
+        align,
         test_harness: args.has_flag("harness"),
         ..Default::default()
     })
@@ -70,6 +70,12 @@ pub fn generate(args: &Args) -> Result<i32> {
 pub fn verify(args: &Args) -> Result<i32> {
     let model = model_from_args(args)?;
     let opts = opts_from_args(args)?;
+    if opts.isa == Isa::Neon && !cfg!(any(target_arch = "aarch64", target_arch = "arm")) {
+        bail!(
+            "--isa neon generates ARM intrinsics this host cannot execute; \
+             use `nncg generate --isa neon` and cross-compile (CI syntax-checks it)"
+        );
+    }
     let trials = args.get_usize("trials", 5)?;
     let err = crate::cc::verify_against_interp(&model, &opts, experiments::default_work_dir(), trials, 42)?;
     println!("model={} opts={} trials={trials} max_abs_err={err:.3e}", model.name, opts.tag());
@@ -348,6 +354,29 @@ mod tests {
         assert_eq!(o.tile, TileMode::Fixed(4));
         assert!(opts_from_args(&args(&["--pad-mode", "mirror"])).is_err());
         assert!(opts_from_args(&args(&["--tile", "16"])).is_err());
+    }
+
+    #[test]
+    fn neon_tile2d_and_align_knobs_parse() {
+        let o = opts_from_args(&args(&["--isa", "neon", "--tile", "2x4", "--align", "off"])).unwrap();
+        assert_eq!(o.isa, Isa::Neon);
+        assert_eq!(o.tile, TileMode::Fixed2D(2, 4));
+        assert_eq!(o.align, AlignMode::Off);
+        assert!(!o.use_aligned());
+        let o = opts_from_args(&args(&[])).unwrap();
+        assert_eq!(o.align, AlignMode::Auto);
+        assert!(opts_from_args(&args(&["--align", "force"])).is_err());
+        assert!(opts_from_args(&args(&["--tile", "9x2"])).is_err());
+        assert!(opts_from_args(&args(&["--tile", "2x12"])).is_err());
+    }
+
+    #[test]
+    fn verify_rejects_neon_on_foreign_hosts() {
+        if cfg!(any(target_arch = "aarch64", target_arch = "arm")) {
+            return; // NEON executes natively there
+        }
+        let err = verify(&args(&["--model", "tiny", "--isa", "neon"])).unwrap_err();
+        assert!(format!("{err:#}").contains("neon"), "{err:#}");
     }
 
     #[test]

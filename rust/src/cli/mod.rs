@@ -50,11 +50,13 @@ USAGE: nncg <command> [flags]
 
 COMMANDS:
   describe        print a model architecture table (--model ball|pedestrian|robot)
-  generate        emit the C file for a model (--model, --isa generic|sse3|avx2,
+  generate        emit the C file for a model (--model, --isa generic|sse3|avx2|neon,
                   --unroll none|2|1|full, --pad-mode auto|copy|padless,
-                  --tile auto|off|2..8, --harness, -o FILE)
+                  --tile auto|off|2..8|RxC (2-D register block, e.g. 2x4),
+                  --align auto|off, --harness, -o FILE)
   verify          compile generated C and compare against the interpreter
-                  (--model, --isa, --unroll, --pad-mode, --tile, --trials N)
+                  (--model, --isa, --unroll, --pad-mode, --tile, --align,
+                  --trials N; NEON is generate-only on x86 hosts)
   run             classify one synthetic input (--model, --engine nncg|interp|xla,
                   --artifacts DIR for xla)
   bench           reproduce a paper table (--table 4|5|6|7|gpu, --quick)
@@ -65,6 +67,12 @@ COMMANDS:
 
 Weights: models load trained weights from --weights-dir (default models/)
 if present, else use seeded random weights (latency is weight-independent).
+
+Alignment: with --align auto (default) scratch buffers and weight arrays get
+a 32-byte NNCG_ALIGN attribute and provably-aligned vector accesses use the
+aligned intrinsic forms (x_in/x_out always stay unaligned); --align off is
+the paper-baseline unaligned emission. NEON ignores the distinction
+(vld1q_f32 is alignment-agnostic) and always stores weights as arrays.
 "
     .to_string()
 }

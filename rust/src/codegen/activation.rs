@@ -3,6 +3,7 @@
 
 use super::conv::scalar_act;
 use super::cwriter::{fmt_f32, CWriter};
+use super::schedule;
 use super::simd::{emit_vec_activation, ChannelSchedule};
 use super::{LayerCtx, Unroll};
 use crate::graph::Activation;
@@ -25,15 +26,23 @@ pub(crate) fn emit_activation(w: &mut CWriter, ctx: &LayerCtx<'_>, act: Activati
         Activation::Relu | Activation::LeakyRelu(_) => {
             // Elementwise over the flat buffer, lane-scheduled: vector
             // groups over the divisible prefix, scalar remainder tail.
+            // Flat offsets step by the width from a width-multiple start,
+            // so a static buffer alone proves alignment.
             let sched = ChannelSchedule::for_channels(ctx.opts.isa, n);
+            let s_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.src);
+            let d_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.dst);
             if ctx.opts.unroll == Unroll::Full {
                 for seg in &sched.segments {
                     if let Some(v) = seg.vec {
                         for i0 in (seg.start..seg.end()).step_by(v.width) {
                             w.open("");
-                            w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("{} + {i0}", ctx.src))));
+                            w.line(&format!(
+                                "{} a = {};",
+                                v.ty,
+                                v.load(&format!("{} + {i0}", ctx.src), s_al && i0 % v.width == 0)
+                            ));
                             emit_vec_activation(w, v, act, "a");
-                            w.line(&v.storeu(&format!("{} + {i0}", ctx.dst), "a"));
+                            w.line(&v.store(&format!("{} + {i0}", ctx.dst), "a", d_al && i0 % v.width == 0));
                             w.close();
                         }
                     } else {
@@ -49,10 +58,11 @@ pub(crate) fn emit_activation(w: &mut CWriter, ctx: &LayerCtx<'_>, act: Activati
                         continue;
                     }
                     if let Some(v) = seg.vec {
+                        let seg_al = seg.start % v.width == 0;
                         w.open(&format!("for (i = {}; i < {}; i += {})", seg.start, seg.end(), v.width));
-                        w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("{} + i", ctx.src))));
+                        w.line(&format!("{} a = {};", v.ty, v.load(&format!("{} + i", ctx.src), s_al && seg_al)));
                         emit_vec_activation(w, v, act, "a");
-                        w.line(&v.storeu(&format!("{} + i", ctx.dst), "a"));
+                        w.line(&v.store(&format!("{} + i", ctx.dst), "a", d_al && seg_al));
                         w.close();
                     } else {
                         w.open(&format!("for (i = {}; i < {}; i++)", seg.start, seg.end()));

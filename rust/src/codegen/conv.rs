@@ -55,16 +55,21 @@ pub(crate) struct TapWindow {
 /// Spatial region walker shared by the conv and depthwise emitters.
 ///
 /// Walks output rows/columns per the two [`AxisPlan`]s and the unroll
-/// level, peeling border cells and blocking interior columns into
-/// register tiles, then hands each block to the layer-specific cell
-/// emitter: `block(w, window, s_name, s_offs, d_name, d_offs)` where
-/// `s_offs[t]` addresses cell `t`'s first valid tap relative to `s_name`
-/// and `d_offs[t]` its output cell.
+/// level, peeling border cells and blocking interior cells into register
+/// tiles — `tile` columns wide and, when the row loop is kept,
+/// `tile_rows` rows tall (a 2-D register block: every cell of the
+/// `tile_rows × tile` block shares each materialized weight vector) —
+/// then hands each block to the layer-specific cell emitter:
+/// `block(w, window, s_name, s_offs, d_name, d_offs)` where `s_offs[t]`
+/// addresses cell `t`'s first valid tap relative to `s_name` and
+/// `d_offs[t]` its output cell.
 pub(crate) struct SpatialWalk {
     pub rows: AxisPlan,
     pub cols: AxisPlan,
     /// Interior column-block width (1 = untiled).
     pub tile: usize,
+    /// Interior row-block height (1 = single-row walk).
+    pub tile_rows: usize,
     pub unroll: Unroll,
     pub src: String,
     pub dst: String,
@@ -102,22 +107,51 @@ impl SpatialWalk {
                     self.emit_row_fixed(w, i, &mut block);
                 }
                 if self.rows.lo < self.rows.hi {
-                    w.open(&format!("for (i = {}; i < {}; i++)", self.rows.lo, self.rows.hi));
-                    w.line(&format!(
-                        "const float *s = {} + ({})*{};",
-                        self.src,
-                        lin("i", self.rows.stride, self.rows.pad),
-                        self.row_elems
-                    ));
-                    w.line(&format!("float *d = {} + i*{};", self.dst, self.cols.out * self.out_minor));
-                    self.emit_cols(w, 0, self.rows.kernel, &mut block);
-                    w.close();
+                    let rb = self.tile_rows.min(self.rows.interior()).max(1);
+                    if rb > 1 {
+                        // 2-D register block: rb interior rows advance
+                        // together; every cell's taps stay in bounds
+                        // because i + rb <= hi keeps the whole block
+                        // interior.
+                        w.open(&format!(
+                            "for (i = {}; i + {} <= {}; i += {})",
+                            self.rows.lo, rb, self.rows.hi, rb
+                        ));
+                        self.emit_interior_row_body(w, rb, &mut block);
+                        w.close();
+                        let rest = self.rows.lo + (self.rows.interior() / rb) * rb;
+                        if rest < self.rows.hi {
+                            w.open(&format!("for (i = {}; i < {}; i++)", rest, self.rows.hi));
+                            self.emit_interior_row_body(w, 1, &mut block);
+                            w.close();
+                        }
+                    } else {
+                        w.open(&format!("for (i = {}; i < {}; i++)", self.rows.lo, self.rows.hi));
+                        self.emit_interior_row_body(w, 1, &mut block);
+                        w.close();
+                    }
                 }
                 for i in self.rows.hi..self.rows.out {
                     self.emit_row_fixed(w, i, &mut block);
                 }
             }
         }
+    }
+
+    /// Body of the kept interior-row loop (`i` symbolic): bases for the
+    /// row block, then the column walk over `rb` rows at once.
+    fn emit_interior_row_body<F>(&self, w: &mut CWriter, rb: usize, block: &mut F)
+    where
+        F: FnMut(&mut CWriter, TapWindow, &str, &[usize], &str, &[usize]),
+    {
+        w.line(&format!(
+            "const float *s = {} + ({})*{};",
+            self.src,
+            lin("i", self.rows.stride, self.rows.pad),
+            self.row_elems
+        ));
+        w.line(&format!("float *d = {} + i*{};", self.dst, self.cols.out * self.out_minor));
+        self.emit_cols(w, 0, self.rows.kernel, rb, block);
     }
 
     /// A row at a generation-time-constant coordinate (border rows, and
@@ -130,16 +164,27 @@ impl SpatialWalk {
         w.open("");
         w.line(&format!("const float *s = {} + {};", self.src, self.rows.src_start(i) * self.row_elems));
         w.line(&format!("float *d = {} + {};", self.dst, i * self.cols.out * self.out_minor));
-        self.emit_cols(w, n0, n1, block);
+        self.emit_cols(w, n0, n1, 1, block);
         w.close();
     }
 
-    fn emit_cols<F>(&self, w: &mut CWriter, n0: usize, n1: usize, block: &mut F)
+    /// Per-cell source offset within a row block (`rr` rows below the
+    /// block's first row, relative tap column offset `c_off`).
+    fn row_s_off(&self, rr: usize, c_off: usize) -> usize {
+        rr * self.rows.stride * self.row_elems + c_off
+    }
+
+    /// Per-cell destination offset within a row block.
+    fn row_d_off(&self, rr: usize, c_off: usize) -> usize {
+        rr * self.cols.out * self.out_minor + c_off
+    }
+
+    fn emit_cols<F>(&self, w: &mut CWriter, n0: usize, n1: usize, rb: usize, block: &mut F)
     where
         F: FnMut(&mut CWriter, TapWindow, &str, &[usize], &str, &[usize]),
     {
         for j in 0..self.cols.lo {
-            self.emit_col_fixed(w, n0, n1, j, block);
+            self.emit_col_fixed(w, n0, n1, j, rb, block);
         }
         if self.cols.lo < self.cols.hi {
             let interior = self.cols.hi - self.cols.lo;
@@ -150,17 +195,17 @@ impl SpatialWalk {
                         "for (j = {}; j + {} <= {}; j += {})",
                         self.cols.lo, tb, self.cols.hi, tb
                     ));
-                    self.emit_interior_body(w, n0, n1, tb, block);
+                    self.emit_interior_body(w, n0, n1, rb, tb, block);
                     w.close();
                     let rest = self.cols.lo + (interior / tb) * tb;
                     if rest < self.cols.hi {
                         w.open(&format!("for (j = {}; j < {}; j++)", rest, self.cols.hi));
-                        self.emit_interior_body(w, n0, n1, 1, block);
+                        self.emit_interior_body(w, n0, n1, rb, 1, block);
                         w.close();
                     }
                 } else {
                     w.open(&format!("for (j = {}; j < {}; j++)", self.cols.lo, self.cols.hi));
-                    self.emit_interior_body(w, n0, n1, 1, block);
+                    self.emit_interior_body(w, n0, n1, rb, 1, block);
                     w.close();
                 }
             } else {
@@ -168,10 +213,15 @@ impl SpatialWalk {
                 let mut j = self.cols.lo;
                 while j < self.cols.hi {
                     let b = self.tile.min(self.cols.hi - j).max(1);
-                    let s_offs: Vec<usize> = (0..b)
-                        .map(|t| ((j + t) * self.cols.stride - self.cols.pad) * self.cmin)
-                        .collect();
-                    let d_offs: Vec<usize> = (0..b).map(|t| (j + t) * self.out_minor).collect();
+                    let mut s_offs = Vec::with_capacity(rb * b);
+                    let mut d_offs = Vec::with_capacity(rb * b);
+                    for rr in 0..rb {
+                        for t in 0..b {
+                            let c = ((j + t) * self.cols.stride - self.cols.pad) * self.cmin;
+                            s_offs.push(self.row_s_off(rr, c));
+                            d_offs.push(self.row_d_off(rr, (j + t) * self.out_minor));
+                        }
+                    }
                     let win = TapWindow { n0, n1, m0: 0, m1: self.cols.kernel };
                     block(w, win, "s", &s_offs, "d", &d_offs);
                     j += b;
@@ -179,12 +229,13 @@ impl SpatialWalk {
             }
         }
         for j in self.cols.hi..self.cols.out {
-            self.emit_col_fixed(w, n0, n1, j, block);
+            self.emit_col_fixed(w, n0, n1, j, rb, block);
         }
     }
 
-    /// Body of the kept interior-column loop (`j` symbolic).
-    fn emit_interior_body<F>(&self, w: &mut CWriter, n0: usize, n1: usize, b: usize, block: &mut F)
+    /// Body of the kept interior-column loop (`j` symbolic) for a block of
+    /// `rb` rows × `cb` columns.
+    fn emit_interior_body<F>(&self, w: &mut CWriter, n0: usize, n1: usize, rb: usize, cb: usize, block: &mut F)
     where
         F: FnMut(&mut CWriter, TapWindow, &str, &[usize], &str, &[usize]),
     {
@@ -194,21 +245,30 @@ impl SpatialWalk {
             self.cmin
         ));
         w.line(&format!("float *dj = d + j*{};", self.out_minor));
-        let s_offs: Vec<usize> = (0..b).map(|t| t * self.cols.stride * self.cmin).collect();
-        let d_offs: Vec<usize> = (0..b).map(|t| t * self.out_minor).collect();
+        let mut s_offs = Vec::with_capacity(rb * cb);
+        let mut d_offs = Vec::with_capacity(rb * cb);
+        for rr in 0..rb {
+            for t in 0..cb {
+                s_offs.push(self.row_s_off(rr, t * self.cols.stride * self.cmin));
+                d_offs.push(self.row_d_off(rr, t * self.out_minor));
+            }
+        }
         let win = TapWindow { n0, n1, m0: 0, m1: self.cols.kernel };
         block(w, win, "sj", &s_offs, "dj", &d_offs);
     }
 
-    /// A border column at a constant coordinate.
-    fn emit_col_fixed<F>(&self, w: &mut CWriter, n0: usize, n1: usize, j: usize, block: &mut F)
+    /// A border column at a constant coordinate (still spans the row
+    /// block: the trimmed column window applies to every row of it).
+    fn emit_col_fixed<F>(&self, w: &mut CWriter, n0: usize, n1: usize, j: usize, rb: usize, block: &mut F)
     where
         F: FnMut(&mut CWriter, TapWindow, &str, &[usize], &str, &[usize]),
     {
         let (m0, m1) = self.cols.window(j);
         let win = TapWindow { n0, n1, m0, m1 };
-        let s_off = self.cols.src_start(j) * self.cmin;
-        block(w, win, "s", &[s_off], "d", &[j * self.out_minor]);
+        let c = self.cols.src_start(j) * self.cmin;
+        let s_offs: Vec<usize> = (0..rb).map(|rr| self.row_s_off(rr, c)).collect();
+        let d_offs: Vec<usize> = (0..rb).map(|rr| self.row_d_off(rr, j * self.out_minor)).collect();
+        block(w, win, "s", &s_offs, "d", &d_offs);
     }
 }
 
@@ -262,12 +322,14 @@ pub(crate) fn emit_conv(
         (AxisPlan::full(h_out, stride.0, h_k, src_h), AxisPlan::full(w_out, stride.1, w_k, src_w))
     };
     let row_elems = cols.input * c_in;
-    let tile = schedule::tile_width(ctx.opts, &sched, cols.interior());
+    let (tile_rows, tile) = schedule::tile_shape(ctx.opts, &sched, rows.interior(), cols.interior());
 
+    let dst_static = schedule::static_buf(ctx.dst);
     let walk = SpatialWalk {
         rows,
         cols,
         tile,
+        tile_rows,
         unroll: ctx.opts.unroll,
         src,
         dst: ctx.dst.to_string(),
@@ -285,6 +347,7 @@ pub(crate) fn emit_conv(
         w_k,
         c_in,
         c_out,
+        dst_static,
     };
     walk.emit(w, |w, win, s, so, d, dofs| cells.emit_block(w, win, s, so, d, dofs));
 
@@ -306,11 +369,35 @@ struct ConvCells<'a> {
     w_k: usize,
     c_in: usize,
     c_out: usize,
+    /// Whether `dst` is a generator-owned (alignable) buffer.
+    dst_static: bool,
 }
 
 impl ConvCells<'_> {
     fn inline(&self) -> bool {
         self.ctx.opts.effective_const_mode() == ConstMode::Inline
+    }
+
+    /// Weight/bias arrays are always generator-owned; a load of channel
+    /// group `k0` is aligned when alignment is on and the flat index is a
+    /// whole number of vectors (stride terms are multiples of `c_out`, so
+    /// `c_out % width == 0` keeps every tap aligned).
+    fn warr_aligned(&self, v: &VecSpec, idx: usize) -> bool {
+        self.ctx.opts.use_aligned() && idx % v.width == 0 && self.c_out % v.width == 0
+    }
+
+    fn bias_aligned(&self, v: &VecSpec, k0: usize) -> bool {
+        self.ctx.opts.use_aligned() && k0 % v.width == 0
+    }
+
+    /// Output stores: the symbolic cell base advances in multiples of
+    /// `c_out`, so provable alignment needs a static dst, a divisible
+    /// channel count, and a vector-aligned constant offset.
+    fn store_aligned(&self, v: &VecSpec, d_off: usize) -> bool {
+        self.ctx.opts.use_aligned()
+            && self.dst_static
+            && self.c_out % v.width == 0
+            && d_off % v.width == 0
     }
 
     /// Flat index into the HWIO weight array.
@@ -383,7 +470,7 @@ impl ConvCells<'_> {
                 let init = if inline {
                     v.setr(&bias[k..k + v.width])
                 } else {
-                    v.loadu(&format!("b{} + {k}", self.ctx.idx))
+                    v.load(&format!("b{} + {k}", self.ctx.idx), self.bias_aligned(&v, k))
                 };
                 w.line(&format!("{} a{t}_{g} = {};", v.ty, init));
             }
@@ -417,7 +504,8 @@ impl ConvCells<'_> {
                         if inline {
                             v.setr(&tap_w[g])
                         } else {
-                            v.loadu(&format!("w{} + {}", self.ctx.idx, self.widx(n, m, o, k0 + g * v.width)))
+                            let idx = self.widx(n, m, o, k0 + g * v.width);
+                            v.load(&format!("w{} + {idx}", self.ctx.idx), self.warr_aligned(&v, idx))
                         }
                     };
                     if b == 1 {
@@ -443,7 +531,8 @@ impl ConvCells<'_> {
             for g in 0..gc {
                 let reg = format!("a{t}_{g}");
                 emit_vec_activation(w, v, self.activation, &reg);
-                w.line(&v.storeu(&format!("{d_name} + {}", d_offs[t] + k0 + g * v.width), &reg));
+                let off = d_offs[t] + k0 + g * v.width;
+                w.line(&v.store(&format!("{d_name} + {off}"), &reg, self.store_aligned(&v, off)));
             }
         }
         w.close();
@@ -565,6 +654,8 @@ fn emit_conv_loops(
     }
     let (sh, sw) = stride;
     let idx = ctx.idx;
+    let align_on = ctx.opts.use_aligned();
+    let dst_static = schedule::static_buf(ctx.dst);
     w.open(&format!("for (i = 0; i < {h_out}; i++)"));
     w.open(&format!("for (j = 0; j < {w_out}; j++)"));
     w.line(&format!("const float *s = {src} + i*{} + j*{};", sh * row_elems, sw * c_in));
@@ -574,21 +665,27 @@ fn emit_conv_loops(
             continue;
         }
         if let Some(v) = seg.vec {
+            // `k` is symbolic but steps by the width from a width-multiple
+            // start, so bias/weight alignment follows the same divisibility
+            // rules as the unrolled path.
+            let b_al = align_on && seg.start % v.width == 0;
+            let w_al = b_al && c_out % v.width == 0;
+            let d_al = w_al && dst_static;
             w.open(&format!("for (k = {}; k < {}; k += {})", seg.start, seg.end(), v.width));
-            w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("b{idx} + k"))));
+            w.line(&format!("{} a = {};", v.ty, v.load(&format!("b{idx} + k"), b_al)));
             w.open(&format!("for (n = 0; n < {h_k}; n++)"));
             w.open(&format!("for (m = 0; m < {w_k}; m++)"));
             w.open(&format!("for (o = 0; o < {c_in}; o++)"));
             w.line(&v.mul_add(
                 "a",
                 &v.set1(&format!("s[n*{row_elems} + m*{c_in} + o]")),
-                &v.loadu(&format!("w{idx} + ((n*{w_k} + m)*{c_in} + o)*{c_out} + k")),
+                &v.load(&format!("w{idx} + ((n*{w_k} + m)*{c_in} + o)*{c_out} + k"), w_al),
             ));
             w.close();
             w.close();
             w.close();
             emit_vec_activation(w, v, activation, "a");
-            w.line(&v.storeu("d + k", "a"));
+            w.line(&v.store("d + k", "a", d_al));
             w.close();
         } else {
             w.open(&format!("for (k = {}; k < {}; k++)", seg.start, seg.end()));

@@ -7,6 +7,7 @@
 
 use super::conv::scalar_act;
 use super::cwriter::{fmt_f32, CWriter};
+use super::schedule;
 use super::simd::{emit_vec_activation, ChannelSchedule};
 use super::{ConstMode, LayerCtx};
 use crate::graph::Activation;
@@ -24,6 +25,8 @@ pub(crate) fn emit_dense(
     let n_out = weights.dims()[1];
     let sched = ChannelSchedule::for_channels(ctx.opts.isa, n_out);
     let inline = ctx.opts.effective_const_mode() == ConstMode::Inline;
+    let align_on = ctx.opts.use_aligned();
+    let dst_static = schedule::static_buf(ctx.dst);
 
     if ctx.opts.unroll.keeps_inner() {
         // Loop form with weight arrays: one neuron loop per lane segment.
@@ -32,17 +35,22 @@ pub(crate) fn emit_dense(
                 continue;
             }
             if let Some(v) = seg.vec {
+                // Neuron-row stride is n_out, so symbolic weight loads are
+                // aligned only when n_out divides the width.
+                let b_al = align_on && seg.start % v.width == 0;
+                let w_al = b_al && n_out % v.width == 0;
+                let d_al = b_al && dst_static;
                 w.open(&format!("for (k = {}; k < {}; k += {})", seg.start, seg.end(), v.width));
-                w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("b{} + k", ctx.idx))));
+                w.line(&format!("{} a = {};", v.ty, v.load(&format!("b{} + k", ctx.idx), b_al)));
                 w.open(&format!("for (i = 0; i < {n_in}; i++)"));
                 w.line(&v.mul_add(
                     "a",
                     &v.set1(&format!("{}[i]", ctx.src)),
-                    &v.loadu(&format!("w{} + i*{n_out} + k", ctx.idx)),
+                    &v.load(&format!("w{} + i*{n_out} + k", ctx.idx), w_al),
                 ));
                 w.close();
                 emit_vec_activation(w, v, activation, "a");
-                w.line(&v.storeu(&format!("{} + k", ctx.dst), "a"));
+                w.line(&v.store(&format!("{} + k", ctx.dst), "a", d_al));
                 w.close();
             } else {
                 w.open(&format!("for (k = {}; k < {}; k++)", seg.start, seg.end()));
@@ -58,12 +66,13 @@ pub(crate) fn emit_dense(
         for seg in &sched.segments {
             if let Some(v) = seg.vec {
                 for k0 in (seg.start..seg.end()).step_by(v.width) {
+                    let al = align_on && k0 % v.width == 0;
                     w.open("");
                     if inline {
                         let b = bias.data();
                         w.line(&format!("{} a = {};", v.ty, v.setr(&b[k0..k0 + v.width])));
                     } else {
-                        w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("b{} + {k0}", ctx.idx))));
+                        w.line(&format!("{} a = {};", v.ty, v.load(&format!("b{} + {k0}", ctx.idx), al)));
                     }
                     for i in 0..n_in {
                         if inline {
@@ -73,15 +82,16 @@ pub(crate) fn emit_dense(
                             }
                             w.line(&v.mul_add("a", &v.set1(&format!("{}[{i}]", ctx.src)), &v.setr(&ws)));
                         } else {
+                            let idx = i * n_out + k0;
                             w.line(&v.mul_add(
                                 "a",
                                 &v.set1(&format!("{}[{i}]", ctx.src)),
-                                &v.loadu(&format!("w{} + {}", ctx.idx, i * n_out + k0)),
+                                &v.load(&format!("w{} + {idx}", ctx.idx), align_on && idx % v.width == 0),
                             ));
                         }
                     }
                     emit_vec_activation(w, v, activation, "a");
-                    w.line(&v.storeu(&format!("{} + {k0}", ctx.dst), "a"));
+                    w.line(&v.store(&format!("{} + {k0}", ctx.dst), "a", al && dst_static));
                     w.close();
                 }
             } else {

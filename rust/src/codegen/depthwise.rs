@@ -69,15 +69,18 @@ pub(crate) fn emit_depthwise(
         (AxisPlan::full(h_out, stride.0, h_k, src_h), AxisPlan::full(w_out, stride.1, w_k, src_w))
     };
     let row_elems = cols.input * c;
-    let tile = schedule::tile_width(ctx.opts, &sched, cols.interior());
+    let (tile_rows, tile) = schedule::tile_shape(ctx.opts, &sched, rows.interior(), cols.interior());
 
     // The depthwise kernel loops are always unrolled (they are tiny), so
     // the loop-form level shares the kept-spatial-loop walk.
     let walk_unroll = if ctx.opts.unroll == Unroll::None { Unroll::KeepOuter2 } else { ctx.opts.unroll };
+    let src_static = schedule::static_buf(&src);
+    let dst_static = schedule::static_buf(ctx.dst);
     let walk = SpatialWalk {
         rows,
         cols,
         tile,
+        tile_rows,
         unroll: walk_unroll,
         src,
         dst: ctx.dst.to_string(),
@@ -85,7 +88,18 @@ pub(crate) fn emit_depthwise(
         cmin: c,
         out_minor: c,
     };
-    let cells = DwCells { ctx, weights, bias, activation, sched: &sched, row_elems, w_k, c };
+    let cells = DwCells {
+        ctx,
+        weights,
+        bias,
+        activation,
+        sched: &sched,
+        row_elems,
+        w_k,
+        c,
+        src_static,
+        dst_static,
+    };
     walk.emit(w, |w, win, s, so, d, dofs| cells.emit_block(w, win, s, so, d, dofs));
 
     if activation == Activation::Softmax {
@@ -104,6 +118,9 @@ struct DwCells<'a> {
     row_elems: usize,
     w_k: usize,
     c: usize,
+    /// Whether src/dst are generator-owned (alignable) buffers.
+    src_static: bool,
+    dst_static: bool,
 }
 
 impl DwCells<'_> {
@@ -113,6 +130,33 @@ impl DwCells<'_> {
 
     fn rel(&self, win: &TapWindow, n: usize, m: usize) -> usize {
         (n - win.n0) * self.row_elems + (m - win.m0) * self.c
+    }
+
+    /// Every spatial offset into src/dst is a multiple of the channel
+    /// count `c` (channel-minor layout), so alignment of a channel-group
+    /// access reduces to: static base, `c` divisible by the width, and a
+    /// width-multiple group start.
+    fn src_aligned(&self, v: &VecSpec, k0: usize) -> bool {
+        self.ctx.opts.use_aligned()
+            && self.src_static
+            && self.c % v.width == 0
+            && k0 % v.width == 0
+    }
+
+    fn dst_aligned(&self, v: &VecSpec, k0: usize) -> bool {
+        self.ctx.opts.use_aligned()
+            && self.dst_static
+            && self.c % v.width == 0
+            && k0 % v.width == 0
+    }
+
+    /// Weight/bias arrays are generator-owned; tap stride is `c`.
+    fn warr_aligned(&self, v: &VecSpec, idx: usize) -> bool {
+        self.ctx.opts.use_aligned() && idx % v.width == 0 && self.c % v.width == 0
+    }
+
+    fn bias_aligned(&self, v: &VecSpec, k0: usize) -> bool {
+        self.ctx.opts.use_aligned() && k0 % v.width == 0
     }
 
     fn emit_block(
@@ -166,7 +210,7 @@ impl DwCells<'_> {
                 let bv: Vec<f32> = (0..v.width).map(|l| self.bias.data()[k0 + l]).collect();
                 v.setr(&bv)
             } else {
-                v.loadu(&format!("b{} + {k0}", self.ctx.idx))
+                v.load(&format!("b{} + {k0}", self.ctx.idx), self.bias_aligned(&v, k0))
             };
             w.line(&format!("{} a{t} = {};", v.ty, init));
         }
@@ -183,15 +227,16 @@ impl DwCells<'_> {
                 let wexpr = if inline {
                     v.setr(&ws)
                 } else {
-                    v.loadu(&format!("w{} + {widx}", self.ctx.idx))
+                    v.load(&format!("w{} + {widx}", self.ctx.idx), self.warr_aligned(&v, widx))
                 };
                 let rel = self.rel(win, n, m) + k0;
+                let s_al = self.src_aligned(&v, k0);
                 if b == 1 {
-                    w.line(&v.mul_add("a0", &v.loadu(&format!("{s_name} + {}", s_offs[0] + rel)), &wexpr));
+                    w.line(&v.mul_add("a0", &v.load(&format!("{s_name} + {}", s_offs[0] + rel), s_al), &wexpr));
                 } else {
                     w.line(&format!("wv = {wexpr};"));
                     for (t, &so) in s_offs.iter().enumerate() {
-                        w.line(&v.mul_add(&format!("a{t}"), &v.loadu(&format!("{s_name} + {}", so + rel)), "wv"));
+                        w.line(&v.mul_add(&format!("a{t}"), &v.load(&format!("{s_name} + {}", so + rel), s_al), "wv"));
                     }
                 }
             }
@@ -199,7 +244,7 @@ impl DwCells<'_> {
         for t in 0..b {
             let reg = format!("a{t}");
             emit_vec_activation(w, v, self.activation, &reg);
-            w.line(&v.storeu(&format!("{d_name} + {}", d_offs[t] + k0), &reg));
+            w.line(&v.store(&format!("{d_name} + {}", d_offs[t] + k0), &reg, self.dst_aligned(&v, k0)));
         }
         w.close();
     }
@@ -249,13 +294,24 @@ pub(crate) fn emit_avgpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
     let w_in = ctx.in_shape.w();
     let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
     let inv = fmt_f32(1.0 / (pool.0 * pool.1) as f32);
+    // Pool offsets are all multiples of `c`; same alignment rule as the
+    // depthwise input loads.
+    let align_on = ctx.opts.use_aligned();
+    let s_static = schedule::static_buf(ctx.src);
+    let d_static = schedule::static_buf(ctx.dst);
 
     let window = |w: &mut CWriter, s_name: &str, s_off: usize, d_name: &str, d_off: usize| {
         for seg in &sched.segments {
             if let Some(v) = seg.vec {
+                let s_al = align_on && s_static && c % v.width == 0;
+                let d_al = align_on && d_static && c % v.width == 0;
                 for k0 in (seg.start..seg.end()).step_by(v.width) {
                     w.open("");
-                    w.line(&format!("{} a = {};", v.ty, v.loadu(&format!("{s_name} + {}", s_off + k0))));
+                    w.line(&format!(
+                        "{} a = {};",
+                        v.ty,
+                        v.load(&format!("{s_name} + {}", s_off + k0), s_al && (s_off + k0) % v.width == 0)
+                    ));
                     for n in 0..pool.0 {
                         for m in 0..pool.1 {
                             if n == 0 && m == 0 {
@@ -263,14 +319,17 @@ pub(crate) fn emit_avgpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
                             }
                             let off = s_off + (n * w_in + m) * c + k0;
                             w.line(&format!(
-                                "a = {}_add_ps(a, {});",
-                                v.pfx,
-                                v.loadu(&format!("{s_name} + {off}"))
+                                "a = {};",
+                                v.add_expr("a", &v.load(&format!("{s_name} + {off}"), s_al && off % v.width == 0))
                             ));
                         }
                     }
-                    w.line(&format!("a = {}_mul_ps(a, {});", v.pfx, v.set1(&inv)));
-                    w.line(&v.storeu(&format!("{d_name} + {}", d_off + k0), "a"));
+                    w.line(&format!("a = {};", v.mul_expr("a", &v.set1(&inv))));
+                    w.line(&v.store(
+                        &format!("{d_name} + {}", d_off + k0),
+                        "a",
+                        d_al && (d_off + k0) % v.width == 0,
+                    ));
                     w.close();
                 }
             } else {

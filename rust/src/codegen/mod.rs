@@ -25,17 +25,23 @@
 //!   of the legacy copy mode ([`PadMode::Copy`], Eq. 1's x̂) entirely.
 //! * **P4 SIMD** — [`Isa::Sse3`] vectorizes over the output-channel
 //!   dimension (channel-minor layout, exactly the paper's scheme);
-//!   [`Isa::Avx2`] is the paper's stated future work. Channel counts that
-//!   do not divide the lane width no longer fall back to scalar code:
-//!   a *lane schedule* covers them with full-width vector groups, then
-//!   narrower vectors (SSE under AVX2), then scalar remainder lanes.
+//!   [`Isa::Avx2`] and [`Isa::Neon`] implement the paper's stated future
+//!   work through a table-driven intrinsic vocabulary (`simd::OpTable`) —
+//!   every emitter speaks abstract ops, so an ISA is one table row.
+//!   Channel counts that do not divide the lane width no longer fall back
+//!   to scalar code: a *lane schedule* covers them with full-width vector
+//!   groups, then narrower vectors (SSE under AVX2), then scalar
+//!   remainder lanes.
 //!
-//! Beyond the paper, interior columns are **register-tiled** ([`TileMode`],
-//! `--tile`): a block of 2–4 output pixels shares one weight-stationary
-//! register per tap — each weight vector is materialized once per tap and
-//! FMA'd into every pixel's accumulators — cutting weight loads by the
-//! block width. `codegen/schedule.rs` picks the block width and padding
-//! strategy per layer from its geometry and [`CodegenOptions`].
+//! Beyond the paper, interior cells are **register-tiled** ([`TileMode`],
+//! `--tile`): a 1-D column block or 2-D `RxC` row×column block of output
+//! pixels shares one weight-stationary register per tap — each weight
+//! vector is materialized once per tap and FMA'd into every pixel's
+//! accumulators — cutting weight loads by the block size. Generator-owned
+//! buffers carry a 32-byte alignment attribute ([`AlignMode`], `--align`)
+//! and provably-aligned vector accesses use the aligned intrinsic forms.
+//! `codegen/schedule.rs` picks the block shape, padding strategy, and
+//! alignment proofs per layer from its geometry and [`CodegenOptions`].
 
 mod activation;
 mod conv;
@@ -64,6 +70,34 @@ pub enum Isa {
     /// future work: "an extension of NNCG to other instruction sets like
     /// AVX ... can be realized rapidly").
     Avx2,
+    /// ARM NEON (`arm_neon.h`), 4-wide f32 over output channels with fused
+    /// `vfmaq_f32` — the hardware the paper actually deploys on (Nao
+    /// robots, ARM SoCs). NEON has no lane-literal constructor, so this
+    /// ISA always places weights in `static const` arrays
+    /// ([`ConstMode::Array`]); `vld1q_f32` loads have no alignment
+    /// requirement, so the aligned/unaligned split collapses.
+    Neon,
+}
+
+impl Isa {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Generic => "generic",
+            Isa::Sse3 => "sse3",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Isa> {
+        Some(match s {
+            "generic" => Isa::Generic,
+            "sse3" => Isa::Sse3,
+            "avx2" => Isa::Avx2,
+            "neon" => Isa::Neon,
+            _ => return None,
+        })
+    }
 }
 
 /// Loop unrolling level (paper §II-A.1: "level 0 all loops are unrolled,
@@ -125,6 +159,23 @@ pub enum ConstMode {
     Array,
 }
 
+impl ConstMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ConstMode::Inline => "inline",
+            ConstMode::Array => "array",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ConstMode> {
+        Some(match s {
+            "inline" => ConstMode::Inline,
+            "array" => ConstMode::Array,
+            _ => return None,
+        })
+    }
+}
+
 /// Zero-padding strategy for Same-padded conv/depthwise layers
 /// (`--pad-mode`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -160,16 +211,22 @@ impl PadMode {
 }
 
 /// Register-tiling knob (`--tile`): how many interior output pixels share
-/// one weight-stationary register tile in conv-like layers.
+/// one weight-stationary register tile in conv-like layers. `RxC` syntax
+/// grows a row dimension: a 2-D block of `R` interior rows × `C` interior
+/// columns shares every materialized weight vector across all `R*C`
+/// accumulator sets.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TileMode {
-    /// Pick per layer from geometry (4 when the interior is wide enough,
-    /// else 2, else untiled; always untiled without vector lanes).
+    /// Pick per layer from geometry (4 columns when the interior is wide
+    /// enough, else 2, else untiled; always untiled without vector lanes).
     Auto,
     /// Never tile (one output pixel at a time — the paper's scheme).
     Off,
-    /// Force a block width (clamped to 1..=8).
+    /// Force a 1-D column-block width (clamped to 1..=8).
     Fixed(usize),
+    /// Force a 2-D register block: (rows, cols). Rows clamp to 2..=4 and
+    /// apply only when the unroll level keeps the spatial row loop.
+    Fixed2D(usize, usize),
 }
 
 impl TileMode {
@@ -178,6 +235,7 @@ impl TileMode {
             TileMode::Auto => "auto".to_string(),
             TileMode::Off => "off".to_string(),
             TileMode::Fixed(n) => n.to_string(),
+            TileMode::Fixed2D(r, c) => format!("{r}x{c}"),
         }
     }
 
@@ -185,7 +243,52 @@ impl TileMode {
         Some(match s {
             "auto" => TileMode::Auto,
             "off" | "1" => TileMode::Off,
-            other => TileMode::Fixed(other.parse::<usize>().ok().filter(|&n| (2..=8).contains(&n))?),
+            other => {
+                if let Some((r, c)) = other.split_once('x') {
+                    let r = r.parse::<usize>().ok().filter(|&r| (1..=4).contains(&r))?;
+                    let c = c.parse::<usize>().ok().filter(|&c| (2..=8).contains(&c))?;
+                    // `1xC` is just a 1-D block; normalize so
+                    // `from_name(name()) == Some(self)` round-trips.
+                    if r == 1 {
+                        TileMode::Fixed(c)
+                    } else {
+                        TileMode::Fixed2D(r, c)
+                    }
+                } else {
+                    TileMode::Fixed(other.parse::<usize>().ok().filter(|&n| (2..=8).contains(&n))?)
+                }
+            }
+        })
+    }
+}
+
+/// Buffer-alignment knob (`--align`): whether scratch buffers and weight
+/// arrays carry a 32-byte alignment attribute (`NNCG_ALIGN`, degrading to
+/// nothing under compilers without one) and vector loads/stores whose
+/// address is provably aligned use the aligned intrinsic forms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AlignMode {
+    /// Align generator-owned buffers and use aligned ops where provable
+    /// (caller pointers `x_in`/`x_out` always stay unaligned).
+    Auto,
+    /// Paper-baseline behavior: no alignment attributes, `loadu`/`storeu`
+    /// everywhere.
+    Off,
+}
+
+impl AlignMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlignMode::Auto => "auto",
+            AlignMode::Off => "off",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<AlignMode> {
+        Some(match s {
+            "auto" => AlignMode::Auto,
+            "off" => AlignMode::Off,
+            _ => return None,
         })
     }
 }
@@ -209,8 +312,10 @@ pub struct CodegenOptions {
     pub test_harness: bool,
     /// Zero-padding strategy for Same-padded layers.
     pub pad_mode: PadMode,
-    /// Register-tiling of interior output columns.
+    /// Register-tiling of interior output columns (or rows × columns).
     pub tile: TileMode,
+    /// Buffer alignment + aligned-load selection.
+    pub align: AlignMode,
 }
 
 impl Default for CodegenOptions {
@@ -224,6 +329,7 @@ impl Default for CodegenOptions {
             test_harness: false,
             pad_mode: PadMode::Auto,
             tile: TileMode::Auto,
+            align: AlignMode::Auto,
         }
     }
 }
@@ -249,36 +355,49 @@ impl CodegenOptions {
         CodegenOptions { isa: Isa::Avx2, unroll: Unroll::KeepOuter2, ..Default::default() }
     }
 
-    /// The paper's original emission scheme: pad-copy buffers, no tiling.
-    /// Used as the ablation baseline.
+    /// The paper's original emission scheme: pad-copy buffers, no tiling,
+    /// no alignment machinery. Used as the ablation baseline.
     pub fn paper_baseline(isa: Isa) -> Self {
-        CodegenOptions { isa, pad_mode: PadMode::Copy, tile: TileMode::Off, ..Default::default() }
+        CodegenOptions {
+            isa,
+            pad_mode: PadMode::Copy,
+            tile: TileMode::Off,
+            align: AlignMode::Off,
+            ..Default::default()
+        }
     }
 
     /// Effective constant mode (resolves the paper default).
+    ///
+    /// NEON always resolves to [`ConstMode::Array`]: the ISA has no
+    /// lane-literal constructor (`_mm_setr_ps` counterpart), so vector
+    /// weights must be loadable from addressable arrays — which is also
+    /// what an embedded icache wants.
     pub fn effective_const_mode(&self) -> ConstMode {
+        if self.isa == Isa::Neon {
+            return ConstMode::Array;
+        }
         self.const_mode.unwrap_or(match self.unroll {
             Unroll::None => ConstMode::Array,
             _ => ConstMode::Inline,
         })
     }
 
+    /// True when alignment attributes + aligned-op selection are on.
+    pub fn use_aligned(&self) -> bool {
+        self.align == AlignMode::Auto
+    }
+
     /// Short tag used in cache keys and bench labels.
     pub fn tag(&self) -> String {
         format!(
-            "{}-{}-{}-pad{}-t{}",
-            match self.isa {
-                Isa::Generic => "generic",
-                Isa::Sse3 => "sse3",
-                Isa::Avx2 => "avx2",
-            },
+            "{}-{}-{}-pad{}-t{}-al{}",
+            self.isa.name(),
             self.unroll.name(),
-            match self.effective_const_mode() {
-                ConstMode::Inline => "inline",
-                ConstMode::Array => "array",
-            },
+            self.effective_const_mode().name(),
             self.pad_mode.name(),
             self.tile.name(),
+            self.align.name(),
         )
     }
 }
@@ -329,17 +448,18 @@ pub fn generate_c(model: &Model, opts: &CodegenOptions) -> Result<String> {
     // buffer holding the zero-padded input (Eq. 1's x̂); padless emission
     // does not, shrinking the static footprint.
     let plan = plan_buffers(&model, &shapes, opts)?;
-    w.line(&format!("static float nncg_bufa[{}];", plan.main_size.max(1)));
-    w.line(&format!("static float nncg_bufb[{}];", plan.main_size.max(1)));
+    let qual = if opts.use_aligned() { "NNCG_ALIGN(32) " } else { "" };
+    w.line(&format!("static {qual}float nncg_bufa[{}];", plan.main_size.max(1)));
+    w.line(&format!("static {qual}float nncg_bufb[{}];", plan.main_size.max(1)));
     if plan.pad_size > 0 {
-        w.line(&format!("static float nncg_pad[{}];", plan.pad_size));
+        w.line(&format!("static {qual}float nncg_pad[{}];", plan.pad_size));
     }
     w.blank();
 
     // Weight arrays (ConstMode::Array).
     if opts.effective_const_mode() == ConstMode::Array {
         for (i, layer) in model.layers.iter().enumerate() {
-            emit_weight_arrays(&mut w, i, layer);
+            emit_weight_arrays(&mut w, i, layer, qual);
         }
         w.blank();
     }
@@ -423,6 +543,7 @@ fn emit_prelude(w: &mut CWriter, model: &Model, ident: &str, opts: &CodegenOptio
         Isa::Generic => w.line(" * Plain ANSI C — only depends on math.h."),
         Isa::Sse3 => w.line(" * ANSI C + x86 SSE intrinsics (needs an SSE-capable target)."),
         Isa::Avx2 => w.line(" * ANSI C + x86 AVX2/FMA intrinsics (needs an AVX2-capable target)."),
+        Isa::Neon => w.line(" * ANSI C + ARM NEON intrinsics (AArch64 or ARMv7+VFPv4 for vfmaq_f32)."),
     }
     w.line(" */");
     let uses_softmax = model.layers.iter().any(|l| {
@@ -437,6 +558,21 @@ fn emit_prelude(w: &mut CWriter, model: &Model, ident: &str, opts: &CodegenOptio
         Isa::Generic => {}
         Isa::Sse3 => w.line("#include <emmintrin.h>"),
         Isa::Avx2 => w.line("#include <immintrin.h>"),
+        Isa::Neon => w.line("#include <arm_neon.h>"),
+    }
+    if opts.use_aligned() {
+        w.blank();
+        w.line("/* 32-byte alignment for generator-owned buffers. Degrades to");
+        w.line(" * nothing under strict-ANSI compilers without an alignment");
+        w.line(" * attribute — safe there because the generic ISA emits no");
+        w.line(" * vector ops; vector ISAs imply __GNUC__ or _MSC_VER. */");
+        w.line("#if defined(__GNUC__)");
+        w.line("#define NNCG_ALIGN(n) __attribute__((aligned(n)))");
+        w.line("#elif defined(_MSC_VER)");
+        w.line("#define NNCG_ALIGN(n) __declspec(align(n))");
+        w.line("#else");
+        w.line("#define NNCG_ALIGN(n)");
+        w.line("#endif");
     }
     w.blank();
     w.line(&format!("#define {}_INPUT_SIZE {}", ident.to_uppercase(), shapes[0].numel()));
@@ -445,9 +581,10 @@ fn emit_prelude(w: &mut CWriter, model: &Model, ident: &str, opts: &CodegenOptio
 }
 
 /// Emit `static const float w{i}[] = {...}` / `b{i}` for Array mode.
-fn emit_weight_arrays(w: &mut CWriter, idx: usize, layer: &Layer) {
+/// `qual` carries the `NNCG_ALIGN(32)` qualifier when alignment is on.
+fn emit_weight_arrays(w: &mut CWriter, idx: usize, layer: &Layer, qual: &str) {
     let mut emit = |name: String, data: &[f32]| {
-        w.line(&format!("static const float {name}[{}] = {{", data.len()));
+        w.line(&format!("static {qual}const float {name}[{}] = {{", data.len()));
         for chunk in data.chunks(8) {
             let vals: Vec<String> = chunk.iter().map(|&v| fmt_f32(v)).collect();
             w.line(&format!("    {},", vals.join(", ")));
@@ -494,6 +631,12 @@ struct BufferPlan {
     pad_size: usize,
 }
 
+/// Round a float count up to a whole 32-byte (8-float) group so buffer
+/// tails never share a vector-width line with unrelated data.
+fn round_to_vec(n: usize) -> usize {
+    crate::util::div_ceil(n, 8) * 8
+}
+
 fn plan_buffers(model: &Model, shapes: &[Shape], opts: &CodegenOptions) -> Result<BufferPlan> {
     let uses_pad_buffer = schedule::pad_strategy(opts) == schedule::PadStrategy::Copy;
     let mut main_size = 0usize;
@@ -523,6 +666,10 @@ fn plan_buffers(model: &Model, shapes: &[Shape], opts: &CodegenOptions) -> Resul
             }
             _ => {}
         }
+    }
+    if opts.use_aligned() {
+        main_size = round_to_vec(main_size);
+        pad_size = round_to_vec(pad_size);
     }
     Ok(BufferPlan { main_size, pad_size })
 }
@@ -681,6 +828,179 @@ mod tests {
         assert_eq!(TileMode::from_name("off"), Some(TileMode::Off));
         assert_eq!(TileMode::from_name("4"), Some(TileMode::Fixed(4)));
         assert_eq!(TileMode::from_name("17"), None);
+    }
+
+    /// Property over every option enum: `from_name(name()) == Some(self)`
+    /// for the full value space (cache keys, bench labels and CLI flags
+    /// all round-trip through these names).
+    #[test]
+    fn option_enum_names_round_trip() {
+        for isa in [Isa::Generic, Isa::Sse3, Isa::Avx2, Isa::Neon] {
+            assert_eq!(Isa::from_name(isa.name()), Some(isa));
+        }
+        for u in [Unroll::None, Unroll::KeepOuter2, Unroll::KeepOuter1, Unroll::Full] {
+            assert_eq!(Unroll::from_name(u.name()), Some(u));
+        }
+        for c in [ConstMode::Inline, ConstMode::Array] {
+            assert_eq!(ConstMode::from_name(c.name()), Some(c));
+        }
+        for p in [PadMode::Auto, PadMode::Copy, PadMode::Padless] {
+            assert_eq!(PadMode::from_name(p.name()), Some(p));
+        }
+        for a in [AlignMode::Auto, AlignMode::Off] {
+            assert_eq!(AlignMode::from_name(a.name()), Some(a));
+        }
+        let mut tiles = vec![TileMode::Auto, TileMode::Off];
+        for n in 2..=8 {
+            tiles.push(TileMode::Fixed(n));
+        }
+        for r in 2..=4 {
+            for c in 2..=8 {
+                tiles.push(TileMode::Fixed2D(r, c));
+            }
+        }
+        for t in tiles {
+            assert_eq!(TileMode::from_name(&t.name()), Some(t), "{}", t.name());
+        }
+        // 2-D syntax normalizes and rejects out-of-range shapes.
+        assert_eq!(TileMode::from_name("1x4"), Some(TileMode::Fixed(4)));
+        assert_eq!(TileMode::from_name("2x4"), Some(TileMode::Fixed2D(2, 4)));
+        assert_eq!(TileMode::from_name("5x4"), None);
+        assert_eq!(TileMode::from_name("2x12"), None);
+        assert_eq!(TileMode::from_name("2x"), None);
+        assert_eq!(Isa::from_name("avx512"), None);
+        assert_eq!(AlignMode::from_name("force"), None);
+        assert_eq!(ConstMode::from_name("rom"), None);
+    }
+
+    #[test]
+    fn neon_emits_arm_intrinsics_with_weight_arrays() {
+        let opts = CodegenOptions { isa: Isa::Neon, ..Default::default() };
+        // NEON has no lane-literal constructor; const mode must resolve to
+        // Array whatever the default says.
+        assert_eq!(opts.effective_const_mode(), ConstMode::Array);
+        for name in zoo::PAPER_MODELS {
+            let src = gen(name, &opts);
+            assert!(src.contains("#include <arm_neon.h>"), "{name}: missing NEON header");
+            assert!(src.contains("float32x4_t"), "{name}");
+            assert!(src.contains("vfmaq_f32"), "{name}: interior must use fused multiply-add");
+            assert!(src.contains("vld1q_f32"), "{name}");
+            assert!(src.contains("vst1q_f32"), "{name}");
+            assert!(src.contains("static NNCG_ALIGN(32) const float w0["), "{name}: weights must be arrays");
+            assert!(!src.contains("_mm"), "{name}: x86 intrinsics must not leak into NEON output");
+            let open = src.matches('{').count();
+            let close = src.matches('}').count();
+            assert_eq!(open, close, "{name}: unbalanced braces");
+        }
+    }
+
+    #[test]
+    fn aligned_loads_for_static_buffers_loadu_for_caller_pointers() {
+        use crate::graph::{Activation, Layer, Model, Padding};
+        // Layer 0 (maxpool) vector-loads x_in — alignment unknown, must
+        // stay loadu; layer 1 reads the aligned scratch buffer — interior
+        // segments use aligned loads; the final store hits x_out — storeu.
+        let m = Model::new("alignnet", &[8, 8, 8])
+            .push(Layer::maxpool(2, 2))
+            .push(Layer::conv2d(8, 3, 3, (1, 1), Padding::Same, Activation::Relu))
+            .push(Layer::maxpool(2, 2))
+            .with_random_weights(11);
+        let opts = CodegenOptions { isa: Isa::Avx2, ..Default::default() };
+        let src = generate_c(&m, &opts).unwrap();
+        assert!(src.contains("NNCG_ALIGN(32)"), "buffers must carry the alignment attribute");
+        assert!(src.contains("_mm256_loadu_ps("), "x_in loads must stay unaligned");
+        assert!(src.contains("_mm256_load_ps("), "interior loads from static buffers must be aligned");
+        assert!(src.contains("_mm256_store_ps("), "stores to static buffers must be aligned");
+        assert!(src.contains("_mm256_storeu_ps("), "x_out stores must stay unaligned");
+
+        // The ablation baseline: no attribute, no aligned ops anywhere.
+        let off = CodegenOptions { align: AlignMode::Off, ..opts };
+        let src = generate_c(&m, &off).unwrap();
+        assert!(!src.contains("NNCG_ALIGN"));
+        assert!(!src.contains("_mm256_load_ps("));
+        assert!(!src.contains("_mm256_store_ps("));
+    }
+
+    #[test]
+    fn odd_channels_keep_unaligned_loads_in_undivisible_segments() {
+        use crate::graph::{Layer, Model};
+        // c = 6 under SSE: spatial offsets step by 6, which 4 does not
+        // divide — even static-buffer loads must stay loadu.
+        let m = Model::new("oddalign", &[8, 8, 6])
+            .push(Layer::maxpool(2, 2))
+            .push(Layer::maxpool(2, 2))
+            .with_random_weights(3);
+        let src = generate_c(&m, &CodegenOptions::sse3()).unwrap();
+        assert!(src.contains("_mm_loadu_ps("));
+        assert!(!src.contains("_mm_load_ps("), "c=6 layers must not claim alignment");
+    }
+
+    #[test]
+    fn tile_2d_emits_row_blocked_interior() {
+        // ball conv1: 8x8 output, interior rows [1, 7) — a 2x4 block
+        // covers the 6 interior rows in three row-pair steps with no
+        // remainder loop.
+        let opts = CodegenOptions { tile: TileMode::Fixed2D(2, 4), ..CodegenOptions::sse3() };
+        let src = gen("ball", &opts);
+        assert!(
+            src.contains("for (i = 1; i + 2 <= 7; i += 2)"),
+            "expected the 2-row interior block loop"
+        );
+        assert!(src.contains("wv = "), "2-D blocks are weight-stationary");
+        // 2 rows x 4 cols = 8 accumulator sets share each weight vector.
+        assert!(src.contains("a7_0"), "expected 8 live accumulator cells");
+        assert_eq!(src.matches('{').count(), src.matches('}').count());
+        // 1-D tiling keeps the single-row walk.
+        let src_1d = gen("ball", &CodegenOptions { tile: TileMode::Fixed(4), ..CodegenOptions::sse3() });
+        assert!(src_1d.contains("for (i = 1; i < 7; i++)"));
+        assert!(!src_1d.contains("a4_0"));
+    }
+
+    #[test]
+    fn tile_2d_row_remainder_gets_single_row_loop() {
+        use crate::graph::{Activation, Layer, Model, Padding};
+        // 9x9 stride-1 k3 Same: interior rows [1, 8) = 7 rows; 3x4 blocks
+        // cover 6, leaving one remainder row walked singly.
+        let m = Model::new("rowrem", &[9, 9, 4])
+            .push(Layer::conv2d(4, 3, 3, (1, 1), Padding::Same, Activation::None))
+            .with_random_weights(8);
+        let opts = CodegenOptions { tile: TileMode::Fixed2D(3, 4), ..CodegenOptions::sse3() };
+        let src = generate_c(&m, &opts).unwrap();
+        assert!(src.contains("for (i = 1; i + 3 <= 8; i += 3)"), "main 3-row block loop");
+        assert!(src.contains("for (i = 7; i < 8; i++)"), "remainder row loop");
+        assert_eq!(src.matches('{').count(), src.matches('}').count());
+    }
+
+    #[test]
+    fn tile_2d_generates_for_all_paper_models_and_unrolls() {
+        // Full unroll is covered on the small net only (`ball`); the big
+        // models would trip the statement-count guard there.
+        for name in zoo::PAPER_MODELS {
+            for unroll in [Unroll::None, Unroll::KeepOuter2, Unroll::KeepOuter1] {
+                for isa in [Isa::Sse3, Isa::Avx2, Isa::Neon] {
+                    let opts = CodegenOptions {
+                        isa,
+                        unroll,
+                        tile: TileMode::Fixed2D(2, 4),
+                        ..Default::default()
+                    };
+                    let src = gen(name, &opts);
+                    let open = src.matches('{').count();
+                    let close = src.matches('}').count();
+                    assert_eq!(open, close, "{name} {}: unbalanced braces", opts.tag());
+                }
+            }
+        }
+        for isa in [Isa::Sse3, Isa::Avx2, Isa::Neon] {
+            let opts = CodegenOptions {
+                isa,
+                unroll: Unroll::Full,
+                tile: TileMode::Fixed2D(2, 4),
+                ..Default::default()
+            };
+            let src = gen("ball", &opts);
+            assert_eq!(src.matches('{').count(), src.matches('}').count(), "{}", opts.tag());
+        }
     }
 
     #[test]

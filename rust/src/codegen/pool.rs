@@ -6,6 +6,7 @@
 //! The scalar max uses the ternary operator (P2 — conditional moves).
 
 use super::cwriter::CWriter;
+use super::schedule;
 use super::simd::ChannelSchedule;
 use super::{LayerCtx, Unroll};
 use anyhow::Result;
@@ -14,7 +15,19 @@ pub(crate) fn emit_maxpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
     let (h_out, w_out, c) = (ctx.out_shape.h(), ctx.out_shape.w(), ctx.out_shape.c());
     let w_in = ctx.in_shape.w();
     let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
-    let geom = PoolGeom { src: ctx.src.to_string(), dst: ctx.dst.to_string(), pool, stride, w_in, w_out, c };
+    let geom = PoolGeom {
+        src: ctx.src.to_string(),
+        dst: ctx.dst.to_string(),
+        pool,
+        stride,
+        w_in,
+        w_out,
+        c,
+        // Every pool offset is a multiple of `c`, so channel-divisibility
+        // plus a static base proves alignment (same rule as depthwise).
+        src_aligned: ctx.opts.use_aligned() && schedule::static_buf(ctx.src),
+        dst_aligned: ctx.opts.use_aligned() && schedule::static_buf(ctx.dst),
+    };
 
     match ctx.opts.unroll {
         Unroll::None => {
@@ -26,14 +39,16 @@ pub(crate) fn emit_maxpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
                     continue;
                 }
                 if let Some(v) = seg.vec {
+                    let s_al = geom.src_aligned && c % v.width == 0 && seg.start % v.width == 0;
+                    let d_al = geom.dst_aligned && c % v.width == 0 && seg.start % v.width == 0;
                     w.open(&format!("for (k = {}; k < {}; k += {})", seg.start, seg.end(), v.width));
-                    w.line(&format!("{} v = {};", v.ty, v.loadu("s + k")));
+                    w.line(&format!("{} v = {};", v.ty, v.load("s + k", s_al)));
                     w.open(&format!("for (n = 0; n < {}; n++)", pool.0));
                     w.open(&format!("for (m = 0; m < {}; m++)", pool.1));
-                    w.line(&v.max("v", &v.loadu(&format!("s + (n*{} + m)*{c} + k", w_in))));
+                    w.line(&v.max("v", &v.load(&format!("s + (n*{} + m)*{c} + k", w_in), s_al)));
                     w.close();
                     w.close();
-                    w.line(&v.storeu("d + k", "v"));
+                    w.line(&v.store("d + k", "v", d_al));
                     w.close();
                 } else {
                     w.open(&format!("for (k = {}; k < {}; k++)", seg.start, seg.end()));
@@ -96,6 +111,9 @@ struct PoolGeom {
     w_in: usize,
     w_out: usize,
     c: usize,
+    /// Base-buffer alignability (knob on + generator-owned buffer).
+    src_aligned: bool,
+    dst_aligned: bool,
 }
 
 fn emit_bases(w: &mut CWriter, g: &PoolGeom) {
@@ -115,19 +133,22 @@ fn emit_window(
 ) {
     for seg in &sched.segments {
         if let Some(v) = seg.vec {
+            let base_al = g.c % v.width == 0;
             for k0 in (seg.start..seg.end()).step_by(v.width) {
+                let s_al = g.src_aligned && base_al && (s_off + k0) % v.width == 0;
+                let d_al = g.dst_aligned && base_al && (d_off + k0) % v.width == 0;
                 w.open("");
-                w.line(&format!("{} v = {};", v.ty, v.loadu(&format!("{s_name} + {}", s_off + k0))));
+                w.line(&format!("{} v = {};", v.ty, v.load(&format!("{s_name} + {}", s_off + k0), s_al)));
                 for n in 0..g.pool.0 {
                     for m in 0..g.pool.1 {
                         if n == 0 && m == 0 {
                             continue;
                         }
                         let off = s_off + (n * g.w_in + m) * g.c + k0;
-                        w.line(&v.max("v", &v.loadu(&format!("{s_name} + {off}"))));
+                        w.line(&v.max("v", &v.load(&format!("{s_name} + {off}"), s_al && off % v.width == 0)));
                     }
                 }
-                w.line(&v.storeu(&format!("{d_name} + {}", d_off + k0), "v"));
+                w.line(&v.store(&format!("{d_name} + {}", d_off + k0), "v", d_al));
                 w.close();
             }
         } else {

@@ -40,17 +40,25 @@ pub(crate) fn pad_strategy(opts: &CodegenOptions) -> PadStrategy {
     }
 }
 
-/// Column-block width for a conv-like layer: how many output pixels share
-/// one weight-stationary register tile. 1 = untiled.
-pub(crate) fn tile_width(opts: &CodegenOptions, sched: &ChannelSchedule, interior_cols: usize) -> usize {
+/// Register-block shape `(rows, cols)` for a conv-like layer: how many
+/// interior output pixels share one weight-stationary register tile.
+/// `(1, 1)` = untiled. Rows grow only under [`TileMode::Fixed2D`] and only
+/// when the unroll level keeps the spatial row loop (`KeepOuter1/2`) —
+/// border rows and full unroll always walk single rows.
+pub(crate) fn tile_shape(
+    opts: &CodegenOptions,
+    sched: &ChannelSchedule,
+    interior_rows: usize,
+    interior_cols: usize,
+) -> (usize, usize) {
     // Loop form keeps the kernel/channel loops symbolic — no layer type
     // can tile there, whatever the knob says.
     if opts.unroll == Unroll::None {
-        return 1;
+        return (1, 1);
     }
-    match opts.tile {
+    let cols = match opts.tile {
         TileMode::Off => 1,
-        TileMode::Fixed(n) => n.clamp(1, 8).min(interior_cols.max(1)),
+        TileMode::Fixed(n) | TileMode::Fixed2D(_, n) => n.clamp(1, 8).min(interior_cols.max(1)),
         TileMode::Auto => {
             if !sched.has_vector() {
                 1
@@ -62,7 +70,29 @@ pub(crate) fn tile_width(opts: &CodegenOptions, sched: &ChannelSchedule, interio
                 1
             }
         }
-    }
+    };
+    let rows = match opts.tile {
+        TileMode::Fixed2D(r, _)
+            if matches!(opts.unroll, Unroll::KeepOuter1 | Unroll::KeepOuter2) =>
+        {
+            r.clamp(1, 4).min(interior_rows.max(1))
+        }
+        _ => 1,
+    };
+    (rows, cols)
+}
+
+/// Backwards-compatible 1-D view of [`tile_shape`] (column width only).
+#[cfg(test)]
+pub(crate) fn tile_width(opts: &CodegenOptions, sched: &ChannelSchedule, interior_cols: usize) -> usize {
+    tile_shape(opts, sched, 1, interior_cols).1
+}
+
+/// True when a C buffer expression names a generator-owned static buffer
+/// (emitted with `NNCG_ALIGN(32)` when alignment is on) rather than a
+/// caller pointer whose alignment is unknown.
+pub(crate) fn static_buf(name: &str) -> bool {
+    name != "x_in" && name != "x_out"
 }
 
 /// Max vector channel-groups per emitted chunk so one block's live
@@ -74,7 +104,9 @@ pub(crate) fn max_groups_per_chunk(block: usize) -> usize {
         // Input-stationary single-cell form: 1 broadcast + G accumulators.
         8
     } else {
-        ((14 - block) / block).clamp(1, 8)
+        // Saturate: 2-D blocks can exceed the register file (block > 14);
+        // they still emit correctly with one group per chunk, spilling.
+        (14usize.saturating_sub(block) / block).clamp(1, 8)
     }
 }
 
@@ -219,11 +251,47 @@ mod tests {
     }
 
     #[test]
+    fn tile_shape_2d_rules() {
+        let vec4 = ChannelSchedule::for_channels(Isa::Sse3, 8);
+        let t2x4 = CodegenOptions { tile: TileMode::Fixed2D(2, 4), ..Default::default() };
+        assert_eq!(tile_shape(&t2x4, &vec4, 8, 8), (2, 4));
+        // Rows clamp to the interior extent.
+        assert_eq!(tile_shape(&t2x4, &vec4, 1, 8), (1, 4));
+        // Full unroll walks rows one at a time.
+        let full = CodegenOptions {
+            unroll: Unroll::Full,
+            tile: TileMode::Fixed2D(2, 4),
+            ..Default::default()
+        };
+        assert_eq!(tile_shape(&full, &vec4, 8, 8).0, 1);
+        // Loop form never tiles.
+        let loops = CodegenOptions {
+            unroll: Unroll::None,
+            tile: TileMode::Fixed2D(2, 4),
+            ..Default::default()
+        };
+        assert_eq!(tile_shape(&loops, &vec4, 8, 8), (1, 1));
+        // 1-D modes keep a single row.
+        assert_eq!(tile_shape(&CodegenOptions::default(), &vec4, 8, 8), (1, 4));
+    }
+
+    #[test]
+    fn static_buf_distinguishes_caller_pointers() {
+        assert!(static_buf("nncg_bufa"));
+        assert!(static_buf("nncg_pad"));
+        assert!(!static_buf("x_in"));
+        assert!(!static_buf("x_out"));
+    }
+
+    #[test]
     fn chunk_budget_shrinks_with_block_width() {
         assert_eq!(max_groups_per_chunk(1), 8);
         assert_eq!(max_groups_per_chunk(2), 6);
         assert_eq!(max_groups_per_chunk(3), 3);
         assert_eq!(max_groups_per_chunk(4), 2);
         assert!(max_groups_per_chunk(8) >= 1);
+        // 2-D blocks can exceed the 14-register budget; must not underflow.
+        assert_eq!(max_groups_per_chunk(16), 1);
+        assert_eq!(max_groups_per_chunk(32), 1);
     }
 }

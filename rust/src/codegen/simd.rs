@@ -2,9 +2,19 @@
 //! emitters.
 //!
 //! The paper ships SSSE3 (4-wide f32) and names AVX/NEON as immediate
-//! future work; [`Isa::Avx2`] implements the AVX path (8-wide f32 + FMA).
-//! Everything is parameterized over a [`VecSpec`] so adding an ISA means
-//! adding a table entry, exactly the "can be realized rapidly" claim.
+//! future work; [`Isa::Avx2`] implements the AVX path (8-wide f32 + FMA)
+//! and [`Isa::Neon`] the ARM path (`float32x4_t`, `vfmaq_f32`).
+//!
+//! Everything an emitter says in vector registers goes through a
+//! **table-driven intrinsic vocabulary** ([`OpTable`]): one entry per
+//! vector flavor mapping each abstract op (load / loadu / store / set1 /
+//! setr / fmadd / max / reduce-add / ...) to a C template with `$a`/`$b`/
+//! `$c` operand slots. Adding an ISA is adding a table row — exactly the
+//! paper's "can be realized rapidly" claim, and the same move Boda-RTC
+//! makes with its per-target vector vocabularies. The templates absorb
+//! cross-ISA differences like operand order (`_mm256_fmadd_ps(a, b, c)` is
+//! `a*b + c`; `vfmaq_f32(a, b, c)` is `a + b*c`) so the emitters never
+//! special-case an ISA.
 //!
 //! [`ChannelSchedule`] generalizes the paper's divisibility rule ("the
 //! number of filters should be a multiple of 4") into a *lane schedule*:
@@ -17,21 +27,124 @@
 use super::cwriter::fmt_f32;
 use super::Isa;
 
-/// One vector flavor: register type + intrinsic naming.
+/// C templates for one vector flavor's intrinsic vocabulary. `$a`, `$b`,
+/// `$c` are operand slots; `$*` (setr only) is the comma-joined lane list.
+/// Load/store templates come in aligned/unaligned pairs; on ISAs without
+/// the distinction (NEON) both entries share one intrinsic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct OpTable {
+    /// Aligned load expression — address must be `width*4`-byte aligned.
+    pub load: &'static str,
+    /// Unaligned load expression.
+    pub loadu: &'static str,
+    /// Aligned store statement (`$a` address, `$b` register).
+    pub store: &'static str,
+    /// Unaligned store statement.
+    pub storeu: &'static str,
+    /// Broadcast a scalar expression to all lanes.
+    pub set1: &'static str,
+    /// Lane-literal constructor from constants; `None` = the ISA has no
+    /// immediate-lane constructor (NEON) and weights must live in
+    /// addressable arrays ([`ConstMode::Array`][super::ConstMode]).
+    pub setr: Option<&'static str>,
+    /// Elementwise add expression.
+    pub add: &'static str,
+    /// Elementwise multiply expression.
+    pub mul: &'static str,
+    /// Elementwise max expression.
+    pub max: &'static str,
+    /// All-zero register expression.
+    pub zero: &'static str,
+    /// Fused `$c += $a * $b` statement; `None` = compose add + mul.
+    pub fmadd: Option<&'static str>,
+    /// Horizontal-sum-to-scalar expression (vocabulary completeness; no
+    /// channel-minor emitter needs a reduction yet).
+    pub reduce_add: &'static str,
+}
+
+/// Substitute the operand slots of a template.
+fn subst(tpl: &str, a: &str, b: &str, c: &str) -> String {
+    tpl.replace("$a", a).replace("$b", b).replace("$c", c)
+}
+
+const SSE_OPS: OpTable = OpTable {
+    load: "_mm_load_ps($a)",
+    loadu: "_mm_loadu_ps($a)",
+    store: "_mm_store_ps($a, $b);",
+    storeu: "_mm_storeu_ps($a, $b);",
+    set1: "_mm_set1_ps($a)",
+    setr: Some("_mm_setr_ps($*)"),
+    add: "_mm_add_ps($a, $b)",
+    mul: "_mm_mul_ps($a, $b)",
+    max: "_mm_max_ps($a, $b)",
+    zero: "_mm_setzero_ps()",
+    fmadd: None,
+    reduce_add: "_mm_cvtss_f32(_mm_add_ss(_mm_add_ps($a, _mm_movehl_ps($a, $a)), \
+                 _mm_shuffle_ps(_mm_add_ps($a, _mm_movehl_ps($a, $a)), \
+                 _mm_add_ps($a, _mm_movehl_ps($a, $a)), 1)))",
+};
+
+const AVX2_OPS: OpTable = OpTable {
+    load: "_mm256_load_ps($a)",
+    loadu: "_mm256_loadu_ps($a)",
+    store: "_mm256_store_ps($a, $b);",
+    storeu: "_mm256_storeu_ps($a, $b);",
+    set1: "_mm256_set1_ps($a)",
+    setr: Some("_mm256_setr_ps($*)"),
+    add: "_mm256_add_ps($a, $b)",
+    mul: "_mm256_mul_ps($a, $b)",
+    max: "_mm256_max_ps($a, $b)",
+    zero: "_mm256_setzero_ps()",
+    fmadd: Some("$c = _mm256_fmadd_ps($a, $b, $c);"),
+    // Fold 256 -> 128 (low + high lane), then the SSE shuffle reduction.
+    reduce_add: "_mm_cvtss_f32(_mm_add_ss(_mm_add_ps(_mm_add_ps(_mm256_castps256_ps128($a), \
+                 _mm256_extractf128_ps($a, 1)), _mm_movehl_ps(_mm_add_ps(_mm256_castps256_ps128($a), \
+                 _mm256_extractf128_ps($a, 1)), _mm_add_ps(_mm256_castps256_ps128($a), \
+                 _mm256_extractf128_ps($a, 1)))), _mm_shuffle_ps(_mm_add_ps(_mm_add_ps(\
+_mm256_castps256_ps128($a), _mm256_extractf128_ps($a, 1)), _mm_movehl_ps(_mm_add_ps(\
+_mm256_castps256_ps128($a), _mm256_extractf128_ps($a, 1)), _mm_add_ps(_mm256_castps256_ps128($a), \
+                 _mm256_extractf128_ps($a, 1)))), _mm_add_ps(_mm_add_ps(_mm256_castps256_ps128($a), \
+                 _mm256_extractf128_ps($a, 1)), _mm_movehl_ps(_mm_add_ps(_mm256_castps256_ps128($a), \
+                 _mm256_extractf128_ps($a, 1)), _mm_add_ps(_mm256_castps256_ps128($a), \
+                 _mm256_extractf128_ps($a, 1)))), 1)))",
+};
+
+const NEON_OPS: OpTable = OpTable {
+    // NEON element loads have no alignment requirement: one intrinsic
+    // serves both slots (the aligned path simply costs nothing extra).
+    load: "vld1q_f32($a)",
+    loadu: "vld1q_f32($a)",
+    store: "vst1q_f32($a, $b);",
+    storeu: "vst1q_f32($a, $b);",
+    set1: "vdupq_n_f32($a)",
+    setr: None,
+    add: "vaddq_f32($a, $b)",
+    mul: "vmulq_f32($a, $b)",
+    max: "vmaxq_f32($a, $b)",
+    zero: "vdupq_n_f32(0.0f)",
+    fmadd: Some("$c = vfmaq_f32($c, $a, $b);"),
+    reduce_add: "vaddvq_f32($a)",
+};
+
+/// One vector flavor: register type + its intrinsic vocabulary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) struct VecSpec {
     /// f32 lanes per register.
     pub width: usize,
-    /// C register type (`__m128` / `__m256`).
+    /// C register type (`__m128` / `__m256` / `float32x4_t`).
     pub ty: &'static str,
-    /// Intrinsic prefix (`_mm` / `_mm256`).
-    pub pfx: &'static str,
-    /// Whether fused multiply-add is available (`_mm256_fmadd_ps`).
-    pub fma: bool,
+    /// Header providing the type + intrinsics.
+    pub header_name: &'static str,
+    /// Intrinsic vocabulary table.
+    pub ops: OpTable,
 }
 
-pub(crate) const SSE: VecSpec = VecSpec { width: 4, ty: "__m128", pfx: "_mm", fma: false };
-pub(crate) const AVX2: VecSpec = VecSpec { width: 8, ty: "__m256", pfx: "_mm256", fma: true };
+pub(crate) const SSE: VecSpec =
+    VecSpec { width: 4, ty: "__m128", header_name: "emmintrin.h", ops: SSE_OPS };
+pub(crate) const AVX2: VecSpec =
+    VecSpec { width: 8, ty: "__m256", header_name: "immintrin.h", ops: AVX2_OPS };
+pub(crate) const NEON: VecSpec =
+    VecSpec { width: 4, ty: "float32x4_t", header_name: "arm_neon.h", ops: NEON_OPS };
 
 impl VecSpec {
     /// Pick the widest vector flavor usable for a channel count under an
@@ -43,6 +156,7 @@ impl VecSpec {
         match isa {
             Isa::Generic => None,
             Isa::Sse3 => (channels % 4 == 0).then_some(SSE),
+            Isa::Neon => (channels % 4 == 0).then_some(NEON),
             Isa::Avx2 => {
                 if channels % 8 == 0 {
                     Some(AVX2)
@@ -61,58 +175,101 @@ impl VecSpec {
             Isa::Generic => &[],
             Isa::Sse3 => &[SSE],
             Isa::Avx2 => &[AVX2, SSE],
+            Isa::Neon => &[NEON],
         }
     }
 
-    /// `_mm*_set1_ps(expr)`.
+    /// Broadcast expression from a scalar C expression.
     pub fn set1(&self, expr: &str) -> String {
-        format!("{}_set1_ps({expr})", self.pfx)
+        subst(self.ops.set1, expr, "", "")
     }
 
-    /// `_mm*_setr_ps(c0, ..., cw)` from weight constants.
+    /// Lane-literal constructor from weight constants.
+    ///
+    /// # Panics
+    /// On ISAs without one (NEON); those force
+    /// [`ConstMode::Array`][super::ConstMode] so this is never reached.
     pub fn setr(&self, vals: &[f32]) -> String {
         debug_assert_eq!(vals.len(), self.width);
+        let tpl = self.ops.setr.unwrap_or_else(|| {
+            panic!("ISA vocabulary for {} has no lane-literal constructor (use ConstMode::Array)", self.ty)
+        });
         let parts: Vec<String> = vals.iter().map(|&v| fmt_f32(v)).collect();
-        format!("{}_setr_ps({})", self.pfx, parts.join(", "))
+        tpl.replace("$*", &parts.join(", "))
     }
 
-    /// `_mm*_loadu_ps(addr)`.
+    /// Load expression; `aligned` picks the aligned-load template (the
+    /// caller must have proven `addr` is `width*4`-byte aligned).
+    pub fn load(&self, addr: &str, aligned: bool) -> String {
+        subst(if aligned { self.ops.load } else { self.ops.loadu }, addr, "", "")
+    }
+
+    /// Unaligned load expression.
     pub fn loadu(&self, addr: &str) -> String {
-        format!("{}_loadu_ps({addr})", self.pfx)
+        self.load(addr, false)
     }
 
-    /// `reg = _mm*_storeu_ps(addr, reg)` statement.
+    /// Store statement; `aligned` as in [`VecSpec::load`].
+    pub fn store(&self, addr: &str, reg: &str, aligned: bool) -> String {
+        subst(if aligned { self.ops.store } else { self.ops.storeu }, addr, reg, "")
+    }
+
+    /// Unaligned store statement.
     pub fn storeu(&self, addr: &str, reg: &str) -> String {
-        format!("{}_storeu_ps({addr}, {reg});", self.pfx)
+        self.store(addr, reg, false)
     }
 
-    /// `acc = acc + t * w` — FMA when the ISA has it.
+    /// `acc = acc + t * w` statement — fused when the ISA has FMA.
     pub fn mul_add(&self, acc: &str, t: &str, w: &str) -> String {
-        if self.fma {
-            format!("{acc} = {}_fmadd_ps({t}, {w}, {acc});", self.pfx)
-        } else {
-            format!("{acc} = {}_add_ps({acc}, {}_mul_ps({t}, {w}));", self.pfx, self.pfx)
+        match self.ops.fmadd {
+            Some(tpl) => subst(tpl, t, w, acc),
+            None => format!("{acc} = {};", self.add_expr(acc, &self.mul_expr(t, w))),
         }
+    }
+
+    /// Elementwise add expression.
+    pub fn add_expr(&self, a: &str, b: &str) -> String {
+        subst(self.ops.add, a, b, "")
+    }
+
+    /// Elementwise multiply expression.
+    pub fn mul_expr(&self, a: &str, b: &str) -> String {
+        subst(self.ops.mul, a, b, "")
+    }
+
+    /// Elementwise max expression.
+    pub fn max_expr(&self, a: &str, b: &str) -> String {
+        subst(self.ops.max, a, b, "")
     }
 
     /// `a = max(a, b)` statement.
     pub fn max(&self, a: &str, b: &str) -> String {
-        format!("{a} = {}_max_ps({a}, {b});", self.pfx)
+        format!("{a} = {};", self.max_expr(a, b))
     }
 
     /// Zero register expression.
     pub fn zero(&self) -> String {
-        format!("{}_setzero_ps()", self.pfx)
+        self.ops.zero.to_string()
+    }
+
+    /// Horizontal-sum-to-scalar expression. `reg` must be a plain register
+    /// identifier: the x86 templates repeat the operand while folding
+    /// lanes, so a compound expression would be re-evaluated per mention.
+    /// (NEON's `vaddvq_f32` entry is AArch64-only; an ARMv7 vocabulary
+    /// would need the `vpadd_f32` pairwise fold instead.)
+    #[allow(dead_code)]
+    pub fn reduce_add(&self, reg: &str) -> String {
+        debug_assert!(
+            reg.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+            "reduce_add needs a plain register name, got {reg:?}"
+        );
+        subst(self.ops.reduce_add, reg, "", "")
     }
 
     /// Header needed for this flavor.
     #[allow(dead_code)]
     pub fn header(&self) -> &'static str {
-        if self.width == 8 {
-            "immintrin.h"
-        } else {
-            "emmintrin.h"
-        }
+        self.header_name
     }
 }
 
@@ -191,12 +348,8 @@ pub(crate) fn emit_vec_activation(
         Activation::Relu => w.line(&v.max(reg, &v.zero())),
         // 0 <= alpha < 1 ⇒ max(x, alpha x) == leaky_relu(x)
         Activation::LeakyRelu(alpha) => {
-            w.line(&format!(
-                "{reg} = {}_max_ps({reg}, {}_mul_ps({reg}, {}));",
-                v.pfx,
-                v.pfx,
-                v.set1(&fmt_f32(alpha))
-            ));
+            let scaled = v.mul_expr(reg, &v.set1(&fmt_f32(alpha)));
+            w.line(&v.max(reg, &scaled));
         }
     }
 }
@@ -213,6 +366,8 @@ mod tests {
         assert_eq!(VecSpec::for_channels(Isa::Avx2, 12).unwrap().width, 4);
         assert_eq!(VecSpec::for_channels(Isa::Avx2, 6), None);
         assert_eq!(VecSpec::for_channels(Isa::Sse3, 6), None);
+        assert_eq!(VecSpec::for_channels(Isa::Neon, 8).unwrap().ty, "float32x4_t");
+        assert_eq!(VecSpec::for_channels(Isa::Neon, 6), None);
     }
 
     #[test]
@@ -222,6 +377,48 @@ mod tests {
         assert!(SSE.mul_add("a0", "t", "w").contains("_mm_add_ps"));
         assert_eq!(AVX2.header(), "immintrin.h");
         assert_eq!(SSE.setr(&[1.0, 2.0, 3.0, 4.0]), "_mm_setr_ps(1.0f, 2.0f, 3.0f, 4.0f)");
+    }
+
+    #[test]
+    fn neon_vocabulary() {
+        assert_eq!(NEON.header(), "arm_neon.h");
+        assert_eq!(NEON.ty, "float32x4_t");
+        assert_eq!(NEON.set1("x[0]"), "vdupq_n_f32(x[0])");
+        assert_eq!(NEON.loadu("s + 4"), "vld1q_f32(s + 4)");
+        // NEON loads are alignment-agnostic: both templates are vld1q.
+        assert_eq!(NEON.load("s + 4", true), "vld1q_f32(s + 4)");
+        assert_eq!(NEON.storeu("d + 4", "a0"), "vst1q_f32(d + 4, a0);");
+        // vfmaq_f32(acc, a, b) = acc + a*b — operand order differs from x86
+        // FMA; the template absorbs it.
+        assert_eq!(NEON.mul_add("acc", "t", "wv"), "acc = vfmaq_f32(acc, t, wv);");
+        assert_eq!(NEON.max("a", "b"), "a = vmaxq_f32(a, b);");
+        assert_eq!(NEON.zero(), "vdupq_n_f32(0.0f)");
+        assert_eq!(NEON.reduce_add("a"), "vaddvq_f32(a)");
+        assert!(NEON.ops.setr.is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn neon_setr_is_unreachable_by_contract() {
+        let _ = NEON.setr(&[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn aligned_and_unaligned_templates_differ_on_x86() {
+        assert_eq!(SSE.load("p", true), "_mm_load_ps(p)");
+        assert_eq!(SSE.load("p", false), "_mm_loadu_ps(p)");
+        assert_eq!(AVX2.load("p", true), "_mm256_load_ps(p)");
+        assert_eq!(AVX2.store("p", "r", true), "_mm256_store_ps(p, r);");
+        assert_eq!(AVX2.store("p", "r", false), "_mm256_storeu_ps(p, r);");
+    }
+
+    #[test]
+    fn reduce_add_templates_reference_every_lane_fold() {
+        assert!(SSE.reduce_add("v").starts_with("_mm_cvtss_f32("));
+        assert!(SSE.reduce_add("v").contains("_mm_movehl_ps(v, v)"));
+        let avx = AVX2.reduce_add("v");
+        assert!(avx.contains("_mm256_extractf128_ps(v, 1)"));
+        assert!(avx.contains("_mm256_castps256_ps128(v)"));
     }
 
     #[test]
@@ -245,6 +442,15 @@ mod tests {
         assert_eq!(s.segments[2].len, 1);
         assert_eq!(s.cost_per_tap(), 3);
         assert_eq!(s.segments[1].end(), 12);
+    }
+
+    #[test]
+    fn schedule_neon_matches_sse_shape() {
+        let s = ChannelSchedule::for_channels(Isa::Neon, 6);
+        assert_eq!(s.segments.len(), 2);
+        assert_eq!(s.segments[0].vec.unwrap().ty, "float32x4_t");
+        assert_eq!((s.segments[1].start, s.segments[1].len), (4, 2));
+        assert!(s.segments[1].vec.is_none());
     }
 
     #[test]

@@ -2,7 +2,7 @@
 
 use super::{build_engine, default_artifacts_dir, default_weights_dir, default_work_dir, load_model};
 use crate::bench_harness::{bench, BenchConfig, Stats, Table};
-use crate::codegen::{CodegenOptions, Isa, PadMode, TileMode};
+use crate::codegen::{AlignMode, CodegenOptions, Isa, PadMode, TileMode};
 use crate::platform::{paper_platforms, GpuModel};
 use crate::runtime::EngineKind;
 use crate::tensor::Tensor;
@@ -276,13 +276,16 @@ pub struct AblationRow {
     pub c_bytes: usize,
 }
 
-/// The four emission variants the ablation sweeps (all SSE, outer loops
-/// kept): pad-copy vs padless × untiled vs tiled.
-pub const ABLATION_VARIANTS: [(&str, PadMode, TileMode); 4] = [
-    ("pad-copy+untiled", PadMode::Copy, TileMode::Off),
-    ("padless+untiled", PadMode::Padless, TileMode::Off),
-    ("pad-copy+tiled", PadMode::Copy, TileMode::Auto),
-    ("padless+tiled", PadMode::Padless, TileMode::Auto),
+/// The emission variants the ablation sweeps (all SSE, outer loops kept):
+/// pad-copy vs padless × untiled vs tiled, plus an aligned-vs-unaligned
+/// axis and a 1-D-vs-2-D register-tile axis on the fast configuration.
+pub const ABLATION_VARIANTS: [(&str, PadMode, TileMode, AlignMode); 6] = [
+    ("pad-copy+untiled", PadMode::Copy, TileMode::Off, AlignMode::Auto),
+    ("padless+untiled", PadMode::Padless, TileMode::Off, AlignMode::Auto),
+    ("pad-copy+tiled", PadMode::Copy, TileMode::Auto, AlignMode::Auto),
+    ("padless+tiled", PadMode::Padless, TileMode::Auto, AlignMode::Auto),
+    ("padless+tiled+unaligned", PadMode::Padless, TileMode::Auto, AlignMode::Off),
+    ("padless+tiled-2d", PadMode::Padless, TileMode::Fixed2D(2, 4), AlignMode::Auto),
 ];
 
 /// Measure every paper model under every pad/tile variant.
@@ -300,8 +303,8 @@ pub fn run_pad_tile_ablation(quick: bool) -> Result<Vec<AblationRow>> {
         let mut rng = XorShift64::new(7);
         let input = Tensor::rand(model.input.dims(), 0.0, 1.0, &mut rng);
         let mut out = vec![0.0f32; model.output_shape()?.numel()];
-        for (variant, pad_mode, tile) in ABLATION_VARIANTS {
-            let opts = CodegenOptions { pad_mode, tile, ..CodegenOptions::sse3() };
+        for (variant, pad_mode, tile, align) in ABLATION_VARIANTS {
+            let opts = CodegenOptions { pad_mode, tile, align, ..CodegenOptions::sse3() };
             let src = crate::codegen::generate_c(&model, &opts)?;
             let cnn = crate::cc::CompiledCnn::from_source(&model, &opts, &src, default_work_dir())?;
             let stats = bench(&cfg, || cnn.infer_into(input.data(), &mut out));
@@ -342,6 +345,12 @@ pub fn render_ablation(rows: &[AblationRow]) -> String {
         if let (Some(base), Some(best)) = (find("pad-copy+untiled"), find("padless+tiled")) {
             out.push_str(&format!("{name}: padless+tiled vs pad-copy+untiled = {:.2}x\n", base / best));
         }
+        if let (Some(al), Some(unal)) = (find("padless+tiled"), find("padless+tiled+unaligned")) {
+            out.push_str(&format!("{name}: aligned vs unaligned = {:.3}x\n", unal / al));
+        }
+        if let (Some(d1), Some(d2)) = (find("padless+tiled"), find("padless+tiled-2d")) {
+            out.push_str(&format!("{name}: 2-D (2x4) vs 1-D tile = {:.3}x\n", d1 / d2));
+        }
     }
     out
 }
@@ -368,7 +377,7 @@ pub fn write_bench_json(path: &Path, rows: &[AblationRow], source: &str) -> Resu
         ("bench".to_string(), Value::Str("table7_pad_tile_ablation".to_string())),
         ("source".to_string(), Value::Str(source.to_string())),
         ("variants".to_string(), Value::Array(
-            ABLATION_VARIANTS.iter().map(|(n, _, _)| Value::Str(n.to_string())).collect(),
+            ABLATION_VARIANTS.iter().map(|(n, _, _, _)| Value::Str(n.to_string())).collect(),
         )),
         ("rows".to_string(), Value::Array(rows_json)),
     ]);

@@ -115,6 +115,11 @@ fn robot_with_batchnorm_matches_interp() {
 /// output must never reference the `nncg_pad` scratch buffer, and odd
 /// channel counts must keep vector intrinsics under SSE (remainder lanes,
 /// not a scalar cliff).
+///
+/// The matrix includes `Isa::Neon` rows: x86 CI cannot *execute* NEON, so
+/// those rows assert generated-C structure instead of interpreter parity —
+/// `arm_neon.h` header, fused `vfmaq_f32` taps, vector loads, and a scalar
+/// remainder tail for the odd channel counts.
 #[test]
 fn odd_channel_strided_same_parity_across_pad_and_tile_matrix() {
     use nncg::codegen::{Isa, PadMode, TileMode, Unroll};
@@ -127,7 +132,7 @@ fn odd_channel_strided_same_parity_across_pad_and_tile_matrix() {
         .push(Layer::softmax())
         .with_random_weights(2027);
     let work = default_work_dir();
-    for isa in [Isa::Generic, Isa::Sse3] {
+    for isa in [Isa::Generic, Isa::Sse3, Isa::Neon] {
         for unroll in [Unroll::None, Unroll::KeepOuter2, Unroll::KeepOuter1, Unroll::Full] {
             for pad_mode in [PadMode::Copy, PadMode::Padless] {
                 for tile in [TileMode::Off, TileMode::Auto] {
@@ -147,11 +152,152 @@ fn odd_channel_strided_same_parity_across_pad_and_tile_matrix() {
                             opts.tag()
                         );
                     }
+                    if isa == Isa::Neon {
+                        // Structure-only: interpreter comparison can't run
+                        // ARM code on this host.
+                        assert!(src.contains("#include <arm_neon.h>"), "{}", opts.tag());
+                        assert!(src.contains("vfmaq_f32"), "{}: NEON taps must fuse", opts.tag());
+                        assert!(src.contains("vld1q_f32"), "{}", opts.tag());
+                        assert!(
+                            src.contains("float a ="),
+                            "{}: odd channels need a scalar tail",
+                            opts.tag()
+                        );
+                        assert!(!src.contains("_mm"), "{}: x86 leak into NEON output", opts.tag());
+                        continue;
+                    }
                     let err = nncg::cc::verify_against_interp(&model, &opts, &work, 2, 11).unwrap();
                     assert!(err < TOL, "{}: err {err}", opts.tag());
                 }
             }
         }
+    }
+}
+
+/// Locate a compiler able to syntax-check NEON C: a real ARM cross-gcc if
+/// the image has one, else the host compiler with the checked-in
+/// declaration-stub `arm_neon.h` (ci/stubs). Returns None when neither
+/// exists (test self-skips).
+fn neon_syntax_checker() -> Option<(String, Vec<String>)> {
+    let have = |cmd: &str| {
+        std::process::Command::new(cmd)
+            .arg("--version")
+            .output()
+            .map(|o| o.status.success())
+            .unwrap_or(false)
+    };
+    if have("aarch64-linux-gnu-gcc") {
+        return Some(("aarch64-linux-gnu-gcc".to_string(), vec!["-fsyntax-only".into()]));
+    }
+    // 32-bit ARM gcc refuses arm_neon.h (and lacks vfmaq_f32) unless NEON
+    // + VFPv4 are enabled explicitly.
+    if have("arm-linux-gnueabihf-gcc") {
+        return Some((
+            "arm-linux-gnueabihf-gcc".to_string(),
+            vec![
+                "-fsyntax-only".into(),
+                "-mfpu=neon-vfpv4".into(),
+                "-mfloat-abi=hard".into(),
+            ],
+        ));
+    }
+    let stub = std::path::Path::new("ci/stubs/arm_neon.h");
+    if stub.exists() {
+        for cc in ["gcc", "cc", "clang"] {
+            if have(cc) {
+                return Some((
+                    cc.to_string(),
+                    vec!["-fsyntax-only".into(), "-isystem".into(), "ci/stubs".into()],
+                ));
+            }
+        }
+    }
+    None
+}
+
+/// NEON-generated C for every paper model must be syntactically valid C —
+/// checked with an ARM cross compiler when available, else against the
+/// intrinsics declaration stub.
+#[test]
+fn neon_generated_c_for_paper_models_passes_syntax_check() {
+    use nncg::codegen::{Isa, TileMode, Unroll};
+    let Some((cc, flags)) = neon_syntax_checker() else {
+        eprintln!("SKIP neon syntax check: no C compiler and no ci/stubs/arm_neon.h");
+        return;
+    };
+    let dir = std::env::temp_dir().join("nncg-neon-syntax");
+    std::fs::create_dir_all(&dir).unwrap();
+    for name in nncg::graph::zoo::PAPER_MODELS {
+        let model = load_model(name, &default_weights_dir()).unwrap();
+        for (unroll, tile) in [
+            (Unroll::KeepOuter2, TileMode::Auto),
+            (Unroll::None, TileMode::Off),
+            (Unroll::KeepOuter2, TileMode::Fixed2D(2, 4)),
+        ] {
+            let opts = CodegenOptions { isa: Isa::Neon, unroll, tile, ..Default::default() };
+            let src = nncg::codegen::generate_c(&model, &opts).unwrap();
+            let c_path = dir.join(format!("{name}-{}.c", opts.tag()));
+            std::fs::write(&c_path, &src).unwrap();
+            let out = std::process::Command::new(&cc)
+                .args(&flags)
+                .arg(&c_path)
+                .output()
+                .unwrap();
+            assert!(
+                out.status.success(),
+                "{name} {}: {cc} rejected NEON output:\n{}",
+                opts.tag(),
+                String::from_utf8_lossy(&out.stderr)
+            );
+        }
+    }
+}
+
+/// Aligned emission (the default) must match the interpreter exactly like
+/// the unaligned baseline, and the two must differ only in the intended
+/// ways (NNCG_ALIGN attribute + aligned intrinsic forms).
+#[test]
+fn aligned_emission_matches_interp_and_differs_only_in_alignment() {
+    use nncg::codegen::AlignMode;
+    let work = default_work_dir();
+    for name in ["ball", "pedestrian"] {
+        let model = load_model(name, &default_weights_dir()).unwrap();
+        for align in [AlignMode::Auto, AlignMode::Off] {
+            let opts = CodegenOptions { align, ..CodegenOptions::sse3() };
+            let src = nncg::codegen::generate_c(&model, &opts).unwrap();
+            assert_eq!(
+                src.contains("NNCG_ALIGN"),
+                align == AlignMode::Auto,
+                "{name} {}",
+                opts.tag()
+            );
+            if align == AlignMode::Off {
+                assert!(!src.contains("_mm_load_ps("), "{name}: baseline must stay unaligned");
+                assert!(!src.contains("_mm_store_ps("), "{name}: baseline must stay unaligned");
+            }
+            let err = nncg::cc::verify_against_interp(&model, &opts, &work, 2, 77).unwrap();
+            assert!(err < TOL, "{name} {}: err {err}", opts.tag());
+        }
+    }
+}
+
+/// 2-D register blocks (`--tile 2x4`) through the compiled path: the conv
+/// interior walks row pairs and still matches the interpreter.
+#[test]
+fn tile_2d_matches_interp_on_paper_models() {
+    use nncg::codegen::TileMode;
+    let work = default_work_dir();
+    for name in ["ball", "pedestrian"] {
+        let model = load_model(name, &default_weights_dir()).unwrap();
+        let opts = CodegenOptions { tile: TileMode::Fixed2D(2, 4), ..CodegenOptions::sse3() };
+        let src = nncg::codegen::generate_c(&model, &opts).unwrap();
+        assert!(
+            src.contains("i += 2)"),
+            "{name}: expected a row-pair interior loop in {}",
+            opts.tag()
+        );
+        let err = nncg::cc::verify_against_interp(&model, &opts, &work, 3, 29).unwrap();
+        assert!(err < TOL, "{name} {}: err {err}", opts.tag());
     }
 }
 

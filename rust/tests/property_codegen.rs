@@ -7,7 +7,7 @@
 //! random kernel/stride/padding geometry, odd channel counts (SSE fallback
 //! paths), BN in every legal position, dense heads, activation placement.
 
-use nncg::codegen::{CodegenOptions, Isa, PadMode, TileMode, Unroll};
+use nncg::codegen::{AlignMode, CodegenOptions, Isa, PadMode, TileMode, Unroll};
 use nncg::graph::{Activation, Layer, Model, Padding};
 use nncg::tensor::Tensor;
 use nncg::util::XorShift64;
@@ -85,12 +85,14 @@ fn check(seed: u64, trials: usize) {
             1 => PadMode::Copy,
             _ => PadMode::Padless,
         };
-        let tile = match rng.below(3) {
+        let tile = match rng.below(4) {
             0 => TileMode::Auto,
             1 => TileMode::Off,
-            _ => TileMode::Fixed(2 + rng.below(3)),
+            2 => TileMode::Fixed(2 + rng.below(3)),
+            _ => TileMode::Fixed2D(2 + rng.below(2), 2 + rng.below(3)),
         };
-        let opts = CodegenOptions { isa, unroll, pad_mode, tile, ..Default::default() };
+        let align = if rng.below(2) == 0 { AlignMode::Auto } else { AlignMode::Off };
+        let opts = CodegenOptions { isa, unroll, pad_mode, tile, align, ..Default::default() };
         let err = nncg::cc::verify_against_interp(&model, &opts, &work, 2, seed + t as u64)
             .unwrap_or_else(|e| panic!("model {} opts {}: {e:#}", model.describe(), opts.tag()));
         assert!(
