@@ -12,6 +12,10 @@ typedef struct {
     float nncg_stub_lanes[4];
 } float32x4_t;
 
+typedef struct {
+    float nncg_stub_lanes[2];
+} float32x2_t;
+
 float32x4_t vld1q_f32(const float *ptr);
 void vst1q_f32(float *ptr, float32x4_t val);
 float32x4_t vdupq_n_f32(float value);
@@ -19,6 +23,13 @@ float32x4_t vaddq_f32(float32x4_t a, float32x4_t b);
 float32x4_t vmulq_f32(float32x4_t a, float32x4_t b);
 float32x4_t vmaxq_f32(float32x4_t a, float32x4_t b);
 float32x4_t vfmaq_f32(float32x4_t a, float32x4_t b, float32x4_t c);
+/* pre-VFPv4 ARMv7 flavor (--isa neon-vfpv3): non-fused multiply-accumulate */
+float32x4_t vmlaq_f32(float32x4_t a, float32x4_t b, float32x4_t c);
 float vaddvq_f32(float32x4_t a);
+/* ARMv7-safe pairwise reduction vocabulary */
+float32x2_t vget_low_f32(float32x4_t a);
+float32x2_t vget_high_f32(float32x4_t a);
+float32x2_t vpadd_f32(float32x2_t a, float32x2_t b);
+float vget_lane_f32(float32x2_t a, int lane);
 
 #endif /* NNCG_STUB_ARM_NEON_H */

@@ -2,7 +2,7 @@
 
 use super::args::Args;
 use crate::cc::{CcDriver, CcTarget, CompiledCnn};
-use crate::codegen::{generate_c, AlignMode, CodegenOptions, Isa, PadMode, TileMode, Unroll};
+use crate::codegen::{generate_c, AlignMode, CodegenOptions, FuseMode, Isa, PadMode, TileMode, Unroll};
 use crate::coordinator;
 use crate::experiments::{self, build_engine, load_model};
 use crate::platform::{paper_platforms, GpuModel};
@@ -16,7 +16,7 @@ use std::path::PathBuf;
 fn opts_from_args(args: &Args) -> Result<CodegenOptions> {
     let isa_name = args.get_or("isa", "sse3");
     let isa = Isa::from_name(isa_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown --isa {isa_name:?} (generic|sse3|avx2|neon)"))?;
+        .ok_or_else(|| anyhow::anyhow!("unknown --isa {isa_name:?} (generic|sse3|avx2|neon|neon-vfpv3)"))?;
     let unroll = Unroll::from_name(args.get_or("unroll", "keep-outer-2"))
         .ok_or_else(|| anyhow::anyhow!("unknown --unroll (none|2|1|full)"))?;
     let pad_mode = PadMode::from_name(args.get_or("pad-mode", "auto"))
@@ -25,12 +25,15 @@ fn opts_from_args(args: &Args) -> Result<CodegenOptions> {
         .ok_or_else(|| anyhow::anyhow!("unknown --tile (auto|off|2..8|RxC e.g. 2x4)"))?;
     let align = AlignMode::from_name(args.get_or("align", "auto"))
         .ok_or_else(|| anyhow::anyhow!("unknown --align (auto|off)"))?;
+    let fuse = FuseMode::from_name(args.get_or("fuse", "off"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --fuse (auto|off|2..8 = max group depth)"))?;
     Ok(CodegenOptions {
         isa,
         unroll,
         pad_mode,
         tile,
         align,
+        fuse,
         test_harness: args.has_flag("harness"),
         ..Default::default()
     })
@@ -70,10 +73,13 @@ pub fn generate(args: &Args) -> Result<i32> {
 pub fn verify(args: &Args) -> Result<i32> {
     let model = model_from_args(args)?;
     let opts = opts_from_args(args)?;
-    if opts.isa == Isa::Neon && !cfg!(any(target_arch = "aarch64", target_arch = "arm")) {
+    if opts.isa.is_neon() && !cfg!(any(target_arch = "aarch64", target_arch = "arm")) {
         bail!(
-            "--isa neon generates ARM intrinsics this host cannot execute; \
-             use `nncg generate --isa neon` and cross-compile (CI syntax-checks it)"
+            "--isa {} generates ARM intrinsics this host cannot execute; \
+             use `nncg generate --isa {}` and cross-compile (CI syntax-checks it, \
+             and runs it under qemu-user when available)",
+            opts.isa.name(),
+            opts.isa.name()
         );
     }
     let trials = args.get_usize("trials", 5)?;
@@ -368,6 +374,21 @@ mod tests {
         assert!(opts_from_args(&args(&["--align", "force"])).is_err());
         assert!(opts_from_args(&args(&["--tile", "9x2"])).is_err());
         assert!(opts_from_args(&args(&["--tile", "2x12"])).is_err());
+    }
+
+    #[test]
+    fn fuse_and_vfpv3_knobs_parse() {
+        let o = opts_from_args(&args(&[])).unwrap();
+        assert_eq!(o.fuse, FuseMode::Off);
+        let o = opts_from_args(&args(&["--fuse", "auto"])).unwrap();
+        assert_eq!(o.fuse, FuseMode::Auto);
+        let o = opts_from_args(&args(&["--fuse", "3"])).unwrap();
+        assert_eq!(o.fuse, FuseMode::Depth(3));
+        assert!(opts_from_args(&args(&["--fuse", "16"])).is_err());
+        assert!(opts_from_args(&args(&["--fuse", "rings"])).is_err());
+        let o = opts_from_args(&args(&["--isa", "neon-vfpv3"])).unwrap();
+        assert_eq!(o.isa, Isa::NeonVfpv3);
+        assert!(o.isa.is_neon());
     }
 
     #[test]

@@ -50,13 +50,16 @@ USAGE: nncg <command> [flags]
 
 COMMANDS:
   describe        print a model architecture table (--model ball|pedestrian|robot)
-  generate        emit the C file for a model (--model, --isa generic|sse3|avx2|neon,
+  generate        emit the C file for a model (--model,
+                  --isa generic|sse3|avx2|neon|neon-vfpv3,
                   --unroll none|2|1|full, --pad-mode auto|copy|padless,
                   --tile auto|off|2..8|RxC (2-D register block, e.g. 2x4),
-                  --align auto|off, --harness, -o FILE)
+                  --align auto|off, --fuse auto|off|2..8 (row-streaming
+                  fusion with ring line buffers; N = max group depth),
+                  --harness, -o FILE)
   verify          compile generated C and compare against the interpreter
                   (--model, --isa, --unroll, --pad-mode, --tile, --align,
-                  --trials N; NEON is generate-only on x86 hosts)
+                  --fuse, --trials N; NEON is generate-only on x86 hosts)
   run             classify one synthetic input (--model, --engine nncg|interp|xla,
                   --artifacts DIR for xla)
   bench           reproduce a paper table (--table 4|5|6|7|gpu, --quick)
@@ -72,7 +75,13 @@ Alignment: with --align auto (default) scratch buffers and weight arrays get
 a 32-byte NNCG_ALIGN attribute and provably-aligned vector accesses use the
 aligned intrinsic forms (x_in/x_out always stay unaligned); --align off is
 the paper-baseline unaligned emission. NEON ignores the distinction
-(vld1q_f32 is alignment-agnostic) and always stores weights as arrays.
+(vld1q_f32 is alignment-agnostic) and always stores weights as arrays;
+neon-vfpv3 targets pre-VFPv4 ARMv7 (non-fused vmlaq_f32).
+
+Fusion: --fuse auto streams consecutive conv/depthwise/pool/activation
+layers row-by-row through static ring line buffers of a few rows each,
+shrinking peak scratch RAM from whole planes (O(H*W*C)) to kernel windows
+(O(k_h*W*C)) per fused edge; outputs are bit-identical to --fuse off.
 "
     .to_string()
 }

@@ -77,6 +77,49 @@ pub(crate) fn emit_activation(w: &mut CWriter, ctx: &LayerCtx<'_>, act: Activati
     Ok(())
 }
 
+/// One constant-coordinate row of a standalone elementwise activation
+/// inside a row-streaming fusion group: `w*c` lane-scheduled elements read
+/// `src_row_off` into `ctx.src` and written `dst_row_off` into `ctx.dst`.
+/// (Softmax never fuses — it normalizes over the whole map.)
+pub(crate) fn emit_activation_row_fused(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    act: Activation,
+    src_row_off: usize,
+    dst_row_off: usize,
+) -> Result<()> {
+    debug_assert!(act != Activation::Softmax, "softmax heads are never fused");
+    let n = ctx.in_shape.w() * ctx.in_shape.c();
+    let sched = ChannelSchedule::for_channels(ctx.opts.isa, n);
+    let s_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.src);
+    let d_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.dst);
+    for seg in &sched.segments {
+        if seg.len == 0 {
+            continue;
+        }
+        if let Some(v) = seg.vec {
+            let seg_al = seg.start % v.width == 0;
+            let load_al = s_al && seg_al && src_row_off % v.width == 0;
+            let store_al = d_al && seg_al && dst_row_off % v.width == 0;
+            w.open(&format!("for (k = {}; k < {}; k += {})", seg.start, seg.end(), v.width));
+            w.line(&format!(
+                "{} a = {};",
+                v.ty,
+                v.load(&format!("{} + {} + k", ctx.src, src_row_off), load_al)
+            ));
+            emit_vec_activation(w, v, act, "a");
+            w.line(&v.store(&format!("{} + {} + k", ctx.dst, dst_row_off), "a", store_al));
+            w.close();
+        } else {
+            w.open(&format!("for (k = {}; k < {}; k++)", seg.start, seg.end()));
+            let val = format!("{}[{} + k]", ctx.src, src_row_off);
+            w.line(&format!("{}[{} + k] = {};", ctx.dst, dst_row_off, scalar_act(&val, act)));
+            w.close();
+        }
+    }
+    Ok(())
+}
+
 /// Copy `numel` floats from src to dst.
 pub(crate) fn emit_copy(w: &mut CWriter, ctx: &LayerCtx<'_>) {
     let n = ctx.in_shape.numel();

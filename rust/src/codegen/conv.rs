@@ -19,12 +19,33 @@
 //!    width.
 
 use super::cwriter::{fmt_f32, CWriter};
-use super::schedule::{self, AxisPlan, PadStrategy};
+use super::schedule::{self, AxisPlan, PadStrategy, RowMap};
 use super::simd::{emit_vec_activation, ChannelSchedule, VecSpec};
 use super::{ConstMode, LayerCtx, Unroll};
 use crate::graph::{Activation, Padding};
 use crate::tensor::{Shape, Tensor};
 use anyhow::{bail, Result};
+
+/// Generation-time source-row addressing for a cell block: whole-plane
+/// walks see kernel rows at a fixed linear stride; fused ring-buffer rows
+/// wrap around, so each valid kernel row gets an explicit offset resolved
+/// while generating (no runtime index arithmetic beyond constant folds).
+#[derive(Debug, Clone)]
+pub(crate) enum RowAddr {
+    /// Row `n` of the window lives `n * row_elems` after the base.
+    Linear(usize),
+    /// Row `n` of the window lives at `offsets[n]` (ring slots).
+    Table(Vec<usize>),
+}
+
+impl RowAddr {
+    pub(crate) fn off(&self, n_rel: usize) -> usize {
+        match self {
+            RowAddr::Linear(row_elems) => n_rel * row_elems,
+            RowAddr::Table(offs) => offs[n_rel],
+        }
+    }
+}
 
 /// Padded input extent `(h, w)` for a conv layer (equals the input extent
 /// when the layer does not pad).
@@ -179,7 +200,7 @@ impl SpatialWalk {
         rr * self.cols.out * self.out_minor + c_off
     }
 
-    fn emit_cols<F>(&self, w: &mut CWriter, n0: usize, n1: usize, rb: usize, block: &mut F)
+    pub(crate) fn emit_cols<F>(&self, w: &mut CWriter, n0: usize, n1: usize, rb: usize, block: &mut F)
     where
         F: FnMut(&mut CWriter, TapWindow, &str, &[usize], &str, &[usize]),
     {
@@ -343,7 +364,7 @@ pub(crate) fn emit_conv(
         bias,
         activation,
         sched: &sched,
-        row_elems,
+        row_addr: RowAddr::Linear(row_elems),
         w_k,
         c_in,
         c_out,
@@ -358,6 +379,79 @@ pub(crate) fn emit_conv(
     Ok(())
 }
 
+/// Emit one output row of a convolution inside a row-streaming fusion
+/// group: the row coordinate is a generation-time constant, the source
+/// rows come from `src_map` (the producer's ring buffer or the group's
+/// input plane, base expression `ctx.src`), and the output row lands
+/// `dst_row_off` elements into `ctx.dst`. Columns keep the usual padless
+/// split: peeled border columns plus a (register-tiled) interior loop.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn emit_conv_row_fused(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    weights: &Tensor,
+    bias: &Tensor,
+    stride: (usize, usize),
+    padding: Padding,
+    activation: Activation,
+    out_row: usize,
+    src_map: RowMap,
+    dst_row_off: usize,
+) -> Result<()> {
+    debug_assert!(activation != Activation::Softmax, "softmax heads are never fused");
+    let wd = weights.dims();
+    let (h_k, w_k, c_in, c_out) = (wd[0], wd[1], wd[2], wd[3]);
+    let (h_in, w_in) = (ctx.in_shape.h(), ctx.in_shape.w());
+    let (h_out, w_out) = (ctx.out_shape.h(), ctx.out_shape.w());
+    let (pad_top, pad_left) = match padding {
+        Padding::Same => {
+            let (_, pt) = padding.resolve(h_in, h_k, stride.0)?;
+            let (_, pl) = padding.resolve(w_in, w_k, stride.1)?;
+            (pt, pl)
+        }
+        Padding::Valid => (0, 0),
+    };
+    let sched = ChannelSchedule::for_channels(ctx.opts.isa, c_out);
+    let rows = AxisPlan::padless(h_out, stride.0, h_k, pad_top, h_in);
+    let cols = AxisPlan::padless(w_out, stride.1, w_k, pad_left, w_in);
+    let (n0, n1) = rows.window(out_row);
+    let p0 = rows.src_start(out_row);
+    let src_row_offs: Vec<usize> = (0..n1 - n0).map(|t| src_map.off(p0 + t)).collect();
+    let (_, tile) = schedule::tile_shape(ctx.opts, &sched, 1, cols.interior());
+    let walk = SpatialWalk {
+        rows,
+        cols,
+        tile,
+        tile_rows: 1,
+        unroll: ctx.opts.unroll,
+        src: ctx.src.to_string(),
+        dst: ctx.dst.to_string(),
+        row_elems: 0, // rows are addressed through the offset table
+        cmin: c_in,
+        out_minor: c_out,
+    };
+    let cells = ConvCells {
+        ctx,
+        weights,
+        bias,
+        activation,
+        sched: &sched,
+        row_addr: RowAddr::Table(src_row_offs),
+        w_k,
+        c_in,
+        c_out,
+        dst_static: schedule::static_buf(ctx.dst),
+    };
+    w.open("");
+    w.line(&format!("const float *s = {};", ctx.src));
+    w.line(&format!("float *d = {} + {};", ctx.dst, dst_row_off));
+    walk.emit_cols(w, n0, n1, 1, &mut |w, win, s, so, d, dofs| {
+        cells.emit_block(w, win, s, so, d, dofs)
+    });
+    w.close();
+    Ok(())
+}
+
 /// Cell-block emitter for the standard convolution.
 struct ConvCells<'a> {
     ctx: &'a LayerCtx<'a>,
@@ -365,7 +459,8 @@ struct ConvCells<'a> {
     bias: &'a Tensor,
     activation: Activation,
     sched: &'a ChannelSchedule,
-    row_elems: usize,
+    /// How the valid kernel rows of a cell map to source offsets.
+    row_addr: RowAddr,
     w_k: usize,
     c_in: usize,
     c_out: usize,
@@ -407,7 +502,7 @@ impl ConvCells<'_> {
 
     /// Tap offset relative to a cell's first valid tap.
     fn rel(&self, win: &TapWindow, n: usize, m: usize, o: usize) -> usize {
-        (n - win.n0) * self.row_elems + (m - win.m0) * self.c_in + o
+        self.row_addr.off(n - win.n0) + (m - win.m0) * self.c_in + o
     }
 
     /// Emit all channels of a block of cells sharing one tap window.

@@ -10,9 +10,9 @@
 //! borders, lane-scheduled channels (vector groups + scalar tail), and
 //! weight-stationary register tiles across interior columns.
 
-use super::conv::{padded_extent, scalar_act, SpatialWalk, TapWindow};
+use super::conv::{padded_extent, scalar_act, RowAddr, SpatialWalk, TapWindow};
 use super::cwriter::{fmt_f32, CWriter};
-use super::schedule::{self, AxisPlan, PadStrategy};
+use super::schedule::{self, AxisPlan, PadStrategy, RowMap};
 use super::simd::{emit_vec_activation, ChannelSchedule, VecSpec};
 use super::{ConstMode, LayerCtx, Unroll};
 use crate::graph::{Activation, Padding};
@@ -94,7 +94,7 @@ pub(crate) fn emit_depthwise(
         bias,
         activation,
         sched: &sched,
-        row_elems,
+        row_addr: RowAddr::Linear(row_elems),
         w_k,
         c,
         src_static,
@@ -108,6 +108,75 @@ pub(crate) fn emit_depthwise(
     Ok(())
 }
 
+/// One constant-coordinate output row of a depthwise convolution inside a
+/// fusion group (see [`super::conv::emit_conv_row_fused`]).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn emit_depthwise_row_fused(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    weights: &Tensor,
+    bias: &Tensor,
+    stride: (usize, usize),
+    padding: Padding,
+    activation: Activation,
+    out_row: usize,
+    src_map: RowMap,
+    dst_row_off: usize,
+) -> Result<()> {
+    debug_assert!(activation != Activation::Softmax, "softmax heads are never fused");
+    let wd = weights.dims();
+    let (h_k, w_k, c) = (wd[0], wd[1], wd[2]);
+    let (h_in, w_in) = (ctx.in_shape.h(), ctx.in_shape.w());
+    let (h_out, w_out) = (ctx.out_shape.h(), ctx.out_shape.w());
+    let (pad_top, pad_left) = match padding {
+        Padding::Same => {
+            let (_, pt) = padding.resolve(h_in, h_k, stride.0)?;
+            let (_, pl) = padding.resolve(w_in, w_k, stride.1)?;
+            (pt, pl)
+        }
+        Padding::Valid => (0, 0),
+    };
+    let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
+    let rows = AxisPlan::padless(h_out, stride.0, h_k, pad_top, h_in);
+    let cols = AxisPlan::padless(w_out, stride.1, w_k, pad_left, w_in);
+    let (n0, n1) = rows.window(out_row);
+    let p0 = rows.src_start(out_row);
+    let src_row_offs: Vec<usize> = (0..n1 - n0).map(|t| src_map.off(p0 + t)).collect();
+    let (_, tile) = schedule::tile_shape(ctx.opts, &sched, 1, cols.interior());
+    let walk = SpatialWalk {
+        rows,
+        cols,
+        tile,
+        tile_rows: 1,
+        unroll: ctx.opts.unroll,
+        src: ctx.src.to_string(),
+        dst: ctx.dst.to_string(),
+        row_elems: 0, // rows are addressed through the offset table
+        cmin: c,
+        out_minor: c,
+    };
+    let cells = DwCells {
+        ctx,
+        weights,
+        bias,
+        activation,
+        sched: &sched,
+        row_addr: RowAddr::Table(src_row_offs),
+        w_k,
+        c,
+        src_static: schedule::static_buf(ctx.src),
+        dst_static: schedule::static_buf(ctx.dst),
+    };
+    w.open("");
+    w.line(&format!("const float *s = {};", ctx.src));
+    w.line(&format!("float *d = {} + {};", ctx.dst, dst_row_off));
+    walk.emit_cols(w, n0, n1, 1, &mut |w, win, s, so, d, dofs| {
+        cells.emit_block(w, win, s, so, d, dofs)
+    });
+    w.close();
+    Ok(())
+}
+
 /// Cell-block emitter for depthwise convolution.
 struct DwCells<'a> {
     ctx: &'a LayerCtx<'a>,
@@ -115,7 +184,8 @@ struct DwCells<'a> {
     bias: &'a Tensor,
     activation: Activation,
     sched: &'a ChannelSchedule,
-    row_elems: usize,
+    /// How the valid kernel rows of a cell map to source offsets.
+    row_addr: RowAddr,
     w_k: usize,
     c: usize,
     /// Whether src/dst are generator-owned (alignable) buffers.
@@ -129,7 +199,7 @@ impl DwCells<'_> {
     }
 
     fn rel(&self, win: &TapWindow, n: usize, m: usize) -> usize {
-        (n - win.n0) * self.row_elems + (m - win.m0) * self.c
+        self.row_addr.off(n - win.n0) + (m - win.m0) * self.c
     }
 
     /// Every spatial offset into src/dst is a multiple of the channel
@@ -296,59 +366,13 @@ pub(crate) fn emit_avgpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
     let inv = fmt_f32(1.0 / (pool.0 * pool.1) as f32);
     // Pool offsets are all multiples of `c`; same alignment rule as the
     // depthwise input loads.
-    let align_on = ctx.opts.use_aligned();
-    let s_static = schedule::static_buf(ctx.src);
-    let d_static = schedule::static_buf(ctx.dst);
+    let s_static_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.src);
+    let d_static_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.dst);
+    // Whole-plane walk: window rows sit at the linear row stride.
+    let row_offs: Vec<usize> = (0..pool.0).map(|n| n * w_in * c).collect();
 
     let window = |w: &mut CWriter, s_name: &str, s_off: usize, d_name: &str, d_off: usize| {
-        for seg in &sched.segments {
-            if let Some(v) = seg.vec {
-                let s_al = align_on && s_static && c % v.width == 0;
-                let d_al = align_on && d_static && c % v.width == 0;
-                for k0 in (seg.start..seg.end()).step_by(v.width) {
-                    w.open("");
-                    w.line(&format!(
-                        "{} a = {};",
-                        v.ty,
-                        v.load(&format!("{s_name} + {}", s_off + k0), s_al && (s_off + k0) % v.width == 0)
-                    ));
-                    for n in 0..pool.0 {
-                        for m in 0..pool.1 {
-                            if n == 0 && m == 0 {
-                                continue;
-                            }
-                            let off = s_off + (n * w_in + m) * c + k0;
-                            w.line(&format!(
-                                "a = {};",
-                                v.add_expr("a", &v.load(&format!("{s_name} + {off}"), s_al && off % v.width == 0))
-                            ));
-                        }
-                    }
-                    w.line(&format!("a = {};", v.mul_expr("a", &v.set1(&inv))));
-                    w.line(&v.store(
-                        &format!("{d_name} + {}", d_off + k0),
-                        "a",
-                        d_al && (d_off + k0) % v.width == 0,
-                    ));
-                    w.close();
-                }
-            } else {
-                for k in seg.start..seg.end() {
-                    w.open("");
-                    w.line(&format!("float a = {s_name}[{}];", s_off + k));
-                    for n in 0..pool.0 {
-                        for m in 0..pool.1 {
-                            if n == 0 && m == 0 {
-                                continue;
-                            }
-                            w.line(&format!("a += {s_name}[{}];", s_off + (n * w_in + m) * c + k));
-                        }
-                    }
-                    w.line(&format!("{d_name}[{}] = a * {inv};", d_off + k));
-                    w.close();
-                }
-            }
-        }
+        emit_avg_window(w, &sched, pool, c, &inv, s_static_al, d_static_al, s_name, s_off, d_name, d_off, &row_offs);
     };
 
     match ctx.opts.unroll {
@@ -382,6 +406,119 @@ pub(crate) fn emit_avgpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
                     );
                 }
             }
+        }
+    }
+    Ok(())
+}
+
+/// One fully-unrolled average-pool window per lane segment. `row_offs[n]`
+/// is the source offset of window row `n` (linear for plane walks, ring
+/// slots for fused rows).
+#[allow(clippy::too_many_arguments)]
+fn emit_avg_window(
+    w: &mut CWriter,
+    sched: &ChannelSchedule,
+    pool: (usize, usize),
+    c: usize,
+    inv: &str,
+    s_static_al: bool,
+    d_static_al: bool,
+    s_name: &str,
+    s_off: usize,
+    d_name: &str,
+    d_off: usize,
+    row_offs: &[usize],
+) {
+    for seg in &sched.segments {
+        if let Some(v) = seg.vec {
+            let s_al = s_static_al && c % v.width == 0;
+            let d_al = d_static_al && c % v.width == 0;
+            for k0 in (seg.start..seg.end()).step_by(v.width) {
+                w.open("");
+                let off0 = s_off + row_offs[0] + k0;
+                w.line(&format!(
+                    "{} a = {};",
+                    v.ty,
+                    v.load(&format!("{s_name} + {off0}"), s_al && off0 % v.width == 0)
+                ));
+                for n in 0..pool.0 {
+                    for m in 0..pool.1 {
+                        if n == 0 && m == 0 {
+                            continue;
+                        }
+                        let off = s_off + row_offs[n] + m * c + k0;
+                        w.line(&format!(
+                            "a = {};",
+                            v.add_expr("a", &v.load(&format!("{s_name} + {off}"), s_al && off % v.width == 0))
+                        ));
+                    }
+                }
+                w.line(&format!("a = {};", v.mul_expr("a", &v.set1(inv))));
+                w.line(&v.store(
+                    &format!("{d_name} + {}", d_off + k0),
+                    "a",
+                    d_al && (d_off + k0) % v.width == 0,
+                ));
+                w.close();
+            }
+        } else {
+            for k in seg.start..seg.end() {
+                w.open("");
+                w.line(&format!("float a = {s_name}[{}];", s_off + row_offs[0] + k));
+                for n in 0..pool.0 {
+                    for m in 0..pool.1 {
+                        if n == 0 && m == 0 {
+                            continue;
+                        }
+                        w.line(&format!("a += {s_name}[{}];", s_off + row_offs[n] + m * c + k));
+                    }
+                }
+                w.line(&format!("{d_name}[{}] = a * {inv};", d_off + k));
+                w.close();
+            }
+        }
+    }
+}
+
+/// One constant-coordinate output row of an average pool inside a fusion
+/// group; window rows are fetched through `src_map` (ring or plane).
+pub(crate) fn emit_avgpool_row_fused(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    pool: (usize, usize),
+    stride: (usize, usize),
+    out_row: usize,
+    src_map: RowMap,
+    dst_row_off: usize,
+) -> Result<()> {
+    let (w_out, c) = (ctx.out_shape.w(), ctx.out_shape.c());
+    let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
+    let inv = fmt_f32(1.0 / (pool.0 * pool.1) as f32);
+    let s_static_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.src);
+    let d_static_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.dst);
+    let row_offs: Vec<usize> = (0..pool.0).map(|n| src_map.off(out_row * stride.0 + n)).collect();
+    if ctx.opts.unroll.keeps_cols() {
+        w.open(&format!("for (j = 0; j < {w_out}; j++)"));
+        w.line(&format!("const float *s = {} + j*{};", ctx.src, stride.1 * c));
+        w.line(&format!("float *d = {} + {} + j*{};", ctx.dst, dst_row_off, c));
+        emit_avg_window(w, &sched, pool, c, &inv, s_static_al, d_static_al, "s", 0, "d", 0, &row_offs);
+        w.close();
+    } else {
+        for j in 0..w_out {
+            emit_avg_window(
+                w,
+                &sched,
+                pool,
+                c,
+                &inv,
+                s_static_al,
+                d_static_al,
+                ctx.src,
+                j * stride.1 * c,
+                ctx.dst,
+                dst_row_off + j * c,
+                &row_offs,
+            );
         }
     }
     Ok(())

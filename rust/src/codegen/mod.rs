@@ -77,6 +77,11 @@ pub enum Isa {
     /// ([`ConstMode::Array`]); `vld1q_f32` loads have no alignment
     /// requirement, so the aligned/unaligned split collapses.
     Neon,
+    /// ARM NEON for pre-VFPv4 ARMv7 cores (Cortex-A8/A9-era): identical
+    /// vocabulary except the multiply-accumulate is the non-fused
+    /// `vmlaq_f32` (`vfmaq_f32` needs VFPv4). Same Array-only constants
+    /// and alignment-agnostic loads as [`Isa::Neon`].
+    NeonVfpv3,
 }
 
 impl Isa {
@@ -86,6 +91,7 @@ impl Isa {
             Isa::Sse3 => "sse3",
             Isa::Avx2 => "avx2",
             Isa::Neon => "neon",
+            Isa::NeonVfpv3 => "neon-vfpv3",
         }
     }
 
@@ -95,8 +101,14 @@ impl Isa {
             "sse3" => Isa::Sse3,
             "avx2" => Isa::Avx2,
             "neon" => Isa::Neon,
+            "neon-vfpv3" => Isa::NeonVfpv3,
             _ => return None,
         })
+    }
+
+    /// True for the ARM NEON family (either multiply-accumulate flavor).
+    pub fn is_neon(&self) -> bool {
+        matches!(self, Isa::Neon | Isa::NeonVfpv3)
     }
 }
 
@@ -293,6 +305,56 @@ impl AlignMode {
     }
 }
 
+/// Cross-layer row-streaming fusion (`--fuse`): whether consecutive
+/// stride-compatible conv/depthwise/pool/activation layers share one
+/// rolling row schedule with **ring line buffers** between them instead of
+/// whole-plane ping-pong scratch. Inside a group each producer computes
+/// only the rows its consumer needs next; an intermediate edge then costs
+/// O(k_h·W·C) static floats instead of O(H·W·C), and every intermediate
+/// row stays cache-resident. Ring slot indices (`row % rows`) are resolved
+/// at generation time — the emitted C contains no runtime `%`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FuseMode {
+    /// Fuse every eligible chain, depth-capped at 4 and split by the
+    /// statement budget that keeps each group's unrolled row schedule
+    /// compiler-friendly.
+    Auto,
+    /// Paper-baseline emission: every layer computes its whole plane.
+    Off,
+    /// Fuse with an explicit maximum group depth (2..=8).
+    Depth(usize),
+}
+
+impl FuseMode {
+    /// Maximum number of layers one fusion group may span.
+    pub fn max_depth(&self) -> usize {
+        match self {
+            FuseMode::Auto => 4,
+            FuseMode::Off => 1,
+            FuseMode::Depth(n) => *n,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            FuseMode::Auto => "auto".to_string(),
+            FuseMode::Off => "off".to_string(),
+            FuseMode::Depth(n) => n.to_string(),
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<FuseMode> {
+        Some(match s {
+            "auto" => FuseMode::Auto,
+            // Depth 1 is "every group is a single layer" — plain emission.
+            "off" | "1" => FuseMode::Off,
+            other => {
+                FuseMode::Depth(other.parse::<usize>().ok().filter(|n| (2..=8).contains(n))?)
+            }
+        })
+    }
+}
+
 /// Code generation options.
 #[derive(Debug, Clone)]
 pub struct CodegenOptions {
@@ -316,6 +378,8 @@ pub struct CodegenOptions {
     pub tile: TileMode,
     /// Buffer alignment + aligned-load selection.
     pub align: AlignMode,
+    /// Cross-layer row-streaming fusion with ring line buffers.
+    pub fuse: FuseMode,
 }
 
 impl Default for CodegenOptions {
@@ -330,6 +394,7 @@ impl Default for CodegenOptions {
             pad_mode: PadMode::Auto,
             tile: TileMode::Auto,
             align: AlignMode::Auto,
+            fuse: FuseMode::Off,
         }
     }
 }
@@ -374,7 +439,7 @@ impl CodegenOptions {
     /// weights must be loadable from addressable arrays — which is also
     /// what an embedded icache wants.
     pub fn effective_const_mode(&self) -> ConstMode {
-        if self.isa == Isa::Neon {
+        if self.isa.is_neon() {
             return ConstMode::Array;
         }
         self.const_mode.unwrap_or(match self.unroll {
@@ -391,13 +456,14 @@ impl CodegenOptions {
     /// Short tag used in cache keys and bench labels.
     pub fn tag(&self) -> String {
         format!(
-            "{}-{}-{}-pad{}-t{}-al{}",
+            "{}-{}-{}-pad{}-t{}-al{}-fu{}",
             self.isa.name(),
             self.unroll.name(),
             self.effective_const_mode().name(),
             self.pad_mode.name(),
             self.tile.name(),
             self.align.name(),
+            self.fuse.name(),
         )
     }
 }
@@ -443,16 +509,32 @@ pub fn generate_c(model: &Model, opts: &CodegenOptions) -> Result<String> {
     let mut w = CWriter::new();
     emit_prelude(&mut w, &model, &ident, opts, &shapes);
 
-    // Buffer planning: ping-pong between two scratch buffers sized to the
-    // largest intermediate. Copy-mode padding additionally needs a third
-    // buffer holding the zero-padded input (Eq. 1's x̂); padless emission
-    // does not, shrinking the static footprint.
-    let plan = plan_buffers(&model, &shapes, opts)?;
+    // Fusion-group partition: multi-layer groups stream rows through ring
+    // line buffers; singleton groups keep the classic whole-plane walk.
+    let groups = fusion_groups(&model, &shapes, opts);
+
+    // Buffer planning (liveness-aware): ping-pong scratch holds only
+    // group-boundary planes; intermediates inside a fusion group live in
+    // per-edge ring line buffers of a few rows each. Copy-mode padding
+    // additionally needs a third buffer holding the zero-padded input
+    // (Eq. 1's x̂); padless emission does not, shrinking the footprint.
+    let plan = plan_buffers(&model, &shapes, opts, &groups)?;
     let qual = if opts.use_aligned() { "NNCG_ALIGN(32) " } else { "" };
     w.line(&format!("static {qual}float nncg_bufa[{}];", plan.main_size.max(1)));
     w.line(&format!("static {qual}float nncg_bufb[{}];", plan.main_size.max(1)));
     if plan.pad_size > 0 {
         w.line(&format!("static {qual}float nncg_pad[{}];", plan.pad_size));
+    }
+    for r in &plan.rings {
+        w.line(&format!(
+            "static {qual}float nncg_ring{}[{}]; /* ring: {} rows of {} (layer {} -> {}) */",
+            r.layer,
+            r.floats.max(1),
+            r.rows,
+            r.row_elems,
+            r.layer,
+            r.layer + 1
+        ));
     }
     w.blank();
 
@@ -477,35 +559,57 @@ pub fn generate_c(model: &Model, opts: &CodegenOptions) -> Result<String> {
     let n_layers = model.layers.len();
     let mut cur_src: String = "x_in".to_string();
     let mut ping = true;
-    for (i, layer) in model.layers.iter().enumerate() {
-        let is_last = i == n_layers - 1;
-        let dst = if is_last {
-            "x_out".to_string()
-        } else if is_inplace(layer) && cur_src != "x_in" {
-            cur_src.clone()
+    for group in &groups {
+        let is_last = group.end == n_layers;
+        if group.len() == 1 {
+            let i = group.start;
+            let layer = &model.layers[i];
+            let dst = if is_last {
+                "x_out".to_string()
+            } else if is_inplace(layer) && cur_src != "x_in" {
+                cur_src.clone()
+            } else {
+                let d = if ping { "nncg_bufa" } else { "nncg_bufb" };
+                ping = !ping;
+                d.to_string()
+            };
+            let ctx = LayerCtx {
+                idx: i,
+                in_shape: &shapes[i],
+                out_shape: &shapes[i + 1],
+                src: &cur_src,
+                dst: &dst,
+                padbuf: "nncg_pad",
+                opts,
+            };
+            w.blank();
+            w.line(&format!(
+                "/* layer {i}: {} {} -> {} */",
+                layer.kind_name(),
+                shapes[i],
+                shapes[i + 1]
+            ));
+            emit_layer(&mut w, layer, &ctx)?;
+            cur_src = dst;
         } else {
-            let d = if ping { "nncg_bufa" } else { "nncg_bufb" };
-            ping = !ping;
-            d.to_string()
-        };
-        let ctx = LayerCtx {
-            idx: i,
-            in_shape: &shapes[i],
-            out_shape: &shapes[i + 1],
-            src: &cur_src,
-            dst: &dst,
-            padbuf: "nncg_pad",
-            opts,
-        };
-        w.blank();
-        w.line(&format!(
-            "/* layer {i}: {} {} -> {} */",
-            layer.kind_name(),
-            shapes[i],
-            shapes[i + 1]
-        ));
-        emit_layer(&mut w, layer, &ctx)?;
-        cur_src = dst;
+            let dst = if is_last {
+                "x_out".to_string()
+            } else {
+                let d = if ping { "nncg_bufa" } else { "nncg_bufb" };
+                ping = !ping;
+                d.to_string()
+            };
+            w.blank();
+            w.line(&format!(
+                "/* fused group: layers {}..{} ({} -> {}) stream rows through ring line buffers */",
+                group.start,
+                group.end - 1,
+                shapes[group.start],
+                shapes[group.end]
+            ));
+            emit_fused_group(&mut w, &model, &shapes, group, &cur_src, &dst, &plan, opts)?;
+            cur_src = dst;
+        }
     }
     w.close();
 
@@ -544,6 +648,7 @@ fn emit_prelude(w: &mut CWriter, model: &Model, ident: &str, opts: &CodegenOptio
         Isa::Sse3 => w.line(" * ANSI C + x86 SSE intrinsics (needs an SSE-capable target)."),
         Isa::Avx2 => w.line(" * ANSI C + x86 AVX2/FMA intrinsics (needs an AVX2-capable target)."),
         Isa::Neon => w.line(" * ANSI C + ARM NEON intrinsics (AArch64 or ARMv7+VFPv4 for vfmaq_f32)."),
+        Isa::NeonVfpv3 => w.line(" * ANSI C + ARM NEON intrinsics (ARMv7 pre-VFPv4: non-fused vmlaq_f32)."),
     }
     w.line(" */");
     let uses_softmax = model.layers.iter().any(|l| {
@@ -558,7 +663,7 @@ fn emit_prelude(w: &mut CWriter, model: &Model, ident: &str, opts: &CodegenOptio
         Isa::Generic => {}
         Isa::Sse3 => w.line("#include <emmintrin.h>"),
         Isa::Avx2 => w.line("#include <immintrin.h>"),
-        Isa::Neon => w.line("#include <arm_neon.h>"),
+        Isa::Neon | Isa::NeonVfpv3 => w.line("#include <arm_neon.h>"),
     }
     if opts.use_aligned() {
         w.blank();
@@ -626,9 +731,19 @@ fn emit_layer(w: &mut CWriter, layer: &Layer, ctx: &LayerCtx<'_>) -> Result<()> 
     }
 }
 
+/// One ring line buffer: the output edge of fusion-group member `layer`
+/// (global index), holding `rows` rows of `row_elems` floats each.
+struct RingInfo {
+    layer: usize,
+    rows: usize,
+    row_elems: usize,
+    floats: usize,
+}
+
 struct BufferPlan {
     main_size: usize,
     pad_size: usize,
+    rings: Vec<RingInfo>,
 }
 
 /// Round a float count up to a whole 32-byte (8-float) group so buffer
@@ -637,67 +752,322 @@ fn round_to_vec(n: usize) -> usize {
     crate::util::div_ceil(n, 8) * 8
 }
 
-fn plan_buffers(model: &Model, shapes: &[Shape], opts: &CodegenOptions) -> Result<BufferPlan> {
+/// Auto-fusion statement budget per group. Fused emission unrolls the row
+/// schedule, so generated-code size (and C compile time) grows with
+/// body×rows; chains are split so each group stays comfortably within
+/// what a C compiler chews through in seconds at -O3.
+const FUSE_GROUP_STMT_BUDGET: usize = 5_000;
+
+/// Resolve the fusion-group partition for these options: kind-based chains
+/// from [`crate::passes::plan_fusion_groups`], refined with shape checks,
+/// the depth cap, and the per-group statement budget. Returns
+/// all-singletons when fusion is off or the emission mode cannot stream
+/// rows: the loop form and full unroll keep their whole-plane walks, and
+/// copy-mode padding materializes whole padded planes by definition.
+fn fusion_groups(model: &Model, shapes: &[Shape], opts: &CodegenOptions) -> Vec<crate::passes::FusionGroup> {
+    use crate::passes::FusionGroup;
+    let n = model.layers.len();
+    if opts.fuse.max_depth() < 2
+        || !matches!(opts.unroll, Unroll::KeepOuter1 | Unroll::KeepOuter2)
+        || schedule::pad_strategy(opts) != schedule::PadStrategy::Padless
+    {
+        return (0..n).map(FusionGroup::singleton).collect();
+    }
+    let max_depth = opts.fuse.max_depth();
+    let mut out = Vec::new();
+    for chain in crate::passes::plan_fusion_groups(model, usize::MAX) {
+        let mut start = chain.start;
+        let mut acc = 0usize;
+        for i in chain.start..chain.end {
+            // Row streaming needs image-shaped planes on both sides.
+            if shapes[i].rank() != 3 || shapes[i + 1].rank() != 3 {
+                if i > start {
+                    out.push(FusionGroup { start, end: i });
+                }
+                out.push(FusionGroup::singleton(i));
+                start = i + 1;
+                acc = 0;
+                continue;
+            }
+            let cost = fused_layer_cost(&model.layers[i], &shapes[i + 1], opts);
+            if i > start && (i - start >= max_depth || acc + cost > FUSE_GROUP_STMT_BUDGET) {
+                out.push(FusionGroup { start, end: i });
+                start = i;
+                acc = 0;
+            }
+            acc += cost;
+        }
+        if start < chain.end {
+            out.push(FusionGroup { start, end: chain.end });
+        }
+    }
+    out
+}
+
+/// Row-axis [`schedule::AxisPlan`] of every member of a fusion group, in
+/// member order; drives both the demand schedule and ring sizing.
+fn group_row_plans(
+    model: &Model,
+    shapes: &[Shape],
+    group: &crate::passes::FusionGroup,
+) -> Result<Vec<schedule::AxisPlan>> {
+    let mut plans = Vec::with_capacity(group.len());
+    for i in group.start..group.end {
+        let (h_in, h_out) = (shapes[i].h(), shapes[i + 1].h());
+        let plan = match &model.layers[i] {
+            Layer::Conv2D { weights, stride, padding, .. }
+            | Layer::DepthwiseConv2D { weights, stride, padding, .. } => {
+                let k = weights.dims()[0];
+                let (_, pad) = padding.resolve(h_in, k, stride.0)?;
+                schedule::AxisPlan::padless(h_out, stride.0, k, pad, h_in)
+            }
+            Layer::MaxPool2D { pool, stride } | Layer::AvgPool2D { pool, stride } => {
+                schedule::AxisPlan::padless(h_out, stride.0, pool.0, 0, h_in)
+            }
+            Layer::Activation(_) => schedule::AxisPlan::padless(h_out, 1, 1, 0, h_in),
+            other => bail!("layer {} cannot join a fusion group", other.kind_name()),
+        };
+        plans.push(plan);
+    }
+    Ok(plans)
+}
+
+/// Emit one fusion group: replay the demand-driven row schedule, routing
+/// every member's input/output rows through the group input plane, the
+/// per-edge ring buffers, or the group output plane.
+#[allow(clippy::too_many_arguments)]
+fn emit_fused_group(
+    w: &mut CWriter,
+    model: &Model,
+    shapes: &[Shape],
+    group: &crate::passes::FusionGroup,
+    group_src: &str,
+    group_dst: &str,
+    plan: &BufferPlan,
+    opts: &CodegenOptions,
+) -> Result<()> {
+    use schedule::RowMap;
+    let plans = group_row_plans(model, shapes, group)?;
+    let layout = schedule::plan_group_rows(&plans);
+    let members = group.len();
+    for op in &layout.ops {
+        let i = group.start + op.layer;
+        let in_s = &shapes[i];
+        let out_s = &shapes[i + 1];
+        let (src_name, src_map) = if op.layer == 0 {
+            (group_src.to_string(), RowMap::Plane { row_elems: in_s.w() * in_s.c() })
+        } else {
+            let r = find_ring(plan, i - 1)?;
+            (format!("nncg_ring{}", r.layer), RowMap::Ring { rows: r.rows, row_elems: r.row_elems })
+        };
+        let (dst_name, dst_map) = if op.layer == members - 1 {
+            (group_dst.to_string(), RowMap::Plane { row_elems: out_s.w() * out_s.c() })
+        } else {
+            let r = find_ring(plan, i)?;
+            (format!("nncg_ring{}", r.layer), RowMap::Ring { rows: r.rows, row_elems: r.row_elems })
+        };
+        let dst_row_off = dst_map.off(op.row);
+        let ctx = LayerCtx {
+            idx: i,
+            in_shape: in_s,
+            out_shape: out_s,
+            src: &src_name,
+            dst: &dst_name,
+            padbuf: "nncg_pad",
+            opts,
+        };
+        w.line(&format!("/* L{i} {} row {} */", model.layers[i].kind_name(), op.row));
+        match &model.layers[i] {
+            Layer::Conv2D { weights, bias, stride, padding, activation } => {
+                conv::emit_conv_row_fused(
+                    w, &ctx, weights, bias, *stride, *padding, *activation, op.row, src_map,
+                    dst_row_off,
+                )?
+            }
+            Layer::DepthwiseConv2D { weights, bias, stride, padding, activation } => {
+                depthwise::emit_depthwise_row_fused(
+                    w, &ctx, weights, bias, *stride, *padding, *activation, op.row, src_map,
+                    dst_row_off,
+                )?
+            }
+            Layer::MaxPool2D { pool, stride } => {
+                pool::emit_maxpool_row_fused(w, &ctx, *pool, *stride, op.row, src_map, dst_row_off)?
+            }
+            Layer::AvgPool2D { pool, stride } => {
+                depthwise::emit_avgpool_row_fused(w, &ctx, *pool, *stride, op.row, src_map, dst_row_off)?
+            }
+            Layer::Activation(a) => {
+                let src_row_off = src_map.off(plans[op.layer].src_start(op.row));
+                activation::emit_activation_row_fused(w, &ctx, *a, src_row_off, dst_row_off)?
+            }
+            other => bail!("layer {} cannot be emitted in a fusion group", other.kind_name()),
+        }
+    }
+    Ok(())
+}
+
+/// Ring buffer whose producer is global layer `layer`.
+fn find_ring(plan: &BufferPlan, layer: usize) -> Result<&RingInfo> {
+    plan.rings
+        .iter()
+        .find(|r| r.layer == layer)
+        .ok_or_else(|| anyhow::anyhow!("missing ring buffer for layer {layer}"))
+}
+
+fn plan_buffers(
+    model: &Model,
+    shapes: &[Shape],
+    opts: &CodegenOptions,
+    groups: &[crate::passes::FusionGroup],
+) -> Result<BufferPlan> {
     let uses_pad_buffer = schedule::pad_strategy(opts) == schedule::PadStrategy::Copy;
+    let n_layers = model.layers.len();
     let mut main_size = 0usize;
     let mut pad_size = 0usize;
-    for (i, layer) in model.layers.iter().enumerate() {
-        // Every intermediate may land in a scratch buffer (also the first
-        // in-place layer copies x_in into scratch).
-        main_size = main_size.max(shapes[i].numel());
-        main_size = main_size.max(shapes[i + 1].numel());
-        if !uses_pad_buffer {
-            continue;
+    let mut rings = Vec::new();
+    // Liveness-aware ping-pong sizing: scratch only ever holds a group
+    // boundary plane (the final output goes straight to x_out, and fused
+    // intermediates live in their ring buffers instead).
+    for group in groups {
+        if group.end != n_layers {
+            main_size = main_size.max(shapes[group.end].numel());
         }
-        match layer {
-            Layer::Conv2D { weights, stride, padding, .. } => {
-                let (ph, pw) = conv::padded_extent(&shapes[i], weights.dims(), *stride, *padding)?;
-                if (ph, pw) != (shapes[i].h(), shapes[i].w()) {
-                    pad_size = pad_size.max(ph * pw * shapes[i].c());
+        if group.len() > 1 {
+            let plans = group_row_plans(model, shapes, group)?;
+            let layout = schedule::plan_group_rows(&plans);
+            for e in 0..group.len() - 1 {
+                let out_s = &shapes[group.start + e + 1];
+                let row_elems = out_s.w() * out_s.c();
+                let rows = layout.ring_rows[e];
+                let mut floats = rows * row_elems;
+                if opts.use_aligned() {
+                    floats = round_to_vec(floats);
                 }
+                rings.push(RingInfo { layer: group.start + e, rows, row_elems, floats });
             }
-            Layer::DepthwiseConv2D { weights, stride, padding, .. } => {
-                let d = weights.dims();
-                let pseudo = [d[0], d[1], d[2], d[2]];
-                let (ph, pw) = conv::padded_extent(&shapes[i], &pseudo, *stride, *padding)?;
-                if (ph, pw) != (shapes[i].h(), shapes[i].w()) {
-                    pad_size = pad_size.max(ph * pw * shapes[i].c());
+        }
+    }
+    if uses_pad_buffer {
+        for (i, layer) in model.layers.iter().enumerate() {
+            match layer {
+                Layer::Conv2D { weights, stride, padding, .. } => {
+                    let (ph, pw) = conv::padded_extent(&shapes[i], weights.dims(), *stride, *padding)?;
+                    if (ph, pw) != (shapes[i].h(), shapes[i].w()) {
+                        pad_size = pad_size.max(ph * pw * shapes[i].c());
+                    }
                 }
+                Layer::DepthwiseConv2D { weights, stride, padding, .. } => {
+                    let d = weights.dims();
+                    let pseudo = [d[0], d[1], d[2], d[2]];
+                    let (ph, pw) = conv::padded_extent(&shapes[i], &pseudo, *stride, *padding)?;
+                    if (ph, pw) != (shapes[i].h(), shapes[i].w()) {
+                        pad_size = pad_size.max(ph * pw * shapes[i].c());
+                    }
+                }
+                _ => {}
             }
-            _ => {}
         }
     }
     if opts.use_aligned() {
         main_size = round_to_vec(main_size);
         pad_size = round_to_vec(pad_size);
     }
-    Ok(BufferPlan { main_size, pad_size })
+    Ok(BufferPlan { main_size, pad_size, rings })
+}
+
+/// Static scratch footprint of the generated C. The paper's
+/// resource-constrained targets budget RAM as tightly as cycles; ring line
+/// buffers shrink fused models' peak static scratch from O(H·W·C) per
+/// intermediate to O(k_h·W·C) per fused edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ScratchReport {
+    /// Floats per ping-pong scratch buffer (two are declared).
+    pub main_floats: usize,
+    /// Floats in the pad-copy buffer (0 under padless emission).
+    pub pad_floats: usize,
+    /// Total floats across all ring line buffers.
+    pub ring_floats: usize,
+    /// Number of ring buffers (fused interior edges).
+    pub ring_count: usize,
+}
+
+impl ScratchReport {
+    /// Total static scratch bytes the generated file declares.
+    pub fn total_bytes(&self) -> usize {
+        (2 * self.main_floats.max(1) + self.pad_floats + self.ring_floats) * 4
+    }
+}
+
+/// Compute the static-buffer plan for a model under `opts` without
+/// generating code (the ablation bench's memory-footprint column).
+pub fn scratch_report(model: &Model, opts: &CodegenOptions) -> Result<ScratchReport> {
+    let model = crate::passes::optimize(model.clone())?;
+    let shapes = model.infer_shapes()?;
+    let groups = fusion_groups(&model, &shapes, opts);
+    let plan = plan_buffers(&model, &shapes, opts, &groups)?;
+    Ok(ScratchReport {
+        main_floats: plan.main_size,
+        pad_floats: plan.pad_size,
+        ring_floats: plan.rings.iter().map(|r| r.floats).sum(),
+        ring_count: plan.rings.len(),
+    })
+}
+
+/// Per-cell statement cost of one layer's inner body (one statement per
+/// vector group plus one per scalar lane and tap) — shared by the cost
+/// guard and the fusion planner's statement budget.
+fn layer_body_cost(layer: &Layer, out: &Shape, isa: Isa) -> usize {
+    use simd::ChannelSchedule;
+    match layer {
+        Layer::Conv2D { weights, .. } => {
+            let d = weights.dims();
+            d[0] * d[1] * d[2] * ChannelSchedule::for_channels(isa, d[3]).cost_per_tap()
+        }
+        Layer::MaxPool2D { pool, .. } | Layer::AvgPool2D { pool, .. } => {
+            pool.0 * pool.1 * ChannelSchedule::for_channels(isa, out.c()).cost_per_tap()
+        }
+        Layer::DepthwiseConv2D { weights, .. } => {
+            let d = weights.dims();
+            d[0] * d[1] * ChannelSchedule::for_channels(isa, d[2]).cost_per_tap()
+        }
+        Layer::Dense { weights, .. } => weights.numel(),
+        _ => out.numel().max(1),
+    }
+}
+
+/// Statements a layer contributes when emitted as fused rows: the row
+/// schedule is unrolled, columns keep their loop per the unroll level.
+fn fused_layer_cost(layer: &Layer, out: &Shape, opts: &CodegenOptions) -> usize {
+    let body = layer_body_cost(layer, out, opts.isa);
+    match layer {
+        Layer::Conv2D { .. }
+        | Layer::DepthwiseConv2D { .. }
+        | Layer::MaxPool2D { .. }
+        | Layer::AvgPool2D { .. } => {
+            let cols = if opts.unroll.keeps_cols() { 1 } else { out.w() };
+            body * out.h() * cols
+        }
+        // Elementwise rows: fusing does not change the total work.
+        _ => body,
+    }
 }
 
 /// Rough statement-count estimate for the cost guard.
 fn estimate_statements(model: &Model, opts: &CodegenOptions) -> Result<usize> {
-    use simd::ChannelSchedule;
     let shapes = model.infer_shapes()?;
+    let groups = fusion_groups(model, &shapes, opts);
+    let mut fused = vec![false; model.layers.len()];
+    for g in &groups {
+        if g.len() > 1 {
+            for f in fused.iter_mut().take(g.end).skip(g.start) {
+                *f = true;
+            }
+        }
+    }
     let mut total = 0usize;
     for (i, layer) in model.layers.iter().enumerate() {
         let out = &shapes[i + 1];
-        let body = match layer {
-            Layer::Conv2D { weights, .. } => {
-                let d = weights.dims();
-                let taps = d[0] * d[1] * d[2];
-                // One statement per vector group + one per scalar lane.
-                taps * ChannelSchedule::for_channels(opts.isa, d[3]).cost_per_tap()
-            }
-            Layer::MaxPool2D { pool, .. } | Layer::AvgPool2D { pool, .. } => {
-                pool.0 * pool.1 * ChannelSchedule::for_channels(opts.isa, out.c()).cost_per_tap()
-            }
-            Layer::DepthwiseConv2D { weights, .. } => {
-                let d = weights.dims();
-                d[0] * d[1] * ChannelSchedule::for_channels(opts.isa, d[2]).cost_per_tap()
-            }
-            Layer::Dense { weights, .. } => weights.numel(),
-            _ => out.numel().max(1),
-        };
+        let body = layer_body_cost(layer, out, opts.isa);
         // Spatial extent only exists for image-shaped layers; dense/flat
         // layers behave as a single cell.
         let (rows, cols) = match layer {
@@ -707,11 +1077,15 @@ fn estimate_statements(model: &Model, opts: &CodegenOptions) -> Result<usize> {
             | Layer::DepthwiseConv2D { .. } => (out.h(), out.w()),
             _ => (1, 1),
         };
-        total += match opts.unroll {
-            Unroll::None => 16, // constant-size loop nest
-            Unroll::KeepOuter2 => body,
-            Unroll::KeepOuter1 => body * cols.max(1),
-            Unroll::Full => body * rows * cols,
+        total += if fused[i] {
+            fused_layer_cost(layer, out, opts)
+        } else {
+            match opts.unroll {
+                Unroll::None => 16, // constant-size loop nest
+                Unroll::KeepOuter2 => body,
+                Unroll::KeepOuter1 => body * cols.max(1),
+                Unroll::Full => body * rows * cols,
+            }
         };
     }
     Ok(total)
@@ -835,9 +1209,20 @@ mod tests {
     /// all round-trip through these names).
     #[test]
     fn option_enum_names_round_trip() {
-        for isa in [Isa::Generic, Isa::Sse3, Isa::Avx2, Isa::Neon] {
+        for isa in [Isa::Generic, Isa::Sse3, Isa::Avx2, Isa::Neon, Isa::NeonVfpv3] {
             assert_eq!(Isa::from_name(isa.name()), Some(isa));
         }
+        let mut fuses = vec![FuseMode::Auto, FuseMode::Off];
+        for n in 2..=8 {
+            fuses.push(FuseMode::Depth(n));
+        }
+        for f in fuses {
+            assert_eq!(FuseMode::from_name(&f.name()), Some(f), "{}", f.name());
+        }
+        assert_eq!(FuseMode::from_name("1"), Some(FuseMode::Off));
+        assert_eq!(FuseMode::from_name("0"), None);
+        assert_eq!(FuseMode::from_name("9"), None);
+        assert_eq!(FuseMode::from_name("rings"), None);
         for u in [Unroll::None, Unroll::KeepOuter2, Unroll::KeepOuter1, Unroll::Full] {
             assert_eq!(Unroll::from_name(u.name()), Some(u));
         }
@@ -871,6 +1256,98 @@ mod tests {
         assert_eq!(Isa::from_name("avx512"), None);
         assert_eq!(AlignMode::from_name("force"), None);
         assert_eq!(ConstMode::from_name("rom"), None);
+    }
+
+    #[test]
+    fn neon_vfpv3_uses_nonfused_multiply_accumulate() {
+        let opts = CodegenOptions { isa: Isa::NeonVfpv3, ..Default::default() };
+        // Same Array-only constant rule as mainline NEON.
+        assert_eq!(opts.effective_const_mode(), ConstMode::Array);
+        for name in zoo::PAPER_MODELS {
+            let src = gen(name, &opts);
+            assert!(src.contains("#include <arm_neon.h>"), "{name}");
+            assert!(src.contains("float32x4_t"), "{name}");
+            assert!(src.contains("vmlaq_f32"), "{name}: pre-VFPv4 targets need vmlaq");
+            assert!(!src.contains("vfmaq_f32"), "{name}: vfmaq_f32 needs VFPv4");
+            assert!(!src.contains("vaddvq_f32"), "{name}: vaddvq_f32 is AArch64-only");
+            assert!(!src.contains("_mm"), "{name}: x86 intrinsics must not leak");
+            assert_eq!(src.matches('{').count(), src.matches('}').count(), "{name}");
+        }
+    }
+
+    #[test]
+    fn fused_emission_declares_ring_buffers_and_no_runtime_modulo() {
+        let opts = CodegenOptions { fuse: FuseMode::Auto, ..CodegenOptions::sse3() };
+        let src = gen("ball", &opts);
+        // Post-optimize ball: [conv8, pool, conv12] fuse; conv2+softmax
+        // head stays whole-plane.
+        assert!(src.contains("/* fused group: layers 0..2"), "missing fused group marker");
+        assert!(src.contains("float nncg_ring0["), "missing ring buffer for layer 0");
+        assert!(src.contains("float nncg_ring1["), "missing ring buffer for layer 1");
+        assert!(!src.contains("nncg_pad"), "fusion requires padless emission");
+        // Ring slot arithmetic is resolved at generation time (no runtime %).
+        assert!(!src.contains('%'), "fused output must contain no runtime modulo");
+        assert_eq!(src.matches('{').count(), src.matches('}').count());
+        // The default stays unfused and structurally unchanged.
+        let plain = gen("ball", &CodegenOptions::sse3());
+        assert!(!plain.contains("nncg_ring"));
+        assert!(!plain.contains("fused group"));
+    }
+
+    #[test]
+    fn fuse_depth_caps_group_size() {
+        let opts = CodegenOptions { fuse: FuseMode::Depth(2), ..CodegenOptions::sse3() };
+        let src = gen("ball", &opts);
+        assert!(src.contains("/* fused group: layers 0..1"), "depth 2 must cap the chain");
+        assert!(src.contains("float nncg_ring0["));
+        assert!(!src.contains("nncg_ring1"), "a depth-2 group has a single interior edge");
+    }
+
+    #[test]
+    fn fused_generates_balanced_for_all_paper_models_isas_and_unrolls() {
+        for name in zoo::PAPER_MODELS {
+            for unroll in [Unroll::KeepOuter2, Unroll::KeepOuter1] {
+                for isa in [Isa::Generic, Isa::Sse3, Isa::Avx2, Isa::Neon] {
+                    let opts =
+                        CodegenOptions { isa, unroll, fuse: FuseMode::Auto, ..Default::default() };
+                    let src = gen(name, &opts);
+                    let open = src.matches('{').count();
+                    let close = src.matches('}').count();
+                    assert_eq!(open, close, "{name} {}: unbalanced braces", opts.tag());
+                }
+            }
+        }
+        // Loop form and full unroll silently fall back to whole-plane
+        // emission (no ring buffers, still correct structure).
+        for unroll in [Unroll::None, Unroll::Full] {
+            let opts = CodegenOptions { unroll, fuse: FuseMode::Auto, ..CodegenOptions::sse3() };
+            let src = gen("ball", &opts);
+            assert!(!src.contains("nncg_ring"), "{}: no streaming outside kept-row unrolls", opts.tag());
+        }
+    }
+
+    #[test]
+    fn scratch_report_shrinks_under_fusion() {
+        for name in zoo::PAPER_MODELS {
+            let m = zoo::by_name(name).unwrap().with_random_weights(5);
+            let unfused = scratch_report(&m, &CodegenOptions::sse3()).unwrap();
+            let fused = scratch_report(
+                &m,
+                &CodegenOptions { fuse: FuseMode::Auto, ..CodegenOptions::sse3() },
+            )
+            .unwrap();
+            assert_eq!(unfused.ring_count, 0);
+            assert!(fused.ring_count >= 1, "{name}: expected at least one fused group");
+            assert!(
+                fused.total_bytes() < unfused.total_bytes(),
+                "{name}: fused {} must beat unfused {}",
+                fused.total_bytes(),
+                unfused.total_bytes()
+            );
+            // Every ring buffer together stays below one whole-plane
+            // ping-pong buffer: O(k_h*W*C) vs O(H*W*C).
+            assert!(fused.ring_floats < unfused.main_floats, "{name}");
+        }
     }
 
     #[test]

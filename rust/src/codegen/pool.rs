@@ -6,7 +6,7 @@
 //! The scalar max uses the ternary operator (P2 — conditional moves).
 
 use super::cwriter::CWriter;
-use super::schedule;
+use super::schedule::{self, RowMap};
 use super::simd::ChannelSchedule;
 use super::{LayerCtx, Unroll};
 use anyhow::Result;
@@ -71,7 +71,7 @@ pub(crate) fn emit_maxpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
             w.open(&format!("for (i = 0; i < {h_out}; i++)"));
             w.open(&format!("for (j = 0; j < {w_out}; j++)"));
             emit_bases(w, &geom);
-            emit_window(w, &geom, &sched, "s", 0, "d", 0);
+            emit_window(w, &geom, &sched, "s", 0, "d", 0, &linear_rows(&geom));
             w.close();
             w.close();
         }
@@ -80,7 +80,7 @@ pub(crate) fn emit_maxpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
             w.line(&format!("const float *s = {} + i*{};", geom.src, stride.0 * w_in * c));
             w.line(&format!("float *d = {} + i*{};", geom.dst, w_out * c));
             for j in 0..w_out {
-                emit_window(w, &geom, &sched, "s", j * stride.1 * c, "d", j * c);
+                emit_window(w, &geom, &sched, "s", j * stride.1 * c, "d", j * c, &linear_rows(&geom));
             }
             w.close();
         }
@@ -95,9 +95,65 @@ pub(crate) fn emit_maxpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
                         (i * stride.0 * w_in + j * stride.1) * c,
                         &geom.dst.clone(),
                         (i * w_out + j) * c,
+                        &linear_rows(&geom),
                     );
                 }
             }
+        }
+    }
+    Ok(())
+}
+
+/// Window-row offsets of a whole-plane walk (rows at the linear stride).
+fn linear_rows(g: &PoolGeom) -> Vec<usize> {
+    (0..g.pool.0).map(|n| n * g.w_in * g.c).collect()
+}
+
+/// One constant-coordinate output row of a max pool inside a row-streaming
+/// fusion group; window rows are fetched through `src_map` (the producer's
+/// ring buffer or the group input plane).
+pub(crate) fn emit_maxpool_row_fused(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    pool: (usize, usize),
+    stride: (usize, usize),
+    out_row: usize,
+    src_map: RowMap,
+    dst_row_off: usize,
+) -> Result<()> {
+    let (w_out, c) = (ctx.out_shape.w(), ctx.out_shape.c());
+    let w_in = ctx.in_shape.w();
+    let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
+    let geom = PoolGeom {
+        src: ctx.src.to_string(),
+        dst: ctx.dst.to_string(),
+        pool,
+        stride,
+        w_in,
+        w_out,
+        c,
+        src_aligned: ctx.opts.use_aligned() && schedule::static_buf(ctx.src),
+        dst_aligned: ctx.opts.use_aligned() && schedule::static_buf(ctx.dst),
+    };
+    let row_offs: Vec<usize> = (0..pool.0).map(|n| src_map.off(out_row * stride.0 + n)).collect();
+    if ctx.opts.unroll.keeps_cols() {
+        w.open(&format!("for (j = 0; j < {w_out}; j++)"));
+        w.line(&format!("const float *s = {} + j*{};", geom.src, stride.1 * c));
+        w.line(&format!("float *d = {} + {} + j*{};", geom.dst, dst_row_off, c));
+        emit_window(w, &geom, &sched, "s", 0, "d", 0, &row_offs);
+        w.close();
+    } else {
+        for j in 0..w_out {
+            emit_window(
+                w,
+                &geom,
+                &sched,
+                &geom.src.clone(),
+                j * stride.1 * c,
+                &geom.dst.clone(),
+                dst_row_off + j * c,
+                &row_offs,
+            );
         }
     }
     Ok(())
@@ -122,6 +178,9 @@ fn emit_bases(w: &mut CWriter, g: &PoolGeom) {
 }
 
 /// Fully unrolled window max for one output cell, per lane segment.
+/// `row_offs[n]` is the source offset of window row `n` (linear for plane
+/// walks, resolved ring slots for fused rows).
+#[allow(clippy::too_many_arguments)]
 fn emit_window(
     w: &mut CWriter,
     g: &PoolGeom,
@@ -130,21 +189,23 @@ fn emit_window(
     s_off: usize,
     d_name: &str,
     d_off: usize,
+    row_offs: &[usize],
 ) {
     for seg in &sched.segments {
         if let Some(v) = seg.vec {
             let base_al = g.c % v.width == 0;
             for k0 in (seg.start..seg.end()).step_by(v.width) {
-                let s_al = g.src_aligned && base_al && (s_off + k0) % v.width == 0;
+                let off0 = s_off + row_offs[0] + k0;
+                let s_al = g.src_aligned && base_al && off0 % v.width == 0;
                 let d_al = g.dst_aligned && base_al && (d_off + k0) % v.width == 0;
                 w.open("");
-                w.line(&format!("{} v = {};", v.ty, v.load(&format!("{s_name} + {}", s_off + k0), s_al)));
+                w.line(&format!("{} v = {};", v.ty, v.load(&format!("{s_name} + {off0}"), s_al)));
                 for n in 0..g.pool.0 {
                     for m in 0..g.pool.1 {
                         if n == 0 && m == 0 {
                             continue;
                         }
-                        let off = s_off + (n * g.w_in + m) * g.c + k0;
+                        let off = s_off + row_offs[n] + m * g.c + k0;
                         w.line(&v.max("v", &v.load(&format!("{s_name} + {off}"), s_al && off % v.width == 0)));
                     }
                 }
@@ -154,14 +215,14 @@ fn emit_window(
         } else {
             for k in seg.start..seg.end() {
                 w.open("");
-                w.line(&format!("float v = {s_name}[{}];", s_off + k));
+                w.line(&format!("float v = {s_name}[{}];", s_off + row_offs[0] + k));
                 w.line("float t;");
                 for n in 0..g.pool.0 {
                     for m in 0..g.pool.1 {
                         if n == 0 && m == 0 {
                             continue;
                         }
-                        let off = s_off + (n * g.w_in + m) * g.c + k;
+                        let off = s_off + row_offs[n] + m * g.c + k;
                         w.line(&format!("t = {s_name}[{off}];"));
                         w.line("v = t > v ? t : v;");
                     }

@@ -172,6 +172,114 @@ impl AxisPlan {
     }
 }
 
+/// Generation-time mapping from a logical plane row index to an element
+/// offset inside the buffer holding it: whole planes store rows linearly;
+/// ring line buffers store row `r` in slot `r % rows`. All modular
+/// arithmetic happens here, at generation time — the emitted C only ever
+/// sees resolved integer offsets (no runtime `%`).
+#[derive(Debug, Clone, Copy)]
+pub(crate) enum RowMap {
+    Plane { row_elems: usize },
+    Ring { rows: usize, row_elems: usize },
+}
+
+impl RowMap {
+    pub fn off(&self, row: usize) -> usize {
+        match *self {
+            RowMap::Plane { row_elems } => row * row_elems,
+            RowMap::Ring { rows, row_elems } => (row % rows.max(1)) * row_elems,
+        }
+    }
+}
+
+/// One step of a fusion group's row schedule: compute output row `row` of
+/// group member `layer` (index within the group).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct RowOp {
+    pub layer: usize,
+    pub row: usize,
+}
+
+/// A fusion group's resolved row schedule plus the ring-buffer height of
+/// every interior edge (`ring_rows[e]` holds the output of group member
+/// `e`, read by member `e + 1`).
+#[derive(Debug, Clone)]
+pub(crate) struct GroupLayout {
+    pub ops: Vec<RowOp>,
+    pub ring_rows: Vec<usize>,
+}
+
+/// Demand-driven row schedule for a fusion group described by one row-axis
+/// [`AxisPlan`] per member (member 0 reads the group's input plane). Every
+/// member's rows are produced in strictly increasing order, each exactly
+/// once, and a row is produced only when the next consumer row needs it —
+/// so the set of simultaneously-live producer rows stays bounded by the
+/// consumer's kernel window.
+pub(crate) fn schedule_group_rows(plans: &[AxisPlan]) -> Vec<RowOp> {
+    fn produce(j: usize, r: usize, plans: &[AxisPlan], next: &mut [usize], ops: &mut Vec<RowOp>) {
+        while next[j] <= r {
+            let rr = next[j];
+            if j > 0 {
+                let (k0, k1) = plans[j].window(rr);
+                if k1 > k0 {
+                    let last_needed = plans[j].src_start(rr) + (k1 - k0) - 1;
+                    produce(j - 1, last_needed, plans, next, ops);
+                }
+            }
+            ops.push(RowOp { layer: j, row: rr });
+            next[j] = rr + 1;
+        }
+    }
+    let n = plans.len();
+    let mut next = vec![0usize; n];
+    let mut ops = Vec::new();
+    for r in 0..plans[n - 1].out {
+        produce(n - 1, r, plans, &mut next, &mut ops);
+    }
+    ops
+}
+
+/// Smallest ring height for edge `e` such that no row is overwritten
+/// (slot `row % rows`) before its last read: for every produced row `q`,
+/// the row `q + R` sharing its slot must be produced only after `q`'s
+/// final read in the schedule.
+fn ring_rows_for_edge(ops: &[RowOp], plans: &[AxisPlan], e: usize) -> usize {
+    let produced = plans[e].out;
+    let consumer = &plans[e + 1];
+    let mut t_produce = vec![usize::MAX; produced];
+    let mut t_last_read = vec![0usize; produced];
+    for (t, op) in ops.iter().enumerate() {
+        if op.layer == e {
+            t_produce[op.row] = t;
+        } else if op.layer == e + 1 {
+            let (k0, k1) = consumer.window(op.row);
+            let start = consumer.src_start(op.row);
+            for q in start..start + (k1 - k0) {
+                t_last_read[q] = t;
+            }
+        }
+    }
+    (1..=produced)
+        .find(|&r| {
+            (0..produced).all(|q| {
+                q + r >= produced
+                    || t_produce[q + r] == usize::MAX
+                    || t_last_read[q] == 0
+                    || t_produce[q + r] > t_last_read[q]
+            })
+        })
+        .unwrap_or_else(|| produced.max(1))
+}
+
+/// Schedule a fusion group and size every interior ring buffer.
+pub(crate) fn plan_group_rows(plans: &[AxisPlan]) -> GroupLayout {
+    let ops = schedule_group_rows(plans);
+    let ring_rows = (0..plans.len().saturating_sub(1))
+        .map(|e| ring_rows_for_edge(&ops, plans, e))
+        .collect();
+    GroupLayout { ops, ring_rows }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -281,6 +389,130 @@ mod tests {
         assert!(static_buf("nncg_pad"));
         assert!(!static_buf("x_in"));
         assert!(!static_buf("x_out"));
+    }
+
+    #[test]
+    fn row_schedule_conv_then_pool_interleaves() {
+        // conv 3x3 s1 Same on 8 rows (out 8) feeding a 2x2 s2 pool (out 4).
+        let conv = AxisPlan::padless(8, 1, 3, 1, 8);
+        let pool = AxisPlan::padless(4, 2, 2, 0, 8);
+        let layout = plan_group_rows(&[conv, pool]);
+        // Pool row 0 needs conv rows 0..2, pool row 1 needs 2..4, ...
+        let ops = &layout.ops;
+        assert_eq!(&ops[..3], &[
+            RowOp { layer: 0, row: 0 },
+            RowOp { layer: 0, row: 1 },
+            RowOp { layer: 1, row: 0 },
+        ]);
+        // Every conv row produced exactly once, in order.
+        let conv_rows: Vec<usize> = ops.iter().filter(|o| o.layer == 0).map(|o| o.row).collect();
+        assert_eq!(conv_rows, (0..8).collect::<Vec<_>>());
+        let pool_rows: Vec<usize> = ops.iter().filter(|o| o.layer == 1).map(|o| o.row).collect();
+        assert_eq!(pool_rows, (0..4).collect::<Vec<_>>());
+        // Non-overlapping stride-2 windows: two live conv rows suffice.
+        assert_eq!(layout.ring_rows, vec![2]);
+    }
+
+    #[test]
+    fn ring_rows_match_kernel_overlap() {
+        // stride-1 3x3 consumer: three conv rows live at once.
+        let a = AxisPlan::padless(8, 1, 3, 1, 8);
+        let b = AxisPlan::padless(8, 1, 3, 1, 8);
+        let layout = plan_group_rows(&[a, b]);
+        assert_eq!(layout.ring_rows, vec![3]);
+        // A consumer whose kernel spans the whole input degenerates to a
+        // full-plane ring (correct, no saving).
+        let c = AxisPlan::padless(4, 1, 1, 0, 4);
+        let head = AxisPlan::padless(1, 1, 4, 0, 4);
+        let layout = plan_group_rows(&[c, head]);
+        assert_eq!(layout.ring_rows, vec![4]);
+    }
+
+    #[test]
+    fn row_map_resolves_modulo_at_generation_time() {
+        let plane = RowMap::Plane { row_elems: 10 };
+        assert_eq!(plane.off(7), 70);
+        let ring = RowMap::Ring { rows: 3, row_elems: 10 };
+        assert_eq!(ring.off(0), 0);
+        assert_eq!(ring.off(2), 20);
+        assert_eq!(ring.off(3), 0);
+        assert_eq!(ring.off(7), 10);
+    }
+
+    /// Property (issue acceptance): across random stride/kernel/pad chains,
+    /// replaying the schedule against per-edge ring buffers of the planned
+    /// height never reads a slot that no longer holds the needed row, rows
+    /// are produced in order exactly once, and the final plane completes.
+    #[test]
+    fn ring_buffer_rows_never_alias_live_rows() {
+        let mut rng = crate::util::XorShift64::new(0xA11A5);
+        let mut checked = 0usize;
+        for trial in 0..400 {
+            let mut h = 4 + rng.below(20);
+            let depth = 2 + rng.below(4);
+            let mut plans: Vec<AxisPlan> = Vec::new();
+            for _ in 0..depth {
+                let k = 1 + rng.below(4.min(h));
+                let s = 1 + rng.below(3);
+                let (out, pad) = if rng.below(2) == 0 {
+                    // Same-style: out = ceil(h/s), centered pad.
+                    let out = (h + s - 1) / s;
+                    let total = ((out - 1) * s + k).saturating_sub(h);
+                    (out, total / 2)
+                } else {
+                    // Valid-style geometry.
+                    if h < k {
+                        break;
+                    }
+                    ((h - k) / s + 1, 0)
+                };
+                if out == 0 {
+                    break;
+                }
+                plans.push(AxisPlan::padless(out, s, k, pad, h));
+                h = out;
+                if h < 2 {
+                    break;
+                }
+            }
+            if plans.len() < 2 {
+                continue;
+            }
+            checked += 1;
+            let layout = plan_group_rows(&plans);
+            let n = plans.len();
+            let mut slots: Vec<Vec<Option<usize>>> =
+                (0..n - 1).map(|e| vec![None; layout.ring_rows[e]]).collect();
+            let mut produced = vec![0usize; n];
+            for op in &layout.ops {
+                if op.layer > 0 {
+                    let e = op.layer - 1;
+                    let r = layout.ring_rows[e];
+                    let (k0, k1) = plans[op.layer].window(op.row);
+                    let start = plans[op.layer].src_start(op.row);
+                    for q in start..start + (k1 - k0) {
+                        assert_eq!(
+                            slots[e][q % r],
+                            Some(q),
+                            "trial {trial}: member {} row {} reads an aliased ring slot",
+                            op.layer,
+                            op.row
+                        );
+                    }
+                }
+                assert_eq!(
+                    produced[op.layer], op.row,
+                    "trial {trial}: rows must be produced in order exactly once"
+                );
+                produced[op.layer] = op.row + 1;
+                if op.layer < n - 1 {
+                    let r = layout.ring_rows[op.layer];
+                    slots[op.layer][op.row % r] = Some(op.row);
+                }
+            }
+            assert_eq!(produced[n - 1], plans[n - 1].out, "trial {trial}: final plane incomplete");
+        }
+        assert!(checked > 100, "property exercised only {checked} chains");
     }
 
     #[test]

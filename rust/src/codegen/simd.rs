@@ -126,6 +126,27 @@ const NEON_OPS: OpTable = OpTable {
     reduce_add: "vaddvq_f32($a)",
 };
 
+/// Pre-VFPv4 ARMv7 row: `vfmaq_f32` does not exist there, so the
+/// multiply-accumulate is the classic non-fused `vmlaq_f32` (same
+/// `$c += $a * $b` contract, two roundings instead of one — bit-compatible
+/// with the SSE compose-add-mul scheme). `vaddvq_f32` is AArch64-only, so
+/// the reduction folds pairwise through `vpadd_f32` instead.
+const NEON_VFPV3_OPS: OpTable = OpTable {
+    load: "vld1q_f32($a)",
+    loadu: "vld1q_f32($a)",
+    store: "vst1q_f32($a, $b);",
+    storeu: "vst1q_f32($a, $b);",
+    set1: "vdupq_n_f32($a)",
+    setr: None,
+    add: "vaddq_f32($a, $b)",
+    mul: "vmulq_f32($a, $b)",
+    max: "vmaxq_f32($a, $b)",
+    zero: "vdupq_n_f32(0.0f)",
+    fmadd: Some("$c = vmlaq_f32($c, $a, $b);"),
+    reduce_add: "vget_lane_f32(vpadd_f32(vpadd_f32(vget_low_f32($a), vget_high_f32($a)), \
+                 vpadd_f32(vget_low_f32($a), vget_high_f32($a))), 0)",
+};
+
 /// One vector flavor: register type + its intrinsic vocabulary.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) struct VecSpec {
@@ -145,6 +166,8 @@ pub(crate) const AVX2: VecSpec =
     VecSpec { width: 8, ty: "__m256", header_name: "immintrin.h", ops: AVX2_OPS };
 pub(crate) const NEON: VecSpec =
     VecSpec { width: 4, ty: "float32x4_t", header_name: "arm_neon.h", ops: NEON_OPS };
+pub(crate) const NEON_VFPV3: VecSpec =
+    VecSpec { width: 4, ty: "float32x4_t", header_name: "arm_neon.h", ops: NEON_VFPV3_OPS };
 
 impl VecSpec {
     /// Pick the widest vector flavor usable for a channel count under an
@@ -157,6 +180,7 @@ impl VecSpec {
             Isa::Generic => None,
             Isa::Sse3 => (channels % 4 == 0).then_some(SSE),
             Isa::Neon => (channels % 4 == 0).then_some(NEON),
+            Isa::NeonVfpv3 => (channels % 4 == 0).then_some(NEON_VFPV3),
             Isa::Avx2 => {
                 if channels % 8 == 0 {
                     Some(AVX2)
@@ -176,6 +200,7 @@ impl VecSpec {
             Isa::Sse3 => &[SSE],
             Isa::Avx2 => &[AVX2, SSE],
             Isa::Neon => &[NEON],
+            Isa::NeonVfpv3 => &[NEON_VFPV3],
         }
     }
 
@@ -401,6 +426,32 @@ mod tests {
     #[should_panic]
     fn neon_setr_is_unreachable_by_contract() {
         let _ = NEON.setr(&[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn neon_vfpv3_vocabulary_uses_nonfused_mla() {
+        assert_eq!(NEON_VFPV3.ty, "float32x4_t");
+        assert_eq!(NEON_VFPV3.header(), "arm_neon.h");
+        // vmlaq_f32(acc, a, b) = acc + a*b, two roundings (no VFPv4 fuse).
+        assert_eq!(NEON_VFPV3.mul_add("acc", "t", "wv"), "acc = vmlaq_f32(acc, t, wv);");
+        assert!(!NEON_VFPV3.mul_add("acc", "t", "wv").contains("vfmaq"));
+        // Loads/stores/max share the alignment-agnostic NEON forms.
+        assert_eq!(NEON_VFPV3.load("s + 4", true), "vld1q_f32(s + 4)");
+        assert_eq!(NEON_VFPV3.storeu("d", "a0"), "vst1q_f32(d, a0);");
+        assert_eq!(NEON_VFPV3.max("a", "b"), "a = vmaxq_f32(a, b);");
+        assert!(NEON_VFPV3.ops.setr.is_none());
+        // ARMv7 has no vaddvq_f32: the reduction folds through vpadd_f32.
+        let red = NEON_VFPV3.reduce_add("v");
+        assert!(red.contains("vpadd_f32"));
+        assert!(red.contains("vget_low_f32(v)"));
+        assert!(!red.contains("vaddvq"));
+        // Schedules mirror the NEON shape (4-wide groups + scalar tail).
+        let s = ChannelSchedule::for_channels(Isa::NeonVfpv3, 6);
+        assert_eq!(s.segments.len(), 2);
+        assert_eq!(s.segments[0].vec.unwrap().width, 4);
+        assert!(s.segments[1].vec.is_none());
+        assert_eq!(VecSpec::for_channels(Isa::NeonVfpv3, 8).unwrap().ty, "float32x4_t");
+        assert_eq!(VecSpec::for_channels(Isa::NeonVfpv3, 6), None);
     }
 
     #[test]

@@ -2,7 +2,7 @@
 
 use super::{build_engine, default_artifacts_dir, default_weights_dir, default_work_dir, load_model};
 use crate::bench_harness::{bench, BenchConfig, Stats, Table};
-use crate::codegen::{AlignMode, CodegenOptions, Isa, PadMode, TileMode};
+use crate::codegen::{AlignMode, CodegenOptions, FuseMode, Isa, PadMode, TileMode};
 use crate::platform::{paper_platforms, GpuModel};
 use crate::runtime::EngineKind;
 use crate::tensor::Tensor;
@@ -274,21 +274,26 @@ pub struct AblationRow {
     pub p95_us: f64,
     /// Size of the generated C source, bytes.
     pub c_bytes: usize,
+    /// Peak static scratch RAM the generated file declares (ping-pong
+    /// planes + pad buffer + ring line buffers), bytes.
+    pub static_bytes: usize,
 }
 
 /// The emission variants the ablation sweeps (all SSE, outer loops kept):
-/// pad-copy vs padless × untiled vs tiled, plus an aligned-vs-unaligned
-/// axis and a 1-D-vs-2-D register-tile axis on the fast configuration.
-pub const ABLATION_VARIANTS: [(&str, PadMode, TileMode, AlignMode); 6] = [
-    ("pad-copy+untiled", PadMode::Copy, TileMode::Off, AlignMode::Auto),
-    ("padless+untiled", PadMode::Padless, TileMode::Off, AlignMode::Auto),
-    ("pad-copy+tiled", PadMode::Copy, TileMode::Auto, AlignMode::Auto),
-    ("padless+tiled", PadMode::Padless, TileMode::Auto, AlignMode::Auto),
-    ("padless+tiled+unaligned", PadMode::Padless, TileMode::Auto, AlignMode::Off),
-    ("padless+tiled-2d", PadMode::Padless, TileMode::Fixed2D(2, 4), AlignMode::Auto),
+/// pad-copy vs padless × untiled vs tiled, an aligned-vs-unaligned axis, a
+/// 1-D-vs-2-D register-tile axis, and a fused-vs-unfused axis (row-
+/// streaming fusion with ring line buffers) on the fast configuration.
+pub const ABLATION_VARIANTS: [(&str, PadMode, TileMode, AlignMode, FuseMode); 7] = [
+    ("pad-copy+untiled", PadMode::Copy, TileMode::Off, AlignMode::Auto, FuseMode::Off),
+    ("padless+untiled", PadMode::Padless, TileMode::Off, AlignMode::Auto, FuseMode::Off),
+    ("pad-copy+tiled", PadMode::Copy, TileMode::Auto, AlignMode::Auto, FuseMode::Off),
+    ("padless+tiled", PadMode::Padless, TileMode::Auto, AlignMode::Auto, FuseMode::Off),
+    ("padless+tiled+unaligned", PadMode::Padless, TileMode::Auto, AlignMode::Off, FuseMode::Off),
+    ("padless+tiled-2d", PadMode::Padless, TileMode::Fixed2D(2, 4), AlignMode::Auto, FuseMode::Off),
+    ("padless+tiled+fused", PadMode::Padless, TileMode::Auto, AlignMode::Auto, FuseMode::Auto),
 ];
 
-/// Measure every paper model under every pad/tile variant.
+/// Measure every paper model under every pad/tile/fuse variant.
 pub fn run_pad_tile_ablation(quick: bool) -> Result<Vec<AblationRow>> {
     let mut rows = Vec::new();
     for name in crate::graph::zoo::PAPER_MODELS {
@@ -303,9 +308,10 @@ pub fn run_pad_tile_ablation(quick: bool) -> Result<Vec<AblationRow>> {
         let mut rng = XorShift64::new(7);
         let input = Tensor::rand(model.input.dims(), 0.0, 1.0, &mut rng);
         let mut out = vec![0.0f32; model.output_shape()?.numel()];
-        for (variant, pad_mode, tile, align) in ABLATION_VARIANTS {
-            let opts = CodegenOptions { pad_mode, tile, align, ..CodegenOptions::sse3() };
+        for (variant, pad_mode, tile, align, fuse) in ABLATION_VARIANTS {
+            let opts = CodegenOptions { pad_mode, tile, align, fuse, ..CodegenOptions::sse3() };
             let src = crate::codegen::generate_c(&model, &opts)?;
+            let scratch = crate::codegen::scratch_report(&model, &opts)?;
             let cnn = crate::cc::CompiledCnn::from_source(&model, &opts, &src, default_work_dir())?;
             let stats = bench(&cfg, || cnn.infer_into(input.data(), &mut out));
             rows.push(AblationRow {
@@ -315,6 +321,7 @@ pub fn run_pad_tile_ablation(quick: bool) -> Result<Vec<AblationRow>> {
                 median_us: stats.median_us,
                 p95_us: stats.p95_us,
                 c_bytes: src.len(),
+                static_bytes: scratch.total_bytes(),
             });
         }
     }
@@ -324,8 +331,8 @@ pub fn run_pad_tile_ablation(quick: bool) -> Result<Vec<AblationRow>> {
 /// Render the ablation rows as the extended Table VII columns.
 pub fn render_ablation(rows: &[AblationRow]) -> String {
     let mut t = Table::new(
-        "PAD/TILE ABLATION: pad-copy vs padless × untiled vs tiled (SSE, outer loops kept)",
-        &["model", "variant", "mean", "median", "p95", "C size"],
+        "PAD/TILE/FUSE ABLATION: pad-copy vs padless × untiled vs tiled × fused (SSE, outer loops kept)",
+        &["model", "variant", "mean", "median", "p95", "C size", "static RAM"],
     );
     for r in rows {
         t.row(vec![
@@ -335,12 +342,16 @@ pub fn render_ablation(rows: &[AblationRow]) -> String {
             fmt_us(r.median_us),
             fmt_us(r.p95_us),
             format!("{}K", r.c_bytes / 1024),
+            format!("{:.1}K", r.static_bytes as f64 / 1024.0),
         ]);
     }
     let mut out = t.render();
     for name in crate::graph::zoo::PAPER_MODELS {
         let find = |variant: &str| {
             rows.iter().find(|r| r.model == name && r.variant == variant).map(|r| r.median_us)
+        };
+        let find_ram = |variant: &str| {
+            rows.iter().find(|r| r.model == name && r.variant == variant).map(|r| r.static_bytes)
         };
         if let (Some(base), Some(best)) = (find("pad-copy+untiled"), find("padless+tiled")) {
             out.push_str(&format!("{name}: padless+tiled vs pad-copy+untiled = {:.2}x\n", base / best));
@@ -350,6 +361,14 @@ pub fn render_ablation(rows: &[AblationRow]) -> String {
         }
         if let (Some(d1), Some(d2)) = (find("padless+tiled"), find("padless+tiled-2d")) {
             out.push_str(&format!("{name}: 2-D (2x4) vs 1-D tile = {:.3}x\n", d1 / d2));
+        }
+        if let (Some(un), Some(fu)) = (find_ram("padless+tiled"), find_ram("padless+tiled+fused")) {
+            out.push_str(&format!(
+                "{name}: fused static RAM = {:.1}K vs {:.1}K unfused ({:.2}x smaller)\n",
+                fu as f64 / 1024.0,
+                un as f64 / 1024.0,
+                un as f64 / fu.max(1) as f64
+            ));
         }
     }
     out
@@ -370,6 +389,7 @@ pub fn write_bench_json(path: &Path, rows: &[AblationRow], source: &str) -> Resu
                 ("median_us".to_string(), Value::Num(round3(r.median_us))),
                 ("p95_us".to_string(), Value::Num(round3(r.p95_us))),
                 ("c_bytes".to_string(), Value::Num(r.c_bytes as f64)),
+                ("static_bytes".to_string(), Value::Num(r.static_bytes as f64)),
             ])
         })
         .collect();
@@ -377,7 +397,7 @@ pub fn write_bench_json(path: &Path, rows: &[AblationRow], source: &str) -> Resu
         ("bench".to_string(), Value::Str("table7_pad_tile_ablation".to_string())),
         ("source".to_string(), Value::Str(source.to_string())),
         ("variants".to_string(), Value::Array(
-            ABLATION_VARIANTS.iter().map(|(n, _, _, _)| Value::Str(n.to_string())).collect(),
+            ABLATION_VARIANTS.iter().map(|(n, _, _, _, _)| Value::Str(n.to_string())).collect(),
         )),
         ("rows".to_string(), Value::Array(rows_json)),
     ]);
@@ -430,6 +450,24 @@ mod tests {
         assert_eq!(doc.get("source").unwrap().as_str().unwrap(), "measured");
         assert_eq!(doc.get("rows").unwrap().as_array().unwrap().len(), rows.len());
         assert!(text.contains("padless+tiled"));
+        assert!(text.contains("padless+tiled+fused"));
+        assert!(text.contains("static_bytes"));
+        // The new footprint column must be real (c_bytes was 0 in the old
+        // projections) and rings must shrink the multi-conv models' RAM.
+        for r in &rows {
+            assert!(r.c_bytes > 0, "{} {}: c_bytes must be measured", r.model, r.variant);
+            assert!(r.static_bytes > 0, "{} {}: static_bytes must be measured", r.model, r.variant);
+        }
+        for name in ["pedestrian", "robot"] {
+            let fused = rows.iter().find(|r| r.model == name && r.variant == "padless+tiled+fused").unwrap();
+            let unfused = rows.iter().find(|r| r.model == name && r.variant == "padless+tiled").unwrap();
+            assert!(
+                fused.static_bytes < unfused.static_bytes,
+                "{name}: ring buffers must shrink static RAM ({} vs {})",
+                fused.static_bytes,
+                unfused.static_bytes
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Fusion-group planning for the row-streaming emitter.
+//!
+//! Cross-layer row streaming (Boda-RTC's cross-layer tiling, arXiv
+//! 1606.00094; "Deploying DNNs in the Embedded Space", arXiv 1806.08616)
+//! keeps intermediates cache-resident: instead of each layer writing a
+//! whole output plane before the next layer starts, a *fusion group* of
+//! consecutive layers streams rows through ring line buffers of a few rows
+//! each. This module decides **which layers may share a group** from layer
+//! kinds alone; the codegen planner (`codegen::fusion_groups`) refines the
+//! chains with shape- and cost-aware splits (depth cap, statement budget),
+//! and `codegen/schedule.rs` derives the per-edge row schedule and ring
+//! sizes.
+
+use crate::graph::{Activation, Layer, Model};
+
+/// A contiguous run of layers `[start, end)` emitted as one unit.
+/// `len() == 1` means plain (unfused) emission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FusionGroup {
+    /// First layer index (inclusive).
+    pub start: usize,
+    /// One past the last layer index.
+    pub end: usize,
+}
+
+impl FusionGroup {
+    pub fn singleton(i: usize) -> FusionGroup {
+        FusionGroup { start: i, end: i + 1 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.end == self.start
+    }
+}
+
+/// True when a layer can be a member of a row-streaming fusion group:
+/// its output rows depend on a bounded, monotonically advancing window of
+/// input rows. Softmax breaks groups (it normalizes over the whole output
+/// map), as do Flatten/Dense (row structure disappears) and the layers the
+/// pass pipeline removes before codegen (BatchNorm, Dropout).
+pub fn fusable(layer: &Layer) -> bool {
+    match layer {
+        Layer::Conv2D { activation, .. } | Layer::DepthwiseConv2D { activation, .. } => {
+            *activation != Activation::Softmax
+        }
+        Layer::MaxPool2D { .. } | Layer::AvgPool2D { .. } => true,
+        Layer::Activation(a) => {
+            matches!(a, Activation::None | Activation::Relu | Activation::LeakyRelu(_))
+        }
+        _ => false,
+    }
+}
+
+/// Partition the layer list into maximal chains of fusable layers, each
+/// chunked to at most `max_depth` members; non-fusable layers become
+/// singleton groups. The result is a complete, ordered partition of
+/// `0..model.layers.len()`.
+pub fn plan_fusion_groups(model: &Model, max_depth: usize) -> Vec<FusionGroup> {
+    let depth = max_depth.max(1);
+    let n = model.layers.len();
+    let mut groups = Vec::new();
+    let mut i = 0;
+    while i < n {
+        if !fusable(&model.layers[i]) {
+            groups.push(FusionGroup::singleton(i));
+            i += 1;
+            continue;
+        }
+        let mut j = i;
+        while j < n && j - i < depth && fusable(&model.layers[j]) {
+            j += 1;
+        }
+        groups.push(FusionGroup { start: i, end: j });
+        i = j;
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+    use crate::passes::optimize;
+
+    fn covers(groups: &[FusionGroup], n: usize) {
+        let mut at = 0;
+        for g in groups {
+            assert_eq!(g.start, at, "groups must partition the layer list in order");
+            assert!(g.len() >= 1);
+            at = g.end;
+        }
+        assert_eq!(at, n);
+    }
+
+    #[test]
+    fn ball_chain_groups_convs_and_pool_but_not_softmax() {
+        // Post-optimize ball: conv8(+relu), maxpool, conv12(+relu),
+        // conv2(+softmax) — the first three chain, the softmax-carrying
+        // head conv stays alone (softmax normalizes over the whole map).
+        let m = optimize(zoo::ball_classifier().with_random_weights(1)).unwrap();
+        assert_eq!(m.layers.len(), 4);
+        let groups = plan_fusion_groups(&m, 8);
+        covers(&groups, m.layers.len());
+        assert_eq!(groups[0], FusionGroup { start: 0, end: 3 });
+        assert_eq!(groups[1], FusionGroup::singleton(3));
+        assert!(!fusable(&m.layers[3]), "softmax head must not fuse");
+    }
+
+    #[test]
+    fn depth_cap_chunks_long_chains() {
+        let m = optimize(zoo::robot_detector().with_random_weights(2)).unwrap();
+        // Robot post-optimize is a pure conv/pool chain (7 layers).
+        let all = plan_fusion_groups(&m, 8);
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].len(), m.layers.len());
+        let capped = plan_fusion_groups(&m, 3);
+        covers(&capped, m.layers.len());
+        assert!(capped.iter().all(|g| g.len() <= 3));
+        assert!(capped.iter().any(|g| g.len() == 3));
+    }
+
+    #[test]
+    fn breakers_become_singletons() {
+        use crate::graph::{Activation, Layer, Model, Padding};
+        let m = Model::new("mix", &[8, 8, 2])
+            .push(Layer::conv2d(4, 3, 3, (1, 1), Padding::Same, Activation::Relu))
+            .push(Layer::maxpool(2, 2))
+            .push(Layer::Flatten)
+            .push(Layer::dense(4, Activation::None))
+            .push(Layer::softmax())
+            .with_random_weights(3);
+        let groups = plan_fusion_groups(&m, 8);
+        covers(&groups, m.layers.len());
+        assert_eq!(groups[0], FusionGroup { start: 0, end: 2 });
+        assert!(groups[1..].iter().all(|g| g.len() == 1));
+        assert!(!fusable(&Layer::Flatten));
+        assert!(!fusable(&m.layers[3]));
+    }
+
+    #[test]
+    fn depth_one_means_all_singletons() {
+        let m = optimize(zoo::pedestrian_classifier().with_random_weights(4)).unwrap();
+        let groups = plan_fusion_groups(&m, 1);
+        covers(&groups, m.layers.len());
+        assert!(groups.iter().all(|g| g.len() == 1));
+    }
+}

@@ -8,9 +8,11 @@
 
 mod fold_bn;
 mod fuse_activation;
+mod fuse_groups;
 
 pub use fold_bn::fold_batchnorm;
 pub use fuse_activation::fuse_activations;
+pub use fuse_groups::{fusable, plan_fusion_groups, FusionGroup};
 
 use crate::graph::{Layer, Model};
 use anyhow::Result;

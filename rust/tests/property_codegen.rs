@@ -7,7 +7,7 @@
 //! random kernel/stride/padding geometry, odd channel counts (SSE fallback
 //! paths), BN in every legal position, dense heads, activation placement.
 
-use nncg::codegen::{AlignMode, CodegenOptions, Isa, PadMode, TileMode, Unroll};
+use nncg::codegen::{AlignMode, CodegenOptions, FuseMode, Isa, PadMode, TileMode, Unroll};
 use nncg::graph::{Activation, Layer, Model, Padding};
 use nncg::tensor::Tensor;
 use nncg::util::XorShift64;
@@ -92,7 +92,12 @@ fn check(seed: u64, trials: usize) {
             _ => TileMode::Fixed2D(2 + rng.below(2), 2 + rng.below(3)),
         };
         let align = if rng.below(2) == 0 { AlignMode::Auto } else { AlignMode::Off };
-        let opts = CodegenOptions { isa, unroll, pad_mode, tile, align, ..Default::default() };
+        let fuse = match rng.below(3) {
+            0 => FuseMode::Off,
+            1 => FuseMode::Auto,
+            _ => FuseMode::Depth(2 + rng.below(3)),
+        };
+        let opts = CodegenOptions { isa, unroll, pad_mode, tile, align, fuse, ..Default::default() };
         let err = nncg::cc::verify_against_interp(&model, &opts, &work, 2, seed + t as u64)
             .unwrap_or_else(|e| panic!("model {} opts {}: {e:#}", model.describe(), opts.tag()));
         assert!(
@@ -168,6 +173,55 @@ fn geometry_edge_cases() {
             assert!(err < 1e-4, "{} {isa:?}: {err}", model.name);
         }
     }
+}
+
+/// Fused emission is a pure schedule/buffer transformation: for random
+/// models the compiled fused output must equal the unfused output **bit
+/// for bit** (same taps, same order, same accumulators — only the row
+/// schedule and the buffers between layers change).
+#[test]
+fn fuzz_fused_outputs_bit_identical() {
+    let mut rng = XorShift64::new(0xFA5E);
+    let work = std::env::temp_dir().join("nncg-fuzz-fused");
+    // tiny_test_net is guaranteed to form a fusion group, and the
+    // depthwise+avgpool chain covers the non-conv fused row emitters; the
+    // random models stress odd geometries around them.
+    let mut models = vec![
+        nncg::graph::zoo::tiny_test_net().with_random_weights(71),
+        Model::new("dwavg", &[8, 8, 4])
+            .push(Layer::depthwise(3, 3, (1, 1), Padding::Same, Activation::Relu))
+            .push(Layer::avgpool(2, 2))
+            .push(Layer::conv2d(4, 1, 1, (1, 1), Padding::Valid, Activation::None))
+            .with_random_weights(99),
+    ];
+    for t in 0..6usize {
+        models.push(random_model(&mut rng, 9000 + t));
+    }
+    let mut fused_seen = 0;
+    for model in &models {
+        if model.validate().is_err() || model.infer_shapes().is_err() {
+            continue;
+        }
+        let isa = if rng.below(2) == 0 { Isa::Generic } else { Isa::Sse3 };
+        let base = CodegenOptions { isa, ..Default::default() };
+        let fused_opts = CodegenOptions { fuse: FuseMode::Auto, ..base.clone() };
+        let src = nncg::codegen::generate_c(model, &fused_opts).unwrap();
+        if src.contains("nncg_ring") {
+            fused_seen += 1;
+        }
+        let unfused = nncg::cc::CompiledCnn::build(model, &base, &work).unwrap();
+        let fused = nncg::cc::CompiledCnn::from_source(model, &fused_opts, &src, &work).unwrap();
+        for _ in 0..2 {
+            let x = Tensor::rand(model.input.dims(), -1.0, 1.0, &mut rng);
+            assert_eq!(
+                unfused.infer(&x).unwrap(),
+                fused.infer(&x).unwrap(),
+                "fused output differs:\n{}",
+                model.describe()
+            );
+        }
+    }
+    assert!(fused_seen >= 1, "no model formed a fusion group");
 }
 
 /// Same seed ⇒ byte-identical generated C (reproducible builds).
