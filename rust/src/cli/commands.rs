@@ -2,7 +2,9 @@
 
 use super::args::Args;
 use crate::cc::{CcDriver, CcTarget, CompiledCnn};
-use crate::codegen::{generate_c, AlignMode, CodegenOptions, FuseMode, Isa, PadMode, TileMode, Unroll};
+use crate::codegen::{
+    generate_c, AlignMode, CodegenOptions, FuseMode, Isa, PadMode, RolledMode, TileMode, Unroll,
+};
 use crate::coordinator;
 use crate::experiments::{self, build_engine, load_model};
 use crate::platform::{paper_platforms, GpuModel};
@@ -27,6 +29,9 @@ fn opts_from_args(args: &Args) -> Result<CodegenOptions> {
         .ok_or_else(|| anyhow::anyhow!("unknown --align (auto|off)"))?;
     let fuse = FuseMode::from_name(args.get_or("fuse", "off"))
         .ok_or_else(|| anyhow::anyhow!("unknown --fuse (auto|off|2..8 = max group depth)"))?;
+    let fuse_rolled = RolledMode::from_name(args.get_or("fuse-rolled", "auto")).ok_or_else(|| {
+        anyhow::anyhow!("unknown --fuse-rolled (auto = steady-state loops | off = unrolled row schedule)")
+    })?;
     Ok(CodegenOptions {
         isa,
         unroll,
@@ -34,6 +39,7 @@ fn opts_from_args(args: &Args) -> Result<CodegenOptions> {
         tile,
         align,
         fuse,
+        fuse_rolled,
         test_harness: args.has_flag("harness"),
         ..Default::default()
     })
@@ -380,8 +386,13 @@ mod tests {
     fn fuse_and_vfpv3_knobs_parse() {
         let o = opts_from_args(&args(&[])).unwrap();
         assert_eq!(o.fuse, FuseMode::Off);
+        assert_eq!(o.fuse_rolled, RolledMode::Auto);
         let o = opts_from_args(&args(&["--fuse", "auto"])).unwrap();
         assert_eq!(o.fuse, FuseMode::Auto);
+        assert_eq!(o.fuse_rolled, RolledMode::Auto);
+        let o = opts_from_args(&args(&["--fuse", "auto", "--fuse-rolled", "off"])).unwrap();
+        assert_eq!(o.fuse_rolled, RolledMode::Off);
+        assert!(opts_from_args(&args(&["--fuse-rolled", "sometimes"])).is_err());
         let o = opts_from_args(&args(&["--fuse", "3"])).unwrap();
         assert_eq!(o.fuse, FuseMode::Depth(3));
         assert!(opts_from_args(&args(&["--fuse", "16"])).is_err());

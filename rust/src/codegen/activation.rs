@@ -79,7 +79,9 @@ pub(crate) fn emit_activation(w: &mut CWriter, ctx: &LayerCtx<'_>, act: Activati
 
 /// One constant-coordinate row of a standalone elementwise activation
 /// inside a row-streaming fusion group: `w*c` lane-scheduled elements read
-/// `src_row_off` into `ctx.src` and written `dst_row_off` into `ctx.dst`.
+/// `src_row_off` into `ctx.src` and written `dst_row_off` into `ctx.dst`,
+/// with the bases additionally advancing `src_iter_elems`/`dst_iter_elems`
+/// floats per steady-state loop iteration `i` (0 outside the rolled loop).
 /// (Softmax never fuses — it normalizes over the whole map.)
 pub(crate) fn emit_activation_row_fused(
     w: &mut CWriter,
@@ -87,12 +89,18 @@ pub(crate) fn emit_activation_row_fused(
     act: Activation,
     src_row_off: usize,
     dst_row_off: usize,
+    src_iter_elems: usize,
+    dst_iter_elems: usize,
 ) -> Result<()> {
     debug_assert!(act != Activation::Softmax, "softmax heads are never fused");
     let n = ctx.in_shape.w() * ctx.in_shape.c();
     let sched = ChannelSchedule::for_channels(ctx.opts.isa, n);
-    let s_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.src);
-    let d_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.dst);
+    // Rolled loop terms keep the alignment proofs only when they advance
+    // whole 8-float groups (the widest vector).
+    let s_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.src) && src_iter_elems % 8 == 0;
+    let d_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.dst) && dst_iter_elems % 8 == 0;
+    let src_base = schedule::fused_base(ctx.src, src_row_off, src_iter_elems);
+    let dst_base = schedule::fused_base(ctx.dst, dst_row_off, dst_iter_elems);
     for seg in &sched.segments {
         if seg.len == 0 {
             continue;
@@ -102,18 +110,16 @@ pub(crate) fn emit_activation_row_fused(
             let load_al = s_al && seg_al && src_row_off % v.width == 0;
             let store_al = d_al && seg_al && dst_row_off % v.width == 0;
             w.open(&format!("for (k = {}; k < {}; k += {})", seg.start, seg.end(), v.width));
-            w.line(&format!(
-                "{} a = {};",
-                v.ty,
-                v.load(&format!("{} + {} + k", ctx.src, src_row_off), load_al)
-            ));
+            w.line(&format!("{} a = {};", v.ty, v.load(&format!("{src_base} + k"), load_al)));
             emit_vec_activation(w, v, act, "a");
-            w.line(&v.store(&format!("{} + {} + k", ctx.dst, dst_row_off), "a", store_al));
+            w.line(&v.store(&format!("{dst_base} + k"), "a", store_al));
             w.close();
         } else {
             w.open(&format!("for (k = {}; k < {}; k++)", seg.start, seg.end()));
-            let val = format!("{}[{} + k]", ctx.src, src_row_off);
-            w.line(&format!("{}[{} + k] = {};", ctx.dst, dst_row_off, scalar_act(&val, act)));
+            // `fused_base` parenthesizes compound forms, so indexing the
+            // base expression directly is precedence-safe.
+            let val = format!("{src_base}[k]");
+            w.line(&format!("{dst_base}[k] = {};", scalar_act(&val, act)));
             w.close();
         }
     }

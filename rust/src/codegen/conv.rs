@@ -19,7 +19,7 @@
 //!    width.
 
 use super::cwriter::{fmt_f32, CWriter};
-use super::schedule::{self, AxisPlan, PadStrategy, RowMap};
+use super::schedule::{self, AxisPlan, PadStrategy};
 use super::simd::{emit_vec_activation, ChannelSchedule, VecSpec};
 use super::{ConstMode, LayerCtx, Unroll};
 use crate::graph::{Activation, Padding};
@@ -380,12 +380,13 @@ pub(crate) fn emit_conv(
 }
 
 /// Emit one output row of a convolution inside a row-streaming fusion
-/// group: the row coordinate is a generation-time constant, the source
-/// rows come from `src_map` (the producer's ring buffer or the group's
-/// input plane, base expression `ctx.src`), and the output row lands
-/// `dst_row_off` elements into `ctx.dst`. Columns keep the usual padless
-/// split: peeled border columns plus a (register-tiled) interior loop.
-#[allow(clippy::too_many_arguments)]
+/// group: the row coordinate is a generation-time constant (plus, inside
+/// the steady-state rolled loop, `io.*_iter_elems` floats per loop
+/// iteration `i`), the source rows come from `io.src_map` (the producer's
+/// ring buffer or the group's input plane, base expression `ctx.src`), and
+/// the output row lands `io.dst_row_off` elements into `ctx.dst`. Columns
+/// keep the usual padless split: peeled border columns plus a
+/// (register-tiled) interior loop.
 pub(crate) fn emit_conv_row_fused(
     w: &mut CWriter,
     ctx: &LayerCtx<'_>,
@@ -394,9 +395,7 @@ pub(crate) fn emit_conv_row_fused(
     stride: (usize, usize),
     padding: Padding,
     activation: Activation,
-    out_row: usize,
-    src_map: RowMap,
-    dst_row_off: usize,
+    io: &schedule::FusedRowIo,
 ) -> Result<()> {
     debug_assert!(activation != Activation::Softmax, "softmax heads are never fused");
     let wd = weights.dims();
@@ -414,9 +413,9 @@ pub(crate) fn emit_conv_row_fused(
     let sched = ChannelSchedule::for_channels(ctx.opts.isa, c_out);
     let rows = AxisPlan::padless(h_out, stride.0, h_k, pad_top, h_in);
     let cols = AxisPlan::padless(w_out, stride.1, w_k, pad_left, w_in);
-    let (n0, n1) = rows.window(out_row);
-    let p0 = rows.src_start(out_row);
-    let src_row_offs: Vec<usize> = (0..n1 - n0).map(|t| src_map.off(p0 + t)).collect();
+    let (n0, n1) = rows.window(io.out_row);
+    let p0 = rows.src_start(io.out_row);
+    let src_row_offs: Vec<usize> = (0..n1 - n0).map(|t| io.src_map.off(p0 + t)).collect();
     let (_, tile) = schedule::tile_shape(ctx.opts, &sched, 1, cols.interior());
     let walk = SpatialWalk {
         rows,
@@ -440,11 +439,16 @@ pub(crate) fn emit_conv_row_fused(
         w_k,
         c_in,
         c_out,
-        dst_static: schedule::static_buf(ctx.dst),
+        // A rolled loop term keeps the store-alignment proof only when it
+        // advances whole vector groups.
+        dst_static: schedule::static_buf(ctx.dst) && io.dst_iter_aligned(),
     };
     w.open("");
-    w.line(&format!("const float *s = {};", ctx.src));
-    w.line(&format!("float *d = {} + {};", ctx.dst, dst_row_off));
+    w.line(&format!("const float *s = {};", schedule::fused_base(ctx.src, 0, io.src_iter_elems)));
+    w.line(&format!(
+        "float *d = {};",
+        schedule::fused_base(ctx.dst, io.dst_row_off, io.dst_iter_elems)
+    ));
     walk.emit_cols(w, n0, n1, 1, &mut |w, win, s, so, d, dofs| {
         cells.emit_block(w, win, s, so, d, dofs)
     });

@@ -12,7 +12,7 @@
 
 use super::conv::{padded_extent, scalar_act, RowAddr, SpatialWalk, TapWindow};
 use super::cwriter::{fmt_f32, CWriter};
-use super::schedule::{self, AxisPlan, PadStrategy, RowMap};
+use super::schedule::{self, AxisPlan, PadStrategy};
 use super::simd::{emit_vec_activation, ChannelSchedule, VecSpec};
 use super::{ConstMode, LayerCtx, Unroll};
 use crate::graph::{Activation, Padding};
@@ -109,8 +109,9 @@ pub(crate) fn emit_depthwise(
 }
 
 /// One constant-coordinate output row of a depthwise convolution inside a
-/// fusion group (see [`super::conv::emit_conv_row_fused`]).
-#[allow(clippy::too_many_arguments)]
+/// fusion group (see [`super::conv::emit_conv_row_fused`]; inside the
+/// steady-state rolled loop the bases additionally advance
+/// `io.*_iter_elems` floats per loop iteration `i`).
 pub(crate) fn emit_depthwise_row_fused(
     w: &mut CWriter,
     ctx: &LayerCtx<'_>,
@@ -119,9 +120,7 @@ pub(crate) fn emit_depthwise_row_fused(
     stride: (usize, usize),
     padding: Padding,
     activation: Activation,
-    out_row: usize,
-    src_map: RowMap,
-    dst_row_off: usize,
+    io: &schedule::FusedRowIo,
 ) -> Result<()> {
     debug_assert!(activation != Activation::Softmax, "softmax heads are never fused");
     let wd = weights.dims();
@@ -139,9 +138,9 @@ pub(crate) fn emit_depthwise_row_fused(
     let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
     let rows = AxisPlan::padless(h_out, stride.0, h_k, pad_top, h_in);
     let cols = AxisPlan::padless(w_out, stride.1, w_k, pad_left, w_in);
-    let (n0, n1) = rows.window(out_row);
-    let p0 = rows.src_start(out_row);
-    let src_row_offs: Vec<usize> = (0..n1 - n0).map(|t| src_map.off(p0 + t)).collect();
+    let (n0, n1) = rows.window(io.out_row);
+    let p0 = rows.src_start(io.out_row);
+    let src_row_offs: Vec<usize> = (0..n1 - n0).map(|t| io.src_map.off(p0 + t)).collect();
     let (_, tile) = schedule::tile_shape(ctx.opts, &sched, 1, cols.interior());
     let walk = SpatialWalk {
         rows,
@@ -164,12 +163,17 @@ pub(crate) fn emit_depthwise_row_fused(
         row_addr: RowAddr::Table(src_row_offs),
         w_k,
         c,
-        src_static: schedule::static_buf(ctx.src),
-        dst_static: schedule::static_buf(ctx.dst),
+        // Rolled loop terms keep the alignment proofs only when they
+        // advance whole vector groups.
+        src_static: schedule::static_buf(ctx.src) && io.src_iter_aligned(),
+        dst_static: schedule::static_buf(ctx.dst) && io.dst_iter_aligned(),
     };
     w.open("");
-    w.line(&format!("const float *s = {};", ctx.src));
-    w.line(&format!("float *d = {} + {};", ctx.dst, dst_row_off));
+    w.line(&format!("const float *s = {};", schedule::fused_base(ctx.src, 0, io.src_iter_elems)));
+    w.line(&format!(
+        "float *d = {};",
+        schedule::fused_base(ctx.dst, io.dst_row_off, io.dst_iter_elems)
+    ));
     walk.emit_cols(w, n0, n1, 1, &mut |w, win, s, so, d, dofs| {
         cells.emit_block(w, win, s, so, d, dofs)
     });
@@ -481,26 +485,30 @@ fn emit_avg_window(
 }
 
 /// One constant-coordinate output row of an average pool inside a fusion
-/// group; window rows are fetched through `src_map` (ring or plane).
+/// group; window rows are fetched through `io.src_map` (ring or plane) and
+/// the bases advance `io.*_iter_elems` per steady-state loop iteration.
 pub(crate) fn emit_avgpool_row_fused(
     w: &mut CWriter,
     ctx: &LayerCtx<'_>,
     pool: (usize, usize),
     stride: (usize, usize),
-    out_row: usize,
-    src_map: RowMap,
-    dst_row_off: usize,
+    io: &schedule::FusedRowIo,
 ) -> Result<()> {
     let (w_out, c) = (ctx.out_shape.w(), ctx.out_shape.c());
     let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
     let inv = fmt_f32(1.0 / (pool.0 * pool.1) as f32);
-    let s_static_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.src);
-    let d_static_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.dst);
-    let row_offs: Vec<usize> = (0..pool.0).map(|n| src_map.off(out_row * stride.0 + n)).collect();
+    let s_static_al =
+        ctx.opts.use_aligned() && schedule::static_buf(ctx.src) && io.src_iter_aligned();
+    let d_static_al =
+        ctx.opts.use_aligned() && schedule::static_buf(ctx.dst) && io.dst_iter_aligned();
+    let src_base = schedule::fused_base(ctx.src, 0, io.src_iter_elems);
+    let dst_base = schedule::fused_base(ctx.dst, 0, io.dst_iter_elems);
+    let row_offs: Vec<usize> =
+        (0..pool.0).map(|n| io.src_map.off(io.out_row * stride.0 + n)).collect();
     if ctx.opts.unroll.keeps_cols() {
         w.open(&format!("for (j = 0; j < {w_out}; j++)"));
-        w.line(&format!("const float *s = {} + j*{};", ctx.src, stride.1 * c));
-        w.line(&format!("float *d = {} + {} + j*{};", ctx.dst, dst_row_off, c));
+        w.line(&format!("const float *s = {} + j*{};", src_base, stride.1 * c));
+        w.line(&format!("float *d = {} + {} + j*{};", dst_base, io.dst_row_off, c));
         emit_avg_window(w, &sched, pool, c, &inv, s_static_al, d_static_al, "s", 0, "d", 0, &row_offs);
         w.close();
     } else {
@@ -513,10 +521,10 @@ pub(crate) fn emit_avgpool_row_fused(
                 &inv,
                 s_static_al,
                 d_static_al,
-                ctx.src,
+                &src_base,
                 j * stride.1 * c,
-                ctx.dst,
-                dst_row_off + j * c,
+                &dst_base,
+                io.dst_row_off + j * c,
                 &row_offs,
             );
         }

@@ -355,6 +355,46 @@ impl FuseMode {
     }
 }
 
+/// Steady-state rolled emission of fused row schedules (`--fuse-rolled`).
+///
+/// The row schedule of a fusion group is eventually periodic: after a
+/// warm-up prologue, the per-row op pattern and every ring buffer's
+/// row→slot assignment repeat with a fixed period. `Auto` detects that
+/// period (`schedule::detect_periodic`) and emits prologue + a genuine C
+/// `for` loop over steady-state iterations + epilogue — the loop body
+/// holds one copy of the op pattern per ring phase, with every ring-slot
+/// offset still resolved at generation time (no runtime `%`) — so big
+/// planes fuse without the code-size blowup that previously forced the
+/// statement budget to split their groups. `Off` keeps the fully unrolled
+/// row schedule of the same groups (one statement block per output row) —
+/// the PR 3 emission form, and the differential-testing baseline for
+/// periodic groups.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RolledMode {
+    /// Roll the steady state whenever a period is detected (default).
+    Auto,
+    /// Always unroll the row schedule (debug/ablation baseline; large
+    /// models emit very large C files at full fusion depth).
+    Off,
+}
+
+impl RolledMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RolledMode::Auto => "auto",
+            RolledMode::Off => "off",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<RolledMode> {
+        Some(match s {
+            "auto" => RolledMode::Auto,
+            "off" => RolledMode::Off,
+            _ => return None,
+        })
+    }
+}
+
 /// Code generation options.
 #[derive(Debug, Clone)]
 pub struct CodegenOptions {
@@ -380,6 +420,8 @@ pub struct CodegenOptions {
     pub align: AlignMode,
     /// Cross-layer row-streaming fusion with ring line buffers.
     pub fuse: FuseMode,
+    /// Steady-state rolled emission of fused row schedules.
+    pub fuse_rolled: RolledMode,
 }
 
 impl Default for CodegenOptions {
@@ -395,6 +437,7 @@ impl Default for CodegenOptions {
             tile: TileMode::Auto,
             align: AlignMode::Auto,
             fuse: FuseMode::Off,
+            fuse_rolled: RolledMode::Auto,
         }
     }
 }
@@ -456,7 +499,7 @@ impl CodegenOptions {
     /// Short tag used in cache keys and bench labels.
     pub fn tag(&self) -> String {
         format!(
-            "{}-{}-{}-pad{}-t{}-al{}-fu{}",
+            "{}-{}-{}-pad{}-t{}-al{}-fu{}-fr{}",
             self.isa.name(),
             self.unroll.name(),
             self.effective_const_mode().name(),
@@ -464,6 +507,7 @@ impl CodegenOptions {
             self.tile.name(),
             self.align.name(),
             self.fuse.name(),
+            self.fuse_rolled.name(),
         )
     }
 }
@@ -764,6 +808,14 @@ const FUSE_GROUP_STMT_BUDGET: usize = 5_000;
 /// all-singletons when fusion is off or the emission mode cannot stream
 /// rows: the loop form and full unroll keep their whole-plane walks, and
 /// copy-mode padding materializes whole padded planes by definition.
+///
+/// Depth-capped groups whose row schedule has a detectable steady-state
+/// period — and whose *rolled* emission fits [`ROLLED_GROUP_STMT_BUDGET`]
+/// — skip the unrolled statement-budget split: rolling makes their code
+/// size independent of plane height, so the models the budget used to
+/// fragment (robot, pedestrian) now fuse at full depth. The partition is
+/// independent of [`RolledMode`] — `--fuse-rolled off` unrolls the same
+/// groups, which keeps the two emissions diffable and bit-comparable.
 fn fusion_groups(model: &Model, shapes: &[Shape], opts: &CodegenOptions) -> Vec<crate::passes::FusionGroup> {
     use crate::passes::FusionGroup;
     let n = model.layers.len();
@@ -776,32 +828,116 @@ fn fusion_groups(model: &Model, shapes: &[Shape], opts: &CodegenOptions) -> Vec<
     let max_depth = opts.fuse.max_depth();
     let mut out = Vec::new();
     for chain in crate::passes::plan_fusion_groups(model, usize::MAX) {
+        // Row streaming needs image-shaped planes on both sides; split the
+        // chain at any non-3D boundary.
+        let mut runs: Vec<FusionGroup> = Vec::new();
         let mut start = chain.start;
-        let mut acc = 0usize;
         for i in chain.start..chain.end {
-            // Row streaming needs image-shaped planes on both sides.
             if shapes[i].rank() != 3 || shapes[i + 1].rank() != 3 {
                 if i > start {
-                    out.push(FusionGroup { start, end: i });
+                    runs.push(FusionGroup { start, end: i });
                 }
-                out.push(FusionGroup::singleton(i));
+                runs.push(FusionGroup::singleton(i));
                 start = i + 1;
-                acc = 0;
-                continue;
             }
-            let cost = fused_layer_cost(&model.layers[i], &shapes[i + 1], opts);
-            if i > start && (i - start >= max_depth || acc + cost > FUSE_GROUP_STMT_BUDGET) {
-                out.push(FusionGroup { start, end: i });
-                start = i;
-                acc = 0;
-            }
-            acc += cost;
         }
         if start < chain.end {
-            out.push(FusionGroup { start, end: chain.end });
+            runs.push(FusionGroup { start, end: chain.end });
+        }
+        for run in runs {
+            let mut s = run.start;
+            while s < run.end {
+                let group = FusionGroup { start: s, end: (s + max_depth).min(run.end) };
+                let rolled_ok = group.len() > 1
+                    && rolled_group_cost(model, shapes, opts, &group)
+                        .map_or(false, |c| c <= ROLLED_GROUP_STMT_BUDGET);
+                if rolled_ok {
+                    out.push(group);
+                } else {
+                    split_by_budget(model, shapes, opts, group, &mut out);
+                }
+                s = group.end;
+            }
         }
     }
     out
+}
+
+/// Statement budget for one *rolled* group: prologue + loop body +
+/// epilogue must stay compiler-friendly even though the plane heights no
+/// longer matter. Configurations whose rolled emission still explodes
+/// (scalar ISAs or unrolled columns over wide planes) fall back to the
+/// classic per-group split.
+const ROLLED_GROUP_STMT_BUDGET: usize = 50_000;
+
+/// Statements a group's rolled emission would write (prologue + one loop
+/// body + epilogue), or `None` when its schedule has no detectable
+/// steady-state period. Deliberately independent of [`RolledMode`] so the
+/// partition never depends on the emission knob.
+fn rolled_group_cost(
+    model: &Model,
+    shapes: &[Shape],
+    opts: &CodegenOptions,
+    group: &crate::passes::FusionGroup,
+) -> Option<usize> {
+    let plans = group_row_plans(model, shapes, group).ok()?;
+    let layout = schedule::plan_group_rows(&plans);
+    let p = schedule::detect_periodic(&layout, &plans)?;
+    Some(
+        group_rows_cost(model, shapes, opts, group, &layout.ops[..p.body_start])
+            + group_rows_cost(
+                model,
+                shapes,
+                opts,
+                group,
+                &layout.ops[p.body_start..p.body_start + p.ops_per_iter],
+            )
+            + group_rows_cost(model, shapes, opts, group, &layout.ops[p.epilogue_start..]),
+    )
+}
+
+/// Statement cost of a slice of a group's row ops (shared pricing for the
+/// rolled-budget decision and the cost guard).
+fn group_rows_cost(
+    model: &Model,
+    shapes: &[Shape],
+    opts: &CodegenOptions,
+    group: &crate::passes::FusionGroup,
+    ops: &[schedule::RowOp],
+) -> usize {
+    ops.iter()
+        .map(|op| {
+            let gi = group.start + op.layer;
+            fused_row_cost(&model.layers[gi], &shapes[gi + 1], opts)
+        })
+        .sum()
+}
+
+/// Statement-budget refinement for groups that must unroll their whole row
+/// schedule: split so each piece's unrolled emission stays fast for a C
+/// compiler to chew through.
+fn split_by_budget(
+    model: &Model,
+    shapes: &[Shape],
+    opts: &CodegenOptions,
+    group: crate::passes::FusionGroup,
+    out: &mut Vec<crate::passes::FusionGroup>,
+) {
+    use crate::passes::FusionGroup;
+    let mut start = group.start;
+    let mut acc = 0usize;
+    for i in group.start..group.end {
+        let cost = fused_layer_cost(&model.layers[i], &shapes[i + 1], opts);
+        if i > start && acc + cost > FUSE_GROUP_STMT_BUDGET {
+            out.push(FusionGroup { start, end: i });
+            start = i;
+            acc = 0;
+        }
+        acc += cost;
+    }
+    if start < group.end {
+        out.push(FusionGroup { start, end: group.end });
+    }
 }
 
 /// Row-axis [`schedule::AxisPlan`] of every member of a fusion group, in
@@ -835,6 +971,13 @@ fn group_row_plans(
 /// Emit one fusion group: replay the demand-driven row schedule, routing
 /// every member's input/output rows through the group input plane, the
 /// per-edge ring buffers, or the group output plane.
+///
+/// Under [`RolledMode::Auto`], a schedule with a detectable steady-state
+/// period is emitted as warm-up prologue + one genuine C `for` loop over
+/// the steady iterations + drain epilogue: the loop body holds one copy of
+/// the op pattern per ring phase (slot assignments are iteration-invariant
+/// by construction, so all ring offsets stay generation-time constants)
+/// while plane bases advance by a constant stride per iteration.
 #[allow(clippy::too_many_arguments)]
 fn emit_fused_group(
     w: &mut CWriter,
@@ -846,62 +989,148 @@ fn emit_fused_group(
     plan: &BufferPlan,
     opts: &CodegenOptions,
 ) -> Result<()> {
-    use schedule::RowMap;
     let plans = group_row_plans(model, shapes, group)?;
     let layout = schedule::plan_group_rows(&plans);
-    let members = group.len();
-    for op in &layout.ops {
-        let i = group.start + op.layer;
-        let in_s = &shapes[i];
-        let out_s = &shapes[i + 1];
-        let (src_name, src_map) = if op.layer == 0 {
-            (group_src.to_string(), RowMap::Plane { row_elems: in_s.w() * in_s.c() })
-        } else {
-            let r = find_ring(plan, i - 1)?;
-            (format!("nncg_ring{}", r.layer), RowMap::Ring { rows: r.rows, row_elems: r.row_elems })
-        };
-        let (dst_name, dst_map) = if op.layer == members - 1 {
-            (group_dst.to_string(), RowMap::Plane { row_elems: out_s.w() * out_s.c() })
-        } else {
-            let r = find_ring(plan, i)?;
-            (format!("nncg_ring{}", r.layer), RowMap::Ring { rows: r.rows, row_elems: r.row_elems })
-        };
-        let dst_row_off = dst_map.off(op.row);
-        let ctx = LayerCtx {
-            idx: i,
-            in_shape: in_s,
-            out_shape: out_s,
-            src: &src_name,
-            dst: &dst_name,
-            padbuf: "nncg_pad",
-            opts,
-        };
-        w.line(&format!("/* L{i} {} row {} */", model.layers[i].kind_name(), op.row));
-        match &model.layers[i] {
-            Layer::Conv2D { weights, bias, stride, padding, activation } => {
-                conv::emit_conv_row_fused(
-                    w, &ctx, weights, bias, *stride, *padding, *activation, op.row, src_map,
-                    dst_row_off,
-                )?
+    let periodic = if opts.fuse_rolled == RolledMode::Auto {
+        schedule::detect_periodic(&layout, &plans)
+    } else {
+        None
+    };
+    let p = match periodic {
+        Some(p) => p,
+        None => {
+            for op in &layout.ops {
+                emit_group_row_op(w, model, shapes, group, group_src, group_dst, plan, opts, &plans, op, None)?;
             }
-            Layer::DepthwiseConv2D { weights, bias, stride, padding, activation } => {
-                depthwise::emit_depthwise_row_fused(
-                    w, &ctx, weights, bias, *stride, *padding, *activation, op.row, src_map,
-                    dst_row_off,
-                )?
-            }
-            Layer::MaxPool2D { pool, stride } => {
-                pool::emit_maxpool_row_fused(w, &ctx, *pool, *stride, op.row, src_map, dst_row_off)?
-            }
-            Layer::AvgPool2D { pool, stride } => {
-                depthwise::emit_avgpool_row_fused(w, &ctx, *pool, *stride, op.row, src_map, dst_row_off)?
-            }
-            Layer::Activation(a) => {
-                let src_row_off = src_map.off(plans[op.layer].src_start(op.row));
-                activation::emit_activation_row_fused(w, &ctx, *a, src_row_off, dst_row_off)?
-            }
-            other => bail!("layer {} cannot be emitted in a fusion group", other.kind_name()),
+            return Ok(());
         }
+    };
+    w.line(&format!(
+        "/* steady state: {} iterations x {} row-ops per iteration (ring phases included); {} warm-up + {} drain ops stay unrolled */",
+        p.iters,
+        p.ops_per_iter,
+        p.body_start,
+        layout.ops.len() - p.epilogue_start
+    ));
+    for op in &layout.ops[..p.body_start] {
+        emit_group_row_op(w, model, shapes, group, group_src, group_dst, plan, opts, &plans, op, None)?;
+    }
+    w.open(&format!("for (i = 0; i < {}; i++)", p.iters));
+    for op in &layout.ops[p.body_start..p.body_start + p.ops_per_iter] {
+        emit_group_row_op(
+            w, model, shapes, group, group_src, group_dst, plan, opts, &plans, op,
+            Some(&p.row_delta),
+        )?;
+    }
+    w.close();
+    for op in &layout.ops[p.epilogue_start..] {
+        emit_group_row_op(w, model, shapes, group, group_src, group_dst, plan, opts, &plans, op, None)?;
+    }
+    Ok(())
+}
+
+/// Emit one row op of a fusion group. `row_delta` is `Some` inside the
+/// steady-state loop body: the op then computes row `op.row + i*delta`
+/// per iteration `i`, with plane bases advancing by a constant element
+/// stride and ring bases staying fixed (iteration-invariant slots).
+#[allow(clippy::too_many_arguments)]
+fn emit_group_row_op(
+    w: &mut CWriter,
+    model: &Model,
+    shapes: &[Shape],
+    group: &crate::passes::FusionGroup,
+    group_src: &str,
+    group_dst: &str,
+    plan: &BufferPlan,
+    opts: &CodegenOptions,
+    plans: &[schedule::AxisPlan],
+    op: &schedule::RowOp,
+    row_delta: Option<&[usize]>,
+) -> Result<()> {
+    use schedule::{FusedRowIo, RowMap};
+    let members = group.len();
+    let i = group.start + op.layer;
+    let in_s = &shapes[i];
+    let out_s = &shapes[i + 1];
+    let (src_name, src_map) = if op.layer == 0 {
+        (group_src.to_string(), RowMap::Plane { row_elems: in_s.w() * in_s.c() })
+    } else {
+        let r = find_ring(plan, i - 1)?;
+        (format!("nncg_ring{}", r.layer), RowMap::Ring { rows: r.rows, row_elems: r.row_elems })
+    };
+    let (dst_name, dst_map) = if op.layer == members - 1 {
+        (group_dst.to_string(), RowMap::Plane { row_elems: out_s.w() * out_s.c() })
+    } else {
+        let r = find_ring(plan, i)?;
+        (format!("nncg_ring{}", r.layer), RowMap::Ring { rows: r.rows, row_elems: r.row_elems })
+    };
+    let dst_row_off = dst_map.off(op.row);
+    // Per-iteration base strides inside the rolled loop: a plane source
+    // advances `delta * stride` source rows, a plane destination `delta`
+    // output rows; ring bases never move (slots repeat exactly).
+    let (src_iter_elems, dst_iter_elems) = match row_delta {
+        None => (0, 0),
+        Some(delta) => {
+            let si = if op.layer == 0 {
+                delta[0] * plans[0].stride * in_s.w() * in_s.c()
+            } else {
+                0
+            };
+            let di = if op.layer == members - 1 {
+                delta[op.layer] * out_s.w() * out_s.c()
+            } else {
+                0
+            };
+            (si, di)
+        }
+    };
+    let io = FusedRowIo { out_row: op.row, src_map, dst_row_off, src_iter_elems, dst_iter_elems };
+    let ctx = LayerCtx {
+        idx: i,
+        in_shape: in_s,
+        out_shape: out_s,
+        src: &src_name,
+        dst: &dst_name,
+        padbuf: "nncg_pad",
+        opts,
+    };
+    match row_delta {
+        None => w.line(&format!("/* L{i} {} row {} */", model.layers[i].kind_name(), op.row)),
+        Some(delta) => w.line(&format!(
+            "/* L{i} {} row {}+{}i */",
+            model.layers[i].kind_name(),
+            op.row,
+            delta[op.layer]
+        )),
+    }
+    match &model.layers[i] {
+        Layer::Conv2D { weights, bias, stride, padding, activation } => {
+            conv::emit_conv_row_fused(w, &ctx, weights, bias, *stride, *padding, *activation, &io)?
+        }
+        Layer::DepthwiseConv2D { weights, bias, stride, padding, activation } => {
+            depthwise::emit_depthwise_row_fused(
+                w, &ctx, weights, bias, *stride, *padding, *activation, &io,
+            )?
+        }
+        Layer::MaxPool2D { pool, stride } => {
+            pool::emit_maxpool_row_fused(w, &ctx, *pool, *stride, &io)?
+        }
+        Layer::AvgPool2D { pool, stride } => {
+            depthwise::emit_avgpool_row_fused(w, &ctx, *pool, *stride, &io)?
+        }
+        Layer::Activation(a) => {
+            let src_row_off = io.src_map.off(plans[op.layer].src_start(op.row));
+            activation::emit_activation_row_fused(
+                w,
+                &ctx,
+                *a,
+                src_row_off,
+                io.dst_row_off,
+                io.src_iter_elems,
+                io.dst_iter_elems,
+            )?
+        }
+        other => bail!("layer {} cannot be emitted in a fusion group", other.kind_name()),
     }
     Ok(())
 }
@@ -1035,9 +1264,9 @@ fn layer_body_cost(layer: &Layer, out: &Shape, isa: Isa) -> usize {
     }
 }
 
-/// Statements a layer contributes when emitted as fused rows: the row
-/// schedule is unrolled, columns keep their loop per the unroll level.
-fn fused_layer_cost(layer: &Layer, out: &Shape, opts: &CodegenOptions) -> usize {
+/// Statements one emitted fused row of a layer costs: columns keep their
+/// loop per the unroll level.
+fn fused_row_cost(layer: &Layer, out: &Shape, opts: &CodegenOptions) -> usize {
     let body = layer_body_cost(layer, out, opts.isa);
     match layer {
         Layer::Conv2D { .. }
@@ -1045,27 +1274,53 @@ fn fused_layer_cost(layer: &Layer, out: &Shape, opts: &CodegenOptions) -> usize 
         | Layer::MaxPool2D { .. }
         | Layer::AvgPool2D { .. } => {
             let cols = if opts.unroll.keeps_cols() { 1 } else { out.w() };
-            body * out.h() * cols
+            body * cols
         }
-        // Elementwise rows: fusing does not change the total work.
-        _ => body,
+        // Elementwise layers spread their total over the plane's rows.
+        _ => crate::util::div_ceil(body, out.h().max(1)),
     }
 }
 
-/// Rough statement-count estimate for the cost guard.
+/// Statements a layer contributes when its whole row schedule is emitted
+/// unrolled (the statement-budget split's currency).
+fn fused_layer_cost(layer: &Layer, out: &Shape, opts: &CodegenOptions) -> usize {
+    match layer {
+        Layer::Conv2D { .. }
+        | Layer::DepthwiseConv2D { .. }
+        | Layer::MaxPool2D { .. }
+        | Layer::AvgPool2D { .. } => fused_row_cost(layer, out, opts) * out.h(),
+        // Elementwise rows: fusing does not change the total work.
+        _ => layer_body_cost(layer, out, opts.isa),
+    }
+}
+
+/// Rough statement-count estimate for the cost guard. Fused groups are
+/// priced per scheduled row op; a group with a rolled steady state only
+/// pays for its prologue + one loop body + epilogue, mirroring what
+/// `emit_fused_group` actually writes out.
 fn estimate_statements(model: &Model, opts: &CodegenOptions) -> Result<usize> {
     let shapes = model.infer_shapes()?;
     let groups = fusion_groups(model, &shapes, opts);
-    let mut fused = vec![false; model.layers.len()];
-    for g in &groups {
-        if g.len() > 1 {
-            for f in fused.iter_mut().take(g.end).skip(g.start) {
-                *f = true;
-            }
-        }
-    }
     let mut total = 0usize;
-    for (i, layer) in model.layers.iter().enumerate() {
+    for group in &groups {
+        if group.len() > 1 {
+            let rolled = if opts.fuse_rolled == RolledMode::Auto {
+                rolled_group_cost(model, &shapes, opts, group)
+            } else {
+                None
+            };
+            total += match rolled {
+                Some(c) => c,
+                None => {
+                    let plans = group_row_plans(model, &shapes, group)?;
+                    let layout = schedule::plan_group_rows(&plans);
+                    group_rows_cost(model, &shapes, opts, group, &layout.ops)
+                }
+            };
+            continue;
+        }
+        let i = group.start;
+        let layer = &model.layers[i];
         let out = &shapes[i + 1];
         let body = layer_body_cost(layer, out, opts.isa);
         // Spatial extent only exists for image-shaped layers; dense/flat
@@ -1077,15 +1332,11 @@ fn estimate_statements(model: &Model, opts: &CodegenOptions) -> Result<usize> {
             | Layer::DepthwiseConv2D { .. } => (out.h(), out.w()),
             _ => (1, 1),
         };
-        total += if fused[i] {
-            fused_layer_cost(layer, out, opts)
-        } else {
-            match opts.unroll {
-                Unroll::None => 16, // constant-size loop nest
-                Unroll::KeepOuter2 => body,
-                Unroll::KeepOuter1 => body * cols.max(1),
-                Unroll::Full => body * rows * cols,
-            }
+        total += match opts.unroll {
+            Unroll::None => 16, // constant-size loop nest
+            Unroll::KeepOuter2 => body,
+            Unroll::KeepOuter1 => body * cols.max(1),
+            Unroll::Full => body * rows * cols,
         };
     }
     Ok(total)
@@ -1235,6 +1486,10 @@ mod tests {
         for a in [AlignMode::Auto, AlignMode::Off] {
             assert_eq!(AlignMode::from_name(a.name()), Some(a));
         }
+        for r in [RolledMode::Auto, RolledMode::Off] {
+            assert_eq!(RolledMode::from_name(r.name()), Some(r));
+        }
+        assert_eq!(RolledMode::from_name("rolled"), None);
         let mut tiles = vec![TileMode::Auto, TileMode::Off];
         for n in 2..=8 {
             tiles.push(TileMode::Fixed(n));
@@ -1324,6 +1579,76 @@ mod tests {
             let src = gen("ball", &opts);
             assert!(!src.contains("nncg_ring"), "{}: no streaming outside kept-row unrolls", opts.tag());
         }
+    }
+
+    #[test]
+    fn rolled_emission_emits_steady_state_loop() {
+        use crate::graph::{Activation, Layer, Model, Padding};
+        // 24-row planes with a pool inside: the schedule settles into a
+        // steady state (period 4 ops x 3 ring phases, see schedule tests).
+        let m = Model::new("rollnet", &[24, 10, 3])
+            .push(Layer::conv2d(6, 3, 3, (1, 1), Padding::Same, Activation::Relu))
+            .push(Layer::maxpool(2, 2))
+            .push(Layer::conv2d(8, 3, 3, (1, 1), Padding::Same, Activation::None))
+            .push(Layer::softmax())
+            .with_random_weights(21);
+        let rolled_opts = CodegenOptions { fuse: FuseMode::Auto, ..CodegenOptions::sse3() };
+        let rolled = generate_c(&m, &rolled_opts).unwrap();
+        assert!(rolled.contains("/* steady state:"), "missing steady-state marker");
+        assert!(rolled.contains("for (i = 0; i <"), "missing the rolled row loop");
+        // Match a ring *access* (base-pointer binding), not the static
+        // declaration plan_buffers always emits.
+        assert!(rolled.contains("s = nncg_ring"), "rolled body must still read the rings");
+        assert!(!rolled.contains('%'), "rolled emission must stay free of runtime modulo");
+        assert_eq!(rolled.matches('{').count(), rolled.matches('}').count());
+        // The unrolled baseline emits the same groups, one block per row.
+        let unrolled_opts = CodegenOptions {
+            fuse: FuseMode::Auto,
+            fuse_rolled: RolledMode::Off,
+            ..CodegenOptions::sse3()
+        };
+        let unrolled = generate_c(&m, &unrolled_opts).unwrap();
+        assert!(!unrolled.contains("/* steady state:"));
+        assert!(unrolled.len() > rolled.len(), "rolling must shrink the generated C");
+        assert_ne!(rolled_opts.tag(), unrolled_opts.tag());
+    }
+
+    #[test]
+    fn rolled_and_unrolled_share_groups_and_scratch() {
+        // The partition (and therefore every buffer) must not depend on the
+        // emission form — that is what makes the two forms bit-comparable.
+        for name in zoo::PAPER_MODELS {
+            let m = zoo::by_name(name).unwrap().with_random_weights(9);
+            let rolled = scratch_report(&m, &CodegenOptions { fuse: FuseMode::Auto, ..CodegenOptions::sse3() }).unwrap();
+            let unrolled = scratch_report(
+                &m,
+                &CodegenOptions {
+                    fuse: FuseMode::Auto,
+                    fuse_rolled: RolledMode::Off,
+                    ..CodegenOptions::sse3()
+                },
+            )
+            .unwrap();
+            assert_eq!(rolled, unrolled, "{name}: scratch plan must ignore the rolled knob");
+        }
+    }
+
+    #[test]
+    fn robot_and_pedestrian_fuse_full_depth_without_budget_splits() {
+        // The statement budget used to fragment these models' chains
+        // (robot: [0,2) [2,3) [3,4) [4,6) [6,7)); periodic-eligible groups
+        // skip it, so both now fuse at the full depth cap.
+        let opts = CodegenOptions { fuse: FuseMode::Auto, ..CodegenOptions::sse3() };
+        let robot = gen("robot", &opts);
+        assert!(robot.contains("/* fused group: layers 0..3"), "robot group [0,4) missing");
+        assert!(robot.contains("/* fused group: layers 4..6"), "robot group [4,7) missing");
+        assert_eq!(robot.matches("/* fused group:").count(), 2, "robot must form exactly two groups");
+        assert!(robot.contains("/* steady state:"), "robot groups must roll");
+        let ped = gen("pedestrian", &opts);
+        assert!(ped.contains("/* fused group: layers 0..3"), "pedestrian group [0,4) missing");
+        assert!(ped.contains("/* fused group: layers 4..5"), "pedestrian group [4,6) missing");
+        assert_eq!(ped.matches("/* fused group:").count(), 2, "pedestrian must form exactly two groups");
+        assert!(ped.contains("/* steady state:"), "pedestrian groups must roll");
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! The scalar max uses the ternary operator (P2 — conditional moves).
 
 use super::cwriter::CWriter;
-use super::schedule::{self, RowMap};
+use super::schedule;
 use super::simd::ChannelSchedule;
 use super::{LayerCtx, Unroll};
 use anyhow::Result;
@@ -110,36 +110,42 @@ fn linear_rows(g: &PoolGeom) -> Vec<usize> {
 }
 
 /// One constant-coordinate output row of a max pool inside a row-streaming
-/// fusion group; window rows are fetched through `src_map` (the producer's
-/// ring buffer or the group input plane).
+/// fusion group; window rows are fetched through `io.src_map` (the
+/// producer's ring buffer or the group input plane) and the bases advance
+/// `io.*_iter_elems` floats per steady-state loop iteration.
 pub(crate) fn emit_maxpool_row_fused(
     w: &mut CWriter,
     ctx: &LayerCtx<'_>,
     pool: (usize, usize),
     stride: (usize, usize),
-    out_row: usize,
-    src_map: RowMap,
-    dst_row_off: usize,
+    io: &schedule::FusedRowIo,
 ) -> Result<()> {
     let (w_out, c) = (ctx.out_shape.w(), ctx.out_shape.c());
     let w_in = ctx.in_shape.w();
     let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
     let geom = PoolGeom {
-        src: ctx.src.to_string(),
-        dst: ctx.dst.to_string(),
+        src: schedule::fused_base(ctx.src, 0, io.src_iter_elems),
+        dst: schedule::fused_base(ctx.dst, 0, io.dst_iter_elems),
         pool,
         stride,
         w_in,
         w_out,
         c,
-        src_aligned: ctx.opts.use_aligned() && schedule::static_buf(ctx.src),
-        dst_aligned: ctx.opts.use_aligned() && schedule::static_buf(ctx.dst),
+        // Rolled loop terms keep the alignment proofs only when they
+        // advance whole vector groups.
+        src_aligned: ctx.opts.use_aligned()
+            && schedule::static_buf(ctx.src)
+            && io.src_iter_aligned(),
+        dst_aligned: ctx.opts.use_aligned()
+            && schedule::static_buf(ctx.dst)
+            && io.dst_iter_aligned(),
     };
-    let row_offs: Vec<usize> = (0..pool.0).map(|n| src_map.off(out_row * stride.0 + n)).collect();
+    let row_offs: Vec<usize> =
+        (0..pool.0).map(|n| io.src_map.off(io.out_row * stride.0 + n)).collect();
     if ctx.opts.unroll.keeps_cols() {
         w.open(&format!("for (j = 0; j < {w_out}; j++)"));
         w.line(&format!("const float *s = {} + j*{};", geom.src, stride.1 * c));
-        w.line(&format!("float *d = {} + {} + j*{};", geom.dst, dst_row_off, c));
+        w.line(&format!("float *d = {} + {} + j*{};", geom.dst, io.dst_row_off, c));
         emit_window(w, &geom, &sched, "s", 0, "d", 0, &row_offs);
         w.close();
     } else {
@@ -151,7 +157,7 @@ pub(crate) fn emit_maxpool_row_fused(
                 &geom.src.clone(),
                 j * stride.1 * c,
                 &geom.dst.clone(),
-                dst_row_off + j * c,
+                io.dst_row_off + j * c,
                 &row_offs,
             );
         }

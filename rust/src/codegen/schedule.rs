@@ -280,6 +280,246 @@ pub(crate) fn plan_group_rows(plans: &[AxisPlan]) -> GroupLayout {
     GroupLayout { ops, ring_rows }
 }
 
+/// Steady-state decomposition of a fusion group's row schedule:
+/// `ops[..body_start]` is the warm-up prologue (emitted unrolled),
+/// `ops[body_start .. body_start + ops_per_iter]` is the loop body pattern,
+/// repeated `iters` times with member `j`'s rows advancing `row_delta[j]`
+/// per iteration, and `ops[epilogue_start..]` drains the remaining (mostly
+/// border) rows unrolled. Guaranteed by [`detect_periodic`]:
+///
+/// * replaying prologue + `iters` shifted copies of the body + epilogue
+///   reproduces the schedule exactly (every row once, in order);
+/// * every row covered by the loop keeps the full, untrimmed kernel
+///   window, so one emitted body is valid for all iterations;
+/// * ring-slot assignments are identical across iterations (`row_delta`
+///   is a multiple of every ring height the op touches), so ring offsets
+///   resolved at generation time stay correct — the body contains one
+///   copy of the op pattern per ring phase, `ops_per_iter / pattern`
+///   phases total, and the emitted C needs no runtime `%`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct PeriodicLayout {
+    pub body_start: usize,
+    pub ops_per_iter: usize,
+    pub iters: usize,
+    pub row_delta: Vec<usize>,
+    pub epilogue_start: usize,
+}
+
+impl PeriodicLayout {
+    /// Ops the rolled emission writes out (prologue + one body + epilogue)
+    /// — the unrolled schedule writes `ops.len()` of them.
+    pub fn emitted_ops(&self, total: usize) -> usize {
+        self.body_start + self.ops_per_iter + (total - self.epilogue_start)
+    }
+}
+
+/// Find the steady-state period of a fusion group's row schedule, or
+/// `None` when no loop is worth emitting (tiny planes, degenerate
+/// geometry, or a schedule whose tail never settles).
+///
+/// The search walks candidate op-pattern periods smallest-first; for each
+/// it grows the largest suffix of the trimmed-window-free region in which
+/// `ops[t + p]` is `ops[t]` shifted by a per-member constant row delta,
+/// then multiplies the period by the smallest ring-phase count that
+/// returns every ring buffer to the same slot assignment. Everything is
+/// re-verified by literal replay before returning.
+pub(crate) fn detect_periodic(layout: &GroupLayout, plans: &[AxisPlan]) -> Option<PeriodicLayout> {
+    let ops = &layout.ops;
+    let n = plans.len();
+    if n < 2 || ops.len() < 8 {
+        return None;
+    }
+    // Regular region [r0, r1): ops whose kernel window is untrimmed. Rows
+    // ascend per member, so trimmed tops all precede r0 and the first
+    // trimmed bottom row caps r1.
+    let mut r0 = 0;
+    for (t, op) in ops.iter().enumerate() {
+        if op.row < plans[op.layer].lo {
+            r0 = t + 1;
+        }
+    }
+    let mut r1 = ops.len();
+    for (t, op) in ops.iter().enumerate().skip(r0) {
+        if op.row >= plans[op.layer].hi {
+            r1 = t;
+            break;
+        }
+    }
+    if r1 <= r0 + 3 {
+        return None;
+    }
+    'period: for p in 1..=(r1 - r0) / 2 {
+        // Largest a with ops[t + p] == shift(ops[t]) for all t in [a, r1-p).
+        let mut delta: Vec<Option<usize>> = vec![None; n];
+        let mut a = r1 - p;
+        while a > r0 {
+            let x = ops[a - 1];
+            let y = ops[a - 1 + p];
+            if x.layer != y.layer || y.row <= x.row {
+                break;
+            }
+            let d = y.row - x.row;
+            match delta[x.layer] {
+                Some(prev) if prev != d => break,
+                _ => delta[x.layer] = Some(d),
+            }
+            a -= 1;
+        }
+        if r1 - a < 2 * p {
+            continue;
+        }
+        // Rows each member advances per pattern period (== its op count in
+        // one period, since a member's rows step by one per op).
+        let mut per_period = vec![0usize; n];
+        for op in &ops[a..a + p] {
+            per_period[op.layer] += 1;
+        }
+        // Ring-phase count: smallest iteration multiple after which every
+        // ring buffer's row->slot assignment repeats.
+        let mut phases = 1usize;
+        for e in 0..n - 1 {
+            if per_period[e] == 0 {
+                continue 'period;
+            }
+            let r = layout.ring_rows[e].max(1);
+            phases = crate::util::lcm(phases, r / crate::util::gcd(per_period[e], r));
+            if phases == 0 || phases > 64 {
+                continue 'period;
+            }
+        }
+        let ops_per_iter = p * phases;
+        if r1 - a < 2 * ops_per_iter {
+            continue;
+        }
+        let row_delta: Vec<usize> = per_period.iter().map(|d| d * phases).collect();
+        // Alignment shift: sliding the loop start by whole pattern periods
+        // can move leftover ops from the epilogue into the prologue and
+        // buy another iteration.
+        let mut best: Option<PeriodicLayout> = None;
+        for shift in 0..phases {
+            let b = a + shift * p;
+            if b + 2 * ops_per_iter > r1 {
+                break;
+            }
+            let iters = (r1 - b) / ops_per_iter;
+            let cand = PeriodicLayout {
+                body_start: b,
+                ops_per_iter,
+                iters,
+                row_delta: row_delta.clone(),
+                epilogue_start: b + iters * ops_per_iter,
+            };
+            if best.as_ref().map_or(true, |l| cand.emitted_ops(ops.len()) < l.emitted_ops(ops.len())) {
+                best = Some(cand);
+            }
+        }
+        if let Some(cand) = best {
+            if verify_periodic(layout, plans, &cand) {
+                return Some(cand);
+            }
+        }
+    }
+    None
+}
+
+/// Authoritative re-check of a [`PeriodicLayout`] candidate: literal
+/// replay equality plus the window- and ring-stability conditions the
+/// rolled emission relies on.
+fn verify_periodic(layout: &GroupLayout, plans: &[AxisPlan], cand: &PeriodicLayout) -> bool {
+    let ops = &layout.ops;
+    let n = plans.len();
+    if cand.iters < 2
+        || cand.ops_per_iter == 0
+        || cand.epilogue_start != cand.body_start + cand.iters * cand.ops_per_iter
+        || cand.epilogue_start > ops.len()
+        || cand.row_delta.len() != n
+    {
+        return false;
+    }
+    // Replay: the loop must reproduce the schedule op for op.
+    let mut idx = cand.body_start;
+    for i in 0..cand.iters {
+        for t in 0..cand.ops_per_iter {
+            let pat = ops[cand.body_start + t];
+            let expect = RowOp { layer: pat.layer, row: pat.row + i * cand.row_delta[pat.layer] };
+            if ops[idx] != expect {
+                return false;
+            }
+            idx += 1;
+        }
+    }
+    // One emitted body must be valid for every iteration.
+    for t in 0..cand.ops_per_iter {
+        let op = ops[cand.body_start + t];
+        let pl = &plans[op.layer];
+        let last_row = op.row + (cand.iters - 1) * cand.row_delta[op.layer];
+        // Full kernel window on every covered row (same emitted taps).
+        if op.row < pl.lo || last_row >= pl.hi {
+            return false;
+        }
+        // Ring writes land in the same slot each iteration.
+        if op.layer + 1 < n && cand.row_delta[op.layer] % layout.ring_rows[op.layer].max(1) != 0 {
+            return false;
+        }
+        // Ring reads see the same slots each iteration (the window start
+        // advances `row_delta * stride` producer rows per iteration).
+        if op.layer > 0 {
+            let adv = cand.row_delta[op.layer] * pl.stride;
+            if adv % layout.ring_rows[op.layer - 1].max(1) != 0 {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Row-level I/O of one fused-row emission, shared by the unrolled and
+/// steady-state (rolled) paths. In the rolled loop body the row coordinate
+/// is `out_row + i * row_delta` for loop variable `i`; plane bases then
+/// advance `*_iter_elems` floats per iteration while ring bases stay fixed
+/// (slot assignments are iteration-invariant by construction).
+pub(crate) struct FusedRowIo {
+    /// Output row at the first covered iteration (generation-time constant
+    /// outside the loop).
+    pub out_row: usize,
+    /// Addressing of the source rows (producer ring or group input plane).
+    pub src_map: RowMap,
+    /// Element offset of the output row inside the destination buffer.
+    pub dst_row_off: usize,
+    /// Floats the source base advances per loop iteration (0 when the base
+    /// is constant: ring sources and unrolled rows).
+    pub src_iter_elems: usize,
+    /// Floats the destination base advances per loop iteration.
+    pub dst_iter_elems: usize,
+}
+
+impl FusedRowIo {
+    /// True when a vector access through this side's base may still claim
+    /// provable alignment: a loop-term of a whole number of 8-float groups
+    /// (the widest vector) preserves every narrower width's proof.
+    pub fn src_iter_aligned(&self) -> bool {
+        self.src_iter_elems % 8 == 0
+    }
+
+    pub fn dst_iter_aligned(&self) -> bool {
+        self.dst_iter_elems % 8 == 0
+    }
+}
+
+/// C expression for a fused-row base pointer: constant offset plus an
+/// optional steady-state loop term (`i` is the loop variable). Compound
+/// forms are parenthesized so callers may both add offsets to the result
+/// and index it with `[]` (indexing an unparenthesized `a + i*b` would
+/// bind the subscript to `b`).
+pub(crate) fn fused_base(buf: &str, off: usize, iter_elems: usize) -> String {
+    match (off, iter_elems) {
+        (0, 0) => buf.to_string(),
+        (o, 0) => format!("({buf} + {o})"),
+        (0, it) => format!("({buf} + i*{it})"),
+        (o, it) => format!("({buf} + {o} + i*{it})"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -513,6 +753,176 @@ mod tests {
             assert_eq!(produced[n - 1], plans[n - 1].out, "trial {trial}: final plane incomplete");
         }
         assert!(checked > 100, "property exercised only {checked} chains");
+    }
+
+    #[test]
+    fn periodic_two_stride1_convs() {
+        // Two 3x3 s1 Same convs on 16 rows: pattern [L0, L1] (period 2),
+        // one ring of 3 rows rotating by 1 per pattern → 3 ring phases.
+        let a = AxisPlan::padless(16, 1, 3, 1, 16);
+        let b = AxisPlan::padless(16, 1, 3, 1, 16);
+        let layout = plan_group_rows(&[a, b]);
+        assert_eq!(layout.ops.len(), 32);
+        assert_eq!(layout.ring_rows, vec![3]);
+        let p = detect_periodic(&layout, &[a, b]).expect("chain must be periodic");
+        assert_eq!(p.body_start, 3);
+        assert_eq!(p.ops_per_iter, 6); // period 2 x 3 phases
+        assert_eq!(p.iters, 4);
+        assert_eq!(p.row_delta, vec![3, 3]);
+        assert_eq!(p.epilogue_start, 27);
+        assert_eq!(p.emitted_ops(layout.ops.len()), 3 + 6 + 5);
+    }
+
+    #[test]
+    fn periodic_conv_into_pool_needs_single_phase() {
+        // conv 3x3 s1 Same (24 rows) into 2x2 s2 pool: the ring holds 2
+        // rows and the conv advances 2 rows per pattern — slots repeat
+        // every iteration, no phase expansion.
+        let conv = AxisPlan::padless(24, 1, 3, 1, 24);
+        let pool = AxisPlan::padless(12, 2, 2, 0, 24);
+        let layout = plan_group_rows(&[conv, pool]);
+        assert_eq!(layout.ops.len(), 36);
+        assert_eq!(layout.ring_rows, vec![2]);
+        let p = detect_periodic(&layout, &[conv, pool]).unwrap();
+        assert_eq!(p.body_start, 1);
+        assert_eq!(p.ops_per_iter, 3); // period 3 x 1 phase
+        assert_eq!(p.iters, 11);
+        assert_eq!(p.row_delta, vec![2, 1]);
+        assert_eq!(p.epilogue_start, 34);
+    }
+
+    #[test]
+    fn periodic_robot_first_group_shape() {
+        // Robot group [0..4): conv8 s1 (60 rows) -> pool s2 -> conv12 s1
+        // -> conv8 s1. Period 5 ops, 3 ring phases, 8 steady iterations.
+        let plans = [
+            AxisPlan::padless(60, 1, 3, 1, 60),
+            AxisPlan::padless(30, 2, 2, 0, 60),
+            AxisPlan::padless(30, 1, 3, 1, 30),
+            AxisPlan::padless(30, 1, 3, 1, 30),
+        ];
+        let layout = plan_group_rows(&plans);
+        assert_eq!(layout.ops.len(), 150);
+        assert_eq!(layout.ring_rows, vec![2, 3, 3]);
+        let p = detect_periodic(&layout, &plans).unwrap();
+        assert_eq!(p.body_start, 12);
+        assert_eq!(p.ops_per_iter, 15);
+        assert_eq!(p.iters, 8);
+        assert_eq!(p.row_delta, vec![6, 3, 3, 3]);
+        assert_eq!(p.epilogue_start, 132);
+        // The rolled emission writes 45 of 150 ops — the >=3x robot
+        // code-size claim comes straight from here.
+        assert!(p.emitted_ops(150) * 3 <= 150);
+    }
+
+    #[test]
+    fn short_planes_are_not_periodic() {
+        // Ball's trunk: conv 5x5 s2 Same (16 rows) -> pool -> conv 3x3
+        // Valid; the final plane has 2 rows — nothing to roll.
+        let plans = [
+            AxisPlan::padless(8, 2, 5, 1, 16),
+            AxisPlan::padless(4, 2, 2, 0, 8),
+            AxisPlan::padless(2, 1, 3, 0, 4),
+        ];
+        let layout = plan_group_rows(&plans);
+        assert!(detect_periodic(&layout, &plans).is_none());
+    }
+
+    /// Property (issue acceptance): across random chains, whenever a
+    /// periodic layout is detected, prologue + iters x body + epilogue
+    /// covers every member's rows exactly once in order, and replaying the
+    /// rolled schedule against ring buffers of the planned heights — with
+    /// the body's ring slots frozen at iteration 0, exactly as the emitter
+    /// resolves them — never reads an aliased slot.
+    #[test]
+    fn periodic_layout_covers_rows_and_preserves_ring_aliasing() {
+        let mut rng = crate::util::XorShift64::new(0x9E10D1C);
+        let mut checked = 0usize;
+        let mut detected = 0usize;
+        for trial in 0..400 {
+            let mut h = 10 + rng.below(30);
+            let depth = 2 + rng.below(3);
+            let mut plans: Vec<AxisPlan> = Vec::new();
+            for _ in 0..depth {
+                let k = 1 + rng.below(3.min(h));
+                let s = 1 + rng.below(2);
+                let (out, pad) = if rng.below(2) == 0 {
+                    let out = (h + s - 1) / s;
+                    let total = ((out - 1) * s + k).saturating_sub(h);
+                    (out, total / 2)
+                } else {
+                    if h < k {
+                        break;
+                    }
+                    ((h - k) / s + 1, 0)
+                };
+                if out == 0 {
+                    break;
+                }
+                plans.push(AxisPlan::padless(out, s, k, pad, h));
+                h = out;
+                if h < 2 {
+                    break;
+                }
+            }
+            if plans.len() < 2 {
+                continue;
+            }
+            checked += 1;
+            let layout = plan_group_rows(&plans);
+            let p = match detect_periodic(&layout, &plans) {
+                Some(p) => p,
+                None => continue,
+            };
+            detected += 1;
+            let n = plans.len();
+            // Reconstruct the rolled emission's op stream.
+            let mut rec: Vec<RowOp> = layout.ops[..p.body_start].to_vec();
+            for i in 0..p.iters {
+                for t in 0..p.ops_per_iter {
+                    let pat = layout.ops[p.body_start + t];
+                    rec.push(RowOp { layer: pat.layer, row: pat.row + i * p.row_delta[pat.layer] });
+                }
+            }
+            rec.extend_from_slice(&layout.ops[p.epilogue_start..]);
+            // Coverage: every member's rows exactly once, in order.
+            let mut next = vec![0usize; n];
+            for op in &rec {
+                assert_eq!(op.row, next[op.layer], "trial {trial}: row skipped or repeated");
+                next[op.layer] = op.row + 1;
+            }
+            for (j, plan) in plans.iter().enumerate() {
+                assert_eq!(next[j], plan.out, "trial {trial}: member {j} incomplete");
+            }
+            // Ring aliasing on the reconstructed stream, with body reads
+            // resolved at iteration 0 (what the emitted C hard-codes).
+            let mut slots: Vec<Vec<Option<usize>>> =
+                (0..n - 1).map(|e| vec![None; layout.ring_rows[e]]).collect();
+            for (t, op) in rec.iter().enumerate() {
+                if op.layer > 0 {
+                    let e = op.layer - 1;
+                    let r = layout.ring_rows[e];
+                    let (k0, k1) = plans[op.layer].window(op.row);
+                    let start = plans[op.layer].src_start(op.row);
+                    // The emitter freezes slot indices at the body's first
+                    // iteration; stability (verified by the detector) makes
+                    // iteration-i slots identical.
+                    for q in start..start + (k1 - k0) {
+                        assert_eq!(
+                            slots[e][q % r],
+                            Some(q),
+                            "trial {trial} op {t}: rolled body reads an aliased ring slot"
+                        );
+                    }
+                }
+                if op.layer < n - 1 {
+                    let r = layout.ring_rows[op.layer];
+                    slots[op.layer][op.row % r] = Some(op.row);
+                }
+            }
+        }
+        assert!(checked > 150, "property exercised only {checked} chains");
+        assert!(detected > 60, "period detector fired on only {detected}/{checked} chains");
     }
 
     #[test]

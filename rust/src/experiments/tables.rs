@@ -283,6 +283,11 @@ pub struct AblationRow {
 /// pad-copy vs padless × untiled vs tiled, an aligned-vs-unaligned axis, a
 /// 1-D-vs-2-D register-tile axis, and a fused-vs-unfused axis (row-
 /// streaming fusion with ring line buffers) on the fast configuration.
+/// Since PR 4 the fused variant emits the steady-state **rolled** row
+/// loops (`--fuse-rolled auto`, the default): periodic-eligible chains
+/// fuse at full depth with prologue + `for` loop + epilogue emission, so
+/// its `c_bytes` column now tracks the rolled code size and its
+/// `static_bytes` the deeper groups' smaller footprint.
 pub const ABLATION_VARIANTS: [(&str, PadMode, TileMode, AlignMode, FuseMode); 7] = [
     ("pad-copy+untiled", PadMode::Copy, TileMode::Off, AlignMode::Auto, FuseMode::Off),
     ("padless+untiled", PadMode::Padless, TileMode::Off, AlignMode::Auto, FuseMode::Off),
@@ -368,6 +373,16 @@ pub fn render_ablation(rows: &[AblationRow]) -> String {
                 fu as f64 / 1024.0,
                 un as f64 / 1024.0,
                 un as f64 / fu.max(1) as f64
+            ));
+        }
+        let find_bytes = |variant: &str| {
+            rows.iter().find(|r| r.model == name && r.variant == variant).map(|r| r.c_bytes)
+        };
+        if let (Some(plain), Some(fu)) = (find_bytes("padless+tiled"), find_bytes("padless+tiled+fused")) {
+            out.push_str(&format!(
+                "{name}: rolled-fused C size = {:.0}K vs {:.0}K layer-at-a-time\n",
+                fu as f64 / 1024.0,
+                plain as f64 / 1024.0
             ));
         }
     }

@@ -22,6 +22,28 @@ pub fn div_ceil(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
+/// Greatest common divisor (Euclid). `gcd(n, 0) == gcd(0, n) == n`.
+#[inline]
+pub fn gcd(a: usize, b: usize) -> usize {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Least common multiple; 0 if either argument is 0.
+#[inline]
+pub fn lcm(a: usize, b: usize) -> usize {
+    if a == 0 || b == 0 {
+        0
+    } else {
+        a / gcd(a, b) * b
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -39,5 +61,18 @@ mod tests {
         assert_eq!(div_ceil(1, 4), 1);
         assert_eq!(div_ceil(4, 4), 1);
         assert_eq!(div_ceil(5, 4), 2);
+    }
+
+    #[test]
+    fn gcd_lcm_basics() {
+        assert_eq!(gcd(12, 8), 4);
+        assert_eq!(gcd(8, 12), 4);
+        assert_eq!(gcd(7, 3), 1);
+        assert_eq!(gcd(5, 0), 5);
+        assert_eq!(gcd(0, 5), 5);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(3, 3), 3);
+        assert_eq!(lcm(1, 9), 9);
+        assert_eq!(lcm(0, 9), 0);
     }
 }

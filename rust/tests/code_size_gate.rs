@@ -1,0 +1,130 @@
+//! CI code-size gate for the steady-state rolled fused emission.
+//!
+//! The rolled form exists so that big planes fuse without the generated C
+//! (and its gcc compile time) exploding. This suite pins that property:
+//!
+//! * robot and pedestrian fuse at full depth — no statement-budget group
+//!   splits — and their schedules roll;
+//! * rolling shrinks the fused robot C by a guaranteed factor against the
+//!   fully unrolled row schedule of the *same* groups (`--fuse-rolled
+//!   off`), and by ≥5× in the tall-plane regime the optimization targets;
+//! * the rolled robot still compiles inside a wall-clock budget.
+
+use nncg::codegen::{generate_c, CodegenOptions, FuseMode, RolledMode};
+use nncg::graph::{zoo, Activation, Layer, Model, Padding};
+
+fn stmts(src: &str) -> usize {
+    src.matches(';').count()
+}
+
+fn rolled(base: &CodegenOptions) -> CodegenOptions {
+    CodegenOptions { fuse: FuseMode::Auto, fuse_rolled: RolledMode::Auto, ..base.clone() }
+}
+
+fn unrolled(base: &CodegenOptions) -> CodegenOptions {
+    CodegenOptions { fuse: FuseMode::Auto, fuse_rolled: RolledMode::Off, ..base.clone() }
+}
+
+/// A streaming chain with the tall planes (96 rows) the ring buffers are
+/// for — the regime where the paper models' successors live.
+fn tall_stream_net() -> Model {
+    Model::new("stream96", &[96, 96, 3])
+        .push(Layer::conv2d(8, 3, 3, (1, 1), Padding::Same, Activation::Relu))
+        .push(Layer::conv2d(8, 3, 3, (1, 1), Padding::Same, Activation::Relu))
+        .push(Layer::maxpool(2, 2))
+        .with_random_weights(7)
+}
+
+#[test]
+fn robot_fuses_full_depth_and_rolling_shrinks_statement_count() {
+    let base = CodegenOptions::sse3();
+    let robot = zoo::by_name("robot").unwrap().with_random_weights(5);
+    let src_rolled = generate_c(&robot, &rolled(&base)).unwrap();
+    // Full-depth fusion: exactly two groups, both rolled, no budget splits.
+    assert_eq!(
+        src_rolled.matches("/* fused group:").count(),
+        2,
+        "robot must fuse into exactly two full-depth groups"
+    );
+    assert!(src_rolled.contains("/* fused group: layers 0..3"));
+    assert!(src_rolled.contains("/* fused group: layers 4..6"));
+    assert_eq!(
+        src_rolled.matches("/* steady state:").count(),
+        2,
+        "both robot groups must emit steady-state loops"
+    );
+    assert!(!src_rolled.contains('%'), "rolled emission must not introduce runtime modulo");
+    // Same groups, fully unrolled row schedule (the PR 3 emission form at
+    // this depth — the thing the statement budget used to protect gcc
+    // from). Rolling must cut the statement count decisively. The exact
+    // factor is geometry-bound: robot's post-pool planes are only 15–30
+    // rows tall, which caps the win near 3× (see the tall-plane test for
+    // the ≥5× regime).
+    let src_unrolled = generate_c(&robot, &unrolled(&base)).unwrap();
+    let (r, u) = (stmts(&src_rolled), stmts(&src_unrolled));
+    assert!(
+        r * 2 <= u,
+        "rolled robot must halve the unrolled fused statement count: rolled={r} unrolled={u}"
+    );
+    assert!(src_rolled.len() * 2 <= src_unrolled.len(), "byte size must shrink alongside");
+}
+
+#[test]
+fn tall_planes_roll_at_least_five_times_smaller() {
+    let base = CodegenOptions::sse3();
+    let m = tall_stream_net();
+    let src_rolled = generate_c(&m, &rolled(&base)).unwrap();
+    assert!(src_rolled.contains("/* steady state:"), "stream chain must roll");
+    let src_unrolled = generate_c(&m, &unrolled(&base)).unwrap();
+    let (r, u) = (stmts(&src_rolled), stmts(&src_unrolled));
+    assert!(
+        r * 5 <= u,
+        "tall-plane rolled emission must be >=5x smaller: rolled={r} unrolled={u}"
+    );
+}
+
+#[test]
+fn pedestrian_fuses_full_depth_and_shrinks() {
+    let base = CodegenOptions::sse3();
+    let ped = zoo::by_name("pedestrian").unwrap().with_random_weights(5);
+    let src_rolled = generate_c(&ped, &rolled(&base)).unwrap();
+    assert_eq!(
+        src_rolled.matches("/* fused group:").count(),
+        2,
+        "pedestrian must fuse into exactly two full-depth groups"
+    );
+    assert!(src_rolled.contains("/* steady state:"), "pedestrian groups must roll");
+    let src_unrolled = generate_c(&ped, &unrolled(&base)).unwrap();
+    assert!(
+        stmts(&src_rolled) < stmts(&src_unrolled),
+        "rolling must not grow pedestrian's generated C"
+    );
+}
+
+/// gcc wall-time budget: the rolled fused robot — the biggest snapshot
+/// configuration — must stay comfortably compilable. (Content-cached, so
+/// reruns are instant; skipped when no C compiler is present.)
+#[test]
+fn robot_rolled_compiles_within_wall_time_budget() {
+    if nncg::cc::CcDriver::detect().is_err() {
+        eprintln!("SKIP compile budget: no C compiler on this host");
+        return;
+    }
+    let robot = zoo::by_name("robot").unwrap().with_random_weights(5);
+    let opts = rolled(&CodegenOptions::sse3());
+    let work = std::env::temp_dir().join("nncg-code-size-gate");
+    let t0 = std::time::Instant::now();
+    let cnn = nncg::cc::CompiledCnn::build(&robot, &opts, &work).unwrap();
+    let elapsed = t0.elapsed();
+    // Generous enough for a slow shared runner compiling the rolled file
+    // cold (~2-3 min observed headroom), far below what the unrolled
+    // full-depth schedule would need.
+    assert!(
+        elapsed.as_secs() < 600,
+        "rolled robot took {elapsed:?} to build (budget 600s)"
+    );
+    // And it still runs.
+    let mut rng = nncg::util::XorShift64::new(3);
+    let x = nncg::tensor::Tensor::rand(robot.input.dims(), 0.0, 1.0, &mut rng);
+    cnn.infer(&x).unwrap();
+}

@@ -1,0 +1,161 @@
+//! Golden-C snapshot tests: the generated C for each paper model under a
+//! representative slice of the flag matrix (pad × tile × isa × fuse) is
+//! checked in under `rust/tests/golden/`, so emitter refactors show up as
+//! reviewable diffs instead of silent drift.
+//!
+//! Workflow:
+//! * a missing snapshot is written on first run (and the test passes with
+//!   a notice) — commit the new files;
+//! * a mismatch fails with a summary; regenerate deliberately with
+//!   `NNCG_BLESS=1 cargo test --test golden_c` and review the diff;
+//! * every snapshot must stay inside the per-file statement budget — a
+//!   config whose output blows past it fails even when blessed.
+//!
+//! Snapshot identity relies on `generate_c` being deterministic for a
+//! fixed weight seed (asserted by `codegen_is_deterministic` in
+//! `property_codegen.rs`).
+
+use nncg::codegen::{generate_c, CodegenOptions, FuseMode, Isa, PadMode, TileMode};
+use nncg::graph::zoo;
+use std::path::PathBuf;
+
+/// Weight seed shared by every snapshot (arbitrary, but never change it —
+/// that would invalidate all snapshots at once).
+const SEED: u64 = 0x601D;
+
+/// Hard per-snapshot budget: no checked-in configuration may exceed this
+/// many C statements (the rolled fused robot, the largest, stays well
+/// under; a regression that re-unrolls a steady state trips this).
+const STMT_BUDGET: usize = 400_000;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden")
+}
+
+fn stmts(src: &str) -> usize {
+    src.matches(';').count()
+}
+
+/// The snapshot matrix: (label, model, options). ~12 configurations
+/// covering every ISA family, both pad modes, 1-D/2-D tiling, and fusion
+/// in both its rolled (robot/pedestrian stream periodically) and trivial
+/// (ball is too short to roll) forms.
+fn matrix() -> Vec<(&'static str, &'static str, CodegenOptions)> {
+    vec![
+        ("ball-default-sse3", "ball", CodegenOptions::sse3()),
+        ("ball-paper-generic", "ball", CodegenOptions::paper_baseline(Isa::Generic)),
+        ("ball-sse3-full-unroll", "ball", CodegenOptions::sse3_full_unroll()),
+        ("ball-fused", "ball", CodegenOptions { fuse: FuseMode::Auto, ..CodegenOptions::sse3() }),
+        ("ball-neon", "ball", CodegenOptions { isa: Isa::Neon, ..Default::default() }),
+        (
+            "ball-avx2-tile2x4",
+            "ball",
+            CodegenOptions { isa: Isa::Avx2, tile: TileMode::Fixed2D(2, 4), ..Default::default() },
+        ),
+        ("pedestrian-default-sse3", "pedestrian", CodegenOptions::sse3()),
+        (
+            "pedestrian-fused-rolled",
+            "pedestrian",
+            CodegenOptions { fuse: FuseMode::Auto, ..CodegenOptions::sse3() },
+        ),
+        (
+            "pedestrian-padcopy-untiled",
+            "pedestrian",
+            CodegenOptions { pad_mode: PadMode::Copy, tile: TileMode::Off, ..CodegenOptions::sse3() },
+        ),
+        ("robot-default-sse3", "robot", CodegenOptions::sse3()),
+        (
+            "robot-fused-rolled",
+            "robot",
+            CodegenOptions { fuse: FuseMode::Auto, ..CodegenOptions::sse3() },
+        ),
+        (
+            "robot-neon-vfpv3-fused",
+            "robot",
+            CodegenOptions { isa: Isa::NeonVfpv3, fuse: FuseMode::Auto, ..Default::default() },
+        ),
+    ]
+}
+
+#[test]
+fn golden_snapshots_match() {
+    let dir = golden_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let bless = std::env::var("NNCG_BLESS").map(|v| v == "1").unwrap_or(false);
+    let mut blessed: Vec<String> = Vec::new();
+    let mut drifted: Vec<String> = Vec::new();
+    for (label, model, opts) in matrix() {
+        let m = zoo::by_name(model).unwrap().with_random_weights(SEED);
+        let src = generate_c(&m, &opts).unwrap_or_else(|e| panic!("{label}: {e:#}"));
+        // Structural gates hold for every snapshot, blessed or not.
+        assert_eq!(
+            src.matches('{').count(),
+            src.matches('}').count(),
+            "{label}: unbalanced braces"
+        );
+        let n = stmts(&src);
+        assert!(
+            n <= STMT_BUDGET,
+            "{label}: {n} statements exceed the {STMT_BUDGET} snapshot budget"
+        );
+        let path = dir.join(format!("{label}.c"));
+        if bless || !path.exists() {
+            std::fs::write(&path, &src).unwrap();
+            blessed.push(label.to_string());
+            continue;
+        }
+        let want = std::fs::read_to_string(&path).unwrap();
+        if want != src {
+            // When one output is a prefix of the other, the first diff is
+            // the line right past the shorter file.
+            let first_diff = want
+                .lines()
+                .zip(src.lines())
+                .position(|(a, b)| a != b)
+                .unwrap_or_else(|| want.lines().count().min(src.lines().count()))
+                + 1;
+            drifted.push(format!(
+                "{label}: {} -> {} bytes, first differing line {first_diff}",
+                want.len(),
+                src.len()
+            ));
+        }
+    }
+    if !blessed.is_empty() {
+        eprintln!(
+            "golden_c: blessed {} snapshot(s): {} — commit rust/tests/golden/",
+            blessed.len(),
+            blessed.join(", ")
+        );
+    }
+    assert!(
+        drifted.is_empty(),
+        "generated C drifted from the golden snapshots:\n  {}\nIf intentional, regenerate with \
+         NNCG_BLESS=1 cargo test --test golden_c and review the diff.",
+        drifted.join("\n  ")
+    );
+}
+
+/// The snapshot labels are unique and every referenced model exists (a
+/// cheap guard so a matrix edit cannot silently shadow a snapshot file).
+#[test]
+fn golden_matrix_is_well_formed() {
+    let m = matrix();
+    for (label, model, _) in &m {
+        assert!(zoo::by_name(model).is_some(), "{label}: unknown model {model}");
+    }
+    let mut labels: Vec<&str> = m.iter().map(|(l, _, _)| *l).collect();
+    labels.sort_unstable();
+    labels.dedup();
+    assert_eq!(labels.len(), m.len(), "duplicate snapshot labels");
+    assert!(m.len() >= 12, "snapshot matrix must cover at least 12 configurations");
+    // The rolled-fusion configurations must actually roll (guards the
+    // matrix against a future default change silently dropping coverage).
+    for (label, model, opts) in &m {
+        if label.contains("fused-rolled") {
+            let model = zoo::by_name(model).unwrap().with_random_weights(SEED);
+            let src = generate_c(&model, opts).unwrap();
+            assert!(src.contains("/* steady state:"), "{label}: expected rolled emission");
+        }
+    }
+}

@@ -7,7 +7,7 @@
 //! random kernel/stride/padding geometry, odd channel counts (SSE fallback
 //! paths), BN in every legal position, dense heads, activation placement.
 
-use nncg::codegen::{AlignMode, CodegenOptions, FuseMode, Isa, PadMode, TileMode, Unroll};
+use nncg::codegen::{AlignMode, CodegenOptions, FuseMode, Isa, PadMode, RolledMode, TileMode, Unroll};
 use nncg::graph::{Activation, Layer, Model, Padding};
 use nncg::tensor::Tensor;
 use nncg::util::XorShift64;
@@ -222,6 +222,81 @@ fn fuzz_fused_outputs_bit_identical() {
         }
     }
     assert!(fused_seen >= 1, "no model formed a fusion group");
+}
+
+/// Differential property (issue acceptance): periodic-rolled fused,
+/// unrolled fused, and unfused codegen are three emissions of the same
+/// arithmetic — their compiled outputs must be **bit-identical**. Covers
+/// odd channel counts, a stride-2 Same conv and a pool inside the rolled
+/// group, plus random chains.
+#[test]
+fn fuzz_rolled_vs_unrolled_vs_unfused_bit_identical() {
+    let mut rng = XorShift64::new(0x0110);
+    let work = std::env::temp_dir().join("nncg-fuzz-rolled");
+    // Deterministic chains known (schedule unit tests + simulation) to
+    // settle into a rolled steady state.
+    let mut models = vec![
+        // odd channels + pool inside the group, 24 rows.
+        Model::new("rollmix", &[24, 10, 3])
+            .push(Layer::conv2d(6, 3, 3, (1, 1), Padding::Same, Activation::Relu))
+            .push(Layer::maxpool(2, 2))
+            .push(Layer::conv2d(8, 3, 3, (1, 1), Padding::Same, Activation::None))
+            .with_random_weights(31),
+        // stride-2 Same conv feeding the chain, 32 rows.
+        Model::new("rollstride", &[32, 9, 2])
+            .push(Layer::conv2d(4, 3, 3, (2, 2), Padding::Same, Activation::None))
+            .push(Layer::conv2d(4, 3, 3, (1, 1), Padding::Same, Activation::Relu))
+            .push(Layer::maxpool(2, 2))
+            .with_random_weights(32),
+    ];
+    for t in 0..5usize {
+        models.push(random_model(&mut rng, 11000 + t));
+    }
+    let mut rolled_seen = 0usize;
+    for (mi, model) in models.iter().enumerate() {
+        if model.validate().is_err() || model.infer_shapes().is_err() {
+            continue;
+        }
+        let isa = if rng.below(2) == 0 { Isa::Generic } else { Isa::Sse3 };
+        let base = CodegenOptions { isa, ..Default::default() };
+        let rolled_opts = CodegenOptions { fuse: FuseMode::Auto, ..base.clone() };
+        let unrolled_opts = CodegenOptions {
+            fuse: FuseMode::Auto,
+            fuse_rolled: RolledMode::Off,
+            ..base.clone()
+        };
+        let rolled_src = nncg::codegen::generate_c(model, &rolled_opts).unwrap();
+        let unrolled_src = nncg::codegen::generate_c(model, &unrolled_opts).unwrap();
+        if rolled_src.contains("/* steady state:") {
+            rolled_seen += 1;
+            assert!(
+                rolled_src.len() < unrolled_src.len(),
+                "{}: rolling must shrink the generated C",
+                model.name
+            );
+        }
+        if mi < 2 {
+            assert!(
+                rolled_src.contains("/* steady state:"),
+                "{}: deterministic chain must roll",
+                model.name
+            );
+        }
+        let unfused = nncg::cc::CompiledCnn::build(model, &base, &work).unwrap();
+        let fused_unrolled =
+            nncg::cc::CompiledCnn::from_source(model, &unrolled_opts, &unrolled_src, &work).unwrap();
+        let fused_rolled =
+            nncg::cc::CompiledCnn::from_source(model, &rolled_opts, &rolled_src, &work).unwrap();
+        for _ in 0..2 {
+            let x = Tensor::rand(model.input.dims(), -1.0, 1.0, &mut rng);
+            let y0 = unfused.infer(&x).unwrap();
+            let y1 = fused_unrolled.infer(&x).unwrap();
+            let y2 = fused_rolled.infer(&x).unwrap();
+            assert_eq!(y0, y1, "{}: unrolled fused output differs from unfused", model.name);
+            assert_eq!(y0, y2, "{}: rolled fused output differs from unfused", model.name);
+        }
+    }
+    assert!(rolled_seen >= 2, "only {rolled_seen} models exercised the rolled path");
 }
 
 /// Same seed ⇒ byte-identical generated C (reproducible builds).
