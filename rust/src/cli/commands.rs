@@ -30,7 +30,12 @@ fn opts_from_args(args: &Args) -> Result<CodegenOptions> {
     let fuse = FuseMode::from_name(args.get_or("fuse", "off"))
         .ok_or_else(|| anyhow::anyhow!("unknown --fuse (auto|off|2..8 = max group depth)"))?;
     let fuse_rolled = RolledMode::from_name(args.get_or("fuse-rolled", "auto")).ok_or_else(|| {
-        anyhow::anyhow!("unknown --fuse-rolled (auto = steady-state loops | off = unrolled row schedule)")
+        anyhow::anyhow!(
+            "unknown --fuse-rolled (auto = rotate, falling back to expand | \
+             rotate = ring-pointer rotation, one pattern period per body | \
+             expand = phase-expanded body (differential baseline) | \
+             off = unrolled row schedule)"
+        )
     })?;
     Ok(CodegenOptions {
         isa,
@@ -392,6 +397,10 @@ mod tests {
         assert_eq!(o.fuse_rolled, RolledMode::Auto);
         let o = opts_from_args(&args(&["--fuse", "auto", "--fuse-rolled", "off"])).unwrap();
         assert_eq!(o.fuse_rolled, RolledMode::Off);
+        let o = opts_from_args(&args(&["--fuse", "auto", "--fuse-rolled", "rotate"])).unwrap();
+        assert_eq!(o.fuse_rolled, RolledMode::Rotate);
+        let o = opts_from_args(&args(&["--fuse", "auto", "--fuse-rolled", "expand"])).unwrap();
+        assert_eq!(o.fuse_rolled, RolledMode::Expand);
         assert!(opts_from_args(&args(&["--fuse-rolled", "sometimes"])).is_err());
         let o = opts_from_args(&args(&["--fuse", "3"])).unwrap();
         assert_eq!(o.fuse, FuseMode::Depth(3));

@@ -79,28 +79,38 @@ pub(crate) fn emit_activation(w: &mut CWriter, ctx: &LayerCtx<'_>, act: Activati
 
 /// One constant-coordinate row of a standalone elementwise activation
 /// inside a row-streaming fusion group: `w*c` lane-scheduled elements read
-/// `src_row_off` into `ctx.src` and written `dst_row_off` into `ctx.dst`,
-/// with the bases additionally advancing `src_iter_elems`/`dst_iter_elems`
-/// floats per steady-state loop iteration `i` (0 outside the rolled loop).
-/// (Softmax never fuses — it normalizes over the whole map.)
+/// from the source row (ring slot, plane row, or rotating ring pointer)
+/// and written to the destination row, with plane bases additionally
+/// advancing `io.*_iter_elems` floats per steady-state loop iteration `i`
+/// (0 outside rolled loops). (Softmax never fuses — it normalizes over
+/// the whole map.)
 pub(crate) fn emit_activation_row_fused(
     w: &mut CWriter,
     ctx: &LayerCtx<'_>,
     act: Activation,
-    src_row_off: usize,
-    dst_row_off: usize,
-    src_iter_elems: usize,
-    dst_iter_elems: usize,
+    io: &schedule::FusedRowIo,
 ) -> Result<()> {
     debug_assert!(act != Activation::Softmax, "softmax heads are never fused");
     let n = ctx.in_shape.w() * ctx.in_shape.c();
     let sched = ChannelSchedule::for_channels(ctx.opts.isa, n);
-    // Rolled loop terms keep the alignment proofs only when they advance
-    // whole 8-float groups (the widest vector).
-    let s_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.src) && src_iter_elems % 8 == 0;
-    let d_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.dst) && dst_iter_elems % 8 == 0;
-    let src_base = schedule::fused_base(ctx.src, src_row_off, src_iter_elems);
-    let dst_base = schedule::fused_base(ctx.dst, dst_row_off, dst_iter_elems);
+    // The single source row of a 1x1/stride-1 member is the output row.
+    let src_row_off = match &io.src_rot {
+        Some(_) => 0,
+        None => io.src_map.off(io.out_row),
+    };
+    let dst_row_off = io.dst_row_off;
+    // Rolled loop terms / rotating pointers keep the alignment proofs
+    // only under the shared claim rule.
+    let s_al = ctx.opts.use_aligned() && io.src_claims_aligned(ctx.src);
+    let d_al = ctx.opts.use_aligned() && io.dst_claims_aligned(ctx.dst);
+    let src_base = match &io.src_rot {
+        Some(rot) => rot.names[0].clone(),
+        None => schedule::fused_base(ctx.src, src_row_off, io.src_iter_elems),
+    };
+    let dst_base = match &io.dst_rot {
+        Some(rot) => rot.names[0].clone(),
+        None => schedule::fused_base(ctx.dst, dst_row_off, io.dst_iter_elems),
+    };
     for seg in &sched.segments {
         if seg.len == 0 {
             continue;

@@ -29,20 +29,33 @@ use anyhow::{bail, Result};
 /// Generation-time source-row addressing for a cell block: whole-plane
 /// walks see kernel rows at a fixed linear stride; fused ring-buffer rows
 /// wrap around, so each valid kernel row gets an explicit offset resolved
-/// while generating (no runtime index arithmetic beyond constant folds).
+/// while generating; rotate-mode rolled loops address each window row
+/// through its own rotating pointer alias (no runtime index arithmetic
+/// beyond constant folds either way).
 #[derive(Debug, Clone)]
 pub(crate) enum RowAddr {
     /// Row `n` of the window lives `n * row_elems` after the base.
     Linear(usize),
     /// Row `n` of the window lives at `offsets[n]` (ring slots).
     Table(Vec<usize>),
+    /// Row `n` of the window lives behind the per-row base alias
+    /// `{base}{n}` (rotating ring pointers); the payload is the window
+    /// height. Cell emitters must resolve rows through [`RowAddr::base_off`].
+    Rotating(usize),
 }
 
 impl RowAddr {
-    pub(crate) fn off(&self, n_rel: usize) -> usize {
+    /// Resolve relative window row `n_rel` against the walker-provided
+    /// base name: the `(base, extra element offset)` the access goes
+    /// through. Rotating rows live behind per-row aliases `{base}{n_rel}`
+    /// declared by the fused emitters — there is deliberately no
+    /// offset-only accessor, so a rotating row can never be silently
+    /// collapsed onto the shared base.
+    pub(crate) fn base_off(&self, base: &str, n_rel: usize) -> (String, usize) {
         match self {
-            RowAddr::Linear(row_elems) => n_rel * row_elems,
-            RowAddr::Table(offs) => offs[n_rel],
+            RowAddr::Linear(row_elems) => (base.to_string(), n_rel * row_elems),
+            RowAddr::Table(offs) => (base.to_string(), offs[n_rel]),
+            RowAddr::Rotating(_) => (format!("{base}{n_rel}"), 0),
         }
     }
 }
@@ -100,6 +113,10 @@ pub(crate) struct SpatialWalk {
     pub cmin: usize,
     /// Output elements per cell.
     pub out_minor: usize,
+    /// Number of per-window-row source base aliases (`s0`, `s1`, …) the
+    /// caller declared — rotate-mode fused rows; 0 = single base `s`.
+    /// Kept interior column loops then derive one `sj{t}` per row.
+    pub src_rows: usize,
 }
 
 /// `i*stride - pad` as a C int expression (non-negative where emitted).
@@ -260,11 +277,15 @@ impl SpatialWalk {
     where
         F: FnMut(&mut CWriter, TapWindow, &str, &[usize], &str, &[usize]),
     {
-        w.line(&format!(
-            "const float *sj = s + ({})*{};",
-            lin("j", self.cols.stride, self.cols.pad),
-            self.cmin
-        ));
+        let col_term = format!("({})*{}", lin("j", self.cols.stride, self.cols.pad), self.cmin);
+        if self.src_rows == 0 {
+            w.line(&format!("const float *sj = s + {col_term};"));
+        } else {
+            // One column base per rotating source-row alias.
+            for t in 0..self.src_rows {
+                w.line(&format!("const float *sj{t} = s{t} + {col_term};"));
+            }
+        }
         w.line(&format!("float *dj = d + j*{};", self.out_minor));
         let mut s_offs = Vec::with_capacity(rb * cb);
         let mut d_offs = Vec::with_capacity(rb * cb);
@@ -357,6 +378,7 @@ pub(crate) fn emit_conv(
         row_elems,
         cmin: c_in,
         out_minor: c_out,
+        src_rows: 0,
     };
     let cells = ConvCells {
         ctx,
@@ -415,7 +437,17 @@ pub(crate) fn emit_conv_row_fused(
     let cols = AxisPlan::padless(w_out, stride.1, w_k, pad_left, w_in);
     let (n0, n1) = rows.window(io.out_row);
     let p0 = rows.src_start(io.out_row);
-    let src_row_offs: Vec<usize> = (0..n1 - n0).map(|t| io.src_map.off(p0 + t)).collect();
+    let (row_addr, src_rows) = match &io.src_rot {
+        // Rotating ring source: one pointer alias per window row.
+        Some(rot) => {
+            debug_assert_eq!(rot.names.len(), n1 - n0, "rotating pointer set must cover the window");
+            (RowAddr::Rotating(rot.names.len()), rot.names.len())
+        }
+        None => {
+            let offs: Vec<usize> = (0..n1 - n0).map(|t| io.src_map.off(p0 + t)).collect();
+            (RowAddr::Table(offs), 0)
+        }
+    };
     let (_, tile) = schedule::tile_shape(ctx.opts, &sched, 1, cols.interior());
     let walk = SpatialWalk {
         rows,
@@ -428,6 +460,7 @@ pub(crate) fn emit_conv_row_fused(
         row_elems: 0, // rows are addressed through the offset table
         cmin: c_in,
         out_minor: c_out,
+        src_rows,
     };
     let cells = ConvCells {
         ctx,
@@ -435,20 +468,33 @@ pub(crate) fn emit_conv_row_fused(
         bias,
         activation,
         sched: &sched,
-        row_addr: RowAddr::Table(src_row_offs),
+        row_addr,
         w_k,
         c_in,
         c_out,
-        // A rolled loop term keeps the store-alignment proof only when it
-        // advances whole vector groups.
-        dst_static: schedule::static_buf(ctx.dst) && io.dst_iter_aligned(),
+        // Rolled loop terms / rotating pointers keep the store-alignment
+        // proof only under the shared claim rule.
+        dst_static: io.dst_claims_aligned(ctx.dst),
     };
     w.open("");
-    w.line(&format!("const float *s = {};", schedule::fused_base(ctx.src, 0, io.src_iter_elems)));
-    w.line(&format!(
-        "float *d = {};",
-        schedule::fused_base(ctx.dst, io.dst_row_off, io.dst_iter_elems)
-    ));
+    match &io.src_rot {
+        Some(rot) => {
+            for (t, name) in rot.names.iter().enumerate() {
+                w.line(&format!("const float *s{t} = {name};"));
+            }
+        }
+        None => w.line(&format!(
+            "const float *s = {};",
+            schedule::fused_base(ctx.src, 0, io.src_iter_elems)
+        )),
+    }
+    match &io.dst_rot {
+        Some(rot) => w.line(&format!("float *d = {};", rot.names[0])),
+        None => w.line(&format!(
+            "float *d = {};",
+            schedule::fused_base(ctx.dst, io.dst_row_off, io.dst_iter_elems)
+        )),
+    }
     walk.emit_cols(w, n0, n1, 1, &mut |w, win, s, so, d, dofs| {
         cells.emit_block(w, win, s, so, d, dofs)
     });
@@ -504,9 +550,13 @@ impl ConvCells<'_> {
         ((n * self.w_k + m) * self.c_in + o) * self.c_out + k
     }
 
-    /// Tap offset relative to a cell's first valid tap.
-    fn rel(&self, win: &TapWindow, n: usize, m: usize, o: usize) -> usize {
-        self.row_addr.off(n - win.n0) + (m - win.m0) * self.c_in + o
+    /// C expression reading the source element at kernel tap `(n, m)`,
+    /// input channel `o`, of the cell whose column offset from the walker
+    /// base `s_name` is `s_off`. Rotating row addressing swaps the base
+    /// per window row; the other forms fold the row term into the offset.
+    fn src_ref(&self, s_name: &str, s_off: usize, win: &TapWindow, n: usize, m: usize, o: usize) -> String {
+        let (base, row_off) = self.row_addr.base_off(s_name, n - win.n0);
+        format!("{base}[{}]", s_off + row_off + (m - win.m0) * self.c_in + o)
     }
 
     /// Emit all channels of a block of cells sharing one tap window.
@@ -598,7 +648,6 @@ impl ConvCells<'_> {
                     if live.is_empty() {
                         continue;
                     }
-                    let rel = self.rel(win, n, m, o);
                     let wexpr = |g: usize| {
                         if inline {
                             v.setr(&tap_w[g])
@@ -608,13 +657,13 @@ impl ConvCells<'_> {
                         }
                     };
                     if b == 1 {
-                        w.line(&format!("t0 = {};", v.set1(&format!("{s_name}[{}]", s_offs[0] + rel))));
+                        w.line(&format!("t0 = {};", v.set1(&self.src_ref(s_name, s_offs[0], win, n, m, o))));
                         for &g in &live {
                             w.line(&v.mul_add(&format!("a0_{g}"), "t0", &wexpr(g)));
                         }
                     } else {
                         for (t, &so) in s_offs.iter().enumerate() {
-                            w.line(&format!("t{t} = {};", v.set1(&format!("{s_name}[{}]", so + rel))));
+                            w.line(&format!("t{t} = {};", v.set1(&self.src_ref(s_name, so, win, n, m, o))));
                         }
                         for &g in &live {
                             w.line(&format!("wv = {};", wexpr(g)));
@@ -659,15 +708,15 @@ impl ConvCells<'_> {
         for n in win.n0..win.n1 {
             for m in win.m0..win.m1 {
                 for o in 0..self.c_in {
-                    let off = s_off + self.rel(win, n, m, o);
+                    let sref = self.src_ref(s_name, s_off, win, n, m, o);
                     if inline {
                         let wv = self.weights.at4(n, m, o, k);
                         if self.ctx.opts.skip_zero_weights && wv == 0.0 {
                             continue;
                         }
-                        w.line(&format!("a += {s_name}[{off}] * {};", fmt_f32(wv)));
+                        w.line(&format!("a += {sref} * {};", fmt_f32(wv)));
                     } else {
-                        w.line(&format!("a += {s_name}[{off}] * w{}[{}];", self.ctx.idx, self.widx(n, m, o, k)));
+                        w.line(&format!("a += {sref} * w{}[{}];", self.ctx.idx, self.widx(n, m, o, k)));
                     }
                 }
             }

@@ -87,6 +87,7 @@ pub(crate) fn emit_depthwise(
         row_elems,
         cmin: c,
         out_minor: c,
+        src_rows: 0,
     };
     let cells = DwCells {
         ctx,
@@ -140,7 +141,17 @@ pub(crate) fn emit_depthwise_row_fused(
     let cols = AxisPlan::padless(w_out, stride.1, w_k, pad_left, w_in);
     let (n0, n1) = rows.window(io.out_row);
     let p0 = rows.src_start(io.out_row);
-    let src_row_offs: Vec<usize> = (0..n1 - n0).map(|t| io.src_map.off(p0 + t)).collect();
+    let (row_addr, src_rows) = match &io.src_rot {
+        // Rotating ring source: one pointer alias per window row.
+        Some(rot) => {
+            debug_assert_eq!(rot.names.len(), n1 - n0, "rotating pointer set must cover the window");
+            (RowAddr::Rotating(rot.names.len()), rot.names.len())
+        }
+        None => {
+            let offs: Vec<usize> = (0..n1 - n0).map(|t| io.src_map.off(p0 + t)).collect();
+            (RowAddr::Table(offs), 0)
+        }
+    };
     let (_, tile) = schedule::tile_shape(ctx.opts, &sched, 1, cols.interior());
     let walk = SpatialWalk {
         rows,
@@ -153,6 +164,7 @@ pub(crate) fn emit_depthwise_row_fused(
         row_elems: 0, // rows are addressed through the offset table
         cmin: c,
         out_minor: c,
+        src_rows,
     };
     let cells = DwCells {
         ctx,
@@ -160,20 +172,33 @@ pub(crate) fn emit_depthwise_row_fused(
         bias,
         activation,
         sched: &sched,
-        row_addr: RowAddr::Table(src_row_offs),
+        row_addr,
         w_k,
         c,
-        // Rolled loop terms keep the alignment proofs only when they
-        // advance whole vector groups.
-        src_static: schedule::static_buf(ctx.src) && io.src_iter_aligned(),
-        dst_static: schedule::static_buf(ctx.dst) && io.dst_iter_aligned(),
+        // Rolled loop terms / rotating pointers keep the alignment proofs
+        // only under the shared claim rule.
+        src_static: io.src_claims_aligned(ctx.src),
+        dst_static: io.dst_claims_aligned(ctx.dst),
     };
     w.open("");
-    w.line(&format!("const float *s = {};", schedule::fused_base(ctx.src, 0, io.src_iter_elems)));
-    w.line(&format!(
-        "float *d = {};",
-        schedule::fused_base(ctx.dst, io.dst_row_off, io.dst_iter_elems)
-    ));
+    match &io.src_rot {
+        Some(rot) => {
+            for (t, name) in rot.names.iter().enumerate() {
+                w.line(&format!("const float *s{t} = {name};"));
+            }
+        }
+        None => w.line(&format!(
+            "const float *s = {};",
+            schedule::fused_base(ctx.src, 0, io.src_iter_elems)
+        )),
+    }
+    match &io.dst_rot {
+        Some(rot) => w.line(&format!("float *d = {};", rot.names[0])),
+        None => w.line(&format!(
+            "float *d = {};",
+            schedule::fused_base(ctx.dst, io.dst_row_off, io.dst_iter_elems)
+        )),
+    }
     walk.emit_cols(w, n0, n1, 1, &mut |w, win, s, so, d, dofs| {
         cells.emit_block(w, win, s, so, d, dofs)
     });
@@ -202,8 +227,12 @@ impl DwCells<'_> {
         self.ctx.opts.effective_const_mode() == ConstMode::Inline
     }
 
-    fn rel(&self, win: &TapWindow, n: usize, m: usize) -> usize {
-        self.row_addr.off(n - win.n0) + (m - win.m0) * self.c
+    /// `(base, element offset)` of the source vector/scalar at kernel tap
+    /// `(n, m)` for the cell at column offset `s_off` from walker base
+    /// `s_name`. Rotating row addressing swaps the base per window row.
+    fn src_base_off(&self, s_name: &str, s_off: usize, win: &TapWindow, n: usize, m: usize) -> (String, usize) {
+        let (base, row_off) = self.row_addr.base_off(s_name, n - win.n0);
+        (base, s_off + row_off + (m - win.m0) * self.c)
     }
 
     /// Every spatial offset into src/dst is a multiple of the channel
@@ -303,14 +332,15 @@ impl DwCells<'_> {
                 } else {
                     v.load(&format!("w{} + {widx}", self.ctx.idx), self.warr_aligned(&v, widx))
                 };
-                let rel = self.rel(win, n, m) + k0;
                 let s_al = self.src_aligned(&v, k0);
                 if b == 1 {
-                    w.line(&v.mul_add("a0", &v.load(&format!("{s_name} + {}", s_offs[0] + rel), s_al), &wexpr));
+                    let (base, off) = self.src_base_off(s_name, s_offs[0], win, n, m);
+                    w.line(&v.mul_add("a0", &v.load(&format!("{base} + {}", off + k0), s_al), &wexpr));
                 } else {
                     w.line(&format!("wv = {wexpr};"));
                     for (t, &so) in s_offs.iter().enumerate() {
-                        w.line(&v.mul_add(&format!("a{t}"), &v.load(&format!("{s_name} + {}", so + rel), s_al), "wv"));
+                        let (base, off) = self.src_base_off(s_name, so, win, n, m);
+                        w.line(&v.mul_add(&format!("a{t}"), &v.load(&format!("{base} + {}", off + k0), s_al), "wv"));
                     }
                 }
             }
@@ -344,15 +374,16 @@ impl DwCells<'_> {
         for n in win.n0..win.n1 {
             for m in win.m0..win.m1 {
                 let widx = (n * self.w_k + m) * self.c + k;
-                let off = s_off + self.rel(win, n, m) + k;
+                let (base, off) = self.src_base_off(s_name, s_off, win, n, m);
+                let off = off + k;
                 if inline {
                     let wv = self.weights.data()[widx];
                     if self.ctx.opts.skip_zero_weights && wv == 0.0 {
                         continue;
                     }
-                    w.line(&format!("a += {s_name}[{off}] * {};", fmt_f32(wv)));
+                    w.line(&format!("a += {base}[{off}] * {};", fmt_f32(wv)));
                 } else {
-                    w.line(&format!("a += {s_name}[{off}] * w{}[{widx}];", self.ctx.idx));
+                    w.line(&format!("a += {base}[{off}] * w{}[{widx}];", self.ctx.idx));
                 }
             }
         }
@@ -372,38 +403,44 @@ pub(crate) fn emit_avgpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
     // depthwise input loads.
     let s_static_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.src);
     let d_static_al = ctx.opts.use_aligned() && schedule::static_buf(ctx.dst);
-    // Whole-plane walk: window rows sit at the linear row stride.
-    let row_offs: Vec<usize> = (0..pool.0).map(|n| n * w_in * c).collect();
 
-    let window = |w: &mut CWriter, s_name: &str, s_off: usize, d_name: &str, d_off: usize| {
-        emit_avg_window(w, &sched, pool, c, &inv, s_static_al, d_static_al, s_name, s_off, d_name, d_off, &row_offs);
+    // Whole-plane walk: window rows sit at the linear row stride behind
+    // one shared base (built once per base, not per emitted cell).
+    let plane_rows = |base: &str| -> Vec<(String, usize)> {
+        (0..pool.0).map(|n| (base.to_string(), n * w_in * c)).collect()
+    };
+    let window = |w: &mut CWriter, rows: &[(String, usize)], s_off: usize, d_name: &str, d_off: usize| {
+        emit_avg_window(w, &sched, pool, c, &inv, s_static_al, d_static_al, rows, s_off, d_name, d_off);
     };
 
     match ctx.opts.unroll {
         Unroll::None | Unroll::KeepOuter2 => {
+            let rows = plane_rows("s");
             w.open(&format!("for (i = 0; i < {h_out}; i++)"));
             w.open(&format!("for (j = 0; j < {w_out}; j++)"));
             w.line(&format!("const float *s = {} + i*{} + j*{};", ctx.src, stride.0 * w_in * c, stride.1 * c));
             w.line(&format!("float *d = {} + i*{} + j*{};", ctx.dst, w_out * c, c));
-            window(w, "s", 0, "d", 0);
+            window(w, &rows, 0, "d", 0);
             w.close();
             w.close();
         }
         Unroll::KeepOuter1 => {
+            let rows = plane_rows("s");
             w.open(&format!("for (i = 0; i < {h_out}; i++)"));
             w.line(&format!("const float *s = {} + i*{};", ctx.src, stride.0 * w_in * c));
             w.line(&format!("float *d = {} + i*{};", ctx.dst, w_out * c));
             for j in 0..w_out {
-                window(w, "s", j * stride.1 * c, "d", j * c);
+                window(w, &rows, j * stride.1 * c, "d", j * c);
             }
             w.close();
         }
         Unroll::Full => {
+            let rows = plane_rows(ctx.src);
             for i in 0..h_out {
                 for j in 0..w_out {
                     window(
                         w,
-                        ctx.src,
+                        &rows,
                         (i * stride.0 * w_in + j * stride.1) * c,
                         ctx.dst,
                         (i * w_out + j) * c,
@@ -415,9 +452,10 @@ pub(crate) fn emit_avgpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
     Ok(())
 }
 
-/// One fully-unrolled average-pool window per lane segment. `row_offs[n]`
-/// is the source offset of window row `n` (linear for plane walks, ring
-/// slots for fused rows).
+/// One fully-unrolled average-pool window per lane segment. `rows[n]` is
+/// the `(base, element offset)` of window row `n` — a single base with
+/// linear offsets for plane walks, resolved ring-slot offsets for fused
+/// rows, or one rotating pointer per row in rotate-mode loop bodies.
 #[allow(clippy::too_many_arguments)]
 fn emit_avg_window(
     w: &mut CWriter,
@@ -427,11 +465,10 @@ fn emit_avg_window(
     inv: &str,
     s_static_al: bool,
     d_static_al: bool,
-    s_name: &str,
+    rows: &[(String, usize)],
     s_off: usize,
     d_name: &str,
     d_off: usize,
-    row_offs: &[usize],
 ) {
     for seg in &sched.segments {
         if let Some(v) = seg.vec {
@@ -439,21 +476,21 @@ fn emit_avg_window(
             let d_al = d_static_al && c % v.width == 0;
             for k0 in (seg.start..seg.end()).step_by(v.width) {
                 w.open("");
-                let off0 = s_off + row_offs[0] + k0;
+                let off0 = s_off + rows[0].1 + k0;
                 w.line(&format!(
                     "{} a = {};",
                     v.ty,
-                    v.load(&format!("{s_name} + {off0}"), s_al && off0 % v.width == 0)
+                    v.load(&format!("{} + {off0}", rows[0].0), s_al && off0 % v.width == 0)
                 ));
                 for n in 0..pool.0 {
                     for m in 0..pool.1 {
                         if n == 0 && m == 0 {
                             continue;
                         }
-                        let off = s_off + row_offs[n] + m * c + k0;
+                        let off = s_off + rows[n].1 + m * c + k0;
                         w.line(&format!(
                             "a = {};",
-                            v.add_expr("a", &v.load(&format!("{s_name} + {off}"), s_al && off % v.width == 0))
+                            v.add_expr("a", &v.load(&format!("{} + {off}", rows[n].0), s_al && off % v.width == 0))
                         ));
                     }
                 }
@@ -468,13 +505,13 @@ fn emit_avg_window(
         } else {
             for k in seg.start..seg.end() {
                 w.open("");
-                w.line(&format!("float a = {s_name}[{}];", s_off + row_offs[0] + k));
+                w.line(&format!("float a = {}[{}];", rows[0].0, s_off + rows[0].1 + k));
                 for n in 0..pool.0 {
                     for m in 0..pool.1 {
                         if n == 0 && m == 0 {
                             continue;
                         }
-                        w.line(&format!("a += {s_name}[{}];", s_off + row_offs[n] + m * c + k));
+                        w.line(&format!("a += {}[{}];", rows[n].0, s_off + rows[n].1 + m * c + k));
                     }
                 }
                 w.line(&format!("{d_name}[{}] = a * {inv};", d_off + k));
@@ -485,8 +522,9 @@ fn emit_avg_window(
 }
 
 /// One constant-coordinate output row of an average pool inside a fusion
-/// group; window rows are fetched through `io.src_map` (ring or plane) and
-/// the bases advance `io.*_iter_elems` per steady-state loop iteration.
+/// group; window rows are fetched through `io.src_map` (ring or plane) or
+/// the rotating pointer set, and plane bases advance `io.*_iter_elems` per
+/// steady-state loop iteration.
 pub(crate) fn emit_avgpool_row_fused(
     w: &mut CWriter,
     ctx: &LayerCtx<'_>,
@@ -497,19 +535,29 @@ pub(crate) fn emit_avgpool_row_fused(
     let (w_out, c) = (ctx.out_shape.w(), ctx.out_shape.c());
     let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
     let inv = fmt_f32(1.0 / (pool.0 * pool.1) as f32);
-    let s_static_al =
-        ctx.opts.use_aligned() && schedule::static_buf(ctx.src) && io.src_iter_aligned();
-    let d_static_al =
-        ctx.opts.use_aligned() && schedule::static_buf(ctx.dst) && io.dst_iter_aligned();
-    let src_base = schedule::fused_base(ctx.src, 0, io.src_iter_elems);
-    let dst_base = schedule::fused_base(ctx.dst, 0, io.dst_iter_elems);
-    let row_offs: Vec<usize> =
-        (0..pool.0).map(|n| io.src_map.off(io.out_row * stride.0 + n)).collect();
+    let s_static_al = ctx.opts.use_aligned() && io.src_claims_aligned(ctx.src);
+    let d_static_al = ctx.opts.use_aligned() && io.dst_claims_aligned(ctx.dst);
+    // Row bases at a zero column offset: rotating pointers, or the fused
+    // plane/ring base plus resolved row offsets.
+    let base_rows: Vec<(String, usize)> = match &io.src_rot {
+        Some(rot) => rot.names.iter().map(|n| (n.clone(), 0)).collect(),
+        None => {
+            let src_base = schedule::fused_base(ctx.src, 0, io.src_iter_elems);
+            (0..pool.0)
+                .map(|n| (src_base.clone(), io.src_map.off(io.out_row * stride.0 + n)))
+                .collect()
+        }
+    };
+    let dst_base = match &io.dst_rot {
+        Some(rot) => rot.names[0].clone(),
+        None => schedule::fused_base(ctx.dst, 0, io.dst_iter_elems),
+    };
     if ctx.opts.unroll.keeps_cols() {
         w.open(&format!("for (j = 0; j < {w_out}; j++)"));
-        w.line(&format!("const float *s = {} + j*{};", src_base, stride.1 * c));
+        let src_base = schedule::fused_base(ctx.src, 0, io.src_iter_elems);
+        let rows = super::pool::fused_col_row_bases(w, io, &src_base, stride.1 * c, &base_rows);
         w.line(&format!("float *d = {} + {} + j*{};", dst_base, io.dst_row_off, c));
-        emit_avg_window(w, &sched, pool, c, &inv, s_static_al, d_static_al, "s", 0, "d", 0, &row_offs);
+        emit_avg_window(w, &sched, pool, c, &inv, s_static_al, d_static_al, &rows, 0, "d", 0);
         w.close();
     } else {
         for j in 0..w_out {
@@ -521,11 +569,10 @@ pub(crate) fn emit_avgpool_row_fused(
                 &inv,
                 s_static_al,
                 d_static_al,
-                &src_base,
+                &base_rows,
                 j * stride.1 * c,
                 &dst_base,
                 io.dst_row_off + j * c,
-                &row_offs,
             );
         }
     }

@@ -358,24 +358,45 @@ impl FuseMode {
 /// Steady-state rolled emission of fused row schedules (`--fuse-rolled`).
 ///
 /// The row schedule of a fusion group is eventually periodic: after a
-/// warm-up prologue, the per-row op pattern and every ring buffer's
-/// row→slot assignment repeat with a fixed period. `Auto` detects that
-/// period (`schedule::detect_periodic`) and emits prologue + a genuine C
-/// `for` loop over steady-state iterations + epilogue — the loop body
-/// holds one copy of the op pattern per ring phase, with every ring-slot
-/// offset still resolved at generation time (no runtime `%`) — so big
-/// planes fuse without the code-size blowup that previously forced the
-/// statement budget to split their groups. `Off` keeps the fully unrolled
-/// row schedule of the same groups (one statement block per output row) —
-/// the PR 3 emission form, and the differential-testing baseline for
-/// periodic groups.
+/// warm-up prologue, the per-row op pattern repeats with a fixed period.
+/// The rolled forms emit prologue + a genuine C `for` loop over the
+/// steady-state iterations + drain epilogue; they differ in how ring rows
+/// are addressed inside the loop body:
+///
+/// * `Rotate` — **ring pointer rotation**: one `float *nncg_ring{i}_r{k}`
+///   pointer per live ring row, the body addresses kernel rows through
+///   those pointers, and the loop bottom rotates the pointer set with
+///   straight-line assignments. The row→pointer mapping is
+///   iteration-invariant for *any* period, so the body holds exactly one
+///   op-pattern period — no ring-phase expansion — and warm-up/drain runs
+///   whose ops form a constant-delta ramp roll into loops of their own
+///   (`schedule::detect_ramps`). Still no runtime `%`.
+/// * `Expand` — the ring-phase-expanded body (`schedule::detect_periodic`):
+///   ring offsets are frozen at iteration 0, which forces the body to
+///   carry one pattern copy per ring phase (up to 64×). Kept as the
+///   rotated form's differential baseline.
+/// * `Auto` (default) — rotation when it verifies, else phase expansion.
+/// * `Off` — the fully unrolled row schedule of the same groups (one
+///   statement block per output row) — the PR 3 emission form.
+///
+/// The fusion-group partition (and therefore every buffer) is identical
+/// across all four modes, which is what keeps them bit-comparable.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RolledMode {
-    /// Roll the steady state whenever a period is detected (default).
+    /// Roll the steady state whenever a period is detected, preferring
+    /// pointer rotation (default).
     Auto,
     /// Always unroll the row schedule (debug/ablation baseline; large
     /// models emit very large C files at full fusion depth).
     Off,
+    /// Require ring pointer rotation (falls back to unrolled emission for
+    /// groups whose schedule never settles).
+    Rotate,
+    /// Require the phase-expanded body (the PR 4 form; differential
+    /// baseline for the rotated emission). Groups whose phase count
+    /// exceeds the 64x expansion cap fall back to unrolled emission of
+    /// the same group — the partition never depends on the knob.
+    Expand,
 }
 
 impl RolledMode {
@@ -383,6 +404,8 @@ impl RolledMode {
         match self {
             RolledMode::Auto => "auto",
             RolledMode::Off => "off",
+            RolledMode::Rotate => "rotate",
+            RolledMode::Expand => "expand",
         }
     }
 
@@ -390,6 +413,8 @@ impl RolledMode {
         Some(match s {
             "auto" => RolledMode::Auto,
             "off" => RolledMode::Off,
+            "rotate" => RolledMode::Rotate,
+            "expand" => RolledMode::Expand,
             _ => return None,
         })
     }
@@ -537,8 +562,14 @@ pub fn generate_c(model: &Model, opts: &CodegenOptions) -> Result<String> {
     let model = crate::passes::optimize(model.clone())?;
     let shapes = model.infer_shapes()?;
 
+    // Derive-once fusion bundle: the group partition plus every group's
+    // row plans, demand schedule and rolled emission plan. The cost guard,
+    // the buffer planner and the emitters below all consume this single
+    // instance — grouping and emission cannot disagree.
+    let bundle = plan_fusion(&model, &shapes, opts)?;
+
     // Cost guard: estimate emitted statements before doing the work.
-    let est = estimate_statements(&model, opts)?;
+    let est = estimate_statements(&model, &shapes, opts, &bundle);
     if est > opts.max_statements {
         bail!(
             "unroll level {:?} would emit ~{est} statements for model {:?} (limit {}); \
@@ -553,16 +584,12 @@ pub fn generate_c(model: &Model, opts: &CodegenOptions) -> Result<String> {
     let mut w = CWriter::new();
     emit_prelude(&mut w, &model, &ident, opts, &shapes);
 
-    // Fusion-group partition: multi-layer groups stream rows through ring
-    // line buffers; singleton groups keep the classic whole-plane walk.
-    let groups = fusion_groups(&model, &shapes, opts);
-
     // Buffer planning (liveness-aware): ping-pong scratch holds only
     // group-boundary planes; intermediates inside a fusion group live in
     // per-edge ring line buffers of a few rows each. Copy-mode padding
     // additionally needs a third buffer holding the zero-padded input
     // (Eq. 1's x̂); padless emission does not, shrinking the footprint.
-    let plan = plan_buffers(&model, &shapes, opts, &groups)?;
+    let plan = plan_buffers(&model, &shapes, opts, &bundle)?;
     let qual = if opts.use_aligned() { "NNCG_ALIGN(32) " } else { "" };
     w.line(&format!("static {qual}float nncg_bufa[{}];", plan.main_size.max(1)));
     w.line(&format!("static {qual}float nncg_bufb[{}];", plan.main_size.max(1)));
@@ -603,56 +630,60 @@ pub fn generate_c(model: &Model, opts: &CodegenOptions) -> Result<String> {
     let n_layers = model.layers.len();
     let mut cur_src: String = "x_in".to_string();
     let mut ping = true;
-    for group in &groups {
+    for pg in &bundle.groups {
+        let group = &pg.group;
         let is_last = group.end == n_layers;
-        if group.len() == 1 {
-            let i = group.start;
-            let layer = &model.layers[i];
-            let dst = if is_last {
-                "x_out".to_string()
-            } else if is_inplace(layer) && cur_src != "x_in" {
-                cur_src.clone()
-            } else {
-                let d = if ping { "nncg_bufa" } else { "nncg_bufb" };
-                ping = !ping;
-                d.to_string()
-            };
-            let ctx = LayerCtx {
-                idx: i,
-                in_shape: &shapes[i],
-                out_shape: &shapes[i + 1],
-                src: &cur_src,
-                dst: &dst,
-                padbuf: "nncg_pad",
-                opts,
-            };
-            w.blank();
-            w.line(&format!(
-                "/* layer {i}: {} {} -> {} */",
-                layer.kind_name(),
-                shapes[i],
-                shapes[i + 1]
-            ));
-            emit_layer(&mut w, layer, &ctx)?;
-            cur_src = dst;
-        } else {
-            let dst = if is_last {
-                "x_out".to_string()
-            } else {
-                let d = if ping { "nncg_bufa" } else { "nncg_bufb" };
-                ping = !ping;
-                d.to_string()
-            };
-            w.blank();
-            w.line(&format!(
-                "/* fused group: layers {}..{} ({} -> {}) stream rows through ring line buffers */",
-                group.start,
-                group.end - 1,
-                shapes[group.start],
-                shapes[group.end]
-            ));
-            emit_fused_group(&mut w, &model, &shapes, group, &cur_src, &dst, &plan, opts)?;
-            cur_src = dst;
+        match &pg.fused {
+            None => {
+                let i = group.start;
+                let layer = &model.layers[i];
+                let dst = if is_last {
+                    "x_out".to_string()
+                } else if is_inplace(layer) && cur_src != "x_in" {
+                    cur_src.clone()
+                } else {
+                    let d = if ping { "nncg_bufa" } else { "nncg_bufb" };
+                    ping = !ping;
+                    d.to_string()
+                };
+                let ctx = LayerCtx {
+                    idx: i,
+                    in_shape: &shapes[i],
+                    out_shape: &shapes[i + 1],
+                    src: &cur_src,
+                    dst: &dst,
+                    padbuf: "nncg_pad",
+                    opts,
+                };
+                w.blank();
+                w.line(&format!(
+                    "/* layer {i}: {} {} -> {} */",
+                    layer.kind_name(),
+                    shapes[i],
+                    shapes[i + 1]
+                ));
+                emit_layer(&mut w, layer, &ctx)?;
+                cur_src = dst;
+            }
+            Some(fp) => {
+                let dst = if is_last {
+                    "x_out".to_string()
+                } else {
+                    let d = if ping { "nncg_bufa" } else { "nncg_bufb" };
+                    ping = !ping;
+                    d.to_string()
+                };
+                w.blank();
+                w.line(&format!(
+                    "/* fused group: layers {}..{} ({} -> {}) stream rows through ring line buffers */",
+                    group.start,
+                    group.end - 1,
+                    shapes[group.start],
+                    shapes[group.end]
+                ));
+                emit_fused_group(&mut w, &model, &shapes, group, fp, &cur_src, &dst, &plan, opts)?;
+                cur_src = dst;
+            }
         }
     }
     w.close();
@@ -802,31 +833,93 @@ fn round_to_vec(n: usize) -> usize {
 /// what a C compiler chews through in seconds at -O3.
 const FUSE_GROUP_STMT_BUDGET: usize = 5_000;
 
-/// Resolve the fusion-group partition for these options: kind-based chains
+/// Statement budget for one *rolled* group: prologue + loop bodies +
+/// epilogue must stay compiler-friendly even though the plane heights no
+/// longer matter. Configurations whose rolled emission still explodes
+/// (scalar ISAs or unrolled columns over wide planes) fall back to the
+/// classic per-group split.
+const ROLLED_GROUP_STMT_BUDGET: usize = 50_000;
+
+/// Per-group payload of the derive-once [`FusionPlanBundle`]: the row-axis
+/// plans, the demand-driven row schedule with its ring heights, and the
+/// mode-resolved rolled emission plan (`None` = fully unrolled schedule).
+pub(crate) struct FusedGroupPlan {
+    pub plans: Vec<schedule::AxisPlan>,
+    pub layout: schedule::GroupLayout,
+    pub rolled: Option<schedule::RolledPlan>,
+}
+
+/// One entry of the fusion partition: the group span plus, for multi-layer
+/// groups, everything emission needs, derived exactly once.
+pub(crate) struct PlannedGroup {
+    pub group: crate::passes::FusionGroup,
+    /// `Some` iff `group.len() > 1`.
+    pub fused: Option<FusedGroupPlan>,
+}
+
+/// Derive-once fusion bundle (`groups` + per-group `plans`/`layout`/rolled
+/// plan), built by [`plan_fusion`] and threaded through
+/// [`estimate_statements`], [`plan_buffers`] and [`emit_fused_group`] —
+/// the single source of truth that makes it impossible for grouping,
+/// buffer sizing and emission to disagree.
+pub(crate) struct FusionPlanBundle {
+    pub groups: Vec<PlannedGroup>,
+}
+
+impl FusionPlanBundle {
+    fn singletons(n: usize) -> FusionPlanBundle {
+        FusionPlanBundle {
+            groups: (0..n)
+                .map(|i| PlannedGroup {
+                    group: crate::passes::FusionGroup::singleton(i),
+                    fused: None,
+                })
+                .collect(),
+        }
+    }
+}
+
+/// Resolve the fusion partition for these options and derive every
+/// multi-layer group's plans/schedule/rolled-plan once: kind-based chains
 /// from [`crate::passes::plan_fusion_groups`], refined with shape checks,
 /// the depth cap, and the per-group statement budget. Returns
 /// all-singletons when fusion is off or the emission mode cannot stream
 /// rows: the loop form and full unroll keep their whole-plane walks, and
 /// copy-mode padding materializes whole padded planes by definition.
 ///
-/// Depth-capped groups whose row schedule has a detectable steady-state
-/// period — and whose *rolled* emission fits [`ROLLED_GROUP_STMT_BUDGET`]
-/// — skip the unrolled statement-budget split: rolling makes their code
-/// size independent of plane height, so the models the budget used to
-/// fragment (robot, pedestrian) now fuse at full depth. The partition is
-/// independent of [`RolledMode`] — `--fuse-rolled off` unrolls the same
-/// groups, which keeps the two emissions diffable and bit-comparable.
-fn fusion_groups(model: &Model, shapes: &[Shape], opts: &CodegenOptions) -> Vec<crate::passes::FusionGroup> {
+/// Depth-capped groups whose *rolled* emission (under [`RolledMode::Auto`]
+/// — the partition deliberately ignores the actual knob, so every mode
+/// emits the same groups and stays bit-comparable) fits
+/// [`ROLLED_GROUP_STMT_BUDGET`] skip the unrolled statement-budget split:
+/// rolling makes their code size independent of plane height, so the
+/// models the budget used to fragment (robot, pedestrian) fuse at full
+/// depth.
+pub(crate) fn plan_fusion(
+    model: &Model,
+    shapes: &[Shape],
+    opts: &CodegenOptions,
+) -> Result<FusionPlanBundle> {
     use crate::passes::FusionGroup;
     let n = model.layers.len();
     if opts.fuse.max_depth() < 2
         || !matches!(opts.unroll, Unroll::KeepOuter1 | Unroll::KeepOuter2)
         || schedule::pad_strategy(opts) != schedule::PadStrategy::Padless
     {
-        return (0..n).map(FusionGroup::singleton).collect();
+        return Ok(FusionPlanBundle::singletons(n));
     }
+    // Derive one group's payload (plans + schedule + mode-resolved rolled
+    // plan) — the only place these are ever computed.
+    let derive = |group: FusionGroup| -> Result<PlannedGroup> {
+        if group.len() < 2 {
+            return Ok(PlannedGroup { group, fused: None });
+        }
+        let plans = group_row_plans(model, shapes, &group)?;
+        let layout = schedule::plan_group_rows(&plans);
+        let rolled = schedule::rolled_plan(&layout, &plans, opts.fuse_rolled);
+        Ok(PlannedGroup { group, fused: Some(FusedGroupPlan { plans, layout, rolled }) })
+    };
     let max_depth = opts.fuse.max_depth();
-    let mut out = Vec::new();
+    let mut out: Vec<PlannedGroup> = Vec::new();
     for chain in crate::passes::plan_fusion_groups(model, usize::MAX) {
         // Row streaming needs image-shaped planes on both sides; split the
         // chain at any non-3D boundary.
@@ -848,52 +941,105 @@ fn fusion_groups(model: &Model, shapes: &[Shape], opts: &CodegenOptions) -> Vec<
             let mut s = run.start;
             while s < run.end {
                 let group = FusionGroup { start: s, end: (s + max_depth).min(run.end) };
-                let rolled_ok = group.len() > 1
-                    && rolled_group_cost(model, shapes, opts, &group)
-                        .map_or(false, |c| c <= ROLLED_GROUP_STMT_BUDGET);
-                if rolled_ok {
-                    out.push(group);
-                } else {
-                    split_by_budget(model, shapes, opts, group, &mut out);
-                }
                 s = group.end;
+                if group.len() > 1 {
+                    let plans = group_row_plans(model, shapes, &group)?;
+                    let layout = schedule::plan_group_rows(&plans);
+                    // Knob-independent qualification: does the AUTO-mode
+                    // rolled emission fit the rolled budget? A group that
+                    // fails it but comes back from the statement-budget
+                    // refinement unsplit reuses the payload computed here
+                    // rather than re-deriving it.
+                    let auto = schedule::rolled_plan(&layout, &plans, RolledMode::Auto);
+                    let rolled_fits = auto.as_ref().map_or(false, |rp| {
+                        rolled_plan_cost(model, shapes, opts, &group, &layout, rp)
+                            <= ROLLED_GROUP_STMT_BUDGET
+                    });
+                    let pieces = if rolled_fits {
+                        Vec::new()
+                    } else {
+                        split_by_budget(model, shapes, opts, group)
+                    };
+                    let fits = rolled_fits || pieces.len() == 1;
+                    if fits {
+                        // Reuse the auto plan instead of re-running
+                        // detection: rotate-mode loops carry `rotate`,
+                        // so the auto plan's provenance is recoverable.
+                        // Only `Expand` while rotation succeeded needs
+                        // the other detector.
+                        //
+                        // When the *requested* mode's detector fails on a
+                        // group that qualified under Auto (Rotate where
+                        // only expansion verifies, or Expand where the
+                        // ring-phase count exceeds the 64x cap), the
+                        // group deliberately degrades to the fully
+                        // unrolled schedule of the SAME span — exactly
+                        // like `--fuse-rolled off`. Splitting instead
+                        // would change the partition per knob and break
+                        // the bit-comparability of the four emission
+                        // forms; the cost guard still bounds the result.
+                        let auto_rotated =
+                            auto.as_ref().map_or(false, |rp| rp.loops().any(|l| l.rotate));
+                        let rolled = match opts.fuse_rolled {
+                            RolledMode::Auto => auto,
+                            RolledMode::Off => None,
+                            RolledMode::Rotate => {
+                                if auto_rotated {
+                                    auto
+                                } else {
+                                    None
+                                }
+                            }
+                            RolledMode::Expand => {
+                                if auto_rotated {
+                                    schedule::rolled_plan(&layout, &plans, RolledMode::Expand)
+                                } else {
+                                    // Auto already fell back to (or failed
+                                    // at) phase expansion.
+                                    auto
+                                }
+                            }
+                        };
+                        out.push(PlannedGroup {
+                            group,
+                            fused: Some(FusedGroupPlan { plans, layout, rolled }),
+                        });
+                        continue;
+                    }
+                    // Real split: derive each refined piece.
+                    for piece in pieces {
+                        out.push(derive(piece)?);
+                    }
+                    continue;
+                }
+                out.push(derive(group)?);
             }
         }
     }
-    out
+    Ok(FusionPlanBundle { groups: out })
 }
 
-/// Statement budget for one *rolled* group: prologue + loop body +
-/// epilogue must stay compiler-friendly even though the plane heights no
-/// longer matter. Configurations whose rolled emission still explodes
-/// (scalar ISAs or unrolled columns over wide planes) fall back to the
-/// classic per-group split.
-const ROLLED_GROUP_STMT_BUDGET: usize = 50_000;
-
-/// Statements a group's rolled emission would write (prologue + one loop
-/// body + epilogue), or `None` when its schedule has no detectable
-/// steady-state period. Deliberately independent of [`RolledMode`] so the
-/// partition never depends on the emission knob.
-fn rolled_group_cost(
+/// Statement cost of a rolled plan: every unrolled op plus one pattern
+/// copy per loop (mirrors what [`emit_fused_group`] actually writes).
+fn rolled_plan_cost(
     model: &Model,
     shapes: &[Shape],
     opts: &CodegenOptions,
     group: &crate::passes::FusionGroup,
-) -> Option<usize> {
-    let plans = group_row_plans(model, shapes, group).ok()?;
-    let layout = schedule::plan_group_rows(&plans);
-    let p = schedule::detect_periodic(&layout, &plans)?;
-    Some(
-        group_rows_cost(model, shapes, opts, group, &layout.ops[..p.body_start])
-            + group_rows_cost(
-                model,
-                shapes,
-                opts,
-                group,
-                &layout.ops[p.body_start..p.body_start + p.ops_per_iter],
-            )
-            + group_rows_cost(model, shapes, opts, group, &layout.ops[p.epilogue_start..]),
-    )
+    layout: &schedule::GroupLayout,
+    rp: &schedule::RolledPlan,
+) -> usize {
+    rp.segments
+        .iter()
+        .map(|seg| match seg {
+            schedule::Segment::Unrolled(lo, hi) => {
+                group_rows_cost(model, shapes, opts, group, &layout.ops[*lo..*hi])
+            }
+            schedule::Segment::Loop(l) => {
+                group_rows_cost(model, shapes, opts, group, &layout.ops[l.pattern()])
+            }
+        })
+        .sum()
 }
 
 /// Statement cost of a slice of a group's row ops (shared pricing for the
@@ -921,9 +1067,9 @@ fn split_by_budget(
     shapes: &[Shape],
     opts: &CodegenOptions,
     group: crate::passes::FusionGroup,
-    out: &mut Vec<crate::passes::FusionGroup>,
-) {
+) -> Vec<crate::passes::FusionGroup> {
     use crate::passes::FusionGroup;
+    let mut out = Vec::new();
     let mut start = group.start;
     let mut acc = 0usize;
     for i in group.start..group.end {
@@ -938,6 +1084,7 @@ fn split_by_budget(
     if start < group.end {
         out.push(FusionGroup { start, end: group.end });
     }
+    out
 }
 
 /// Row-axis [`schedule::AxisPlan`] of every member of a fusion group, in
@@ -968,71 +1115,215 @@ fn group_row_plans(
     Ok(plans)
 }
 
+/// Steady-state loop context of one emitted row op: per-member row
+/// advance, per-edge ring advance (rotate-mode loops only), and the
+/// generation-time rotation state `phi` of every edge's pointer set at
+/// loop entry.
+struct LoopCtx<'a> {
+    row_delta: &'a [usize],
+    /// `Some` for rotate-mode loops; `None` freezes every ring offset at
+    /// iteration 0 (the phase-expanded body, whose advances are multiples
+    /// of the ring heights by construction).
+    edge_adv: Option<&'a [usize]>,
+    phi: &'a [usize],
+}
+
+impl LoopCtx<'_> {
+    /// True when ring edge `e` (height `rows`) is addressed through the
+    /// rotating pointer set inside this loop.
+    fn rotates(&self, e: usize, rows: usize) -> bool {
+        self.edge_adv.map_or(false, |adv| adv[e] % rows.max(1) != 0)
+    }
+}
+
 /// Emit one fusion group: replay the demand-driven row schedule, routing
 /// every member's input/output rows through the group input plane, the
 /// per-edge ring buffers, or the group output plane.
 ///
-/// Under [`RolledMode::Auto`], a schedule with a detectable steady-state
-/// period is emitted as warm-up prologue + one genuine C `for` loop over
-/// the steady iterations + drain epilogue: the loop body holds one copy of
-/// the op pattern per ring phase (slot assignments are iteration-invariant
-/// by construction, so all ring offsets stay generation-time constants)
-/// while plane bases advance by a constant stride per iteration.
+/// A group with a rolled plan emits each [`schedule::Segment`] in order:
+/// unrolled runs one block per op, loops (the steady-state body plus any
+/// warm-up/drain ramps) as genuine C `for` loops. Plane bases advance by a
+/// constant element stride per iteration; ring rows are addressed either
+/// at frozen slot offsets (when the loop's edge advance is a multiple of
+/// the ring height) or through `float *nncg_ring{i}_r{k}` pointers that
+/// the loop bottom rotates with straight-line assignments — either way the
+/// emitted C contains no runtime `%`.
 #[allow(clippy::too_many_arguments)]
 fn emit_fused_group(
     w: &mut CWriter,
     model: &Model,
     shapes: &[Shape],
     group: &crate::passes::FusionGroup,
+    fp: &FusedGroupPlan,
     group_src: &str,
     group_dst: &str,
     plan: &BufferPlan,
     opts: &CodegenOptions,
 ) -> Result<()> {
-    let plans = group_row_plans(model, shapes, group)?;
-    let layout = schedule::plan_group_rows(&plans);
-    let periodic = if opts.fuse_rolled == RolledMode::Auto {
-        schedule::detect_periodic(&layout, &plans)
-    } else {
-        None
-    };
-    let p = match periodic {
-        Some(p) => p,
+    use schedule::Segment;
+    let plans = &fp.plans;
+    let layout = &fp.layout;
+    let rp = match &fp.rolled {
+        Some(rp) => rp,
         None => {
             for op in &layout.ops {
-                emit_group_row_op(w, model, shapes, group, group_src, group_dst, plan, opts, &plans, op, None)?;
+                emit_group_row_op(
+                    w, model, shapes, group, group_src, group_dst, plan, opts, plans, layout, op,
+                    None,
+                )?;
             }
             return Ok(());
         }
     };
-    w.line(&format!(
-        "/* steady state: {} iterations x {} row-ops per iteration (ring phases included); {} warm-up + {} drain ops stay unrolled */",
-        p.iters,
-        p.ops_per_iter,
-        p.body_start,
-        layout.ops.len() - p.epilogue_start
-    ));
-    for op in &layout.ops[..p.body_start] {
-        emit_group_row_op(w, model, shapes, group, group_src, group_dst, plan, opts, &plans, op, None)?;
+    let edges = group.len() - 1;
+    // Per-loop ring advances, resolved once; an edge some loop rotates
+    // gets a pointer set declared at the top of the group block.
+    let mut loop_adv: Vec<Option<Vec<usize>>> = Vec::new();
+    let mut rotated = vec![false; edges];
+    for seg in &rp.segments {
+        if let Segment::Loop(l) = seg {
+            if !l.rotate {
+                loop_adv.push(None);
+                continue;
+            }
+            let adv = schedule::edge_advances(&layout.ops[l.pattern()], &l.row_delta, plans)
+                .ok_or_else(|| {
+                    anyhow::anyhow!("rolled loop references a ring edge at two rates")
+                })?;
+            for e in 0..edges {
+                if adv[e] % layout.ring_rows[e].max(1) != 0 {
+                    rotated[e] = true;
+                }
+            }
+            loop_adv.push(Some(adv));
+        }
     }
-    w.open(&format!("for (i = 0; i < {}; i++)", p.iters));
-    for op in &layout.ops[p.body_start..p.body_start + p.ops_per_iter] {
-        emit_group_row_op(
-            w, model, shapes, group, group_src, group_dst, plan, opts, &plans, op,
-            Some(&p.row_delta),
-        )?;
+    let scoped = rotated.iter().any(|&r| r);
+    if scoped {
+        // Group-scoped block so the pointer declarations stay ANSI-legal
+        // after earlier statements.
+        w.open("");
+        for (e, _) in rotated.iter().enumerate().filter(|(_, &r)| r) {
+            let ring = find_ring(plan, group.start + e)?;
+            for k in 0..ring.rows {
+                w.line(&format!(
+                    "float *nncg_ring{gl}_r{k} = nncg_ring{gl} + {};",
+                    k * ring.row_elems,
+                    gl = ring.layer
+                ));
+            }
+        }
     }
-    w.close();
-    for op in &layout.ops[p.epilogue_start..] {
-        emit_group_row_op(w, model, shapes, group, group_src, group_dst, plan, opts, &plans, op, None)?;
+    let mut phi = vec![0usize; edges];
+    let mut loops_seen = 0usize;
+    for seg in &rp.segments {
+        match seg {
+            Segment::Unrolled(lo, hi) => {
+                for op in &layout.ops[*lo..*hi] {
+                    emit_group_row_op(
+                        w, model, shapes, group, group_src, group_dst, plan, opts, plans, layout,
+                        op, None,
+                    )?;
+                }
+            }
+            Segment::Loop(l) => {
+                let adv = loop_adv[loops_seen].as_deref();
+                loops_seen += 1;
+                if l.ramp {
+                    w.line(&format!(
+                        "/* rolled ramp: {} iterations x {} row-ops */",
+                        l.iters, l.ops_per_iter
+                    ));
+                } else {
+                    w.line(&format!(
+                        "/* steady state: {} iterations x {} row-ops per iteration ({}) */",
+                        l.iters,
+                        l.ops_per_iter,
+                        if l.rotate {
+                            "one op-pattern period; rotated ring pointers"
+                        } else {
+                            "ring phases included; frozen ring slots"
+                        }
+                    ));
+                }
+                w.open(&format!("for (i = 0; i < {}; i++)", l.iters));
+                {
+                    let ctx = LoopCtx { row_delta: &l.row_delta, edge_adv: adv, phi: &phi };
+                    for op in &layout.ops[l.pattern()] {
+                        emit_group_row_op(
+                            w, model, shapes, group, group_src, group_dst, plan, opts, plans,
+                            layout, op, Some(&ctx),
+                        )?;
+                    }
+                    emit_ring_rotations(w, group, layout, &ctx)?;
+                }
+                w.close();
+                if let Some(adv) = adv {
+                    for e in 0..edges {
+                        let r = layout.ring_rows[e].max(1);
+                        phi[e] = (phi[e] + l.iters * (adv[e] % r)) % r;
+                    }
+                }
+            }
+        }
+    }
+    if scoped {
+        w.close();
     }
     Ok(())
 }
 
-/// Emit one row op of a fusion group. `row_delta` is `Some` inside the
-/// steady-state loop body: the op then computes row `op.row + i*delta`
-/// per iteration `i`, with plane bases advancing by a constant element
-/// stride and ring bases staying fixed (iteration-invariant slots).
+/// Straight-line pointer rotation at the bottom of a rotate-mode loop
+/// body: for every edge the loop rotates, `ptr'[k] = ptr[(k + g) % R]`
+/// with `g` the edge's per-iteration row advance mod its ring height —
+/// `g` temporaries, then `R` reassignments, no runtime index arithmetic.
+fn emit_ring_rotations(
+    w: &mut CWriter,
+    group: &crate::passes::FusionGroup,
+    layout: &schedule::GroupLayout,
+    ctx: &LoopCtx<'_>,
+) -> Result<()> {
+    let adv = match ctx.edge_adv {
+        Some(adv) => adv,
+        None => return Ok(()),
+    };
+    let rot: Vec<(usize, usize, usize)> = (0..layout.ring_rows.len())
+        .filter_map(|e| {
+            let r = layout.ring_rows[e].max(1);
+            let g = adv[e] % r;
+            (g != 0).then_some((e, r, g))
+        })
+        .collect();
+    if rot.is_empty() {
+        return Ok(());
+    }
+    w.line("/* rotate ring row pointers by this iteration's row advance */");
+    w.open("");
+    for &(e, _, g) in &rot {
+        let gl = group.start + e;
+        for t in 0..g {
+            w.line(&format!("float *nncg_rt{e}_{t} = nncg_ring{gl}_r{t};"));
+        }
+    }
+    for &(e, r, g) in &rot {
+        let gl = group.start + e;
+        for k in 0..r - g {
+            w.line(&format!("nncg_ring{gl}_r{k} = nncg_ring{gl}_r{};", k + g));
+        }
+        for t in 0..g {
+            w.line(&format!("nncg_ring{gl}_r{} = nncg_rt{e}_{t};", r - g + t));
+        }
+    }
+    w.close();
+    Ok(())
+}
+
+/// Emit one row op of a fusion group. `loop_ctx` is `Some` inside a
+/// rolled loop body: the op then computes row `op.row + i*delta` per
+/// iteration `i`, with plane bases advancing by a constant element
+/// stride and ring rows addressed either at frozen slot offsets or, when
+/// the loop rotates the edge, through the rotating pointer set (indices
+/// resolved at generation time against the loop-entry rotation state).
 #[allow(clippy::too_many_arguments)]
 fn emit_group_row_op(
     w: &mut CWriter,
@@ -1044,19 +1335,41 @@ fn emit_group_row_op(
     plan: &BufferPlan,
     opts: &CodegenOptions,
     plans: &[schedule::AxisPlan],
+    layout: &schedule::GroupLayout,
     op: &schedule::RowOp,
-    row_delta: Option<&[usize]>,
+    loop_ctx: Option<&LoopCtx<'_>>,
 ) -> Result<()> {
-    use schedule::{FusedRowIo, RowMap};
+    use schedule::{FusedRowIo, RotPtrs, RowMap};
     let members = group.len();
     let i = group.start + op.layer;
     let in_s = &shapes[i];
     let out_s = &shapes[i + 1];
+    // Rotating pointer name for ring row `q` of edge `e`: the body
+    // addresses the pointer whose slot tracks `q` across iterations —
+    // index `(q - phi) mod R` against the loop-entry rotation state.
+    let rot_name = |e: usize, q: usize, ctx: &LoopCtx<'_>| {
+        let r = layout.ring_rows[e].max(1);
+        format!("nncg_ring{}_r{}", group.start + e, (q % r + r - ctx.phi[e] % r) % r)
+    };
     let (src_name, src_map) = if op.layer == 0 {
         (group_src.to_string(), RowMap::Plane { row_elems: in_s.w() * in_s.c() })
     } else {
         let r = find_ring(plan, i - 1)?;
         (format!("nncg_ring{}", r.layer), RowMap::Ring { rows: r.rows, row_elems: r.row_elems })
+    };
+    let src_rot = match (loop_ctx, op.layer > 0) {
+        (Some(ctx), true) if ctx.rotates(op.layer - 1, layout.ring_rows[op.layer - 1]) => {
+            let e = op.layer - 1;
+            let pl = &plans[op.layer];
+            let (k0, k1) = pl.window(op.row);
+            let p0 = pl.src_start(op.row);
+            let ring = find_ring(plan, i - 1)?;
+            Some(RotPtrs {
+                names: (0..k1 - k0).map(|t| rot_name(e, p0 + t, ctx)).collect(),
+                aligned: ring.row_elems % 8 == 0,
+            })
+        }
+        _ => None,
     };
     let (dst_name, dst_map) = if op.layer == members - 1 {
         (group_dst.to_string(), RowMap::Plane { row_elems: out_s.w() * out_s.c() })
@@ -1064,27 +1377,47 @@ fn emit_group_row_op(
         let r = find_ring(plan, i)?;
         (format!("nncg_ring{}", r.layer), RowMap::Ring { rows: r.rows, row_elems: r.row_elems })
     };
-    let dst_row_off = dst_map.off(op.row);
+    let dst_rot = match (loop_ctx, op.layer < members - 1) {
+        (Some(ctx), true) if ctx.rotates(op.layer, layout.ring_rows[op.layer]) => {
+            let ring = find_ring(plan, i)?;
+            Some(RotPtrs {
+                names: vec![rot_name(op.layer, op.row, ctx)],
+                aligned: ring.row_elems % 8 == 0,
+            })
+        }
+        _ => None,
+    };
+    // A rotating destination pointer addresses the row start directly.
+    let dst_row_off = if dst_rot.is_some() { 0 } else { dst_map.off(op.row) };
     // Per-iteration base strides inside the rolled loop: a plane source
     // advances `delta * stride` source rows, a plane destination `delta`
-    // output rows; ring bases never move (slots repeat exactly).
-    let (src_iter_elems, dst_iter_elems) = match row_delta {
+    // output rows; ring bases never move (frozen slots repeat exactly,
+    // rotating pointers carry the advance themselves).
+    let (src_iter_elems, dst_iter_elems) = match loop_ctx {
         None => (0, 0),
-        Some(delta) => {
+        Some(ctx) => {
             let si = if op.layer == 0 {
-                delta[0] * plans[0].stride * in_s.w() * in_s.c()
+                ctx.row_delta[0] * plans[0].stride * in_s.w() * in_s.c()
             } else {
                 0
             };
             let di = if op.layer == members - 1 {
-                delta[op.layer] * out_s.w() * out_s.c()
+                ctx.row_delta[op.layer] * out_s.w() * out_s.c()
             } else {
                 0
             };
             (si, di)
         }
     };
-    let io = FusedRowIo { out_row: op.row, src_map, dst_row_off, src_iter_elems, dst_iter_elems };
+    let io = FusedRowIo {
+        out_row: op.row,
+        src_map,
+        dst_row_off,
+        src_iter_elems,
+        dst_iter_elems,
+        src_rot,
+        dst_rot,
+    };
     let ctx = LayerCtx {
         idx: i,
         in_shape: in_s,
@@ -1094,13 +1427,13 @@ fn emit_group_row_op(
         padbuf: "nncg_pad",
         opts,
     };
-    match row_delta {
+    match loop_ctx {
         None => w.line(&format!("/* L{i} {} row {} */", model.layers[i].kind_name(), op.row)),
-        Some(delta) => w.line(&format!(
+        Some(lc) => w.line(&format!(
             "/* L{i} {} row {}+{}i */",
             model.layers[i].kind_name(),
             op.row,
-            delta[op.layer]
+            lc.row_delta[op.layer]
         )),
     }
     match &model.layers[i] {
@@ -1118,18 +1451,7 @@ fn emit_group_row_op(
         Layer::AvgPool2D { pool, stride } => {
             depthwise::emit_avgpool_row_fused(w, &ctx, *pool, *stride, &io)?
         }
-        Layer::Activation(a) => {
-            let src_row_off = io.src_map.off(plans[op.layer].src_start(op.row));
-            activation::emit_activation_row_fused(
-                w,
-                &ctx,
-                *a,
-                src_row_off,
-                io.dst_row_off,
-                io.src_iter_elems,
-                io.dst_iter_elems,
-            )?
-        }
+        Layer::Activation(a) => activation::emit_activation_row_fused(w, &ctx, *a, &io)?,
         other => bail!("layer {} cannot be emitted in a fusion group", other.kind_name()),
     }
     Ok(())
@@ -1147,7 +1469,7 @@ fn plan_buffers(
     model: &Model,
     shapes: &[Shape],
     opts: &CodegenOptions,
-    groups: &[crate::passes::FusionGroup],
+    bundle: &FusionPlanBundle,
 ) -> Result<BufferPlan> {
     let uses_pad_buffer = schedule::pad_strategy(opts) == schedule::PadStrategy::Copy;
     let n_layers = model.layers.len();
@@ -1156,18 +1478,18 @@ fn plan_buffers(
     let mut rings = Vec::new();
     // Liveness-aware ping-pong sizing: scratch only ever holds a group
     // boundary plane (the final output goes straight to x_out, and fused
-    // intermediates live in their ring buffers instead).
-    for group in groups {
+    // intermediates live in their ring buffers instead). Ring heights come
+    // straight from the bundle's layouts — never re-derived.
+    for pg in &bundle.groups {
+        let group = &pg.group;
         if group.end != n_layers {
             main_size = main_size.max(shapes[group.end].numel());
         }
-        if group.len() > 1 {
-            let plans = group_row_plans(model, shapes, group)?;
-            let layout = schedule::plan_group_rows(&plans);
+        if let Some(fp) = &pg.fused {
             for e in 0..group.len() - 1 {
                 let out_s = &shapes[group.start + e + 1];
                 let row_elems = out_s.w() * out_s.c();
-                let rows = layout.ring_rows[e];
+                let rows = fp.layout.ring_rows[e];
                 let mut floats = rows * row_elems;
                 if opts.use_aligned() {
                     floats = round_to_vec(floats);
@@ -1232,8 +1554,8 @@ impl ScratchReport {
 pub fn scratch_report(model: &Model, opts: &CodegenOptions) -> Result<ScratchReport> {
     let model = crate::passes::optimize(model.clone())?;
     let shapes = model.infer_shapes()?;
-    let groups = fusion_groups(&model, &shapes, opts);
-    let plan = plan_buffers(&model, &shapes, opts, &groups)?;
+    let bundle = plan_fusion(&model, &shapes, opts)?;
+    let plan = plan_buffers(&model, &shapes, opts, &bundle)?;
     Ok(ScratchReport {
         main_floats: plan.main_size,
         pad_floats: plan.pad_size,
@@ -1294,28 +1616,23 @@ fn fused_layer_cost(layer: &Layer, out: &Shape, opts: &CodegenOptions) -> usize 
     }
 }
 
-/// Rough statement-count estimate for the cost guard. Fused groups are
-/// priced per scheduled row op; a group with a rolled steady state only
-/// pays for its prologue + one loop body + epilogue, mirroring what
-/// `emit_fused_group` actually writes out.
-fn estimate_statements(model: &Model, opts: &CodegenOptions) -> Result<usize> {
-    let shapes = model.infer_shapes()?;
-    let groups = fusion_groups(model, &shapes, opts);
+/// Rough statement-count estimate for the cost guard, priced straight off
+/// the bundle: fused groups pay per scheduled row op, and a group with a
+/// rolled plan only pays for its unrolled runs plus one pattern copy per
+/// loop — mirroring what `emit_fused_group` actually writes out.
+fn estimate_statements(
+    model: &Model,
+    shapes: &[Shape],
+    opts: &CodegenOptions,
+    bundle: &FusionPlanBundle,
+) -> usize {
     let mut total = 0usize;
-    for group in &groups {
-        if group.len() > 1 {
-            let rolled = if opts.fuse_rolled == RolledMode::Auto {
-                rolled_group_cost(model, &shapes, opts, group)
-            } else {
-                None
-            };
-            total += match rolled {
-                Some(c) => c,
-                None => {
-                    let plans = group_row_plans(model, &shapes, group)?;
-                    let layout = schedule::plan_group_rows(&plans);
-                    group_rows_cost(model, &shapes, opts, group, &layout.ops)
-                }
+    for pg in &bundle.groups {
+        let group = &pg.group;
+        if let Some(fp) = &pg.fused {
+            total += match &fp.rolled {
+                Some(rp) => rolled_plan_cost(model, shapes, opts, group, &fp.layout, rp),
+                None => group_rows_cost(model, shapes, opts, group, &fp.layout.ops),
             };
             continue;
         }
@@ -1339,7 +1656,7 @@ fn estimate_statements(model: &Model, opts: &CodegenOptions) -> Result<usize> {
             Unroll::Full => body * rows * cols,
         };
     }
-    Ok(total)
+    total
 }
 
 #[cfg(test)]
@@ -1486,10 +1803,11 @@ mod tests {
         for a in [AlignMode::Auto, AlignMode::Off] {
             assert_eq!(AlignMode::from_name(a.name()), Some(a));
         }
-        for r in [RolledMode::Auto, RolledMode::Off] {
+        for r in [RolledMode::Auto, RolledMode::Off, RolledMode::Rotate, RolledMode::Expand] {
             assert_eq!(RolledMode::from_name(r.name()), Some(r));
         }
         assert_eq!(RolledMode::from_name("rolled"), None);
+        assert_eq!(RolledMode::from_name("phases"), None);
         let mut tiles = vec![TileMode::Auto, TileMode::Off];
         for n in 2..=8 {
             tiles.push(TileMode::Fixed(n));
@@ -1616,21 +1934,60 @@ mod tests {
     #[test]
     fn rolled_and_unrolled_share_groups_and_scratch() {
         // The partition (and therefore every buffer) must not depend on the
-        // emission form — that is what makes the two forms bit-comparable.
+        // emission form — that is what makes all four forms bit-comparable.
         for name in zoo::PAPER_MODELS {
             let m = zoo::by_name(name).unwrap().with_random_weights(9);
-            let rolled = scratch_report(&m, &CodegenOptions { fuse: FuseMode::Auto, ..CodegenOptions::sse3() }).unwrap();
-            let unrolled = scratch_report(
-                &m,
-                &CodegenOptions {
-                    fuse: FuseMode::Auto,
-                    fuse_rolled: RolledMode::Off,
-                    ..CodegenOptions::sse3()
-                },
-            )
-            .unwrap();
-            assert_eq!(rolled, unrolled, "{name}: scratch plan must ignore the rolled knob");
+            let auto = scratch_report(&m, &CodegenOptions { fuse: FuseMode::Auto, ..CodegenOptions::sse3() }).unwrap();
+            for mode in [RolledMode::Off, RolledMode::Rotate, RolledMode::Expand] {
+                let other = scratch_report(
+                    &m,
+                    &CodegenOptions {
+                        fuse: FuseMode::Auto,
+                        fuse_rolled: mode,
+                        ..CodegenOptions::sse3()
+                    },
+                )
+                .unwrap();
+                assert_eq!(auto, other, "{name}: scratch plan must ignore the rolled knob ({})", mode.name());
+            }
         }
+    }
+
+    #[test]
+    fn rotated_emission_collapses_body_and_rotates_pointers() {
+        // Robot group [0..4) has 3 ring phases: the expanded body carries
+        // 15 row-ops, the rotated body the bare 5-op pattern plus the
+        // pointer rotation block. Auto must pick rotation.
+        let rotate = gen("robot", &CodegenOptions {
+            fuse: FuseMode::Auto,
+            fuse_rolled: RolledMode::Rotate,
+            ..CodegenOptions::sse3()
+        });
+        assert!(rotate.contains("one op-pattern period; rotated ring pointers"));
+        assert!(rotate.contains("float *nncg_ring0_r0 = nncg_ring0"), "missing ring pointer decls");
+        assert!(rotate.contains("/* rotate ring row pointers"), "missing rotation block");
+        assert!(rotate.contains("/* rolled ramp:"), "robot warm-up ramps must roll");
+        assert!(!rotate.contains('%'), "rotation must stay free of runtime modulo");
+        assert_eq!(rotate.matches('{').count(), rotate.matches('}').count());
+        let auto = gen("robot", &CodegenOptions { fuse: FuseMode::Auto, ..CodegenOptions::sse3() });
+        assert_eq!(auto, rotate, "auto must prefer rotation when it verifies");
+        let expand = gen("robot", &CodegenOptions {
+            fuse: FuseMode::Auto,
+            fuse_rolled: RolledMode::Expand,
+            ..CodegenOptions::sse3()
+        });
+        assert!(expand.contains("ring phases included; frozen ring slots"));
+        assert!(!expand.contains("nncg_ring0_r0"), "expanded body must not rotate pointers");
+        assert!(rotate.len() < expand.len(), "rotation must shrink the generated C");
+        // All three tags are distinct (cache keys, bench labels).
+        let tags: Vec<String> = [RolledMode::Auto, RolledMode::Rotate, RolledMode::Expand, RolledMode::Off]
+            .iter()
+            .map(|&m| CodegenOptions { fuse: FuseMode::Auto, fuse_rolled: m, ..CodegenOptions::sse3() }.tag())
+            .collect();
+        let mut uniq = tags.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), tags.len(), "rolled modes must tag distinctly: {tags:?}");
     }
 
     #[test]

@@ -68,34 +68,36 @@ pub(crate) fn emit_maxpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
             w.close();
         }
         Unroll::KeepOuter2 => {
+            let rows = linear_rows(&geom, "s");
             w.open(&format!("for (i = 0; i < {h_out}; i++)"));
             w.open(&format!("for (j = 0; j < {w_out}; j++)"));
             emit_bases(w, &geom);
-            emit_window(w, &geom, &sched, "s", 0, "d", 0, &linear_rows(&geom));
+            emit_window(w, &geom, &sched, &rows, 0, "d", 0);
             w.close();
             w.close();
         }
         Unroll::KeepOuter1 => {
+            let rows = linear_rows(&geom, "s");
             w.open(&format!("for (i = 0; i < {h_out}; i++)"));
             w.line(&format!("const float *s = {} + i*{};", geom.src, stride.0 * w_in * c));
             w.line(&format!("float *d = {} + i*{};", geom.dst, w_out * c));
             for j in 0..w_out {
-                emit_window(w, &geom, &sched, "s", j * stride.1 * c, "d", j * c, &linear_rows(&geom));
+                emit_window(w, &geom, &sched, &rows, j * stride.1 * c, "d", j * c);
             }
             w.close();
         }
         Unroll::Full => {
+            let rows = linear_rows(&geom, &geom.src);
             for i in 0..h_out {
                 for j in 0..w_out {
                     emit_window(
                         w,
                         &geom,
                         &sched,
-                        &geom.src.clone(),
+                        &rows,
                         (i * stride.0 * w_in + j * stride.1) * c,
-                        &geom.dst.clone(),
+                        &geom.dst,
                         (i * w_out + j) * c,
-                        &linear_rows(&geom),
                     );
                 }
             }
@@ -104,15 +106,47 @@ pub(crate) fn emit_maxpool(w: &mut CWriter, ctx: &LayerCtx<'_>, pool: (usize, us
     Ok(())
 }
 
-/// Window-row offsets of a whole-plane walk (rows at the linear stride).
-fn linear_rows(g: &PoolGeom) -> Vec<usize> {
-    (0..g.pool.0).map(|n| n * g.w_in * g.c).collect()
+/// Window-row bases of a whole-plane walk (one shared base, rows at the
+/// linear stride).
+fn linear_rows(g: &PoolGeom, base: &str) -> Vec<(String, usize)> {
+    (0..g.pool.0).map(|n| (base.to_string(), n * g.w_in * g.c)).collect()
+}
+
+/// Column bases for one fused pool-window row op inside the kept column
+/// loop, shared by the max- and average-pool emitters: a rotating source
+/// gets one alias per row pointer (each advanced by the column stride); a
+/// non-rotating source keeps the single `s` of the unrolled form, with
+/// the resolved row offsets staying inside the window. Emits the
+/// declarations and returns the `(base, row offset)` pairs.
+pub(crate) fn fused_col_row_bases(
+    w: &mut CWriter,
+    io: &schedule::FusedRowIo,
+    plain_base: &str,
+    col_stride: usize,
+    base_rows: &[(String, usize)],
+) -> Vec<(String, usize)> {
+    match &io.src_rot {
+        Some(rot) => rot
+            .names
+            .iter()
+            .enumerate()
+            .map(|(n, name)| {
+                w.line(&format!("const float *s{n} = {name} + j*{col_stride};"));
+                (format!("s{n}"), 0)
+            })
+            .collect(),
+        None => {
+            w.line(&format!("const float *s = {plain_base} + j*{col_stride};"));
+            base_rows.iter().map(|(_, off)| ("s".to_string(), *off)).collect()
+        }
+    }
 }
 
 /// One constant-coordinate output row of a max pool inside a row-streaming
 /// fusion group; window rows are fetched through `io.src_map` (the
-/// producer's ring buffer or the group input plane) and the bases advance
-/// `io.*_iter_elems` floats per steady-state loop iteration.
+/// producer's ring buffer or the group input plane) or the rotating
+/// pointer set, and plane bases advance `io.*_iter_elems` floats per
+/// steady-state loop iteration.
 pub(crate) fn emit_maxpool_row_fused(
     w: &mut CWriter,
     ctx: &LayerCtx<'_>,
@@ -125,28 +159,33 @@ pub(crate) fn emit_maxpool_row_fused(
     let sched = ChannelSchedule::for_channels(ctx.opts.isa, c);
     let geom = PoolGeom {
         src: schedule::fused_base(ctx.src, 0, io.src_iter_elems),
-        dst: schedule::fused_base(ctx.dst, 0, io.dst_iter_elems),
+        dst: match &io.dst_rot {
+            Some(rot) => rot.names[0].clone(),
+            None => schedule::fused_base(ctx.dst, 0, io.dst_iter_elems),
+        },
         pool,
         stride,
         w_in,
         w_out,
         c,
-        // Rolled loop terms keep the alignment proofs only when they
-        // advance whole vector groups.
-        src_aligned: ctx.opts.use_aligned()
-            && schedule::static_buf(ctx.src)
-            && io.src_iter_aligned(),
-        dst_aligned: ctx.opts.use_aligned()
-            && schedule::static_buf(ctx.dst)
-            && io.dst_iter_aligned(),
+        // Rolled loop terms / rotating pointers keep the alignment proofs
+        // only under the shared claim rule.
+        src_aligned: ctx.opts.use_aligned() && io.src_claims_aligned(ctx.src),
+        dst_aligned: ctx.opts.use_aligned() && io.dst_claims_aligned(ctx.dst),
     };
-    let row_offs: Vec<usize> =
-        (0..pool.0).map(|n| io.src_map.off(io.out_row * stride.0 + n)).collect();
+    // Row bases at a zero column offset: rotating pointers, or the fused
+    // base plus resolved (plane or ring-slot) row offsets.
+    let base_rows: Vec<(String, usize)> = match &io.src_rot {
+        Some(rot) => rot.names.iter().map(|n| (n.clone(), 0)).collect(),
+        None => (0..pool.0)
+            .map(|n| (geom.src.clone(), io.src_map.off(io.out_row * stride.0 + n)))
+            .collect(),
+    };
     if ctx.opts.unroll.keeps_cols() {
         w.open(&format!("for (j = 0; j < {w_out}; j++)"));
-        w.line(&format!("const float *s = {} + j*{};", geom.src, stride.1 * c));
+        let rows = fused_col_row_bases(w, io, &geom.src, stride.1 * c, &base_rows);
         w.line(&format!("float *d = {} + {} + j*{};", geom.dst, io.dst_row_off, c));
-        emit_window(w, &geom, &sched, "s", 0, "d", 0, &row_offs);
+        emit_window(w, &geom, &sched, &rows, 0, "d", 0);
         w.close();
     } else {
         for j in 0..w_out {
@@ -154,11 +193,10 @@ pub(crate) fn emit_maxpool_row_fused(
                 w,
                 &geom,
                 &sched,
-                &geom.src.clone(),
+                &base_rows,
                 j * stride.1 * c,
                 &geom.dst.clone(),
                 io.dst_row_off + j * c,
-                &row_offs,
             );
         }
     }
@@ -184,35 +222,35 @@ fn emit_bases(w: &mut CWriter, g: &PoolGeom) {
 }
 
 /// Fully unrolled window max for one output cell, per lane segment.
-/// `row_offs[n]` is the source offset of window row `n` (linear for plane
-/// walks, resolved ring slots for fused rows).
+/// `rows[n]` is the `(base, element offset)` of window row `n` — a single
+/// base with linear offsets for plane walks, resolved ring slots for
+/// fused rows, or one rotating pointer per row in rotate-mode loop bodies.
 #[allow(clippy::too_many_arguments)]
 fn emit_window(
     w: &mut CWriter,
     g: &PoolGeom,
     sched: &ChannelSchedule,
-    s_name: &str,
+    rows: &[(String, usize)],
     s_off: usize,
     d_name: &str,
     d_off: usize,
-    row_offs: &[usize],
 ) {
     for seg in &sched.segments {
         if let Some(v) = seg.vec {
             let base_al = g.c % v.width == 0;
             for k0 in (seg.start..seg.end()).step_by(v.width) {
-                let off0 = s_off + row_offs[0] + k0;
+                let off0 = s_off + rows[0].1 + k0;
                 let s_al = g.src_aligned && base_al && off0 % v.width == 0;
                 let d_al = g.dst_aligned && base_al && (d_off + k0) % v.width == 0;
                 w.open("");
-                w.line(&format!("{} v = {};", v.ty, v.load(&format!("{s_name} + {off0}"), s_al)));
+                w.line(&format!("{} v = {};", v.ty, v.load(&format!("{} + {off0}", rows[0].0), s_al)));
                 for n in 0..g.pool.0 {
                     for m in 0..g.pool.1 {
                         if n == 0 && m == 0 {
                             continue;
                         }
-                        let off = s_off + row_offs[n] + m * g.c + k0;
-                        w.line(&v.max("v", &v.load(&format!("{s_name} + {off}"), s_al && off % v.width == 0)));
+                        let off = s_off + rows[n].1 + m * g.c + k0;
+                        w.line(&v.max("v", &v.load(&format!("{} + {off}", rows[n].0), s_al && off % v.width == 0)));
                     }
                 }
                 w.line(&v.store(&format!("{d_name} + {}", d_off + k0), "v", d_al));
@@ -221,15 +259,15 @@ fn emit_window(
         } else {
             for k in seg.start..seg.end() {
                 w.open("");
-                w.line(&format!("float v = {s_name}[{}];", s_off + row_offs[0] + k));
+                w.line(&format!("float v = {}[{}];", rows[0].0, s_off + rows[0].1 + k));
                 w.line("float t;");
                 for n in 0..g.pool.0 {
                     for m in 0..g.pool.1 {
                         if n == 0 && m == 0 {
                             continue;
                         }
-                        let off = s_off + row_offs[n] + m * g.c + k;
-                        w.line(&format!("t = {s_name}[{off}];"));
+                        let off = s_off + rows[n].1 + m * g.c + k;
+                        w.line(&format!("t = {}[{off}];", rows[n].0));
                         w.line("v = t > v ? t : v;");
                     }
                 }

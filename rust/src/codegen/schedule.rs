@@ -9,7 +9,7 @@
 //! groups may be live per emitted chunk.
 
 use super::simd::ChannelSchedule;
-use super::{CodegenOptions, PadMode, TileMode, Unroll};
+use super::{CodegenOptions, PadMode, RolledMode, TileMode, Unroll};
 
 /// Resolved padding strategy for one Same-padded layer.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -313,25 +313,10 @@ impl PeriodicLayout {
     }
 }
 
-/// Find the steady-state period of a fusion group's row schedule, or
-/// `None` when no loop is worth emitting (tiny planes, degenerate
-/// geometry, or a schedule whose tail never settles).
-///
-/// The search walks candidate op-pattern periods smallest-first; for each
-/// it grows the largest suffix of the trimmed-window-free region in which
-/// `ops[t + p]` is `ops[t]` shifted by a per-member constant row delta,
-/// then multiplies the period by the smallest ring-phase count that
-/// returns every ring buffer to the same slot assignment. Everything is
-/// re-verified by literal replay before returning.
-pub(crate) fn detect_periodic(layout: &GroupLayout, plans: &[AxisPlan]) -> Option<PeriodicLayout> {
-    let ops = &layout.ops;
-    let n = plans.len();
-    if n < 2 || ops.len() < 8 {
-        return None;
-    }
-    // Regular region [r0, r1): ops whose kernel window is untrimmed. Rows
-    // ascend per member, so trimmed tops all precede r0 and the first
-    // trimmed bottom row caps r1.
+/// Regular region `[r0, r1)` of a schedule: ops whose kernel window is
+/// untrimmed. Rows ascend per member, so trimmed tops all precede `r0` and
+/// the first trimmed bottom row caps `r1`.
+fn regular_region(ops: &[RowOp], plans: &[AxisPlan]) -> (usize, usize) {
     let mut r0 = 0;
     for (t, op) in ops.iter().enumerate() {
         if op.row < plans[op.layer].lo {
@@ -345,26 +330,57 @@ pub(crate) fn detect_periodic(layout: &GroupLayout, plans: &[AxisPlan]) -> Optio
             break;
         }
     }
+    (r0, r1)
+}
+
+/// Largest `a` in `[r0, r1 - p]` with `ops[t + p] == shift(ops[t])` for
+/// all `t in [a, r1 - p)`, where the shift is a per-member constant
+/// positive row delta.
+fn pattern_suffix(ops: &[RowOp], r0: usize, r1: usize, p: usize, n: usize) -> usize {
+    let mut delta: Vec<Option<usize>> = vec![None; n];
+    let mut a = r1 - p;
+    while a > r0 {
+        let x = ops[a - 1];
+        let y = ops[a - 1 + p];
+        if x.layer != y.layer || y.row <= x.row {
+            break;
+        }
+        let d = y.row - x.row;
+        match delta[x.layer] {
+            Some(prev) if prev != d => break,
+            _ => delta[x.layer] = Some(d),
+        }
+        a -= 1;
+    }
+    a
+}
+
+/// Find the steady-state period of a fusion group's row schedule, or
+/// `None` when no loop is worth emitting (tiny planes, degenerate
+/// geometry, or a schedule whose tail never settles).
+///
+/// This is the **phase-expanded** form: the body holds one copy of the op
+/// pattern per ring phase, so every ring offset can be frozen at its
+/// iteration-0 value. The search walks candidate op-pattern periods
+/// smallest-first; for each it grows the largest suffix of the
+/// trimmed-window-free region in which `ops[t + p]` is `ops[t]` shifted by
+/// a per-member constant row delta, then multiplies the period by the
+/// smallest ring-phase count that returns every ring buffer to the same
+/// slot assignment. Everything is re-verified by literal replay before
+/// returning. ([`detect_rotating`] is the pointer-rotation alternative
+/// whose body is a single pattern period.)
+pub(crate) fn detect_periodic(layout: &GroupLayout, plans: &[AxisPlan]) -> Option<PeriodicLayout> {
+    let ops = &layout.ops;
+    let n = plans.len();
+    if n < 2 || ops.len() < 8 {
+        return None;
+    }
+    let (r0, r1) = regular_region(ops, plans);
     if r1 <= r0 + 3 {
         return None;
     }
     'period: for p in 1..=(r1 - r0) / 2 {
-        // Largest a with ops[t + p] == shift(ops[t]) for all t in [a, r1-p).
-        let mut delta: Vec<Option<usize>> = vec![None; n];
-        let mut a = r1 - p;
-        while a > r0 {
-            let x = ops[a - 1];
-            let y = ops[a - 1 + p];
-            if x.layer != y.layer || y.row <= x.row {
-                break;
-            }
-            let d = y.row - x.row;
-            match delta[x.layer] {
-                Some(prev) if prev != d => break,
-                _ => delta[x.layer] = Some(d),
-            }
-            a -= 1;
-        }
+        let a = pattern_suffix(ops, r0, r1, p, n);
         if r1 - a < 2 * p {
             continue;
         }
@@ -433,20 +449,9 @@ fn verify_periodic(layout: &GroupLayout, plans: &[AxisPlan], cand: &PeriodicLayo
         || cand.epilogue_start != cand.body_start + cand.iters * cand.ops_per_iter
         || cand.epilogue_start > ops.len()
         || cand.row_delta.len() != n
+        || !replay_matches(ops, cand)
     {
         return false;
-    }
-    // Replay: the loop must reproduce the schedule op for op.
-    let mut idx = cand.body_start;
-    for i in 0..cand.iters {
-        for t in 0..cand.ops_per_iter {
-            let pat = ops[cand.body_start + t];
-            let expect = RowOp { layer: pat.layer, row: pat.row + i * cand.row_delta[pat.layer] };
-            if ops[idx] != expect {
-                return false;
-            }
-            idx += 1;
-        }
     }
     // One emitted body must be valid for every iteration.
     for t in 0..cand.ops_per_iter {
@@ -473,11 +478,378 @@ fn verify_periodic(layout: &GroupLayout, plans: &[AxisPlan], cand: &PeriodicLayo
     true
 }
 
+/// `prologue + iters x pattern + epilogue` reproduces the schedule op for
+/// op (shared replay check of both steady-state verifiers).
+fn replay_matches(ops: &[RowOp], cand: &PeriodicLayout) -> bool {
+    let mut idx = cand.body_start;
+    for i in 0..cand.iters {
+        for t in 0..cand.ops_per_iter {
+            let pat = ops[cand.body_start + t];
+            let expect = RowOp { layer: pat.layer, row: pat.row + i * cand.row_delta[pat.layer] };
+            if ops[idx] != expect {
+                return false;
+            }
+            idx += 1;
+        }
+    }
+    true
+}
+
+/// Row advance per loop iteration of every interior ring edge a loop
+/// pattern touches: a write to edge `e` advances by the producer's
+/// `row_delta[e]`, a read by the consumer's `row_delta[e+1] * stride`.
+/// Untouched edges report 0. `None` when the pattern references one edge
+/// at two different rates — a single rotating pointer set (or frozen slot
+/// table) cannot serve both, so such a loop is never emitted.
+pub(crate) fn edge_advances(
+    ops: &[RowOp],
+    row_delta: &[usize],
+    plans: &[AxisPlan],
+) -> Option<Vec<usize>> {
+    let n = plans.len();
+    let mut adv: Vec<Option<usize>> = vec![None; n.saturating_sub(1)];
+    for op in ops {
+        if op.layer + 1 < n {
+            let a = row_delta[op.layer];
+            match adv[op.layer] {
+                Some(prev) if prev != a => return None,
+                _ => adv[op.layer] = Some(a),
+            }
+        }
+        if op.layer > 0 {
+            let a = row_delta[op.layer] * plans[op.layer].stride;
+            match adv[op.layer - 1] {
+                Some(prev) if prev != a => return None,
+                _ => adv[op.layer - 1] = Some(a),
+            }
+        }
+    }
+    Some(adv.into_iter().map(|a| a.unwrap_or(0)).collect())
+}
+
+/// Find the steady-state layout for **ring pointer rotation**: the body is
+/// a single op-pattern period (no ring-phase expansion), and ring rows are
+/// addressed through a pointer set the loop bottom rotates by the edge's
+/// per-iteration advance — so the row→pointer mapping, unlike the
+/// row→slot mapping, is iteration-invariant for *any* period. Returns the
+/// smallest verified period; `None` when the schedule never settles.
+pub(crate) fn detect_rotating(layout: &GroupLayout, plans: &[AxisPlan]) -> Option<PeriodicLayout> {
+    let ops = &layout.ops;
+    let n = plans.len();
+    if n < 2 || ops.len() < 8 {
+        return None;
+    }
+    let (r0, r1) = regular_region(ops, plans);
+    if r1 <= r0 + 3 {
+        return None;
+    }
+    for p in 1..=(r1 - r0) / 2 {
+        let a = pattern_suffix(ops, r0, r1, p, n);
+        if r1 - a < 2 * p {
+            continue;
+        }
+        let mut per_period = vec![0usize; n];
+        for op in &ops[a..a + p] {
+            per_period[op.layer] += 1;
+        }
+        let iters = (r1 - a) / p;
+        let cand = PeriodicLayout {
+            body_start: a,
+            ops_per_iter: p,
+            iters,
+            row_delta: per_period,
+            epilogue_start: a + iters * p,
+        };
+        if verify_rotating(layout, plans, &cand) {
+            return Some(cand);
+        }
+    }
+    None
+}
+
+/// Authoritative re-check of a rotating-layout candidate: literal replay
+/// equality, a full kernel window on every covered row (one emitted body
+/// serves all iterations), and a single per-iteration rate on every ring
+/// edge the pattern touches (the rotation invariant). No modular ring
+/// conditions — pointer rotation is what removes them.
+fn verify_rotating(layout: &GroupLayout, plans: &[AxisPlan], cand: &PeriodicLayout) -> bool {
+    let ops = &layout.ops;
+    if cand.iters < 2
+        || cand.ops_per_iter == 0
+        || cand.epilogue_start != cand.body_start + cand.iters * cand.ops_per_iter
+        || cand.epilogue_start > ops.len()
+        || cand.row_delta.len() != plans.len()
+        || !replay_matches(ops, cand)
+    {
+        return false;
+    }
+    let pat = &ops[cand.body_start..cand.body_start + cand.ops_per_iter];
+    for op in pat {
+        let pl = &plans[op.layer];
+        let last_row = op.row + (cand.iters - 1) * cand.row_delta[op.layer];
+        if op.row < pl.lo || last_row >= pl.hi {
+            return false;
+        }
+    }
+    edge_advances(pat, &cand.row_delta, plans).is_some()
+}
+
+/// One loop of a [`RolledPlan`]: `iters` shifted copies of the op pattern
+/// `ops[start .. start + ops_per_iter)`, member `j` advancing
+/// `row_delta[j]` rows per iteration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct LoopSpec {
+    pub start: usize,
+    pub ops_per_iter: usize,
+    pub iters: usize,
+    pub row_delta: Vec<usize>,
+    /// True when the loop may rotate ring pointers (rotate-mode loops);
+    /// false for phase-expanded bodies, whose ring offsets are frozen at
+    /// iteration 0 (every edge advance is a multiple of its ring height by
+    /// [`verify_periodic`]).
+    pub rotate: bool,
+    /// True for warm-up/drain ramps, false for the steady-state body.
+    pub ramp: bool,
+}
+
+impl LoopSpec {
+    /// One past the last covered op index.
+    pub fn end(&self) -> usize {
+        self.start + self.ops_per_iter * self.iters
+    }
+
+    /// Index range of the emitted pattern.
+    pub fn pattern(&self) -> std::ops::Range<usize> {
+        self.start..self.start + self.ops_per_iter
+    }
+}
+
+/// One entry of a [`RolledPlan`]: a run of schedule ops emitted one block
+/// per op, or a generation-time loop.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) enum Segment {
+    /// `ops[lo..hi]`, emitted unrolled.
+    Unrolled(usize, usize),
+    Loop(LoopSpec),
+}
+
+/// Mode-resolved rolled emission plan of one fusion group: an ordered
+/// partition of the schedule into unrolled runs and loops (the
+/// steady-state body plus any rolled warm-up/drain ramps). Produced once
+/// by [`rolled_plan`] and consumed by both the statement cost model and
+/// the emitter, so pricing and emission cannot disagree.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct RolledPlan {
+    pub segments: Vec<Segment>,
+}
+
+impl RolledPlan {
+    /// Op blocks the emission writes out (each loop pattern counts once).
+    pub fn emitted_ops(&self) -> usize {
+        self.segments
+            .iter()
+            .map(|s| match s {
+                Segment::Unrolled(lo, hi) => hi - lo,
+                Segment::Loop(l) => l.ops_per_iter,
+            })
+            .sum()
+    }
+
+    pub fn loops(&self) -> impl Iterator<Item = &LoopSpec> {
+        self.segments.iter().filter_map(|s| match s {
+            Segment::Loop(l) => Some(l),
+            Segment::Unrolled(..) => None,
+        })
+    }
+}
+
+/// Longest ramp period the warm-up/drain scanner tries. Ramps are short,
+/// so a small cap bounds the quadratic scan without losing real ramps.
+const MAX_RAMP_PERIOD: usize = 8;
+
+/// Find rolled **ramps** inside `ops[lo..hi)` — the warm-up prologue or
+/// drain epilogue of a rotating steady-state layout. A ramp is a maximal
+/// run of `iters >= 2` shifted copies of a short op pattern with constant
+/// per-member row deltas, where every covered row keeps its full kernel
+/// window (one emitted body serves all iterations) and every touched ring
+/// edge is referenced at a single per-iteration rate (the pointer-rotation
+/// invariant). Returned ramps are disjoint and in schedule order.
+pub(crate) fn detect_ramps(
+    layout: &GroupLayout,
+    plans: &[AxisPlan],
+    lo: usize,
+    hi: usize,
+) -> Vec<LoopSpec> {
+    let ops = &layout.ops;
+    let n = plans.len();
+    let mut ramps = Vec::new();
+    let mut t = lo;
+    while t < hi {
+        let mut best: Option<LoopSpec> = None;
+        for p in 1..=MAX_RAMP_PERIOD.min((hi - t) / 2) {
+            // Per-member delta between the first two pattern copies.
+            let mut delta: Vec<Option<usize>> = vec![None; n];
+            let mut ok = true;
+            for j in 0..p {
+                let x = ops[t + j];
+                let y = ops[t + j + p];
+                if x.layer != y.layer || y.row <= x.row {
+                    ok = false;
+                    break;
+                }
+                let d = y.row - x.row;
+                match delta[x.layer] {
+                    Some(prev) if prev != d => {
+                        ok = false;
+                        break;
+                    }
+                    _ => delta[x.layer] = Some(d),
+                }
+            }
+            if !ok {
+                continue;
+            }
+            let row_delta: Vec<usize> = delta.iter().map(|d| d.unwrap_or(0)).collect();
+            // Grow iterations while further copies keep matching.
+            let mut iters = 2usize;
+            while t + (iters + 1) * p <= hi {
+                let all = (0..p).all(|j| {
+                    let x = ops[t + j];
+                    ops[t + iters * p + j]
+                        == RowOp { layer: x.layer, row: x.row + iters * row_delta[x.layer] }
+                });
+                if !all {
+                    break;
+                }
+                iters += 1;
+            }
+            let pat = &ops[t..t + p];
+            // Clamp to the legal full-window prefix rather than rejecting
+            // the whole run: a drain run whose tail straddles the trim
+            // line still rolls its regular head (pattern deltas are >= 1,
+            // so the division is safe). A first copy already outside
+            // [lo, hi) can't be saved by clamping.
+            let mut legal = true;
+            for op in pat {
+                let pl = &plans[op.layer];
+                if op.row < pl.lo || op.row >= pl.hi {
+                    legal = false;
+                    break;
+                }
+                iters = iters.min((pl.hi - 1 - op.row) / row_delta[op.layer] + 1);
+            }
+            if !legal || iters < 2 || edge_advances(pat, &row_delta, plans).is_none() {
+                continue;
+            }
+            let covered = iters * p;
+            if best.as_ref().map_or(true, |b| covered > b.ops_per_iter * b.iters) {
+                best = Some(LoopSpec {
+                    start: t,
+                    ops_per_iter: p,
+                    iters,
+                    row_delta,
+                    rotate: true,
+                    ramp: true,
+                });
+            }
+        }
+        match best {
+            Some(r) => {
+                t = r.end();
+                ramps.push(r);
+            }
+            None => t += 1,
+        }
+    }
+    ramps
+}
+
+/// Assemble the mode-resolved rolled emission plan of a fusion group, or
+/// `None` when the schedule should be emitted fully unrolled (mode `Off`,
+/// or no detectable steady state).
+///
+/// * `Rotate` — single-period body via [`detect_rotating`] plus rolled
+///   warm-up/drain ramps.
+/// * `Expand` — the phase-expanded body via [`detect_periodic`] with an
+///   unrolled prologue/epilogue (the PR 4 emission, kept as the
+///   differential baseline).
+/// * `Auto` — rotation when it verifies, else phase expansion.
+pub(crate) fn rolled_plan(
+    layout: &GroupLayout,
+    plans: &[AxisPlan],
+    mode: RolledMode,
+) -> Option<RolledPlan> {
+    fn push_unrolled(segs: &mut Vec<Segment>, lo: usize, hi: usize) {
+        if lo < hi {
+            segs.push(Segment::Unrolled(lo, hi));
+        }
+    }
+    let rotate_plan = |layout: &GroupLayout| -> Option<RolledPlan> {
+        let p = detect_rotating(layout, plans)?;
+        let mut segs = Vec::new();
+        let mut fill = |segs: &mut Vec<Segment>, lo: usize, hi: usize| {
+            let mut pos = lo;
+            for ramp in detect_ramps(layout, plans, lo, hi) {
+                push_unrolled(segs, pos, ramp.start);
+                pos = ramp.end();
+                segs.push(Segment::Loop(ramp));
+            }
+            push_unrolled(segs, pos, hi);
+        };
+        fill(&mut segs, 0, p.body_start);
+        segs.push(Segment::Loop(LoopSpec {
+            start: p.body_start,
+            ops_per_iter: p.ops_per_iter,
+            iters: p.iters,
+            row_delta: p.row_delta,
+            rotate: true,
+            ramp: false,
+        }));
+        fill(&mut segs, p.epilogue_start, layout.ops.len());
+        Some(RolledPlan { segments: segs })
+    };
+    let expand_plan = |layout: &GroupLayout| -> Option<RolledPlan> {
+        let p = detect_periodic(layout, plans)?;
+        let mut segs = Vec::new();
+        push_unrolled(&mut segs, 0, p.body_start);
+        segs.push(Segment::Loop(LoopSpec {
+            start: p.body_start,
+            ops_per_iter: p.ops_per_iter,
+            iters: p.iters,
+            row_delta: p.row_delta,
+            rotate: false,
+            ramp: false,
+        }));
+        push_unrolled(&mut segs, p.epilogue_start, layout.ops.len());
+        Some(RolledPlan { segments: segs })
+    };
+    match mode {
+        RolledMode::Off => None,
+        RolledMode::Expand => expand_plan(layout),
+        RolledMode::Rotate => rotate_plan(layout),
+        RolledMode::Auto => rotate_plan(layout).or_else(|| expand_plan(layout)),
+    }
+}
+
+/// Rotating ring-pointer base set for one side of a fused-row emission:
+/// `names[t]` is the pointer variable through which source window row `t`
+/// (or, on the destination side, the single output row) is addressed.
+/// `aligned` carries the alignment claim across rotation: it holds only
+/// when every rotation target shares the same provable 32-byte class —
+/// i.e. the slot stride is a whole number of 8-float groups.
+#[derive(Debug, Clone)]
+pub(crate) struct RotPtrs {
+    pub names: Vec<String>,
+    pub aligned: bool,
+}
+
 /// Row-level I/O of one fused-row emission, shared by the unrolled and
 /// steady-state (rolled) paths. In the rolled loop body the row coordinate
 /// is `out_row + i * row_delta` for loop variable `i`; plane bases then
-/// advance `*_iter_elems` floats per iteration while ring bases stay fixed
-/// (slot assignments are iteration-invariant by construction).
+/// advance `*_iter_elems` floats per iteration, while ring rows are
+/// addressed either at fixed slot offsets (iteration-invariant slots) or
+/// through a rotating pointer set (`src_rot`/`dst_rot`) the loop bottom
+/// advances.
 pub(crate) struct FusedRowIo {
     /// Output row at the first covered iteration (generation-time constant
     /// outside the loop).
@@ -491,6 +863,12 @@ pub(crate) struct FusedRowIo {
     pub src_iter_elems: usize,
     /// Floats the destination base advances per loop iteration.
     pub dst_iter_elems: usize,
+    /// Rotate-mode source addressing: window row `t` reads through the
+    /// rotating pointer `src_rot.names[t]`, superseding `src_map`.
+    pub src_rot: Option<RotPtrs>,
+    /// Rotate-mode destination addressing: the output row is written
+    /// through `dst_rot.names[0]` (`dst_row_off` is then 0).
+    pub dst_rot: Option<RotPtrs>,
 }
 
 impl FusedRowIo {
@@ -503,6 +881,26 @@ impl FusedRowIo {
 
     pub fn dst_iter_aligned(&self) -> bool {
         self.dst_iter_elems % 8 == 0
+    }
+
+    /// The single alignment-claim rule for a fused source base, shared by
+    /// every emitter: a rotating pointer set carries its own claim (all
+    /// rotation targets in one class), otherwise the base must be a
+    /// generator-owned buffer whose loop term keeps whole 8-float groups.
+    /// `src` is the base buffer expression the non-rotating form reads.
+    pub fn src_claims_aligned(&self, src: &str) -> bool {
+        match &self.src_rot {
+            Some(rot) => rot.aligned,
+            None => static_buf(src) && self.src_iter_aligned(),
+        }
+    }
+
+    /// Destination-side counterpart of [`FusedRowIo::src_claims_aligned`].
+    pub fn dst_claims_aligned(&self, dst: &str) -> bool {
+        match &self.dst_rot {
+            Some(rot) => rot.aligned,
+            None => static_buf(dst) && self.dst_iter_aligned(),
+        }
     }
 }
 
@@ -923,6 +1321,255 @@ mod tests {
         }
         assert!(checked > 150, "property exercised only {checked} chains");
         assert!(detected > 60, "period detector fired on only {detected}/{checked} chains");
+    }
+
+    #[test]
+    fn rotating_two_stride1_convs_needs_single_period() {
+        // Same chain as `periodic_two_stride1_convs`: the phase-expanded
+        // body needs 3 ring phases (6 ops); pointer rotation collapses it
+        // to the bare 2-op pattern and rolls 13 iterations.
+        let a = AxisPlan::padless(16, 1, 3, 1, 16);
+        let b = AxisPlan::padless(16, 1, 3, 1, 16);
+        let layout = plan_group_rows(&[a, b]);
+        let p = detect_rotating(&layout, &[a, b]).expect("chain must rotate");
+        assert_eq!(p.body_start, 3);
+        assert_eq!(p.ops_per_iter, 2); // one pattern period, no phases
+        assert_eq!(p.iters, 13);
+        assert_eq!(p.row_delta, vec![1, 1]);
+        assert_eq!(p.epilogue_start, 29);
+        // The expanded body is exactly `phases x` bigger.
+        let e = detect_periodic(&layout, &[a, b]).unwrap();
+        assert_eq!(e.ops_per_iter, 3 * p.ops_per_iter);
+    }
+
+    #[test]
+    fn rotating_robot_first_group_shape() {
+        // Robot group [0..4): the expanded body carries 3 ring phases
+        // (15 ops); rotation emits the 5-op pattern and 26 iterations,
+        // and two warm-up ramps roll inside the 12-op prologue.
+        let plans = [
+            AxisPlan::padless(60, 1, 3, 1, 60),
+            AxisPlan::padless(30, 2, 2, 0, 60),
+            AxisPlan::padless(30, 1, 3, 1, 30),
+            AxisPlan::padless(30, 1, 3, 1, 30),
+        ];
+        let layout = plan_group_rows(&plans);
+        let p = detect_rotating(&layout, &plans).unwrap();
+        assert_eq!(p.body_start, 12);
+        assert_eq!(p.ops_per_iter, 5);
+        assert_eq!(p.iters, 26);
+        assert_eq!(p.row_delta, vec![2, 1, 1, 1]);
+        assert_eq!(p.epilogue_start, 142);
+        let rp = rolled_plan(&layout, &plans, crate::codegen::RolledMode::Rotate).unwrap();
+        // 150 schedule ops emit as 23 op blocks (45 under phase expansion).
+        assert_eq!(rp.emitted_ops(), 23);
+        let ramps: Vec<&LoopSpec> = rp.loops().filter(|l| l.ramp).collect();
+        assert_eq!(ramps.len(), 2, "two warm-up ramps expected");
+        assert!(ramps.iter().all(|r| r.iters == 2 && r.ops_per_iter == 1));
+        // Auto prefers rotation; Expand keeps the PR 4 plan; Off rolls
+        // nothing.
+        let auto = rolled_plan(&layout, &plans, crate::codegen::RolledMode::Auto).unwrap();
+        assert_eq!(auto, rp);
+        let exp = rolled_plan(&layout, &plans, crate::codegen::RolledMode::Expand).unwrap();
+        assert_eq!(exp.emitted_ops(), 45);
+        assert!(exp.loops().all(|l| !l.rotate && !l.ramp));
+        assert!(rolled_plan(&layout, &plans, crate::codegen::RolledMode::Off).is_none());
+    }
+
+    #[test]
+    fn rotating_handles_phase_counts_beyond_the_expansion_cap_regime() {
+        // conv3 -> conv5 -> conv3 at stride 1: ring heights [5, 3] with a
+        // per-period advance of 1 row need lcm(5, 3) = 15 ring phases —
+        // a 45-op expanded body. Rotation emits the 3-op pattern.
+        let plans = [
+            AxisPlan::padless(100, 1, 3, 1, 100),
+            AxisPlan::padless(100, 1, 5, 2, 100),
+            AxisPlan::padless(100, 1, 3, 1, 100),
+        ];
+        let layout = plan_group_rows(&plans);
+        assert_eq!(layout.ring_rows, vec![5, 3]);
+        let rot = detect_rotating(&layout, &plans).unwrap();
+        assert_eq!(rot.ops_per_iter, 3);
+        assert_eq!(rot.row_delta, vec![1, 1, 1]);
+        let exp = detect_periodic(&layout, &plans).unwrap();
+        assert_eq!(exp.ops_per_iter, 45, "15 ring phases under expansion");
+        let rp = rolled_plan(&layout, &plans, crate::codegen::RolledMode::Rotate).unwrap();
+        assert!(rp.emitted_ops() * 4 <= rolled_plan(&layout, &plans, crate::codegen::RolledMode::Expand).unwrap().emitted_ops());
+    }
+
+    #[test]
+    fn edge_advances_rejects_mixed_rates() {
+        let plans = [AxisPlan::padless(16, 1, 3, 1, 16), AxisPlan::padless(16, 1, 3, 1, 16)];
+        // Producer advances 2/iter but the consumer only 1 (reads advance
+        // 1*stride = 1): no single rotation distance serves edge 0.
+        let ops = [RowOp { layer: 0, row: 4 }, RowOp { layer: 0, row: 5 }, RowOp { layer: 1, row: 3 }];
+        assert!(edge_advances(&ops, &[2, 1], &plans).is_none());
+        // Consistent rates resolve: producer 1/iter, consumer 1/iter.
+        let ops = [RowOp { layer: 0, row: 4 }, RowOp { layer: 1, row: 3 }];
+        assert_eq!(edge_advances(&ops, &[1, 1], &plans), Some(vec![1]));
+    }
+
+    /// Expand a rolled plan back into its op stream while simulating ring
+    /// slots and the rotating pointer sets exactly as the emitter resolves
+    /// them (pattern rows frozen at iteration 0, pointer indices resolved
+    /// against the generation-time rotation state, pointers rotated at
+    /// each loop bottom). Asserts the stream equals the literal schedule
+    /// and that no read ever sees a stale or mis-mapped slot.
+    fn replay_rolled_plan(plans: &[AxisPlan], layout: &GroupLayout, rp: &RolledPlan, trial: usize) {
+        let ops = &layout.ops;
+        let n = plans.len();
+        let ne = n - 1;
+        let rings = &layout.ring_rows;
+        let mut slots: Vec<Vec<Option<usize>>> = (0..ne).map(|e| vec![None; rings[e]]).collect();
+        let mut ptrs: Vec<Vec<usize>> = (0..ne).map(|e| (0..rings[e]).collect()).collect();
+        let mut phi = vec![0usize; ne];
+        let mut stream: Vec<RowOp> = Vec::new();
+        let read_rows = |l: usize, row: usize| -> std::ops::Range<usize> {
+            let (k0, k1) = plans[l].window(row);
+            let s = plans[l].src_start(row);
+            s..s + (k1 - k0)
+        };
+        for seg in &rp.segments {
+            match seg {
+                Segment::Unrolled(lo, hi) => {
+                    for op in &ops[*lo..*hi] {
+                        if op.layer > 0 {
+                            let e = op.layer - 1;
+                            for q in read_rows(op.layer, op.row) {
+                                assert_eq!(slots[e][q % rings[e]], Some(q), "trial {trial}: unrolled read stale");
+                            }
+                        }
+                        if op.layer < ne {
+                            let r = rings[op.layer];
+                            slots[op.layer][op.row % r] = Some(op.row);
+                        }
+                        stream.push(*op);
+                    }
+                }
+                Segment::Loop(l) => {
+                    let pat: Vec<RowOp> = ops[l.pattern()].to_vec();
+                    let adv = if l.rotate {
+                        edge_advances(&pat, &l.row_delta, plans)
+                            .unwrap_or_else(|| panic!("trial {trial}: loop with inconsistent edge rates"))
+                    } else {
+                        vec![0; ne] // expand loops never rotate pointers
+                    };
+                    // Emission-time resolution: pointer index (rotating
+                    // edges) or frozen slot (everything else), from the
+                    // iteration-0 row.
+                    let uses_ptr =
+                        |e: usize| l.rotate && adv[e] % rings[e].max(1) != 0;
+                    let resolve = |e: usize, q0: usize| -> (bool, usize) {
+                        let r = rings[e];
+                        if uses_ptr(e) {
+                            (true, (q0 % r + r - phi[e]) % r)
+                        } else {
+                            (false, q0 % r)
+                        }
+                    };
+                    for i in 0..l.iters {
+                        for op in &pat {
+                            let row = op.row + i * l.row_delta[op.layer];
+                            if op.layer > 0 {
+                                let e = op.layer - 1;
+                                for (q0, q) in read_rows(op.layer, op.row).zip(read_rows(op.layer, row)) {
+                                    let (is_ptr, idx) = resolve(e, q0);
+                                    let slot = if is_ptr { ptrs[e][idx] } else { idx };
+                                    assert_eq!(slot, q % rings[e], "trial {trial}: loop read slot mismatch");
+                                    assert_eq!(slots[e][slot], Some(q), "trial {trial}: loop read stale");
+                                }
+                            }
+                            if op.layer < ne {
+                                let (is_ptr, idx) = resolve(op.layer, op.row);
+                                let slot = if is_ptr { ptrs[op.layer][idx] } else { idx };
+                                assert_eq!(slot, row % rings[op.layer], "trial {trial}: loop write slot mismatch");
+                                slots[op.layer][slot] = Some(row);
+                            }
+                            stream.push(RowOp { layer: op.layer, row });
+                        }
+                        for e in 0..ne {
+                            if uses_ptr(e) {
+                                let r = rings[e];
+                                let g = adv[e] % r;
+                                let turned: Vec<usize> =
+                                    (0..r).map(|k| ptrs[e][(k + g) % r]).collect();
+                                ptrs[e] = turned;
+                            }
+                        }
+                    }
+                    for e in 0..ne {
+                        phi[e] = (phi[e] + l.iters * adv[e]) % rings[e].max(1);
+                    }
+                }
+            }
+        }
+        assert_eq!(&stream, ops, "trial {trial}: rolled plan replay diverges from the schedule");
+    }
+
+    /// Property (issue acceptance): across random chains, the rotated
+    /// rolled plan — warm-up ramps + single-period body + drain ramps —
+    /// covers exactly the same row ops as the literal schedule, in order,
+    /// and its pointer/slot addressing (resolved at generation time, as
+    /// the emitter does) never reads an aliased or mis-mapped ring slot.
+    /// The phase-expanded plan is replayed through the same harness.
+    #[test]
+    fn rolled_plans_cover_schedule_and_preserve_ring_addressing() {
+        use crate::codegen::RolledMode;
+        let mut rng = crate::util::XorShift64::new(0x0707A7E);
+        let mut checked = 0usize;
+        let mut rotated = 0usize;
+        let mut with_ramps = 0usize;
+        for trial in 0..400 {
+            let mut h = 10 + rng.below(40);
+            let depth = 2 + rng.below(3);
+            let mut plans: Vec<AxisPlan> = Vec::new();
+            for _ in 0..depth {
+                let k = 1 + rng.below(3.min(h));
+                let s = 1 + rng.below(2);
+                let (out, pad) = if rng.below(2) == 0 {
+                    let out = (h + s - 1) / s;
+                    let total = ((out - 1) * s + k).saturating_sub(h);
+                    (out, total / 2)
+                } else {
+                    if h < k {
+                        break;
+                    }
+                    ((h - k) / s + 1, 0)
+                };
+                if out == 0 {
+                    break;
+                }
+                plans.push(AxisPlan::padless(out, s, k, pad, h));
+                h = out;
+                if h < 2 {
+                    break;
+                }
+            }
+            if plans.len() < 2 {
+                continue;
+            }
+            checked += 1;
+            let layout = plan_group_rows(&plans);
+            if let Some(rp) = rolled_plan(&layout, &plans, RolledMode::Rotate) {
+                rotated += 1;
+                if rp.loops().any(|l| l.ramp) {
+                    with_ramps += 1;
+                }
+                // The rotated body must be a single pattern period: never
+                // larger than the expanded body, and its loops must never
+                // cover fewer ops than they replace.
+                if let Some(exp) = rolled_plan(&layout, &plans, RolledMode::Expand) {
+                    assert!(rp.emitted_ops() <= exp.emitted_ops(), "trial {trial}");
+                    replay_rolled_plan(&plans, &layout, &exp, trial);
+                }
+                replay_rolled_plan(&plans, &layout, &rp, trial);
+            } else if let Some(exp) = rolled_plan(&layout, &plans, RolledMode::Expand) {
+                replay_rolled_plan(&plans, &layout, &exp, trial);
+            }
+        }
+        assert!(checked > 150, "property exercised only {checked} chains");
+        assert!(rotated > 100, "rotation detector fired on only {rotated}/{checked} chains");
+        assert!(with_ramps > 30, "ramps rolled on only {with_ramps}/{checked} chains");
     }
 
     #[test]

@@ -8,6 +8,9 @@
 //! * rolling shrinks the fused robot C by a guaranteed factor against the
 //!   fully unrolled row schedule of the *same* groups (`--fuse-rolled
 //!   off`), and by ≥5× in the tall-plane regime the optimization targets;
+//! * ring **pointer rotation** shrinks the steady-state loop body itself
+//!   by ≥2× against the phase-expanded form on every `phases ≥ 3` group
+//!   (the body drops from `pattern × phases` to one pattern period);
 //! * the rolled robot still compiles inside a wall-clock budget.
 
 use nncg::codegen::{generate_c, CodegenOptions, FuseMode, RolledMode};
@@ -23,6 +26,36 @@ fn rolled(base: &CodegenOptions) -> CodegenOptions {
 
 fn unrolled(base: &CodegenOptions) -> CodegenOptions {
     CodegenOptions { fuse: FuseMode::Auto, fuse_rolled: RolledMode::Off, ..base.clone() }
+}
+
+fn with_mode(base: &CodegenOptions, mode: RolledMode) -> CodegenOptions {
+    CodegenOptions { fuse: FuseMode::Auto, fuse_rolled: mode, ..base.clone() }
+}
+
+/// Statement count of the FIRST steady-state loop body in `src`: seek the
+/// steady-state marker, then the `for (i = ...)` that follows, and count
+/// `;` until its brace closes.
+fn first_body_stmts(src: &str) -> usize {
+    let at = src.find("/* steady state:").expect("no steady-state marker");
+    let rel = src[at..].find("for (i = 0; i <").expect("no steady-state loop");
+    let body = &src[at + rel..];
+    let open = body.find('{').unwrap();
+    let mut depth = 0usize;
+    let mut count = 0usize;
+    for ch in body[open..].chars() {
+        match ch {
+            '{' => depth += 1,
+            '}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return count;
+                }
+            }
+            ';' => count += 1,
+            _ => {}
+        }
+    }
+    panic!("unbalanced steady-state body");
 }
 
 /// A streaming chain with the tall planes (96 rows) the ring buffers are
@@ -67,6 +100,34 @@ fn robot_fuses_full_depth_and_rolling_shrinks_statement_count() {
         "rolled robot must halve the unrolled fused statement count: rolled={r} unrolled={u}"
     );
     assert!(src_rolled.len() * 2 <= src_unrolled.len(), "byte size must shrink alongside");
+}
+
+/// Rotation gate (issue acceptance): on groups with `phases >= 3`, the
+/// rotated steady-state body must hold exactly one op-pattern period —
+/// at least 2× fewer statements than the phase-expanded body of the SAME
+/// group (3× expected at 3 phases; the slack absorbs the rotation block).
+#[test]
+fn rotation_halves_the_steady_state_body_on_phase3_groups() {
+    let base = CodegenOptions::sse3();
+    // robot group [0..4): period 5, 3 ring phases (pinned in
+    // schedule.rs::rotating_robot_first_group_shape).
+    for model in [zoo::by_name("robot").unwrap().with_random_weights(5), tall_stream_net()] {
+        let rot = generate_c(&model, &with_mode(&base, RolledMode::Rotate)).unwrap();
+        let exp = generate_c(&model, &with_mode(&base, RolledMode::Expand)).unwrap();
+        assert!(rot.contains("rotated ring pointers"), "{}: rotation must fire", model.name);
+        assert!(exp.contains("frozen ring slots"), "{}: expansion must fire", model.name);
+        let (rb, eb) = (first_body_stmts(&rot), first_body_stmts(&exp));
+        assert!(
+            rb * 2 <= eb,
+            "{}: rotated body must be >=2x smaller: rotated={rb} expanded={eb}",
+            model.name
+        );
+        // The whole-file ratio must move the same direction, and the
+        // default (auto) must pick the rotated form.
+        assert!(stmts(&rot) < stmts(&exp), "{}", model.name);
+        let auto = generate_c(&model, &rolled(&base)).unwrap();
+        assert_eq!(auto, rot, "{}: auto must emit the rotated form", model.name);
+    }
 }
 
 #[test]

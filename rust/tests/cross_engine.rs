@@ -353,6 +353,109 @@ fn neon_execution_parity_via_qemu() {
     }
 }
 
+/// Rotated differential under qemu (issue acceptance): ring pointer
+/// rotation is verified by *execution* on ARM, not just syntax-checked —
+/// unfused, rotated-rolled and phase-expanded-rolled NEON builds of a
+/// steadily-rolling chain and of the pedestrian model must print
+/// bit-identical outputs under qemu-user and match the interpreter.
+/// Self-skips with a notice when the cross toolchain is unavailable.
+#[test]
+fn neon_rotated_differential_parity_via_qemu() {
+    use nncg::codegen::{FuseMode, Isa, RolledMode};
+    use nncg::graph::{Activation, Layer, Model, Padding};
+    let qemu = match ["qemu-aarch64", "qemu-aarch64-static"].iter().find(|q| have_cmd(q)) {
+        Some(q) => *q,
+        None => {
+            eprintln!("SKIP neon rotated parity: no qemu-user (qemu-aarch64) on PATH");
+            return;
+        }
+    };
+    if !have_cmd("aarch64-linux-gnu-gcc") {
+        eprintln!("SKIP neon rotated parity: no aarch64-linux-gnu-gcc on PATH");
+        return;
+    }
+    let dir = std::env::temp_dir().join("nncg-neon-qemu-rotated");
+    std::fs::create_dir_all(&dir).unwrap();
+    let models = [
+        // Rolls with a rotated body (3 ring phases) + warm-up ramps.
+        Model::new("rollneon", &[24, 10, 3])
+            .push(Layer::conv2d(6, 3, 3, (1, 1), Padding::Same, Activation::Relu))
+            .push(Layer::maxpool(2, 2))
+            .push(Layer::conv2d(8, 3, 3, (1, 1), Padding::Same, Activation::None))
+            .with_random_weights(4243),
+        nncg::graph::zoo::by_name("pedestrian").unwrap().with_random_weights(4244),
+    ];
+    for model in &models {
+        let x = Tensor::from_vec(model.input.dims(), harness_input(model.input.numel())).unwrap();
+        let y_ref = nncg::interp::run(model, &x).unwrap();
+        let mut runs: Vec<Vec<f32>> = Vec::new();
+        for (fuse, rolled) in [
+            (FuseMode::Off, RolledMode::Auto),
+            (FuseMode::Auto, RolledMode::Rotate),
+            (FuseMode::Auto, RolledMode::Expand),
+        ] {
+            let opts = CodegenOptions {
+                isa: Isa::Neon,
+                test_harness: true,
+                fuse,
+                fuse_rolled: rolled,
+                ..Default::default()
+            };
+            let src = nncg::codegen::generate_c(model, &opts).unwrap();
+            if fuse == FuseMode::Auto && rolled == RolledMode::Rotate {
+                assert!(
+                    src.contains("rotated ring pointers"),
+                    "{}: rotation must fire on ARM output",
+                    model.name
+                );
+            }
+            let c_path = dir.join(format!("{}-{}.c", model.name, opts.tag()));
+            let exe = dir.join(format!("{}-{}", model.name, opts.tag()));
+            std::fs::write(&c_path, &src).unwrap();
+            let cc = std::process::Command::new("aarch64-linux-gnu-gcc")
+                .args(["-O2", "-static", "-o"])
+                .arg(&exe)
+                .arg(&c_path)
+                .arg("-lm")
+                .output()
+                .unwrap();
+            assert!(
+                cc.status.success(),
+                "{} {}: cross-compile failed:\n{}",
+                model.name,
+                opts.tag(),
+                String::from_utf8_lossy(&cc.stderr)
+            );
+            let run = std::process::Command::new(qemu).arg(&exe).arg("1").output().unwrap();
+            assert!(
+                run.status.success(),
+                "{} {}: qemu run failed:\n{}",
+                model.name,
+                opts.tag(),
+                String::from_utf8_lossy(&run.stderr)
+            );
+            let stdout = String::from_utf8_lossy(&run.stdout).to_string();
+            let outs: Vec<f32> = stdout
+                .lines()
+                .filter_map(|l| l.strip_prefix("out["))
+                .filter_map(|l| l.split_once("]=").map(|(_, v)| v.trim().parse::<f32>().unwrap()))
+                .collect();
+            assert_eq!(outs.len(), y_ref.data().len(), "{} {}: {stdout}", model.name, opts.tag());
+            for (i, (&a, &b)) in outs.iter().zip(y_ref.data()).enumerate() {
+                assert!(
+                    (a - b).abs() < TOL,
+                    "{} {} out[{i}]: qemu {a} vs interp {b}",
+                    model.name,
+                    opts.tag()
+                );
+            }
+            runs.push(outs);
+        }
+        assert_eq!(runs[0], runs[1], "{}: rotated NEON must be bit-identical to unfused", model.name);
+        assert_eq!(runs[0], runs[2], "{}: expanded NEON must be bit-identical to unfused", model.name);
+    }
+}
+
 /// Row-streaming fusion (the acceptance criterion): fused emission must be
 /// **bit-identical** to unfused across the (isa × unroll × tile) matrix —
 /// same tap order, same accumulators, only the schedule and buffers change

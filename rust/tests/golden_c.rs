@@ -15,7 +15,7 @@
 //! fixed weight seed (asserted by `codegen_is_deterministic` in
 //! `property_codegen.rs`).
 
-use nncg::codegen::{generate_c, CodegenOptions, FuseMode, Isa, PadMode, TileMode};
+use nncg::codegen::{generate_c, CodegenOptions, FuseMode, Isa, PadMode, RolledMode, TileMode};
 use nncg::graph::zoo;
 use std::path::PathBuf;
 
@@ -74,7 +74,71 @@ fn matrix() -> Vec<(&'static str, &'static str, CodegenOptions)> {
             "robot",
             CodegenOptions { isa: Isa::NeonVfpv3, fuse: FuseMode::Auto, ..Default::default() },
         ),
+        // Rotated-mode snapshots: the explicit knob pins the
+        // pointer-rotation emission even if the `auto` preference ever
+        // changes; the expand snapshot pins its differential baseline.
+        (
+            "robot-avx2-fused-rotate",
+            "robot",
+            CodegenOptions {
+                isa: Isa::Avx2,
+                fuse: FuseMode::Auto,
+                fuse_rolled: RolledMode::Rotate,
+                ..Default::default()
+            },
+        ),
+        (
+            "pedestrian-fused-rotate",
+            "pedestrian",
+            CodegenOptions {
+                fuse: FuseMode::Auto,
+                fuse_rolled: RolledMode::Rotate,
+                ..CodegenOptions::sse3()
+            },
+        ),
+        (
+            "pedestrian-fused-expand",
+            "pedestrian",
+            CodegenOptions {
+                fuse: FuseMode::Auto,
+                fuse_rolled: RolledMode::Expand,
+                ..CodegenOptions::sse3()
+            },
+        ),
     ]
+}
+
+/// A short unified-diff-style hint around the first differing line, so a
+/// drift failure is actionable without rerunning anything (the full new
+/// output is also written next to the snapshot as `<label>.c.new`):
+/// shared context lines print once with a leading space, then the two
+/// diverging tails print as `-`/`+`, with an explicit end-of-file marker
+/// when one output is a prefix of the other.
+fn diff_hint(want: &str, got: &str) -> String {
+    let w: Vec<&str> = want.lines().collect();
+    let g: Vec<&str> = got.lines().collect();
+    let first = w
+        .iter()
+        .zip(&g)
+        .position(|(a, b)| a != b)
+        .unwrap_or_else(|| w.len().min(g.len()));
+    let mut out = format!("@@ first differing line {} @@\n", first + 1);
+    for line in &w[first.saturating_sub(2)..first] {
+        out.push_str(&format!(" {line}\n"));
+    }
+    for i in first..(first + 4).min(w.len()) {
+        out.push_str(&format!("-{}\n", w[i]));
+    }
+    if first >= w.len() {
+        out.push_str("-<end of snapshot>\n");
+    }
+    for i in first..(first + 4).min(g.len()) {
+        out.push_str(&format!("+{}\n", g[i]));
+    }
+    if first >= g.len() {
+        out.push_str("+<end of new output>\n");
+    }
+    out
 }
 
 #[test]
@@ -106,18 +170,19 @@ fn golden_snapshots_match() {
         }
         let want = std::fs::read_to_string(&path).unwrap();
         if want != src {
-            // When one output is a prefix of the other, the first diff is
-            // the line right past the shorter file.
-            let first_diff = want
-                .lines()
-                .zip(src.lines())
-                .position(|(a, b)| a != b)
-                .unwrap_or_else(|| want.lines().count().min(src.lines().count()))
-                + 1;
+            // Write the new output next to the snapshot and show a small
+            // unified diff, so the failure is reviewable immediately:
+            //   diff -u rust/tests/golden/{label}.c rust/tests/golden/{label}.c.new
+            let new_path = dir.join(format!("{label}.c.new"));
+            std::fs::write(&new_path, &src).unwrap();
             drifted.push(format!(
-                "{label}: {} -> {} bytes, first differing line {first_diff}",
+                "{label}: {} -> {} bytes\n{}  (full output at {}; compare with `diff -u {} {}`)",
                 want.len(),
-                src.len()
+                src.len(),
+                diff_hint(&want, &src),
+                new_path.display(),
+                path.display(),
+                new_path.display(),
             ));
         }
     }
@@ -148,14 +213,22 @@ fn golden_matrix_is_well_formed() {
     labels.sort_unstable();
     labels.dedup();
     assert_eq!(labels.len(), m.len(), "duplicate snapshot labels");
-    assert!(m.len() >= 12, "snapshot matrix must cover at least 12 configurations");
-    // The rolled-fusion configurations must actually roll (guards the
-    // matrix against a future default change silently dropping coverage).
+    assert!(m.len() >= 15, "snapshot matrix must cover at least 15 configurations");
+    // The rolled-fusion configurations must actually roll — and the
+    // explicit rotate/expand configurations must emit their form (guards
+    // the matrix against a default change silently dropping coverage).
     for (label, model, opts) in &m {
-        if label.contains("fused-rolled") {
-            let model = zoo::by_name(model).unwrap().with_random_weights(SEED);
-            let src = generate_c(&model, opts).unwrap();
-            assert!(src.contains("/* steady state:"), "{label}: expected rolled emission");
+        if !label.contains("fused-rolled") && !label.contains("-rotate") && !label.contains("-expand") {
+            continue;
+        }
+        let model = zoo::by_name(model).unwrap().with_random_weights(SEED);
+        let src = generate_c(&model, opts).unwrap();
+        assert!(src.contains("/* steady state:"), "{label}: expected rolled emission");
+        if label.contains("-rotate") {
+            assert!(src.contains("rotated ring pointers"), "{label}: expected pointer rotation");
+        }
+        if label.contains("-expand") {
+            assert!(src.contains("frozen ring slots"), "{label}: expected phase expansion");
         }
     }
 }

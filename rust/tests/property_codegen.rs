@@ -224,13 +224,16 @@ fn fuzz_fused_outputs_bit_identical() {
     assert!(fused_seen >= 1, "no model formed a fusion group");
 }
 
-/// Differential property (issue acceptance): periodic-rolled fused,
-/// unrolled fused, and unfused codegen are three emissions of the same
-/// arithmetic — their compiled outputs must be **bit-identical**. Covers
-/// odd channel counts, a stride-2 Same conv and a pool inside the rolled
-/// group, plus random chains.
+/// Differential property (issue acceptance): **rotated** rolled fused,
+/// **phase-expanded** rolled fused, unrolled fused, and unfused codegen
+/// are four emissions of the same arithmetic — their compiled outputs
+/// must be **bit-identical**. Covers odd channel counts, a stride-2 Same
+/// conv and a pool inside the rolled group, a `phases = 15` chain the
+/// old fuzz never reached (ring heights 5 and 3 at a 1-row advance), and
+/// random chains across the fuse × pad × tile × isa surface (pad `copy`
+/// degenerates to unfused emission and is covered by the plain fuzz).
 #[test]
-fn fuzz_rolled_vs_unrolled_vs_unfused_bit_identical() {
+fn fuzz_rotated_vs_expanded_vs_unrolled_vs_unfused_bit_identical() {
     let mut rng = XorShift64::new(0x0110);
     let work = std::env::temp_dir().join("nncg-fuzz-rolled");
     // Deterministic chains known (schedule unit tests + simulation) to
@@ -248,55 +251,88 @@ fn fuzz_rolled_vs_unrolled_vs_unfused_bit_identical() {
             .push(Layer::conv2d(4, 3, 3, (1, 1), Padding::Same, Activation::Relu))
             .push(Layer::maxpool(2, 2))
             .with_random_weights(32),
+        // phases = lcm(5, 3) = 15: a 45-op expanded body vs a 3-op
+        // rotated pattern — the regime phase expansion can't reach
+        // cheaply and the previous fuzz never generated (kernels <= 3).
+        Model::new("phases15", &[100, 6, 2])
+            .push(Layer::conv2d(4, 3, 3, (1, 1), Padding::Same, Activation::Relu))
+            .push(Layer::conv2d(4, 5, 5, (1, 1), Padding::Same, Activation::None))
+            .push(Layer::conv2d(4, 3, 3, (1, 1), Padding::Same, Activation::None))
+            .with_random_weights(33),
     ];
     for t in 0..5usize {
         models.push(random_model(&mut rng, 11000 + t));
     }
-    let mut rolled_seen = 0usize;
+    let mut rotated_seen = 0usize;
     for (mi, model) in models.iter().enumerate() {
         if model.validate().is_err() || model.infer_shapes().is_err() {
             continue;
         }
         let isa = if rng.below(2) == 0 { Isa::Generic } else { Isa::Sse3 };
-        let base = CodegenOptions { isa, ..Default::default() };
-        let rolled_opts = CodegenOptions { fuse: FuseMode::Auto, ..base.clone() };
-        let unrolled_opts = CodegenOptions {
+        let tile = match rng.below(3) {
+            0 => TileMode::Auto,
+            1 => TileMode::Off,
+            _ => TileMode::Fixed(2 + rng.below(3)),
+        };
+        let base = CodegenOptions { isa, tile, pad_mode: PadMode::Auto, ..Default::default() };
+        let variant = |mode: RolledMode| CodegenOptions {
             fuse: FuseMode::Auto,
-            fuse_rolled: RolledMode::Off,
+            fuse_rolled: mode,
             ..base.clone()
         };
-        let rolled_src = nncg::codegen::generate_c(model, &rolled_opts).unwrap();
-        let unrolled_src = nncg::codegen::generate_c(model, &unrolled_opts).unwrap();
-        if rolled_src.contains("/* steady state:") {
-            rolled_seen += 1;
+        let rotated_src = nncg::codegen::generate_c(model, &variant(RolledMode::Rotate)).unwrap();
+        let expanded_src = nncg::codegen::generate_c(model, &variant(RolledMode::Expand)).unwrap();
+        let unrolled_src = nncg::codegen::generate_c(model, &variant(RolledMode::Off)).unwrap();
+        let auto_src = nncg::codegen::generate_c(model, &variant(RolledMode::Auto)).unwrap();
+        if rotated_src.contains("rotated ring pointers") {
+            rotated_seen += 1;
             assert!(
-                rolled_src.len() < unrolled_src.len(),
-                "{}: rolling must shrink the generated C",
+                rotated_src.len() < unrolled_src.len(),
+                "{}: rotation must shrink the generated C",
                 model.name
             );
         }
-        if mi < 2 {
+        if mi < 3 {
             assert!(
-                rolled_src.contains("/* steady state:"),
-                "{}: deterministic chain must roll",
+                rotated_src.contains("rotated ring pointers"),
+                "{}: deterministic chain must rotate",
                 model.name
+            );
+            assert_eq!(auto_src, rotated_src, "{}: auto must prefer rotation", model.name);
+        }
+        if mi == 2 {
+            // The phases-15 chain must also keep an expanded form (15
+            // phases is still under the 64-phase cap) so the three-way
+            // comparison is non-degenerate.
+            assert!(expanded_src.contains("frozen ring slots"), "phases15 must phase-expand");
+            assert!(
+                rotated_src.len() * 2 < expanded_src.len(),
+                "phases15: the 45-op expanded body must dwarf the rotated pattern"
             );
         }
         let unfused = nncg::cc::CompiledCnn::build(model, &base, &work).unwrap();
-        let fused_unrolled =
-            nncg::cc::CompiledCnn::from_source(model, &unrolled_opts, &unrolled_src, &work).unwrap();
-        let fused_rolled =
-            nncg::cc::CompiledCnn::from_source(model, &rolled_opts, &rolled_src, &work).unwrap();
+        let compiled = [
+            ("rotated", &rotated_src, variant(RolledMode::Rotate)),
+            ("expanded", &expanded_src, variant(RolledMode::Expand)),
+            ("unrolled", &unrolled_src, variant(RolledMode::Off)),
+        ]
+        .map(|(label, src, opts)| {
+            (label, nncg::cc::CompiledCnn::from_source(model, &opts, src, &work).unwrap())
+        });
         for _ in 0..2 {
             let x = Tensor::rand(model.input.dims(), -1.0, 1.0, &mut rng);
             let y0 = unfused.infer(&x).unwrap();
-            let y1 = fused_unrolled.infer(&x).unwrap();
-            let y2 = fused_rolled.infer(&x).unwrap();
-            assert_eq!(y0, y1, "{}: unrolled fused output differs from unfused", model.name);
-            assert_eq!(y0, y2, "{}: rolled fused output differs from unfused", model.name);
+            for (label, cnn) in &compiled {
+                assert_eq!(
+                    y0,
+                    cnn.infer(&x).unwrap(),
+                    "{}: {label} fused output differs from unfused",
+                    model.name
+                );
+            }
         }
     }
-    assert!(rolled_seen >= 2, "only {rolled_seen} models exercised the rolled path");
+    assert!(rotated_seen >= 3, "only {rotated_seen} models exercised the rotated path");
 }
 
 /// Same seed ⇒ byte-identical generated C (reproducible builds).
