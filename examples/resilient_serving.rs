@@ -1,0 +1,108 @@
+//! Resilient serving walkthrough: deadlines, load shedding, circuit-breaker
+//! fallback to the interpreter, and a background heal — the failure
+//! semantics the paper's time-critical vision loop (§I-A) needs once the
+//! compile-at-runtime engine can be unhealthy.
+//!
+//! The demo injects a deterministic fault plan (the generated-C stand-in
+//! fails for a while), watches the breaker open, serves bit-identical
+//! answers from the interpreter fallback, then heals the primary and shows
+//! traffic returning to it.
+//!
+//! ```sh
+//! cargo run --release --example resilient_serving
+//! ```
+
+use nncg::coordinator::{
+    serve_with, BreakerConfig, FallbackEngine, Router, ServeConfig, ServeError,
+};
+use nncg::faults::{FaultPlan, FaultSite, FaultSpec, FaultyEngine};
+use nncg::graph::zoo;
+use nncg::interp::InterpEngine;
+use nncg::runtime::InferenceEngine;
+use nncg::tensor::Tensor;
+use nncg::util::XorShift64;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let model = zoo::ball_classifier().with_random_weights(7);
+
+    // Primary: wrapped with a fault plan that fails the first 6 calls —
+    // standing in for a generated-C engine whose object went bad.
+    let healthy: Arc<dyn InferenceEngine> = Arc::new(InterpEngine::new(model.clone())?);
+    let plan = FaultPlan::builder(42).site(FaultSite::EngineFail, FaultSpec::First(6)).build();
+    let primary: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(Arc::clone(&healthy), plan));
+
+    // Fallback: a fresh interpreter over the same weights (bit-identical).
+    let fallback: Arc<dyn InferenceEngine> = Arc::new(InterpEngine::new(model.clone())?);
+
+    // Coordinator first (over an empty router) so the fallback wrapper can
+    // share its metrics counters; then hot-register the wrapped engine.
+    let router = Arc::new(Router::new());
+    let handle = serve_with(
+        Arc::clone(&router),
+        ServeConfig {
+            workers: 1,
+            queue_capacity: 64,
+            default_deadline: Some(Duration::from_millis(250)),
+        },
+    );
+    let wrapped = Arc::new(
+        FallbackEngine::new(
+            primary,
+            Arc::clone(&fallback),
+            BreakerConfig { failure_threshold: 3, cooldown: Duration::from_millis(20) },
+        )
+        .with_counters(Arc::clone(handle.metrics.counters())),
+    );
+    router.register("ball", Arc::clone(&wrapped) as Arc<dyn InferenceEngine>);
+
+    let mut rng = XorShift64::new(1);
+    let x = Tensor::rand(&[16, 16, 1], 0.0, 1.0, &mut rng);
+    let reference = fallback.infer(&x)?;
+
+    println!("phase 1: primary failing — breaker opens, interpreter serves");
+    for i in 0..6 {
+        let y = handle.infer("ball", x.clone()).map_err(anyhow::Error::from)?;
+        println!(
+            "  req {i}: served, bit-identical to interpreter = {}, breaker = {:?}",
+            y == reference,
+            wrapped.breaker().state()
+        );
+    }
+
+    println!("phase 2: background heal swaps a healthy primary in");
+    let heal = wrapped.heal_in_background({
+        let model = model.clone();
+        move || Ok(Arc::new(InterpEngine::new(model)?) as Arc<dyn InferenceEngine>)
+    });
+    assert!(heal.join().expect("heal thread"), "heal must succeed");
+    println!("  primary now: {}, breaker = {:?}", wrapped.primary_name(), wrapped.breaker().state());
+
+    println!("phase 3: recovered — primary serves again");
+    for i in 0..3 {
+        let y = handle.infer("ball", x.clone()).map_err(anyhow::Error::from)?;
+        println!("  req {i}: correct = {}", y == reference);
+    }
+
+    // Deadlines: an already-expired deadline is shed with a typed error
+    // instead of computing a stale frame.
+    match handle.infer_with_deadline("ball", x.clone(), Some(Duration::ZERO)) {
+        Err(ServeError::DeadlineExceeded { late_by_us, .. }) => {
+            println!("deadline demo: stale request shed ({late_by_us}µs late)");
+        }
+        other => println!("deadline demo: unexpected {other:?}"),
+    }
+
+    let snap = handle.stop();
+    println!(
+        "final counters: fallback-served={} breaker open/half-open/closed={}/{}/{} deadline-sheds={} errors={}",
+        snap.fallback_served,
+        snap.breaker_opens,
+        snap.breaker_half_opens,
+        snap.breaker_closes,
+        snap.deadline_sheds,
+        snap.errors
+    );
+    Ok(())
+}

@@ -3,20 +3,54 @@
 //! Keyed on a hash of (source text, option tag, compiler). Benches sweep
 //! many option combinations over the same models; recompiling identical
 //! sources would dominate wall-clock otherwise.
+//!
+//! Robustness: objects are published atomically (compile to a tmp sibling,
+//! then `rename` — a crashed/killed compiler can never leave a truncated
+//! `.so` under the final name), and cache hits are validated (ELF magic)
+//! so an object corrupted on disk falls through to a recompile instead of
+//! being `dlopen`-ed.
 
 use super::driver::{CcDriver, CcTarget};
+use crate::faults::{FaultPlan, FaultSite};
 use crate::util::fxhash;
 use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Minimal sanity check on a cached object: non-truncated, and on Linux
+/// the ELF magic is intact. Read-only — a cache hit must not rewrite the
+/// object (mtime is part of the "no recompile" contract).
+pub fn object_is_valid(path: &Path) -> bool {
+    use std::io::Read;
+    let mut magic = [0u8; 4];
+    match std::fs::File::open(path).and_then(|mut f| f.read_exact(&mut magic)) {
+        Ok(()) => {
+            if cfg!(target_os = "linux") {
+                magic == [0x7f, b'E', b'L', b'F']
+            } else {
+                true
+            }
+        }
+        Err(_) => false,
+    }
+}
 
 /// Cache rooted at a working directory.
 pub struct ObjectCache {
     root: PathBuf,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 impl ObjectCache {
     pub fn new(root: impl AsRef<Path>) -> Self {
-        ObjectCache { root: root.as_ref().to_path_buf() }
+        ObjectCache { root: root.as_ref().to_path_buf(), faults: None }
+    }
+
+    /// Attach a fault-injection plan (chaos testing: `CacheCorrupt` scribbles
+    /// over a cached object right before the validity check).
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.faults = Some(plan);
+        self
     }
 
     /// Path pair for a cache key.
@@ -25,17 +59,38 @@ impl ObjectCache {
         (self.root.join(format!("{stem}.c")), self.root.join(format!("{stem}.so")))
     }
 
-    /// Return (c_path, so_path), compiling only if the object is absent.
+    /// Return (c_path, so_path), compiling only if the object is absent or
+    /// fails validation.
     pub fn get_or_compile(&self, ident: &str, tag: &str, source: &str, driver: &CcDriver) -> Result<(PathBuf, PathBuf)> {
         std::fs::create_dir_all(&self.root)
             .with_context(|| format!("creating cache dir {}", self.root.display()))?;
         let key = fxhash::hash_str(&format!("{source}\x00{tag}\x00{}", driver.cc));
         let (c_path, so_path) = self.paths(ident, tag, key);
         if so_path.exists() {
-            return Ok((c_path, so_path));
+            if let Some(plan) = &self.faults {
+                if plan.should_fire(FaultSite::CacheCorrupt) {
+                    // Simulate a torn write / bad flash on the cached object.
+                    let _ = std::fs::write(&so_path, b"not an object file");
+                }
+            }
+            if object_is_valid(&so_path) {
+                return Ok((c_path, so_path));
+            }
+            // Corrupted object: discard and fall through to a recompile.
+            eprintln!("[nncg] cached object {} failed validation; recompiling", so_path.display());
+            let _ = std::fs::remove_file(&so_path);
         }
         std::fs::write(&c_path, source)?;
-        driver.compile(&c_path, Some(&so_path), CcTarget::NativeShared)?;
+        // Atomic publish: compile to a tmp sibling, rename into place. A
+        // concurrent or killed compile can never expose a partial object.
+        let tmp = so_path.with_extension(format!("so.tmp-{}", std::process::id()));
+        let compiled = driver.compile(&c_path, Some(&tmp), CcTarget::NativeShared);
+        if compiled.is_err() {
+            let _ = std::fs::remove_file(&tmp);
+        }
+        compiled?;
+        std::fs::rename(&tmp, &so_path)
+            .with_context(|| format!("publishing {}", so_path.display()))?;
         Ok((c_path, so_path))
     }
 
@@ -44,7 +99,10 @@ impl ObjectCache {
         if self.root.exists() {
             for entry in std::fs::read_dir(&self.root)? {
                 let p = entry?.path();
-                if p.extension().map_or(false, |e| e == "c" || e == "so") {
+                let ext_matches = p
+                    .extension()
+                    .map_or(false, |e| e == "c" || e == "so" || e.to_string_lossy().starts_with("tmp-"));
+                if ext_matches {
                     std::fs::remove_file(p)?;
                 }
             }
@@ -56,6 +114,7 @@ impl ObjectCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::FaultSpec;
 
     #[test]
     fn different_sources_get_different_objects() {
@@ -84,5 +143,54 @@ mod tests {
         let mtime2 = std::fs::metadata(&so2).unwrap().modified().unwrap();
         assert_eq!(so1, so2);
         assert_eq!(mtime1, mtime2, "object must not be recompiled");
+    }
+
+    #[test]
+    fn corrupted_object_is_recompiled() {
+        let dir = std::env::temp_dir().join("nncg-cache-corrupt");
+        let cache = ObjectCache::new(&dir);
+        cache.clear().unwrap();
+        let driver = CcDriver::detect().unwrap();
+        let src = "void k_inference(const float *x, float *y) { y[0] = x[0]; }\n";
+        let (_, so) = cache.get_or_compile("k", "t", src, &driver).unwrap();
+        assert!(object_is_valid(&so));
+        std::fs::write(&so, b"garbage, definitely not ELF").unwrap();
+        assert!(!object_is_valid(&so));
+        let (_, so2) = cache.get_or_compile("k", "t", src, &driver).unwrap();
+        assert_eq!(so, so2);
+        assert!(object_is_valid(&so2), "corrupted object must be replaced by a fresh compile");
+    }
+
+    #[test]
+    fn injected_corruption_heals_transparently() {
+        let dir = std::env::temp_dir().join("nncg-cache-inject");
+        let plan = FaultPlan::builder(31).site(FaultSite::CacheCorrupt, FaultSpec::First(1)).build();
+        let cache = ObjectCache::new(&dir).with_faults(plan.clone());
+        cache.clear().unwrap();
+        let driver = CcDriver::detect().unwrap();
+        let src = "void j_inference(const float *x, float *y) { y[0] = x[0]; }\n";
+        let (_, _) = cache.get_or_compile("j", "t", src, &driver).unwrap();
+        // Hit path: injection corrupts, validation catches, recompile heals.
+        let (_, so) = cache.get_or_compile("j", "t", src, &driver).unwrap();
+        assert_eq!(plan.fired(FaultSite::CacheCorrupt), 1);
+        assert!(object_is_valid(&so));
+    }
+
+    #[test]
+    fn failed_compile_leaves_no_partial_object() {
+        let dir = std::env::temp_dir().join("nncg-cache-atomic");
+        let cache = ObjectCache::new(&dir);
+        cache.clear().unwrap();
+        let driver = CcDriver::detect().unwrap();
+        let src = "this is not C\n";
+        assert!(cache.get_or_compile("p", "t", src, &driver).is_err());
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let p = entry.unwrap().path();
+            assert!(
+                p.extension().map_or(true, |e| e != "so"),
+                "no .so may be published for a failed compile: {}",
+                p.display()
+            );
+        }
     }
 }

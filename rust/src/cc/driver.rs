@@ -4,10 +4,21 @@
 //! builds for the host, strict-ANSI checks (any "ANSI C compiler" must
 //! accept the generic output), 32-bit cross builds (the Nao's Atom Z530)
 //! and `-march` retargeting (the Atom J1900's bonnell).
+//!
+//! The invocation path is hardened for unattended serving: wall-clock
+//! timeouts (spawn + poll + kill — a hung cross-compiler must not wedge a
+//! healing recompile), bounded retry with exponential backoff for
+//! transient failures (timeouts, signals, injected faults), and captured
+//! stderr on permanent failures. [`CompileStats`] counts attempts /
+//! retries / timeouts for the serving metrics snapshot.
 
-use anyhow::{bail, Context, Result};
+use crate::faults::{FaultPlan, FaultSite};
+use anyhow::{bail, Result};
 use std::path::Path;
-use std::process::Command;
+use std::process::{Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 /// Compilation target flavor.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -26,31 +37,168 @@ pub enum CcTarget {
     MarchCheck(&'static str),
 }
 
-/// A detected C compiler.
+/// Wall-clock and retry limits for compiler invocations.
 #[derive(Debug, Clone)]
-pub struct CcDriver {
-    /// Compiler executable (cc/gcc/clang).
-    pub cc: String,
+pub struct CompileLimits {
+    /// Kill the compiler child after this long.
+    pub timeout: Duration,
+    /// Extra attempts after the first for *transient* failures (timeout,
+    /// killed-by-signal, injected). Permanent diagnostics never retry.
+    pub max_retries: u32,
+    /// First retry delay; doubles per retry, capped at 2 s.
+    pub backoff_base: Duration,
 }
 
-/// Find a working C compiler on PATH. Prefers `cc`, falls back to gcc/clang.
-pub fn detect_compiler() -> Result<String> {
-    for cand in ["cc", "gcc", "clang"] {
-        if Command::new(cand)
-            .arg("--version")
-            .output()
-            .map(|o| o.status.success())
-            .unwrap_or(false)
-        {
-            return Ok(cand.to_string());
+impl Default for CompileLimits {
+    fn default() -> Self {
+        CompileLimits {
+            timeout: Duration::from_secs(60),
+            max_retries: 2,
+            backoff_base: Duration::from_millis(50),
         }
     }
-    bail!("no C compiler found on PATH (tried cc, gcc, clang)")
+}
+
+impl CompileLimits {
+    /// Defaults overridden by `NNCG_CC_TIMEOUT_MS` / `NNCG_CC_RETRIES`.
+    pub fn from_env() -> Self {
+        let mut limits = CompileLimits::default();
+        if let Ok(ms) = std::env::var("NNCG_CC_TIMEOUT_MS") {
+            if let Ok(ms) = ms.trim().parse::<u64>() {
+                limits.timeout = Duration::from_millis(ms.max(1));
+            }
+        }
+        if let Ok(n) = std::env::var("NNCG_CC_RETRIES") {
+            if let Ok(n) = n.trim().parse::<u32>() {
+                limits.max_retries = n;
+            }
+        }
+        limits
+    }
+}
+
+/// Compile-pipeline counters, surfaced in [`crate::coordinator::MetricsSnapshot`].
+#[derive(Debug, Default)]
+pub struct CompileStats {
+    /// Compiler invocations (including retries).
+    pub attempts: AtomicU64,
+    /// Attempts that were retries of a transient failure.
+    pub retries: AtomicU64,
+    /// Children killed by the wall-clock timeout.
+    pub timeouts: AtomicU64,
+    /// Compilations that failed permanently (after retries, or on a
+    /// non-retryable diagnostic).
+    pub failures: AtomicU64,
+}
+
+/// One attempt's failure, classified for the retry loop.
+struct AttemptError {
+    transient: bool,
+    msg: String,
+}
+
+impl AttemptError {
+    fn transient(msg: String) -> Self {
+        AttemptError { transient: true, msg }
+    }
+
+    fn permanent(msg: String) -> Self {
+        AttemptError { transient: false, msg }
+    }
+}
+
+/// A detected C compiler plus invocation policy.
+#[derive(Debug, Clone)]
+pub struct CcDriver {
+    /// Compiler executable (cc/gcc/clang or an env override).
+    pub cc: String,
+    limits: CompileLimits,
+    stats: Arc<CompileStats>,
+    faults: Option<Arc<FaultPlan>>,
+}
+
+fn answers_version(cand: &str) -> bool {
+    Command::new(cand)
+        .arg("--version")
+        .stdin(Stdio::null())
+        .output()
+        .map(|o| o.status.success())
+        .unwrap_or(false)
+}
+
+/// Probe candidates in order; first one that answers `--version` wins.
+fn probe_candidates(cands: &[String]) -> Result<String> {
+    for cand in cands {
+        if answers_version(cand) {
+            return Ok(cand.clone());
+        }
+    }
+    bail!(
+        "no working C compiler found (tried: {}); set NNCG_CC or CC to a working compiler",
+        cands.join(", ")
+    )
+}
+
+/// Compiler detection with explicit override values (pure — the env-free
+/// core of [`detect_compiler`], also used by tests to avoid `set_var`
+/// races). Overrides are probed before the `cc`/`gcc`/`clang` defaults; a
+/// broken override falls through, and the error lists everything tried.
+pub fn detect_compiler_from(nncg_cc: Option<&str>, cc_var: Option<&str>) -> Result<String> {
+    let mut cands: Vec<String> = Vec::new();
+    for over in [nncg_cc, cc_var].into_iter().flatten() {
+        let over = over.trim();
+        if !over.is_empty() && !cands.iter().any(|c| c == over) {
+            cands.push(over.to_string());
+        }
+    }
+    for default in ["cc", "gcc", "clang"] {
+        if !cands.iter().any(|c| c == default) {
+            cands.push(default.to_string());
+        }
+    }
+    probe_candidates(&cands)
+}
+
+/// Find a working C compiler: `NNCG_CC`, then `CC`, then PATH probing of
+/// `cc`/`gcc`/`clang`.
+pub fn detect_compiler() -> Result<String> {
+    let nncg_cc = std::env::var("NNCG_CC").ok();
+    let cc_var = std::env::var("CC").ok();
+    detect_compiler_from(nncg_cc.as_deref(), cc_var.as_deref())
 }
 
 impl CcDriver {
     pub fn detect() -> Result<Self> {
-        Ok(CcDriver { cc: detect_compiler()? })
+        Ok(CcDriver {
+            cc: detect_compiler()?,
+            limits: CompileLimits::from_env(),
+            stats: Arc::new(CompileStats::default()),
+            faults: None,
+        })
+    }
+
+    /// Replace the invocation limits.
+    pub fn with_limits(mut self, limits: CompileLimits) -> Self {
+        self.limits = limits;
+        self
+    }
+
+    /// Attach a fault-injection plan (chaos testing).
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    pub fn limits(&self) -> &CompileLimits {
+        &self.limits
+    }
+
+    pub fn stats(&self) -> &Arc<CompileStats> {
+        &self.stats
+    }
+
+    pub fn faults(&self) -> Option<&Arc<FaultPlan>> {
+        self.faults.as_ref()
     }
 
     /// Flags for a target flavor.
@@ -67,30 +215,144 @@ impl CcDriver {
         }
     }
 
-    /// Compile `c_path` to `out_path` (ignored for compile-only targets).
-    /// Returns the compiler's stderr on failure.
+    /// Compile `c_path` to `out_path` (ignored for compile-only targets),
+    /// with wall-clock timeout and bounded retry for transient failures.
+    /// Permanent failures carry the compiler's stderr.
     pub fn compile(&self, c_path: &Path, out_path: Option<&Path>, target: CcTarget) -> Result<()> {
-        let mut cmd = Command::new(&self.cc);
-        cmd.arg(c_path);
-        // Output file comes before -l flags; libs go last for ld ordering.
-        let flags = self.flags(target);
-        let (libs, opts): (Vec<_>, Vec<_>) = flags.into_iter().partition(|f| f.starts_with("-l"));
-        cmd.args(&opts);
-        if let Some(out) = out_path {
-            cmd.arg("-o").arg(out);
+        let mut backoff = self.limits.backoff_base;
+        let mut last: Option<String> = None;
+        for attempt in 0..=self.limits.max_retries {
+            if attempt > 0 {
+                CompileStats::bump(&self.stats.retries);
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(2));
+            }
+            CompileStats::bump(&self.stats.attempts);
+            match self.compile_once(c_path, out_path, target) {
+                Ok(()) => return Ok(()),
+                Err(e) if e.transient => last = Some(e.msg),
+                Err(e) => {
+                    CompileStats::bump(&self.stats.failures);
+                    bail!(e.msg);
+                }
+            }
         }
-        cmd.args(&libs);
-        let out = cmd.output().with_context(|| format!("running {}", self.cc))?;
-        if !out.status.success() {
-            bail!(
-                "{} failed on {} ({:?}):\n{}",
-                self.cc,
-                c_path.display(),
-                target,
-                String::from_utf8_lossy(&out.stderr)
-            );
+        CompileStats::bump(&self.stats.failures);
+        bail!(
+            "{} failed after {} attempts (last: {})",
+            self.cc,
+            self.limits.max_retries + 1,
+            last.unwrap_or_else(|| "unknown".into())
+        )
+    }
+
+    /// One spawn + poll + kill cycle.
+    fn compile_once(
+        &self,
+        c_path: &Path,
+        out_path: Option<&Path>,
+        target: CcTarget,
+    ) -> std::result::Result<(), AttemptError> {
+        if let Some(plan) = &self.faults {
+            if plan.should_fire(FaultSite::CompileFail) {
+                return Err(AttemptError::transient(format!(
+                    "injected compile failure ({} on {})",
+                    self.cc,
+                    c_path.display()
+                )));
+            }
         }
-        Ok(())
+        // An injected hang swaps the compiler for a `sleep` child, so the
+        // real spawn/poll/kill machinery is what the chaos suite exercises.
+        let hang = self.faults.as_ref().and_then(|p| p.maybe_delay(FaultSite::CompileSlow));
+        let mut cmd = match hang {
+            Some(d) => {
+                let mut c = Command::new("sleep");
+                c.arg(format!("{}", d.as_secs_f64()));
+                c
+            }
+            None => {
+                let mut c = Command::new(&self.cc);
+                c.arg(c_path);
+                // Output file comes before -l flags; libs go last for ld
+                // ordering.
+                let flags = self.flags(target);
+                let (libs, opts): (Vec<_>, Vec<_>) =
+                    flags.into_iter().partition(|f| f.starts_with("-l"));
+                c.args(&opts);
+                if let Some(out) = out_path {
+                    c.arg("-o").arg(out);
+                }
+                c.args(&libs);
+                c
+            }
+        };
+        cmd.stdin(Stdio::null()).stdout(Stdio::null()).stderr(Stdio::piped());
+        let mut child = cmd
+            .spawn()
+            .map_err(|e| AttemptError::permanent(format!("spawning {}: {e}", self.cc)))?;
+        // Drain stderr on a separate thread so a chatty compiler can't
+        // deadlock against a full pipe while we poll.
+        let stderr_pipe = child.stderr.take();
+        let stderr_reader = std::thread::spawn(move || {
+            let mut buf = String::new();
+            if let Some(mut pipe) = stderr_pipe {
+                use std::io::Read;
+                let _ = pipe.read_to_string(&mut buf);
+            }
+            buf
+        });
+
+        let started = Instant::now();
+        loop {
+            match child.try_wait() {
+                Ok(Some(status)) => {
+                    let stderr = stderr_reader.join().unwrap_or_default();
+                    return if status.success() {
+                        Ok(())
+                    } else if status.code().is_none() {
+                        // Killed by a signal (OOM killer, etc.): transient.
+                        Err(AttemptError::transient(format!(
+                            "{} killed by signal on {}",
+                            self.cc,
+                            c_path.display()
+                        )))
+                    } else {
+                        Err(AttemptError::permanent(format!(
+                            "{} failed on {} ({:?}):\n{}",
+                            self.cc,
+                            c_path.display(),
+                            target,
+                            stderr
+                        )))
+                    };
+                }
+                Ok(None) => {
+                    if started.elapsed() >= self.limits.timeout {
+                        CompileStats::bump(&self.stats.timeouts);
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        let _ = stderr_reader.join();
+                        return Err(AttemptError::transient(format!(
+                            "{} timed out after {:?} on {}",
+                            self.cc,
+                            self.limits.timeout,
+                            c_path.display()
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => {
+                    let _ = child.kill();
+                    let _ = child.wait();
+                    let _ = stderr_reader.join();
+                    return Err(AttemptError::permanent(format!(
+                        "waiting for {}: {e}",
+                        self.cc
+                    )));
+                }
+            }
+        }
     }
 
     /// Probe whether a compile-only target is supported by the toolchain
@@ -105,14 +367,55 @@ impl CcDriver {
     }
 }
 
+impl CompileStats {
+    pub fn bump(field: &AtomicU64) {
+        field.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn get(field: &AtomicU64) -> u64 {
+        field.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::FaultSpec;
+
+    fn workdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("nncg-cc-driver-{tag}"));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
 
     #[test]
     fn detects_a_compiler() {
         let cc = detect_compiler().unwrap();
         assert!(!cc.is_empty());
+    }
+
+    #[test]
+    fn env_override_is_probed_first() {
+        // A working explicit override wins even over the `cc` default.
+        let detected = detect_compiler_from(None, None).unwrap();
+        let chosen = detect_compiler_from(Some(&detected), None).unwrap();
+        assert_eq!(chosen, detected);
+        // A broken override falls through to the defaults.
+        let fallback = detect_compiler_from(Some("/nonexistent/bin/fakecc"), None).unwrap();
+        assert_eq!(fallback, detected);
+        // NNCG_CC takes precedence over CC.
+        let nncg_first =
+            detect_compiler_from(Some(&detected), Some("/nonexistent/bin/other")).unwrap();
+        assert_eq!(nncg_first, detected);
+    }
+
+    #[test]
+    fn detection_error_lists_candidates_tried() {
+        let err = probe_candidates(&["no-such-cc-1".into(), "no-such-cc-2".into()])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("no-such-cc-1") && err.contains("no-such-cc-2"), "{err}");
+        assert!(err.contains("NNCG_CC"), "error should be actionable: {err}");
     }
 
     #[test]
@@ -134,12 +437,74 @@ mod tests {
     #[test]
     fn compile_error_includes_stderr() {
         let driver = CcDriver::detect().unwrap();
-        let dir = std::env::temp_dir().join("nncg-cc-err");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = workdir("err");
         let bad = dir.join("syntax.c");
         std::fs::write(&bad, "this is not C\n").unwrap();
         let err = driver.compile(&bad, None, CcTarget::StrictAnsiCheck).unwrap_err().to_string();
         assert!(err.contains("error"), "{err}");
+    }
+
+    #[test]
+    fn permanent_diagnostics_do_not_retry() {
+        let driver = CcDriver::detect().unwrap();
+        let dir = workdir("noretry");
+        let bad = dir.join("bad.c");
+        std::fs::write(&bad, "int broken(\n").unwrap();
+        assert!(driver.compile(&bad, None, CcTarget::StrictAnsiCheck).is_err());
+        assert_eq!(CompileStats::get(&driver.stats().attempts), 1, "syntax errors never retry");
+        assert_eq!(CompileStats::get(&driver.stats().retries), 0);
+        assert_eq!(CompileStats::get(&driver.stats().failures), 1);
+    }
+
+    #[test]
+    fn injected_transient_failure_is_retried_to_success() {
+        let plan = FaultPlan::builder(21).site(FaultSite::CompileFail, FaultSpec::First(1)).build();
+        let driver = CcDriver::detect().unwrap().with_faults(plan);
+        let dir = workdir("retry");
+        let good = dir.join("ok.c");
+        std::fs::write(&good, "int ok(int x) { return x; }\n").unwrap();
+        driver.compile(&good, None, CcTarget::StrictAnsiCheck).unwrap();
+        assert_eq!(CompileStats::get(&driver.stats().attempts), 2);
+        assert_eq!(CompileStats::get(&driver.stats().retries), 1);
+        assert_eq!(CompileStats::get(&driver.stats().failures), 0);
+    }
+
+    #[test]
+    fn hung_compiler_is_killed_and_retried() {
+        let plan = FaultPlan::builder(22)
+            .site(FaultSite::CompileSlow, FaultSpec::First(1))
+            .delay(Duration::from_secs(30))
+            .build();
+        let driver = CcDriver::detect().unwrap().with_faults(plan).with_limits(CompileLimits {
+            timeout: Duration::from_millis(100),
+            max_retries: 1,
+            backoff_base: Duration::from_millis(1),
+        });
+        let dir = workdir("hang");
+        let good = dir.join("ok.c");
+        std::fs::write(&good, "int ok(int x) { return x; }\n").unwrap();
+        let t0 = Instant::now();
+        driver.compile(&good, None, CcTarget::StrictAnsiCheck).unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "hung child must be killed, not waited");
+        assert_eq!(CompileStats::get(&driver.stats().timeouts), 1);
+        assert_eq!(CompileStats::get(&driver.stats().attempts), 2);
+    }
+
+    #[test]
+    fn retries_exhaust_into_failure() {
+        let plan = FaultPlan::builder(23).site(FaultSite::CompileFail, FaultSpec::Every(1)).build();
+        let driver = CcDriver::detect().unwrap().with_faults(plan).with_limits(CompileLimits {
+            timeout: Duration::from_secs(5),
+            max_retries: 2,
+            backoff_base: Duration::from_millis(1),
+        });
+        let dir = workdir("exhaust");
+        let good = dir.join("ok.c");
+        std::fs::write(&good, "int ok(int x) { return x; }\n").unwrap();
+        let err = driver.compile(&good, None, CcTarget::StrictAnsiCheck).unwrap_err().to_string();
+        assert!(err.contains("after 3 attempts"), "{err}");
+        assert_eq!(CompileStats::get(&driver.stats().attempts), 3);
+        assert_eq!(CompileStats::get(&driver.stats().failures), 1);
     }
 
     #[test]

@@ -11,10 +11,13 @@
 mod cache;
 mod driver;
 
-pub use cache::ObjectCache;
-pub use driver::{detect_compiler, CcDriver, CcTarget};
+pub use cache::{object_is_valid, ObjectCache};
+pub use driver::{
+    detect_compiler, detect_compiler_from, CcDriver, CcTarget, CompileLimits, CompileStats,
+};
 
 use crate::codegen::{c_ident, generate_c, CodegenOptions};
+use crate::faults::FaultSite;
 use crate::graph::Model;
 use crate::tensor::Tensor;
 use anyhow::{Context, Result};
@@ -51,15 +54,47 @@ impl CompiledCnn {
         Self::from_source(model, opts, &source, work_dir)
     }
 
+    /// Same as [`CompiledCnn::build`] with an explicit (possibly hardened /
+    /// fault-injected) compiler driver.
+    pub fn build_with(
+        model: &Model,
+        opts: &CodegenOptions,
+        work_dir: impl AsRef<Path>,
+        driver: &CcDriver,
+    ) -> Result<Self> {
+        let source = generate_c(model, opts)?;
+        Self::from_source_with(model, opts, &source, work_dir, driver)
+    }
+
     /// Same as [`CompiledCnn::build`] but with pre-generated source.
     pub fn from_source(model: &Model, opts: &CodegenOptions, source: &str, work_dir: impl AsRef<Path>) -> Result<Self> {
         let driver = CcDriver::detect()?;
-        let cache = ObjectCache::new(work_dir.as_ref());
+        Self::from_source_with(model, opts, source, work_dir, &driver)
+    }
+
+    /// Core build path with an explicit driver; the driver's fault plan (if
+    /// any) also covers the cache-validation and dlopen seams.
+    pub fn from_source_with(
+        model: &Model,
+        opts: &CodegenOptions,
+        source: &str,
+        work_dir: impl AsRef<Path>,
+        driver: &CcDriver,
+    ) -> Result<Self> {
+        let mut cache = ObjectCache::new(work_dir.as_ref());
+        if let Some(plan) = driver.faults() {
+            cache = cache.with_faults(std::sync::Arc::clone(plan));
+        }
         let ident = c_ident(&model.name);
         let (c_path, so_path) = cache
-            .get_or_compile(&ident, &opts.tag(), source, &driver)
+            .get_or_compile(&ident, &opts.tag(), source, driver)
             .context("compiling generated C")?;
 
+        if let Some(plan) = driver.faults() {
+            if plan.should_fire(FaultSite::DlopenFail) {
+                anyhow::bail!("injected dlopen failure for {}", so_path.display());
+            }
+        }
         let lib = unsafe { libloading::Library::new(&so_path) }
             .with_context(|| format!("dlopen {}", so_path.display()))?;
         let func = unsafe {

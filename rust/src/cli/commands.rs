@@ -149,40 +149,100 @@ pub fn bench(args: &Args) -> Result<i32> {
 
 pub fn serve(args: &Args) -> Result<i32> {
     // End-to-end robot-soccer serving loop: synthetic frames → ball
-    // candidates → classification via the coordinator.
+    // candidates → classification via the coordinator, with the robustness
+    // layer exposed: --deadline-ms (shed stale patches), --queue-cap,
+    // --fallback (circuit-breaker interp fallback), --faults SPEC (or
+    // NNCG_FAULTS) for chaos drills.
     let model = load_model("ball", &weights_dir(args))?;
     let kind = EngineKind::from_name(args.get_or("engine", "nncg")).unwrap_or(EngineKind::Nncg);
     let artifacts = args.get("artifacts").map(PathBuf::from).unwrap_or_else(experiments::default_artifacts_dir);
-    let engine = build_engine(kind, &model, &CodegenOptions::sse3(), &artifacts, &experiments::default_work_dir())?;
-    let handle = coordinator::serve_single("ball", engine, args.get_usize("workers", 1)?);
+    let mut engine = build_engine(kind, &model, &CodegenOptions::sse3(), &artifacts, &experiments::default_work_dir())?;
+
+    let faults = match args.get("faults") {
+        Some(spec) => Some(crate::faults::FaultPlan::parse(spec)?),
+        None => crate::faults::FaultPlan::from_env()?,
+    };
+    if let Some(plan) = &faults {
+        eprintln!("fault injection active: {}", plan.describe());
+        engine = std::sync::Arc::new(crate::faults::FaultyEngine::new(engine, std::sync::Arc::clone(plan)));
+    }
+
+    let deadline = match args.get_usize("deadline-ms", 0)? {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms as u64)),
+    };
+    let cfg = coordinator::ServeConfig {
+        workers: args.get_usize("workers", 1)?,
+        queue_capacity: args.get_usize("queue-cap", 1024)?,
+        default_deadline: deadline,
+    };
+    // Start the coordinator over an empty router first so the fallback
+    // wrapper can share the recorder's counters, then register.
+    let router = std::sync::Arc::new(coordinator::Router::new());
+    let handle = coordinator::serve_with(std::sync::Arc::clone(&router), cfg);
+    if args.has_flag("fallback") {
+        let interp: std::sync::Arc<dyn crate::runtime::InferenceEngine> =
+            std::sync::Arc::new(crate::interp::InterpEngine::new(model.clone())?);
+        let wrapped = coordinator::FallbackEngine::new(engine, interp, coordinator::BreakerConfig::default())
+            .with_counters(std::sync::Arc::clone(handle.metrics.counters()));
+        router.register("ball", std::sync::Arc::new(wrapped));
+    } else {
+        router.register("ball", engine);
+    }
 
     let frames = args.get_usize("frames", 30)?;
     let mut rng = XorShift64::new(99);
     let mut total_candidates = 0usize;
     let mut total_balls = 0usize;
+    let mut total_errors = 0usize;
     let t0 = std::time::Instant::now();
     for _ in 0..frames {
         let (img, _truth) = render::soccer_frame(60, 80, 1 + rng.below(2), rng.below(2), &mut rng);
         let cands = ball::extract_candidates(&img, &ball::BallExtractorConfig::default());
         total_candidates += cands.len();
         let patches: Vec<Tensor> = cands.iter().map(|c| ball::candidate_patch(&img, c)).collect();
-        if patches.is_empty() {
-            continue;
+        // Per-request submit (rather than infer_burst) so shed/failed
+        // patches are counted without abandoning the rest of the frame.
+        let receivers: Vec<_> = patches
+            .into_iter()
+            .filter_map(|p| match handle.submit("ball", p, None) {
+                Ok(rx) => Some(rx),
+                Err(_) => {
+                    total_errors += 1;
+                    None
+                }
+            })
+            .collect();
+        for rx in receivers {
+            match rx.recv().unwrap_or(Err(coordinator::ServeError::Stopped)) {
+                Ok(out) => total_balls += (out.argmax() == 1) as usize,
+                Err(_) => total_errors += 1,
+            }
         }
-        let outs = handle.infer_burst("ball", patches)?;
-        total_balls += outs.iter().filter(|o| o.argmax() == 1).count();
     }
     let total_s = t0.elapsed().as_secs_f64();
-    let snap = handle.metrics.snapshot();
+    let snap = handle.stop();
     println!(
-        "frames={frames} candidates={total_candidates} classified-ball={total_balls} wall={:.3}s ({:.1} fps)",
+        "frames={frames} candidates={total_candidates} classified-ball={total_balls} errors={total_errors} wall={:.3}s ({:.1} fps)",
         total_s,
         frames as f64 / total_s
     );
     for (model, q_mean, i_mean, p50, p99, n) in &snap.models {
         println!("model={model} n={n} queue_mean={q_mean:.1}us infer_mean={i_mean:.1}us p50<{p50:.0}us p99<{p99:.0}us");
     }
-    handle.shutdown();
+    println!(
+        "sheds: deadline={} queue-full={} | failures: engine={} panics={} degraded={} | fallback-served={} | breaker: open={} half-open={} closed={} | respawns={}",
+        snap.deadline_sheds,
+        snap.queue_full_sheds,
+        snap.engine_failures,
+        snap.engine_panics,
+        snap.degraded,
+        snap.fallback_served,
+        snap.breaker_opens,
+        snap.breaker_half_opens,
+        snap.breaker_closes,
+        snap.worker_respawns
+    );
     Ok(0)
 }
 

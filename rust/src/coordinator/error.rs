@@ -1,0 +1,120 @@
+//! Typed failure taxonomy for the serving layer.
+//!
+//! Every accepted request gets exactly one reply: either a tensor or one of
+//! these errors. Clients can match on the variant (the vendored `anyhow`
+//! shim has no downcast, so the coordinator returns `ServeError` directly;
+//! `?` still converts into `anyhow::Error` via `std::error::Error`).
+
+use std::fmt;
+
+/// Why a request was not served with a tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// The request's deadline had already passed when a worker dequeued it
+    /// (load shedding: stale frames are dropped, not computed).
+    DeadlineExceeded { model: String, late_by_us: u64 },
+    /// The bounded request queue was full at submission time.
+    QueueFull { capacity: usize },
+    /// The engine returned an error or panicked (reason includes which).
+    EngineFailed { model: String, reason: String },
+    /// No engine is registered under this name.
+    ModelUnknown { model: String, registered: Vec<String> },
+    /// The primary engine was down *and* the fallback failed too.
+    Degraded { model: String, primary_error: String, fallback_error: String },
+    /// The coordinator is shut down (or shutting down) and accepts no work.
+    Stopped,
+}
+
+impl ServeError {
+    /// Stable short name for metrics/logs.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ServeError::DeadlineExceeded { .. } => "deadline-exceeded",
+            ServeError::QueueFull { .. } => "queue-full",
+            ServeError::EngineFailed { .. } => "engine-failed",
+            ServeError::ModelUnknown { .. } => "model-unknown",
+            ServeError::Degraded { .. } => "degraded",
+            ServeError::Stopped => "stopped",
+        }
+    }
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::DeadlineExceeded { model, late_by_us } => {
+                write!(f, "deadline exceeded for model {model:?} (late by {late_by_us}\u{b5}s; request shed)")
+            }
+            ServeError::QueueFull { capacity } => {
+                write!(f, "serving queue full (capacity {capacity}); request shed")
+            }
+            ServeError::EngineFailed { model, reason } => {
+                write!(f, "engine failed for model {model:?}: {reason}")
+            }
+            ServeError::ModelUnknown { model, registered } => {
+                if registered.is_empty() {
+                    write!(f, "no engine registered for model {model:?} (registry is empty)")
+                } else {
+                    write!(
+                        f,
+                        "no engine registered for model {model:?} (registered: {})",
+                        registered.join(", ")
+                    )
+                }
+            }
+            ServeError::Degraded { model, primary_error, fallback_error } => {
+                write!(
+                    f,
+                    "degraded: model {model:?} primary failed ({primary_error}) and fallback failed ({fallback_error})"
+                )
+            }
+            ServeError::Stopped => write!(f, "coordinator stopped"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_names_registered_models() {
+        let e = ServeError::ModelUnknown {
+            model: "yolo".into(),
+            registered: vec!["ball".into(), "pedestrian".into()],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("ball") && msg.contains("pedestrian"), "{msg}");
+        assert_eq!(e.kind(), "model-unknown");
+
+        let empty = ServeError::ModelUnknown { model: "x".into(), registered: vec![] };
+        assert!(empty.to_string().contains("empty"));
+    }
+
+    #[test]
+    fn kinds_are_distinct() {
+        let errs = [
+            ServeError::DeadlineExceeded { model: "m".into(), late_by_us: 3 },
+            ServeError::QueueFull { capacity: 4 },
+            ServeError::EngineFailed { model: "m".into(), reason: "r".into() },
+            ServeError::ModelUnknown { model: "m".into(), registered: vec![] },
+            ServeError::Degraded { model: "m".into(), primary_error: "p".into(), fallback_error: "f".into() },
+            ServeError::Stopped,
+        ];
+        let mut kinds: Vec<_> = errs.iter().map(|e| e.kind()).collect();
+        kinds.sort();
+        kinds.dedup();
+        assert_eq!(kinds.len(), errs.len());
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn f() -> anyhow::Result<()> {
+            Err(ServeError::Stopped)?;
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("stopped"));
+    }
+}

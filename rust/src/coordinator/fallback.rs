@@ -1,0 +1,418 @@
+//! Graceful degradation: a circuit-breaker fallback wrapper around a
+//! primary engine.
+//!
+//! The paper's deployment target is a generated-C engine produced by a
+//! compile-at-runtime pipeline (cc + dlopen). When that engine is unhealthy
+//! — compiler missing, object corrupted, inference panicking — the serving
+//! loop must keep answering frames. [`FallbackEngine`] routes around the
+//! sick primary to a reference engine (typically the interpreter, whose
+//! output the generated C is verified against), while a [`CircuitBreaker`]
+//! stops hammering the primary and periodically probes it for recovery. A
+//! healed engine (e.g. a background recompile) is hot-swapped back in with
+//! [`FallbackEngine::swap_primary`].
+
+use super::metrics::ServeCounters;
+use crate::runtime::InferenceEngine;
+use crate::tensor::Tensor;
+use crate::util::panic_message;
+use anyhow::Result;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Circuit breaker tuning.
+#[derive(Debug, Clone)]
+pub struct BreakerConfig {
+    /// Consecutive primary failures that open the breaker.
+    pub failure_threshold: u32,
+    /// How long the breaker stays open before admitting a half-open probe.
+    /// `Duration::ZERO` makes the very next call a probe (used by the
+    /// deterministic chaos tests).
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig { failure_threshold: 3, cooldown: Duration::from_millis(250) }
+    }
+}
+
+/// Observable breaker state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Primary healthy; all traffic goes to it.
+    Closed,
+    /// Primary presumed down; traffic goes to the fallback.
+    Open,
+    /// One probe request is trying the primary.
+    HalfOpen,
+}
+
+enum St {
+    Closed { fails: u32 },
+    Open { since: Instant },
+    HalfOpen { probe_started: Instant },
+}
+
+/// Closed → (K consecutive failures) → Open → (cooldown) → HalfOpen →
+/// success → Closed / failure → Open.
+pub struct CircuitBreaker {
+    cfg: BreakerConfig,
+    st: Mutex<St>,
+    counters: Option<Arc<ServeCounters>>,
+}
+
+impl CircuitBreaker {
+    pub fn new(cfg: BreakerConfig) -> Self {
+        CircuitBreaker { cfg, st: Mutex::new(St::Closed { fails: 0 }), counters: None }
+    }
+
+    pub fn set_counters(&mut self, counters: Arc<ServeCounters>) {
+        self.counters = Some(counters);
+    }
+
+    fn bump(&self, pick: impl Fn(&ServeCounters) -> &AtomicU64) {
+        if let Some(c) = &self.counters {
+            ServeCounters::bump(pick(c));
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, St> {
+        self.st.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn state(&self) -> BreakerState {
+        match *self.lock() {
+            St::Closed { .. } => BreakerState::Closed,
+            St::Open { .. } => BreakerState::Open,
+            St::HalfOpen { .. } => BreakerState::HalfOpen,
+        }
+    }
+
+    /// May this call try the primary? Open→HalfOpen transitions happen here
+    /// (the admitted caller *is* the probe). While a probe is in flight,
+    /// other callers are routed to the fallback; a probe that never resolves
+    /// (crashed worker) is replaced after another cooldown.
+    pub fn allow(&self) -> bool {
+        let mut st = self.lock();
+        match *st {
+            St::Closed { .. } => true,
+            St::Open { since } => {
+                if since.elapsed() >= self.cfg.cooldown {
+                    *st = St::HalfOpen { probe_started: Instant::now() };
+                    self.bump(|c| &c.breaker_half_opens);
+                    true
+                } else {
+                    false
+                }
+            }
+            St::HalfOpen { probe_started } => {
+                if probe_started.elapsed() >= self.cfg.cooldown.max(Duration::from_millis(1)) {
+                    // The previous probe is presumed lost; admit another.
+                    *st = St::HalfOpen { probe_started: Instant::now() };
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Report the result of an *admitted* primary attempt.
+    pub fn on_success(&self) {
+        let mut st = self.lock();
+        match *st {
+            St::Closed { .. } => *st = St::Closed { fails: 0 },
+            St::HalfOpen { .. } => {
+                *st = St::Closed { fails: 0 };
+                self.bump(|c| &c.breaker_closes);
+            }
+            // A call admitted while closed can resolve after the breaker
+            // opened; ignore the stale result so Open stays observable.
+            St::Open { .. } => {}
+        }
+    }
+
+    /// Report a failed *admitted* primary attempt.
+    pub fn on_failure(&self) {
+        let mut st = self.lock();
+        match *st {
+            St::Closed { fails } => {
+                let fails = fails + 1;
+                if fails >= self.cfg.failure_threshold {
+                    *st = St::Open { since: Instant::now() };
+                    self.bump(|c| &c.breaker_opens);
+                } else {
+                    *st = St::Closed { fails };
+                }
+            }
+            St::HalfOpen { .. } => {
+                *st = St::Open { since: Instant::now() };
+                self.bump(|c| &c.breaker_opens);
+            }
+            St::Open { .. } => {}
+        }
+    }
+
+    /// Force-open (ops/testing).
+    pub fn trip(&self) {
+        *self.lock() = St::Open { since: Instant::now() };
+        self.bump(|c| &c.breaker_opens);
+    }
+
+    /// Reset to closed (called after a heal swap).
+    pub fn reset(&self) {
+        *self.lock() = St::Closed { fails: 0 };
+    }
+}
+
+/// An [`InferenceEngine`] that serves from a primary engine while healthy
+/// and degrades to a fallback (interpreter) when the breaker is open.
+/// Primary panics are isolated here too, so a crashing generated-C engine
+/// becomes a breaker failure instead of a worker death.
+pub struct FallbackEngine {
+    label: String,
+    primary: RwLock<Arc<dyn InferenceEngine>>,
+    fallback: Arc<dyn InferenceEngine>,
+    breaker: CircuitBreaker,
+    counters: Option<Arc<ServeCounters>>,
+}
+
+impl FallbackEngine {
+    pub fn new(
+        primary: Arc<dyn InferenceEngine>,
+        fallback: Arc<dyn InferenceEngine>,
+        cfg: BreakerConfig,
+    ) -> Self {
+        let label = format!("fallback({}->{})", primary.name(), fallback.name());
+        FallbackEngine {
+            label,
+            primary: RwLock::new(primary),
+            fallback,
+            breaker: CircuitBreaker::new(cfg),
+            counters: None,
+        }
+    }
+
+    /// Wire shared serving counters (fallback/degraded/breaker telemetry).
+    pub fn with_counters(mut self, counters: Arc<ServeCounters>) -> Self {
+        self.breaker.set_counters(Arc::clone(&counters));
+        self.counters = Some(counters);
+        self
+    }
+
+    pub fn breaker(&self) -> &CircuitBreaker {
+        &self.breaker
+    }
+
+    fn primary_engine(&self) -> Arc<dyn InferenceEngine> {
+        Arc::clone(&self.primary.read().unwrap_or_else(|e| e.into_inner()))
+    }
+
+    /// Name of the engine currently installed as primary.
+    pub fn primary_name(&self) -> String {
+        self.primary_engine().name().to_string()
+    }
+
+    /// Hot-swap a healed primary in and close the breaker.
+    pub fn swap_primary(&self, engine: Arc<dyn InferenceEngine>) {
+        *self.primary.write().unwrap_or_else(|e| e.into_inner()) = engine;
+        self.breaker.reset();
+    }
+
+    /// Spawn a background heal: `build` produces a fresh primary (e.g. a
+    /// recompile of the generated C); on success it is swapped in and the
+    /// breaker closes. Returns the join handle (true = healed).
+    pub fn heal_in_background<F>(self: &Arc<Self>, build: F) -> std::thread::JoinHandle<bool>
+    where
+        F: FnOnce() -> Result<Arc<dyn InferenceEngine>> + Send + 'static,
+    {
+        let me = Arc::clone(self);
+        std::thread::spawn(move || match build() {
+            Ok(engine) => {
+                me.swap_primary(engine);
+                true
+            }
+            Err(e) => {
+                eprintln!("[nncg] heal recompile failed: {e:#}");
+                false
+            }
+        })
+    }
+
+    fn bump(&self, pick: impl Fn(&ServeCounters) -> &AtomicU64) {
+        if let Some(c) = &self.counters {
+            ServeCounters::bump(pick(c));
+        }
+    }
+}
+
+impl InferenceEngine for FallbackEngine {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn infer(&self, input: &Tensor) -> Result<Tensor> {
+        let mut primary_error: Option<String> = None;
+        if self.breaker.allow() {
+            let engine = self.primary_engine();
+            match catch_unwind(AssertUnwindSafe(|| engine.infer(input))) {
+                Ok(Ok(y)) => {
+                    self.breaker.on_success();
+                    return Ok(y);
+                }
+                Ok(Err(e)) => {
+                    self.breaker.on_failure();
+                    primary_error = Some(format!("{e:#}"));
+                }
+                Err(payload) => {
+                    self.breaker.on_failure();
+                    self.bump(|c| &c.engine_panics);
+                    primary_error = Some(format!("panicked: {}", panic_message(&*payload)));
+                }
+            }
+        }
+        // Degraded path: primary failed just now or the breaker is open.
+        self.bump(|c| &c.fallback_served);
+        match self.fallback.infer(input) {
+            Ok(y) => Ok(y),
+            Err(fe) => {
+                self.bump(|c| &c.degraded);
+                Err(super::ServeError::Degraded {
+                    model: self.label.clone(),
+                    primary_error: primary_error.unwrap_or_else(|| "circuit open".into()),
+                    fallback_error: format!("{fe:#}"),
+                }
+                .into())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{FaultPlan, FaultSite, FaultSpec, FaultyEngine};
+    use crate::graph::zoo;
+    use crate::interp::InterpEngine;
+
+    fn interp(seed: u64) -> Arc<dyn InferenceEngine> {
+        Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(seed)).unwrap())
+    }
+
+    fn zero_cooldown(threshold: u32) -> BreakerConfig {
+        BreakerConfig { failure_threshold: threshold, cooldown: Duration::ZERO }
+    }
+
+    #[test]
+    fn breaker_walks_closed_open_halfopen_closed() {
+        let b = CircuitBreaker::new(BreakerConfig {
+            failure_threshold: 2,
+            cooldown: Duration::from_millis(40),
+        });
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.allow());
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "one failure below threshold");
+        assert!(b.allow());
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(!b.allow(), "open: calls rejected before cooldown");
+        std::thread::sleep(Duration::from_millis(55));
+        assert!(b.allow(), "cooldown elapsed: probe admitted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(!b.allow(), "only one probe at a time");
+        b.on_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn failed_probe_reopens() {
+        let b = CircuitBreaker::new(zero_cooldown(1));
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(b.allow());
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Open, "failed probe re-opens");
+    }
+
+    #[test]
+    fn success_resets_consecutive_failures() {
+        let b = CircuitBreaker::new(zero_cooldown(2));
+        b.on_failure();
+        b.on_success();
+        b.on_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "non-consecutive failures don't open");
+    }
+
+    #[test]
+    fn fallback_serves_when_primary_fails_and_heals_on_swap() {
+        let plan = FaultPlan::builder(5).site(FaultSite::EngineFail, FaultSpec::Every(1)).build();
+        let primary: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(interp(1), plan));
+        let fb = interp(2);
+        let counters = Arc::new(ServeCounters::default());
+        let fe = Arc::new(
+            FallbackEngine::new(primary, Arc::clone(&fb), zero_cooldown(2))
+                .with_counters(Arc::clone(&counters)),
+        );
+
+        let x = Tensor::zeros(&[8, 8, 1]);
+        let reference = fb.infer(&x).unwrap();
+        for _ in 0..4 {
+            let y = fe.infer(&x).unwrap();
+            assert_eq!(y, reference, "degraded replies come bit-identical from the fallback");
+        }
+        assert_eq!(fe.breaker().state(), BreakerState::Open);
+        assert!(counters.fallback_served.load(std::sync::atomic::Ordering::Relaxed) >= 4);
+
+        // Heal: swap a healthy primary in; traffic returns to it.
+        let healthy = interp(9);
+        let healed_reference = healthy.infer(&x).unwrap();
+        fe.swap_primary(healthy);
+        assert_eq!(fe.breaker().state(), BreakerState::Closed);
+        let before = counters.fallback_served.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(fe.infer(&x).unwrap(), healed_reference, "healed primary serves again");
+        assert_eq!(counters.fallback_served.load(std::sync::atomic::Ordering::Relaxed), before);
+    }
+
+    #[test]
+    fn primary_panic_is_contained_and_counted() {
+        let plan = FaultPlan::builder(6).site(FaultSite::EnginePanic, FaultSpec::First(1)).build();
+        let primary: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(interp(1), plan));
+        let counters = Arc::new(ServeCounters::default());
+        let fe = FallbackEngine::new(primary, interp(2), zero_cooldown(3))
+            .with_counters(Arc::clone(&counters));
+        let x = Tensor::zeros(&[8, 8, 1]);
+        assert!(fe.infer(&x).is_ok(), "panic routed to fallback, not unwound");
+        assert_eq!(counters.engine_panics.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn degraded_error_when_both_engines_fail() {
+        let plan = FaultPlan::builder(7).site(FaultSite::EngineFail, FaultSpec::Every(1)).build();
+        let bad_primary: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(interp(1), plan));
+        let plan2 = FaultPlan::builder(8).site(FaultSite::EngineFail, FaultSpec::Every(1)).build();
+        let bad_fallback: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(interp(2), plan2));
+        let counters = Arc::new(ServeCounters::default());
+        let fe = FallbackEngine::new(bad_primary, bad_fallback, zero_cooldown(5))
+            .with_counters(Arc::clone(&counters));
+        let err = fe.infer(&Tensor::zeros(&[8, 8, 1])).unwrap_err();
+        assert!(format!("{err:#}").contains("degraded"), "{err:#}");
+        assert_eq!(counters.degraded.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn heal_in_background_swaps_primary() {
+        let plan = FaultPlan::builder(9).site(FaultSite::EngineFail, FaultSpec::Every(1)).build();
+        let primary: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(interp(1), plan));
+        let fe = Arc::new(FallbackEngine::new(primary, interp(2), zero_cooldown(1)));
+        let handle = fe.heal_in_background(|| {
+            Ok(Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(3)).unwrap())
+                as Arc<dyn InferenceEngine>)
+        });
+        assert!(handle.join().unwrap());
+        assert_eq!(fe.breaker().state(), BreakerState::Closed);
+        assert!(fe.primary_name().contains("interp"));
+    }
+}

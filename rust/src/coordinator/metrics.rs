@@ -1,9 +1,12 @@
 //! Request latency metrics: lock-free-ish counters + log-bucketed
-//! histograms (no external metrics crates offline).
+//! histograms (no external metrics crates offline), plus the robustness
+//! counters (sheds, panics, fallback, breaker transitions) added for the
+//! fault-tolerant serving layer.
 
+use crate::cc::CompileStats;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Histogram with logarithmic µs buckets: [<1, <2, <4, ..., <2^19, inf).
 const BUCKETS: usize = 21;
@@ -52,11 +55,47 @@ impl Histo {
     }
 }
 
+/// Robustness counters shared by the worker loop, the circuit-breaker
+/// fallback wrapper, and anything else on the serving path. All fields are
+/// public atomics so layers can bump them without going through the
+/// recorder's model map lock.
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    /// Requests shed because their deadline passed while queued.
+    pub deadline_sheds: AtomicU64,
+    /// Requests shed at admission because the bounded queue was full.
+    pub queue_full_sheds: AtomicU64,
+    /// Engine calls that returned an error.
+    pub engine_failures: AtomicU64,
+    /// Engine calls that panicked (isolated via `catch_unwind`).
+    pub engine_panics: AtomicU64,
+    /// Worker threads respawned after an unexpected unwind.
+    pub worker_respawns: AtomicU64,
+    /// Requests served by the fallback engine instead of the primary.
+    pub fallback_served: AtomicU64,
+    /// Requests where primary *and* fallback failed.
+    pub degraded: AtomicU64,
+    /// Circuit-breaker closed→open (and half-open→open) transitions.
+    pub breaker_opens: AtomicU64,
+    /// Circuit-breaker open→half-open probe admissions.
+    pub breaker_half_opens: AtomicU64,
+    /// Circuit-breaker half-open→closed recoveries.
+    pub breaker_closes: AtomicU64,
+}
+
+impl ServeCounters {
+    pub fn bump(field: &AtomicU64) {
+        field.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
 /// Concurrent latency recorder shared by workers.
 pub struct LatencyRecorder {
     total: AtomicU64,
     errors: AtomicU64,
+    counters: Arc<ServeCounters>,
     per_model: Mutex<HashMap<String, (Histo, Histo)>>, // (queue, infer)
+    compile_stats: Mutex<Option<Arc<CompileStats>>>,
 }
 
 /// Immutable snapshot for reporting.
@@ -66,11 +105,43 @@ pub struct MetricsSnapshot {
     pub errors: u64,
     /// model → (mean queue µs, mean infer µs, p50 infer µs, p99 infer µs, n)
     pub models: Vec<(String, f64, f64, f64, f64, u64)>,
+    // Robustness counters (see [`ServeCounters`] for semantics).
+    pub deadline_sheds: u64,
+    pub queue_full_sheds: u64,
+    pub engine_failures: u64,
+    pub engine_panics: u64,
+    pub worker_respawns: u64,
+    pub fallback_served: u64,
+    pub degraded: u64,
+    pub breaker_opens: u64,
+    pub breaker_half_opens: u64,
+    pub breaker_closes: u64,
+    /// Compile-pipeline retry/timeout counts, if a [`CompileStats`] was
+    /// attached (e.g. by a healing recompile path).
+    pub compile_retries: u64,
+    pub compile_timeouts: u64,
 }
 
 impl LatencyRecorder {
     pub fn new() -> Self {
-        LatencyRecorder { total: AtomicU64::new(0), errors: AtomicU64::new(0), per_model: Mutex::new(HashMap::new()) }
+        LatencyRecorder {
+            total: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            counters: Arc::new(ServeCounters::default()),
+            per_model: Mutex::new(HashMap::new()),
+            compile_stats: Mutex::new(None),
+        }
+    }
+
+    /// The shared robustness counters (clone the `Arc` to hand to a
+    /// [`super::FallbackEngine`] or other serving-path component).
+    pub fn counters(&self) -> &Arc<ServeCounters> {
+        &self.counters
+    }
+
+    /// Surface a compile pipeline's retry/timeout stats in snapshots.
+    pub fn attach_compile_stats(&self, stats: Arc<CompileStats>) {
+        *self.compile_stats.lock().unwrap_or_else(|e| e.into_inner()) = Some(stats);
     }
 
     pub fn record(&self, model: &str, queue_us: f64, infer_us: f64, ok: bool) {
@@ -78,23 +149,40 @@ impl LatencyRecorder {
         if !ok {
             self.errors.fetch_add(1, Ordering::Relaxed);
         }
-        let mut map = self.per_model.lock().unwrap();
+        let mut map = self.per_model.lock().unwrap_or_else(|e| e.into_inner());
         let entry = map.entry(model.to_string()).or_default();
         entry.0.record(queue_us);
         entry.1.record(infer_us);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let map = self.per_model.lock().unwrap();
+        let map = self.per_model.lock().unwrap_or_else(|e| e.into_inner());
         let mut models: Vec<_> = map
             .iter()
             .map(|(name, (q, i))| (name.clone(), q.mean(), i.mean(), i.quantile(0.5), i.quantile(0.99), i.n))
             .collect();
         models.sort_by(|a, b| a.0.cmp(&b.0));
+        let c = &self.counters;
+        let (compile_retries, compile_timeouts) = match &*self.compile_stats.lock().unwrap_or_else(|e| e.into_inner()) {
+            Some(s) => (s.retries.load(Ordering::Relaxed), s.timeouts.load(Ordering::Relaxed)),
+            None => (0, 0),
+        };
         MetricsSnapshot {
             total_requests: self.total.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             models,
+            deadline_sheds: c.deadline_sheds.load(Ordering::Relaxed),
+            queue_full_sheds: c.queue_full_sheds.load(Ordering::Relaxed),
+            engine_failures: c.engine_failures.load(Ordering::Relaxed),
+            engine_panics: c.engine_panics.load(Ordering::Relaxed),
+            worker_respawns: c.worker_respawns.load(Ordering::Relaxed),
+            fallback_served: c.fallback_served.load(Ordering::Relaxed),
+            degraded: c.degraded.load(Ordering::Relaxed),
+            breaker_opens: c.breaker_opens.load(Ordering::Relaxed),
+            breaker_half_opens: c.breaker_half_opens.load(Ordering::Relaxed),
+            breaker_closes: c.breaker_closes.load(Ordering::Relaxed),
+            compile_retries,
+            compile_timeouts,
         }
     }
 }
@@ -143,5 +231,37 @@ mod tests {
         let h = Histo::default();
         assert_eq!(h.quantile(0.99), 0.0);
         assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn robustness_counters_flow_into_snapshot() {
+        let r = LatencyRecorder::new();
+        let c = r.counters().clone();
+        ServeCounters::bump(&c.deadline_sheds);
+        ServeCounters::bump(&c.queue_full_sheds);
+        ServeCounters::bump(&c.queue_full_sheds);
+        ServeCounters::bump(&c.engine_panics);
+        ServeCounters::bump(&c.fallback_served);
+        ServeCounters::bump(&c.breaker_opens);
+        let s = r.snapshot();
+        assert_eq!(s.deadline_sheds, 1);
+        assert_eq!(s.queue_full_sheds, 2);
+        assert_eq!(s.engine_panics, 1);
+        assert_eq!(s.fallback_served, 1);
+        assert_eq!(s.breaker_opens, 1);
+        assert_eq!(s.worker_respawns, 0);
+    }
+
+    #[test]
+    fn compile_stats_attach_is_reflected() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.snapshot().compile_retries, 0);
+        let stats = Arc::new(CompileStats::default());
+        stats.retries.fetch_add(2, Ordering::Relaxed);
+        stats.timeouts.fetch_add(1, Ordering::Relaxed);
+        r.attach_compile_stats(stats);
+        let s = r.snapshot();
+        assert_eq!(s.compile_retries, 2);
+        assert_eq!(s.compile_timeouts, 1);
     }
 }

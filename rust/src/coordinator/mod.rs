@@ -6,131 +6,325 @@
 //! why). The coordinator provides:
 //!
 //! * [`Router`] — model registry mapping names to [`InferenceEngine`]s
-//!   (generated-C, interpreter, or XLA/PJRT backends are interchangeable).
+//!   (generated-C, interpreter, or XLA/PJRT backends are interchangeable),
+//!   interior-mutable for hot-swap while serving.
 //! * [`Batcher`] — size/deadline micro-batching policy, used to quantify
 //!   the latency-vs-throughput trade-off the paper discusses for GPUs.
-//! * [`serve`] — a worker-thread request loop (std mpsc; tokio is not in
-//!   the offline crate set) with per-request latency metrics.
+//! * [`serve`]/[`serve_with`] — a worker-thread request loop (std mpsc;
+//!   tokio is not in the offline crate set) with per-request latency
+//!   metrics, a bounded queue, optional per-request deadlines, panic
+//!   isolation with worker respawn, and typed [`ServeError`] replies.
+//!
+//! The contract is **exactly one reply per accepted request**: either a
+//! tensor or a `ServeError`. A panicking engine, a shed request, and a
+//! shutdown all produce a reply — `infer_burst` can never hang on a dead
+//! worker.
 
 mod batcher;
+mod error;
+mod fallback;
 mod metrics;
 mod router;
 
 pub use batcher::{Batcher, BatcherPolicy};
-pub use metrics::{LatencyRecorder, MetricsSnapshot};
+pub use error::ServeError;
+pub use fallback::{BreakerConfig, BreakerState, CircuitBreaker, FallbackEngine};
+pub use metrics::{LatencyRecorder, MetricsSnapshot, ServeCounters};
 pub use router::Router;
 
 use crate::runtime::InferenceEngine;
 use crate::tensor::Tensor;
-use anyhow::Result;
+use crate::util::panic_message;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Reply type for every request: a tensor or a typed serving error. The
+/// vendored `anyhow` shim has no downcast, so the typed error is returned
+/// directly; `?` in anyhow-returning callers still works via `From`.
+pub type ServeResult = Result<Tensor, ServeError>;
 
 /// One inference request flowing through the coordinator.
 pub struct Request {
     pub model: String,
     pub input: Tensor,
-    /// Reply channel; the worker sends the result exactly once.
-    pub reply: mpsc::Sender<Result<Tensor>>,
+    /// Reply channel; the coordinator sends the result exactly once.
+    pub reply: mpsc::Sender<ServeResult>,
     /// Enqueue timestamp for latency accounting.
     pub enqueued: Instant,
+    /// If set and already past when a worker dequeues the request, the
+    /// request is shed with [`ServeError::DeadlineExceeded`] instead of
+    /// computing a stale frame.
+    pub deadline: Option<Instant>,
+}
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads (min 1).
+    pub workers: usize,
+    /// Bounded queue capacity; submissions beyond it are shed with
+    /// [`ServeError::QueueFull`] instead of growing an unbounded backlog
+    /// (min 1).
+    pub queue_capacity: usize,
+    /// Deadline applied to requests submitted without an explicit one.
+    pub default_deadline: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 1, queue_capacity: 1024, default_deadline: None }
+    }
 }
 
 /// Handle to a running coordinator.
 pub struct ServerHandle {
-    tx: mpsc::Sender<Request>,
+    tx: mpsc::SyncSender<Request>,
     stop: Arc<AtomicBool>,
     workers: Vec<std::thread::JoinHandle<()>>,
     pub metrics: Arc<LatencyRecorder>,
+    default_deadline: Option<Duration>,
+    queue_capacity: usize,
 }
 
 impl ServerHandle {
-    /// Submit a request and wait for the reply (client-side latency).
-    pub fn infer(&self, model: &str, input: Tensor) -> Result<Tensor> {
+    /// Submit a request; returns the reply receiver, or sheds immediately
+    /// if the queue is full / the coordinator has stopped.
+    pub fn submit(
+        &self,
+        model: &str,
+        input: Tensor,
+        deadline: Option<Duration>,
+    ) -> Result<mpsc::Receiver<ServeResult>, ServeError> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Request { model: model.to_string(), input, reply: reply_tx, enqueued: Instant::now() })
-            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
-        reply_rx.recv().map_err(|_| anyhow::anyhow!("worker dropped reply"))?
+        let now = Instant::now();
+        let deadline = deadline.or(self.default_deadline).map(|d| now + d);
+        let req = Request { model: model.to_string(), input, reply: reply_tx, enqueued: now, deadline };
+        match self.tx.try_send(req) {
+            Ok(()) => Ok(reply_rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                ServeCounters::bump(&self.metrics.counters().queue_full_sheds);
+                Err(ServeError::QueueFull { capacity: self.queue_capacity })
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => Err(ServeError::Stopped),
+        }
+    }
+
+    /// Submit a request and wait for the reply (client-side latency).
+    pub fn infer(&self, model: &str, input: Tensor) -> ServeResult {
+        self.infer_with_deadline(model, input, None)
+    }
+
+    /// Submit with an explicit deadline and wait for the reply.
+    pub fn infer_with_deadline(
+        &self,
+        model: &str,
+        input: Tensor,
+        deadline: Option<Duration>,
+    ) -> ServeResult {
+        let rx = self.submit(model, input, deadline)?;
+        rx.recv().unwrap_or(Err(ServeError::Stopped))
     }
 
     /// Fire-and-collect a burst of requests (per-frame candidate batch).
-    pub fn infer_burst(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+    /// Every accepted request gets a reply; the first error wins but all
+    /// receivers are drained first so no reply is abandoned mid-flight.
+    pub fn infer_burst(&self, model: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>, ServeError> {
         let mut receivers = Vec::with_capacity(inputs.len());
         for input in inputs {
-            let (reply_tx, reply_rx) = mpsc::channel();
-            self.tx
-                .send(Request { model: model.to_string(), input, reply: reply_tx, enqueued: Instant::now() })
-                .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
-            receivers.push(reply_rx);
+            receivers.push(self.submit(model, input, None)?);
         }
-        receivers
-            .into_iter()
-            .map(|rx| rx.recv().map_err(|_| anyhow::anyhow!("worker dropped reply"))?)
-            .collect()
+        let mut outs = Vec::with_capacity(receivers.len());
+        let mut first_err: Option<ServeError> = None;
+        for rx in receivers {
+            match rx.recv().unwrap_or(Err(ServeError::Stopped)) {
+                Ok(y) => outs.push(y),
+                Err(e) => first_err = first_err.or(Some(e)),
+            }
+        }
+        match first_err {
+            None => Ok(outs),
+            Some(e) => Err(e),
+        }
     }
 
-    /// Stop workers and join them.
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        drop(self.tx);
-        for h in self.workers.drain(..) {
+    /// Drain the queue, join the workers, and return the final metrics.
+    ///
+    /// Dropping `tx` disconnects the channel, but std mpsc delivers
+    /// already-buffered messages before reporting `Disconnected`, so every
+    /// queued request is still answered (served or deadline-shed) before
+    /// the workers exit: drain-then-join, not drop-on-the-floor.
+    pub fn stop(self) -> MetricsSnapshot {
+        let ServerHandle { tx, stop, workers, metrics, .. } = self;
+        stop.store(true, Ordering::SeqCst);
+        drop(tx);
+        for h in workers {
             let _ = h.join();
+        }
+        metrics.snapshot()
+    }
+
+    /// Stop workers and join them (compat wrapper over [`Self::stop`]).
+    pub fn shutdown(self) {
+        let _ = self.stop();
+    }
+}
+
+/// Replies `EngineFailed` on drop unless defused — the exactly-once
+/// backstop for a worker that unwinds mid-request.
+struct ReplyGuard {
+    reply: Option<mpsc::Sender<ServeResult>>,
+    model: String,
+}
+
+impl ReplyGuard {
+    fn new(reply: mpsc::Sender<ServeResult>, model: &str) -> Self {
+        ReplyGuard { reply: Some(reply), model: model.to_string() }
+    }
+
+    fn send(mut self, result: ServeResult) {
+        if let Some(tx) = self.reply.take() {
+            let _ = tx.send(result);
         }
     }
 }
 
-/// Start the coordinator with `n_workers` threads over a router.
-pub fn serve(router: Arc<Router>, n_workers: usize) -> ServerHandle {
-    let (tx, rx) = mpsc::channel::<Request>();
-    let rx = Arc::new(std::sync::Mutex::new(rx));
+impl Drop for ReplyGuard {
+    fn drop(&mut self) {
+        if let Some(tx) = self.reply.take() {
+            let _ = tx.send(Err(ServeError::EngineFailed {
+                model: self.model.clone(),
+                reason: "worker crashed mid-request".into(),
+            }));
+        }
+    }
+}
+
+type SharedRx = Arc<Mutex<mpsc::Receiver<Request>>>;
+
+/// Start the coordinator with explicit robustness configuration.
+pub fn serve_with(router: Arc<Router>, cfg: ServeConfig) -> ServerHandle {
+    let queue_capacity = cfg.queue_capacity.max(1);
+    let (tx, rx) = mpsc::sync_channel::<Request>(queue_capacity);
+    let rx: SharedRx = Arc::new(Mutex::new(rx));
     let stop = Arc::new(AtomicBool::new(false));
     let metrics = Arc::new(LatencyRecorder::new());
-    let mut workers = Vec::new();
-    for _ in 0..n_workers.max(1) {
-        let rx = Arc::clone(&rx);
-        let router = Arc::clone(&router);
-        let stop = Arc::clone(&stop);
-        let metrics = Arc::clone(&metrics);
-        workers.push(std::thread::spawn(move || {
-            loop {
-                let req = {
-                    let guard = rx.lock().unwrap();
-                    match guard.recv_timeout(std::time::Duration::from_millis(50)) {
-                        Ok(r) => r,
-                        Err(mpsc::RecvTimeoutError::Timeout) => {
-                            if stop.load(Ordering::SeqCst) {
-                                return;
-                            }
-                            continue;
-                        }
-                        Err(mpsc::RecvTimeoutError::Disconnected) => return,
-                    }
-                };
-                let queue_us = req.enqueued.elapsed().as_secs_f64() * 1e6;
-                let t0 = Instant::now();
-                let result = router.infer(&req.model, &req.input);
-                let infer_us = t0.elapsed().as_secs_f64() * 1e6;
-                metrics.record(&req.model, queue_us, infer_us, result.is_ok());
-                let _ = req.reply.send(result);
-            }
-        }));
-    }
-    ServerHandle { tx, stop, workers, metrics }
+    let workers = (0..cfg.workers.max(1))
+        .map(|_| spawn_worker(Arc::clone(&rx), Arc::clone(&router), Arc::clone(&stop), Arc::clone(&metrics)))
+        .collect();
+    ServerHandle { tx, stop, workers, metrics, default_deadline: cfg.default_deadline, queue_capacity }
+}
+
+/// Start the coordinator with `n_workers` threads over a router
+/// (default queue bound, no default deadline).
+pub fn serve(router: Arc<Router>, n_workers: usize) -> ServerHandle {
+    serve_with(router, ServeConfig { workers: n_workers, ..ServeConfig::default() })
 }
 
 /// Convenience: a coordinator over a single engine registered as `model`.
 pub fn serve_single(model: &str, engine: Arc<dyn InferenceEngine>, n_workers: usize) -> ServerHandle {
-    let mut router = Router::new();
+    let router = Router::new();
     router.register(model, engine);
     serve(Arc::new(router), n_workers)
+}
+
+/// Supervisor thread: runs the worker loop and respawns it (in-thread) if
+/// it ever unwinds, so one poisoned request cannot take the worker down.
+/// Per-request panics are already isolated in `handle_request`; this outer
+/// net catches everything else.
+fn spawn_worker(
+    rx: SharedRx,
+    router: Arc<Router>,
+    stop: Arc<AtomicBool>,
+    metrics: Arc<LatencyRecorder>,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            worker_loop(&rx, &router, &stop, &metrics);
+        }));
+        match result {
+            Ok(()) => return, // clean exit (stop flag or disconnect)
+            Err(payload) => {
+                ServeCounters::bump(&metrics.counters().worker_respawns);
+                eprintln!("[nncg] serving worker unwound ({}); respawning", panic_message(&*payload));
+            }
+        }
+    })
+}
+
+fn worker_loop(rx: &SharedRx, router: &Router, stop: &AtomicBool, metrics: &LatencyRecorder) {
+    loop {
+        let req = {
+            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
+            match guard.recv_timeout(Duration::from_millis(50)) {
+                Ok(r) => r,
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    continue;
+                }
+                // Senders gone and queue fully drained: exit.
+                Err(mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+        };
+        handle_request(req, router, metrics);
+    }
+}
+
+fn handle_request(req: Request, router: &Router, metrics: &LatencyRecorder) {
+    let Request { model, input, reply, enqueued, deadline } = req;
+    let guard = ReplyGuard::new(reply, &model);
+    let now = Instant::now();
+
+    // Shed stale frames before spending compute on them.
+    if let Some(dl) = deadline {
+        if now >= dl {
+            ServeCounters::bump(&metrics.counters().deadline_sheds);
+            let late_by_us = now.duration_since(dl).as_micros() as u64;
+            guard.send(Err(ServeError::DeadlineExceeded { model, late_by_us }));
+            return;
+        }
+    }
+
+    let queue_us = now.duration_since(enqueued).as_secs_f64() * 1e6;
+    let engine = match router.engine(&model) {
+        Ok(e) => e,
+        Err(_) => {
+            metrics.record(&model, queue_us, 0.0, false);
+            let registered = router.models();
+            guard.send(Err(ServeError::ModelUnknown { model, registered }));
+            return;
+        }
+    };
+
+    let t0 = Instant::now();
+    let outcome = catch_unwind(AssertUnwindSafe(|| engine.infer(&input)));
+    let infer_us = t0.elapsed().as_secs_f64() * 1e6;
+    match outcome {
+        Ok(Ok(y)) => {
+            metrics.record(&model, queue_us, infer_us, true);
+            guard.send(Ok(y));
+        }
+        Ok(Err(e)) => {
+            ServeCounters::bump(&metrics.counters().engine_failures);
+            metrics.record(&model, queue_us, infer_us, false);
+            guard.send(Err(ServeError::EngineFailed { model, reason: format!("{e:#}") }));
+        }
+        Err(payload) => {
+            ServeCounters::bump(&metrics.counters().engine_panics);
+            metrics.record(&model, queue_us, infer_us, false);
+            let reason = format!("engine panicked: {}", panic_message(&*payload));
+            guard.send(Err(ServeError::EngineFailed { model, reason }));
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::{FaultPlan, FaultSite, FaultSpec, FaultyEngine};
     use crate::graph::zoo;
     use crate::interp::InterpEngine;
     use crate::util::XorShift64;
@@ -156,7 +350,12 @@ mod tests {
     fn unknown_model_is_an_error_reply() {
         let h = serve_single("tiny", tiny_engine(), 1);
         let res = h.infer("nonexistent", Tensor::zeros(&[8, 8, 1]));
-        assert!(res.is_err());
+        match res {
+            Err(ServeError::ModelUnknown { registered, .. }) => {
+                assert_eq!(registered, vec!["tiny".to_string()]);
+            }
+            other => panic!("expected ModelUnknown, got {other:?}"),
+        }
         assert_eq!(h.metrics.snapshot().errors, 1);
         h.shutdown();
     }
@@ -176,5 +375,130 @@ mod tests {
     fn shutdown_joins_cleanly() {
         let h = serve_single("tiny", tiny_engine(), 3);
         h.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn expired_deadline_is_shed_with_typed_error() {
+        let h = serve_single("tiny", tiny_engine(), 1);
+        // Zero deadline: already expired by the time a worker dequeues it.
+        let res = h.infer_with_deadline("tiny", Tensor::zeros(&[8, 8, 1]), Some(Duration::ZERO));
+        match res {
+            Err(ServeError::DeadlineExceeded { model, .. }) => assert_eq!(model, "tiny"),
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        let snap = h.stop();
+        assert_eq!(snap.deadline_sheds, 1);
+        assert_eq!(snap.total_requests, 0, "shed requests don't pollute latency stats");
+    }
+
+    #[test]
+    fn engine_panic_yields_reply_and_worker_survives() {
+        let plan = FaultPlan::builder(11).site(FaultSite::EnginePanic, FaultSpec::First(1)).build();
+        let engine: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(tiny_engine(), plan));
+        let h = serve_single("tiny", engine, 1);
+        let res = h.infer("tiny", Tensor::zeros(&[8, 8, 1]));
+        match res {
+            Err(ServeError::EngineFailed { reason, .. }) => {
+                assert!(reason.contains("panicked"), "{reason}");
+            }
+            other => panic!("expected EngineFailed, got {other:?}"),
+        }
+        // Same worker keeps serving.
+        assert!(h.infer("tiny", Tensor::zeros(&[8, 8, 1])).is_ok());
+        let snap = h.stop();
+        assert_eq!(snap.engine_panics, 1);
+    }
+
+    #[test]
+    fn queue_full_sheds_at_submission() {
+        // No workers draining: park the single worker on a slow request
+        // first, then overfill the 2-slot queue.
+        let plan = FaultPlan::builder(12)
+            .site(FaultSite::LatencySpike, FaultSpec::Every(1))
+            .delay(Duration::from_millis(200))
+            .build();
+        let engine: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(tiny_engine(), plan));
+        let router = Router::new();
+        router.register("tiny", engine);
+        let h = serve_with(
+            Arc::new(router),
+            ServeConfig { workers: 1, queue_capacity: 2, default_deadline: None },
+        );
+        let mut receivers = vec![h.submit("tiny", Tensor::zeros(&[8, 8, 1]), None).unwrap()];
+        // Give the worker time to pull the first request off the queue.
+        std::thread::sleep(Duration::from_millis(50));
+        let mut shed = 0;
+        for _ in 0..4 {
+            match h.submit("tiny", Tensor::zeros(&[8, 8, 1]), None) {
+                Ok(rx) => receivers.push(rx),
+                Err(ServeError::QueueFull { capacity }) => {
+                    assert_eq!(capacity, 2);
+                    shed += 1;
+                }
+                Err(other) => panic!("unexpected {other:?}"),
+            }
+        }
+        assert!(shed >= 2, "at least 2 of 4 extra submissions must shed, got {shed}");
+        for rx in receivers {
+            assert!(rx.recv().unwrap().is_ok(), "accepted requests are all served");
+        }
+        let snap = h.stop();
+        assert_eq!(snap.queue_full_sheds, shed);
+    }
+
+    #[test]
+    fn stop_drains_queued_requests() {
+        let plan = FaultPlan::builder(13)
+            .site(FaultSite::LatencySpike, FaultSpec::Every(1))
+            .delay(Duration::from_millis(20))
+            .build();
+        let engine: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(tiny_engine(), plan));
+        let h = serve_single("tiny", engine, 1);
+        let receivers: Vec<_> =
+            (0..10).map(|_| h.submit("tiny", Tensor::zeros(&[8, 8, 1]), None).unwrap()).collect();
+        let snap = h.stop(); // drain-then-join
+        assert_eq!(snap.total_requests, 10, "stop() serves the backlog before joining");
+        for rx in receivers {
+            assert!(rx.recv().unwrap().is_ok(), "queued request answered after stop()");
+        }
+    }
+
+    #[test]
+    fn submit_after_stop_is_typed_stopped() {
+        let h = serve_single("tiny", tiny_engine(), 1);
+        let tx = h.tx.clone();
+        h.shutdown();
+        let (reply, _rx) = mpsc::channel();
+        let req = Request {
+            model: "tiny".into(),
+            input: Tensor::zeros(&[8, 8, 1]),
+            reply,
+            enqueued: Instant::now(),
+            deadline: None,
+        };
+        assert!(matches!(tx.try_send(req), Err(mpsc::TrySendError::Disconnected(_))));
+    }
+
+    #[test]
+    fn default_deadline_applies_to_plain_infer() {
+        let plan = FaultPlan::builder(14)
+            .site(FaultSite::LatencySpike, FaultSpec::Every(1))
+            .delay(Duration::from_millis(60))
+            .build();
+        let engine: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(tiny_engine(), plan));
+        let router = Router::new();
+        router.register("tiny", engine);
+        let h = serve_with(
+            Arc::new(router),
+            ServeConfig { workers: 1, queue_capacity: 8, default_deadline: Some(Duration::from_millis(25)) },
+        );
+        // First request occupies the worker for ~60ms; the second's 25ms
+        // default deadline expires while it waits in the queue.
+        let rx1 = h.submit("tiny", Tensor::zeros(&[8, 8, 1]), None).unwrap();
+        let res2 = h.infer("tiny", Tensor::zeros(&[8, 8, 1]));
+        assert!(matches!(res2, Err(ServeError::DeadlineExceeded { .. })), "{res2:?}");
+        assert!(rx1.recv().unwrap().is_ok());
+        let snap = h.stop();
+        assert_eq!(snap.deadline_sheds, 1);
     }
 }

@@ -4,31 +4,45 @@ use crate::runtime::InferenceEngine;
 use crate::tensor::Tensor;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 /// Maps model names to engines. Multiple names may share an engine, and a
 /// model can be re-registered to hot-swap backends (e.g. interp → generated
-/// C once compilation finishes).
+/// C once compilation finishes). The registry is interior-mutable so a
+/// background heal thread can swap engines on the same `Arc<Router>` the
+/// serving workers read from.
 #[derive(Default)]
 pub struct Router {
-    engines: HashMap<String, Arc<dyn InferenceEngine>>,
+    engines: RwLock<HashMap<String, Arc<dyn InferenceEngine>>>,
 }
 
 impl Router {
     pub fn new() -> Self {
-        Router { engines: HashMap::new() }
+        Router { engines: RwLock::new(HashMap::new()) }
     }
 
-    /// Register (or replace) a model's engine.
-    pub fn register(&mut self, model: &str, engine: Arc<dyn InferenceEngine>) {
-        self.engines.insert(model.to_string(), engine);
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, HashMap<String, Arc<dyn InferenceEngine>>> {
+        self.engines.read().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Register (or replace) a model's engine. Takes `&self`: hot-swapping
+    /// while workers are serving is the intended use.
+    pub fn register(&self, model: &str, engine: Arc<dyn InferenceEngine>) {
+        self.engines
+            .write()
+            .unwrap_or_else(|e| e.into_inner())
+            .insert(model.to_string(), engine);
     }
 
     pub fn engine(&self, model: &str) -> Result<Arc<dyn InferenceEngine>> {
-        self.engines
-            .get(model)
-            .cloned()
-            .ok_or_else(|| anyhow!("no engine registered for model {model:?} (have: {:?})", self.models()))
+        self.read().get(model).cloned().ok_or_else(|| {
+            let have = self.models();
+            if have.is_empty() {
+                anyhow!("no engine registered for model {model:?} (registry is empty)")
+            } else {
+                anyhow!("no engine registered for model {model:?} (registered: {})", have.join(", "))
+            }
+        })
     }
 
     /// Route one inference.
@@ -38,7 +52,7 @@ impl Router {
 
     /// Registered model names, sorted.
     pub fn models(&self) -> Vec<String> {
-        let mut names: Vec<String> = self.engines.keys().cloned().collect();
+        let mut names: Vec<String> = self.read().keys().cloned().collect();
         names.sort();
         names
     }
@@ -52,7 +66,7 @@ mod tests {
 
     #[test]
     fn register_and_route() {
-        let mut r = Router::new();
+        let r = Router::new();
         r.register("tiny", Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(1)).unwrap()));
         assert_eq!(r.models(), vec!["tiny"]);
         let y = r.infer("tiny", &Tensor::zeros(&[8, 8, 1])).unwrap();
@@ -62,7 +76,7 @@ mod tests {
 
     #[test]
     fn hot_swap_replaces_engine() {
-        let mut r = Router::new();
+        let r = Router::new();
         let a = Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(1)).unwrap());
         let b = Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(2)).unwrap());
         r.register("m", a);
@@ -70,5 +84,50 @@ mod tests {
         r.register("m", b);
         let y2 = r.infer("m", &Tensor::zeros(&[8, 8, 1])).unwrap();
         assert_ne!(y1, y2, "swapped engine should produce different outputs");
+    }
+
+    #[test]
+    fn unknown_model_error_lists_registered_names() {
+        let r = Router::new();
+        let empty = r.engine("ghost").unwrap_err().to_string();
+        assert!(empty.contains("registry is empty"), "{empty}");
+        r.register("ball", Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(1)).unwrap()));
+        r.register("tiny", Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(2)).unwrap()));
+        let msg = r.engine("ghost").unwrap_err().to_string();
+        assert!(msg.contains("ball") && msg.contains("tiny"), "{msg}");
+    }
+
+    #[test]
+    fn hot_swap_under_concurrent_infer() {
+        let r = Arc::new(Router::new());
+        let a = Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(1)).unwrap());
+        let b = Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(2)).unwrap());
+        let x = Tensor::zeros(&[8, 8, 1]);
+        let ref_a = a.infer(&x).unwrap();
+        let ref_b = b.infer(&x).unwrap();
+        r.register("m", a);
+
+        let callers: Vec<_> = (0..4)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                let x = x.clone();
+                std::thread::spawn(move || {
+                    (0..50).map(|_| r.infer("m", &x).unwrap()).collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        r.register("m", b);
+
+        for h in callers {
+            for y in h.join().unwrap() {
+                assert!(
+                    y == ref_a || y == ref_b,
+                    "every reply must come from exactly one coherent engine"
+                );
+            }
+        }
+        // After the swap the router serves only engine B.
+        assert_eq!(r.infer("m", &x).unwrap(), ref_b);
     }
 }

@@ -1,0 +1,435 @@
+//! Deterministic fault injection for the compile→load→serve pipeline.
+//!
+//! The paper's deployment story is a time-critical embedded vision loop
+//! (§I-A): a hung cross-compiler, a failed `dlopen`, or a crashing engine
+//! must degrade gracefully rather than wedge the frame loop. This module
+//! provides the *test half* of that story: a seeded [`FaultPlan`] that the
+//! `cc` and `coordinator` layers consult at their failure seams, so the
+//! chaos suite (`rust/tests/chaos_serving.rs`) can drive every recovery
+//! path deterministically.
+//!
+//! Design constraints:
+//!
+//! * **Zero-cost when off.** Production code holds an
+//!   `Option<Arc<FaultPlan>>` that is `None` unless explicitly built or
+//!   configured through the `NNCG_FAULTS` env var; the only overhead on the
+//!   hot path is one `Option` branch.
+//! * **Deterministic.** Count-based specs ([`FaultSpec::First`],
+//!   [`FaultSpec::Every`]) fire on exact hit numbers; probabilistic specs
+//!   draw from a per-site [`XorShift64`] stream seeded from
+//!   `(plan seed, site name)`, so one site's draws never perturb another's.
+//! * **Observable.** Per-site hit/fired counters let tests assert exactly
+//!   how many faults were injected.
+
+use crate::runtime::InferenceEngine;
+use crate::tensor::Tensor;
+use crate::util::{fxhash, XorShift64};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// A seam in the serving pipeline where a fault can be injected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// `cc::CcDriver`: the compiler invocation fails outright (transient).
+    CompileFail,
+    /// `cc::CcDriver`: the compiler hangs (replaced by a `sleep` child that
+    /// the wall-clock timeout machinery must kill).
+    CompileSlow,
+    /// `cc::CompiledCnn`: loading the compiled shared object fails.
+    DlopenFail,
+    /// `cc::ObjectCache`: a cached `.so` is corrupted on disk before the
+    /// validity check runs (simulates torn writes / bad flash).
+    CacheCorrupt,
+    /// `FaultyEngine`: the inference call panics.
+    EnginePanic,
+    /// `FaultyEngine`: the inference call returns an error.
+    EngineFail,
+    /// `FaultyEngine`: the inference call sleeps for the plan's delay.
+    LatencySpike,
+}
+
+/// All injectable sites, in stable order (indexes [`FaultPlan`] state).
+pub const ALL_SITES: [FaultSite; 7] = [
+    FaultSite::CompileFail,
+    FaultSite::CompileSlow,
+    FaultSite::DlopenFail,
+    FaultSite::CacheCorrupt,
+    FaultSite::EnginePanic,
+    FaultSite::EngineFail,
+    FaultSite::LatencySpike,
+];
+
+impl FaultSite {
+    fn idx(self) -> usize {
+        match self {
+            FaultSite::CompileFail => 0,
+            FaultSite::CompileSlow => 1,
+            FaultSite::DlopenFail => 2,
+            FaultSite::CacheCorrupt => 3,
+            FaultSite::EnginePanic => 4,
+            FaultSite::EngineFail => 5,
+            FaultSite::LatencySpike => 6,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::CompileFail => "compile-fail",
+            FaultSite::CompileSlow => "compile-slow",
+            FaultSite::DlopenFail => "dlopen-fail",
+            FaultSite::CacheCorrupt => "cache-corrupt",
+            FaultSite::EnginePanic => "engine-panic",
+            FaultSite::EngineFail => "engine-fail",
+            FaultSite::LatencySpike => "latency-spike",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<FaultSite> {
+        ALL_SITES.iter().copied().find(|site| site.name() == s)
+    }
+}
+
+/// When a site fires, relative to its own hit counter (first hit is 1).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultSpec {
+    /// Never fire (the default for every site).
+    Off,
+    /// Fire on the first `n` hits, then never again.
+    First(u64),
+    /// Fire on every `n`-th hit (`Every(1)` = always).
+    Every(u64),
+    /// Fire with probability `p` per hit, drawn from the site's seeded
+    /// stream.
+    Prob(f64),
+}
+
+impl FaultSpec {
+    fn fires(self, hit_no: u64, rng: &Mutex<XorShift64>) -> bool {
+        match self {
+            FaultSpec::Off => false,
+            FaultSpec::First(n) => hit_no <= n,
+            FaultSpec::Every(n) => n > 0 && hit_no % n == 0,
+            FaultSpec::Prob(p) => {
+                let mut rng = rng.lock().unwrap_or_else(|e| e.into_inner());
+                (rng.next_f32() as f64) < p
+            }
+        }
+    }
+
+    /// Parse `"first:3"`, `"every:4"`, `"prob:0.25"`, `"always"`, `"off"`.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        if s == "off" {
+            return Ok(FaultSpec::Off);
+        }
+        if s == "always" {
+            return Ok(FaultSpec::Every(1));
+        }
+        if let Some(n) = s.strip_prefix("first:") {
+            return match n.parse() {
+                Ok(n) => Ok(FaultSpec::First(n)),
+                Err(_) => bail!("bad fault spec {s:?}: first:<count>"),
+            };
+        }
+        if let Some(n) = s.strip_prefix("every:") {
+            return match n.parse() {
+                Ok(0) => bail!("bad fault spec {s:?}: every:<n> needs n >= 1"),
+                Ok(n) => Ok(FaultSpec::Every(n)),
+                Err(_) => bail!("bad fault spec {s:?}: every:<n>"),
+            };
+        }
+        if let Some(p) = s.strip_prefix("prob:") {
+            return match p.parse::<f64>() {
+                Ok(p) if (0.0..=1.0).contains(&p) => Ok(FaultSpec::Prob(p)),
+                _ => bail!("bad fault spec {s:?}: prob:<0..1>"),
+            };
+        }
+        bail!("bad fault spec {s:?} (off|always|first:<n>|every:<n>|prob:<p>)")
+    }
+}
+
+#[derive(Debug)]
+struct SiteState {
+    spec: FaultSpec,
+    hits: AtomicU64,
+    fired: AtomicU64,
+    rng: Mutex<XorShift64>,
+}
+
+/// A seeded, deterministic fault-injection plan shared across the pipeline.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    delay: Duration,
+    sites: Vec<SiteState>,
+}
+
+/// Builder for [`FaultPlan`]; see [`FaultPlan::builder`].
+pub struct FaultPlanBuilder {
+    seed: u64,
+    delay: Duration,
+    specs: Vec<(FaultSite, FaultSpec)>,
+}
+
+impl FaultPlanBuilder {
+    /// Set the spec for one site (later calls override earlier ones).
+    pub fn site(mut self, site: FaultSite, spec: FaultSpec) -> Self {
+        self.specs.push((site, spec));
+        self
+    }
+
+    /// Injected delay used by [`FaultSite::CompileSlow`] and
+    /// [`FaultSite::LatencySpike`] (default 50 ms).
+    pub fn delay(mut self, delay: Duration) -> Self {
+        self.delay = delay;
+        self
+    }
+
+    pub fn build(self) -> Arc<FaultPlan> {
+        let mut specs = [FaultSpec::Off; 7];
+        for (site, spec) in &self.specs {
+            specs[site.idx()] = *spec;
+        }
+        let sites = ALL_SITES
+            .iter()
+            .map(|site| SiteState {
+                spec: specs[site.idx()],
+                hits: AtomicU64::new(0),
+                fired: AtomicU64::new(0),
+                // Independent per-site stream: interleaving across sites
+                // cannot perturb any one site's draw sequence.
+                rng: Mutex::new(XorShift64::new(self.seed ^ fxhash::hash_str(site.name()))),
+            })
+            .collect();
+        Arc::new(FaultPlan { seed: self.seed, delay: self.delay, sites })
+    }
+}
+
+impl FaultPlan {
+    pub fn builder(seed: u64) -> FaultPlanBuilder {
+        FaultPlanBuilder { seed, delay: Duration::from_millis(50), specs: Vec::new() }
+    }
+
+    /// Parse a plan from a spec string, e.g.
+    /// `"seed=42,delay-ms=100,engine-panic=first:3,compile-fail=prob:0.5"`.
+    pub fn parse(spec: &str) -> Result<Arc<FaultPlan>> {
+        let mut b = FaultPlan::builder(1);
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = match part.split_once('=') {
+                Some(kv) => kv,
+                None => bail!("bad NNCG_FAULTS entry {part:?} (want key=value)"),
+            };
+            match key {
+                "seed" => match value.parse() {
+                    Ok(s) => b.seed = s,
+                    Err(_) => bail!("bad seed {value:?} in fault spec"),
+                },
+                "delay-ms" => match value.parse() {
+                    Ok(ms) => b.delay = Duration::from_millis(ms),
+                    Err(_) => bail!("bad delay-ms {value:?} in fault spec"),
+                },
+                site_name => match FaultSite::from_name(site_name) {
+                    Some(site) => b = b.site(site, FaultSpec::parse(value)?),
+                    None => bail!(
+                        "unknown fault site {site_name:?} (known: {})",
+                        ALL_SITES.iter().map(|s| s.name()).collect::<Vec<_>>().join(", ")
+                    ),
+                },
+            }
+        }
+        Ok(b.build())
+    }
+
+    /// Read a plan from `NNCG_FAULTS`; `Ok(None)` when unset or empty.
+    pub fn from_env() -> Result<Option<Arc<FaultPlan>>> {
+        match std::env::var("NNCG_FAULTS") {
+            Ok(spec) if !spec.trim().is_empty() => Ok(Some(FaultPlan::parse(&spec)?)),
+            _ => Ok(None),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Consult a site: counts the hit, decides per the site's spec, and
+    /// counts the fire. Sites configured `Off` never touch the counters.
+    pub fn should_fire(&self, site: FaultSite) -> bool {
+        let s = &self.sites[site.idx()];
+        if matches!(s.spec, FaultSpec::Off) {
+            return false;
+        }
+        let hit_no = s.hits.fetch_add(1, Ordering::SeqCst) + 1;
+        let fire = s.spec.fires(hit_no, &s.rng);
+        if fire {
+            s.fired.fetch_add(1, Ordering::SeqCst);
+        }
+        fire
+    }
+
+    /// Like [`FaultPlan::should_fire`] but returns the configured delay when
+    /// firing (for [`FaultSite::CompileSlow`] / [`FaultSite::LatencySpike`]).
+    pub fn maybe_delay(&self, site: FaultSite) -> Option<Duration> {
+        if self.should_fire(site) {
+            Some(self.delay)
+        } else {
+            None
+        }
+    }
+
+    /// Times a site was consulted (only counted for non-`Off` specs).
+    pub fn hits(&self, site: FaultSite) -> u64 {
+        self.sites[site.idx()].hits.load(Ordering::SeqCst)
+    }
+
+    /// Times a site actually fired.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.sites[site.idx()].fired.load(Ordering::SeqCst)
+    }
+
+    /// One-line summary for logs.
+    pub fn describe(&self) -> String {
+        let mut parts = vec![format!("seed={}", self.seed)];
+        for site in ALL_SITES {
+            let s = &self.sites[site.idx()];
+            if !matches!(s.spec, FaultSpec::Off) {
+                parts.push(format!("{}={:?}", site.name(), s.spec));
+            }
+        }
+        parts.join(",")
+    }
+}
+
+/// An [`InferenceEngine`] wrapper that injects engine-level faults (panics,
+/// errors, latency spikes) per a [`FaultPlan`]. Test/chaos harness only —
+/// production engines are never wrapped unless faults are configured.
+pub struct FaultyEngine {
+    inner: Arc<dyn InferenceEngine>,
+    plan: Arc<FaultPlan>,
+    label: String,
+}
+
+impl FaultyEngine {
+    pub fn new(inner: Arc<dyn InferenceEngine>, plan: Arc<FaultPlan>) -> Self {
+        let label = format!("faulty({})", inner.name());
+        FaultyEngine { inner, plan, label }
+    }
+
+    pub fn plan(&self) -> &Arc<FaultPlan> {
+        &self.plan
+    }
+}
+
+impl InferenceEngine for FaultyEngine {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn infer(&self, input: &Tensor) -> Result<Tensor> {
+        if let Some(d) = self.plan.maybe_delay(FaultSite::LatencySpike) {
+            std::thread::sleep(d);
+        }
+        if self.plan.should_fire(FaultSite::EnginePanic) {
+            panic!("injected engine panic ({})", self.label);
+        }
+        if self.plan.should_fire(FaultSite::EngineFail) {
+            bail!("injected engine failure ({})", self.label);
+        }
+        self.inner.infer(input)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_plan_never_fires_and_never_counts() {
+        let plan = FaultPlan::builder(1).build();
+        for _ in 0..10 {
+            assert!(!plan.should_fire(FaultSite::CompileFail));
+        }
+        assert_eq!(plan.hits(FaultSite::CompileFail), 0);
+        assert_eq!(plan.fired(FaultSite::CompileFail), 0);
+    }
+
+    #[test]
+    fn first_n_fires_exactly_n_times() {
+        let plan = FaultPlan::builder(1).site(FaultSite::EngineFail, FaultSpec::First(3)).build();
+        let fired: Vec<bool> = (0..6).map(|_| plan.should_fire(FaultSite::EngineFail)).collect();
+        assert_eq!(fired, vec![true, true, true, false, false, false]);
+        assert_eq!(plan.hits(FaultSite::EngineFail), 6);
+        assert_eq!(plan.fired(FaultSite::EngineFail), 3);
+    }
+
+    #[test]
+    fn every_n_fires_periodically() {
+        let plan = FaultPlan::builder(1).site(FaultSite::LatencySpike, FaultSpec::Every(3)).build();
+        let fired: Vec<bool> = (0..7).map(|_| plan.should_fire(FaultSite::LatencySpike)).collect();
+        assert_eq!(fired, vec![false, false, true, false, false, true, false]);
+    }
+
+    #[test]
+    fn prob_is_deterministic_per_seed_and_site() {
+        let a = FaultPlan::builder(42).site(FaultSite::EnginePanic, FaultSpec::Prob(0.5)).build();
+        let b = FaultPlan::builder(42).site(FaultSite::EnginePanic, FaultSpec::Prob(0.5)).build();
+        let fa: Vec<bool> = (0..64).map(|_| a.should_fire(FaultSite::EnginePanic)).collect();
+        let fb: Vec<bool> = (0..64).map(|_| b.should_fire(FaultSite::EnginePanic)).collect();
+        assert_eq!(fa, fb);
+        assert!(fa.iter().any(|&f| f) && fa.iter().any(|&f| !f), "p=0.5 over 64 draws");
+        // A different seed gives a different pattern.
+        let c = FaultPlan::builder(43).site(FaultSite::EnginePanic, FaultSpec::Prob(0.5)).build();
+        let fc: Vec<bool> = (0..64).map(|_| c.should_fire(FaultSite::EnginePanic)).collect();
+        assert_ne!(fa, fc);
+    }
+
+    #[test]
+    fn parse_spec_strings() {
+        let plan = FaultPlan::parse("seed=9,delay-ms=5,engine-panic=first:2,compile-fail=always").unwrap();
+        assert_eq!(plan.seed(), 9);
+        assert!(plan.should_fire(FaultSite::CompileFail));
+        assert!(plan.should_fire(FaultSite::EnginePanic));
+        assert!(plan.should_fire(FaultSite::EnginePanic));
+        assert!(!plan.should_fire(FaultSite::EnginePanic));
+        assert_eq!(plan.maybe_delay(FaultSite::LatencySpike), None);
+
+        assert!(FaultPlan::parse("bogus-site=always").is_err());
+        assert!(FaultPlan::parse("engine-panic=sometimes").is_err());
+        assert!(FaultPlan::parse("seed=x").is_err());
+        assert!(FaultPlan::parse("engine-panic").is_err());
+        assert!(FaultSpec::parse("prob:1.5").is_err());
+        assert!(FaultSpec::parse("every:0").is_err());
+    }
+
+    #[test]
+    fn site_names_round_trip() {
+        for site in ALL_SITES {
+            assert_eq!(FaultSite::from_name(site.name()), Some(site));
+        }
+        assert_eq!(FaultSite::from_name("meteor-strike"), None);
+    }
+
+    #[test]
+    fn faulty_engine_injects_panics_errors_and_delays() {
+        use crate::graph::zoo;
+        use crate::interp::InterpEngine;
+
+        let inner: Arc<dyn InferenceEngine> =
+            Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(3)).unwrap());
+        let plan = FaultPlan::builder(7)
+            .site(FaultSite::EngineFail, FaultSpec::First(1))
+            .site(FaultSite::EnginePanic, FaultSpec::First(0)) // counted but off
+            .build();
+        let eng = FaultyEngine::new(Arc::clone(&inner), plan.clone());
+        let x = Tensor::zeros(&[8, 8, 1]);
+        assert!(eng.infer(&x).is_err(), "first call fails by injection");
+        assert!(eng.infer(&x).is_ok(), "second call passes through");
+        assert_eq!(plan.fired(FaultSite::EngineFail), 1);
+
+        let plan = FaultPlan::builder(7).site(FaultSite::EnginePanic, FaultSpec::First(1)).build();
+        let eng = FaultyEngine::new(inner, plan);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| eng.infer(&x)));
+        assert!(r.is_err(), "injected panic must unwind");
+    }
+}

@@ -22,6 +22,7 @@ pub mod cli;
 pub mod codegen;
 pub mod coordinator;
 pub mod experiments;
+pub mod faults;
 pub mod graph;
 pub mod interp;
 pub mod model;

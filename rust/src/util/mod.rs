@@ -16,6 +16,17 @@ pub fn fmt_us(us: f64) -> String {
     }
 }
 
+/// Best-effort human-readable message from a `catch_unwind` payload.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Integer ceiling division.
 #[inline]
 pub fn div_ceil(a: usize, b: usize) -> usize {
@@ -53,6 +64,16 @@ mod tests {
         assert_eq!(fmt_us(2.1), "2.10\u{b5}s");
         assert_eq!(fmt_us(135.7), "135.7\u{b5}s");
         assert_eq!(fmt_us(5630.0), "5630\u{b5}s");
+    }
+
+    #[test]
+    fn panic_message_extracts_payloads() {
+        let p = std::panic::catch_unwind(|| panic!("boom")).unwrap_err();
+        assert_eq!(panic_message(&*p), "boom");
+        let p = std::panic::catch_unwind(|| panic!("boom {}", 7)).unwrap_err();
+        assert_eq!(panic_message(&*p), "boom 7");
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(42i32)).unwrap_err();
+        assert_eq!(panic_message(&*p), "non-string panic payload");
     }
 
     #[test]

@@ -1,0 +1,325 @@
+//! Deterministic chaos suite for the fault-tolerant serving layer.
+//!
+//! Every scenario runs under a seeded `FaultPlan` (`NNCG_CHAOS_SEED`
+//! selects the seed; CI runs a fixed 3-seed matrix) and asserts the
+//! acceptance criteria of the robustness layer:
+//!
+//! * **exactly one reply** per submitted request, under injected panics,
+//!   failures, latency storms, and load shedding;
+//! * **bit-identical fallback**: degraded replies equal the interpreter
+//!   reference exactly;
+//! * **breaker transitions** closed → open → half-open → closed;
+//! * **full recovery**: after faults stop, the native generated-C engine is
+//!   (re-)registered and serves again.
+//!
+//! The compile-pipeline scenarios use the real host compiler: injected
+//! hangs are a `sleep` child the wall-clock timeout must actually kill.
+
+use nncg::cc::{CcDriver, CompileLimits, CompileStats, CompiledCnn};
+use nncg::codegen::CodegenOptions;
+use nncg::coordinator::{
+    serve_with, BreakerConfig, BreakerState, FallbackEngine, Router, ServeConfig, ServeError,
+};
+use nncg::faults::{FaultPlan, FaultSite, FaultSpec, FaultyEngine};
+use nncg::graph::zoo;
+use nncg::interp::InterpEngine;
+use nncg::runtime::InferenceEngine;
+use nncg::tensor::Tensor;
+use nncg::util::XorShift64;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Seed for this run's fault plans (CI matrix: 1, 2, 3).
+fn chaos_seed() -> u64 {
+    std::env::var("NNCG_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+fn interp_engine(weight_seed: u64) -> Arc<dyn InferenceEngine> {
+    Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(weight_seed)).unwrap())
+}
+
+fn workdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("nncg-chaos-{tag}-seed{}", chaos_seed()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Acceptance: every submitted request receives exactly one reply while
+/// panics, failures, and latency spikes batter the engine — then the
+/// healthy engine is re-registered and throughput fully recovers.
+#[test]
+fn exactly_one_reply_under_chaos_then_recovery() {
+    let plan = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::EnginePanic, FaultSpec::Prob(0.25))
+        .site(FaultSite::EngineFail, FaultSpec::Prob(0.2))
+        .site(FaultSite::LatencySpike, FaultSpec::Every(7))
+        .delay(Duration::from_millis(2))
+        .build();
+    let chaotic: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(interp_engine(3), plan));
+    let router = Arc::new(Router::new());
+    router.register("tiny", chaotic);
+    let handle = serve_with(
+        Arc::clone(&router),
+        ServeConfig { workers: 2, queue_capacity: 64, default_deadline: None },
+    );
+
+    let mut rng = XorShift64::new(chaos_seed());
+    let total = 200usize;
+    let mut outcomes = 0usize;
+    let mut receivers = Vec::new();
+    for _ in 0..total {
+        let x = Tensor::rand(&[8, 8, 1], 0.0, 1.0, &mut rng);
+        match handle.submit("tiny", x, None) {
+            Ok(rx) => receivers.push(rx),
+            // A typed shed at submission *is* this request's one reply.
+            Err(ServeError::QueueFull { .. }) => outcomes += 1,
+            Err(other) => panic!("unexpected submission error: {other:?}"),
+        }
+    }
+    for rx in receivers {
+        // recv_timeout: a lost reply must fail the test, not hang it.
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("reply lost");
+        match reply {
+            Ok(y) => assert_eq!(y.dims(), &[2, 2, 2]),
+            Err(ServeError::EngineFailed { .. }) => {}
+            Err(other) => panic!("unexpected reply error: {other:?}"),
+        }
+        outcomes += 1;
+    }
+    assert_eq!(outcomes, total, "exactly one outcome per submission");
+
+    // Recovery: swap in a healthy engine; a burst must be fully correct.
+    let healthy = interp_engine(3);
+    let x = Tensor::zeros(&[8, 8, 1]);
+    let reference = healthy.infer(&x).unwrap();
+    router.register("tiny", healthy);
+    let outs = handle.infer_burst("tiny", vec![x.clone(); 20]).unwrap();
+    assert_eq!(outs.len(), 20);
+    for y in outs {
+        assert_eq!(y, reference, "post-fault replies are bit-identical to the healthy engine");
+    }
+    let snap = handle.stop();
+    assert!(snap.engine_panics + snap.engine_failures > 0, "the plan must have actually bitten");
+    assert_eq!(snap.worker_respawns, 0, "per-request isolation keeps workers alive");
+}
+
+/// Acceptance: degraded replies are bit-identical to the interpreter
+/// reference, and the breaker walks closed → open → half-open → closed.
+#[test]
+fn fallback_is_bit_identical_and_breaker_walks_the_full_cycle() {
+    let plan = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::EngineFail, FaultSpec::First(3))
+        .build();
+    let primary: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(interp_engine(10), plan));
+    let fallback = interp_engine(11);
+    let router = Arc::new(Router::new());
+    let handle = serve_with(Arc::clone(&router), ServeConfig::default());
+    let wrapped = Arc::new(
+        FallbackEngine::new(
+            primary,
+            Arc::clone(&fallback),
+            BreakerConfig { failure_threshold: 3, cooldown: Duration::from_millis(250) },
+        )
+        .with_counters(Arc::clone(handle.metrics.counters())),
+    );
+    router.register("tiny", Arc::clone(&wrapped) as Arc<dyn InferenceEngine>);
+
+    let x = Tensor::zeros(&[8, 8, 1]);
+    let fallback_ref = fallback.infer(&x).unwrap();
+    let primary_ref = interp_engine(10).infer(&x).unwrap();
+    assert_ne!(fallback_ref, primary_ref, "distinct weights so we can tell who served");
+
+    assert_eq!(wrapped.breaker().state(), BreakerState::Closed);
+    // Three failing calls: all served by the fallback, bit-identical.
+    for i in 0..3 {
+        let y = handle.infer("tiny", x.clone()).unwrap();
+        assert_eq!(y, fallback_ref, "degraded reply {i} must equal the interpreter exactly");
+    }
+    assert_eq!(wrapped.breaker().state(), BreakerState::Open, "threshold 3 reached");
+    // While open (cooldown not elapsed): still the fallback, primary untouched.
+    let y = handle.infer("tiny", x.clone()).unwrap();
+    assert_eq!(y, fallback_ref);
+    assert_eq!(wrapped.breaker().state(), BreakerState::Open);
+
+    // After the cooldown a half-open probe is admitted; the fault plan is
+    // exhausted (First(3)), so the probe succeeds and the breaker closes.
+    std::thread::sleep(Duration::from_millis(300));
+    let y = handle.infer("tiny", x.clone()).unwrap();
+    assert_eq!(y, primary_ref, "successful probe reply comes from the primary");
+    assert_eq!(wrapped.breaker().state(), BreakerState::Closed);
+
+    let snap = handle.stop();
+    assert_eq!(snap.breaker_opens, 1);
+    assert_eq!(snap.breaker_half_opens, 1);
+    assert_eq!(snap.breaker_closes, 1);
+    assert_eq!(snap.fallback_served, 4);
+    assert_eq!(snap.degraded, 0, "the fallback itself never failed");
+}
+
+/// Deadlines shed stale frames; the bounded queue sheds overload — both
+/// with typed errors, and accepted requests still all get served.
+#[test]
+fn deadline_and_queue_shedding_are_typed_and_lossless() {
+    let plan = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::LatencySpike, FaultSpec::Every(1))
+        .delay(Duration::from_millis(40))
+        .build();
+    let slow: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(interp_engine(3), plan));
+    let router = Arc::new(Router::new());
+    router.register("tiny", slow);
+    let handle = serve_with(
+        Arc::clone(&router),
+        ServeConfig { workers: 1, queue_capacity: 2, default_deadline: None },
+    );
+
+    let x = || Tensor::zeros(&[8, 8, 1]);
+    // r1 occupies the worker (~40ms); give it time to be dequeued.
+    let r1 = handle.submit("tiny", x(), None).unwrap();
+    std::thread::sleep(Duration::from_millis(15));
+    // r2 waits in the queue with a 5ms deadline — expired by dequeue time.
+    let r2 = handle.submit("tiny", x(), Some(Duration::from_millis(5))).unwrap();
+    let r3 = handle.submit("tiny", x(), None).unwrap();
+    // Queue (capacity 2) now holds r2+r3: further submissions shed.
+    let mut queue_sheds = 0;
+    for _ in 0..2 {
+        match handle.submit("tiny", x(), None) {
+            Err(ServeError::QueueFull { capacity: 2 }) => queue_sheds += 1,
+            other => panic!("expected QueueFull, got {other:?}"),
+        }
+    }
+    assert!(r1.recv_timeout(Duration::from_secs(10)).unwrap().is_ok());
+    match r2.recv_timeout(Duration::from_secs(10)).unwrap() {
+        Err(ServeError::DeadlineExceeded { model, late_by_us }) => {
+            assert_eq!(model, "tiny");
+            assert!(late_by_us > 0);
+        }
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert!(r3.recv_timeout(Duration::from_secs(10)).unwrap().is_ok());
+
+    let snap = handle.stop();
+    assert_eq!(snap.deadline_sheds, 1);
+    assert_eq!(snap.queue_full_sheds, queue_sheds);
+    assert_eq!(snap.total_requests, 2, "only r1 and r3 consumed compute");
+}
+
+/// Acceptance (compile pipeline): injected transient failure, then a hung
+/// compiler the wall-clock timeout must kill, then the real compiler
+/// succeeds — and a later cache hit survives injected corruption.
+#[test]
+fn compile_timeout_retry_and_cache_corruption_heal() {
+    let plan = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::CompileFail, FaultSpec::First(1))
+        .site(FaultSite::CompileSlow, FaultSpec::First(1))
+        .site(FaultSite::CacheCorrupt, FaultSpec::First(1))
+        .delay(Duration::from_secs(30))
+        .build();
+    let driver = CcDriver::detect()
+        .unwrap()
+        .with_faults(Arc::clone(&plan))
+        .with_limits(CompileLimits {
+            timeout: Duration::from_millis(200),
+            max_retries: 3,
+            backoff_base: Duration::from_millis(1),
+        });
+
+    let model = zoo::tiny_test_net().with_random_weights(1234);
+    let opts = CodegenOptions::general();
+    let dir = workdir("compile");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Attempt 1: injected transient failure. Attempt 2: sleep-child hang,
+    // killed at 200ms. Attempt 3: the real compiler.
+    let t0 = std::time::Instant::now();
+    let cnn = CompiledCnn::build_with(&model, &opts, &dir, &driver).unwrap();
+    assert!(t0.elapsed() < Duration::from_secs(20), "hung compile must be killed, not awaited");
+    let stats = driver.stats();
+    assert_eq!(CompileStats::get(&stats.attempts), 3);
+    assert_eq!(CompileStats::get(&stats.retries), 2);
+    assert_eq!(CompileStats::get(&stats.timeouts), 1);
+    assert_eq!(CompileStats::get(&stats.failures), 0);
+
+    let x = Tensor::zeros(&[8, 8, 1]);
+    let reference = nncg::interp::run(&model, &x).unwrap();
+    let y = cnn.infer(&x).unwrap();
+    assert!(reference.max_abs_diff(&y).unwrap() < 1e-5);
+
+    // Cache hit path: injected corruption is detected and recompiled.
+    let cnn2 = CompiledCnn::build_with(&model, &opts, &dir, &driver).unwrap();
+    assert_eq!(plan.fired(FaultSite::CacheCorrupt), 1, "corruption must have been injected");
+    assert_eq!(CompileStats::get(&stats.attempts), 4, "corrupted object forces one recompile");
+    let y2 = cnn2.infer(&x).unwrap();
+    assert!(reference.max_abs_diff(&y2).unwrap() < 1e-5);
+}
+
+/// Acceptance (full story): dlopen failure at startup degrades to the
+/// interpreter; a background heal rebuilds the native engine and hot-swaps
+/// it via `Router::register`; post-fault traffic runs on generated C.
+#[test]
+fn dlopen_failure_degrades_then_heals_to_native_engine() {
+    let plan = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::DlopenFail, FaultSpec::First(1))
+        .build();
+    let driver =
+        Arc::new(CcDriver::detect().unwrap().with_faults(Arc::clone(&plan)));
+    let model = zoo::tiny_test_net().with_random_weights(77);
+    let opts = CodegenOptions::general();
+    let dir = workdir("dlopen");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Startup: the native build fails at the dlopen seam.
+    let err = CompiledCnn::build_with(&model, &opts, &dir, &driver).unwrap_err();
+    assert!(format!("{err:#}").contains("dlopen"), "{err:#}");
+
+    // Degrade: serve from the interpreter while unhealthy.
+    let interp: Arc<dyn InferenceEngine> = Arc::new(InterpEngine::new(model.clone()).unwrap());
+    let router = Arc::new(Router::new());
+    router.register("tiny", Arc::clone(&interp));
+    let handle = serve_with(Arc::clone(&router), ServeConfig::default());
+    let x = Tensor::zeros(&[8, 8, 1]);
+    let reference = interp.infer(&x).unwrap();
+    assert_eq!(handle.infer("tiny", x.clone()).unwrap(), reference);
+    assert_eq!(router.engine("tiny").unwrap().name(), "interp");
+
+    // Heal in the background: the fault is exhausted, the rebuild succeeds,
+    // and the native engine hot-swaps in through the same Router.
+    let heal = {
+        let router = Arc::clone(&router);
+        let model = model.clone();
+        let driver = Arc::clone(&driver);
+        let dir = dir.clone();
+        std::thread::spawn(move || {
+            let native = CompiledCnn::build_with(&model, &opts, &dir, &driver)?;
+            router.register("tiny", Arc::new(native));
+            anyhow::Result::<()>::Ok(())
+        })
+    };
+    heal.join().unwrap().unwrap();
+    assert_eq!(router.engine("tiny").unwrap().name(), "tiny", "native engine re-registered");
+
+    // Recovered: served by generated C, numerically equal to the interpreter.
+    let y = handle.infer("tiny", x.clone()).unwrap();
+    assert!(reference.max_abs_diff(&y).unwrap() < 1e-5);
+    let snap = handle.stop();
+    assert_eq!(snap.errors, 0, "no request was lost or failed across the heal");
+}
+
+/// A fault plan is deterministic for a given seed: two identical serving
+/// runs produce identical injection sequences and identical counters.
+#[test]
+fn chaos_runs_are_reproducible_per_seed() {
+    let run = || {
+        let plan = FaultPlan::builder(chaos_seed())
+            .site(FaultSite::EngineFail, FaultSpec::Prob(0.3))
+            .build();
+        let eng = FaultyEngine::new(interp_engine(3), Arc::clone(&plan));
+        let x = Tensor::zeros(&[8, 8, 1]);
+        let pattern: Vec<bool> = (0..64).map(|_| eng.infer(&x).is_ok()).collect();
+        (pattern, plan.fired(FaultSite::EngineFail))
+    };
+    let (pat_a, fired_a) = run();
+    let (pat_b, fired_b) = run();
+    assert_eq!(pat_a, pat_b, "same seed, same injection sequence");
+    assert_eq!(fired_a, fired_b);
+    assert!(fired_a > 0, "p=0.3 over 64 calls must fire");
+}
