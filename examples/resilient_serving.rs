@@ -13,7 +13,8 @@
 //! ```
 
 use nncg::coordinator::{
-    serve_with, BreakerConfig, FallbackEngine, Router, ServeConfig, ServeError,
+    serve_sharded, serve_with, BreakerConfig, FallbackEngine, Router, ServeConfig, ServeError,
+    ShardConfig,
 };
 use nncg::faults::{FaultPlan, FaultSite, FaultSpec, FaultyEngine};
 use nncg::graph::zoo;
@@ -104,5 +105,65 @@ fn main() -> anyhow::Result<()> {
         snap.deadline_sheds,
         snap.errors
     );
+
+    // ---- Sharded pool: the `nncg serve --shards 4 --steal on` shape ----
+    //
+    // Each shard owns its queue, batcher, supervisor, and breaker; a
+    // model's traffic has a stable home shard, idle shards steal the
+    // oldest half of a backlogged peer's queue (front-of-queue, so order
+    // is preserved), and a shard can be drained and restarted under live
+    // traffic without dropping an accepted request.
+    println!("phase 4: sharded pool — stealing, live drain, per-shard counters");
+    let router = Arc::new(Router::new());
+    router.register(
+        "ball",
+        Arc::new(InterpEngine::new(model.clone())?) as Arc<dyn InferenceEngine>,
+    );
+    let sharded = serve_sharded(
+        Arc::clone(&router),
+        ShardConfig { shards: 4, steal: true, ..ShardConfig::default() },
+    );
+    let home = sharded.home_shard("ball");
+    println!("  {} shards; \"ball\" homes on shard {home}", sharded.shards());
+
+    // Burst traffic while recycling the home shard mid-stream: routing
+    // steers around the draining shard and stealing keeps latency flat.
+    let mut pending = Vec::new();
+    for i in 0..200 {
+        pending.push(sharded.submit("ball", x.clone(), None).map_err(anyhow::Error::from)?);
+        if i == 40 {
+            assert!(sharded.recycle_shard(home), "home shard must accept a recycle");
+            println!("  recycled shard {home} under live traffic");
+        }
+    }
+    let mut ok = 0usize;
+    for rx in pending {
+        if rx.recv().expect("exactly one reply per accepted request").is_ok() {
+            ok += 1;
+        }
+    }
+    println!("  burst: {ok}/200 served after a mid-stream shard restart");
+
+    let snap = sharded.stop();
+    println!(
+        "  pool: steals={} ejects/probes/readmits={}/{}/{} drains={} stopped-replies={}",
+        snap.steals,
+        snap.shard_ejects,
+        snap.shard_probes,
+        snap.shard_readmits,
+        snap.shard_drains,
+        snap.stopped_replies
+    );
+    for s in &snap.shards {
+        println!(
+            "  shard {}: handled={} failed={} stolen-from={} stolen-by={} respawns={} drains={}",
+            s.idx, s.handled, s.failed, s.stolen_from, s.stolen_by, s.respawns, s.drains
+        );
+    }
+    if let Some(sick) = snap.sickest_shard() {
+        println!("  sickest shard: {} (score {})", sick.idx, sick.sickness());
+    } else {
+        println!("  no sick shards");
+    }
     Ok(())
 }

@@ -1,0 +1,349 @@
+//! Million-request load + chaos benchmark for the sharded coordinator.
+//!
+//! Drives `NNCG_LOAD_REQUESTS` (default 1 000 000) requests across the
+//! three paper models — ball ~90%, pedestrian ~8%, robot ~2% — from
+//! `NNCG_LOAD_CLIENTS` submitter threads with a bounded in-flight window
+//! each, against a `NNCG_LOAD_SHARDS`-shard pool with work stealing on.
+//! Engines are the real generated-C builds when the host has a C
+//! compiler, interpreter engines otherwise.
+//!
+//! While the load runs, a chaos driver (disable with
+//! `NNCG_LOAD_CHAOS=off`) injects seeded shard kills and steal-race
+//! delays via `FaultPlan`, recycles shards under live traffic, and runs
+//! background heal rebuilds through the `HealPipeline`.
+//!
+//! The benchmark **gates** on exactly-one-reply accounting —
+//! `submitted == replied_ok + replied_err + shed` and `lost == 0` — and
+//! exits non-zero on any violation (CI runs a 10⁴-request smoke with the
+//! gate only; perf numbers are informational). Results are written to
+//! `BENCH_serving.json`: sustained req/s plus client-side p50/p99/p999.
+
+use nncg::cc::{CcDriver, CompiledCnn};
+use nncg::codegen::CodegenOptions;
+use nncg::coordinator::{
+    home_shard, serve_sharded, BreakerConfig, HealPipeline, LatencyHisto, Router, ServeError,
+    ShardConfig,
+};
+use nncg::faults::{FaultPlan, FaultSite, FaultSpec};
+use nncg::graph::zoo;
+use nncg::interp::InterpEngine;
+use nncg::model::json::Value;
+use nncg::runtime::InferenceEngine;
+use nncg::tensor::Tensor;
+use nncg::util::XorShift64;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.trim().parse().ok()).unwrap_or(default)
+}
+
+/// Per-client accounting; summed into the global gate.
+#[derive(Default)]
+struct ClientTally {
+    submitted: u64,
+    shed: u64,
+    replied_ok: u64,
+    replied_err: u64,
+    /// Receiver closed without any reply — must stay zero.
+    lost: u64,
+}
+
+type Pending = VecDeque<(Instant, std::sync::mpsc::Receiver<nncg::coordinator::ServeResult>)>;
+
+/// Wait out the oldest in-flight request and account for its reply.
+fn settle(inflight: &mut Pending, tally: &mut ClientTally, histo: &mut LatencyHisto) {
+    if let Some((t, rx)) = inflight.pop_front() {
+        match rx.recv() {
+            Ok(Ok(_)) => {
+                tally.replied_ok += 1;
+                histo.record_us(t.elapsed().as_secs_f64() * 1e6);
+            }
+            Ok(Err(_)) => {
+                tally.replied_err += 1;
+                histo.record_us(t.elapsed().as_secs_f64() * 1e6);
+            }
+            Err(_) => tally.lost += 1,
+        }
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("NNCG_BENCH_QUICK").is_ok();
+    let requests = env_usize("NNCG_LOAD_REQUESTS", if quick { 20_000 } else { 1_000_000 });
+    let shards = env_usize("NNCG_LOAD_SHARDS", 4).max(1);
+    let clients = env_usize("NNCG_LOAD_CLIENTS", 4).max(1);
+    let window = env_usize("NNCG_LOAD_WINDOW", 256).max(1);
+    let chaos = !matches!(std::env::var("NNCG_LOAD_CHAOS").as_deref(), Ok("off") | Ok("0"));
+    let seed = env_usize("NNCG_CHAOS_SEED", 1) as u64;
+
+    // The three paper models; generated-C engines when a compiler exists.
+    let specs = [
+        ("ball", zoo::ball_classifier().with_random_weights(11)),
+        ("pedestrian", zoo::pedestrian_classifier().with_random_weights(12)),
+        ("robot", zoo::robot_detector().with_random_weights(13)),
+    ];
+    let have_cc = CcDriver::detect().is_ok();
+    let router = Arc::new(Router::new());
+    let mut engine_kinds = Vec::new();
+    let mut input_dims: Vec<Vec<usize>> = Vec::new();
+    for (name, model) in &specs {
+        input_dims.push(model.input.dims().to_vec());
+        let engine: Arc<dyn InferenceEngine> = if have_cc {
+            let dir = std::env::temp_dir().join("nncg-load-serving");
+            std::fs::create_dir_all(&dir)?;
+            match CompiledCnn::build(model, &CodegenOptions::sse3(), &dir) {
+                Ok(cnn) => {
+                    engine_kinds.push((name.to_string(), "generated-c".to_string()));
+                    Arc::new(cnn)
+                }
+                Err(e) => {
+                    eprintln!("[load] {name}: compile failed ({e:#}); using interpreter");
+                    engine_kinds.push((name.to_string(), "interp".to_string()));
+                    Arc::new(InterpEngine::new(model.clone())?)
+                }
+            }
+        } else {
+            engine_kinds.push((name.to_string(), "interp".to_string()));
+            Arc::new(InterpEngine::new(model.clone())?)
+        };
+        router.register(name, engine);
+    }
+
+    // Seeded chaos at the shard seams: rare worker kills (the queue
+    // survives and is stolen) and steal-race delays.
+    let plan = if chaos {
+        Some(
+            FaultPlan::builder(seed)
+                .site(FaultSite::ShardKill, FaultSpec::Prob(0.0005))
+                .site(FaultSite::StealRace, FaultSpec::Every(97))
+                .delay(Duration::from_millis(1))
+                .build(),
+        )
+    } else {
+        None
+    };
+
+    let handle = serve_sharded(
+        Arc::clone(&router),
+        ShardConfig {
+            shards,
+            workers_per_shard: env_usize("NNCG_LOAD_WORKERS", 1).max(1),
+            queue_capacity: 8192,
+            steal: true,
+            breaker: BreakerConfig { failure_threshold: 16, cooldown: Duration::from_millis(50) },
+            faults: plan,
+            ..ShardConfig::default()
+        },
+    );
+    let heal = Arc::new(
+        HealPipeline::new(Arc::clone(&router)).with_counters(Arc::clone(handle.metrics.counters())),
+    );
+
+    println!(
+        "load_serving: {requests} requests, {shards} shards, {clients} clients, window {window}, \
+         chaos {}, engines {:?}",
+        if chaos { "on" } else { "off" },
+        engine_kinds
+    );
+
+    // Chaos driver: recycle shards and heal models while the load runs.
+    let done = Arc::new(AtomicBool::new(false));
+    // (Shard recycles need `&handle`, which is single-owner, so the main
+    // thread drives those below; this thread drives the heal pipeline.)
+    let chaos_thread = if chaos {
+        let done = Arc::clone(&done);
+        let heal = Arc::clone(&heal);
+        let heal_models: Vec<(String, nncg::graph::Model)> =
+            specs.iter().map(|(n, m)| (n.to_string(), m.clone())).collect();
+        Some(std::thread::spawn(move || {
+            let mut i = 0usize;
+            while !done.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(400));
+                if done.load(Ordering::SeqCst) {
+                    break;
+                }
+                // Background heal of a rotating model: rebuild + hot-swap.
+                let (name, model) = &heal_models[i % heal_models.len()];
+                let m = model.clone();
+                heal.request_rebuild(name, move || {
+                    Ok(Arc::new(InterpEngine::new(m)?) as Arc<dyn InferenceEngine>)
+                });
+                i += 1;
+            }
+            heal.wait_idle()
+        }))
+    } else {
+        None
+    };
+
+    // Client load threads.
+    let t0 = Instant::now();
+    let per_client = requests / clients;
+    let remainder = requests - per_client * clients;
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let n = per_client + if c == 0 { remainder } else { 0 };
+        let submitter = handle.submitter();
+        let dims = input_dims.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut rng = XorShift64::new(seed.wrapping_mul(1_000_003).wrapping_add(c as u64 + 1));
+            // One pre-built input per model: the benchmark measures the
+            // serving path, not tensor generation.
+            let inputs: Vec<Tensor> =
+                dims.iter().map(|d| Tensor::rand(d, 0.0, 1.0, &mut rng)).collect();
+            let names = ["ball", "pedestrian", "robot"];
+            let mut tally = ClientTally::default();
+            let mut histo = LatencyHisto::new();
+            let mut inflight: Pending = VecDeque::with_capacity(window);
+            for _ in 0..n {
+                // Paper mix: ball-heavy embedded vision loop.
+                let pick = match rng.below(100) {
+                    0..=89 => 0,
+                    90..=97 => 1,
+                    _ => 2,
+                };
+                tally.submitted += 1;
+                match submitter.submit(names[pick], inputs[pick].clone(), None) {
+                    Ok(rx) => {
+                        inflight.push_back((Instant::now(), rx));
+                        if inflight.len() >= window {
+                            settle(&mut inflight, &mut tally, &mut histo);
+                        }
+                    }
+                    Err(ServeError::QueueFull { .. }) => tally.shed += 1,
+                    Err(e) => {
+                        eprintln!("[load] unexpected submission error: {e:?}");
+                        tally.lost += 1;
+                    }
+                }
+            }
+            while !inflight.is_empty() {
+                settle(&mut inflight, &mut tally, &mut histo);
+            }
+            (tally, histo)
+        }));
+    }
+
+    // Drive shard recycles from the main thread while clients run (the
+    // handle is single-owner): a rolling drain/restart across the pool.
+    let mut recycles = 0usize;
+    if chaos {
+        let ball_home = home_shard("ball", shards);
+        while joins.iter().any(|j| !j.is_finished()) {
+            std::thread::sleep(Duration::from_millis(300));
+            if joins.iter().all(|j| j.is_finished()) {
+                break;
+            }
+            let idx = (ball_home + recycles) % shards;
+            if handle.recycle_shard(idx) {
+                recycles += 1;
+            }
+            if recycles >= shards * 2 {
+                break; // two full rolling restarts is plenty of chaos
+            }
+        }
+    }
+
+    let mut total = ClientTally::default();
+    let mut histo = LatencyHisto::new();
+    for j in joins {
+        let (t, h) = j.join().expect("client thread must not panic");
+        total.submitted += t.submitted;
+        total.shed += t.shed;
+        total.replied_ok += t.replied_ok;
+        total.replied_err += t.replied_err;
+        total.lost += t.lost;
+        histo.merge(&h);
+    }
+    done.store(true, Ordering::SeqCst);
+    let heals_done = chaos_thread.map(|t| t.join().unwrap_or(0)).unwrap_or(0);
+    let elapsed = t0.elapsed().as_secs_f64();
+    let snap = handle.stop();
+
+    let replied = total.replied_ok + total.replied_err;
+    let req_per_s = replied as f64 / elapsed.max(1e-9);
+    println!(
+        "submitted={} replied_ok={} replied_err={} shed={} lost={} in {:.2}s ({:.0} req/s)",
+        total.submitted, total.replied_ok, total.replied_err, total.shed, total.lost, elapsed, req_per_s
+    );
+    println!(
+        "latency: mean={:.0}us p50<{:.0}us p99<{:.0}us p999<{:.0}us (client-side, n={})",
+        histo.mean_us(),
+        histo.quantile_us(0.50),
+        histo.quantile_us(0.99),
+        histo.quantile_us(0.999),
+        histo.count()
+    );
+    println!(
+        "chaos: steals={} respawns={} ejects={} probes={} readmits={} drains={} heals={}/{} recycles={}",
+        snap.steals,
+        snap.worker_respawns,
+        snap.shard_ejects,
+        snap.shard_probes,
+        snap.shard_readmits,
+        snap.shard_drains,
+        snap.heals_succeeded,
+        heals_done,
+        recycles
+    );
+    for s in &snap.shards {
+        println!(
+            "  shard {}: handled={} failed={} stolen-from={} stolen-by={} respawns={}",
+            s.idx, s.handled, s.failed, s.stolen_from, s.stolen_by, s.respawns
+        );
+    }
+
+    // Exactly-one-reply accounting gate.
+    let mut gate_ok = true;
+    if total.lost != 0 {
+        eprintln!("GATE FAIL: {} requests lost (receiver closed without a reply)", total.lost);
+        gate_ok = false;
+    }
+    if total.submitted != replied + total.shed {
+        eprintln!(
+            "GATE FAIL: submitted {} != replied {} + shed {}",
+            total.submitted, replied, total.shed
+        );
+        gate_ok = false;
+    }
+
+    let doc = Value::Object(vec![
+        ("bench".to_string(), Value::Str("load_serving".to_string())),
+        ("source".to_string(), Value::Str("measured".to_string())),
+        ("requests".to_string(), Value::Num(total.submitted as f64)),
+        ("shards".to_string(), Value::Num(shards as f64)),
+        ("clients".to_string(), Value::Num(clients as f64)),
+        ("chaos".to_string(), Value::Bool(chaos)),
+        (
+            "engines".to_string(),
+            Value::Object(
+                engine_kinds.iter().map(|(m, k)| (m.clone(), Value::Str(k.clone()))).collect(),
+            ),
+        ),
+        ("elapsed_s".to_string(), Value::Num((elapsed * 1000.0).round() / 1000.0)),
+        ("req_per_s".to_string(), Value::Num(req_per_s.round())),
+        ("latency_mean_us".to_string(), Value::Num(histo.mean_us().round())),
+        ("latency_p50_us".to_string(), Value::Num(histo.quantile_us(0.50).round())),
+        ("latency_p99_us".to_string(), Value::Num(histo.quantile_us(0.99).round())),
+        ("latency_p999_us".to_string(), Value::Num(histo.quantile_us(0.999).round())),
+        ("replied_ok".to_string(), Value::Num(total.replied_ok as f64)),
+        ("replied_err".to_string(), Value::Num(total.replied_err as f64)),
+        ("shed".to_string(), Value::Num(total.shed as f64)),
+        ("lost".to_string(), Value::Num(total.lost as f64)),
+        ("steals".to_string(), Value::Num(snap.steals as f64)),
+        ("worker_respawns".to_string(), Value::Num(snap.worker_respawns as f64)),
+        ("shard_drains".to_string(), Value::Num(snap.shard_drains as f64)),
+        ("heals_succeeded".to_string(), Value::Num(snap.heals_succeeded as f64)),
+        ("accounting_gate".to_string(), Value::Bool(gate_ok)),
+    ]);
+    std::fs::write("BENCH_serving.json", doc.to_json() + "\n")?;
+    println!("wrote BENCH_serving.json (gate {})", if gate_ok { "OK" } else { "FAIL" });
+
+    if !gate_ok {
+        std::process::exit(1);
+    }
+    Ok(())
+}

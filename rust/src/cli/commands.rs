@@ -150,9 +150,10 @@ pub fn bench(args: &Args) -> Result<i32> {
 pub fn serve(args: &Args) -> Result<i32> {
     // End-to-end robot-soccer serving loop: synthetic frames → ball
     // candidates → classification via the coordinator, with the robustness
-    // layer exposed: --deadline-ms (shed stale patches), --queue-cap,
-    // --fallback (circuit-breaker interp fallback), --faults SPEC (or
-    // NNCG_FAULTS) for chaos drills.
+    // layer exposed: --shards N (per-model shard pools), --steal on|off
+    // (work stealing between idle and backlogged shards), --deadline-ms
+    // (shed stale patches), --queue-cap, --fallback (circuit-breaker
+    // interp fallback), --faults SPEC (or NNCG_FAULTS) for chaos drills.
     let model = load_model("ball", &weights_dir(args))?;
     let kind = EngineKind::from_name(args.get_or("engine", "nncg")).unwrap_or(EngineKind::Nncg);
     let artifacts = args.get("artifacts").map(PathBuf::from).unwrap_or_else(experiments::default_artifacts_dir);
@@ -171,15 +172,19 @@ pub fn serve(args: &Args) -> Result<i32> {
         0 => None,
         ms => Some(std::time::Duration::from_millis(ms as u64)),
     };
-    let cfg = coordinator::ServeConfig {
-        workers: args.get_usize("workers", 1)?,
+    let cfg = coordinator::ShardConfig {
+        shards: args.get_usize("shards", 1)?.max(1),
+        workers_per_shard: args.get_usize("workers", 1)?.max(1),
         queue_capacity: args.get_usize("queue-cap", 1024)?,
         default_deadline: deadline,
+        steal: !matches!(args.get_or("steal", "on"), "off" | "0" | "false"),
+        faults: faults.clone(),
+        ..coordinator::ShardConfig::default()
     };
     // Start the coordinator over an empty router first so the fallback
     // wrapper can share the recorder's counters, then register.
     let router = std::sync::Arc::new(coordinator::Router::new());
-    let handle = coordinator::serve_with(std::sync::Arc::clone(&router), cfg);
+    let handle = coordinator::serve_sharded(std::sync::Arc::clone(&router), cfg);
     if args.has_flag("fallback") {
         let interp: std::sync::Arc<dyn crate::runtime::InferenceEngine> =
             std::sync::Arc::new(crate::interp::InterpEngine::new(model.clone())?);
@@ -227,8 +232,11 @@ pub fn serve(args: &Args) -> Result<i32> {
         total_s,
         frames as f64 / total_s
     );
-    for (model, q_mean, i_mean, p50, p99, n) in &snap.models {
-        println!("model={model} n={n} queue_mean={q_mean:.1}us infer_mean={i_mean:.1}us p50<{p50:.0}us p99<{p99:.0}us");
+    for m in &snap.models {
+        println!(
+            "model={} n={} queue_mean={:.1}us infer_mean={:.1}us p50<{:.0}us p99<{:.0}us p999<{:.0}us",
+            m.model, m.n, m.queue_mean_us, m.infer_mean_us, m.p50_us, m.p99_us, m.p999_us
+        );
     }
     println!(
         "sheds: deadline={} queue-full={} | failures: engine={} panics={} degraded={} | fallback-served={} | breaker: open={} half-open={} closed={} | respawns={}",
@@ -243,6 +251,24 @@ pub fn serve(args: &Args) -> Result<i32> {
         snap.breaker_closes,
         snap.worker_respawns
     );
+    println!(
+        "shards: steals={} ejects={} probes={} readmits={} drains={} stopped={}",
+        snap.steals,
+        snap.shard_ejects,
+        snap.shard_probes,
+        snap.shard_readmits,
+        snap.shard_drains,
+        snap.stopped_replies
+    );
+    for s in &snap.shards {
+        println!(
+            "  shard {}: handled={} failed={} stolen-from={} stolen-by={} respawns={} ejects={} readmits={} drains={}",
+            s.idx, s.handled, s.failed, s.stolen_from, s.stolen_by, s.respawns, s.ejects, s.readmits, s.drains
+        );
+    }
+    if let Some(s) = snap.sickest_shard() {
+        println!("  sickest shard: {} (sickness score {})", s.idx, s.sickness());
+    }
     Ok(0)
 }
 

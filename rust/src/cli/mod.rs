@@ -6,7 +6,7 @@
 //! nncg verify   --model ball [--trials 5]
 //! nncg run      --model ball --engine nncg|interp|xla
 //! nncg bench    --table 4|5|6|7|gpu
-//! nncg serve    --model ball --frames 50
+//! nncg serve    --model ball --frames 50 [--shards 4 --steal on|off]
 //! nncg platforms
 //! nncg export-figures [fig1|fig2|fig3|all]
 //! ```
@@ -63,8 +63,10 @@ COMMANDS:
   run             classify one synthetic input (--model, --engine nncg|interp|xla,
                   --artifacts DIR for xla)
   bench           reproduce a paper table (--table 4|5|6|7|gpu, --quick)
-  serve           run the serving coordinator over synthetic frames
-                  (--model ball, --frames N, --engine ...)
+  serve           run the sharded serving coordinator over synthetic frames
+                  (--model ball, --frames N, --engine ..., --shards N,
+                  --steal on|off, --workers N, --queue-cap N, --deadline-ms N,
+                  --fallback, --faults SPEC)
   platforms       print the simulated platform models and predictions
   export-figures  write Fig. 1-3 sample images (--out DIR)
 

@@ -49,6 +49,21 @@ pub enum BreakerState {
     HalfOpen,
 }
 
+/// State transitions a breaker reports to its observer. Emitted inside the
+/// breaker's own lock, so observers see exact transition counts even under
+/// concurrency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerEvent {
+    /// Closed→open or half-open→open.
+    Opened,
+    /// Open→half-open: a probe was admitted.
+    HalfOpened,
+    /// Half-open→closed: the probe succeeded.
+    Closed,
+}
+
+type BreakerObserver = Box<dyn Fn(BreakerEvent) + Send + Sync>;
+
 enum St {
     Closed { fails: u32 },
     Open { since: Instant },
@@ -60,21 +75,38 @@ enum St {
 pub struct CircuitBreaker {
     cfg: BreakerConfig,
     st: Mutex<St>,
-    counters: Option<Arc<ServeCounters>>,
+    observer: Option<BreakerObserver>,
 }
 
 impl CircuitBreaker {
     pub fn new(cfg: BreakerConfig) -> Self {
-        CircuitBreaker { cfg, st: Mutex::new(St::Closed { fails: 0 }), counters: None }
+        CircuitBreaker { cfg, st: Mutex::new(St::Closed { fails: 0 }), observer: None }
     }
 
+    /// Report transitions to an arbitrary observer. Engine-level breakers
+    /// map events to the `breaker_*` counters (see
+    /// [`CircuitBreaker::set_counters`]); shard-level breakers map them to
+    /// `shard_ejects`/`shard_probes`/`shard_readmits` instead, so the two
+    /// layers stay separately observable.
+    pub fn set_observer(&mut self, observer: BreakerObserver) {
+        self.observer = Some(observer);
+    }
+
+    /// Engine-level counter wiring: transitions bump
+    /// `breaker_opens`/`breaker_half_opens`/`breaker_closes`.
     pub fn set_counters(&mut self, counters: Arc<ServeCounters>) {
-        self.counters = Some(counters);
+        self.set_observer(Box::new(move |ev| {
+            ServeCounters::bump(match ev {
+                BreakerEvent::Opened => &counters.breaker_opens,
+                BreakerEvent::HalfOpened => &counters.breaker_half_opens,
+                BreakerEvent::Closed => &counters.breaker_closes,
+            });
+        }));
     }
 
-    fn bump(&self, pick: impl Fn(&ServeCounters) -> &AtomicU64) {
-        if let Some(c) = &self.counters {
-            ServeCounters::bump(pick(c));
+    fn emit(&self, ev: BreakerEvent) {
+        if let Some(obs) = &self.observer {
+            obs(ev);
         }
     }
 
@@ -101,7 +133,7 @@ impl CircuitBreaker {
             St::Open { since } => {
                 if since.elapsed() >= self.cfg.cooldown {
                     *st = St::HalfOpen { probe_started: Instant::now() };
-                    self.bump(|c| &c.breaker_half_opens);
+                    self.emit(BreakerEvent::HalfOpened);
                     true
                 } else {
                     false
@@ -126,7 +158,7 @@ impl CircuitBreaker {
             St::Closed { .. } => *st = St::Closed { fails: 0 },
             St::HalfOpen { .. } => {
                 *st = St::Closed { fails: 0 };
-                self.bump(|c| &c.breaker_closes);
+                self.emit(BreakerEvent::Closed);
             }
             // A call admitted while closed can resolve after the breaker
             // opened; ignore the stale result so Open stays observable.
@@ -142,14 +174,14 @@ impl CircuitBreaker {
                 let fails = fails + 1;
                 if fails >= self.cfg.failure_threshold {
                     *st = St::Open { since: Instant::now() };
-                    self.bump(|c| &c.breaker_opens);
+                    self.emit(BreakerEvent::Opened);
                 } else {
                     *st = St::Closed { fails };
                 }
             }
             St::HalfOpen { .. } => {
                 *st = St::Open { since: Instant::now() };
-                self.bump(|c| &c.breaker_opens);
+                self.emit(BreakerEvent::Opened);
             }
             St::Open { .. } => {}
         }
@@ -158,7 +190,7 @@ impl CircuitBreaker {
     /// Force-open (ops/testing).
     pub fn trip(&self) {
         *self.lock() = St::Open { since: Instant::now() };
-        self.bump(|c| &c.breaker_opens);
+        self.emit(BreakerEvent::Opened);
     }
 
     /// Reset to closed (called after a heal swap).
@@ -290,6 +322,97 @@ impl InferenceEngine for FallbackEngine {
     }
 }
 
+/// Per-model background compilation pipeline: each model gets at most one
+/// async rebuild slot. A rebuild runs a caller-supplied build closure
+/// (typically `CcDriver::compile` under `CompileLimits`, wrapped in
+/// `CompiledCnn::build_with`) off the request path and hot-swaps the result
+/// into the shared [`super::Router`] via `register` on success — the
+/// serving workers pick the healed engine up on their next lookup without
+/// ever blocking on the compile.
+pub struct HealPipeline {
+    router: Arc<super::Router>,
+    slots: Mutex<std::collections::HashMap<String, std::thread::JoinHandle<bool>>>,
+    counters: Option<Arc<ServeCounters>>,
+}
+
+impl HealPipeline {
+    pub fn new(router: Arc<super::Router>) -> Self {
+        HealPipeline { router, slots: Mutex::new(std::collections::HashMap::new()), counters: None }
+    }
+
+    /// Wire shared serving counters (`heals_started/succeeded/failed`).
+    pub fn with_counters(mut self, counters: Arc<ServeCounters>) -> Self {
+        self.counters = Some(counters);
+        self
+    }
+
+    fn bump(&self, pick: impl Fn(&ServeCounters) -> &AtomicU64) {
+        if let Some(c) = &self.counters {
+            ServeCounters::bump(pick(c));
+        }
+    }
+
+    fn lock_slots(
+        &self,
+    ) -> std::sync::MutexGuard<'_, std::collections::HashMap<String, std::thread::JoinHandle<bool>>>
+    {
+        self.slots.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Request an async rebuild of `model`. Returns `false` without
+    /// spawning when a rebuild for this model is already in flight (the
+    /// single rebuild slot); `true` when a rebuild was started. On build
+    /// success the fresh engine replaces the model's entry in the router.
+    pub fn request_rebuild<F>(&self, model: &str, build: F) -> bool
+    where
+        F: FnOnce() -> Result<Arc<dyn InferenceEngine>> + Send + 'static,
+    {
+        let mut slots = self.lock_slots();
+        if let Some(h) = slots.get(model) {
+            if !h.is_finished() {
+                return false;
+            }
+            let _ = slots.remove(model).map(|h| h.join());
+        }
+        self.bump(|c| &c.heals_started);
+        let router = Arc::clone(&self.router);
+        let counters = self.counters.clone();
+        let name = model.to_string();
+        let handle = std::thread::spawn(move || match build() {
+            Ok(engine) => {
+                router.register(&name, engine);
+                if let Some(c) = &counters {
+                    ServeCounters::bump(&c.heals_succeeded);
+                }
+                true
+            }
+            Err(e) => {
+                eprintln!("[nncg] heal rebuild for model {name:?} failed: {e:#}");
+                if let Some(c) = &counters {
+                    ServeCounters::bump(&c.heals_failed);
+                }
+                false
+            }
+        });
+        slots.insert(model.to_string(), handle);
+        true
+    }
+
+    /// Number of rebuilds currently in flight.
+    pub fn in_flight(&self) -> usize {
+        self.lock_slots().values().filter(|h| !h.is_finished()).count()
+    }
+
+    /// Join every outstanding rebuild; returns how many succeeded.
+    pub fn wait_idle(&self) -> usize {
+        let handles: Vec<_> = {
+            let mut slots = self.lock_slots();
+            slots.drain().map(|(_, h)| h).collect()
+        };
+        handles.into_iter().map(|h| h.join().unwrap_or(false)).filter(|&ok| ok).count()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -400,6 +523,73 @@ mod tests {
         let err = fe.infer(&Tensor::zeros(&[8, 8, 1])).unwrap_err();
         assert!(format!("{err:#}").contains("degraded"), "{err:#}");
         assert_eq!(counters.degraded.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn breaker_observer_sees_exact_transitions() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let opened = Arc::new(AtomicU64::new(0));
+        let mut b = CircuitBreaker::new(zero_cooldown(1));
+        let o = Arc::clone(&opened);
+        b.set_observer(Box::new(move |ev| {
+            if ev == BreakerEvent::Opened {
+                o.fetch_add(1, Ordering::Relaxed);
+            }
+        }));
+        b.on_failure();
+        assert_eq!(opened.load(Ordering::Relaxed), 1);
+        assert!(b.allow(), "zero cooldown admits a probe");
+        b.on_failure();
+        assert_eq!(opened.load(Ordering::Relaxed), 2, "failed probe re-opens");
+    }
+
+    #[test]
+    fn heal_pipeline_single_slot_and_hot_swap() {
+        use std::sync::atomic::Ordering;
+        let router = Arc::new(crate::coordinator::Router::new());
+        router.register("tiny", interp(1));
+        let counters = Arc::new(ServeCounters::default());
+        let heal = HealPipeline::new(Arc::clone(&router)).with_counters(Arc::clone(&counters));
+
+        // A slow rebuild occupies the model's single slot.
+        let started = heal.request_rebuild("tiny", || {
+            std::thread::sleep(Duration::from_millis(40));
+            Ok(interp(2))
+        });
+        assert!(started);
+        assert!(
+            !heal.request_rebuild("tiny", || Ok(interp(3))),
+            "second rebuild for the same model must be rejected while one is in flight"
+        );
+        // A different model gets its own slot.
+        router.register("other", interp(4));
+        assert!(heal.request_rebuild("other", || Ok(interp(5))));
+        assert_eq!(heal.wait_idle(), 2);
+        assert_eq!(counters.heals_started.load(Ordering::Relaxed), 2);
+        assert_eq!(counters.heals_succeeded.load(Ordering::Relaxed), 2);
+
+        // The slot is free again after completion, and the router now
+        // serves the rebuilt engine.
+        let x = Tensor::zeros(&[8, 8, 1]);
+        let rebuilt_ref = interp(2).infer(&x).unwrap();
+        assert_eq!(router.infer("tiny", &x).unwrap(), rebuilt_ref, "hot-swap took effect");
+        assert!(heal.request_rebuild("tiny", || Ok(interp(6))));
+        heal.wait_idle();
+    }
+
+    #[test]
+    fn heal_pipeline_counts_failures() {
+        use std::sync::atomic::Ordering;
+        let router = Arc::new(crate::coordinator::Router::new());
+        router.register("tiny", interp(1));
+        let counters = Arc::new(ServeCounters::default());
+        let heal = HealPipeline::new(Arc::clone(&router)).with_counters(Arc::clone(&counters));
+        let x = Tensor::zeros(&[8, 8, 1]);
+        let before = router.infer("tiny", &x).unwrap();
+        assert!(heal.request_rebuild("tiny", || anyhow::bail!("compiler exploded")));
+        assert_eq!(heal.wait_idle(), 0);
+        assert_eq!(counters.heals_failed.load(Ordering::Relaxed), 1);
+        assert_eq!(router.infer("tiny", &x).unwrap(), before, "failed heal leaves the engine alone");
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! Request latency metrics: lock-free-ish counters + log-bucketed
 //! histograms (no external metrics crates offline), plus the robustness
 //! counters (sheds, panics, fallback, breaker transitions) added for the
-//! fault-tolerant serving layer.
+//! fault-tolerant serving layer and the per-shard breakdown added for the
+//! sharded coordinator.
 
 use crate::cc::CompileStats;
 use std::collections::HashMap;
@@ -53,6 +54,50 @@ impl Histo {
             self.sum_us / self.n as f64
         }
     }
+
+    fn merge(&mut self, other: &Histo) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.sum_us += other.sum_us;
+        self.n += other.n;
+    }
+}
+
+/// Public log-bucketed latency histogram for client-side measurement (the
+/// load benchmark records end-to-end latency per submitter thread and
+/// merges). Same buckets and quantile semantics (upper bound of the
+/// containing power-of-two bucket) as the coordinator's internal histograms.
+#[derive(Default)]
+pub struct LatencyHisto {
+    inner: Histo,
+}
+
+impl LatencyHisto {
+    pub fn new() -> Self {
+        LatencyHisto::default()
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.inner.record(us);
+    }
+
+    /// Quantile in µs (bucket upper bound); `q` in (0, 1].
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        self.inner.quantile(q)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        self.inner.mean()
+    }
+
+    pub fn count(&self) -> u64 {
+        self.inner.n
+    }
+
+    pub fn merge(&mut self, other: &LatencyHisto) {
+        self.inner.merge(&other.inner);
+    }
 }
 
 /// Robustness counters shared by the worker loop, the circuit-breaker
@@ -75,18 +120,94 @@ pub struct ServeCounters {
     pub fallback_served: AtomicU64,
     /// Requests where primary *and* fallback failed.
     pub degraded: AtomicU64,
-    /// Circuit-breaker closed→open (and half-open→open) transitions.
+    /// Circuit-breaker closed→open (and half-open→open) transitions
+    /// (engine-level breakers, i.e. [`super::FallbackEngine`]).
     pub breaker_opens: AtomicU64,
-    /// Circuit-breaker open→half-open probe admissions.
+    /// Circuit-breaker open→half-open probe admissions (engine-level).
     pub breaker_half_opens: AtomicU64,
-    /// Circuit-breaker half-open→closed recoveries.
+    /// Circuit-breaker half-open→closed recoveries (engine-level).
     pub breaker_closes: AtomicU64,
+    /// Requests stolen from a backlogged shard's queue by an idle peer.
+    pub steals: AtomicU64,
+    /// Shard-level breaker opens: a sick shard ejected from routing.
+    pub shard_ejects: AtomicU64,
+    /// Shard-level breaker half-open probe admissions.
+    pub shard_probes: AtomicU64,
+    /// Shard-level breaker closes: a probed shard re-admitted to routing.
+    pub shard_readmits: AtomicU64,
+    /// Graceful shard drain/restart cycles completed.
+    pub shard_drains: AtomicU64,
+    /// Requests still queued when a shutdown deadline fired, answered with
+    /// `ServeError::Stopped` instead of being dropped.
+    pub stopped_replies: AtomicU64,
+    /// Background heal rebuilds started / succeeded / failed.
+    pub heals_started: AtomicU64,
+    pub heals_succeeded: AtomicU64,
+    pub heals_failed: AtomicU64,
 }
 
 impl ServeCounters {
     pub fn bump(field: &AtomicU64) {
         field.fetch_add(1, Ordering::Relaxed);
     }
+}
+
+/// Per-shard health/throughput stats, owned by the shard pool and attached
+/// to the recorder so snapshots can report a per-shard breakdown.
+#[derive(Debug, Default)]
+pub struct ShardStats {
+    /// Requests this shard's workers completed (served or error reply).
+    pub handled: AtomicU64,
+    /// Of those, requests whose engine failed or panicked.
+    pub failed: AtomicU64,
+    /// Requests stolen *from* this shard's queue by other shards.
+    pub stolen_from: AtomicU64,
+    /// Requests this shard's workers stole from other shards.
+    pub stolen_by: AtomicU64,
+    /// Worker respawns on this shard (supervisor caught an unwind).
+    pub respawns: AtomicU64,
+    /// Shard breaker ejections / re-admissions.
+    pub ejects: AtomicU64,
+    pub readmits: AtomicU64,
+    /// Drain/restart cycles.
+    pub drains: AtomicU64,
+    /// Current queue depth (maintained by the shard's queue).
+    pub queue_len: AtomicU64,
+}
+
+/// Immutable per-shard view inside a [`MetricsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct ShardSnapshot {
+    pub idx: usize,
+    pub handled: u64,
+    pub failed: u64,
+    pub stolen_from: u64,
+    pub stolen_by: u64,
+    pub respawns: u64,
+    pub ejects: u64,
+    pub readmits: u64,
+    pub drains: u64,
+    pub queue_len: u64,
+}
+
+impl ShardSnapshot {
+    /// Sickness score used to pick the "sickest shard" in reports: failures
+    /// and respawns dominate, unresolved ejections break ties.
+    pub fn sickness(&self) -> u64 {
+        self.failed + self.respawns * 4 + self.ejects.saturating_sub(self.readmits) * 16
+    }
+}
+
+/// Per-model latency statistics inside a [`MetricsSnapshot`].
+#[derive(Debug, Clone)]
+pub struct ModelStats {
+    pub model: String,
+    pub queue_mean_us: f64,
+    pub infer_mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub p999_us: f64,
+    pub n: u64,
 }
 
 /// Concurrent latency recorder shared by workers.
@@ -96,6 +217,7 @@ pub struct LatencyRecorder {
     counters: Arc<ServeCounters>,
     per_model: Mutex<HashMap<String, (Histo, Histo)>>, // (queue, infer)
     compile_stats: Mutex<Option<Arc<CompileStats>>>,
+    shard_stats: Mutex<Vec<Arc<ShardStats>>>,
 }
 
 /// Immutable snapshot for reporting.
@@ -103,8 +225,11 @@ pub struct LatencyRecorder {
 pub struct MetricsSnapshot {
     pub total_requests: u64,
     pub errors: u64,
-    /// model → (mean queue µs, mean infer µs, p50 infer µs, p99 infer µs, n)
-    pub models: Vec<(String, f64, f64, f64, f64, u64)>,
+    /// Per-model latency breakdown, sorted by model name.
+    pub models: Vec<ModelStats>,
+    /// Per-shard breakdown (empty when no shard stats were attached,
+    /// e.g. for a recorder used outside a shard pool).
+    pub shards: Vec<ShardSnapshot>,
     // Robustness counters (see [`ServeCounters`] for semantics).
     pub deadline_sheds: u64,
     pub queue_full_sheds: u64,
@@ -116,10 +241,29 @@ pub struct MetricsSnapshot {
     pub breaker_opens: u64,
     pub breaker_half_opens: u64,
     pub breaker_closes: u64,
+    pub steals: u64,
+    pub shard_ejects: u64,
+    pub shard_probes: u64,
+    pub shard_readmits: u64,
+    pub shard_drains: u64,
+    pub stopped_replies: u64,
+    pub heals_started: u64,
+    pub heals_succeeded: u64,
+    pub heals_failed: u64,
     /// Compile-pipeline retry/timeout counts, if a [`CompileStats`] was
     /// attached (e.g. by a healing recompile path).
     pub compile_retries: u64,
     pub compile_timeouts: u64,
+}
+
+impl MetricsSnapshot {
+    /// The shard with the worst sickness score, if any shard has one > 0.
+    pub fn sickest_shard(&self) -> Option<&ShardSnapshot> {
+        self.shards
+            .iter()
+            .max_by_key(|s| s.sickness())
+            .filter(|s| s.sickness() > 0)
+    }
 }
 
 impl LatencyRecorder {
@@ -130,6 +274,7 @@ impl LatencyRecorder {
             counters: Arc::new(ServeCounters::default()),
             per_model: Mutex::new(HashMap::new()),
             compile_stats: Mutex::new(None),
+            shard_stats: Mutex::new(Vec::new()),
         }
     }
 
@@ -142,6 +287,12 @@ impl LatencyRecorder {
     /// Surface a compile pipeline's retry/timeout stats in snapshots.
     pub fn attach_compile_stats(&self, stats: Arc<CompileStats>) {
         *self.compile_stats.lock().unwrap_or_else(|e| e.into_inner()) = Some(stats);
+    }
+
+    /// Surface per-shard stats (one entry per shard, in shard order) in
+    /// snapshots. Called once by the shard pool at startup.
+    pub fn attach_shard_stats(&self, stats: Vec<Arc<ShardStats>>) {
+        *self.shard_stats.lock().unwrap_or_else(|e| e.into_inner()) = stats;
     }
 
     pub fn record(&self, model: &str, queue_us: f64, infer_us: f64, ok: bool) {
@@ -157,11 +308,38 @@ impl LatencyRecorder {
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let map = self.per_model.lock().unwrap_or_else(|e| e.into_inner());
-        let mut models: Vec<_> = map
+        let mut models: Vec<ModelStats> = map
             .iter()
-            .map(|(name, (q, i))| (name.clone(), q.mean(), i.mean(), i.quantile(0.5), i.quantile(0.99), i.n))
+            .map(|(name, (q, i))| ModelStats {
+                model: name.clone(),
+                queue_mean_us: q.mean(),
+                infer_mean_us: i.mean(),
+                p50_us: i.quantile(0.5),
+                p99_us: i.quantile(0.99),
+                p999_us: i.quantile(0.999),
+                n: i.n,
+            })
             .collect();
-        models.sort_by(|a, b| a.0.cmp(&b.0));
+        models.sort_by(|a, b| a.model.cmp(&b.model));
+        let shards: Vec<ShardSnapshot> = self
+            .shard_stats
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .enumerate()
+            .map(|(idx, s)| ShardSnapshot {
+                idx,
+                handled: s.handled.load(Ordering::Relaxed),
+                failed: s.failed.load(Ordering::Relaxed),
+                stolen_from: s.stolen_from.load(Ordering::Relaxed),
+                stolen_by: s.stolen_by.load(Ordering::Relaxed),
+                respawns: s.respawns.load(Ordering::Relaxed),
+                ejects: s.ejects.load(Ordering::Relaxed),
+                readmits: s.readmits.load(Ordering::Relaxed),
+                drains: s.drains.load(Ordering::Relaxed),
+                queue_len: s.queue_len.load(Ordering::Relaxed),
+            })
+            .collect();
         let c = &self.counters;
         let (compile_retries, compile_timeouts) = match &*self.compile_stats.lock().unwrap_or_else(|e| e.into_inner()) {
             Some(s) => (s.retries.load(Ordering::Relaxed), s.timeouts.load(Ordering::Relaxed)),
@@ -171,6 +349,7 @@ impl LatencyRecorder {
             total_requests: self.total.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             models,
+            shards,
             deadline_sheds: c.deadline_sheds.load(Ordering::Relaxed),
             queue_full_sheds: c.queue_full_sheds.load(Ordering::Relaxed),
             engine_failures: c.engine_failures.load(Ordering::Relaxed),
@@ -181,6 +360,15 @@ impl LatencyRecorder {
             breaker_opens: c.breaker_opens.load(Ordering::Relaxed),
             breaker_half_opens: c.breaker_half_opens.load(Ordering::Relaxed),
             breaker_closes: c.breaker_closes.load(Ordering::Relaxed),
+            steals: c.steals.load(Ordering::Relaxed),
+            shard_ejects: c.shard_ejects.load(Ordering::Relaxed),
+            shard_probes: c.shard_probes.load(Ordering::Relaxed),
+            shard_readmits: c.shard_readmits.load(Ordering::Relaxed),
+            shard_drains: c.shard_drains.load(Ordering::Relaxed),
+            stopped_replies: c.stopped_replies.load(Ordering::Relaxed),
+            heals_started: c.heals_started.load(Ordering::Relaxed),
+            heals_succeeded: c.heals_succeeded.load(Ordering::Relaxed),
+            heals_failed: c.heals_failed.load(Ordering::Relaxed),
             compile_retries,
             compile_timeouts,
         }
@@ -206,11 +394,12 @@ mod tests {
         let s = r.snapshot();
         assert_eq!(s.total_requests, 3);
         assert_eq!(s.errors, 1);
-        let (name, q_mean, i_mean, _, _, n) = &s.models[0];
-        assert_eq!(name, "ball");
-        assert_eq!(*n, 3);
-        assert!((q_mean - 2.0).abs() < 1e-9);
-        assert!((i_mean - 20.0).abs() < 1e-9);
+        let m = &s.models[0];
+        assert_eq!(m.model, "ball");
+        assert_eq!(m.n, 3);
+        assert!((m.queue_mean_us - 2.0).abs() < 1e-9);
+        assert!((m.infer_mean_us - 20.0).abs() < 1e-9);
+        assert!(m.p50_us <= m.p99_us && m.p99_us <= m.p999_us);
     }
 
     #[test]
@@ -234,6 +423,21 @@ mod tests {
     }
 
     #[test]
+    fn client_histo_merges() {
+        let mut a = LatencyHisto::new();
+        let mut b = LatencyHisto::new();
+        for us in [1.0, 10.0, 100.0] {
+            a.record_us(us);
+        }
+        b.record_us(1000.0);
+        a.merge(&b);
+        assert_eq!(a.count(), 4);
+        assert!(a.quantile_us(0.999) >= 1000.0);
+        assert!(a.quantile_us(0.5) <= a.quantile_us(0.99));
+        assert!(a.mean_us() > 0.0);
+    }
+
+    #[test]
     fn robustness_counters_flow_into_snapshot() {
         let r = LatencyRecorder::new();
         let c = r.counters().clone();
@@ -243,6 +447,9 @@ mod tests {
         ServeCounters::bump(&c.engine_panics);
         ServeCounters::bump(&c.fallback_served);
         ServeCounters::bump(&c.breaker_opens);
+        ServeCounters::bump(&c.steals);
+        ServeCounters::bump(&c.shard_ejects);
+        ServeCounters::bump(&c.stopped_replies);
         let s = r.snapshot();
         assert_eq!(s.deadline_sheds, 1);
         assert_eq!(s.queue_full_sheds, 2);
@@ -250,6 +457,44 @@ mod tests {
         assert_eq!(s.fallback_served, 1);
         assert_eq!(s.breaker_opens, 1);
         assert_eq!(s.worker_respawns, 0);
+        assert_eq!(s.steals, 1);
+        assert_eq!(s.shard_ejects, 1);
+        assert_eq!(s.stopped_replies, 1);
+        assert_eq!(s.shard_readmits, 0);
+    }
+
+    #[test]
+    fn shard_stats_flow_into_snapshot_and_sickest_is_found() {
+        let r = LatencyRecorder::new();
+        assert!(r.snapshot().shards.is_empty());
+        assert!(r.snapshot().sickest_shard().is_none());
+
+        let stats: Vec<Arc<ShardStats>> =
+            (0..3).map(|_| Arc::new(ShardStats::default())).collect();
+        stats[0].handled.fetch_add(10, Ordering::Relaxed);
+        stats[1].handled.fetch_add(10, Ordering::Relaxed);
+        stats[1].failed.fetch_add(2, Ordering::Relaxed);
+        stats[1].respawns.fetch_add(1, Ordering::Relaxed);
+        stats[2].stolen_from.fetch_add(4, Ordering::Relaxed);
+        r.attach_shard_stats(stats);
+
+        let s = r.snapshot();
+        assert_eq!(s.shards.len(), 3);
+        assert_eq!(s.shards[1].failed, 2);
+        assert_eq!(s.shards[2].stolen_from, 4);
+        let sick = s.sickest_shard().expect("shard 1 is sick");
+        assert_eq!(sick.idx, 1);
+        assert_eq!(sick.sickness(), 2 + 4);
+    }
+
+    #[test]
+    fn healthy_pool_has_no_sickest_shard() {
+        let r = LatencyRecorder::new();
+        let stats: Vec<Arc<ShardStats>> =
+            (0..2).map(|_| Arc::new(ShardStats::default())).collect();
+        stats[0].handled.fetch_add(100, Ordering::Relaxed);
+        r.attach_shard_stats(stats);
+        assert!(r.snapshot().sickest_shard().is_none(), "healthy shards are not 'sick'");
     }
 
     #[test]

@@ -10,34 +10,46 @@
 //!   interior-mutable for hot-swap while serving.
 //! * [`Batcher`] — size/deadline micro-batching policy, used to quantify
 //!   the latency-vs-throughput trade-off the paper discusses for GPUs.
-//! * [`serve`]/[`serve_with`] — a worker-thread request loop (std mpsc;
-//!   tokio is not in the offline crate set) with per-request latency
-//!   metrics, a bounded queue, optional per-request deadlines, panic
-//!   isolation with worker respawn, and typed [`ServeError`] replies.
+//! * [`serve`]/[`serve_with`]/[`serve_sharded`] — a sharded worker pool
+//!   (std threads; tokio is not in the offline crate set): N shards with
+//!   model-affinity routing, bounded per-model queues, optional work
+//!   stealing, per-shard health breakers, panic isolation with worker
+//!   respawn, graceful drain/restart, and typed [`ServeError`] replies.
+//!   `serve`/`serve_with` keep the single-queue-era API on top of a
+//!   one-shard pool (shard count overridable via `NNCG_SERVE_SHARDS`).
+//! * [`HealPipeline`] — per-model background rebuild slots that hot-swap
+//!   a freshly compiled engine via [`Router::register`] without blocking
+//!   the request path.
 //!
 //! The contract is **exactly one reply per accepted request**: either a
-//! tensor or a `ServeError`. A panicking engine, a shed request, and a
-//! shutdown all produce a reply — `infer_burst` can never hang on a dead
-//! worker.
+//! tensor or a `ServeError`. A panicking engine, a shed request, a stolen
+//! queue entry, and a shutdown all produce a reply — `infer_burst` can
+//! never hang on a dead worker.
 
 mod batcher;
 mod error;
 mod fallback;
 mod metrics;
 mod router;
+mod shard;
 
 pub use batcher::{Batcher, BatcherPolicy};
 pub use error::ServeError;
-pub use fallback::{BreakerConfig, BreakerState, CircuitBreaker, FallbackEngine};
-pub use metrics::{LatencyRecorder, MetricsSnapshot, ServeCounters};
+pub use fallback::{
+    BreakerConfig, BreakerEvent, BreakerState, CircuitBreaker, FallbackEngine, HealPipeline,
+};
+pub use metrics::{
+    LatencyHisto, LatencyRecorder, MetricsSnapshot, ModelStats, ServeCounters, ShardSnapshot,
+    ShardStats,
+};
 pub use router::Router;
+pub use shard::{home_shard, ShardConfig, ShardPool};
 
 use crate::runtime::InferenceEngine;
 use crate::tensor::Tensor;
 use crate::util::panic_message;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Reply type for every request: a tensor or a typed serving error. The
@@ -59,14 +71,15 @@ pub struct Request {
     pub deadline: Option<Instant>,
 }
 
-/// Serving configuration.
+/// Serving configuration (single-queue-era shape, kept stable; maps onto
+/// [`ShardConfig`] with one shard unless `NNCG_SERVE_SHARDS` overrides).
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    /// Worker threads (min 1).
+    /// Worker threads (min 1). Under sharding this is workers *per shard*.
     pub workers: usize,
     /// Bounded queue capacity; submissions beyond it are shed with
     /// [`ServeError::QueueFull`] instead of growing an unbounded backlog
-    /// (min 1).
+    /// (min 1). Under sharding the bound is per shard, per model.
     pub queue_capacity: usize,
     /// Deadline applied to requests submitted without an explicit one.
     pub default_deadline: Option<Duration>,
@@ -78,37 +91,26 @@ impl Default for ServeConfig {
     }
 }
 
-/// Handle to a running coordinator.
+/// Handle to a running coordinator (a [`ShardPool`] plus submission
+/// defaults). Single-owner control surface; clone [`Submitter`]s for
+/// multi-threaded clients.
 pub struct ServerHandle {
-    tx: mpsc::SyncSender<Request>,
-    stop: Arc<AtomicBool>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    pool: Arc<ShardPool>,
     pub metrics: Arc<LatencyRecorder>,
     default_deadline: Option<Duration>,
-    queue_capacity: usize,
 }
 
 impl ServerHandle {
     /// Submit a request; returns the reply receiver, or sheds immediately
-    /// if the queue is full / the coordinator has stopped.
+    /// if the routed shard's queue is full / the coordinator has stopped.
     pub fn submit(
         &self,
         model: &str,
         input: Tensor,
         deadline: Option<Duration>,
     ) -> Result<mpsc::Receiver<ServeResult>, ServeError> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let now = Instant::now();
-        let deadline = deadline.or(self.default_deadline).map(|d| now + d);
-        let req = Request { model: model.to_string(), input, reply: reply_tx, enqueued: now, deadline };
-        match self.tx.try_send(req) {
-            Ok(()) => Ok(reply_rx),
-            Err(mpsc::TrySendError::Full(_)) => {
-                ServeCounters::bump(&self.metrics.counters().queue_full_sheds);
-                Err(ServeError::QueueFull { capacity: self.queue_capacity })
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => Err(ServeError::Stopped),
-        }
+        let deadline = deadline.or(self.default_deadline).map(|d| Instant::now() + d);
+        self.pool.submit(model, input, deadline)
     }
 
     /// Submit a request and wait for the reply (client-side latency).
@@ -149,25 +151,85 @@ impl ServerHandle {
         }
     }
 
-    /// Drain the queue, join the workers, and return the final metrics.
-    ///
-    /// Dropping `tx` disconnects the channel, but std mpsc delivers
-    /// already-buffered messages before reporting `Disconnected`, so every
-    /// queued request is still answered (served or deadline-shed) before
-    /// the workers exit: drain-then-join, not drop-on-the-floor.
+    /// A cloneable submission endpoint sharing this coordinator's pool —
+    /// hand one to each client thread (the load benchmark, the CLI's
+    /// frame loop).
+    pub fn submitter(&self) -> Submitter {
+        Submitter { pool: Arc::clone(&self.pool), default_deadline: self.default_deadline }
+    }
+
+    /// Number of shards in the pool.
+    pub fn shards(&self) -> usize {
+        self.pool.shards()
+    }
+
+    /// The shard a model's requests route to when healthy.
+    pub fn home_shard(&self, model: &str) -> usize {
+        home_shard(model, self.pool.shards())
+    }
+
+    /// Drain and restart one shard under live traffic (see
+    /// [`ShardPool::recycle_shard`]).
+    pub fn recycle_shard(&self, idx: usize) -> bool {
+        self.pool.recycle_shard(idx)
+    }
+
+    /// Drain the queues, join the workers, and return the final metrics —
+    /// every accepted request is answered (served or shed) before the
+    /// workers exit: drain-then-join, not drop-on-the-floor.
     pub fn stop(self) -> MetricsSnapshot {
-        let ServerHandle { tx, stop, workers, metrics, .. } = self;
-        stop.store(true, Ordering::SeqCst);
-        drop(tx);
-        for h in workers {
-            let _ = h.join();
-        }
-        metrics.snapshot()
+        self.pool.shutdown_blocking(None)
+    }
+
+    /// [`Self::stop`] with a deadline: drains until `timeout` fires, then
+    /// answers anything still queued with a typed [`ServeError::Stopped`]
+    /// reply and detaches any wedged worker instead of hanging shutdown.
+    pub fn stop_with_timeout(self, timeout: Duration) -> MetricsSnapshot {
+        self.pool.shutdown_blocking(Some(timeout))
     }
 
     /// Stop workers and join them (compat wrapper over [`Self::stop`]).
     pub fn shutdown(self) {
         let _ = self.stop();
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        // A handle dropped without `stop()` must not strand worker threads
+        // in a live loop; closing admission lets them drain and exit.
+        // Idempotent after a normal `stop()`.
+        self.pool.begin_stop();
+    }
+}
+
+/// Cloneable submission endpoint over a shared [`ShardPool`]. Does not
+/// own shutdown — submissions after the owning handle stopped return
+/// [`ServeError::Stopped`].
+#[derive(Clone)]
+pub struct Submitter {
+    pool: Arc<ShardPool>,
+    default_deadline: Option<Duration>,
+}
+
+impl Submitter {
+    /// See [`ServerHandle::submit`].
+    pub fn submit(
+        &self,
+        model: &str,
+        input: Tensor,
+        deadline: Option<Duration>,
+    ) -> Result<mpsc::Receiver<ServeResult>, ServeError> {
+        let deadline = deadline.or(self.default_deadline).map(|d| Instant::now() + d);
+        self.pool.submit(model, input, deadline)
+    }
+
+    /// Submit and wait for the reply.
+    pub fn infer(&self, model: &str, input: Tensor) -> ServeResult {
+        match self.submit(model, input, None) {
+            Ok(rx) => rx.recv().unwrap_or(Err(ServeError::Stopped)),
+            Err(e) => Err(e),
+        }
     }
 }
 
@@ -201,19 +263,51 @@ impl Drop for ReplyGuard {
     }
 }
 
-type SharedRx = Arc<Mutex<mpsc::Receiver<Request>>>;
+/// How one request's execution went, as seen by the executing shard's
+/// health breaker: sheds (deadline, unknown model) are client-side events
+/// and say nothing about shard health.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ExecOutcome {
+    Served,
+    Failed,
+    Shed,
+}
 
-/// Start the coordinator with explicit robustness configuration.
+/// Start the coordinator with explicit robustness configuration
+/// (single-queue-era API). The pool defaults to one shard with stealing
+/// off — bit-compatible with the PR 6 coordinator — and honors
+/// `NNCG_SERVE_SHARDS=<n>` / `NNCG_SERVE_STEAL=on` so existing callers
+/// (and the chaos suite, unchanged) can be re-run against a sharded pool.
 pub fn serve_with(router: Arc<Router>, cfg: ServeConfig) -> ServerHandle {
-    let queue_capacity = cfg.queue_capacity.max(1);
-    let (tx, rx) = mpsc::sync_channel::<Request>(queue_capacity);
-    let rx: SharedRx = Arc::new(Mutex::new(rx));
-    let stop = Arc::new(AtomicBool::new(false));
-    let metrics = Arc::new(LatencyRecorder::new());
-    let workers = (0..cfg.workers.max(1))
-        .map(|_| spawn_worker(Arc::clone(&rx), Arc::clone(&router), Arc::clone(&stop), Arc::clone(&metrics)))
-        .collect();
-    ServerHandle { tx, stop, workers, metrics, default_deadline: cfg.default_deadline, queue_capacity }
+    let shards = std::env::var("NNCG_SERVE_SHARDS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(1)
+        .max(1);
+    let steal = matches!(
+        std::env::var("NNCG_SERVE_STEAL").as_deref().map(str::trim),
+        Ok("on") | Ok("1") | Ok("true")
+    );
+    serve_sharded(
+        router,
+        ShardConfig {
+            shards,
+            workers_per_shard: cfg.workers.max(1),
+            queue_capacity: cfg.queue_capacity.max(1),
+            default_deadline: cfg.default_deadline,
+            steal,
+            faults: crate::faults::FaultPlan::from_env().ok().flatten(),
+            ..ShardConfig::default()
+        },
+    )
+}
+
+/// Start a sharded coordinator with explicit shard configuration.
+pub fn serve_sharded(router: Arc<Router>, cfg: ShardConfig) -> ServerHandle {
+    let default_deadline = cfg.default_deadline;
+    let pool = ShardPool::start(router, cfg);
+    let metrics = Arc::clone(pool.metrics());
+    ServerHandle { pool, metrics, default_deadline }
 }
 
 /// Start the coordinator with `n_workers` threads over a router
@@ -229,51 +323,9 @@ pub fn serve_single(model: &str, engine: Arc<dyn InferenceEngine>, n_workers: us
     serve(Arc::new(router), n_workers)
 }
 
-/// Supervisor thread: runs the worker loop and respawns it (in-thread) if
-/// it ever unwinds, so one poisoned request cannot take the worker down.
-/// Per-request panics are already isolated in `handle_request`; this outer
-/// net catches everything else.
-fn spawn_worker(
-    rx: SharedRx,
-    router: Arc<Router>,
-    stop: Arc<AtomicBool>,
-    metrics: Arc<LatencyRecorder>,
-) -> std::thread::JoinHandle<()> {
-    std::thread::spawn(move || loop {
-        let result = catch_unwind(AssertUnwindSafe(|| {
-            worker_loop(&rx, &router, &stop, &metrics);
-        }));
-        match result {
-            Ok(()) => return, // clean exit (stop flag or disconnect)
-            Err(payload) => {
-                ServeCounters::bump(&metrics.counters().worker_respawns);
-                eprintln!("[nncg] serving worker unwound ({}); respawning", panic_message(&*payload));
-            }
-        }
-    })
-}
-
-fn worker_loop(rx: &SharedRx, router: &Router, stop: &AtomicBool, metrics: &LatencyRecorder) {
-    loop {
-        let req = {
-            let guard = rx.lock().unwrap_or_else(|e| e.into_inner());
-            match guard.recv_timeout(Duration::from_millis(50)) {
-                Ok(r) => r,
-                Err(mpsc::RecvTimeoutError::Timeout) => {
-                    if stop.load(Ordering::SeqCst) {
-                        return;
-                    }
-                    continue;
-                }
-                // Senders gone and queue fully drained: exit.
-                Err(mpsc::RecvTimeoutError::Disconnected) => return,
-            }
-        };
-        handle_request(req, router, metrics);
-    }
-}
-
-fn handle_request(req: Request, router: &Router, metrics: &LatencyRecorder) {
+/// Execute one dequeued request: shed if stale, route, run the engine
+/// under panic isolation, record metrics, and reply exactly once.
+pub(crate) fn execute(req: Request, router: &Router, metrics: &LatencyRecorder) -> ExecOutcome {
     let Request { model, input, reply, enqueued, deadline } = req;
     let guard = ReplyGuard::new(reply, &model);
     let now = Instant::now();
@@ -284,7 +336,7 @@ fn handle_request(req: Request, router: &Router, metrics: &LatencyRecorder) {
             ServeCounters::bump(&metrics.counters().deadline_sheds);
             let late_by_us = now.duration_since(dl).as_micros() as u64;
             guard.send(Err(ServeError::DeadlineExceeded { model, late_by_us }));
-            return;
+            return ExecOutcome::Shed;
         }
     }
 
@@ -295,7 +347,7 @@ fn handle_request(req: Request, router: &Router, metrics: &LatencyRecorder) {
             metrics.record(&model, queue_us, 0.0, false);
             let registered = router.models();
             guard.send(Err(ServeError::ModelUnknown { model, registered }));
-            return;
+            return ExecOutcome::Shed;
         }
     };
 
@@ -306,17 +358,20 @@ fn handle_request(req: Request, router: &Router, metrics: &LatencyRecorder) {
         Ok(Ok(y)) => {
             metrics.record(&model, queue_us, infer_us, true);
             guard.send(Ok(y));
+            ExecOutcome::Served
         }
         Ok(Err(e)) => {
             ServeCounters::bump(&metrics.counters().engine_failures);
             metrics.record(&model, queue_us, infer_us, false);
             guard.send(Err(ServeError::EngineFailed { model, reason: format!("{e:#}") }));
+            ExecOutcome::Failed
         }
         Err(payload) => {
             ServeCounters::bump(&metrics.counters().engine_panics);
             metrics.record(&model, queue_us, infer_us, false);
             let reason = format!("engine panicked: {}", panic_message(&*payload));
             guard.send(Err(ServeError::EngineFailed { model, reason }));
+            ExecOutcome::Failed
         }
     }
 }
@@ -466,17 +521,13 @@ mod tests {
     #[test]
     fn submit_after_stop_is_typed_stopped() {
         let h = serve_single("tiny", tiny_engine(), 1);
-        let tx = h.tx.clone();
+        let s = h.submitter();
         h.shutdown();
-        let (reply, _rx) = mpsc::channel();
-        let req = Request {
-            model: "tiny".into(),
-            input: Tensor::zeros(&[8, 8, 1]),
-            reply,
-            enqueued: Instant::now(),
-            deadline: None,
-        };
-        assert!(matches!(tx.try_send(req), Err(mpsc::TrySendError::Disconnected(_))));
+        assert!(matches!(
+            s.submit("tiny", Tensor::zeros(&[8, 8, 1]), None),
+            Err(ServeError::Stopped)
+        ));
+        assert!(matches!(s.infer("tiny", Tensor::zeros(&[8, 8, 1])), Err(ServeError::Stopped)));
     }
 
     #[test]
@@ -500,5 +551,38 @@ mod tests {
         assert!(rx1.recv().unwrap().is_ok());
         let snap = h.stop();
         assert_eq!(snap.deadline_sheds, 1);
+    }
+
+    #[test]
+    fn stop_with_timeout_answers_still_queued_with_stopped() {
+        // One worker wedged ~100ms per request; queue 5, stop with a
+        // deadline shorter than the backlog needs: the in-flight request
+        // (and possibly a successor) completes, the rest get a typed
+        // `Stopped` reply — never a hang, never a dropped reply.
+        let plan = FaultPlan::builder(15)
+            .site(FaultSite::LatencySpike, FaultSpec::Every(1))
+            .delay(Duration::from_millis(100))
+            .build();
+        let engine: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(tiny_engine(), plan));
+        let h = serve_single("tiny", engine, 1);
+        let receivers: Vec<_> =
+            (0..5).map(|_| h.submit("tiny", Tensor::zeros(&[8, 8, 1]), None).unwrap()).collect();
+        std::thread::sleep(Duration::from_millis(20)); // let the worker pick one up
+        let t0 = Instant::now();
+        let snap = h.stop_with_timeout(Duration::from_millis(150));
+        assert!(t0.elapsed() < Duration::from_secs(2), "deadline stop must not hang");
+        let mut served = 0;
+        let mut stopped = 0;
+        for rx in receivers {
+            match rx.recv().unwrap_or(Err(ServeError::Stopped)) {
+                Ok(_) => served += 1,
+                Err(ServeError::Stopped) => stopped += 1,
+                Err(other) => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(served + stopped, 5, "exactly one reply per accepted request");
+        assert!(served >= 1, "the in-flight request finishes");
+        assert!(stopped >= 2, "deep backlog is answered with Stopped, got {stopped}");
+        assert_eq!(snap.stopped_replies, stopped as u64);
     }
 }

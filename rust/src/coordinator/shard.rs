@@ -1,0 +1,700 @@
+//! Sharded serving core: per-model shard pools with bounded per-model
+//! queues, work stealing, shard-level health breakers, and graceful
+//! drain/restart under live traffic.
+//!
+//! Topology: N shards, each with its own FIFO queue (bounded *per model*),
+//! its own worker threads under a panic-isolation supervisor, and its own
+//! [`CircuitBreaker`] tracking shard health. Requests route to their
+//! model's **home shard** (`hash(model) % shards`), so each model gets a
+//! stable shard pool and its requests stay FIFO; routing fails over to the
+//! next healthy shard only when the home shard is draining or ejected by
+//! its breaker.
+//!
+//! Work stealing: an idle worker whose own queue is empty takes the oldest
+//! half of the most backlogged peer queue. Steals pop from the queue
+//! *front*, exactly like the owner, so a queue is always consumed in
+//! submission order no matter who pops — stealing rebalances load without
+//! reordering any submitter's dequeue sequence. (Replies can still
+//! *complete* out of order across concurrent workers, as with any
+//! multi-worker pool; the invariant stealing preserves is dequeue order
+//! and exactly-one-reply.)
+//!
+//! Shard lifecycle: `closed` (in routing) → `ejected` (breaker open after
+//! repeated worker unwinds / engine failures; routed around) → `probing`
+//! (after the cooldown one request is admitted back) → `readmitted`
+//! (probe succeeded, breaker closes). Independently,
+//! [`ShardPool::recycle_shard`] drains a shard (admission routes around
+//! it, its backlog is served to zero) and restarts its workers with a
+//! fresh generation — zero accepted requests are dropped.
+
+use super::batcher::BatcherPolicy;
+use super::error::ServeError;
+use super::fallback::{BreakerConfig, BreakerEvent, CircuitBreaker};
+use super::metrics::{LatencyRecorder, MetricsSnapshot, ServeCounters, ShardStats};
+use super::router::Router;
+use super::{ExecOutcome, Request, ServeResult};
+use crate::faults::{FaultPlan, FaultSite};
+use crate::tensor::Tensor;
+use crate::util::{fxhash, panic_message};
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Sharded-coordinator configuration (the explicit form;
+/// [`super::ServeConfig`] maps onto this for the single-queue-era API).
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Number of shards (min 1).
+    pub shards: usize,
+    /// Worker threads per shard (min 1).
+    pub workers_per_shard: usize,
+    /// Bounded queue capacity *per shard, per model*; submissions beyond
+    /// it shed with [`ServeError::QueueFull`].
+    pub queue_capacity: usize,
+    /// Deadline applied to requests submitted without an explicit one.
+    pub default_deadline: Option<Duration>,
+    /// Enable work stealing between idle and backlogged shards.
+    pub steal: bool,
+    /// Per-shard dequeue batching policy (`max_batch` requests are popped
+    /// per queue lock acquisition; `immediate()` pops one at a time).
+    pub batch: BatcherPolicy,
+    /// Shard-level breaker tuning: consecutive request failures or worker
+    /// unwinds on one shard eject it from routing until a probe succeeds.
+    pub breaker: BreakerConfig,
+    /// Deterministic fault plan consulted at the shard seams
+    /// ([`FaultSite::ShardKill`], [`FaultSite::StealRace`]).
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            shards: 1,
+            workers_per_shard: 1,
+            queue_capacity: 1024,
+            default_deadline: None,
+            steal: true,
+            batch: BatcherPolicy::immediate(),
+            // Shard ejection wants more evidence than an engine-level
+            // breaker: one flaky request shouldn't empty a shard pool.
+            breaker: BreakerConfig { failure_threshold: 8, cooldown: Duration::from_millis(100) },
+            faults: None,
+        }
+    }
+}
+
+/// A model's home shard: stable affinity so each model keeps a dedicated
+/// shard pool and per-model FIFO order.
+pub fn home_shard(model: &str, shards: usize) -> usize {
+    (fxhash::hash_str(model) % shards.max(1) as u64) as usize
+}
+
+/// A queued request stamped with its global admission sequence number
+/// (assigned under the admission path, monotone per submitter).
+struct SeqReq {
+    seq: u64,
+    req: Request,
+}
+
+struct QueueInner {
+    deque: VecDeque<SeqReq>,
+    /// Queued-request count per model (the per-model bound).
+    per_model: HashMap<String, usize>,
+}
+
+/// Bounded FIFO queue for one shard. Owner pops and steals both take from
+/// the *front*, so consumption order equals submission order regardless of
+/// which shard's worker does the popping.
+struct ShardQueue {
+    inner: Mutex<QueueInner>,
+    cond: Condvar,
+    /// Per-model capacity.
+    capacity: usize,
+    stats: Arc<ShardStats>,
+}
+
+impl ShardQueue {
+    fn new(capacity: usize, stats: Arc<ShardStats>) -> Self {
+        ShardQueue {
+            inner: Mutex::new(QueueInner { deque: VecDeque::new(), per_model: HashMap::new() }),
+            cond: Condvar::new(),
+            capacity: capacity.max(1),
+            stats,
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, QueueInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    fn push(&self, sr: SeqReq) -> Result<(), SeqReq> {
+        let mut q = self.lock();
+        let count = q.per_model.entry(sr.req.model.clone()).or_insert(0);
+        if *count >= self.capacity {
+            return Err(sr);
+        }
+        *count += 1;
+        q.deque.push_back(sr);
+        self.stats.queue_len.store(q.deque.len() as u64, Ordering::Relaxed);
+        self.cond.notify_one();
+        Ok(())
+    }
+
+    fn take_front(&self, q: &mut QueueInner, max_n: usize) -> Vec<SeqReq> {
+        let n = max_n.min(q.deque.len());
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let sr = q.deque.pop_front().expect("len checked");
+            if let Some(c) = q.per_model.get_mut(&sr.req.model) {
+                *c = c.saturating_sub(1);
+            }
+            out.push(sr);
+        }
+        self.stats.queue_len.store(q.deque.len() as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// Pop up to `max_n` from the front, waiting up to `timeout` when the
+    /// queue is empty.
+    fn pop_batch(&self, max_n: usize, timeout: Duration) -> Vec<SeqReq> {
+        let mut q = self.lock();
+        if q.deque.is_empty() {
+            let (guard, _) = self
+                .cond
+                .wait_timeout(q, timeout)
+                .unwrap_or_else(|e| e.into_inner());
+            q = guard;
+        }
+        self.take_front(&mut q, max_n)
+    }
+
+    /// Steal up to `max_n` from the front without waiting.
+    fn steal_batch(&self, max_n: usize) -> Vec<SeqReq> {
+        let mut q = self.lock();
+        self.take_front(&mut q, max_n)
+    }
+
+    fn len(&self) -> usize {
+        self.lock().deque.len()
+    }
+
+    /// Remove everything still queued (shutdown-deadline purge).
+    fn drain_all(&self) -> Vec<SeqReq> {
+        let mut q = self.lock();
+        let n = q.deque.len();
+        self.take_front(&mut q, n)
+    }
+}
+
+/// One shard: queue + health breaker + drain/generation state.
+struct Shard {
+    idx: usize,
+    queue: ShardQueue,
+    breaker: CircuitBreaker,
+    /// Admission routes around a draining shard; its workers keep serving
+    /// the backlog down to zero.
+    draining: AtomicBool,
+    /// Requests popped by a worker attributing to this shard and not yet
+    /// replied (used by drain/stop to wait for quiescence).
+    in_flight: AtomicU64,
+    /// Bumped by [`ShardPool::recycle_shard`]; workers of an older
+    /// generation exit at the next loop iteration.
+    generation: AtomicU64,
+    stats: Arc<ShardStats>,
+}
+
+impl Shard {
+    fn new(idx: usize, cfg: &ShardConfig, counters: &Arc<ServeCounters>) -> Arc<Shard> {
+        let stats = Arc::new(ShardStats::default());
+        let mut breaker = CircuitBreaker::new(cfg.breaker.clone());
+        let c = Arc::clone(counters);
+        let st = Arc::clone(&stats);
+        breaker.set_observer(Box::new(move |ev| match ev {
+            BreakerEvent::Opened => {
+                ServeCounters::bump(&c.shard_ejects);
+                ServeCounters::bump(&st.ejects);
+            }
+            BreakerEvent::HalfOpened => ServeCounters::bump(&c.shard_probes),
+            BreakerEvent::Closed => {
+                ServeCounters::bump(&c.shard_readmits);
+                ServeCounters::bump(&st.readmits);
+            }
+        }));
+        Arc::new(Shard {
+            idx,
+            queue: ShardQueue::new(cfg.queue_capacity, Arc::clone(&stats)),
+            breaker,
+            draining: AtomicBool::new(false),
+            in_flight: AtomicU64::new(0),
+            generation: AtomicU64::new(0),
+            stats,
+        })
+    }
+
+    /// Report a request outcome executed by this shard's worker to the
+    /// shard's health breaker and stats. Sheds (deadline, unknown model)
+    /// say nothing about shard health.
+    fn on_outcome(&self, outcome: ExecOutcome) {
+        ServeCounters::bump(&self.stats.handled);
+        match outcome {
+            ExecOutcome::Served => self.breaker.on_success(),
+            ExecOutcome::Failed => {
+                ServeCounters::bump(&self.stats.failed);
+                self.breaker.on_failure();
+            }
+            ExecOutcome::Shed => {}
+        }
+    }
+}
+
+/// The sharded coordinator. Usually driven through
+/// [`super::ServerHandle`] / [`super::Submitter`]; exposed for tests and
+/// the load benchmark.
+pub struct ShardPool {
+    cfg: ShardConfig,
+    router: Arc<Router>,
+    shards: Vec<Arc<Shard>>,
+    metrics: Arc<LatencyRecorder>,
+    stop: AtomicBool,
+    seq: AtomicU64,
+    workers: Mutex<Vec<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+impl ShardPool {
+    /// Spawn the pool: `cfg.shards` shards × `cfg.workers_per_shard`
+    /// supervised workers over a shared router.
+    pub fn start(router: Arc<Router>, cfg: ShardConfig) -> Arc<ShardPool> {
+        let cfg = ShardConfig {
+            shards: cfg.shards.max(1),
+            workers_per_shard: cfg.workers_per_shard.max(1),
+            queue_capacity: cfg.queue_capacity.max(1),
+            ..cfg
+        };
+        let metrics = Arc::new(LatencyRecorder::new());
+        let counters = Arc::clone(metrics.counters());
+        let shards: Vec<Arc<Shard>> = (0..cfg.shards).map(|i| Shard::new(i, &cfg, &counters)).collect();
+        metrics.attach_shard_stats(shards.iter().map(|s| Arc::clone(&s.stats)).collect());
+        let pool = Arc::new(ShardPool {
+            cfg,
+            router,
+            shards,
+            metrics,
+            stop: AtomicBool::new(false),
+            seq: AtomicU64::new(0),
+            workers: Mutex::new(Vec::new()),
+        });
+        let all: Vec<Vec<std::thread::JoinHandle<()>>> = pool
+            .shards
+            .iter()
+            .map(|s| {
+                (0..pool.cfg.workers_per_shard)
+                    .map(|_| spawn_shard_worker(Arc::clone(&pool), Arc::clone(s), 0))
+                    .collect()
+            })
+            .collect();
+        *pool.workers.lock().unwrap_or_else(|e| e.into_inner()) = all;
+        pool
+    }
+
+    pub fn metrics(&self) -> &Arc<LatencyRecorder> {
+        &self.metrics
+    }
+
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn config(&self) -> &ShardConfig {
+        &self.cfg
+    }
+
+    /// Admission: stamp, route, and enqueue one request. Typed sheds:
+    /// `Stopped` after shutdown began, `QueueFull` when the routed shard's
+    /// per-model bound is hit.
+    pub fn submit(
+        &self,
+        model: &str,
+        input: Tensor,
+        deadline: Option<Instant>,
+    ) -> Result<mpsc::Receiver<ServeResult>, ServeError> {
+        if self.stop.load(Ordering::SeqCst) {
+            return Err(ServeError::Stopped);
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request {
+            model: model.to_string(),
+            input,
+            reply: reply_tx,
+            enqueued: Instant::now(),
+            deadline,
+        };
+        let seq = self.seq.fetch_add(1, Ordering::SeqCst) + 1;
+        let shard = self.route(model);
+        match shard.queue.push(SeqReq { seq, req }) {
+            Ok(()) => Ok(reply_rx),
+            Err(_) => {
+                ServeCounters::bump(&self.metrics.counters().queue_full_sheds);
+                Err(ServeError::QueueFull { capacity: self.cfg.queue_capacity })
+            }
+        }
+    }
+
+    /// Health-aware routing: the home shard unless it is draining or its
+    /// breaker rejects (ejected / probe already in flight); then the next
+    /// healthy shard. Admission is never refused for health alone — if
+    /// every shard is unhealthy the home shard still accepts (last
+    /// resort), so health routing can only move load, not lose it.
+    fn route(&self, model: &str) -> &Arc<Shard> {
+        let n = self.shards.len();
+        let home = home_shard(model, n);
+        if n == 1 {
+            return &self.shards[0];
+        }
+        for i in 0..n {
+            let s = &self.shards[(home + i) % n];
+            if s.draining.load(Ordering::SeqCst) {
+                continue;
+            }
+            // `allow` admits the half-open probe itself when the cooldown
+            // of an ejected shard has elapsed.
+            if s.breaker.allow() {
+                return s;
+            }
+        }
+        for i in 0..n {
+            let s = &self.shards[(home + i) % n];
+            if !s.draining.load(Ordering::SeqCst) {
+                return s;
+            }
+        }
+        &self.shards[home]
+    }
+
+    /// Work stealing: called by a worker whose own queue is empty. Takes
+    /// the oldest half of the most backlogged peer queue and executes it,
+    /// attributing outcomes to the thief shard.
+    fn try_steal(self: &Arc<Self>, thief: &Arc<Shard>) {
+        let mut best: Option<(usize, usize)> = None; // (len, idx)
+        for (i, s) in self.shards.iter().enumerate() {
+            if i == thief.idx {
+                continue;
+            }
+            let len = s.queue.len();
+            if len > 0 && best.map_or(true, |(bl, _)| len > bl) {
+                best = Some((len, i));
+            }
+        }
+        let Some((len, vidx)) = best else { return };
+        if let Some(plan) = &self.cfg.faults {
+            // Widen the thief-vs-thief / thief-vs-owner race window.
+            if let Some(d) = plan.maybe_delay_at(FaultSite::StealRace, thief.idx) {
+                std::thread::sleep(d);
+            }
+        }
+        let victim = &self.shards[vidx];
+        let batch = victim.queue.steal_batch((len + 1) / 2);
+        if batch.is_empty() {
+            return; // lost the race to the owner or another thief
+        }
+        let c = self.metrics.counters();
+        for _ in 0..batch.len() {
+            ServeCounters::bump(&c.steals);
+            ServeCounters::bump(&victim.stats.stolen_from);
+            ServeCounters::bump(&thief.stats.stolen_by);
+        }
+        self.run_batch(thief, batch);
+    }
+
+    /// Execute a popped batch on `executor`'s account.
+    fn run_batch(&self, executor: &Arc<Shard>, batch: Vec<SeqReq>) {
+        executor.in_flight.fetch_add(batch.len() as u64, Ordering::SeqCst);
+        for sr in batch {
+            let outcome = super::execute(sr.req, &self.router, &self.metrics);
+            executor.on_outcome(outcome);
+            executor.in_flight.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Graceful shard drain/restart under live traffic: admission routes
+    /// around the shard, its backlog is served to zero (own workers plus
+    /// thieves), the old workers are retired via a generation bump, and a
+    /// fresh set is spawned. Zero accepted requests are dropped. Returns
+    /// `false` for an unknown index or a shard already draining.
+    pub fn recycle_shard(self: &Arc<Self>, idx: usize) -> bool {
+        let Some(shard) = self.shards.get(idx) else { return false };
+        if shard.draining.swap(true, Ordering::SeqCst) {
+            return false;
+        }
+        while shard.queue.len() > 0 || shard.in_flight.load(Ordering::SeqCst) > 0 {
+            if self.stop.load(Ordering::SeqCst) {
+                break; // shutdown takes over; its drain/purge owns the backlog
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let new_gen = shard.generation.fetch_add(1, Ordering::SeqCst) + 1;
+        let old = {
+            let mut all = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+            std::mem::take(&mut all[idx])
+        };
+        for h in old {
+            let _ = h.join();
+        }
+        let fresh: Vec<_> = (0..self.cfg.workers_per_shard)
+            .map(|_| spawn_shard_worker(Arc::clone(self), Arc::clone(shard), new_gen))
+            .collect();
+        self.workers.lock().unwrap_or_else(|e| e.into_inner())[idx] = fresh;
+        shard.breaker.reset();
+        shard.draining.store(false, Ordering::SeqCst);
+        ServeCounters::bump(&self.metrics.counters().shard_drains);
+        ServeCounters::bump(&shard.stats.drains);
+        true
+    }
+
+    /// Close admission without blocking (used by `ServerHandle::drop` so
+    /// an un-stopped handle never strands worker threads in a live loop).
+    pub fn begin_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Drain-then-join shutdown. With `timeout = None` this waits for the
+    /// full backlog to be served (the PR6 `stop()` contract). With a
+    /// deadline, whatever is still *queued* when it fires is answered with
+    /// a typed [`ServeError::Stopped`] reply (never silently dropped), and
+    /// a worker wedged inside a request is detached instead of hanging
+    /// shutdown forever.
+    pub fn shutdown_blocking(&self, timeout: Option<Duration>) -> MetricsSnapshot {
+        self.stop.store(true, Ordering::SeqCst);
+        let deadline = timeout.map(|d| Instant::now() + d);
+        loop {
+            let busy = self
+                .shards
+                .iter()
+                .any(|s| s.queue.len() > 0 || s.in_flight.load(Ordering::SeqCst) > 0);
+            if !busy {
+                break;
+            }
+            if let Some(dl) = deadline {
+                if Instant::now() >= dl {
+                    let c = self.metrics.counters();
+                    for s in &self.shards {
+                        for sr in s.queue.drain_all() {
+                            let _ = sr.req.reply.send(Err(ServeError::Stopped));
+                            ServeCounters::bump(&c.stopped_replies);
+                        }
+                    }
+                    break;
+                }
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let all = {
+            let mut w = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+            std::mem::take(&mut *w)
+        };
+        for handles in all {
+            for h in handles {
+                match deadline {
+                    None => {
+                        let _ = h.join();
+                    }
+                    Some(dl) => {
+                        // Grace beyond the deadline so an in-flight request
+                        // can finish its reply; then detach rather than hang.
+                        let limit = dl.max(Instant::now() + Duration::from_millis(250));
+                        while !h.is_finished() && Instant::now() < limit {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        if h.is_finished() {
+                            let _ = h.join();
+                        } else {
+                            eprintln!(
+                                "[nncg] detaching wedged shard worker at shutdown deadline"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        self.metrics.snapshot()
+    }
+}
+
+/// Supervisor thread for one shard worker: respawns the loop in-thread on
+/// an unexpected unwind (e.g. an injected [`FaultSite::ShardKill`]). Each
+/// unwind counts against the shard's breaker, so a repeatedly dying shard
+/// gets ejected from routing; the short backoff before respawn leaves a
+/// window for peers to steal the dead shard's backlog.
+fn spawn_shard_worker(
+    pool: Arc<ShardPool>,
+    shard: Arc<Shard>,
+    my_gen: u64,
+) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        let result = catch_unwind(AssertUnwindSafe(|| worker_loop(&pool, &shard, my_gen)));
+        match result {
+            Ok(()) => return, // clean exit (stop, or retired generation)
+            Err(payload) => {
+                ServeCounters::bump(&pool.metrics.counters().worker_respawns);
+                ServeCounters::bump(&shard.stats.respawns);
+                shard.breaker.on_failure();
+                eprintln!(
+                    "[nncg] shard {} worker unwound ({}); respawning",
+                    shard.idx,
+                    panic_message(&*payload)
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    })
+}
+
+fn worker_loop(pool: &Arc<ShardPool>, shard: &Arc<Shard>, my_gen: u64) {
+    loop {
+        if shard.generation.load(Ordering::SeqCst) != my_gen {
+            return; // retired by a recycle
+        }
+        let stopping = pool.stop.load(Ordering::SeqCst);
+        if let Some(plan) = &pool.cfg.faults {
+            // Injected between requests: the queue survives the kill and
+            // can be stolen while the supervisor respawns this worker.
+            if plan.should_fire_at(FaultSite::ShardKill, shard.idx) {
+                panic!("injected shard kill (shard {})", shard.idx);
+            }
+        }
+        let batch = shard
+            .queue
+            .pop_batch(pool.cfg.batch.max_batch.max(1), Duration::from_millis(5));
+        if batch.is_empty() {
+            if stopping && shard.queue.len() == 0 {
+                return;
+            }
+            if pool.cfg.steal && !stopping {
+                pool.try_steal(shard);
+            }
+            continue;
+        }
+        pool.run_batch(shard, batch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_req(model: &str) -> (Request, mpsc::Receiver<ServeResult>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                model: model.to_string(),
+                input: Tensor::zeros(&[1]),
+                reply: tx,
+                enqueued: Instant::now(),
+                deadline: None,
+            },
+            rx,
+        )
+    }
+
+    fn mk_queue(capacity: usize) -> ShardQueue {
+        ShardQueue::new(capacity, Arc::new(ShardStats::default()))
+    }
+
+    #[test]
+    fn home_shard_is_stable_and_in_range() {
+        for shards in 1..8 {
+            for model in ["ball", "pedestrian", "robot", "tiny"] {
+                let h = home_shard(model, shards);
+                assert!(h < shards);
+                assert_eq!(h, home_shard(model, shards), "stable");
+            }
+        }
+        assert_eq!(home_shard("anything", 1), 0);
+        assert_eq!(home_shard("anything", 0), 0, "degenerate shard count clamps");
+    }
+
+    #[test]
+    fn queue_bounds_per_model_not_globally() {
+        let q = mk_queue(2);
+        let mut keep = Vec::new();
+        for i in 0..2 {
+            let (req, rx) = mk_req("a");
+            assert!(q.push(SeqReq { seq: i, req }).is_ok());
+            keep.push(rx);
+        }
+        // Model "a" is at capacity; model "b" still has its own budget.
+        let (req, _rx) = mk_req("a");
+        assert!(q.push(SeqReq { seq: 10, req }).is_err(), "per-model bound hit");
+        let (req, rx_b) = mk_req("b");
+        assert!(q.push(SeqReq { seq: 11, req }).is_ok(), "other model unaffected");
+        keep.push(rx_b);
+        assert_eq!(q.len(), 3);
+        // Popping frees the model's budget again.
+        let popped = q.pop_batch(1, Duration::ZERO);
+        assert_eq!(popped.len(), 1);
+        assert_eq!(popped[0].req.model, "a");
+        let (req, rx) = mk_req("a");
+        assert!(q.push(SeqReq { seq: 12, req }).is_ok());
+        keep.push(rx);
+    }
+
+    /// The steal-order property: interleaving owner pops and steals in any
+    /// pattern consumes the queue exactly in submission (seq) order — a
+    /// steal takes the *oldest* work, so a single submitter's requests are
+    /// never dequeued out of order, and none are lost or duplicated.
+    #[test]
+    fn property_steals_never_reorder_dequeue_for_a_single_submitter() {
+        use crate::util::XorShift64;
+        let mut rng = XorShift64::new(7);
+        for _round in 0..20 {
+            let q = mk_queue(4096);
+            let total = 64 + rng.below(64) as u64;
+            let mut _rxs = Vec::new();
+            for seq in 1..=total {
+                let (req, rx) = mk_req("tiny");
+                q.push(SeqReq { seq, req }).unwrap();
+                _rxs.push(rx);
+            }
+            let mut consumed: Vec<u64> = Vec::new();
+            while consumed.len() < total as usize {
+                // Randomly interleave owner pops and steals of random sizes.
+                let take = 1 + rng.below(5);
+                let batch = if rng.below(2) == 0 {
+                    q.pop_batch(take, Duration::ZERO)
+                } else {
+                    q.steal_batch(take)
+                };
+                consumed.extend(batch.iter().map(|sr| sr.seq));
+            }
+            let expected: Vec<u64> = (1..=total).collect();
+            assert_eq!(consumed, expected, "dequeue order must equal submission order");
+            assert_eq!(q.len(), 0);
+        }
+    }
+
+    #[test]
+    fn drain_all_empties_and_resets_bounds() {
+        let q = mk_queue(2);
+        let mut _rxs = Vec::new();
+        for seq in 0..2 {
+            let (req, rx) = mk_req("m");
+            q.push(SeqReq { seq, req }).unwrap();
+            _rxs.push(rx);
+        }
+        let drained = q.drain_all();
+        assert_eq!(drained.len(), 2);
+        assert_eq!(q.len(), 0);
+        let (req, _rx) = mk_req("m");
+        assert!(q.push(SeqReq { seq: 9, req }).is_ok(), "budget freed by drain");
+    }
+
+    #[test]
+    fn shard_config_default_is_sane() {
+        let cfg = ShardConfig::default();
+        assert_eq!(cfg.shards, 1);
+        assert!(cfg.steal);
+        assert!(cfg.breaker.failure_threshold > 3, "shard ejection needs more evidence");
+        assert_eq!(cfg.batch.max_batch, 1);
+    }
+}

@@ -48,10 +48,18 @@ pub enum FaultSite {
     EngineFail,
     /// `FaultyEngine`: the inference call sleeps for the plan's delay.
     LatencySpike,
+    /// `coordinator::shard`: a shard worker panics between requests (the
+    /// supervisor respawns it; the shard's queue survives and can be
+    /// stolen by peers while the shard is down).
+    ShardKill,
+    /// `coordinator::shard`: the steal path sleeps for the plan's delay
+    /// after choosing a victim, widening the window where two thieves
+    /// race for the same backlog.
+    StealRace,
 }
 
 /// All injectable sites, in stable order (indexes [`FaultPlan`] state).
-pub const ALL_SITES: [FaultSite; 7] = [
+pub const ALL_SITES: [FaultSite; 9] = [
     FaultSite::CompileFail,
     FaultSite::CompileSlow,
     FaultSite::DlopenFail,
@@ -59,6 +67,8 @@ pub const ALL_SITES: [FaultSite; 7] = [
     FaultSite::EnginePanic,
     FaultSite::EngineFail,
     FaultSite::LatencySpike,
+    FaultSite::ShardKill,
+    FaultSite::StealRace,
 ];
 
 impl FaultSite {
@@ -71,6 +81,8 @@ impl FaultSite {
             FaultSite::EnginePanic => 4,
             FaultSite::EngineFail => 5,
             FaultSite::LatencySpike => 6,
+            FaultSite::ShardKill => 7,
+            FaultSite::StealRace => 8,
         }
     }
 
@@ -83,6 +95,8 @@ impl FaultSite {
             FaultSite::EnginePanic => "engine-panic",
             FaultSite::EngineFail => "engine-fail",
             FaultSite::LatencySpike => "latency-spike",
+            FaultSite::ShardKill => "shard-kill",
+            FaultSite::StealRace => "steal-race",
         }
     }
 
@@ -162,6 +176,10 @@ struct SiteState {
 pub struct FaultPlan {
     seed: u64,
     delay: Duration,
+    /// When set, shard-scoped sites ([`FaultSite::ShardKill`],
+    /// [`FaultSite::StealRace`]) only fire on this shard index, so a test
+    /// can make exactly one shard sick deterministically.
+    target_shard: Option<usize>,
     sites: Vec<SiteState>,
 }
 
@@ -169,6 +187,7 @@ pub struct FaultPlan {
 pub struct FaultPlanBuilder {
     seed: u64,
     delay: Duration,
+    target_shard: Option<usize>,
     specs: Vec<(FaultSite, FaultSpec)>,
 }
 
@@ -186,8 +205,15 @@ impl FaultPlanBuilder {
         self
     }
 
+    /// Restrict shard-scoped sites to one shard index (see
+    /// [`FaultPlan::should_fire_at`]).
+    pub fn target_shard(mut self, shard: usize) -> Self {
+        self.target_shard = Some(shard);
+        self
+    }
+
     pub fn build(self) -> Arc<FaultPlan> {
-        let mut specs = [FaultSpec::Off; 7];
+        let mut specs = [FaultSpec::Off; 9];
         for (site, spec) in &self.specs {
             specs[site.idx()] = *spec;
         }
@@ -202,13 +228,23 @@ impl FaultPlanBuilder {
                 rng: Mutex::new(XorShift64::new(self.seed ^ fxhash::hash_str(site.name()))),
             })
             .collect();
-        Arc::new(FaultPlan { seed: self.seed, delay: self.delay, sites })
+        Arc::new(FaultPlan {
+            seed: self.seed,
+            delay: self.delay,
+            target_shard: self.target_shard,
+            sites,
+        })
     }
 }
 
 impl FaultPlan {
     pub fn builder(seed: u64) -> FaultPlanBuilder {
-        FaultPlanBuilder { seed, delay: Duration::from_millis(50), specs: Vec::new() }
+        FaultPlanBuilder {
+            seed,
+            delay: Duration::from_millis(50),
+            target_shard: None,
+            specs: Vec::new(),
+        }
     }
 
     /// Parse a plan from a spec string, e.g.
@@ -228,6 +264,10 @@ impl FaultPlan {
                 "delay-ms" => match value.parse() {
                     Ok(ms) => b.delay = Duration::from_millis(ms),
                     Err(_) => bail!("bad delay-ms {value:?} in fault spec"),
+                },
+                "target-shard" => match value.parse() {
+                    Ok(s) => b.target_shard = Some(s),
+                    Err(_) => bail!("bad target-shard {value:?} in fault spec"),
                 },
                 site_name => match FaultSite::from_name(site_name) {
                     Some(site) => b = b.site(site, FaultSpec::parse(value)?),
@@ -272,6 +312,26 @@ impl FaultPlan {
     /// firing (for [`FaultSite::CompileSlow`] / [`FaultSite::LatencySpike`]).
     pub fn maybe_delay(&self, site: FaultSite) -> Option<Duration> {
         if self.should_fire(site) {
+            Some(self.delay)
+        } else {
+            None
+        }
+    }
+
+    /// Shard-scoped consult: like [`FaultPlan::should_fire`], but when a
+    /// `target_shard` is configured, other shards never fire (and never
+    /// count a hit), so the site's hit sequence is deterministic for the
+    /// targeted shard alone.
+    pub fn should_fire_at(&self, site: FaultSite, shard: usize) -> bool {
+        match self.target_shard {
+            Some(t) if t != shard => false,
+            _ => self.should_fire(site),
+        }
+    }
+
+    /// Shard-scoped variant of [`FaultPlan::maybe_delay`].
+    pub fn maybe_delay_at(&self, site: FaultSite, shard: usize) -> Option<Duration> {
+        if self.should_fire_at(site, shard) {
             Some(self.delay)
         } else {
             None
@@ -400,6 +460,34 @@ mod tests {
         assert!(FaultPlan::parse("engine-panic").is_err());
         assert!(FaultSpec::parse("prob:1.5").is_err());
         assert!(FaultSpec::parse("every:0").is_err());
+    }
+
+    #[test]
+    fn target_shard_scopes_shard_sites() {
+        let plan = FaultPlan::builder(3)
+            .site(FaultSite::ShardKill, FaultSpec::First(2))
+            .target_shard(1)
+            .build();
+        // Non-target shards never fire and never consume hits.
+        assert!(!plan.should_fire_at(FaultSite::ShardKill, 0));
+        assert!(!plan.should_fire_at(FaultSite::ShardKill, 2));
+        assert_eq!(plan.hits(FaultSite::ShardKill), 0);
+        // The target shard sees the full First(2) sequence.
+        assert!(plan.should_fire_at(FaultSite::ShardKill, 1));
+        assert!(plan.should_fire_at(FaultSite::ShardKill, 1));
+        assert!(!plan.should_fire_at(FaultSite::ShardKill, 1));
+        assert_eq!(plan.fired(FaultSite::ShardKill), 2);
+    }
+
+    #[test]
+    fn parse_target_shard_and_shard_sites() {
+        let plan = FaultPlan::parse("seed=5,target-shard=2,shard-kill=first:1,steal-race=always")
+            .unwrap();
+        assert!(!plan.should_fire_at(FaultSite::ShardKill, 0));
+        assert!(plan.should_fire_at(FaultSite::ShardKill, 2));
+        assert!(plan.maybe_delay_at(FaultSite::StealRace, 2).is_some());
+        assert!(plan.maybe_delay_at(FaultSite::StealRace, 1).is_none());
+        assert!(FaultPlan::parse("target-shard=x").is_err());
     }
 
     #[test]

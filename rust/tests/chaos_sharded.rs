@@ -1,0 +1,378 @@
+//! Deterministic chaos suite for the *sharded* serving coordinator.
+//!
+//! Extends the PR 6 chaos contract (`chaos_serving.rs`, which runs
+//! unchanged against the sharded build via `NNCG_SERVE_SHARDS`) with the
+//! shard-level failure modes:
+//!
+//! * **exactly one reply** per accepted request while a shard's worker is
+//!   repeatedly killed between requests and its backlog is stolen by
+//!   idle peers — with every served reply bit-identical to the
+//!   interpreter reference;
+//! * **shard lifecycle**: a sick shard is ejected from routing by its
+//!   breaker, probed half-open after the cooldown, and re-admitted —
+//!   while the other shard keeps serving and no request is lost;
+//! * **graceful drain/restart** of a shard under live traffic with zero
+//!   dropped accepted requests;
+//! * **steal races** (injected `steal-race` delays) never drop or
+//!   duplicate a reply;
+//! * the **heal pipeline** rebuilds a model in the background (real
+//!   `CcDriver` compile when the host has a C compiler, interpreter
+//!   rebuild otherwise) and hot-swaps it without losing in-flight
+//!   traffic.
+//!
+//! Every scenario is seeded (`NNCG_CHAOS_SEED`; CI runs seeds 1-3 × shard
+//! counts 1 and 4 for the compat suite, and this suite once per seed).
+
+use nncg::cc::{CcDriver, CompileLimits, CompiledCnn};
+use nncg::codegen::CodegenOptions;
+use nncg::coordinator::{
+    home_shard, serve_sharded, BreakerConfig, HealPipeline, Router, ServeError, ShardConfig,
+};
+use nncg::faults::{FaultPlan, FaultSite, FaultSpec};
+use nncg::graph::zoo;
+use nncg::interp::InterpEngine;
+use nncg::runtime::InferenceEngine;
+use nncg::tensor::Tensor;
+use nncg::util::XorShift64;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Seed for this run's fault plans (CI matrix: 1, 2, 3).
+fn chaos_seed() -> u64 {
+    std::env::var("NNCG_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+fn interp_engine(weight_seed: u64) -> Arc<dyn InferenceEngine> {
+    Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(weight_seed)).unwrap())
+}
+
+/// Acceptance (tentpole): a shard dies mid-flight — its worker is killed
+/// ten times between requests — and its queued backlog is stolen by idle
+/// peers. Every accepted request gets exactly one reply, every reply is
+/// bit-identical to the interpreter reference, and nothing is lost or
+/// duplicated.
+#[test]
+fn exactly_one_reply_while_home_shard_dies_and_queue_is_stolen() {
+    let shards = 4usize;
+    let home = home_shard("tiny", shards);
+    // Kill only the home shard's worker, at the top of its loop (never
+    // with a request in hand), ten times in a row: a ~20ms death storm
+    // right at startup while the backlog lands on its queue.
+    let plan = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::ShardKill, FaultSpec::First(10))
+        .target_shard(home)
+        .build();
+    let router = Arc::new(Router::new());
+    router.register("tiny", interp_engine(3));
+    let reference = interp_engine(3);
+    let handle = serve_sharded(
+        Arc::clone(&router),
+        ShardConfig {
+            shards,
+            workers_per_shard: 1,
+            queue_capacity: 4096,
+            steal: true,
+            // Keep the shard routable: this scenario isolates steal +
+            // respawn; ejection is exercised separately below.
+            breaker: BreakerConfig { failure_threshold: 1000, cooldown: Duration::from_millis(50) },
+            faults: Some(plan),
+            ..ShardConfig::default()
+        },
+    );
+
+    let mut rng = XorShift64::new(chaos_seed());
+    let total = 300usize;
+    let inputs: Vec<Tensor> = (0..total).map(|_| Tensor::rand(&[8, 8, 1], 0.0, 1.0, &mut rng)).collect();
+    let receivers: Vec<_> = inputs
+        .iter()
+        .map(|x| handle.submit("tiny", x.clone(), None).expect("queue sized for the full burst"))
+        .collect();
+
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("reply lost");
+        let y = reply.expect("kills never consume a request: all served");
+        let want = reference.infer(&inputs[i]).unwrap();
+        assert_eq!(y, want, "reply {i} must be bit-identical to the interpreter");
+        assert!(rx.try_recv().is_err(), "no second reply for request {i}");
+    }
+
+    let snap = handle.stop();
+    assert_eq!(snap.total_requests, total as u64);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.worker_respawns, 10, "deterministic First(10) kill storm");
+    assert_eq!(snap.shards.len(), shards);
+    assert_eq!(snap.shards[home].respawns, 10, "all kills land on the target shard");
+    assert!(snap.steals > 0, "peers must steal the dead shard's backlog");
+    assert!(
+        snap.shards.iter().enumerate().any(|(i, s)| i != home && s.stolen_by > 0),
+        "at least one peer shard executed stolen work: {:?}",
+        snap.shards
+    );
+}
+
+/// Acceptance: shard lifecycle closed → ejected → probing → readmitted.
+/// A kill storm trips the home shard's breaker (ejected from routing);
+/// the peer shard serves while it is out; after the cooldown one request
+/// probes it half-open, succeeds, and re-admits it. No request is lost
+/// at any point, and the *engine-level* breaker counters stay untouched.
+#[test]
+fn sick_shard_is_ejected_probed_and_readmitted() {
+    let shards = 2usize;
+    let home = home_shard("tiny", shards);
+    let peer = 1 - home;
+    let plan = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::ShardKill, FaultSpec::First(6))
+        .target_shard(home)
+        .build();
+    let router = Arc::new(Router::new());
+    router.register("tiny", interp_engine(3));
+    let handle = serve_sharded(
+        Arc::clone(&router),
+        ShardConfig {
+            shards,
+            workers_per_shard: 1,
+            queue_capacity: 1024,
+            // Stealing off: requests must stay where routing put them so
+            // the ejection window is observable per shard.
+            steal: false,
+            breaker: BreakerConfig { failure_threshold: 4, cooldown: Duration::from_millis(60) },
+            faults: Some(plan),
+            ..ShardConfig::default()
+        },
+    );
+
+    // Let the kill storm trip the breaker (6 kills ≈ 15ms; it opens at
+    // the 4th), then serve through the ejection + readmission window.
+    std::thread::sleep(Duration::from_millis(25));
+    let mut rng = XorShift64::new(chaos_seed());
+    let total = 30usize;
+    for i in 0..total {
+        let x = Tensor::rand(&[8, 8, 1], 0.0, 1.0, &mut rng);
+        let y = handle.infer("tiny", x);
+        assert!(y.is_ok(), "request {i} lost during ejection window: {y:?}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let snap = handle.stop();
+    assert_eq!(snap.total_requests, total as u64);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.worker_respawns, 6);
+    assert_eq!(snap.shards[home].respawns, 6);
+    assert!(snap.shard_ejects >= 1, "kill storm must eject the home shard");
+    assert!(snap.shard_probes >= 1, "cooldown must admit a half-open probe");
+    assert!(snap.shard_readmits >= 1, "successful probe must re-admit the shard");
+    assert!(snap.shards[peer].handled > 0, "peer serves while home is ejected");
+    assert!(snap.shards[home].handled > 0, "home serves again after readmission");
+    assert_eq!(snap.breaker_opens, 0, "engine-level breaker counters stay untouched");
+    assert_eq!(snap.breaker_closes, 0);
+    assert!(snap.sickest_shard().map(|s| s.idx) == Some(home), "home is the sickest shard");
+}
+
+/// Acceptance: a shard is drained and restarted under live traffic with
+/// zero dropped accepted requests — submissions reroute to the peer while
+/// the shard drains, and come back after the restart.
+#[test]
+fn drain_and_restart_under_live_traffic_loses_nothing() {
+    let shards = 2usize;
+    let home = home_shard("tiny", shards);
+    let peer = 1 - home;
+    let router = Arc::new(Router::new());
+    router.register("tiny", interp_engine(3));
+    let handle = serve_sharded(
+        Arc::clone(&router),
+        ShardConfig { shards, workers_per_shard: 1, queue_capacity: 4096, steal: false, ..ShardConfig::default() },
+    );
+
+    assert!(!handle.recycle_shard(99), "unknown shard index is rejected");
+
+    let submitter = handle.submitter();
+    let total = 200usize;
+    let pump = std::thread::spawn(move || {
+        let mut rng = XorShift64::new(chaos_seed());
+        let mut receivers = Vec::with_capacity(total);
+        for _ in 0..total {
+            let x = Tensor::rand(&[8, 8, 1], 0.0, 1.0, &mut rng);
+            receivers.push(submitter.submit("tiny", x, None).expect("admission stays open"));
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        receivers
+    });
+
+    // Recycle the home shard mid-stream: blocks until its backlog is
+    // served, its old worker retired, and a fresh one spawned.
+    std::thread::sleep(Duration::from_millis(15));
+    assert!(handle.recycle_shard(home), "recycle must succeed");
+
+    let receivers = pump.join().unwrap();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("reply lost");
+        assert!(reply.is_ok(), "request {i} dropped across the drain: {reply:?}");
+        assert!(rx.try_recv().is_err(), "no second reply for request {i}");
+    }
+
+    let snap = handle.stop();
+    assert_eq!(snap.total_requests, total as u64);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.shard_drains, 1);
+    assert_eq!(snap.shards[home].drains, 1);
+    assert!(snap.shards[peer].handled > 0, "traffic rerouted to the peer during the drain");
+    assert!(snap.shards[home].handled > 0, "home served before and/or after the restart");
+}
+
+/// Acceptance: injected steal-race delays (thief sleeps between choosing
+/// a victim and stealing, so thieves race each other and the owner) never
+/// drop or duplicate a reply.
+#[test]
+fn steal_races_never_drop_or_duplicate_replies() {
+    let plan = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::StealRace, FaultSpec::Every(1))
+        .delay(Duration::from_millis(2))
+        .build();
+    let router = Arc::new(Router::new());
+    router.register("tiny", interp_engine(3));
+    let handle = serve_sharded(
+        Arc::clone(&router),
+        ShardConfig {
+            shards: 4,
+            workers_per_shard: 1,
+            queue_capacity: 4096,
+            steal: true,
+            faults: Some(plan),
+            ..ShardConfig::default()
+        },
+    );
+
+    // One big burst to a single model: everything lands on the home
+    // shard, and the three idle peers race to steal it.
+    let mut rng = XorShift64::new(chaos_seed());
+    let total = 2000usize;
+    let receivers: Vec<_> = (0..total)
+        .map(|_| {
+            let x = Tensor::rand(&[8, 8, 1], 0.0, 1.0, &mut rng);
+            handle.submit("tiny", x, None).expect("queue sized for the burst")
+        })
+        .collect();
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("reply lost");
+        assert!(reply.is_ok(), "request {i}: {reply:?}");
+        assert!(rx.try_recv().is_err(), "no second reply for request {i}");
+    }
+
+    let snap = handle.stop();
+    assert_eq!(snap.total_requests, total as u64);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.worker_respawns, 0);
+    assert!(snap.steals > 0, "the burst must actually have been contended");
+}
+
+/// Acceptance: `stop_with_timeout` on a wedged sharded pool answers every
+/// still-queued request with a typed `Stopped` reply instead of hanging.
+#[test]
+fn stop_with_timeout_answers_backlog_with_typed_stopped() {
+    // A deliberately slow engine: each request parks its worker ~80ms.
+    let plan = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::LatencySpike, FaultSpec::Every(1))
+        .delay(Duration::from_millis(80))
+        .build();
+    let slow: Arc<dyn InferenceEngine> =
+        Arc::new(nncg::faults::FaultyEngine::new(interp_engine(3), plan));
+    let router = Arc::new(Router::new());
+    router.register("tiny", slow);
+    let handle = serve_sharded(
+        Arc::clone(&router),
+        ShardConfig { shards: 2, workers_per_shard: 1, queue_capacity: 64, steal: false, ..ShardConfig::default() },
+    );
+
+    let total = 6usize;
+    let receivers: Vec<_> = (0..total)
+        .map(|_| handle.submit("tiny", Tensor::zeros(&[8, 8, 1]), None).unwrap())
+        .collect();
+    std::thread::sleep(Duration::from_millis(20));
+    let t0 = std::time::Instant::now();
+    let snap = handle.stop_with_timeout(Duration::from_millis(120));
+    assert!(t0.elapsed() < Duration::from_secs(3), "deadline stop must not hang");
+
+    let mut served = 0u64;
+    let mut stopped = 0u64;
+    for rx in receivers {
+        match rx.recv().unwrap_or(Err(ServeError::Stopped)) {
+            Ok(_) => served += 1,
+            Err(ServeError::Stopped) => stopped += 1,
+            Err(other) => panic!("unexpected reply: {other:?}"),
+        }
+    }
+    assert_eq!(served + stopped, total as u64, "exactly one reply per accepted request");
+    assert!(served >= 1, "in-flight work finishes inside the grace window");
+    assert!(stopped >= 1, "deep backlog answered with typed Stopped");
+    assert_eq!(snap.stopped_replies, stopped);
+}
+
+/// Acceptance: the per-model heal pipeline rebuilds in the background —
+/// with the real `CcDriver` under `CompileLimits` when the host has a C
+/// compiler, an interpreter rebuild otherwise — and hot-swaps via
+/// `Router::register` without losing any in-flight traffic.
+#[test]
+fn heal_pipeline_recompiles_and_hot_swaps_under_live_traffic() {
+    let model = zoo::tiny_test_net().with_random_weights(3);
+    let interp: Arc<dyn InferenceEngine> = Arc::new(InterpEngine::new(model.clone()).unwrap());
+    let router = Arc::new(Router::new());
+    router.register("tiny", Arc::clone(&interp));
+    let handle = serve_sharded(
+        Arc::clone(&router),
+        ShardConfig { shards: 2, workers_per_shard: 1, queue_capacity: 4096, ..ShardConfig::default() },
+    );
+    let heal = HealPipeline::new(Arc::clone(&router))
+        .with_counters(Arc::clone(handle.metrics.counters()));
+
+    // Live traffic racing the rebuild + hot swap.
+    let submitter = handle.submitter();
+    let traffic = std::thread::spawn(move || {
+        let mut rng = XorShift64::new(chaos_seed());
+        let mut okays = 0usize;
+        for _ in 0..200 {
+            let x = Tensor::rand(&[8, 8, 1], 0.0, 1.0, &mut rng);
+            if submitter.infer("tiny", x).is_ok() {
+                okays += 1;
+            }
+        }
+        okays
+    });
+
+    let m = model.clone();
+    let accepted = heal.request_rebuild("tiny", move || {
+        match CcDriver::detect() {
+            Ok(driver) => {
+                let driver = driver.with_limits(CompileLimits {
+                    timeout: Duration::from_secs(60),
+                    max_retries: 1,
+                    backoff_base: Duration::from_millis(10),
+                });
+                let dir = std::env::temp_dir().join(format!("nncg-heal-sharded-seed{}", chaos_seed()));
+                std::fs::create_dir_all(&dir).map_err(|e| anyhow::anyhow!("mkdir: {e}"))?;
+                let cnn = CompiledCnn::build_with(&m, &CodegenOptions::sse3(), &dir, &driver)?;
+                Ok(Arc::new(cnn) as Arc<dyn InferenceEngine>)
+            }
+            // No host compiler: heal back to a fresh interpreter so the
+            // pipeline mechanics are still exercised end to end.
+            Err(_) => Ok(Arc::new(InterpEngine::new(m.clone())?) as Arc<dyn InferenceEngine>),
+        }
+    });
+    assert!(accepted, "free slot must accept the rebuild");
+    assert_eq!(heal.wait_idle(), 1, "exactly one successful heal");
+
+    let okays = traffic.join().unwrap();
+    assert_eq!(okays, 200, "no request lost across the hot swap");
+
+    // The healed engine (generated C or interpreter) is bit-identical.
+    let mut rng = XorShift64::new(chaos_seed() + 1);
+    let x = Tensor::rand(&[8, 8, 1], 0.0, 1.0, &mut rng);
+    let want = interp.infer(&x).unwrap();
+    let got = handle.infer("tiny", x).unwrap();
+    assert_eq!(got, want, "healed engine serves bit-identical results");
+
+    let snap = handle.stop();
+    assert_eq!(snap.heals_started, 1);
+    assert_eq!(snap.heals_succeeded, 1);
+    assert_eq!(snap.heals_failed, 0);
+    assert_eq!(snap.errors, 0);
+}
