@@ -32,4 +32,29 @@ float32x2_t vget_high_f32(float32x4_t a);
 float32x2_t vpadd_f32(float32x2_t a, float32x2_t b);
 float vget_lane_f32(float32x2_t a, int lane);
 
+/* --dtype int8 vocabulary (rust/src/codegen/simd.rs QNEON / QNEON_DOT) */
+typedef struct {
+    int nncg_stub_lanes[4];
+} int32x4_t;
+
+typedef struct {
+    short nncg_stub_lanes[4];
+} int16x4_t;
+
+typedef struct {
+    signed char nncg_stub_lanes[16];
+} int8x16_t;
+
+int32x4_t vld1q_s32(const int *ptr);
+void vst1q_s32(int *ptr, int32x4_t val);
+int16x4_t vld1_s16(const short *ptr);
+int16x4_t vdup_n_s16(short value);
+/* widening multiply-accumulate: int16 x int16 + int32, exact */
+int32x4_t vmlal_s16(int32x4_t a, int16x4_t b, int16x4_t c);
+/* ARMv8.2+dotprod flavor (--isa neon-dot) */
+int8x16_t vld1q_s8(const signed char *ptr);
+int32x4_t vdupq_n_s32(int value);
+int8x16_t vreinterpretq_s8_s32(int32x4_t a);
+int32x4_t vdotq_s32(int32x4_t a, int8x16_t b, int8x16_t c);
+
 #endif /* NNCG_STUB_ARM_NEON_H */

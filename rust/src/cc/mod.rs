@@ -178,6 +178,28 @@ pub fn verify_against_interp(model: &Model, opts: &CodegenOptions, work_dir: imp
     Ok(worst)
 }
 
+/// int8 counterpart of [`verify_against_interp`]: compile the `--dtype
+/// int8` C and compare it against the interpreter's int8 reference path
+/// ([`crate::interp::run_quantized`]) over the **same** optimized model
+/// and quant plan codegen derives. Models without a trailing softmax
+/// must match bit-exactly (0.0); a trailing softmax adds only the float
+/// epilogue's libm-level term (< 1e-6), since everything before it is
+/// the identical integer arithmetic on both sides.
+pub fn verify_int8_against_oracle(model: &Model, opts: &CodegenOptions, work_dir: impl AsRef<Path>, trials: usize, seed: u64) -> Result<f32> {
+    let cnn = CompiledCnn::build(model, opts, work_dir)?;
+    let opt = crate::passes::optimize(model.clone())?;
+    let qp = crate::passes::quantize_model(&opt)?;
+    let mut rng = crate::util::XorShift64::new(seed);
+    let mut worst = 0.0f32;
+    for _ in 0..trials {
+        let x = Tensor::rand(model.input.dims(), -1.0, 1.0, &mut rng);
+        let y_ref = crate::interp::run_quantized(&opt, &qp, &x)?;
+        let y_c = cnn.infer(&x)?;
+        worst = worst.max(y_ref.max_abs_diff(&y_c)?);
+    }
+    Ok(worst)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -3,7 +3,8 @@
 use super::args::Args;
 use crate::cc::{CcDriver, CcTarget, CompiledCnn};
 use crate::codegen::{
-    generate_c, AlignMode, CodegenOptions, FuseMode, Isa, PadMode, RolledMode, TileMode, Unroll,
+    generate_c, AlignMode, ChanPad, CodegenOptions, DType, FuseMode, Isa, PadMode, RolledMode,
+    TileMode, Unroll,
 };
 use crate::coordinator;
 use crate::experiments::{self, build_engine, load_model};
@@ -18,7 +19,7 @@ use std::path::PathBuf;
 fn opts_from_args(args: &Args) -> Result<CodegenOptions> {
     let isa_name = args.get_or("isa", "sse3");
     let isa = Isa::from_name(isa_name)
-        .ok_or_else(|| anyhow::anyhow!("unknown --isa {isa_name:?} (generic|sse3|avx2|neon|neon-vfpv3)"))?;
+        .ok_or_else(|| anyhow::anyhow!("unknown --isa {isa_name:?} (generic|sse3|avx2|neon|neon-vfpv3|neon-dot)"))?;
     let unroll = Unroll::from_name(args.get_or("unroll", "keep-outer-2"))
         .ok_or_else(|| anyhow::anyhow!("unknown --unroll (none|2|1|full)"))?;
     let pad_mode = PadMode::from_name(args.get_or("pad-mode", "auto"))
@@ -37,6 +38,10 @@ fn opts_from_args(args: &Args) -> Result<CodegenOptions> {
              off = unrolled row schedule)"
         )
     })?;
+    let dtype = DType::from_name(args.get_or("dtype", "f32"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --dtype (f32 | int8 = symmetric post-training quantization)"))?;
+    let chan_pad = ChanPad::from_name(args.get_or("chan-pad", "auto"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --chan-pad (auto = round ring row strides to vector groups | off)"))?;
     Ok(CodegenOptions {
         isa,
         unroll,
@@ -45,6 +50,8 @@ fn opts_from_args(args: &Args) -> Result<CodegenOptions> {
         align,
         fuse,
         fuse_rolled,
+        dtype,
+        chan_pad,
         test_harness: args.has_flag("harness"),
         ..Default::default()
     })
@@ -94,9 +101,19 @@ pub fn verify(args: &Args) -> Result<i32> {
         );
     }
     let trials = args.get_usize("trials", 5)?;
-    let err = crate::cc::verify_against_interp(&model, &opts, experiments::default_work_dir(), trials, 42)?;
-    println!("model={} opts={} trials={trials} max_abs_err={err:.3e}", model.name, opts.tag());
-    if err < 1e-4 {
+    // f32 compares the compiled C against the float interpreter; int8
+    // compares against the int8 reference path on the same quant plan
+    // (bit-exact integers, so the tolerance only covers the float
+    // softmax epilogue's libm term).
+    let (err, tol, oracle) = if opts.dtype == DType::Int8 {
+        let e = crate::cc::verify_int8_against_oracle(&model, &opts, experiments::default_work_dir(), trials, 42)?;
+        (e, 1e-6, "int8-interp")
+    } else {
+        let e = crate::cc::verify_against_interp(&model, &opts, experiments::default_work_dir(), trials, 42)?;
+        (e, 1e-4, "interp")
+    };
+    println!("model={} opts={} oracle={oracle} trials={trials} max_abs_err={err:.3e}", model.name, opts.tag());
+    if err < tol {
         println!("VERIFY OK");
         Ok(0)
     } else {
@@ -444,7 +461,29 @@ mod tests {
         assert_eq!(o.unroll, Unroll::Full);
         assert_eq!(o.pad_mode, PadMode::Auto);
         assert_eq!(o.tile, TileMode::Auto);
+        assert_eq!(o.dtype, DType::F32);
+        assert_eq!(o.chan_pad, ChanPad::Auto);
         assert!(opts_from_args(&args(&["--isa", "avx512"])).is_err());
+    }
+
+    #[test]
+    fn dtype_and_chan_pad_knobs_parse() {
+        let o = opts_from_args(&args(&["--dtype", "int8"])).unwrap();
+        assert_eq!(o.dtype, DType::Int8);
+        assert!(o.tag().contains("dtint8"));
+        let o = opts_from_args(&args(&["--chan-pad", "off"])).unwrap();
+        assert_eq!(o.chan_pad, ChanPad::Off);
+        assert!(o.tag().contains("cpoff"));
+        // Defaults keep the pre-int8 byte-stable tags.
+        let o = opts_from_args(&args(&[])).unwrap();
+        assert!(!o.tag().contains("dtint8"));
+        assert!(!o.tag().contains("cpoff"));
+        assert!(opts_from_args(&args(&["--dtype", "int4"])).is_err());
+        assert!(opts_from_args(&args(&["--chan-pad", "always"])).is_err());
+        // neon-dot is reachable from the CLI (int8 SDOT row).
+        let o = opts_from_args(&args(&["--isa", "neon-dot", "--dtype", "int8"])).unwrap();
+        assert_eq!(o.isa, Isa::NeonDot);
+        assert!(o.isa.is_neon());
     }
 
     #[test]
@@ -504,6 +543,9 @@ mod tests {
         }
         let err = verify(&args(&["--model", "tiny", "--isa", "neon"])).unwrap_err();
         assert!(format!("{err:#}").contains("neon"), "{err:#}");
+        // The dotprod flavor is equally ARM-only.
+        let err = verify(&args(&["--model", "tiny", "--isa", "neon-dot", "--dtype", "int8"])).unwrap_err();
+        assert!(format!("{err:#}").contains("neon-dot"), "{err:#}");
     }
 
     #[test]

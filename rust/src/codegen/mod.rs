@@ -50,6 +50,7 @@ mod dense;
 mod depthwise;
 mod harness;
 mod pool;
+mod qemit;
 mod schedule;
 mod simd;
 
@@ -82,6 +83,11 @@ pub enum Isa {
     /// `vmlaq_f32` (`vfmaq_f32` needs VFPv4). Same Array-only constants
     /// and alignment-agnostic loads as [`Isa::Neon`].
     NeonVfpv3,
+    /// ARMv8.2+dotprod NEON: identical f32 vocabulary to [`Isa::Neon`],
+    /// but the int8 path (`--dtype int8`) uses the SDOT instruction
+    /// (`vdotq_s32`, 4 int8×int8 products per int32 lane per step)
+    /// instead of the widening `vmlal_s16` baseline.
+    NeonDot,
 }
 
 impl Isa {
@@ -92,6 +98,7 @@ impl Isa {
             Isa::Avx2 => "avx2",
             Isa::Neon => "neon",
             Isa::NeonVfpv3 => "neon-vfpv3",
+            Isa::NeonDot => "neon-dot",
         }
     }
 
@@ -102,13 +109,14 @@ impl Isa {
             "avx2" => Isa::Avx2,
             "neon" => Isa::Neon,
             "neon-vfpv3" => Isa::NeonVfpv3,
+            "neon-dot" => Isa::NeonDot,
             _ => return None,
         })
     }
 
-    /// True for the ARM NEON family (either multiply-accumulate flavor).
+    /// True for the ARM NEON family (any multiply-accumulate flavor).
     pub fn is_neon(&self) -> bool {
-        matches!(self, Isa::Neon | Isa::NeonVfpv3)
+        matches!(self, Isa::Neon | Isa::NeonVfpv3 | Isa::NeonDot)
     }
 }
 
@@ -420,6 +428,76 @@ impl RolledMode {
     }
 }
 
+/// Numeric emission domain (`--dtype`).
+///
+/// `Int8` switches the whole generated artifact to post-training
+/// symmetric quantization: a [`crate::passes::QuantPlan`] is computed
+/// from a deterministic calibration batch run through the interpreter,
+/// weights are emitted as quantized integer arrays, activations flow as
+/// `signed char` planes/rings, accumulation is int32, and the int32 →
+/// int8 **requantization (multiply-shift, no float)** happens only at
+/// fusion-group boundaries — inside a group the data stays int8 end to
+/// end through the ring/rolled machinery. Float appears exactly twice:
+/// quantizing `x_in` on entry and dequantizing into `x_out` on exit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    /// f32 emission (default; the paper's numeric domain).
+    F32,
+    /// int8 symmetric quantized emission.
+    Int8,
+}
+
+impl DType {
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::Int8 => "int8",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DType> {
+        Some(match s {
+            "f32" => DType::F32,
+            "int8" => DType::Int8,
+            _ => return None,
+        })
+    }
+}
+
+/// Channel-stride padding of ring line buffers (`--chan-pad`).
+///
+/// Under `Auto` (default) each ring row's element stride is rounded up
+/// to a whole vector group (8 floats / 32 int8 lanes), so odd channel
+/// counts keep 32-byte-aligned row starts — the alignment prover can
+/// then use aligned loads on every ring row, not just those whose
+/// natural `w*c` happens to divide the group. Only takes effect when
+/// alignment is on ([`AlignMode::Auto`]); the pad tail is never read or
+/// written. `Off` keeps exact `w*c` row strides.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChanPad {
+    /// Round ring row strides up to a vector group (default).
+    Auto,
+    /// Exact row strides (pre-PR-8 layout).
+    Off,
+}
+
+impl ChanPad {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChanPad::Auto => "auto",
+            ChanPad::Off => "off",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<ChanPad> {
+        Some(match s {
+            "auto" => ChanPad::Auto,
+            "off" => ChanPad::Off,
+            _ => return None,
+        })
+    }
+}
+
 /// Code generation options.
 #[derive(Debug, Clone)]
 pub struct CodegenOptions {
@@ -447,6 +525,10 @@ pub struct CodegenOptions {
     pub fuse: FuseMode,
     /// Steady-state rolled emission of fused row schedules.
     pub fuse_rolled: RolledMode,
+    /// Numeric emission domain (f32 or symmetric int8).
+    pub dtype: DType,
+    /// Ring row-stride padding to whole vector groups.
+    pub chan_pad: ChanPad,
 }
 
 impl Default for CodegenOptions {
@@ -463,6 +545,8 @@ impl Default for CodegenOptions {
             align: AlignMode::Auto,
             fuse: FuseMode::Off,
             fuse_rolled: RolledMode::Auto,
+            dtype: DType::F32,
+            chan_pad: ChanPad::Auto,
         }
     }
 }
@@ -521,9 +605,11 @@ impl CodegenOptions {
         self.align == AlignMode::Auto
     }
 
-    /// Short tag used in cache keys and bench labels.
+    /// Short tag used in cache keys and bench labels. The PR-8 knobs
+    /// append suffixes only at their non-default settings, so every
+    /// pre-existing configuration keeps a byte-stable tag.
     pub fn tag(&self) -> String {
-        format!(
+        let mut tag = format!(
             "{}-{}-{}-pad{}-t{}-al{}-fu{}-fr{}",
             self.isa.name(),
             self.unroll.name(),
@@ -533,7 +619,14 @@ impl CodegenOptions {
             self.align.name(),
             self.fuse.name(),
             self.fuse_rolled.name(),
-        )
+        );
+        if self.chan_pad == ChanPad::Off {
+            tag.push_str("-cpoff");
+        }
+        if self.dtype == DType::Int8 {
+            tag.push_str("-dtint8");
+        }
+        tag
     }
 }
 
@@ -561,6 +654,13 @@ pub(crate) struct LayerCtx<'a> {
 pub fn generate_c(model: &Model, opts: &CodegenOptions) -> Result<String> {
     let model = crate::passes::optimize(model.clone())?;
     let shapes = model.infer_shapes()?;
+
+    // int8 emission is a parallel orchestration over the same fusion /
+    // buffer machinery; it computes the QuantPlan and emits integer
+    // bodies end to end.
+    if opts.dtype == DType::Int8 {
+        return qemit::generate_int8(&model, &shapes, opts);
+    }
 
     // Derive-once fusion bundle: the group partition plus every group's
     // row plans, demand schedule and rolled emission plan. The cost guard,
@@ -681,7 +781,7 @@ pub fn generate_c(model: &Model, opts: &CodegenOptions) -> Result<String> {
                     shapes[group.start],
                     shapes[group.end]
                 ));
-                emit_fused_group(&mut w, &model, &shapes, group, fp, &cur_src, &dst, &plan, opts)?;
+                emit_fused_group(&mut w, &model, &shapes, group, fp, &cur_src, &dst, &plan, opts, None)?;
                 cur_src = dst;
             }
         }
@@ -724,6 +824,13 @@ fn emit_prelude(w: &mut CWriter, model: &Model, ident: &str, opts: &CodegenOptio
         Isa::Avx2 => w.line(" * ANSI C + x86 AVX2/FMA intrinsics (needs an AVX2-capable target)."),
         Isa::Neon => w.line(" * ANSI C + ARM NEON intrinsics (AArch64 or ARMv7+VFPv4 for vfmaq_f32)."),
         Isa::NeonVfpv3 => w.line(" * ANSI C + ARM NEON intrinsics (ARMv7 pre-VFPv4: non-fused vmlaq_f32)."),
+        Isa::NeonDot => w.line(" * ANSI C + ARM NEON intrinsics (ARMv8.2+dotprod: vdotq_s32 on the int8 path)."),
+    }
+    if opts.dtype == DType::Int8 {
+        w.line(" * dtype: int8 — symmetric post-training quantization (per-channel");
+        w.line(" *        conv weight scales); int32 accumulators with multiply-shift");
+        w.line(" *        requantization at fusion-group boundaries; no float between");
+        w.line(" *        the entry quantize and the exit dequantize planes.");
     }
     w.line(" */");
     let uses_softmax = model.layers.iter().any(|l| {
@@ -738,7 +845,7 @@ fn emit_prelude(w: &mut CWriter, model: &Model, ident: &str, opts: &CodegenOptio
         Isa::Generic => {}
         Isa::Sse3 => w.line("#include <emmintrin.h>"),
         Isa::Avx2 => w.line("#include <immintrin.h>"),
-        Isa::Neon | Isa::NeonVfpv3 => w.line("#include <arm_neon.h>"),
+        Isa::Neon | Isa::NeonVfpv3 | Isa::NeonDot => w.line("#include <arm_neon.h>"),
     }
     if opts.use_aligned() {
         w.blank();
@@ -825,6 +932,15 @@ struct BufferPlan {
 /// tails never share a vector-width line with unrelated data.
 fn round_to_vec(n: usize) -> usize {
     crate::util::div_ceil(n, 8) * 8
+}
+
+/// Elements in one 32-byte vector group for the emission dtype (8 f32
+/// lanes or 32 int8 lanes) — the `--chan-pad` rounding quantum.
+fn dtype_quantum(dtype: DType) -> usize {
+    match dtype {
+        DType::F32 => 8,
+        DType::Int8 => 32,
+    }
 }
 
 /// Auto-fusion statement budget per group. Fused emission unrolls the row
@@ -922,11 +1038,16 @@ pub(crate) fn plan_fusion(
     let mut out: Vec<PlannedGroup> = Vec::new();
     for chain in crate::passes::plan_fusion_groups(model, usize::MAX) {
         // Row streaming needs image-shaped planes on both sides; split the
-        // chain at any non-3D boundary.
+        // chain at any non-3D boundary. int8 additionally splits at layers
+        // the integer row emitter does not fuse (depthwise/avgpool stay
+        // whole-plane under int8).
         let mut runs: Vec<FusionGroup> = Vec::new();
         let mut start = chain.start;
         for i in chain.start..chain.end {
-            if shapes[i].rank() != 3 || shapes[i + 1].rank() != 3 {
+            if shapes[i].rank() != 3
+                || shapes[i + 1].rank() != 3
+                || (opts.dtype == DType::Int8 && !int8_fusable(&model.layers[i]))
+            {
                 if i > start {
                     runs.push(FusionGroup { start, end: i });
                 }
@@ -1017,6 +1138,21 @@ pub(crate) fn plan_fusion(
         }
     }
     Ok(FusionPlanBundle { groups: out })
+}
+
+/// Layers [`qemit::emit_qrow`] can emit as fused int8 row ops. Conv must
+/// carry an integer-expressible activation (softmax is a float epilogue,
+/// never fused); depthwise and average pooling keep their whole-plane
+/// int8 emitters.
+fn int8_fusable(layer: &Layer) -> bool {
+    matches!(
+        layer,
+        Layer::Conv2D {
+            activation: Activation::None | Activation::Relu | Activation::LeakyRelu(_),
+            ..
+        } | Layer::MaxPool2D { .. }
+            | Layer::Activation(Activation::None | Activation::Relu | Activation::LeakyRelu(_))
+    )
 }
 
 /// Statement cost of a rolled plan: every unrolled op plus one pattern
@@ -1159,8 +1295,12 @@ fn emit_fused_group(
     group_dst: &str,
     plan: &BufferPlan,
     opts: &CodegenOptions,
+    qp: Option<&crate::passes::QuantPlan>,
 ) -> Result<()> {
     use schedule::Segment;
+    // int8 groups carry signed-char rings; everything else about the
+    // ring/rolled machinery (slots, rotation, phases) is dtype-blind.
+    let ety = if qp.is_some() { "signed char" } else { "float" };
     let plans = &fp.plans;
     let layout = &fp.layout;
     let rp = match &fp.rolled {
@@ -1169,7 +1309,7 @@ fn emit_fused_group(
             for op in &layout.ops {
                 emit_group_row_op(
                     w, model, shapes, group, group_src, group_dst, plan, opts, plans, layout, op,
-                    None,
+                    None, qp,
                 )?;
             }
             return Ok(());
@@ -1207,7 +1347,7 @@ fn emit_fused_group(
             let ring = find_ring(plan, group.start + e)?;
             for k in 0..ring.rows {
                 w.line(&format!(
-                    "float *nncg_ring{gl}_r{k} = nncg_ring{gl} + {};",
+                    "{ety} *nncg_ring{gl}_r{k} = nncg_ring{gl} + {};",
                     k * ring.row_elems,
                     gl = ring.layer
                 ));
@@ -1222,7 +1362,7 @@ fn emit_fused_group(
                 for op in &layout.ops[*lo..*hi] {
                     emit_group_row_op(
                         w, model, shapes, group, group_src, group_dst, plan, opts, plans, layout,
-                        op, None,
+                        op, None, qp,
                     )?;
                 }
             }
@@ -1252,10 +1392,10 @@ fn emit_fused_group(
                     for op in &layout.ops[l.pattern()] {
                         emit_group_row_op(
                             w, model, shapes, group, group_src, group_dst, plan, opts, plans,
-                            layout, op, Some(&ctx),
+                            layout, op, Some(&ctx), qp,
                         )?;
                     }
-                    emit_ring_rotations(w, group, layout, &ctx)?;
+                    emit_ring_rotations(w, group, layout, &ctx, ety)?;
                 }
                 w.close();
                 if let Some(adv) = adv {
@@ -1282,6 +1422,7 @@ fn emit_ring_rotations(
     group: &crate::passes::FusionGroup,
     layout: &schedule::GroupLayout,
     ctx: &LoopCtx<'_>,
+    ety: &str,
 ) -> Result<()> {
     let adv = match ctx.edge_adv {
         Some(adv) => adv,
@@ -1302,7 +1443,7 @@ fn emit_ring_rotations(
     for &(e, _, g) in &rot {
         let gl = group.start + e;
         for t in 0..g {
-            w.line(&format!("float *nncg_rt{e}_{t} = nncg_ring{gl}_r{t};"));
+            w.line(&format!("{ety} *nncg_rt{e}_{t} = nncg_ring{gl}_r{t};"));
         }
     }
     for &(e, r, g) in &rot {
@@ -1338,6 +1479,7 @@ fn emit_group_row_op(
     layout: &schedule::GroupLayout,
     op: &schedule::RowOp,
     loop_ctx: Option<&LoopCtx<'_>>,
+    qp: Option<&crate::passes::QuantPlan>,
 ) -> Result<()> {
     use schedule::{FusedRowIo, RotPtrs, RowMap};
     let members = group.len();
@@ -1436,6 +1578,11 @@ fn emit_group_row_op(
             lc.row_delta[op.layer]
         )),
     }
+    if let Some(qp) = qp {
+        // int8 fused rows: one shared integer row emitter per layer kind
+        // (qemit), addressing rows through the same FusedRowIo contract.
+        return qemit::emit_qrow(w, &ctx, &model.layers[i], &qp.layers[i], &io);
+    }
     match &model.layers[i] {
         Layer::Conv2D { weights, bias, stride, padding, activation } => {
             conv::emit_conv_row_fused(w, &ctx, weights, bias, *stride, *padding, *activation, &io)?
@@ -1488,7 +1635,15 @@ fn plan_buffers(
         if let Some(fp) = &pg.fused {
             for e in 0..group.len() - 1 {
                 let out_s = &shapes[group.start + e + 1];
-                let row_elems = out_s.w() * out_s.c();
+                let mut row_elems = out_s.w() * out_s.c();
+                // Channel-stride padding: round each ring row's stride up
+                // to a whole vector group, so every ring row starts
+                // 32-byte aligned and odd channel counts keep aligned
+                // interiors. The pad tail is never read or written.
+                if opts.chan_pad == ChanPad::Auto && opts.use_aligned() {
+                    let q = dtype_quantum(opts.dtype);
+                    row_elems = crate::util::div_ceil(row_elems, q) * q;
+                }
                 let rows = fp.layout.ring_rows[e];
                 let mut floats = rows * row_elems;
                 if opts.use_aligned() {
@@ -1532,20 +1687,25 @@ fn plan_buffers(
 /// intermediate to O(k_h·W·C) per fused edge.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ScratchReport {
-    /// Floats per ping-pong scratch buffer (two are declared).
+    /// Elements per ping-pong scratch buffer (two are declared). Named
+    /// for the f32 path; under `--dtype int8` the same count is in
+    /// `signed char` elements.
     pub main_floats: usize,
-    /// Floats in the pad-copy buffer (0 under padless emission).
+    /// Elements in the pad-copy buffer (0 under padless emission and in
+    /// the int8 path, which peels border rows instead of pad-copying).
     pub pad_floats: usize,
-    /// Total floats across all ring line buffers.
+    /// Total elements across all ring line buffers.
     pub ring_floats: usize,
     /// Number of ring buffers (fused interior edges).
     pub ring_count: usize,
+    /// Bytes per scratch element: 4 for f32, 1 for int8.
+    pub elem_bytes: usize,
 }
 
 impl ScratchReport {
     /// Total static scratch bytes the generated file declares.
     pub fn total_bytes(&self) -> usize {
-        (2 * self.main_floats.max(1) + self.pad_floats + self.ring_floats) * 4
+        (2 * self.main_floats.max(1) + self.pad_floats + self.ring_floats) * self.elem_bytes
     }
 }
 
@@ -1556,11 +1716,19 @@ pub fn scratch_report(model: &Model, opts: &CodegenOptions) -> Result<ScratchRep
     let shapes = model.infer_shapes()?;
     let bundle = plan_fusion(&model, &shapes, opts)?;
     let plan = plan_buffers(&model, &shapes, opts, &bundle)?;
+    let int8 = opts.dtype == DType::Int8;
+    let mut main = plan.main_size;
+    if int8 {
+        // The int8 rings also host the quantized entry and exit planes,
+        // so they are at least input/output sized (mirrors qemit).
+        main = main.max(model.input.numel()).max(model.output_shape()?.numel());
+    }
     Ok(ScratchReport {
-        main_floats: plan.main_size,
-        pad_floats: plan.pad_size,
+        main_floats: main,
+        pad_floats: if int8 { 0 } else { plan.pad_size },
         ring_floats: plan.rings.iter().map(|r| r.floats).sum(),
         ring_count: plan.rings.len(),
+        elem_bytes: if int8 { 1 } else { 4 },
     })
 }
 
@@ -1734,6 +1902,16 @@ mod tests {
         let e = CodegenOptions { tile: TileMode::Off, ..CodegenOptions::sse3() }.tag();
         assert_ne!(b, d);
         assert_ne!(b, e);
+        // PR-8 knobs: suffixes only at non-default settings, so every
+        // pre-existing configuration keeps a byte-stable tag.
+        assert!(!b.contains("-cpoff") && !b.contains("-dtint8"));
+        let f = CodegenOptions { dtype: DType::Int8, ..CodegenOptions::sse3() }.tag();
+        let g = CodegenOptions { chan_pad: ChanPad::Off, ..CodegenOptions::sse3() }.tag();
+        assert!(f.ends_with("-dtint8"));
+        assert!(g.ends_with("-cpoff"));
+        assert_ne!(b, f);
+        assert_ne!(b, g);
+        assert_eq!(f.replace("-dtint8", ""), b);
     }
 
     #[test]
@@ -1777,9 +1955,17 @@ mod tests {
     /// all round-trip through these names).
     #[test]
     fn option_enum_names_round_trip() {
-        for isa in [Isa::Generic, Isa::Sse3, Isa::Avx2, Isa::Neon, Isa::NeonVfpv3] {
+        for isa in [Isa::Generic, Isa::Sse3, Isa::Avx2, Isa::Neon, Isa::NeonVfpv3, Isa::NeonDot] {
             assert_eq!(Isa::from_name(isa.name()), Some(isa));
         }
+        for d in [DType::F32, DType::Int8] {
+            assert_eq!(DType::from_name(d.name()), Some(d));
+        }
+        assert_eq!(DType::from_name("int16"), None);
+        for c in [ChanPad::Auto, ChanPad::Off] {
+            assert_eq!(ChanPad::from_name(c.name()), Some(c));
+        }
+        assert_eq!(ChanPad::from_name("on"), None);
         let mut fuses = vec![FuseMode::Auto, FuseMode::Off];
         for n in 2..=8 {
             fuses.push(FuseMode::Depth(n));

@@ -1,0 +1,1283 @@
+//! int8 code emission (`--dtype int8`).
+//!
+//! [`generate_int8`] mirrors the f32 orchestration in `codegen::mod` over
+//! the same fusion/buffer machinery, but the hot path is pure integer
+//! arithmetic: the input plane is quantized **once** on entry, every
+//! layer consumes and produces `signed char` planes with int32
+//! accumulators and multiply-shift requantization at fusion-group
+//! boundaries, and the output is dequantized **once** on exit (plus a
+//! float softmax epilogue when the model ends in one). No `float`
+//! appears between the entry and exit planes — CI greps fused-group
+//! bodies for exactly this invariant.
+//!
+//! Bit-exactness contract: every integer step emitted here is the same
+//! arithmetic the interpreter oracle (`interp::run_quantized`) computes
+//! through the shared `passes::{requant, qleaky, qavg, quantize_input}`
+//! helpers, and the per-layer accumulators are proven saturation-free by
+//! `passes::quantize_model` — so accumulation order cannot change the
+//! result and fused/unfused, rolled/expanded emissions of the same model
+//! agree bit-for-bit with the oracle and with each other.
+//!
+//! Portability notes baked into the emitted formulas:
+//! * `>>` on negative `int` is an arithmetic shift on every gcc / clang /
+//!   MSVC target (implementation-defined in C89, universal in practice;
+//!   matches Rust's `i32 >>`).
+//! * Activation words are composed from **sign-extended** fields through
+//!   `unsigned` subwords, avoiding signed-shift UB; the final
+//!   `unsigned → int` conversion above `INT_MAX` is implementation-
+//!   defined in C89 but two's-complement everywhere we target.
+//! * x86 deliberately avoids `_mm*_maddubs_epi16` (it saturates its int16
+//!   pair sums); the exact `_mm*_madd_epi16` over sign-extended int16
+//!   pairs is used instead — see `simd::QSSE`.
+//!
+//! Knob behavior under int8: `--tile` and `--const-mode` are ignored
+//! (weights always live in static arrays; register tiling is a f32
+//! concern), and `--pad` affects only the fusion partition — emission is
+//! always padless region splitting, which is semantically identical to
+//! zero-padding because the symmetric scheme has zero-point 0.
+
+use super::schedule::{fused_base, AxisPlan, FusedRowIo};
+use super::simd::{QChannelSchedule, QVecSpec};
+use super::{
+    c_ident, emit_prelude, estimate_statements, fmt_f32, harness, is_inplace, plan_buffers,
+    plan_fusion, CWriter, CodegenOptions, Isa, LayerCtx, Unroll,
+};
+use crate::graph::{Activation, Layer, Model};
+use crate::passes::{self, avg_mult, leaky_mult, LayerQuant, QuantArith, ACT_SHIFT};
+use crate::tensor::Shape;
+use crate::util::div_ceil;
+use anyhow::{bail, Result};
+
+/// Generate the complete int8 C source for an already-optimized model.
+pub(super) fn generate_int8(
+    model: &Model,
+    shapes: &[Shape],
+    opts: &CodegenOptions,
+) -> Result<String> {
+    if !matches!(opts.unroll, Unroll::KeepOuter1 | Unroll::KeepOuter2) {
+        bail!(
+            "--dtype int8 supports the keep-outer-1/keep-outer-2 unroll levels only (got {})",
+            opts.unroll.name()
+        );
+    }
+    let qp = passes::quantize_model(model)?;
+    let bundle = plan_fusion(model, shapes, opts)?;
+    let est = estimate_statements(model, shapes, opts, &bundle);
+    if est > opts.max_statements {
+        bail!(
+            "unroll level {:?} would emit ~{est} statements for model {:?} (limit {}); \
+             use a coarser unroll level",
+            opts.unroll,
+            model.name,
+            opts.max_statements
+        );
+    }
+
+    let ident = c_ident(&model.name);
+    let mut w = CWriter::new();
+    emit_prelude(&mut w, model, &ident, opts, shapes);
+
+    // int8 scratch: the ping-pong buffers additionally hold the quantized
+    // input plane (entry) and the int8 logits plane (exit — x_out is
+    // float, so the last group cannot write it directly), hence the max
+    // over the boundary planes and both endpoints. Padless emission means
+    // no nncg_pad buffer ever exists on this path.
+    let plan = plan_buffers(model, shapes, opts, &bundle)?;
+    let qual = if opts.use_aligned() { "NNCG_ALIGN(32) " } else { "" };
+    let in_n = shapes[0].numel();
+    let out_n = shapes.last().unwrap().numel();
+    let mut qmain = plan.main_size.max(in_n).max(out_n).max(1);
+    if opts.use_aligned() {
+        qmain = div_ceil(qmain, 32) * 32;
+    }
+    w.line(&format!("static {qual}signed char nncg_bufa[{qmain}];"));
+    w.line(&format!("static {qual}signed char nncg_bufb[{qmain}];"));
+    for r in &plan.rings {
+        let mut elems = (r.rows * r.row_elems).max(1);
+        if opts.use_aligned() {
+            elems = div_ceil(elems, 32) * 32;
+        }
+        w.line(&format!(
+            "static {qual}signed char nncg_ring{}[{elems}]; /* ring: {} rows of {} (layer {} -> {}) */",
+            r.layer,
+            r.rows,
+            r.row_elems,
+            r.layer,
+            r.layer + 1
+        ));
+    }
+    // Spill slot for vector accumulator groups: requantization is scalar
+    // (per-channel multipliers), so groups round-trip through memory.
+    let vec_used = model.layers.iter().any(|l| match l {
+        Layer::Conv2D { weights, .. } => {
+            QChannelSchedule::for_channels(opts.isa, weights.dims()[3])
+                .segments
+                .iter()
+                .any(|s| s.vec.is_some())
+        }
+        _ => false,
+    });
+    if vec_used {
+        w.line("static int nncg_qacc[8]; /* vector accumulator spill for requantization */");
+    }
+    w.blank();
+
+    for (i, layer) in model.layers.iter().enumerate() {
+        emit_qweight_arrays(&mut w, i, layer, &qp.layers[i], opts.isa, qual);
+    }
+    w.blank();
+
+    w.line("/* Single-function CNN inference (paper's deployment model):");
+    w.line(&format!(" * input:  float[{}] in HWC order {}", in_n, shapes[0]));
+    w.line(&format!(" * output: float[{}] {}", out_n, shapes.last().unwrap()));
+    w.line(" * int8 pipeline: quantize once on entry, integer layer chain with");
+    w.line(" * multiply-shift requantization at fusion-group boundaries,");
+    w.line(" * dequantize once on exit (float softmax epilogue when trailing).");
+    w.line(" */");
+    w.open(&format!("void {ident}_inference(const float *x_in, float *x_out)"));
+    w.line("int i, j, k, n, m, o;");
+    w.line("(void)i; (void)j; (void)k; (void)n; (void)m; (void)o;");
+
+    w.blank();
+    w.line(&format!("/* entry: quantize x_in (s_in = {}) */", fmt_f32(qp.input_scale)));
+    w.open(&format!("for (i = 0; i < {in_n}; i++)"));
+    w.line(&format!("float v = x_in[i] * {};", fmt_f32(1.0 / qp.input_scale)));
+    w.line("v = v > 127.0f ? 127.0f : (v < -127.0f ? -127.0f : v);");
+    w.line("nncg_bufa[i] = (signed char)(v >= 0.0f ? (int)(v + 0.5f) : (int)(v - 0.5f));");
+    w.close();
+
+    let mut cur_src: String = "nncg_bufa".to_string();
+    let mut ping = false; // bufa holds the quantized input; next scratch is bufb
+    for pg in &bundle.groups {
+        let group = &pg.group;
+        match &pg.fused {
+            None => {
+                let i = group.start;
+                let layer = &model.layers[i];
+                w.blank();
+                if matches!(layer, Layer::Activation(Activation::Softmax)) {
+                    // quantize_model guarantees softmax only appears as
+                    // the final layer; integers pass through and the
+                    // float epilogue below applies it after dequantize.
+                    w.line(&format!("/* layer {i}: Soft-Max handled by the float epilogue */"));
+                    continue;
+                }
+                let dst = if is_inplace(layer) {
+                    cur_src.clone()
+                } else {
+                    let d = if ping { "nncg_bufa" } else { "nncg_bufb" };
+                    ping = !ping;
+                    d.to_string()
+                };
+                w.line(&format!(
+                    "/* layer {i}: {} {} -> {} */",
+                    layer.kind_name(),
+                    shapes[i],
+                    shapes[i + 1]
+                ));
+                emit_qlayer(
+                    &mut w,
+                    layer,
+                    &qp.layers[i],
+                    i,
+                    &shapes[i],
+                    &shapes[i + 1],
+                    &cur_src,
+                    &dst,
+                    opts,
+                )?;
+                cur_src = dst;
+            }
+            Some(fp) => {
+                let d = if ping { "nncg_bufa" } else { "nncg_bufb" };
+                ping = !ping;
+                let dst = d.to_string();
+                w.blank();
+                w.line(&format!(
+                    "/* fused group: layers {}..{} ({} -> {}) stream rows through ring line buffers */",
+                    group.start,
+                    group.end - 1,
+                    shapes[group.start],
+                    shapes[group.end]
+                ));
+                super::emit_fused_group(
+                    &mut w,
+                    model,
+                    shapes,
+                    group,
+                    fp,
+                    &cur_src,
+                    &dst,
+                    &plan,
+                    opts,
+                    Some(&qp),
+                )?;
+                w.line("/* end fused group */");
+                cur_src = dst;
+            }
+        }
+    }
+
+    let s_out = qp.layers.last().map(|l| l.out_scale()).unwrap_or(qp.input_scale);
+    w.blank();
+    w.line(&format!("/* exit: dequantize (s_out = {}) */", fmt_f32(s_out)));
+    w.open(&format!("for (i = 0; i < {out_n}; i++)"));
+    w.line(&format!("x_out[i] = (float){cur_src}[i] * {};", fmt_f32(s_out)));
+    w.close();
+    if qp.trailing_softmax {
+        w.line("/* float softmax epilogue (the only float math besides entry/exit) */");
+        w.open("");
+        w.line("float mx = x_out[0];");
+        w.line("float sum = 0.0f;");
+        w.open(&format!("for (i = 1; i < {out_n}; i++)"));
+        w.line("mx = x_out[i] > mx ? x_out[i] : mx;");
+        w.close();
+        w.open(&format!("for (i = 0; i < {out_n}; i++)"));
+        w.line("x_out[i] = (float)exp((double)(x_out[i] - mx));");
+        w.line("sum += x_out[i];");
+        w.close();
+        w.open(&format!("for (i = 0; i < {out_n}; i++)"));
+        w.line("x_out[i] /= sum;");
+        w.close();
+        w.close();
+    }
+    w.close();
+
+    if opts.test_harness {
+        harness::emit_test_harness(&mut w, &ident, in_n, out_n);
+    }
+    Ok(w.finish())
+}
+
+// ---------------------------------------------------------------------
+// Quantized weight / bias / multiplier arrays
+// ---------------------------------------------------------------------
+
+/// Emit one integer constant array, 16 values per row.
+fn emit_int_array(w: &mut CWriter, qual: &str, cty: &str, name: &str, vals: &[i64]) {
+    assert!(!vals.is_empty(), "empty quantized array {name}");
+    w.line(&format!("static {qual}const {cty} {name}[{}] = {{", vals.len()));
+    for chunk in vals.chunks(16) {
+        let row: Vec<String> = chunk.iter().map(|v| v.to_string()).collect();
+        w.line(&format!("    {},", row.join(", ")));
+    }
+    w.line("};");
+}
+
+/// Pre-packed weight array for one vector segment of a conv layer. The
+/// layout matches the emission loops in [`emit_conv_cell`] exactly:
+/// consecutive `load_w` addresses walk taps × channel-chunks × groups.
+///
+/// * chunk 2 (`qwp{i}_{start}`, int16): lane `t` holds the window-pair
+///   `(w[2q], w[2q+1])` for output channel `k0+t`; an odd trailing input
+///   channel zero-pads its high half (the activation word's high short is
+///   also composed as zero there, so the pair product contributes 0).
+/// * chunk 1 (`qws{i}_{start}`, int16): plain widened weights, 4 lanes.
+/// * chunk 4 (`qwq{i}_{start}`, int8): lane `t` holds bytes for input
+///   channels `4qd..4qd+3`; channels past `cin` stay zero (the matching
+///   activation bytes are omitted from the composed word).
+#[allow(clippy::too_many_arguments)]
+fn emit_packed_segment(
+    w: &mut CWriter,
+    idx: usize,
+    a: &QuantArith,
+    v: QVecSpec,
+    start: usize,
+    len: usize,
+    taps: usize,
+    cin: usize,
+    cout: usize,
+    qual: &str,
+) {
+    let ngroups = len / v.lanes;
+    let qw = |p: usize, o: usize, k: usize| a.qw[(p * cin + o) * cout + k] as i64;
+    match v.chunk {
+        2 => {
+            let npairs = div_ceil(cin, 2);
+            let mut vals = vec![0i64; taps * npairs * ngroups * 2 * v.lanes];
+            for p in 0..taps {
+                for q in 0..npairs {
+                    for g in 0..ngroups {
+                        let base = ((p * npairs + q) * ngroups + g) * 2 * v.lanes;
+                        for t in 0..v.lanes {
+                            let ch = start + g * v.lanes + t;
+                            vals[base + 2 * t] = qw(p, 2 * q, ch);
+                            if 2 * q + 1 < cin {
+                                vals[base + 2 * t + 1] = qw(p, 2 * q + 1, ch);
+                            }
+                        }
+                    }
+                }
+            }
+            emit_int_array(w, qual, v.w_elem_ty, &format!("qwp{idx}_{start}"), &vals);
+        }
+        1 => {
+            let mut vals = vec![0i64; taps * cin * ngroups * v.lanes];
+            for p in 0..taps {
+                for o in 0..cin {
+                    for g in 0..ngroups {
+                        for t in 0..v.lanes {
+                            vals[((p * cin + o) * ngroups + g) * v.lanes + t] =
+                                qw(p, o, start + g * v.lanes + t);
+                        }
+                    }
+                }
+            }
+            emit_int_array(w, qual, v.w_elem_ty, &format!("qws{idx}_{start}"), &vals);
+        }
+        4 => {
+            let nquads = div_ceil(cin, 4);
+            let step = v.lanes * v.chunk; // 16 bytes per load
+            let mut vals = vec![0i64; taps * nquads * ngroups * step];
+            for p in 0..taps {
+                for qd in 0..nquads {
+                    for g in 0..ngroups {
+                        let base = ((p * nquads + qd) * ngroups + g) * step;
+                        for t in 0..v.lanes {
+                            for b in 0..v.chunk {
+                                let o = 4 * qd + b;
+                                if o < cin {
+                                    vals[base + t * 4 + b] = qw(p, o, start + g * v.lanes + t);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            emit_int_array(w, qual, v.w_elem_ty, &format!("qwq{idx}_{start}"), &vals);
+        }
+        c => unreachable!("unknown int8 chunk width {c}"),
+    }
+}
+
+/// Emit the quantized constant arrays for one layer: packed per-segment
+/// weights for vectorized convs, plain `qw{i}` for scalar lanes and for
+/// depthwise/dense, and the `qb{i}` / `qm{i}` bias+multiplier tables.
+fn emit_qweight_arrays(
+    w: &mut CWriter,
+    idx: usize,
+    layer: &Layer,
+    lq: &LayerQuant,
+    isa: Isa,
+    qual: &str,
+) {
+    let a = match lq {
+        LayerQuant::Mac { arith, .. } => arith,
+        LayerQuant::Passthrough { .. } => return,
+    };
+    let as_i64 = |s: &[i8]| s.iter().map(|&v| v as i64).collect::<Vec<_>>();
+    match layer {
+        Layer::Conv2D { weights, .. } => {
+            let d = weights.dims();
+            let (taps, cin, cout) = (d[0] * d[1], d[2], d[3]);
+            let sched = QChannelSchedule::for_channels(isa, cout);
+            let mut scalar = false;
+            for seg in &sched.segments {
+                match seg.vec {
+                    Some(v) => {
+                        emit_packed_segment(w, idx, a, v, seg.start, seg.len, taps, cin, cout, qual)
+                    }
+                    None => scalar = scalar || seg.len > 0,
+                }
+            }
+            if scalar {
+                emit_int_array(w, qual, "signed char", &format!("qw{idx}"), &as_i64(&a.qw));
+            }
+        }
+        Layer::DepthwiseConv2D { .. } | Layer::Dense { .. } => {
+            emit_int_array(w, qual, "signed char", &format!("qw{idx}"), &as_i64(&a.qw));
+        }
+        _ => return,
+    }
+    emit_int_array(
+        w,
+        qual,
+        "int",
+        &format!("qb{idx}"),
+        &a.qb.iter().map(|&v| v as i64).collect::<Vec<_>>(),
+    );
+    emit_int_array(
+        w,
+        qual,
+        "int",
+        &format!("qm{idx}"),
+        &a.m.iter().map(|&v| v as i64).collect::<Vec<_>>(),
+    );
+}
+
+// ---------------------------------------------------------------------
+// Shared emission vocabulary
+// ---------------------------------------------------------------------
+
+/// Column position of the cell being emitted: a peeled literal column or
+/// the interior column loop variable `j`.
+#[derive(Clone, Copy)]
+enum Col {
+    Lit(usize),
+    Var,
+}
+
+/// `coeff*var + c` with generation-time constant folding (negative `c`
+/// prints as a subtraction — C has no negative literals to index with).
+fn lin(var: &str, coeff: usize, c: isize) -> String {
+    match (coeff, c) {
+        (1, 0) => var.to_string(),
+        (1, c) if c > 0 => format!("{var} + {c}"),
+        (1, c) => format!("{var} - {}", -c),
+        (k, 0) => format!("{k}*{var}"),
+        (k, c) if c > 0 => format!("{k}*{var} + {c}"),
+        (k, c) => format!("{k}*{var} - {}", -c),
+    }
+}
+
+/// Element index of channel `ch`, column-tap `m`, inside a source row
+/// (the s-pointers point at row starts). Border columns resolve to plain
+/// literals; the interior column loop emits `cin*stride*j + const`.
+fn col_src_idx(colp: &AxisPlan, col: Col, m: usize, cin: usize, ch: usize) -> String {
+    match col {
+        Col::Lit(j) => {
+            let s = j * colp.stride + m;
+            debug_assert!(s >= colp.pad, "column tap outside its valid window");
+            ((s - colp.pad) * cin + ch).to_string()
+        }
+        Col::Var => lin(
+            "j",
+            cin * colp.stride,
+            (m as isize - colp.pad as isize) * cin as isize + ch as isize,
+        ),
+    }
+}
+
+/// Destination element index of output channel `k` at the cell's column.
+fn dst_idx(col: Col, cout: usize, k: usize) -> String {
+    match col {
+        Col::Lit(j) => (j * cout + k).to_string(),
+        Col::Var => lin("j", cout, k as isize),
+    }
+}
+
+/// Destination index for vector lane `t` of a group starting at channel
+/// `k0` (the requant spill loop's store address).
+fn dst_idx_lane(col: Col, cout: usize, k0: usize) -> String {
+    format!("{} + t", dst_idx(col, cout, k0))
+}
+
+/// Compose two sign-extended int8 values into one `int` word of int16
+/// halves (the x86 madd activation broadcast). The fields pass through
+/// `unsigned` subwords so no signed value is ever left-shifted; a missing
+/// high element (odd `cin` tail) leaves the high short zero, matching the
+/// zero-packed weight half.
+fn pair_word(e0: &str, e1: Option<&str>) -> String {
+    let lo = format!("(unsigned)(unsigned short)(short){e0}");
+    match e1 {
+        Some(e1) => {
+            format!("(int)({lo} | (unsigned)(unsigned short)(short){e1} << 16)")
+        }
+        None => format!("(int)({lo})"),
+    }
+}
+
+/// Compose up to four int8 values into one `int` word of bytes (the SDOT
+/// activation broadcast); omitted bytes (cin remainder) stay zero and
+/// pair with zero-padded weight bytes.
+fn quad_word(exprs: &[String]) -> String {
+    let terms: Vec<String> = exprs
+        .iter()
+        .enumerate()
+        .map(|(b, e)| {
+            let byte = format!("(unsigned)(unsigned char){e}");
+            if b == 0 {
+                byte
+            } else {
+                format!("{byte} << {}", 8 * b)
+            }
+        })
+        .collect();
+    format!("(int)({})", terms.join(" | "))
+}
+
+/// The int32 → int8 requantization statements on variable `v`, followed
+/// by the integer activation — the C mirror of [`passes::requant`] (plus
+/// `qleaky`). Softmax emits nothing: it is never integer.
+fn emit_requant_lines(
+    w: &mut CWriter,
+    v: &str,
+    m_expr: &str,
+    pre: u32,
+    post: u32,
+    act: Activation,
+) {
+    if pre > 0 {
+        w.line(&format!("{v} = ({v} + {}) >> {pre};", 1i64 << (pre - 1)));
+    }
+    w.line(&format!("{v} = ({v} * {m_expr} + {}) >> {post};", 1i64 << (post - 1)));
+    w.line(&format!("{v} = {v} > 127 ? 127 : ({v} < -127 ? -127 : {v});"));
+    emit_qact_lines(w, v, act);
+}
+
+/// Integer activation on an already-requantized value (P2: ternaries).
+fn emit_qact_lines(w: &mut CWriter, v: &str, act: Activation) {
+    match act {
+        Activation::None | Activation::Softmax => {}
+        Activation::Relu => w.line(&format!("{v} = {v} > 0 ? {v} : 0;")),
+        Activation::LeakyRelu(alpha) => w.line(&format!(
+            "{v} = {v} > 0 ? {v} : (({v} * {} + {}) >> {});",
+            leaky_mult(alpha),
+            1i64 << (ACT_SHIFT - 1),
+            ACT_SHIFT
+        )),
+    }
+}
+
+fn mac_arith<'a>(lq: &'a LayerQuant, kind: &str) -> Result<&'a QuantArith> {
+    match lq {
+        LayerQuant::Mac { arith, .. } => Ok(arith),
+        LayerQuant::Passthrough { .. } => bail!("{kind} layer is missing its Mac quant record"),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Convolution rows (shared by the fused and whole-plane paths)
+// ---------------------------------------------------------------------
+
+/// Everything one conv cell/row emission needs (threading it as one
+/// struct keeps the border/interior call sites identical).
+struct ConvCellCtx<'a> {
+    idx: usize,
+    a: &'a QuantArith,
+    sched: &'a QChannelSchedule,
+    cin: usize,
+    cout: usize,
+    /// Kernel width (column taps).
+    wk: usize,
+    /// First valid row tap of this output row.
+    kr0: usize,
+    /// Number of valid row taps (== number of s-pointers).
+    ntr: usize,
+    colp: &'a AxisPlan,
+    act: Activation,
+}
+
+/// One output cell: every channel-schedule segment's accumulator groups
+/// and scalar lanes over the valid tap window `(m0, m1)`.
+fn emit_conv_cell(w: &mut CWriter, cc: &ConvCellCtx<'_>, col: Col, win: (usize, usize)) {
+    let (m0, m1) = win;
+    let src =
+        |tr: usize, m: usize, ch: usize| format!("s{tr}[{}]", col_src_idx(cc.colp, col, m, cc.cin, ch));
+    for seg in &cc.sched.segments {
+        match seg.vec {
+            Some(v) => {
+                let ngroups = seg.len / v.lanes;
+                for g in 0..ngroups {
+                    let k0 = seg.start + g * v.lanes;
+                    w.open("");
+                    w.line(&format!(
+                        "{} qacc = {};",
+                        v.acc_ty,
+                        v.load_acc(&format!("qb{} + {k0}", cc.idx))
+                    ));
+                    w.line("int t, qv;");
+                    for tr in 0..cc.ntr {
+                        for m in m0..m1 {
+                            let p = (cc.kr0 + tr) * cc.wk + m;
+                            match v.chunk {
+                                2 => {
+                                    let npairs = div_ceil(cc.cin, 2);
+                                    for q in 0..npairs {
+                                        let e0 = src(tr, m, 2 * q);
+                                        let e1 = (2 * q + 1 < cc.cin).then(|| src(tr, m, 2 * q + 1));
+                                        let word = pair_word(&e0, e1.as_deref());
+                                        let waddr = format!(
+                                            "qwp{}_{} + {}",
+                                            cc.idx,
+                                            seg.start,
+                                            ((p * npairs + q) * ngroups + g) * 2 * v.lanes
+                                        );
+                                        w.line(&v.madd(
+                                            &v.broadcast(&word),
+                                            &v.load_w(&waddr),
+                                            "qacc",
+                                        ));
+                                    }
+                                }
+                                1 => {
+                                    for o in 0..cc.cin {
+                                        let word = format!("(short){}", src(tr, m, o));
+                                        let waddr = format!(
+                                            "qws{}_{} + {}",
+                                            cc.idx,
+                                            seg.start,
+                                            ((p * cc.cin + o) * ngroups + g) * v.lanes
+                                        );
+                                        w.line(&v.madd(
+                                            &v.broadcast(&word),
+                                            &v.load_w(&waddr),
+                                            "qacc",
+                                        ));
+                                    }
+                                }
+                                4 => {
+                                    let nquads = div_ceil(cc.cin, 4);
+                                    for qd in 0..nquads {
+                                        let exprs: Vec<String> = (0..4)
+                                            .filter(|&b| 4 * qd + b < cc.cin)
+                                            .map(|b| src(tr, m, 4 * qd + b))
+                                            .collect();
+                                        let word = quad_word(&exprs);
+                                        let waddr = format!(
+                                            "qwq{}_{} + {}",
+                                            cc.idx,
+                                            seg.start,
+                                            ((p * nquads + qd) * ngroups + g) * v.lanes * v.chunk
+                                        );
+                                        w.line(&v.madd(
+                                            &v.broadcast(&word),
+                                            &v.load_w(&waddr),
+                                            "qacc",
+                                        ));
+                                    }
+                                }
+                                c => unreachable!("unknown int8 chunk width {c}"),
+                            }
+                        }
+                    }
+                    w.line(&v.store_acc("nncg_qacc", "qacc"));
+                    w.open(&format!("for (t = 0; t < {}; t++)", v.lanes));
+                    w.line("qv = nncg_qacc[t];");
+                    emit_requant_lines(
+                        w,
+                        "qv",
+                        &format!("qm{}[{k0} + t]", cc.idx),
+                        cc.a.pre,
+                        cc.a.post,
+                        cc.act,
+                    );
+                    w.line(&format!("d[{}] = (signed char)qv;", dst_idx_lane(col, cc.cout, k0)));
+                    w.close();
+                    w.close();
+                }
+            }
+            None => {
+                for kc in seg.start..seg.start + seg.len {
+                    w.open("");
+                    w.line(&format!("int qv = qb{}[{kc}];", cc.idx));
+                    for tr in 0..cc.ntr {
+                        for m in m0..m1 {
+                            let p = (cc.kr0 + tr) * cc.wk + m;
+                            for o in 0..cc.cin {
+                                w.line(&format!(
+                                    "qv += (int){} * qw{}[{}];",
+                                    src(tr, m, o),
+                                    cc.idx,
+                                    (p * cc.cin + o) * cc.cout + kc
+                                ));
+                            }
+                        }
+                    }
+                    emit_requant_lines(
+                        w,
+                        "qv",
+                        &format!("qm{}[{kc}]", cc.idx),
+                        cc.a.pre,
+                        cc.a.post,
+                        cc.act,
+                    );
+                    w.line(&format!("d[{}] = (signed char)qv;", dst_idx(col, cc.cout, kc)));
+                    w.close();
+                }
+            }
+        }
+    }
+}
+
+/// One full conv output row: s-pointer prologue, peeled border columns,
+/// interior column loop (or literal unroll under keep-outer-1), trailing
+/// border columns.
+fn emit_conv_row_block(
+    w: &mut CWriter,
+    cc: &ConvCellCtx<'_>,
+    src_exprs: &[String],
+    dst_expr: &str,
+    keeps_cols: bool,
+) {
+    w.open("");
+    for (t, e) in src_exprs.iter().enumerate() {
+        w.line(&format!("const signed char *s{t} = {e};"));
+    }
+    w.line(&format!("signed char *d = {dst_expr};"));
+    let colp = cc.colp;
+    for j in 0..colp.lo {
+        emit_conv_cell(w, cc, Col::Lit(j), colp.window(j));
+    }
+    if colp.interior() > 0 {
+        if keeps_cols {
+            w.open(&format!("for (j = {}; j < {}; j++)", colp.lo, colp.hi));
+            emit_conv_cell(w, cc, Col::Var, (0, cc.wk));
+            w.close();
+        } else {
+            for j in colp.lo..colp.hi {
+                emit_conv_cell(w, cc, Col::Lit(j), (0, cc.wk));
+            }
+        }
+    }
+    for j in colp.hi..colp.out {
+        emit_conv_cell(w, cc, Col::Lit(j), colp.window(j));
+    }
+    w.close();
+}
+
+// ---------------------------------------------------------------------
+// Fused row emission (called from `emit_fused_group` via `emit_qrow`)
+// ---------------------------------------------------------------------
+
+/// Emit one fused int8 row op, addressing rows through the same
+/// [`FusedRowIo`] contract the f32 row emitters use (rotating ring
+/// pointers, frozen slots, or steady-state plane bases).
+pub(super) fn emit_qrow(
+    w: &mut CWriter,
+    ctx: &LayerCtx<'_>,
+    layer: &Layer,
+    lq: &LayerQuant,
+    io: &FusedRowIo,
+) -> Result<()> {
+    let keeps_cols = ctx.opts.unroll.keeps_cols();
+    let dst_expr = match &io.dst_rot {
+        Some(rot) => rot.names[0].clone(),
+        None => fused_base(ctx.dst, io.dst_row_off, io.dst_iter_elems),
+    };
+    match layer {
+        Layer::Conv2D { weights, stride, padding, activation, .. } => {
+            let a = mac_arith(lq, "Conv2D")?;
+            let d = weights.dims();
+            let (in_h, in_w, cin) = (ctx.in_shape.h(), ctx.in_shape.w(), ctx.in_shape.c());
+            let (out_h, pad_h) = padding.resolve(in_h, d[0], stride.0)?;
+            let (out_w, pad_w) = padding.resolve(in_w, d[1], stride.1)?;
+            let rowp = AxisPlan::padless(out_h, stride.0, d[0], pad_h, in_h);
+            let colp = AxisPlan::padless(out_w, stride.1, d[1], pad_w, in_w);
+            let (k0r, k1r) = rowp.window(io.out_row);
+            let p0 = rowp.src_start(io.out_row);
+            let src_exprs: Vec<String> = (0..k1r - k0r)
+                .map(|t| match &io.src_rot {
+                    Some(rot) => rot.names[t].clone(),
+                    None => fused_base(ctx.src, io.src_map.off(p0 + t), io.src_iter_elems),
+                })
+                .collect();
+            let sched = QChannelSchedule::for_channels(ctx.opts.isa, d[3]);
+            let cc = ConvCellCtx {
+                idx: ctx.idx,
+                a,
+                sched: &sched,
+                cin,
+                cout: d[3],
+                wk: d[1],
+                kr0: k0r,
+                ntr: k1r - k0r,
+                colp: &colp,
+                act: *activation,
+            };
+            emit_conv_row_block(w, &cc, &src_exprs, &dst_expr, keeps_cols);
+            Ok(())
+        }
+        Layer::MaxPool2D { pool, stride } => {
+            let (in_w, c) = (ctx.in_shape.w(), ctx.in_shape.c());
+            let colp = AxisPlan::padless(ctx.out_shape.w(), stride.1, pool.1, 0, in_w);
+            let p0 = io.out_row * stride.0;
+            let src_exprs: Vec<String> = (0..pool.0)
+                .map(|t| match &io.src_rot {
+                    Some(rot) => rot.names[t].clone(),
+                    None => fused_base(ctx.src, io.src_map.off(p0 + t), io.src_iter_elems),
+                })
+                .collect();
+            emit_maxpool_row_block(w, &src_exprs, &dst_expr, &colp, pool.0, c, keeps_cols);
+            Ok(())
+        }
+        Layer::Activation(act) => {
+            let n = ctx.out_shape.w() * ctx.out_shape.c();
+            let s0 = match &io.src_rot {
+                Some(rot) => rot.names[0].clone(),
+                None => fused_base(ctx.src, io.src_map.off(io.out_row), io.src_iter_elems),
+            };
+            w.open("");
+            w.line(&format!("const signed char *s0 = {s0};"));
+            w.line(&format!("signed char *d = {dst_expr};"));
+            w.open(&format!("for (j = 0; j < {n}; j++)"));
+            match act {
+                Activation::None | Activation::Softmax => w.line("d[j] = s0[j];"),
+                _ => {
+                    w.line("int qv = s0[j];");
+                    emit_qact_lines(w, "qv", *act);
+                    w.line("d[j] = (signed char)qv;");
+                }
+            }
+            w.close();
+            w.close();
+            Ok(())
+        }
+        other => bail!("layer {} cannot be fused on the int8 path", other.kind_name()),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Pool rows (shared fused/unfused)
+// ---------------------------------------------------------------------
+
+fn emit_maxpool_cell(
+    w: &mut CWriter,
+    colp: &AxisPlan,
+    ntr: usize,
+    pool_w: usize,
+    c: usize,
+    col: Col,
+) {
+    for kc in 0..c {
+        w.open("");
+        w.line(&format!("int qv = s0[{}];", col_src_idx(colp, col, 0, c, kc)));
+        if ntr * pool_w > 1 {
+            w.line("int qt;");
+        }
+        for tr in 0..ntr {
+            for m in 0..pool_w {
+                if tr == 0 && m == 0 {
+                    continue;
+                }
+                w.line(&format!(
+                    "qt = s{tr}[{}]; qv = qt > qv ? qt : qv;",
+                    col_src_idx(colp, col, m, c, kc)
+                ));
+            }
+        }
+        w.line(&format!("d[{}] = (signed char)qv;", dst_idx(col, c, kc)));
+        w.close();
+    }
+}
+
+fn emit_maxpool_row_block(
+    w: &mut CWriter,
+    src_exprs: &[String],
+    dst_expr: &str,
+    colp: &AxisPlan,
+    pool_h: usize,
+    c: usize,
+    keeps_cols: bool,
+) {
+    w.open("");
+    for (t, e) in src_exprs.iter().enumerate() {
+        w.line(&format!("const signed char *s{t} = {e};"));
+    }
+    w.line(&format!("signed char *d = {dst_expr};"));
+    // Pooling never pads: every column is interior with a full window.
+    if keeps_cols {
+        w.open(&format!("for (j = 0; j < {}; j++)", colp.out));
+        emit_maxpool_cell(w, colp, pool_h, colp.kernel, c, Col::Var);
+        w.close();
+    } else {
+        for j in 0..colp.out {
+            emit_maxpool_cell(w, colp, pool_h, colp.kernel, c, Col::Lit(j));
+        }
+    }
+    w.close();
+}
+
+fn emit_avgpool_cell(
+    w: &mut CWriter,
+    colp: &AxisPlan,
+    ntr: usize,
+    pool_w: usize,
+    c: usize,
+    col: Col,
+) {
+    let mult = avg_mult(ntr * pool_w);
+    for kc in 0..c {
+        w.open("");
+        w.line(&format!("int qv = s0[{}];", col_src_idx(colp, col, 0, c, kc)));
+        for tr in 0..ntr {
+            for m in 0..pool_w {
+                if tr == 0 && m == 0 {
+                    continue;
+                }
+                w.line(&format!("qv += s{tr}[{}];", col_src_idx(colp, col, m, c, kc)));
+            }
+        }
+        // Q15 window average, the C mirror of passes::qavg.
+        w.line(&format!("qv = (qv * {mult} + {}) >> {};", 1i64 << (ACT_SHIFT - 1), ACT_SHIFT));
+        w.line("qv = qv > 127 ? 127 : (qv < -127 ? -127 : qv);");
+        w.line(&format!("d[{}] = (signed char)qv;", dst_idx(col, c, kc)));
+        w.close();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Whole-plane (unfused) layer emitters
+// ---------------------------------------------------------------------
+
+/// Emit one unfused int8 layer writing `dst` from `src` (both int8
+/// planes).
+#[allow(clippy::too_many_arguments)]
+fn emit_qlayer(
+    w: &mut CWriter,
+    layer: &Layer,
+    lq: &LayerQuant,
+    idx: usize,
+    in_s: &Shape,
+    out_s: &Shape,
+    src: &str,
+    dst: &str,
+    opts: &CodegenOptions,
+) -> Result<()> {
+    let keeps_cols = opts.unroll.keeps_cols();
+    match layer {
+        Layer::Conv2D { weights, stride, padding, activation, .. } => {
+            let a = mac_arith(lq, "Conv2D")?;
+            let d = weights.dims();
+            let (in_h, in_w, cin) = (in_s.h(), in_s.w(), in_s.c());
+            let (out_h, pad_h) = padding.resolve(in_h, d[0], stride.0)?;
+            let (out_w, pad_w) = padding.resolve(in_w, d[1], stride.1)?;
+            let rowp = AxisPlan::padless(out_h, stride.0, d[0], pad_h, in_h);
+            let colp = AxisPlan::padless(out_w, stride.1, d[1], pad_w, in_w);
+            let rin = in_w * cin;
+            let rout = out_w * d[3];
+            let sched = QChannelSchedule::for_channels(opts.isa, d[3]);
+            let border = |w: &mut CWriter, r: usize| {
+                let (k0, k1) = rowp.window(r);
+                let p0 = rowp.src_start(r);
+                let src_exprs: Vec<String> =
+                    (0..k1 - k0).map(|t| fused_base(src, (p0 + t) * rin, 0)).collect();
+                let dst_expr = fused_base(dst, r * rout, 0);
+                let cc = ConvCellCtx {
+                    idx,
+                    a,
+                    sched: &sched,
+                    cin,
+                    cout: d[3],
+                    wk: d[1],
+                    kr0: k0,
+                    ntr: k1 - k0,
+                    colp: &colp,
+                    act: *activation,
+                };
+                emit_conv_row_block(w, &cc, &src_exprs, &dst_expr, keeps_cols);
+            };
+            for r in 0..rowp.lo {
+                border(w, r);
+            }
+            if rowp.interior() > 0 {
+                w.open(&format!("for (i = {}; i < {}; i++)", rowp.lo, rowp.hi));
+                let src_exprs: Vec<String> = (0..d[0])
+                    .map(|t| {
+                        format!(
+                            "({src} + {rin}*({}))",
+                            lin("i", stride.0, t as isize - pad_h as isize)
+                        )
+                    })
+                    .collect();
+                let dst_expr = format!("({dst} + {rout}*i)");
+                let cc = ConvCellCtx {
+                    idx,
+                    a,
+                    sched: &sched,
+                    cin,
+                    cout: d[3],
+                    wk: d[1],
+                    kr0: 0,
+                    ntr: d[0],
+                    colp: &colp,
+                    act: *activation,
+                };
+                emit_conv_row_block(w, &cc, &src_exprs, &dst_expr, keeps_cols);
+                w.close();
+            }
+            for r in rowp.hi..rowp.out {
+                border(w, r);
+            }
+            Ok(())
+        }
+        Layer::DepthwiseConv2D { weights, stride, padding, activation, .. } => {
+            let a = mac_arith(lq, "DepthwiseConv2D")?;
+            let d = weights.dims(); // [kh, kw, c]
+            let c = d[2];
+            let (in_h, in_w) = (in_s.h(), in_s.w());
+            let (out_h, pad_h) = padding.resolve(in_h, d[0], stride.0)?;
+            let (out_w, pad_w) = padding.resolve(in_w, d[1], stride.1)?;
+            let rowp = AxisPlan::padless(out_h, stride.0, d[0], pad_h, in_h);
+            let colp = AxisPlan::padless(out_w, stride.1, d[1], pad_w, in_w);
+            let rin = in_w * c;
+            let rout = out_w * c;
+            let row = |w: &mut CWriter, src_exprs: &[String], dst_expr: &str, k0: usize, ntr: usize| {
+                w.open("");
+                for (t, e) in src_exprs.iter().enumerate() {
+                    w.line(&format!("const signed char *s{t} = {e};"));
+                }
+                w.line(&format!("signed char *d = {dst_expr};"));
+                let cell = |w: &mut CWriter, col: Col, win: (usize, usize)| {
+                    for kc in 0..c {
+                        w.open("");
+                        w.line(&format!("int qv = qb{idx}[{kc}];"));
+                        for tr in 0..ntr {
+                            for m in win.0..win.1 {
+                                let p = (k0 + tr) * d[1] + m;
+                                w.line(&format!(
+                                    "qv += (int)s{tr}[{}] * qw{idx}[{}];",
+                                    col_src_idx(&colp, col, m, c, kc),
+                                    p * c + kc
+                                ));
+                            }
+                        }
+                        emit_requant_lines(w, "qv", &format!("qm{idx}[{kc}]"), a.pre, a.post, *activation);
+                        w.line(&format!("d[{}] = (signed char)qv;", dst_idx(col, c, kc)));
+                        w.close();
+                    }
+                };
+                for j in 0..colp.lo {
+                    cell(w, Col::Lit(j), colp.window(j));
+                }
+                if colp.interior() > 0 {
+                    if keeps_cols {
+                        w.open(&format!("for (j = {}; j < {}; j++)", colp.lo, colp.hi));
+                        cell(w, Col::Var, (0, d[1]));
+                        w.close();
+                    } else {
+                        for j in colp.lo..colp.hi {
+                            cell(w, Col::Lit(j), (0, d[1]));
+                        }
+                    }
+                }
+                for j in colp.hi..colp.out {
+                    cell(w, Col::Lit(j), colp.window(j));
+                }
+                w.close();
+            };
+            for r in 0..rowp.lo {
+                let (k0, k1) = rowp.window(r);
+                let p0 = rowp.src_start(r);
+                let src_exprs: Vec<String> =
+                    (0..k1 - k0).map(|t| fused_base(src, (p0 + t) * rin, 0)).collect();
+                row(w, &src_exprs, &fused_base(dst, r * rout, 0), k0, k1 - k0);
+            }
+            if rowp.interior() > 0 {
+                w.open(&format!("for (i = {}; i < {}; i++)", rowp.lo, rowp.hi));
+                let src_exprs: Vec<String> = (0..d[0])
+                    .map(|t| {
+                        format!(
+                            "({src} + {rin}*({}))",
+                            lin("i", stride.0, t as isize - pad_h as isize)
+                        )
+                    })
+                    .collect();
+                row(w, &src_exprs, &format!("({dst} + {rout}*i)"), 0, d[0]);
+                w.close();
+            }
+            for r in rowp.hi..rowp.out {
+                let (k0, k1) = rowp.window(r);
+                let p0 = rowp.src_start(r);
+                let src_exprs: Vec<String> =
+                    (0..k1 - k0).map(|t| fused_base(src, (p0 + t) * rin, 0)).collect();
+                row(w, &src_exprs, &fused_base(dst, r * rout, 0), k0, k1 - k0);
+            }
+            Ok(())
+        }
+        Layer::MaxPool2D { pool, stride } | Layer::AvgPool2D { pool, stride } => {
+            let c = in_s.c();
+            let in_w = in_s.w();
+            let (out_h, out_w) = (out_s.h(), out_s.w());
+            let colp = AxisPlan::padless(out_w, stride.1, pool.1, 0, in_w);
+            let rin = in_w * c;
+            let rout = out_w * c;
+            let is_max = matches!(layer, Layer::MaxPool2D { .. });
+            w.open(&format!("for (i = 0; i < {out_h}; i++)"));
+            for t in 0..pool.0 {
+                w.line(&format!(
+                    "const signed char *s{t} = {src} + {rin}*({});",
+                    lin("i", stride.0, t as isize)
+                ));
+            }
+            w.line(&format!("signed char *d = {dst} + {rout}*i;"));
+            let cols = |w: &mut CWriter, col: Col| {
+                if is_max {
+                    emit_maxpool_cell(w, &colp, pool.0, pool.1, c, col);
+                } else {
+                    emit_avgpool_cell(w, &colp, pool.0, pool.1, c, col);
+                }
+            };
+            if keeps_cols {
+                w.open(&format!("for (j = 0; j < {out_w}; j++)"));
+                cols(w, Col::Var);
+                w.close();
+            } else {
+                for j in 0..out_w {
+                    cols(w, Col::Lit(j));
+                }
+            }
+            w.close();
+            Ok(())
+        }
+        Layer::Dense { weights, activation, .. } => {
+            // Dense stays a loop nest on the int8 path: one statement per
+            // MAC would explode generated-code size for fully-connected
+            // heads, and the scalar int32 loop is already the exact
+            // oracle arithmetic (documented deviation from the f32
+            // emitter's unrolled dense).
+            let a = mac_arith(lq, "Dense")?;
+            let d = weights.dims(); // [n_in, n_out]
+            w.open(&format!("for (j = 0; j < {}; j++)", d[1]));
+            w.line(&format!("int qv = qb{idx}[j];"));
+            w.open(&format!("for (k = 0; k < {}; k++)", d[0]));
+            w.line(&format!("qv += (int){src}[k] * qw{idx}[{}*k + j];", d[1]));
+            w.close();
+            emit_requant_lines(w, "qv", &format!("qm{idx}[j]"), a.pre, a.post, *activation);
+            w.line(&format!("{dst}[j] = (signed char)qv;"));
+            w.close();
+            Ok(())
+        }
+        Layer::Activation(act) => {
+            let nel = in_s.numel();
+            match act {
+                Activation::None | Activation::Softmax => {
+                    if src != dst {
+                        w.open(&format!("for (i = 0; i < {nel}; i++)"));
+                        w.line(&format!("{dst}[i] = {src}[i];"));
+                        w.close();
+                    }
+                }
+                _ => {
+                    w.open(&format!("for (i = 0; i < {nel}; i++)"));
+                    w.line(&format!("int qv = {src}[i];"));
+                    emit_qact_lines(w, "qv", *act);
+                    w.line(&format!("{dst}[i] = (signed char)qv;"));
+                    w.close();
+                }
+            }
+            Ok(())
+        }
+        Layer::Flatten => {
+            // HWC is already flat; only copy if src/dst differ.
+            if src != dst {
+                let nel = in_s.numel();
+                w.open(&format!("for (i = 0; i < {nel}; i++)"));
+                w.line(&format!("{dst}[i] = {src}[i];"));
+                w.close();
+            }
+            Ok(())
+        }
+        Layer::BatchNorm { .. } => bail!("BatchNorm must be folded before codegen (passes::optimize)"),
+        Layer::Dropout { .. } => bail!("Dropout must be elided before codegen (passes::optimize)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{generate_c, CodegenOptions, DType, FuseMode, Isa, Unroll};
+    use crate::graph::zoo;
+
+    fn int8_opts(isa: Isa) -> CodegenOptions {
+        CodegenOptions { isa, dtype: DType::Int8, ..Default::default() }
+    }
+
+    fn gen(model: &str, opts: &CodegenOptions) -> String {
+        let m = zoo::by_name(model).unwrap().with_random_weights(13);
+        generate_c(&m, opts).unwrap()
+    }
+
+    #[test]
+    fn int8_generates_for_all_models_and_isas() {
+        for name in zoo::PAPER_MODELS {
+            for isa in [Isa::Generic, Isa::Sse3, Isa::Avx2, Isa::Neon, Isa::NeonDot] {
+                let src = gen(name, &int8_opts(isa));
+                assert!(
+                    src.contains("_inference(const float *x_in, float *x_out)"),
+                    "{name}/{isa:?}: missing entry point"
+                );
+                assert!(src.contains("signed char nncg_bufa"), "{name}/{isa:?}");
+                // Saturating/wrapping intrinsics must never appear.
+                assert!(!src.contains("maddubs"), "{name}/{isa:?}: saturating madd");
+                assert!(!src.contains("vmlal_s8"), "{name}/{isa:?}: wrapping int16 acc");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_generic_is_ansi_only() {
+        for name in zoo::PAPER_MODELS {
+            let src = gen(name, &int8_opts(Isa::Generic));
+            assert!(!src.contains("emmintrin"), "{name}");
+            assert!(!src.contains("immintrin"), "{name}");
+            assert!(!src.contains("arm_neon"), "{name}");
+            assert!(!src.contains("nncg_qacc"), "{name}: no vector spill in scalar code");
+        }
+    }
+
+    #[test]
+    fn int8_fused_group_bodies_contain_no_float() {
+        // The same invariant CI greps on generated files: between the
+        // fused-group markers, the hot loop is pure integer code.
+        for name in zoo::PAPER_MODELS {
+            for isa in [Isa::Generic, Isa::Avx2, Isa::NeonDot] {
+                let opts = CodegenOptions { fuse: FuseMode::Auto, ..int8_opts(isa) };
+                let src = gen(name, &opts);
+                let mut groups = 0usize;
+                let mut inside = false;
+                for line in src.lines() {
+                    if line.contains("/* fused group:") {
+                        inside = true;
+                        groups += 1;
+                        continue;
+                    }
+                    if line.contains("/* end fused group */") {
+                        inside = false;
+                        continue;
+                    }
+                    if inside {
+                        assert!(
+                            !line.contains("float"),
+                            "{name}/{isa:?}: float inside fused group body: {line}"
+                        );
+                    }
+                }
+                assert!(!inside, "{name}/{isa:?}: unterminated fused group");
+                assert!(groups > 0, "{name}/{isa:?}: expected at least one fused group");
+            }
+        }
+    }
+
+    #[test]
+    fn neon_dot_emits_sdot_and_packed_quads() {
+        let src = gen("robot", &int8_opts(Isa::NeonDot));
+        assert!(src.contains("vdotq_s32"));
+        assert!(src.contains("qwq"));
+        assert!(src.contains("vreinterpretq_s8_s32"));
+    }
+
+    #[test]
+    fn x86_int8_uses_exact_madd_pairs() {
+        let src = gen("robot", &int8_opts(Isa::Avx2));
+        assert!(src.contains("_mm256_madd_epi16"));
+        assert!(src.contains("qwp"));
+        let src = gen("robot", &int8_opts(Isa::Sse3));
+        assert!(src.contains("_mm_madd_epi16"));
+    }
+
+    #[test]
+    fn int8_rejects_unsupported_unroll_levels() {
+        let m = zoo::ball_classifier().with_random_weights(13);
+        for unroll in [Unroll::None, Unroll::Full] {
+            let opts = CodegenOptions { unroll, ..int8_opts(Isa::Generic) };
+            assert!(generate_c(&m, &opts).is_err(), "{unroll:?} must be rejected under int8");
+        }
+    }
+
+    #[test]
+    fn int8_generation_is_deterministic() {
+        let a = gen("pedestrian", &int8_opts(Isa::Avx2));
+        let b = gen("pedestrian", &int8_opts(Isa::Avx2));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn int8_entry_and_exit_planes_are_float() {
+        let src = gen("ball", &int8_opts(Isa::Generic));
+        assert!(src.contains("/* entry: quantize x_in"));
+        assert!(src.contains("/* exit: dequantize"));
+        // ball ends in softmax: the float epilogue must be present.
+        assert!(src.contains("float softmax epilogue"));
+        assert!(src.contains("#include <math.h>"));
+    }
+}

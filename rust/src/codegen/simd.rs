@@ -179,7 +179,7 @@ impl VecSpec {
         match isa {
             Isa::Generic => None,
             Isa::Sse3 => (channels % 4 == 0).then_some(SSE),
-            Isa::Neon => (channels % 4 == 0).then_some(NEON),
+            Isa::Neon | Isa::NeonDot => (channels % 4 == 0).then_some(NEON),
             Isa::NeonVfpv3 => (channels % 4 == 0).then_some(NEON_VFPV3),
             Isa::Avx2 => {
                 if channels % 8 == 0 {
@@ -201,6 +201,9 @@ impl VecSpec {
             Isa::Avx2 => &[AVX2, SSE],
             Isa::Neon => &[NEON],
             Isa::NeonVfpv3 => &[NEON_VFPV3],
+            // f32 under neon-dot is plain NEON: SDOT only changes the
+            // int8 vocabulary below.
+            Isa::NeonDot => &[NEON],
         }
     }
 
@@ -354,6 +357,202 @@ impl ChannelSchedule {
             .iter()
             .map(|s| match s.vec {
                 Some(v) => s.len / v.width,
+                None => s.len,
+            })
+            .sum()
+    }
+}
+
+// ---------------------------------------------------------------------
+// int8 vocabulary (`--dtype int8`)
+// ---------------------------------------------------------------------
+
+/// C templates for one int8 dot-product flavor. The unit of work is one
+/// **accumulator group**: `lanes` int32 accumulators covering `lanes`
+/// output channels, fed `chunk` input channels per multiply-accumulate
+/// step from a pre-packed weight vector.
+///
+/// x86 note: `_mm*_maddubs_epi16` (the obvious int8 pairing) multiplies
+/// unsigned × signed and **saturates** the int16 pair sums, which would
+/// break the bit-exact oracle contract for adversarial weights. The x86
+/// rows therefore sign-extend activation pairs to int16 at generation
+/// time (composed into one broadcast word) and use `_mm*_madd_epi16`,
+/// whose int32 pair sums are exact — same throughput class, no
+/// saturation hazard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct QVecSpec {
+    /// int32 accumulator lanes per group (= output channels per group).
+    pub lanes: usize,
+    /// Input channels consumed per multiply-accumulate step.
+    pub chunk: usize,
+    /// Accumulator register C type.
+    pub acc_ty: &'static str,
+    /// Broadcast-activation register C type.
+    pub act_ty: &'static str,
+    /// Packed-weight element C type in the static arrays.
+    pub w_elem_ty: &'static str,
+    /// Load `lanes` int32 values ($a = `const int *` address).
+    pub load_acc: &'static str,
+    /// Store the accumulator group ($a = `int *` address, $b = register).
+    pub store_acc: &'static str,
+    /// Load one packed weight vector ($a = element address).
+    pub load_w: &'static str,
+    /// Broadcast a composed activation word ($a = scalar C expression;
+    /// an `int` word for the x86/SDOT rows, a single `short` for NEON's
+    /// widening row).
+    pub broadcast: &'static str,
+    /// `$c += $a . $b` multiply-accumulate statement ($a activations,
+    /// $b weights, $c accumulator).
+    pub madd: &'static str,
+}
+
+/// SSE2 int8 row: activations sign-extended to int16 pairs, exact
+/// `_mm_madd_epi16` pair-dot into 4 int32 accumulators.
+pub(crate) const QSSE: QVecSpec = QVecSpec {
+    lanes: 4,
+    chunk: 2,
+    acc_ty: "__m128i",
+    act_ty: "__m128i",
+    w_elem_ty: "short",
+    load_acc: "_mm_loadu_si128((const __m128i *)($a))",
+    store_acc: "_mm_storeu_si128((__m128i *)($a), $b);",
+    load_w: "_mm_loadu_si128((const __m128i *)($a))",
+    broadcast: "_mm_set1_epi32($a)",
+    madd: "$c = _mm_add_epi32($c, _mm_madd_epi16($a, $b));",
+};
+
+/// AVX2 int8 row: the same exact madd scheme, 8 accumulator lanes.
+pub(crate) const QAVX2: QVecSpec = QVecSpec {
+    lanes: 8,
+    chunk: 2,
+    acc_ty: "__m256i",
+    act_ty: "__m256i",
+    w_elem_ty: "short",
+    load_acc: "_mm256_loadu_si256((const __m256i *)($a))",
+    store_acc: "_mm256_storeu_si256((__m256i *)($a), $b);",
+    load_w: "_mm256_loadu_si256((const __m256i *)($a))",
+    broadcast: "_mm256_set1_epi32($a)",
+    madd: "$c = _mm256_add_epi32($c, _mm256_madd_epi16($a, $b));",
+};
+
+/// NEON int8 row (ARMv7+/AArch64 baseline): `vmlal_s16` widening
+/// multiply-accumulate — int16 × int16 + int32, exact. (`vmlal_s8`
+/// accumulates into int16 lanes, which wrap for real accumulations, so
+/// the widening int16 form is the correct baseline row.)
+pub(crate) const QNEON: QVecSpec = QVecSpec {
+    lanes: 4,
+    chunk: 1,
+    acc_ty: "int32x4_t",
+    act_ty: "int16x4_t",
+    w_elem_ty: "short",
+    load_acc: "vld1q_s32($a)",
+    store_acc: "vst1q_s32($a, $b);",
+    load_w: "vld1_s16($a)",
+    broadcast: "vdup_n_s16($a)",
+    madd: "$c = vmlal_s16($c, $a, $b);",
+};
+
+/// ARMv8.2+dotprod row ([`Isa::NeonDot`]): `vdotq_s32` — four signed
+/// int8×int8 products per lane summed into each int32 accumulator, so
+/// one step consumes 4 input channels for 4 output channels.
+pub(crate) const QNEON_DOT: QVecSpec = QVecSpec {
+    lanes: 4,
+    chunk: 4,
+    acc_ty: "int32x4_t",
+    act_ty: "int8x16_t",
+    w_elem_ty: "signed char",
+    load_acc: "vld1q_s32($a)",
+    store_acc: "vst1q_s32($a, $b);",
+    load_w: "vld1q_s8($a)",
+    broadcast: "vreinterpretq_s8_s32(vdupq_n_s32($a))",
+    madd: "$c = vdotq_s32($c, $a, $b);",
+};
+
+impl QVecSpec {
+    /// int8 flavors available under an ISA, widest first. AVX2 hosts
+    /// also get the SSE row for 4-lane remainder groups.
+    pub fn flavors(isa: Isa) -> &'static [QVecSpec] {
+        match isa {
+            Isa::Generic => &[],
+            Isa::Sse3 => &[QSSE],
+            Isa::Avx2 => &[QAVX2, QSSE],
+            Isa::Neon | Isa::NeonVfpv3 => &[QNEON],
+            Isa::NeonDot => &[QNEON_DOT],
+        }
+    }
+
+    /// Accumulator-group load expression.
+    pub fn load_acc(&self, addr: &str) -> String {
+        subst(self.load_acc, addr, "", "")
+    }
+
+    /// Accumulator-group store statement.
+    pub fn store_acc(&self, addr: &str, reg: &str) -> String {
+        subst(self.store_acc, addr, reg, "")
+    }
+
+    /// Packed-weight vector load expression.
+    pub fn load_w(&self, addr: &str) -> String {
+        subst(self.load_w, addr, "", "")
+    }
+
+    /// Broadcast expression from a composed activation word.
+    pub fn broadcast(&self, expr: &str) -> String {
+        subst(self.broadcast, expr, "", "")
+    }
+
+    /// `acc += act . w` statement.
+    pub fn madd(&self, act: &str, wv: &str, acc: &str) -> String {
+        subst(self.madd, act, wv, acc)
+    }
+}
+
+/// int8 counterpart of [`LaneSegment`]: a run of output channels
+/// emitted as accumulator groups of one flavor, or scalar lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) struct QLaneSegment {
+    /// First output channel covered.
+    pub start: usize,
+    /// Number of channels covered (multiple of `lanes` for vector
+    /// segments).
+    pub len: usize,
+    /// int8 flavor, or `None` for scalar lanes.
+    pub vec: Option<QVecSpec>,
+}
+
+/// int8 counterpart of [`ChannelSchedule`]: vector-group width is
+/// per-dtype (the int32 accumulator lanes of the ISA's dot row), greedy
+/// widest first, scalar remainder lanes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub(crate) struct QChannelSchedule {
+    pub segments: Vec<QLaneSegment>,
+}
+
+impl QChannelSchedule {
+    /// Greedy widest-first schedule for `channels` output lanes.
+    pub fn for_channels(isa: Isa, channels: usize) -> QChannelSchedule {
+        let mut segments = Vec::new();
+        let mut at = 0usize;
+        for &v in QVecSpec::flavors(isa) {
+            let n = (channels - at) / v.lanes * v.lanes;
+            if n > 0 {
+                segments.push(QLaneSegment { start: at, len: n, vec: Some(v) });
+                at += n;
+            }
+        }
+        if at < channels || channels == 0 {
+            segments.push(QLaneSegment { start: at, len: channels - at, vec: None });
+        }
+        QChannelSchedule { segments }
+    }
+
+    /// Statement-count estimate per tap (one per accumulator group plus
+    /// one per scalar lane), mirroring [`ChannelSchedule::cost_per_tap`].
+    pub fn cost_per_tap(&self) -> usize {
+        self.segments
+            .iter()
+            .map(|s| match s.vec {
+                Some(v) => s.len / v.lanes,
                 None => s.len,
             })
             .sum()
@@ -519,5 +718,55 @@ mod tests {
         assert_eq!(s.segments.len(), 1);
         assert_eq!(s.segments[0].len, 8);
         assert_eq!(s.cost_per_tap(), 2);
+    }
+
+    #[test]
+    fn int8_vocabulary_is_saturation_free() {
+        // No row may use the saturating unsigned pairing or the
+        // int16-accumulating vmlal_s8 — both break the bit-exact oracle.
+        for isa in [Isa::Sse3, Isa::Avx2, Isa::Neon, Isa::NeonVfpv3, Isa::NeonDot] {
+            for v in QVecSpec::flavors(isa) {
+                assert!(!v.madd.contains("maddubs"), "{isa:?} uses saturating maddubs");
+                assert!(!v.madd.contains("vmlal_s8"), "{isa:?} uses int16-wrapping vmlal_s8");
+            }
+        }
+        assert_eq!(QSSE.madd("qa", "qw", "qc"), "qc = _mm_add_epi32(qc, _mm_madd_epi16(qa, qw));");
+        assert!(QAVX2.madd("a", "w", "c").contains("_mm256_madd_epi16"));
+        assert_eq!(QNEON.madd("qa", "qw", "qc"), "qc = vmlal_s16(qc, qa, qw);");
+        assert_eq!(QNEON_DOT.madd("qa", "qw", "qc"), "qc = vdotq_s32(qc, qa, qw);");
+    }
+
+    #[test]
+    fn int8_rows_consume_expected_channel_chunks() {
+        assert_eq!((QSSE.lanes, QSSE.chunk), (4, 2));
+        assert_eq!((QAVX2.lanes, QAVX2.chunk), (8, 2));
+        assert_eq!((QNEON.lanes, QNEON.chunk), (4, 1));
+        assert_eq!((QNEON_DOT.lanes, QNEON_DOT.chunk), (4, 4));
+        assert_eq!(QNEON_DOT.load_w("qwq0 + 16"), "vld1q_s8(qwq0 + 16)");
+        assert_eq!(QNEON.broadcast("(short)s0[3]"), "vdup_n_s16((short)s0[3])");
+        assert_eq!(QSSE.load_acc("qb0 + 4"), "_mm_loadu_si128((const __m128i *)(qb0 + 4))");
+        assert_eq!(QAVX2.store_acc("nncg_qacc", "qc"), "_mm256_storeu_si256((__m256i *)(nncg_qacc), qc);");
+    }
+
+    #[test]
+    fn int8_schedule_width_is_per_dtype() {
+        // 13 outputs under AVX2: one 8-lane group, one 4-lane SSE
+        // remainder group, one scalar lane.
+        let s = QChannelSchedule::for_channels(Isa::Avx2, 13);
+        let lanes: Vec<Option<usize>> = s.segments.iter().map(|g| g.vec.map(|v| v.lanes)).collect();
+        assert_eq!(lanes, vec![Some(8), Some(4), None]);
+        assert_eq!(s.cost_per_tap(), 3);
+        // neon-dot and plain neon share the 4-lane group shape; generic
+        // is all scalar.
+        let d = QChannelSchedule::for_channels(Isa::NeonDot, 6);
+        assert_eq!(d.segments[0].vec.unwrap().chunk, 4);
+        assert_eq!((d.segments[1].start, d.segments[1].len), (4, 2));
+        assert!(QChannelSchedule::for_channels(Isa::Generic, 5).segments[0].vec.is_none());
+    }
+
+    #[test]
+    fn f32_flavors_under_neon_dot_are_plain_neon() {
+        assert_eq!(VecSpec::flavors(Isa::NeonDot), &[NEON]);
+        assert_eq!(VecSpec::for_channels(Isa::NeonDot, 8).unwrap().ty, "float32x4_t");
     }
 }

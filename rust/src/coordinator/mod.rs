@@ -326,6 +326,21 @@ pub fn serve_single(model: &str, engine: Arc<dyn InferenceEngine>, n_workers: us
 /// Execute one dequeued request: shed if stale, route, run the engine
 /// under panic isolation, record metrics, and reply exactly once.
 pub(crate) fn execute(req: Request, router: &Router, metrics: &LatencyRecorder) -> ExecOutcome {
+    execute_with(req, None, router, metrics)
+}
+
+/// [`execute`] with an optionally pre-resolved engine. Batch executors
+/// pass `Some` so a dequeued batch shares one router lookup per distinct
+/// model instead of taking the registry read-lock per request; `None`
+/// resolves here. `resolved` must be the engine registered for
+/// `req.model` (a stale pre-resolution after a hot-swap simply serves the
+/// batch on the engine it was admitted under).
+pub(crate) fn execute_with(
+    req: Request,
+    resolved: Option<Arc<dyn InferenceEngine>>,
+    router: &Router,
+    metrics: &LatencyRecorder,
+) -> ExecOutcome {
     let Request { model, input, reply, enqueued, deadline } = req;
     let guard = ReplyGuard::new(reply, &model);
     let now = Instant::now();
@@ -341,7 +356,7 @@ pub(crate) fn execute(req: Request, router: &Router, metrics: &LatencyRecorder) 
     }
 
     let queue_us = now.duration_since(enqueued).as_secs_f64() * 1e6;
-    let engine = match router.engine(&model) {
+    let engine = match resolved.map(Ok).unwrap_or_else(|| router.engine(&model)) {
         Ok(e) => e,
         Err(_) => {
             metrics.record(&model, queue_us, 0.0, false);

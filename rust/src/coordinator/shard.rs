@@ -34,6 +34,7 @@ use super::metrics::{LatencyRecorder, MetricsSnapshot, ServeCounters, ShardStats
 use super::router::Router;
 use super::{ExecOutcome, Request, ServeResult};
 use crate::faults::{FaultPlan, FaultSite};
+use crate::runtime::InferenceEngine;
 use crate::tensor::Tensor;
 use crate::util::{fxhash, panic_message};
 use std::collections::{HashMap, VecDeque};
@@ -407,11 +408,26 @@ impl ShardPool {
         self.run_batch(thief, batch);
     }
 
-    /// Execute a popped batch on `executor`'s account.
+    /// Execute a popped batch on `executor`'s account. Shard queues have
+    /// model affinity, so a dequeued batch is usually one model — resolve
+    /// the router once per distinct model per batch (the last lookup is
+    /// memoized) instead of taking the registry read-lock per request. A
+    /// failed lookup memoizes as `None`, and `execute_with` then re-walks
+    /// the unknown-model reply path so the per-request `ModelUnknown`
+    /// error is preserved.
     fn run_batch(&self, executor: &Arc<Shard>, batch: Vec<SeqReq>) {
         executor.in_flight.fetch_add(batch.len() as u64, Ordering::SeqCst);
+        let mut memo: Option<(String, Option<Arc<dyn InferenceEngine>>)> = None;
         for sr in batch {
-            let outcome = super::execute(sr.req, &self.router, &self.metrics);
+            let resolved = match &memo {
+                Some((m, e)) if *m == sr.req.model => e.clone(),
+                _ => {
+                    let e = self.router.engine(&sr.req.model).ok();
+                    memo = Some((sr.req.model.clone(), e.clone()));
+                    e
+                }
+            };
+            let outcome = super::execute_with(sr.req, resolved, &self.router, &self.metrics);
             executor.on_outcome(outcome);
             executor.in_flight.fetch_sub(1, Ordering::SeqCst);
         }
@@ -637,6 +653,45 @@ mod tests {
         let (req, rx) = mk_req("a");
         assert!(q.push(SeqReq { seq: 12, req }).is_ok());
         keep.push(rx);
+    }
+
+    /// Batched dequeue resolves the engine once per distinct model in the
+    /// batch, but every request must keep its own reply — successes for
+    /// the registered model and `ModelUnknown` errors for the ghost
+    /// model, interleaved through the same memoized batch.
+    #[test]
+    fn batched_dequeue_preserves_per_request_replies() {
+        use crate::graph::zoo;
+        use crate::interp::InterpEngine;
+        let router = Arc::new(Router::new());
+        let engine: Arc<dyn InferenceEngine> =
+            Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(3)).unwrap());
+        router.register("tiny", engine);
+        let cfg = ShardConfig {
+            shards: 1,
+            workers_per_shard: 1,
+            batch: BatcherPolicy::batched(4, Duration::from_millis(1)),
+            ..ShardConfig::default()
+        };
+        let handle = super::super::serve_sharded(router, cfg);
+        let mut rxs = Vec::new();
+        for i in 0..9 {
+            let model = if i % 3 == 2 { "ghost" } else { "tiny" };
+            let rx = handle.submit(model, Tensor::zeros(&[8, 8, 1]), None).unwrap();
+            rxs.push((model, rx));
+        }
+        for (model, rx) in rxs {
+            let res = rx.recv().unwrap_or(Err(ServeError::Stopped));
+            match (model, res) {
+                ("tiny", Ok(_)) => {}
+                ("ghost", Err(ServeError::ModelUnknown { registered, .. })) => {
+                    assert_eq!(registered, vec!["tiny".to_string()]);
+                }
+                (m, other) => panic!("{m}: unexpected reply {other:?}"),
+            }
+        }
+        let snap = handle.stop();
+        assert_eq!(snap.total_requests, 9);
     }
 
     /// The steal-order property: interleaving owner pops and steals in any

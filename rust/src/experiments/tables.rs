@@ -2,7 +2,7 @@
 
 use super::{build_engine, default_artifacts_dir, default_weights_dir, default_work_dir, load_model};
 use crate::bench_harness::{bench, BenchConfig, Stats, Table};
-use crate::codegen::{AlignMode, CodegenOptions, FuseMode, Isa, PadMode, TileMode};
+use crate::codegen::{AlignMode, CodegenOptions, DType, FuseMode, Isa, PadMode, TileMode};
 use crate::platform::{paper_platforms, GpuModel};
 use crate::runtime::EngineKind;
 use crate::tensor::Tensor;
@@ -287,15 +287,21 @@ pub struct AblationRow {
 /// loops (`--fuse-rolled auto`, the default): periodic-eligible chains
 /// fuse at full depth with prologue + `for` loop + epilogue emission, so
 /// its `c_bytes` column now tracks the rolled code size and its
-/// `static_bytes` the deeper groups' smaller footprint.
-pub const ABLATION_VARIANTS: [(&str, PadMode, TileMode, AlignMode, FuseMode); 7] = [
-    ("pad-copy+untiled", PadMode::Copy, TileMode::Off, AlignMode::Auto, FuseMode::Off),
-    ("padless+untiled", PadMode::Padless, TileMode::Off, AlignMode::Auto, FuseMode::Off),
-    ("pad-copy+tiled", PadMode::Copy, TileMode::Auto, AlignMode::Auto, FuseMode::Off),
-    ("padless+tiled", PadMode::Padless, TileMode::Auto, AlignMode::Auto, FuseMode::Off),
-    ("padless+tiled+unaligned", PadMode::Padless, TileMode::Auto, AlignMode::Off, FuseMode::Off),
-    ("padless+tiled-2d", PadMode::Padless, TileMode::Fixed2D(2, 4), AlignMode::Auto, FuseMode::Off),
-    ("padless+tiled+fused", PadMode::Padless, TileMode::Auto, AlignMode::Auto, FuseMode::Auto),
+/// `static_bytes` the deeper groups' smaller footprint. Since PR 8 two
+/// `--dtype int8` rows extend the sweep: the quantized emission keeps
+/// all intermediates in `signed char` rings (4x smaller static RAM) and
+/// replaces the float MACs with widening integer multiply-adds; the
+/// register-tile knob is a no-op there, so the int8 rows pin tiling off.
+pub const ABLATION_VARIANTS: [(&str, PadMode, TileMode, AlignMode, FuseMode, DType); 9] = [
+    ("pad-copy+untiled", PadMode::Copy, TileMode::Off, AlignMode::Auto, FuseMode::Off, DType::F32),
+    ("padless+untiled", PadMode::Padless, TileMode::Off, AlignMode::Auto, FuseMode::Off, DType::F32),
+    ("pad-copy+tiled", PadMode::Copy, TileMode::Auto, AlignMode::Auto, FuseMode::Off, DType::F32),
+    ("padless+tiled", PadMode::Padless, TileMode::Auto, AlignMode::Auto, FuseMode::Off, DType::F32),
+    ("padless+tiled+unaligned", PadMode::Padless, TileMode::Auto, AlignMode::Off, FuseMode::Off, DType::F32),
+    ("padless+tiled-2d", PadMode::Padless, TileMode::Fixed2D(2, 4), AlignMode::Auto, FuseMode::Off, DType::F32),
+    ("padless+tiled+fused", PadMode::Padless, TileMode::Auto, AlignMode::Auto, FuseMode::Auto, DType::F32),
+    ("int8", PadMode::Auto, TileMode::Off, AlignMode::Auto, FuseMode::Off, DType::Int8),
+    ("int8+fused", PadMode::Auto, TileMode::Off, AlignMode::Auto, FuseMode::Auto, DType::Int8),
 ];
 
 /// Measure every paper model under every pad/tile/fuse variant.
@@ -313,8 +319,9 @@ pub fn run_pad_tile_ablation(quick: bool) -> Result<Vec<AblationRow>> {
         let mut rng = XorShift64::new(7);
         let input = Tensor::rand(model.input.dims(), 0.0, 1.0, &mut rng);
         let mut out = vec![0.0f32; model.output_shape()?.numel()];
-        for (variant, pad_mode, tile, align, fuse) in ABLATION_VARIANTS {
-            let opts = CodegenOptions { pad_mode, tile, align, fuse, ..CodegenOptions::sse3() };
+        for (variant, pad_mode, tile, align, fuse, dtype) in ABLATION_VARIANTS {
+            let opts =
+                CodegenOptions { pad_mode, tile, align, fuse, dtype, ..CodegenOptions::sse3() };
             let src = crate::codegen::generate_c(&model, &opts)?;
             let scratch = crate::codegen::scratch_report(&model, &opts)?;
             let cnn = crate::cc::CompiledCnn::from_source(&model, &opts, &src, default_work_dir())?;
@@ -385,6 +392,17 @@ pub fn render_ablation(rows: &[AblationRow]) -> String {
                 plain as f64 / 1024.0
             ));
         }
+        if let (Some(f32_t), Some(q_t)) = (find("padless+tiled"), find("int8")) {
+            out.push_str(&format!("{name}: int8 vs padless+tiled f32 = {:.2}x\n", f32_t / q_t));
+        }
+        if let (Some(f32_ram), Some(q_ram)) = (find_ram("padless+tiled"), find_ram("int8")) {
+            out.push_str(&format!(
+                "{name}: int8 static RAM = {:.1}K vs {:.1}K f32 ({:.2}x smaller)\n",
+                q_ram as f64 / 1024.0,
+                f32_ram as f64 / 1024.0,
+                f32_ram as f64 / q_ram.max(1) as f64
+            ));
+        }
     }
     out
 }
@@ -412,7 +430,7 @@ pub fn write_bench_json(path: &Path, rows: &[AblationRow], source: &str) -> Resu
         ("bench".to_string(), Value::Str("table7_pad_tile_ablation".to_string())),
         ("source".to_string(), Value::Str(source.to_string())),
         ("variants".to_string(), Value::Array(
-            ABLATION_VARIANTS.iter().map(|(n, _, _, _, _)| Value::Str(n.to_string())).collect(),
+            ABLATION_VARIANTS.iter().map(|(n, _, _, _, _, _)| Value::Str(n.to_string())).collect(),
         )),
         ("rows".to_string(), Value::Array(rows_json)),
     ]);
@@ -481,6 +499,18 @@ mod tests {
                 "{name}: ring buffers must shrink static RAM ({} vs {})",
                 fused.static_bytes,
                 unfused.static_bytes
+            );
+        }
+        // The int8 rows must run on every paper model and realize the
+        // signed-char footprint win over the f32 ping-pong planes.
+        for name in crate::graph::zoo::PAPER_MODELS {
+            let q = rows.iter().find(|r| r.model == name && r.variant == "int8").unwrap();
+            let f = rows.iter().find(|r| r.model == name && r.variant == "padless+tiled").unwrap();
+            assert!(
+                q.static_bytes < f.static_bytes,
+                "{name}: int8 scratch {} must undercut f32 {}",
+                q.static_bytes,
+                f.static_bytes
             );
         }
     }

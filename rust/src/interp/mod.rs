@@ -13,10 +13,12 @@
 mod ops;
 
 pub use ops::{avgpool2d, batchnorm, conv2d, dense, depthwise_conv2d, leaky_relu, maxpool2d, relu, softmax};
+pub use ops::{qavgpool2d, qconv2d, qdense, qdepthwise_conv2d, qleaky_relu, qmaxpool2d, qrelu};
 
 use crate::graph::{check_input, Activation, Layer, Model};
+use crate::passes::{leaky_mult, quantize_input, LayerQuant, QuantPlan};
 use crate::tensor::Tensor;
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// Run a full model on one input image, returning the final output tensor.
 pub fn run(model: &Model, input: &Tensor) -> Result<Tensor> {
@@ -58,6 +60,113 @@ pub fn run_layer(layer: &Layer, x: &Tensor) -> Result<Tensor> {
             apply_activation(&y, *activation)
         }
     })
+}
+
+/// Run a model through the **int8 reference path**: quantize the input
+/// with the plan's input scale, execute the integer chain (requantizing at
+/// layer boundaries exactly as the generated C does), dequantize, and —
+/// when the model ends in softmax — apply the float softmax epilogue the
+/// int8 emitter also appends. This is the bit-exact oracle for
+/// `--dtype int8` codegen: every integer step here is the same shared
+/// `passes::{requant, qleaky, qavg, quantize_input}` arithmetic the
+/// emitters print. (The softmax epilogue itself is float and therefore
+/// libm-exact rather than bit-exact; everything before it is integers.)
+pub fn run_quantized(model: &Model, qp: &QuantPlan, input: &Tensor) -> Result<Tensor> {
+    check_input(model, input)?;
+    if qp.layers.len() != model.layers.len() {
+        bail!("quant plan has {} layers, model has {}", qp.layers.len(), model.layers.len());
+    }
+    let inv = 1.0 / qp.input_scale;
+    let mut q: Vec<i8> = input.data().iter().map(|&v| quantize_input(v, inv)).collect();
+    let mut dims: Vec<usize> = input.dims().to_vec();
+
+    for (layer, lq) in model.layers.iter().zip(&qp.layers) {
+        let arith = match lq {
+            LayerQuant::Mac { arith, .. } => Some(arith),
+            LayerQuant::Passthrough { .. } => None,
+        };
+        match layer {
+            Layer::Conv2D { weights, stride, padding, activation, .. } => {
+                let a = arith.ok_or_else(|| anyhow::anyhow!("conv needs a Mac quant record"))?;
+                let d = weights.dims();
+                let (y, yd) = ops::qconv2d(
+                    &q,
+                    [dims[0], dims[1], dims[2]],
+                    [d[0], d[1], d[2], d[3]],
+                    a,
+                    *stride,
+                    *padding,
+                )?;
+                q = y;
+                dims = yd.to_vec();
+                apply_qactivation(&mut q, *activation);
+            }
+            Layer::DepthwiseConv2D { weights, stride, padding, activation, .. } => {
+                let a =
+                    arith.ok_or_else(|| anyhow::anyhow!("depthwise needs a Mac quant record"))?;
+                let d = weights.dims();
+                let (y, yd) = ops::qdepthwise_conv2d(
+                    &q,
+                    [dims[0], dims[1], dims[2]],
+                    [d[0], d[1], d[2]],
+                    a,
+                    *stride,
+                    *padding,
+                )?;
+                q = y;
+                dims = yd.to_vec();
+                apply_qactivation(&mut q, *activation);
+            }
+            Layer::Dense { weights, activation, .. } => {
+                let a = arith.ok_or_else(|| anyhow::anyhow!("dense needs a Mac quant record"))?;
+                let d = weights.dims();
+                q = ops::qdense(&q, d[0], d[1], a)?;
+                dims = vec![d[1]];
+                apply_qactivation(&mut q, *activation);
+            }
+            Layer::MaxPool2D { pool, stride } => {
+                let (y, yd) = ops::qmaxpool2d(&q, [dims[0], dims[1], dims[2]], *pool, *stride)?;
+                q = y;
+                dims = yd.to_vec();
+            }
+            Layer::AvgPool2D { pool, stride } => {
+                let (y, yd) = ops::qavgpool2d(&q, [dims[0], dims[1], dims[2]], *pool, *stride)?;
+                q = y;
+                dims = yd.to_vec();
+            }
+            Layer::Activation(a) => apply_qactivation(&mut q, *a),
+            Layer::Flatten => dims = vec![q.len()],
+            other => bail!("int8 path cannot run {} (optimize the model first)", other.kind_name()),
+        }
+    }
+
+    // Dequantize with the final layer's scale, then the float softmax
+    // epilogue if the model ends in one (mirrors the generated epilogue:
+    // f32 max-subtract, f64 exp cast back to f32, in-order f32 sum).
+    let s_out = qp.layers.last().map(|l| l.out_scale()).unwrap_or(qp.input_scale);
+    let mut out: Vec<f32> = q.iter().map(|&v| v as f32 * s_out).collect();
+    if qp.trailing_softmax {
+        let mx = out.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0f32;
+        for v in out.iter_mut() {
+            *v = ((*v - mx) as f64).exp() as f32;
+            sum += *v;
+        }
+        for v in out.iter_mut() {
+            *v /= sum;
+        }
+    }
+    Tensor::from_vec(&dims, out)
+}
+
+/// Integer activation between layers (softmax is never integer: it only
+/// appears trailing, handled by the float epilogue above).
+fn apply_qactivation(q: &mut [i8], a: Activation) {
+    match a {
+        Activation::None | Activation::Softmax => {}
+        Activation::Relu => ops::qrelu(q),
+        Activation::LeakyRelu(alpha) => ops::qleaky_relu(q, leaky_mult(alpha)),
+    }
 }
 
 fn apply_activation(x: &Tensor, a: Activation) -> Tensor {
@@ -137,5 +246,36 @@ mod tests {
         let x = Tensor::from_vec(&[1, 1, 2], vec![3.0, -4.0]).unwrap();
         let y = run_layer(&Layer::Dropout { rate: 0.5 }, &x).unwrap();
         assert_eq!(x, y);
+    }
+
+    #[test]
+    fn quantized_run_tracks_f32_reference() {
+        let mut rng = XorShift64::new(12);
+        for name in zoo::PAPER_MODELS {
+            let m = zoo::by_name(name).unwrap().with_random_weights(7);
+            let opt = crate::passes::optimize(m).unwrap();
+            let qp = crate::passes::quantize_model(&opt).unwrap();
+            let x = Tensor::rand(opt.input.dims(), -1.0, 1.0, &mut rng);
+            let yf = run(&opt, &x).unwrap();
+            let yq = run_quantized(&opt, &qp, &x).unwrap();
+            assert_eq!(yf.dims(), yq.dims(), "{name}");
+            assert!(yq.data().iter().all(|v| v.is_finite()), "{name}");
+            // Loose smoke bound here; the per-model documented bounds live
+            // in the cross-engine suite.
+            let err = yf.max_abs_diff(&yq).unwrap();
+            assert!(err < 0.5, "{name}: int8 drifted err={err}");
+        }
+    }
+
+    #[test]
+    fn quantized_run_is_deterministic() {
+        let m = zoo::ball_classifier().with_random_weights(3);
+        let opt = crate::passes::optimize(m).unwrap();
+        let qp = crate::passes::quantize_model(&opt).unwrap();
+        let mut rng = XorShift64::new(4);
+        let x = Tensor::rand(opt.input.dims(), -1.0, 1.0, &mut rng);
+        let a = run_quantized(&opt, &qp, &x).unwrap();
+        let b = run_quantized(&opt, &qp, &x).unwrap();
+        assert_eq!(a.data(), b.data());
     }
 }

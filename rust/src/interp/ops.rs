@@ -212,6 +212,201 @@ pub fn dense(x: &Tensor, w: &Tensor, b: &Tensor) -> Result<Tensor> {
     Ok(y)
 }
 
+// ---------------------------------------------------------------------------
+// int8 reference path (`--dtype int8` oracle)
+//
+// Bit-exact mirrors of what the quantized emitters generate: int32
+// accumulation over int8 activations/weights (saturation-free by the
+// QuantPlan's accumulator proof, so summation order is irrelevant),
+// multiply-shift requantization at layer boundaries via the shared
+// `passes::requant` helper, and integer ReLU/leaky-ReLU. Zero is its own
+// quantized value (symmetric scheme), so skipping out-of-bounds taps is
+// exactly zero padding, same as the f32 ops above.
+// ---------------------------------------------------------------------------
+
+use crate::passes::{qavg, qleaky, requant, QuantArith};
+
+/// Quantized 2-d convolution. `x` is `[h,w,c]` int8 (dims in `xd`), the
+/// weights/bias/requant parameters come from the layer's [`QuantArith`]
+/// (weights in original HWIO order, `wd = [h_k, w_k, c_in, c_out]`).
+/// Returns the requantized int8 output and its dims.
+pub fn qconv2d(
+    x: &[i8],
+    xd: [usize; 3],
+    wd: [usize; 4],
+    a: &QuantArith,
+    stride: (usize, usize),
+    padding: Padding,
+) -> Result<(Vec<i8>, [usize; 3])> {
+    let (h_in, w_in, c_in) = (xd[0], xd[1], xd[2]);
+    let (h_k, w_k, c_out) = (wd[0], wd[1], wd[3]);
+    if wd[2] != c_in {
+        bail!("qconv c_in mismatch: input {c_in}, weights {}", wd[2]);
+    }
+    let (h_out, p_h) = padding.resolve(h_in, h_k, stride.0)?;
+    let (w_out, p_w) = padding.resolve(w_in, w_k, stride.1)?;
+    let mut y = vec![0i8; h_out * w_out * c_out];
+    for i in 0..h_out {
+        for j in 0..w_out {
+            for k in 0..c_out {
+                let mut acc: i32 = a.qb[k];
+                for n in 0..h_k {
+                    for m in 0..w_k {
+                        let ii = (i * stride.0 + n) as isize - p_h as isize;
+                        let jj = (j * stride.1 + m) as isize - p_w as isize;
+                        if ii < 0 || jj < 0 || ii >= h_in as isize || jj >= w_in as isize {
+                            continue;
+                        }
+                        let xrow = (ii as usize * w_in + jj as usize) * c_in;
+                        let wrow = ((n * w_k + m) * c_in) * c_out;
+                        for o in 0..c_in {
+                            acc += a.qw[wrow + o * c_out + k] as i32 * x[xrow + o] as i32;
+                        }
+                    }
+                }
+                y[(i * w_out + j) * c_out + k] = requant(acc, a.m[k], a.pre, a.post);
+            }
+        }
+    }
+    Ok((y, [h_out, w_out, c_out]))
+}
+
+/// Quantized depthwise convolution, weights `[h_k, w_k, c]`.
+pub fn qdepthwise_conv2d(
+    x: &[i8],
+    xd: [usize; 3],
+    wd: [usize; 3],
+    a: &QuantArith,
+    stride: (usize, usize),
+    padding: Padding,
+) -> Result<(Vec<i8>, [usize; 3])> {
+    let (h_in, w_in, c) = (xd[0], xd[1], xd[2]);
+    let (h_k, w_k) = (wd[0], wd[1]);
+    if wd[2] != c {
+        bail!("qdepthwise channel mismatch: input {c}, weights {}", wd[2]);
+    }
+    let (h_out, p_h) = padding.resolve(h_in, h_k, stride.0)?;
+    let (w_out, p_w) = padding.resolve(w_in, w_k, stride.1)?;
+    let mut y = vec![0i8; h_out * w_out * c];
+    for i in 0..h_out {
+        for j in 0..w_out {
+            for k in 0..c {
+                let mut acc: i32 = a.qb[k];
+                for n in 0..h_k {
+                    for m in 0..w_k {
+                        let ii = (i * stride.0 + n) as isize - p_h as isize;
+                        let jj = (j * stride.1 + m) as isize - p_w as isize;
+                        if ii < 0 || jj < 0 || ii >= h_in as isize || jj >= w_in as isize {
+                            continue;
+                        }
+                        acc += a.qw[(n * w_k + m) * c + k] as i32
+                            * x[(ii as usize * w_in + jj as usize) * c + k] as i32;
+                    }
+                }
+                y[(i * w_out + j) * c + k] = requant(acc, a.m[k], a.pre, a.post);
+            }
+        }
+    }
+    Ok((y, [h_out, w_out, c]))
+}
+
+/// Quantized max pooling — pure int8 comparisons, scale unchanged.
+pub fn qmaxpool2d(
+    x: &[i8],
+    xd: [usize; 3],
+    pool: (usize, usize),
+    stride: (usize, usize),
+) -> Result<(Vec<i8>, [usize; 3])> {
+    let (h_in, w_in, c) = (xd[0], xd[1], xd[2]);
+    if pool.0 > h_in || pool.1 > w_in {
+        bail!("pool window {:?} larger than input [{h_in},{w_in}]", pool);
+    }
+    let h_out = (h_in - pool.0) / stride.0 + 1;
+    let w_out = (w_in - pool.1) / stride.1 + 1;
+    let mut y = vec![0i8; h_out * w_out * c];
+    for i in 0..h_out {
+        for j in 0..w_out {
+            for k in 0..c {
+                let mut best = i8::MIN;
+                for n in 0..pool.0 {
+                    for m in 0..pool.1 {
+                        let v = x[((i * stride.0 + n) * w_in + (j * stride.1 + m)) * c + k];
+                        if v > best {
+                            best = v;
+                        }
+                    }
+                }
+                y[(i * w_out + j) * c + k] = best;
+            }
+        }
+    }
+    Ok((y, [h_out, w_out, c]))
+}
+
+/// Quantized average pooling: int32 window sum, Q15 multiply-shift mean
+/// (scale unchanged; mirrors the emitted `(sum * AM + AR) >> 15` form).
+pub fn qavgpool2d(
+    x: &[i8],
+    xd: [usize; 3],
+    pool: (usize, usize),
+    stride: (usize, usize),
+) -> Result<(Vec<i8>, [usize; 3])> {
+    let (h_in, w_in, c) = (xd[0], xd[1], xd[2]);
+    if pool.0 > h_in || pool.1 > w_in {
+        bail!("pool window {:?} larger than input [{h_in},{w_in}]", pool);
+    }
+    let h_out = (h_in - pool.0) / stride.0 + 1;
+    let w_out = (w_in - pool.1) / stride.1 + 1;
+    let mult = crate::passes::avg_mult(pool.0 * pool.1);
+    let mut y = vec![0i8; h_out * w_out * c];
+    for i in 0..h_out {
+        for j in 0..w_out {
+            for k in 0..c {
+                let mut sum: i32 = 0;
+                for n in 0..pool.0 {
+                    for m in 0..pool.1 {
+                        sum += x[((i * stride.0 + n) * w_in + (j * stride.1 + m)) * c + k] as i32;
+                    }
+                }
+                y[(i * w_out + j) * c + k] = qavg(sum, mult);
+            }
+        }
+    }
+    Ok((y, [h_out, w_out, c]))
+}
+
+/// Quantized dense layer, weights `[in, out]` in the [`QuantArith`].
+pub fn qdense(x: &[i8], n_in: usize, n_out: usize, a: &QuantArith) -> Result<Vec<i8>> {
+    if x.len() != n_in {
+        bail!("qdense in mismatch: input {}, weights {n_in}", x.len());
+    }
+    let mut y = vec![0i8; n_out];
+    for j in 0..n_out {
+        let mut acc: i32 = a.qb[j];
+        for i in 0..n_in {
+            acc += x[i] as i32 * a.qw[i * n_out + j] as i32;
+        }
+        y[j] = requant(acc, a.m[j], a.pre, a.post);
+    }
+    Ok(y)
+}
+
+/// Integer ReLU (in place).
+pub fn qrelu(x: &mut [i8]) {
+    for v in x {
+        if *v < 0 {
+            *v = 0;
+        }
+    }
+}
+
+/// Integer leaky ReLU (in place); `mult` from [`crate::passes::leaky_mult`].
+pub fn qleaky_relu(x: &mut [i8], mult: i32) {
+    for v in x {
+        *v = qleaky(*v as i32, mult);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -365,5 +560,78 @@ mod tests {
         let x = Tensor::from_vec(&[2], vec![-10.0, 10.0]).unwrap();
         let y = leaky_relu(&x, 0.1);
         assert_eq!(y.data(), &[-1.0, 10.0]);
+    }
+
+    /// Unit requant (m = 2^post, pre = 0) makes qconv a plain int dot.
+    fn unit_arith(qw: Vec<i8>, qb: Vec<i32>, n_ch: usize) -> QuantArith {
+        QuantArith {
+            w_scales: vec![1.0; n_ch],
+            qw,
+            qb,
+            m: vec![1 << 10; n_ch],
+            pre: 0,
+            post: 10,
+        }
+    }
+
+    #[test]
+    fn qconv_identity_kernel() {
+        let x: Vec<i8> = vec![1, 2, 3, 4];
+        let a = unit_arith(vec![1], vec![0], 1);
+        let (y, yd) = qconv2d(&x, [2, 2, 1], [1, 1, 1, 1], &a, (1, 1), Padding::Valid).unwrap();
+        assert_eq!(yd, [2, 2, 1]);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn qconv_same_padding_skips_oob_taps_like_zero_pad() {
+        // all-ones 3x3 kernel over 1..9: center sums all nine, corner the
+        // four in-bounds values — identical to the f32 zero-pad semantics.
+        let x: Vec<i8> = (1..=9).collect();
+        let a = unit_arith(vec![1; 9], vec![0], 1);
+        let (y, _) = qconv2d(&x, [3, 3, 1], [3, 3, 1, 1], &a, (1, 1), Padding::Same).unwrap();
+        assert_eq!(y[4], 45);
+        assert_eq!(y[0], 1 + 2 + 4 + 5);
+    }
+
+    #[test]
+    fn qconv_requant_saturates_at_127() {
+        // acc = 127*127 = 16129, identity requant would overflow i8 → clamps.
+        let x: Vec<i8> = vec![127];
+        let a = unit_arith(vec![127], vec![0], 1);
+        let (y, _) = qconv2d(&x, [1, 1, 1], [1, 1, 1, 1], &a, (1, 1), Padding::Valid).unwrap();
+        assert_eq!(y[0], 127);
+    }
+
+    #[test]
+    fn qmaxpool_and_qavgpool_known() {
+        let x: Vec<i8> = vec![1, 5, 3, 3];
+        let (y, _) = qmaxpool2d(&x, [2, 2, 1], (2, 2), (2, 2)).unwrap();
+        assert_eq!(y, vec![5]);
+        let (y, _) = qavgpool2d(&x, [2, 2, 1], (2, 2), (2, 2)).unwrap();
+        assert_eq!(y, vec![3]);
+        // negative values survive the int8 max (no unsigned confusion)
+        let x: Vec<i8> = vec![-1, -5, -3, -2];
+        let (y, _) = qmaxpool2d(&x, [2, 2, 1], (2, 2), (2, 2)).unwrap();
+        assert_eq!(y, vec![-1]);
+    }
+
+    #[test]
+    fn qdense_known() {
+        let x: Vec<i8> = vec![1, 2];
+        let a = unit_arith(vec![1, 2, 3, 4], vec![5, -5], 2);
+        let y = qdense(&x, 2, 2, &a).unwrap();
+        // y0 = 1*1 + 2*3 + 5 = 12 ; y1 = 1*2 + 2*4 - 5 = 5
+        assert_eq!(y, vec![12, 5]);
+    }
+
+    #[test]
+    fn q_activations_in_place() {
+        let mut x: Vec<i8> = vec![-10, 0, 10];
+        qrelu(&mut x);
+        assert_eq!(x, vec![0, 0, 10]);
+        let mut x: Vec<i8> = vec![-10, 0, 10];
+        qleaky_relu(&mut x, crate::passes::leaky_mult(0.5));
+        assert_eq!(x, vec![-5, 0, 10]);
     }
 }

@@ -9,10 +9,15 @@
 mod fold_bn;
 mod fuse_activation;
 mod fuse_groups;
+mod quantize;
 
 pub use fold_bn::fold_batchnorm;
 pub use fuse_activation::fuse_activations;
 pub use fuse_groups::{fusable, plan_fusion_groups, FusionGroup};
+pub use quantize::{
+    avg_mult, leaky_mult, qavg, qleaky, quantize_input, quantize_model, requant, LayerQuant,
+    QuantArith, QuantPlan, ACT_SHIFT,
+};
 
 use crate::graph::{Layer, Model};
 use anyhow::Result;

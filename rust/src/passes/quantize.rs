@@ -1,0 +1,481 @@
+//! Post-training symmetric quantization (`--dtype int8`).
+//!
+//! [`quantize_model`] runs a deterministic calibration batch through the
+//! f32 interpreter ops and derives a [`QuantPlan`]: one symmetric scale
+//! per activation tensor (recorded **pre-activation** for MAC layers, so
+//! leaky-negative ranges and pre-softmax logits are fully covered) and
+//! per-channel symmetric scales for conv/depthwise weights (per-tensor
+//! for dense). MAC layers additionally carry everything the integer
+//! emitters need: quantized weights/bias and the int32 → int8
+//! **multiply-shift requantization** parameters
+//!
+//! ```text
+//! t = (acc + 2^(pre-1)) >> pre            (pre == 0: t = acc)
+//! q = clamp((t * m[k] + 2^(post-1)) >> post, -127, 127)
+//! ```
+//!
+//! chosen so `t` fits 16 bits and `t * m` fits int32 — proven against the
+//! layer's worst-case accumulator (`127 * Σ|qw| + |qb|`), with a hard
+//! error when even the pre-shift cannot make int32 accumulation safe, and
+//! another when a channel's multiplier rounds to 0 (a per-channel scale
+//! spread beyond ~2^16 would silently zero that channel's outputs).
+//!
+//! The same formula helpers ([`requant`], [`leaky_mult`], [`avg_mult`],
+//! [`quantize_input`]) are used by the interpreter's int8 reference path
+//! and by the C emitter, which is what makes the generated code
+//! bit-exact against the oracle: both sides compute the identical
+//! saturation-free integer arithmetic. (Arithmetic right shift of
+//! negative values is implementation-defined in C89 but universal on
+//! gcc/clang/MSVC targets; Rust's `>>` on `i32` matches it.)
+
+use crate::graph::{Activation, Layer, Model};
+use crate::interp;
+use crate::tensor::Tensor;
+use crate::util::XorShift64;
+use anyhow::{bail, Result};
+
+/// Calibration batch size (seeded, deterministic).
+const CALIB_SAMPLES: usize = 8;
+
+/// Guard floor for activation scales (all-zero calibration planes).
+const SCALE_FLOOR: f32 = 1e-6;
+
+/// Everything the integer emitters need for one MAC layer.
+#[derive(Debug, Clone)]
+pub struct QuantArith {
+    /// Per-output-channel weight scales (dense: one scale replicated).
+    pub w_scales: Vec<f32>,
+    /// Quantized weights, original layout (HWIO / `[h,w,c]` / `[in,out]`).
+    pub qw: Vec<i8>,
+    /// Quantized bias in accumulator domain (`b / (s_in * s_w[k])`).
+    pub qb: Vec<i32>,
+    /// Per-channel requantization multipliers (`<= 32767`).
+    pub m: Vec<i32>,
+    /// Accumulator pre-shift (0 when the accumulator already fits 16 bits).
+    pub pre: u32,
+    /// Multiplier post-shift (`1..=30`).
+    pub post: u32,
+}
+
+/// Per-layer quantization record, index-aligned with `model.layers`.
+#[derive(Debug, Clone)]
+pub enum LayerQuant {
+    /// Conv2D / DepthwiseConv2D / Dense: quantized weights + requant.
+    Mac { arith: QuantArith, out_scale: f32 },
+    /// Pool / activation / flatten: int8 in, int8 out, scale unchanged.
+    Passthrough { out_scale: f32 },
+}
+
+impl LayerQuant {
+    /// Scale of this layer's int8 output plane.
+    pub fn out_scale(&self) -> f32 {
+        match self {
+            LayerQuant::Mac { out_scale, .. } | LayerQuant::Passthrough { out_scale } => *out_scale,
+        }
+    }
+}
+
+/// The quantization plan carried alongside the fusion plan bundle.
+#[derive(Debug, Clone)]
+pub struct QuantPlan {
+    /// Scale of the quantized input plane (`x_in[i] ≈ q[i] * input_scale`).
+    pub input_scale: f32,
+    /// True when the model ends in softmax: the integer chain treats it
+    /// as `None` and a float softmax runs over `x_out` after dequantize.
+    pub trailing_softmax: bool,
+    /// One record per (optimized) model layer.
+    pub layers: Vec<LayerQuant>,
+}
+
+/// Fixed-point shift for [`leaky_mult`] / [`avg_mult`] (Q15).
+pub const ACT_SHIFT: u32 = 15;
+
+/// Q15 multiplier for a leaky-ReLU slope (`alpha < 1` keeps results in
+/// range without an extra clamp).
+pub fn leaky_mult(alpha: f32) -> i32 {
+    (alpha as f64 * (1i64 << ACT_SHIFT) as f64).round() as i32
+}
+
+/// Q15 multiplier for an average-pool window of `area` cells.
+pub fn avg_mult(area: usize) -> i32 {
+    ((1i64 << ACT_SHIFT) as f64 / area as f64).round() as i32
+}
+
+/// int32 → int8 multiply-shift requantization — the single definition
+/// both the interpreter oracle and the emitted C formula follow.
+pub fn requant(acc: i32, m: i32, pre: u32, post: u32) -> i8 {
+    let t = if pre == 0 { acc } else { (acc + (1 << (pre - 1))) >> pre };
+    let q = (t * m + (1 << (post - 1))) >> post;
+    q.clamp(-127, 127) as i8
+}
+
+/// Quantized leaky ReLU on an int8 value (mirrors the emitted ternary).
+pub fn qleaky(q: i32, mult: i32) -> i8 {
+    if q > 0 {
+        q as i8
+    } else {
+        ((q * mult + (1 << (ACT_SHIFT - 1))) >> ACT_SHIFT) as i8
+    }
+}
+
+/// Quantized average of an int32 window sum (mirrors the emitted C).
+pub fn qavg(sum: i32, mult: i32) -> i8 {
+    let v = (sum * mult + (1 << (ACT_SHIFT - 1))) >> ACT_SHIFT;
+    v.clamp(-127, 127) as i8
+}
+
+/// Entry quantization of one float input value: clamp-then-round-half-
+/// away-from-zero, exactly what the generated entry loop computes
+/// (`(int)(v + 0.5f)` / `(int)(v - 0.5f)` truncate toward zero, as does
+/// Rust's `as i32`).
+pub fn quantize_input(v: f32, inv_scale: f32) -> i8 {
+    let x = (v * inv_scale).clamp(-127.0, 127.0);
+    if x >= 0.0 {
+        (x + 0.5) as i32 as i8
+    } else {
+        (x - 0.5) as i32 as i8
+    }
+}
+
+/// Symmetric scale covering `maxabs` in 127 signed steps.
+fn act_scale(maxabs: f32) -> f32 {
+    maxabs.max(SCALE_FLOOR) / 127.0
+}
+
+fn quantize_weight(v: f32, scale: f32) -> i8 {
+    ((v / scale).round() as i32).clamp(-127, 127) as i8
+}
+
+/// Bits needed to represent `v` (`v > 0`).
+fn bits(v: i64) -> u32 {
+    64 - v.leading_zeros()
+}
+
+/// Derive the requant arithmetic for one MAC layer.
+///
+/// * `taps_per_channel(k)` — iterator over channel `k`'s weight values.
+/// * `s_in` / `s_out` — input/output activation scales.
+fn derive_arith(
+    layer_name: &str,
+    n_ch: usize,
+    w_scales: Vec<f32>,
+    qw: Vec<i8>,
+    qb: Vec<i32>,
+    accmax: &[i64],
+    s_in: f32,
+    s_out: f32,
+) -> Result<QuantArith> {
+    let amax = accmax.iter().copied().max().unwrap_or(1).max(1);
+    if amax * 2 > i32::MAX as i64 {
+        bail!("int8 accumulation would overflow int32 in {layer_name}; layer too large for --dtype int8");
+    }
+    let pre: u32 = if amax > 32767 { bits(amax) - 15 } else { 0 };
+    let r: Vec<f64> =
+        (0..n_ch).map(|k| (s_in as f64) * (w_scales[k] as f64) / (s_out as f64)).collect();
+    let max_r = r.iter().cloned().fold(f64::MIN_POSITIVE, f64::max);
+    let total_shift = (32767.0 / max_r).log2().floor() as i64;
+    let post = (total_shift - pre as i64).clamp(1, 30) as u32;
+    let m: Vec<i32> = r
+        .iter()
+        .map(|&rk| {
+            ((rk * (1u64 << (pre + post)) as f64).round() as i64).clamp(0, 32767) as i32
+        })
+        .collect();
+    // A channel whose scale ratio is ~2^16 below the layer max rounds to
+    // m == 0 and would silently zero that channel's outputs — bail instead.
+    if m.iter().any(|&mk| mk == 0) {
+        bail!(
+            "per-channel weight-scale spread too wide in {layer_name}: a requant \
+             multiplier rounded to 0; layer not representable under --dtype int8"
+        );
+    }
+    Ok(QuantArith { w_scales, qw, qb, m, pre, post })
+}
+
+/// Worst-case |accumulator| per channel: full-scale activations on every
+/// tap plus the bias.
+fn channel_accmax(qw_by_channel: &[Vec<i8>], qb: &[i32]) -> Vec<i64> {
+    qw_by_channel
+        .iter()
+        .zip(qb)
+        .map(|(taps, &b)| 127 * taps.iter().map(|&q| q.unsigned_abs() as i64).sum::<i64>() + b.unsigned_abs() as i64)
+        .collect()
+}
+
+/// Compute the quantization plan for an **optimized** model (BN folded,
+/// dropout elided, activations fused — i.e. what `passes::optimize`
+/// returns). Softmax is only admitted as the final activation; it runs
+/// in float over `x_out` after the dequantize epilogue.
+pub fn quantize_model(model: &Model) -> Result<QuantPlan> {
+    let n = model.layers.len();
+    if n == 0 {
+        bail!("cannot quantize an empty model");
+    }
+    // Softmax placement check + trailing flag.
+    let mut trailing_softmax = false;
+    for (i, layer) in model.layers.iter().enumerate() {
+        let is_softmax = matches!(
+            layer,
+            Layer::Activation(Activation::Softmax)
+                | Layer::Conv2D { activation: Activation::Softmax, .. }
+                | Layer::Dense { activation: Activation::Softmax, .. }
+                | Layer::DepthwiseConv2D { activation: Activation::Softmax, .. }
+        );
+        if is_softmax {
+            if i + 1 != n {
+                bail!("--dtype int8 supports softmax only as the final activation (found at layer {i})");
+            }
+            trailing_softmax = true;
+        }
+        if matches!(layer, Layer::BatchNorm { .. } | Layer::Dropout { .. }) {
+            bail!("quantize_model expects an optimized model (found {})", layer.kind_name());
+        }
+    }
+
+    // Deterministic calibration batch in the interpreter's input domain.
+    let mut rng = XorShift64::new(0xCA11_B8);
+    let samples: Vec<Tensor> =
+        (0..CALIB_SAMPLES).map(|_| Tensor::rand(model.input.dims(), -1.0, 1.0, &mut rng)).collect();
+    let input_maxabs =
+        samples.iter().flat_map(|t| t.data().iter()).fold(0f32, |a, &v| a.max(v.abs()));
+    let input_scale = act_scale(input_maxabs);
+
+    // Trace every sample, recording each MAC layer's PRE-activation
+    // max-abs (post-activation ranges under-cover leaky negatives and
+    // pre-softmax logits).
+    let mut pre_maxabs = vec![0f32; n];
+    for sample in &samples {
+        let mut x = sample.clone();
+        for (i, layer) in model.layers.iter().enumerate() {
+            match layer {
+                Layer::Conv2D { weights, bias, stride, padding, activation } => {
+                    let y = interp::conv2d(&x, weights, bias, *stride, *padding)?;
+                    record_maxabs(&mut pre_maxabs[i], &y);
+                    x = apply_act(&y, *activation);
+                }
+                Layer::DepthwiseConv2D { weights, bias, stride, padding, activation } => {
+                    let y = interp::depthwise_conv2d(&x, weights, bias, *stride, *padding)?;
+                    record_maxabs(&mut pre_maxabs[i], &y);
+                    x = apply_act(&y, *activation);
+                }
+                Layer::Dense { weights, bias, activation } => {
+                    let y = interp::dense(&x, weights, bias)?;
+                    record_maxabs(&mut pre_maxabs[i], &y);
+                    x = apply_act(&y, *activation);
+                }
+                other => {
+                    x = interp::run_layer(other, &x)?;
+                }
+            }
+        }
+    }
+
+    // Per-layer quantization records.
+    let mut layers = Vec::with_capacity(n);
+    let mut s_in = input_scale;
+    for (i, layer) in model.layers.iter().enumerate() {
+        let lq = match layer {
+            Layer::Conv2D { weights, bias, .. } => {
+                let d = weights.dims();
+                let (taps, c_out) = (d[0] * d[1] * d[2], d[3]);
+                let s_out = act_scale(pre_maxabs[i]);
+                let mut w_scales = vec![0f32; c_out];
+                for k in 0..c_out {
+                    let mx = (0..taps)
+                        .map(|t| weights.data()[t * c_out + k].abs())
+                        .fold(0f32, f32::max);
+                    w_scales[k] = mx.max(1e-30) / 127.0;
+                }
+                mac_record(weights.data(), bias.data(), taps, c_out, true, w_scales, s_in, s_out, "Conv2D")?
+            }
+            Layer::DepthwiseConv2D { weights, bias, .. } => {
+                let d = weights.dims();
+                let (taps, c) = (d[0] * d[1], d[2]);
+                let s_out = act_scale(pre_maxabs[i]);
+                let mut w_scales = vec![0f32; c];
+                for k in 0..c {
+                    let mx =
+                        (0..taps).map(|t| weights.data()[t * c + k].abs()).fold(0f32, f32::max);
+                    w_scales[k] = mx.max(1e-30) / 127.0;
+                }
+                mac_record(weights.data(), bias.data(), taps, c, true, w_scales, s_in, s_out, "DepthwiseConv2D")?
+            }
+            Layer::Dense { weights, bias, .. } => {
+                // Per-tensor weight scale (the issue's contract: per-channel
+                // is a conv-weight refinement), replicated so the emitters
+                // see one uniform per-channel format.
+                let d = weights.dims();
+                let (n_in, n_out) = (d[0], d[1]);
+                let s_out = act_scale(pre_maxabs[i]);
+                let mx = weights.data().iter().fold(0f32, |a, &v| a.max(v.abs()));
+                let w_scales = vec![mx.max(1e-30) / 127.0; n_out];
+                mac_record(weights.data(), bias.data(), n_in, n_out, true, w_scales, s_in, s_out, "Dense")?
+            }
+            _ => LayerQuant::Passthrough { out_scale: s_in },
+        };
+        s_in = lq.out_scale();
+        layers.push(lq);
+    }
+    Ok(QuantPlan { input_scale, trailing_softmax, layers })
+}
+
+fn record_maxabs(slot: &mut f32, t: &Tensor) {
+    for &v in t.data() {
+        *slot = slot.max(v.abs());
+    }
+}
+
+/// Activation as traced during calibration (softmax only ever trails, so
+/// applying it cannot perturb any later scale).
+fn apply_act(t: &Tensor, a: Activation) -> Tensor {
+    match a {
+        Activation::None => t.clone(),
+        Activation::Relu => interp::relu(t),
+        Activation::LeakyRelu(alpha) => interp::leaky_relu(t, alpha),
+        Activation::Softmax => interp::softmax(t),
+    }
+}
+
+/// Build one MAC layer's [`LayerQuant::Mac`] record. Weights are indexed
+/// `tap * n_ch + k` when `channel_minor` (HWIO conv, `[h,w,c]` depthwise,
+/// `[in,out]` dense — all three).
+#[allow(clippy::too_many_arguments)]
+fn mac_record(
+    w: &[f32],
+    b: &[f32],
+    taps: usize,
+    n_ch: usize,
+    channel_minor: bool,
+    w_scales: Vec<f32>,
+    s_in: f32,
+    s_out: f32,
+    layer_name: &str,
+) -> Result<LayerQuant> {
+    debug_assert!(channel_minor, "all NNCG MAC layouts are channel-minor");
+    debug_assert_eq!(w.len(), taps * n_ch);
+    let qw: Vec<i8> = w
+        .iter()
+        .enumerate()
+        .map(|(idx, &v)| quantize_weight(v, w_scales[idx % n_ch]))
+        .collect();
+    let qb: Vec<i32> = (0..n_ch)
+        .map(|k| {
+            let q = (b[k] as f64 / (s_in as f64 * w_scales[k] as f64)).round() as i64;
+            q.clamp(-(1 << 30), 1 << 30) as i32
+        })
+        .collect();
+    let by_channel: Vec<Vec<i8>> =
+        (0..n_ch).map(|k| (0..taps).map(|t| qw[t * n_ch + k]).collect()).collect();
+    let accmax = channel_accmax(&by_channel, &qb);
+    let arith = derive_arith(layer_name, n_ch, w_scales, qw, qb, &accmax, s_in, s_out)?;
+    Ok(LayerQuant::Mac { arith, out_scale: s_out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::zoo;
+
+    fn plan_for(name: &str) -> (Model, QuantPlan) {
+        let m = zoo::by_name(name).unwrap().with_random_weights(13);
+        let opt = crate::passes::optimize(m).unwrap();
+        let qp = quantize_model(&opt).unwrap();
+        (opt, qp)
+    }
+
+    #[test]
+    fn plans_cover_all_paper_models() {
+        for name in zoo::PAPER_MODELS {
+            let (m, qp) = plan_for(name);
+            assert_eq!(qp.layers.len(), m.layers.len(), "{name}");
+            assert!(qp.input_scale > 0.0);
+            for (i, (lq, layer)) in qp.layers.iter().zip(&m.layers).enumerate() {
+                assert!(lq.out_scale() > 0.0, "{name} layer {i}");
+                match layer {
+                    Layer::Conv2D { weights, .. } => {
+                        let arith = match lq {
+                            LayerQuant::Mac { arith, .. } => arith,
+                            _ => panic!("{name} layer {i}: conv must be Mac"),
+                        };
+                        let c_out = weights.dims()[3];
+                        assert_eq!(arith.w_scales.len(), c_out);
+                        assert_eq!(arith.m.len(), c_out);
+                        assert_eq!(arith.qw.len(), weights.numel());
+                        assert!((1..=30).contains(&arith.post));
+                        assert!(arith.m.iter().all(|&m| (0..=32767).contains(&m)));
+                    }
+                    Layer::MaxPool2D { .. } | Layer::Flatten => {
+                        assert!(matches!(lq, LayerQuant::Passthrough { .. }), "{name} layer {i}");
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_softmax_detected_and_mid_model_rejected() {
+        let (_, qp) = plan_for("ball");
+        assert!(qp.trailing_softmax, "ball's classifier head ends in softmax");
+        let (_, qp) = plan_for("robot");
+        assert!(!qp.trailing_softmax, "robot's detector head is linear");
+        // Mid-model softmax must be rejected.
+        let m = Model {
+            layers: vec![
+                Layer::Activation(Activation::Softmax),
+                Layer::Activation(Activation::Relu),
+            ],
+            ..zoo::ball_classifier().with_random_weights(1)
+        };
+        assert!(quantize_model(&m).is_err());
+    }
+
+    #[test]
+    fn zero_multiplier_channel_is_rejected() {
+        // Channel 1's scale ratio sits ~2^16 below channel 0's, so its
+        // requant multiplier rounds to 0 — which would silently zero every
+        // output of that channel (including a nonzero bias). Must bail.
+        let r = derive_arith("conv0", 2, vec![1.0, 1e-9], vec![], vec![], &[100, 100], 1.0, 1.0);
+        assert!(r.is_err());
+        // A wide-but-representable spread still derives, with every m >= 1.
+        let a = derive_arith("conv0", 2, vec![1.0, 1e-3], vec![], vec![], &[100, 100], 1.0, 1.0)
+            .unwrap();
+        assert!(a.m.iter().all(|&mk| mk >= 1), "m = {:?}", a.m);
+    }
+
+    #[test]
+    fn requant_is_deterministic_and_clamped() {
+        assert_eq!(requant(0, 16384, 0, 15), 0);
+        assert_eq!(requant(1 << 15, 32767, 0, 15), 127); // saturates high
+        assert_eq!(requant(-(1 << 15), 32767, 0, 15), -127); // saturates low
+        // pre-shift rounds half up: (3 + 2) >> 2 == 1
+        assert_eq!(requant(3, 1 << 14, 2, 14), 1);
+        // negative inputs round through arithmetic shift, matching C:
+        // (-3+2)>>2 = -1, (-16384 + 8192) >> 14 = floor(-0.5) = -1.
+        assert_eq!(requant(-3, 1 << 14, 2, 14), -1);
+    }
+
+    #[test]
+    fn fixed_point_activation_helpers_match_float() {
+        let mult = leaky_mult(0.1);
+        for q in -127i32..=127 {
+            let got = if q > 0 { q } else { qleaky(q, mult) as i32 };
+            let want = if q > 0 { q as f32 } else { q as f32 * 0.1 };
+            assert!((got as f32 - want).abs() <= 0.51, "q={q} got={got} want={want}");
+        }
+        let am = avg_mult(4);
+        assert_eq!(qavg(4 * 100, am), 100);
+        assert_eq!(qavg(-4 * 100, am), -100);
+    }
+
+    #[test]
+    fn input_quantization_round_trips_within_half_step() {
+        let scale = 0.01f32;
+        let inv = 1.0 / scale;
+        for v in [-1.27f32, -0.5, -0.004, 0.0, 0.004, 0.5, 1.27, 99.0, -99.0] {
+            let q = quantize_input(v, inv) as f32 * scale;
+            let clamped = v.clamp(-1.27, 1.27);
+            assert!((q - clamped).abs() <= scale * 0.5 + 1e-6, "v={v} q={q}");
+        }
+    }
+}

@@ -257,6 +257,48 @@ fn neon_generated_c_for_paper_models_passes_syntax_check() {
     }
 }
 
+/// int8 NEON emission must be syntactically valid C for every paper
+/// model, in both the widening `vmlal_s16` baseline (`neon`) and the
+/// ARMv8.2+dotprod `vdotq_s32` flavor (`neon-dot`) — the latter needs
+/// `-march=armv8.2-a+dotprod` on a real aarch64 cross gcc (the ci/stubs
+/// declaration header accepts it unconditionally).
+#[test]
+fn int8_neon_generated_c_passes_syntax_check() {
+    use nncg::codegen::{DType, FuseMode, Isa};
+    let Some((cc, flags)) = neon_syntax_checker() else {
+        eprintln!("SKIP int8 neon syntax check: no C compiler and no ci/stubs/arm_neon.h");
+        return;
+    };
+    let dir = std::env::temp_dir().join("nncg-neon-int8-syntax");
+    std::fs::create_dir_all(&dir).unwrap();
+    for name in nncg::graph::zoo::PAPER_MODELS {
+        let model = load_model(name, &default_weights_dir()).unwrap();
+        for (isa, fuse) in [
+            (Isa::Neon, FuseMode::Off),
+            (Isa::Neon, FuseMode::Auto),
+            (Isa::NeonDot, FuseMode::Off),
+            (Isa::NeonDot, FuseMode::Auto),
+        ] {
+            let opts = CodegenOptions { isa, fuse, dtype: DType::Int8, ..Default::default() };
+            let src = nncg::codegen::generate_c(&model, &opts).unwrap();
+            let c_path = dir.join(format!("{name}-{}.c", opts.tag()));
+            std::fs::write(&c_path, &src).unwrap();
+            let mut cmd = std::process::Command::new(&cc);
+            cmd.args(&flags);
+            if isa == Isa::NeonDot && cc == "aarch64-linux-gnu-gcc" {
+                cmd.arg("-march=armv8.2-a+dotprod");
+            }
+            let out = cmd.arg(&c_path).output().unwrap();
+            assert!(
+                out.status.success(),
+                "{name} {}: {cc} rejected int8 NEON output:\n{}",
+                opts.tag(),
+                String::from_utf8_lossy(&out.stderr)
+            );
+        }
+    }
+}
+
 fn have_cmd(cmd: &str) -> bool {
     std::process::Command::new(cmd)
         .arg("--version")
@@ -606,6 +648,101 @@ fn paper_models_padless_tiled_match_interp() {
         assert!(!src.contains("nncg_pad"), "{name}: padless output references nncg_pad");
         let err = nncg::cc::verify_against_interp(&model, &opts, default_work_dir(), 2, 21).unwrap();
         assert!(err < TOL, "{name}: err {err}");
+    }
+}
+
+/// int8 quantization error (tentpole acceptance): the int8 reference
+/// path must stay within the **documented** bound of the f32
+/// interpreter — 0.12 absolute for the softmax heads (probability
+/// space) and 0.12 relative to the output magnitude for the robot
+/// detector's logit head. README's `--dtype` section quotes the same
+/// numbers; observed error with per-channel conv scales is far lower,
+/// the headroom absorbs unlucky calibration draws.
+#[test]
+fn int8_quant_error_within_documented_bounds() {
+    use nncg::interp::{run, run_quantized};
+    use nncg::passes::{optimize, quantize_model};
+    for (name, bound) in [("ball", 0.12f32), ("pedestrian", 0.12), ("robot", 0.12)] {
+        let model = load_model(name, &default_weights_dir()).unwrap();
+        let opt = optimize(model).unwrap();
+        let qp = quantize_model(&opt).unwrap();
+        let mut rng = XorShift64::new(0x1A8);
+        let mut worst = 0f32;
+        for _ in 0..4 {
+            let x = Tensor::rand(opt.input.dims(), -1.0, 1.0, &mut rng);
+            let yf = run(&opt, &x).unwrap();
+            let yq = run_quantized(&opt, &qp, &x).unwrap();
+            // Softmax heads live in [0,1] (mag clamps to 1 → absolute);
+            // the robot logit head is bounded relative to its magnitude.
+            let mag = yf.data().iter().fold(0f32, |m, v| m.max(v.abs())).max(1.0);
+            worst = worst.max(yf.max_abs_diff(&yq).unwrap() / mag);
+        }
+        assert!(worst < bound, "{name}: int8 error {worst} exceeds documented bound {bound}");
+    }
+}
+
+/// `--dtype int8` compiled C against the int8 interpreter oracle: the
+/// integer chain is identical arithmetic on both sides, so the robot
+/// model (no softmax) must match **exactly** and the softmax heads
+/// within the float epilogue's libm term.
+#[test]
+fn int8_generated_c_matches_oracle_exactly() {
+    use nncg::codegen::{DType, FuseMode, Isa};
+    let work = default_work_dir();
+    for name in ["ball", "pedestrian", "robot"] {
+        let model = load_model(name, &default_weights_dir()).unwrap();
+        for isa in [Isa::Generic, Isa::Sse3] {
+            for fuse in [FuseMode::Off, FuseMode::Auto] {
+                let opts = CodegenOptions { isa, fuse, dtype: DType::Int8, ..Default::default() };
+                let err =
+                    nncg::cc::verify_int8_against_oracle(&model, &opts, &work, 2, 0x18).unwrap();
+                assert!(err < 1e-6, "{name} {}: int8 err {err}", opts.tag());
+            }
+        }
+    }
+}
+
+/// int8 acceptance: bit-identical output across unfused, fused-rotated
+/// and fused-expanded emission. Saturation-free int32 accumulation makes
+/// the integer chain order-independent, and the only float code (entry
+/// quantize, exit dequantize, softmax epilogue) is byte-identical across
+/// the three forms — so the outputs must agree to the last bit, not just
+/// within tolerance.
+#[test]
+fn int8_fused_and_rolled_bit_identical_to_unfused() {
+    use nncg::codegen::{DType, FuseMode, RolledMode};
+    let work = default_work_dir();
+    let mut rng = XorShift64::new(0x18B1);
+    for name in ["ball", "pedestrian", "robot"] {
+        let model = load_model(name, &default_weights_dir()).unwrap();
+        let forms = [
+            (FuseMode::Off, RolledMode::Auto),
+            (FuseMode::Auto, RolledMode::Rotate),
+            (FuseMode::Auto, RolledMode::Expand),
+        ];
+        let cnns: Vec<CompiledCnn> = forms
+            .iter()
+            .map(|&(fuse, fuse_rolled)| {
+                let opts = CodegenOptions {
+                    dtype: DType::Int8,
+                    fuse,
+                    fuse_rolled,
+                    ..CodegenOptions::sse3()
+                };
+                CompiledCnn::build(&model, &opts, &work).unwrap()
+            })
+            .collect();
+        for trial in 0..2 {
+            let x = Tensor::rand(model.input.dims(), -1.0, 1.0, &mut rng);
+            let y0 = cnns[0].infer(&x).unwrap();
+            for (i, cnn) in cnns.iter().enumerate().skip(1) {
+                let y = cnn.infer(&x).unwrap();
+                assert_eq!(
+                    y0, y,
+                    "{name} trial {trial}: int8 form {i} must be bit-identical to unfused"
+                );
+            }
+        }
     }
 }
 

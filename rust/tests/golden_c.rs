@@ -15,7 +15,7 @@
 //! fixed weight seed (asserted by `codegen_is_deterministic` in
 //! `property_codegen.rs`).
 
-use nncg::codegen::{generate_c, CodegenOptions, FuseMode, Isa, PadMode, RolledMode, TileMode};
+use nncg::codegen::{generate_c, CodegenOptions, DType, FuseMode, Isa, PadMode, RolledMode, TileMode};
 use nncg::graph::zoo;
 use std::path::PathBuf;
 
@@ -36,10 +36,11 @@ fn stmts(src: &str) -> usize {
     src.matches(';').count()
 }
 
-/// The snapshot matrix: (label, model, options). ~12 configurations
-/// covering every ISA family, both pad modes, 1-D/2-D tiling, and fusion
-/// in both its rolled (robot/pedestrian stream periodically) and trivial
-/// (ball is too short to roll) forms.
+/// The snapshot matrix: (label, model, options). ~19 configurations
+/// covering every ISA family, both pad modes, 1-D/2-D tiling, fusion in
+/// both its rolled (robot/pedestrian stream periodically) and trivial
+/// (ball is too short to roll) forms, and the `--dtype int8` emission
+/// path (C89 baseline, SSE pair-madd, NEON dot-product, fused AVX2).
 fn matrix() -> Vec<(&'static str, &'static str, CodegenOptions)> {
     vec![
         ("ball-default-sse3", "ball", CodegenOptions::sse3()),
@@ -103,6 +104,35 @@ fn matrix() -> Vec<(&'static str, &'static str, CodegenOptions)> {
                 fuse: FuseMode::Auto,
                 fuse_rolled: RolledMode::Expand,
                 ..CodegenOptions::sse3()
+            },
+        ),
+        // int8 snapshots (`--dtype int8`): the pure-C89 baseline, the
+        // SSE madd_epi16 fused form, the vdotq_s32 packed-quad path, and
+        // the widest-vector fused form with pinned pointer rotation.
+        (
+            "ball-int8-generic",
+            "ball",
+            CodegenOptions { isa: Isa::Generic, dtype: DType::Int8, ..Default::default() },
+        ),
+        (
+            "ball-int8-sse3-fused",
+            "ball",
+            CodegenOptions { fuse: FuseMode::Auto, dtype: DType::Int8, ..CodegenOptions::sse3() },
+        ),
+        (
+            "pedestrian-int8-neon-dot",
+            "pedestrian",
+            CodegenOptions { isa: Isa::NeonDot, dtype: DType::Int8, ..Default::default() },
+        ),
+        (
+            "robot-int8-avx2-fused",
+            "robot",
+            CodegenOptions {
+                isa: Isa::Avx2,
+                fuse: FuseMode::Auto,
+                fuse_rolled: RolledMode::Rotate,
+                dtype: DType::Int8,
+                ..Default::default()
             },
         ),
     ]
@@ -213,7 +243,20 @@ fn golden_matrix_is_well_formed() {
     labels.sort_unstable();
     labels.dedup();
     assert_eq!(labels.len(), m.len(), "duplicate snapshot labels");
-    assert!(m.len() >= 15, "snapshot matrix must cover at least 15 configurations");
+    assert!(m.len() >= 19, "snapshot matrix must cover at least 19 configurations");
+    // Every int8 snapshot must emit the quantized entry plane (cheap
+    // structural guard that the dtype knob reached the emitter).
+    for (label, model, opts) in &m {
+        if opts.dtype != DType::Int8 {
+            continue;
+        }
+        let model = zoo::by_name(model).unwrap().with_random_weights(SEED);
+        let src = generate_c(&model, opts).unwrap();
+        assert!(
+            src.contains("signed char nncg_bufa"),
+            "{label}: expected int8 ring buffers in emission"
+        );
+    }
     // The rolled-fusion configurations must actually roll — and the
     // explicit rotate/expand configurations must emit their form (guards
     // the matrix against a default change silently dropping coverage).

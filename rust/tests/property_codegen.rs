@@ -335,6 +335,97 @@ fn fuzz_rotated_vs_expanded_vs_unrolled_vs_unfused_bit_identical() {
     assert!(rotated_seen >= 3, "only {rotated_seen} models exercised the rotated path");
 }
 
+/// int8 differential fuzz (issue acceptance): for random quantizable
+/// models across the fuse × rolled × pad × tile × chan-pad surface,
+/// every emission form of the same quant plan must produce
+/// **bit-identical** compiled output (the integer chain is
+/// saturation-free, so no form has accumulation-order freedom), and
+/// that output must match the int8 interpreter oracle to within the
+/// float softmax epilogue's libm term.
+#[test]
+fn fuzz_int8_forms_bit_identical_and_match_oracle() {
+    use nncg::codegen::{ChanPad, DType};
+    use nncg::interp::run_quantized;
+    use nncg::passes::{optimize, quantize_model};
+    let mut rng = XorShift64::new(0x1D8);
+    let work = std::env::temp_dir().join("nncg-fuzz-int8");
+    let mut models = vec![nncg::graph::zoo::tiny_test_net().with_random_weights(81)];
+    for t in 0..6usize {
+        models.push(random_model(&mut rng, 13000 + t));
+    }
+    let mut quantized_seen = 0usize;
+    for model in &models {
+        if model.validate().is_err() || model.infer_shapes().is_err() {
+            continue;
+        }
+        // Derive the same optimized model + quant plan codegen will use;
+        // skip structures the quantizer rejects (it bails rather than
+        // silently degrading).
+        let opt = match optimize(model.clone()) {
+            Ok(m) => m,
+            Err(_) => continue,
+        };
+        let qp = match quantize_model(&opt) {
+            Ok(p) => p,
+            Err(_) => continue,
+        };
+        quantized_seen += 1;
+        let isa = if rng.below(2) == 0 { Isa::Generic } else { Isa::Sse3 };
+        let unroll = if rng.below(2) == 0 { Unroll::KeepOuter2 } else { Unroll::KeepOuter1 };
+        let pad_mode = if rng.below(2) == 0 { PadMode::Auto } else { PadMode::Copy };
+        let tile = match rng.below(3) {
+            0 => TileMode::Auto,
+            1 => TileMode::Off,
+            _ => TileMode::Fixed(2 + rng.below(3)),
+        };
+        let chan_pad = if rng.below(2) == 0 { ChanPad::Auto } else { ChanPad::Off };
+        let base = CodegenOptions {
+            isa,
+            unroll,
+            pad_mode,
+            tile,
+            chan_pad,
+            dtype: DType::Int8,
+            ..Default::default()
+        };
+        let variants = [
+            CodegenOptions { fuse: FuseMode::Off, ..base.clone() },
+            CodegenOptions { fuse: FuseMode::Auto, fuse_rolled: RolledMode::Rotate, ..base.clone() },
+            CodegenOptions { fuse: FuseMode::Auto, fuse_rolled: RolledMode::Expand, ..base.clone() },
+            CodegenOptions { fuse: FuseMode::Auto, fuse_rolled: RolledMode::Off, ..base.clone() },
+        ];
+        let cnns: Vec<_> = variants
+            .iter()
+            .map(|opts| {
+                nncg::cc::CompiledCnn::build(model, opts, &work)
+                    .unwrap_or_else(|e| panic!("{} {}: {e:#}", model.name, opts.tag()))
+            })
+            .collect();
+        for _ in 0..2 {
+            let x = Tensor::rand(model.input.dims(), -1.0, 1.0, &mut rng);
+            let y_oracle = run_quantized(&opt, &qp, &x).unwrap();
+            let y0 = cnns[0].infer(&x).unwrap();
+            let err = y_oracle.max_abs_diff(&y0).unwrap();
+            assert!(
+                err < 1e-6,
+                "{}: int8 C deviates from oracle by {err}\n{}",
+                model.name,
+                model.describe()
+            );
+            for (cnn, opts) in cnns.iter().zip(&variants).skip(1) {
+                assert_eq!(
+                    y0,
+                    cnn.infer(&x).unwrap(),
+                    "{} {}: int8 forms must be bit-identical",
+                    model.name,
+                    opts.tag()
+                );
+            }
+        }
+    }
+    assert!(quantized_seen >= 3, "only {quantized_seen} fuzz models were quantizable");
+}
+
 /// Same seed ⇒ byte-identical generated C (reproducible builds).
 #[test]
 fn codegen_is_deterministic() {
