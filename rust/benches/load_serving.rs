@@ -21,8 +21,8 @@
 use nncg::cc::{CcDriver, CompiledCnn};
 use nncg::codegen::CodegenOptions;
 use nncg::coordinator::{
-    home_shard, serve_sharded, BreakerConfig, HealPipeline, LatencyHisto, Router, ServeError,
-    ShardConfig,
+    home_shard, serve_sharded, BatcherPolicy, BreakerConfig, HealPipeline, LatencyHisto, Router,
+    ServeError, ShardConfig,
 };
 use nncg::faults::{FaultPlan, FaultSite, FaultSpec};
 use nncg::graph::zoo;
@@ -126,6 +126,19 @@ fn main() -> anyhow::Result<()> {
         None
     };
 
+    // Batched dequeue: NNCG_LOAD_BATCH_MAX caps the per-shard batch width
+    // (default 8 — the load bench exists to exercise the batched engine
+    // entry), NNCG_LOAD_BATCH_ADAPT=off pins the width instead of adapting
+    // it to queue depth.
+    let batch_max = env_usize("NNCG_LOAD_BATCH_MAX", 8).max(1);
+    let batch_adapt = batch_max > 1
+        && !matches!(std::env::var("NNCG_LOAD_BATCH_ADAPT").as_deref(), Ok("off") | Ok("0"));
+    let batch = if batch_max > 1 {
+        BatcherPolicy::batched(batch_max, Duration::from_millis(2))
+    } else {
+        BatcherPolicy::immediate()
+    };
+
     let handle = serve_sharded(
         Arc::clone(&router),
         ShardConfig {
@@ -133,6 +146,8 @@ fn main() -> anyhow::Result<()> {
             workers_per_shard: env_usize("NNCG_LOAD_WORKERS", 1).max(1),
             queue_capacity: 8192,
             steal: true,
+            batch,
+            batch_adapt,
             breaker: BreakerConfig { failure_threshold: 16, cooldown: Duration::from_millis(50) },
             faults: plan,
             ..ShardConfig::default()
@@ -278,6 +293,15 @@ fn main() -> anyhow::Result<()> {
         histo.count()
     );
     println!(
+        "batching: max={} adapt={} batched-infers={} batched-requests={} batch-mean={:.2} batch-size-max={}",
+        batch_max,
+        batch_adapt,
+        snap.batched_infers,
+        snap.batched_requests,
+        snap.batch_size_mean(),
+        snap.batch_size_max
+    );
+    println!(
         "chaos: steals={} respawns={} ejects={} probes={} readmits={} drains={} heals={}/{} recycles={}",
         snap.steals,
         snap.worker_respawns,
@@ -309,6 +333,14 @@ fn main() -> anyhow::Result<()> {
         );
         gate_ok = false;
     }
+    // The adaptive policy may widen batches only up to the configured cap.
+    if snap.batch_size_max > batch_max as u64 {
+        eprintln!(
+            "GATE FAIL: realized batch width {} exceeds --batch-max {}",
+            snap.batch_size_max, batch_max
+        );
+        gate_ok = false;
+    }
 
     let doc = Value::Object(vec![
         ("bench".to_string(), Value::Str("load_serving".to_string())),
@@ -333,6 +365,12 @@ fn main() -> anyhow::Result<()> {
         ("replied_err".to_string(), Value::Num(total.replied_err as f64)),
         ("shed".to_string(), Value::Num(total.shed as f64)),
         ("lost".to_string(), Value::Num(total.lost as f64)),
+        ("batch_max".to_string(), Value::Num(batch_max as f64)),
+        ("batch_adapt".to_string(), Value::Bool(batch_adapt)),
+        ("batched_infers".to_string(), Value::Num(snap.batched_infers as f64)),
+        ("batched_requests".to_string(), Value::Num(snap.batched_requests as f64)),
+        ("batch_size_mean".to_string(), Value::Num((snap.batch_size_mean() * 100.0).round() / 100.0)),
+        ("batch_size_max".to_string(), Value::Num(snap.batch_size_max as f64)),
         ("steals".to_string(), Value::Num(snap.steals as f64)),
         ("worker_respawns".to_string(), Value::Num(snap.worker_respawns as f64)),
         ("shard_drains".to_string(), Value::Num(snap.shard_drains as f64)),

@@ -30,6 +30,11 @@ use std::path::{Path, PathBuf};
 pub struct CompiledCnn {
     _lib: libloading::Library,
     func: unsafe extern "C" fn(*const f32, *mut f32),
+    /// The batched entry point (`<ident>_inference_batch`) emitted alongside
+    /// the single-image function since PR 9. `None` when loading a stale
+    /// cached object compiled before the batch entry existed — everything
+    /// then degrades to per-image calls through the trait default.
+    batch_func: Option<unsafe extern "C" fn(*const f32, *mut f32, std::os::raw::c_int)>,
     /// The generated C keeps its intermediates in `static` scratch buffers
     /// (the paper's deployment model is a single-threaded embedded loop),
     /// so concurrent calls into one loaded object would race. This lock
@@ -102,9 +107,17 @@ impl CompiledCnn {
                 lib.get(format!("{ident}_inference\0").as_bytes())?;
             *sym
         };
+        let batch_func = unsafe {
+            lib.get::<unsafe extern "C" fn(*const f32, *mut f32, std::os::raw::c_int)>(
+                format!("{ident}_inference_batch\0").as_bytes(),
+            )
+            .ok()
+            .map(|sym| *sym)
+        };
         Ok(CompiledCnn {
             _lib: lib,
             func,
+            batch_func,
             call_guard: std::sync::Mutex::new(()),
             input_dims: model.input.dims().to_vec(),
             output_dims: model.output_shape()?.dims().to_vec(),
@@ -143,6 +156,55 @@ impl CompiledCnn {
     pub fn output_dims(&self) -> &[usize] {
         &self.output_dims
     }
+
+    /// Whether the loaded object exports the batched entry point (objects
+    /// cached before the batch entry existed do not).
+    pub fn has_batch_entry(&self) -> bool {
+        self.batch_func.is_some()
+    }
+
+    /// Run `inputs` through the generated `<ident>_inference_batch` entry:
+    /// one symbol dispatch and one `call_guard` acquisition for the whole
+    /// batch, with the static weight arrays staying cache-warm across
+    /// images. Output is bit-identical to `inputs.len()` single [`infer`]
+    /// calls — the entry point is a plain loop over the same function body.
+    ///
+    /// Falls back to per-image calls when the loaded object predates the
+    /// batched entry point.
+    pub fn infer_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.is_empty() {
+            return Ok(Vec::new());
+        }
+        for input in inputs {
+            check_input_dims(&self.input_dims, input)?;
+        }
+        let Some(batch_func) = self.batch_func else {
+            return inputs.iter().map(|x| CompiledCnn::infer(self, x)).collect();
+        };
+        let in_sz: usize = self.input_dims.iter().product();
+        let out_sz: usize = self.output_dims.iter().product();
+        let n = inputs.len();
+        // The C contract wants contiguous input/output planes; pack once,
+        // run once, split once.
+        let mut packed_in = vec![0.0f32; in_sz * n];
+        for (i, input) in inputs.iter().enumerate() {
+            packed_in[i * in_sz..(i + 1) * in_sz].copy_from_slice(input.data());
+        }
+        let mut packed_out = vec![0.0f32; out_sz * n];
+        {
+            let _guard = self.call_guard.lock().unwrap();
+            unsafe {
+                (batch_func)(packed_in.as_ptr(), packed_out.as_mut_ptr(), n as std::os::raw::c_int)
+            };
+        }
+        let mut outs = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut out = Tensor::zeros(&self.output_dims);
+            out.data_mut().copy_from_slice(&packed_out[i * out_sz..(i + 1) * out_sz]);
+            outs.push(out);
+        }
+        Ok(outs)
+    }
 }
 
 impl crate::runtime::InferenceEngine for CompiledCnn {
@@ -153,6 +215,10 @@ impl crate::runtime::InferenceEngine for CompiledCnn {
     fn infer(&self, input: &Tensor) -> Result<Tensor> {
         check_input_dims(&self.input_dims, input)?;
         CompiledCnn::infer(self, input)
+    }
+
+    fn infer_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        CompiledCnn::infer_batch(self, inputs)
     }
 }
 
@@ -242,6 +308,38 @@ mod tests {
         let cnn = CompiledCnn::build(&m, &CodegenOptions::general(), workdir("shape")).unwrap();
         assert!(cnn.infer(&Tensor::zeros(&[4, 4, 1])).is_err());
         assert!(cnn.infer(&Tensor::zeros(&[8, 8, 1])).is_ok());
+    }
+
+    /// Batched entry bit-identity (ISSUE 9 acceptance): the emitted
+    /// `<ident>_inference_batch` must produce *bit-identical* output to N
+    /// single calls — it is a loop over the very same function body, so any
+    /// difference means the packing/offset math is wrong. Covered fused and
+    /// unfused since fusion rewrites the function body the batch loop calls.
+    #[test]
+    fn compiled_batch_matches_single_bit_identical() {
+        use crate::codegen::FuseMode;
+        let m = zoo::tiny_test_net().with_random_weights(31);
+        for (tag, fuse) in [("unfused", FuseMode::Off), ("fused", FuseMode::Auto)] {
+            let opts = CodegenOptions { fuse, ..CodegenOptions::sse3() };
+            let cnn = CompiledCnn::build(&m, &opts, workdir("batch-id")).unwrap();
+            assert!(cnn.has_batch_entry(), "{tag}: batch symbol missing from fresh object");
+            let mut rng = crate::util::XorShift64::new(77);
+            let inputs: Vec<Tensor> =
+                (0..5).map(|_| Tensor::rand(m.input.dims(), -1.0, 1.0, &mut rng)).collect();
+            let batched = cnn.infer_batch(&inputs).unwrap();
+            assert_eq!(batched.len(), inputs.len());
+            for (i, x) in inputs.iter().enumerate() {
+                let single = cnn.infer(x).unwrap();
+                assert_eq!(
+                    single.data(),
+                    batched[i].data(),
+                    "{tag}: image {i} not bit-identical to single call"
+                );
+            }
+        }
+        // Empty batch is a no-op, not an error.
+        let cnn = CompiledCnn::build(&m, &CodegenOptions::sse3(), workdir("batch-id")).unwrap();
+        assert!(cnn.infer_batch(&[]).unwrap().is_empty());
     }
 
     #[test]

@@ -164,6 +164,20 @@ pub fn bench(args: &Args) -> Result<i32> {
     Ok(0)
 }
 
+/// Resolve `--batch-max N` / `--batch-adapt on|off` into a dequeue policy.
+/// `--batch-max 1` (the default) keeps the latency-first immediate policy;
+/// N ≥ 2 enables batched dequeue with a 2 ms fill wait, adaptive unless
+/// `--batch-adapt off` pins the width.
+fn batch_policy_from_args(args: &Args) -> Result<(coordinator::BatcherPolicy, bool)> {
+    let max = args.get_usize("batch-max", 1)?.max(1);
+    if max == 1 {
+        return Ok((coordinator::BatcherPolicy::immediate(), false));
+    }
+    let policy = coordinator::BatcherPolicy::batched(max, std::time::Duration::from_millis(2));
+    let adapt = !matches!(args.get_or("batch-adapt", "on"), "off" | "0" | "false");
+    Ok((policy, adapt))
+}
+
 pub fn serve(args: &Args) -> Result<i32> {
     // End-to-end robot-soccer serving loop: synthetic frames → ball
     // candidates → classification via the coordinator, with the robustness
@@ -189,12 +203,19 @@ pub fn serve(args: &Args) -> Result<i32> {
         0 => None,
         ms => Some(std::time::Duration::from_millis(ms as u64)),
     };
+    // --batch-max N caps the per-shard dequeue batch (N ≥ 2 enables the
+    // batched engine entry path); --batch-adapt on|off (default on when
+    // batching) adapts the effective width to queue depth, decaying back
+    // to latency-first when the queue drains.
+    let (batch, batch_adapt) = batch_policy_from_args(args)?;
     let cfg = coordinator::ShardConfig {
         shards: args.get_usize("shards", 1)?.max(1),
         workers_per_shard: args.get_usize("workers", 1)?.max(1),
         queue_capacity: args.get_usize("queue-cap", 1024)?,
         default_deadline: deadline,
         steal: !matches!(args.get_or("steal", "on"), "off" | "0" | "false"),
+        batch,
+        batch_adapt,
         faults: faults.clone(),
         ..coordinator::ShardConfig::default()
     };
@@ -276,6 +297,13 @@ pub fn serve(args: &Args) -> Result<i32> {
         snap.shard_readmits,
         snap.shard_drains,
         snap.stopped_replies
+    );
+    println!(
+        "batching: batched-infers={} batched-requests={} batch-mean={:.2} batch-size-max={}",
+        snap.batched_infers,
+        snap.batched_requests,
+        snap.batch_size_mean(),
+        snap.batch_size_max
     );
     for s in &snap.shards {
         println!(
@@ -464,6 +492,26 @@ mod tests {
         assert_eq!(o.dtype, DType::F32);
         assert_eq!(o.chan_pad, ChanPad::Auto);
         assert!(opts_from_args(&args(&["--isa", "avx512"])).is_err());
+    }
+
+    #[test]
+    fn batch_knobs_parse() {
+        // Default: latency-first, no adaptation.
+        let (p, adapt) = batch_policy_from_args(&args(&[])).unwrap();
+        assert_eq!(p.max_batch, 1);
+        assert_eq!(p.max_wait, std::time::Duration::ZERO);
+        assert!(!adapt);
+        // --batch-max N enables batching, adaptive by default.
+        let (p, adapt) = batch_policy_from_args(&args(&["--batch-max", "8"])).unwrap();
+        assert_eq!(p.max_batch, 8);
+        assert!(p.max_wait > std::time::Duration::ZERO);
+        assert!(adapt);
+        // --batch-adapt off pins the width.
+        let (p, adapt) =
+            batch_policy_from_args(&args(&["--batch-max", "4", "--batch-adapt", "off"])).unwrap();
+        assert_eq!(p.max_batch, 4);
+        assert!(!adapt);
+        assert!(batch_policy_from_args(&args(&["--batch-max", "lots"])).is_err());
     }
 
     #[test]

@@ -243,6 +243,8 @@ pub(super) fn generate_int8(
     }
     w.close();
 
+    super::emit_batch_entry(&mut w, &ident);
+
     if opts.test_harness {
         harness::emit_test_harness(&mut w, &ident, in_n, out_n);
     }
@@ -1185,6 +1187,10 @@ mod tests {
                 assert!(
                     src.contains("_inference(const float *x_in, float *x_out)"),
                     "{name}/{isa:?}: missing entry point"
+                );
+                assert!(
+                    src.contains("_inference_batch(const float *x_in, float *x_out, int n)"),
+                    "{name}/{isa:?}: missing batch entry point"
                 );
                 assert!(src.contains("signed char nncg_bufa"), "{name}/{isa:?}");
                 // Saturating/wrapping intrinsics must never appear.

@@ -6,6 +6,7 @@
 //! policy object makes that trade-off explicit and testable, and the GPU
 //! throughput bench sweeps it.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
 /// When to flush a pending batch.
@@ -26,6 +27,89 @@ impl BatcherPolicy {
     /// Throughput-oriented batching (the GPU path).
     pub fn batched(max_batch: usize, max_wait: Duration) -> Self {
         BatcherPolicy { max_batch: max_batch.max(1), max_wait }
+    }
+}
+
+/// Load-adaptive batching for a shard's dequeue loop.
+///
+/// The fixed [`BatcherPolicy`] trade-off (latency vs throughput) is wrong at
+/// both ends under varying load: a wide policy adds wait latency when the
+/// queue is empty, a narrow one forfeits the batched engine entry's
+/// amortization when the queue is deep. This widens the *effective* batch
+/// width from observed queue depth and decays it back when the queue
+/// drains, always bounded by the configured cap:
+///
+/// - **widen** (depth ≥ 2× current width → width doubles, up to
+///   `cap.max_batch`): the queue is outpacing us; amortize harder.
+/// - **decay** (depth ≤ half the current width → width halves, down to
+///   `base.max_batch`): the backlog cleared; return toward latency-first.
+/// - the effective `max_wait` scales linearly with the effective width
+///   (`cap.max_wait × width / cap.max_batch`, floored at `base.max_wait`):
+///   a wide batch is only worth waiting for when we expect it to fill.
+///
+/// All state is a single atomic, shared by the shard's workers; observations
+/// from any worker adjust the width every dequeue, so adaptation reacts
+/// within one batch either way.
+pub struct AdaptiveBatcher {
+    base: BatcherPolicy,
+    cap: BatcherPolicy,
+    adapt: bool,
+    cur_batch: AtomicUsize,
+}
+
+impl AdaptiveBatcher {
+    /// Non-adaptive: always dequeue with exactly `policy`.
+    pub fn fixed(policy: BatcherPolicy) -> Self {
+        AdaptiveBatcher { base: policy, cap: policy, adapt: false, cur_batch: AtomicUsize::new(policy.max_batch.max(1)) }
+    }
+
+    /// Adapt between latency-first `base` and throughput cap `cap`,
+    /// starting at `base` (latency-first until load proves otherwise).
+    pub fn adaptive(base: BatcherPolicy, cap: BatcherPolicy) -> Self {
+        let base = BatcherPolicy { max_batch: base.max_batch.max(1), ..base };
+        let cap = BatcherPolicy {
+            max_batch: cap.max_batch.max(base.max_batch),
+            max_wait: cap.max_wait.max(base.max_wait),
+        };
+        AdaptiveBatcher { base, cap, adapt: true, cur_batch: AtomicUsize::new(base.max_batch) }
+    }
+
+    /// The policy the next dequeue should use.
+    pub fn effective(&self) -> BatcherPolicy {
+        let cur = self.cur_batch.load(Ordering::Relaxed);
+        if !self.adapt {
+            return self.cap;
+        }
+        let wait = if cur >= self.cap.max_batch {
+            self.cap.max_wait
+        } else {
+            self.cap
+                .max_wait
+                .mul_f64(cur as f64 / self.cap.max_batch.max(1) as f64)
+                .max(self.base.max_wait)
+        };
+        BatcherPolicy { max_batch: cur, max_wait: wait }
+    }
+
+    /// Feed back the queue depth observed at a dequeue (items taken plus
+    /// items still queued). No-op for fixed policies.
+    pub fn observe_depth(&self, depth: usize) {
+        if !self.adapt {
+            return;
+        }
+        let cur = self.cur_batch.load(Ordering::Relaxed);
+        if depth >= cur.saturating_mul(2) && cur < self.cap.max_batch {
+            let next = (cur * 2).min(self.cap.max_batch);
+            self.cur_batch.store(next, Ordering::Relaxed);
+        } else if depth <= cur / 2 && cur > self.base.max_batch {
+            let next = (cur / 2).max(self.base.max_batch);
+            self.cur_batch.store(next, Ordering::Relaxed);
+        }
+    }
+
+    /// The hard upper bound on effective batch width.
+    pub fn cap(&self) -> BatcherPolicy {
+        self.cap
     }
 }
 
@@ -101,6 +185,61 @@ mod tests {
         assert!(b.deadline_due());
         assert_eq!(b.flush(), vec![7]);
         assert!(!b.deadline_due());
+    }
+
+    #[test]
+    fn adaptive_widens_under_depth_and_decays_when_drained() {
+        let b = AdaptiveBatcher::adaptive(
+            BatcherPolicy::immediate(),
+            BatcherPolicy::batched(8, Duration::from_millis(8)),
+        );
+        // Starts latency-first.
+        assert_eq!(b.effective().max_batch, 1);
+        // Deep queue: widen 1 -> 2 -> 4 -> 8, never past the cap.
+        for expect in [2, 4, 8, 8] {
+            b.observe_depth(100);
+            assert_eq!(b.effective().max_batch, expect);
+        }
+        // At the cap the full wait applies.
+        assert_eq!(b.effective().max_wait, Duration::from_millis(8));
+        // Drained queue: decay 8 -> 4 -> 2 -> 1, never below base.
+        for expect in [4, 2, 1, 1] {
+            b.observe_depth(0);
+            assert_eq!(b.effective().max_batch, expect);
+        }
+        // Back at base the wait is latency-first again (base max_wait 0,
+        // scaled wait 8ms * 1/8 = 1ms).
+        assert_eq!(b.effective().max_wait, Duration::from_millis(1));
+        // Moderate depth holds steady: 1 -> 2, then depth 2 < 2*2 keeps 2.
+        b.observe_depth(2);
+        assert_eq!(b.effective().max_batch, 2);
+        b.observe_depth(2);
+        assert_eq!(b.effective().max_batch, 2);
+    }
+
+    #[test]
+    fn fixed_batcher_never_adapts() {
+        let p = BatcherPolicy::batched(4, Duration::from_millis(2));
+        let b = AdaptiveBatcher::fixed(p);
+        b.observe_depth(10_000);
+        assert_eq!(b.effective().max_batch, 4);
+        assert_eq!(b.effective().max_wait, Duration::from_millis(2));
+        b.observe_depth(0);
+        assert_eq!(b.effective().max_batch, 4);
+    }
+
+    #[test]
+    fn adaptive_wait_scales_with_width() {
+        let b = AdaptiveBatcher::adaptive(
+            BatcherPolicy::batched(1, Duration::from_millis(1)),
+            BatcherPolicy::batched(16, Duration::from_millis(16)),
+        );
+        b.observe_depth(100); // 1 -> 2
+        b.observe_depth(100); // 2 -> 4
+        let eff = b.effective();
+        assert_eq!(eff.max_batch, 4);
+        // 16ms * 4/16 = 4ms, above the 1ms base floor.
+        assert_eq!(eff.max_wait, Duration::from_millis(4));
     }
 
     #[test]

@@ -320,6 +320,52 @@ impl InferenceEngine for FallbackEngine {
             }
         }
     }
+
+    /// Batched mirror of [`FallbackEngine::infer`]: the whole batch goes to
+    /// the primary's `infer_batch` (one breaker consult, one outcome — a
+    /// batch is one unit of primary work), and on failure the whole batch
+    /// degrades to the fallback with `fallback_served` counted per request.
+    fn infer_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut primary_error: Option<String> = None;
+        if self.breaker.allow() {
+            let engine = self.primary_engine();
+            match catch_unwind(AssertUnwindSafe(|| engine.infer_batch(inputs))) {
+                Ok(Ok(ys)) if ys.len() == inputs.len() => {
+                    self.breaker.on_success();
+                    return Ok(ys);
+                }
+                Ok(Ok(ys)) => {
+                    self.breaker.on_failure();
+                    primary_error =
+                        Some(format!("batch returned {} outputs for {} inputs", ys.len(), inputs.len()));
+                }
+                Ok(Err(e)) => {
+                    self.breaker.on_failure();
+                    primary_error = Some(format!("{e:#}"));
+                }
+                Err(payload) => {
+                    self.breaker.on_failure();
+                    self.bump(|c| &c.engine_panics);
+                    primary_error = Some(format!("panicked: {}", panic_message(&*payload)));
+                }
+            }
+        }
+        for _ in inputs {
+            self.bump(|c| &c.fallback_served);
+        }
+        match self.fallback.infer_batch(inputs) {
+            Ok(ys) => Ok(ys),
+            Err(fe) => {
+                self.bump(|c| &c.degraded);
+                Err(super::ServeError::Degraded {
+                    model: self.label.clone(),
+                    primary_error: primary_error.unwrap_or_else(|| "circuit open".into()),
+                    fallback_error: format!("{fe:#}"),
+                }
+                .into())
+            }
+        }
+    }
 }
 
 /// Per-model background compilation pipeline: each model gets at most one

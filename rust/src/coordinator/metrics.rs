@@ -144,6 +144,14 @@ pub struct ServeCounters {
     pub heals_started: AtomicU64,
     pub heals_succeeded: AtomicU64,
     pub heals_failed: AtomicU64,
+    /// Multi-request engine invocations (`infer_batch` with ≥ 2 requests):
+    /// how often dispatch actually amortized work across images.
+    pub batched_infers: AtomicU64,
+    /// Requests served through those multi-request invocations; divide by
+    /// `batched_infers` for the mean realized batch size.
+    pub batched_requests: AtomicU64,
+    /// Largest single `infer_batch` width dispatched so far.
+    pub batch_size_max: AtomicU64,
 }
 
 impl ServeCounters {
@@ -250,6 +258,9 @@ pub struct MetricsSnapshot {
     pub heals_started: u64,
     pub heals_succeeded: u64,
     pub heals_failed: u64,
+    pub batched_infers: u64,
+    pub batched_requests: u64,
+    pub batch_size_max: u64,
     /// Compile-pipeline retry/timeout counts, if a [`CompileStats`] was
     /// attached (e.g. by a healing recompile path).
     pub compile_retries: u64,
@@ -257,6 +268,16 @@ pub struct MetricsSnapshot {
 }
 
 impl MetricsSnapshot {
+    /// Mean realized batch width across multi-request dispatches, or 0.0
+    /// when batching never engaged.
+    pub fn batch_size_mean(&self) -> f64 {
+        if self.batched_infers == 0 {
+            0.0
+        } else {
+            self.batched_requests as f64 / self.batched_infers as f64
+        }
+    }
+
     /// The shard with the worst sickness score, if any shard has one > 0.
     pub fn sickest_shard(&self) -> Option<&ShardSnapshot> {
         self.shards
@@ -369,6 +390,9 @@ impl LatencyRecorder {
             heals_started: c.heals_started.load(Ordering::Relaxed),
             heals_succeeded: c.heals_succeeded.load(Ordering::Relaxed),
             heals_failed: c.heals_failed.load(Ordering::Relaxed),
+            batched_infers: c.batched_infers.load(Ordering::Relaxed),
+            batched_requests: c.batched_requests.load(Ordering::Relaxed),
+            batch_size_max: c.batch_size_max.load(Ordering::Relaxed),
             compile_retries,
             compile_timeouts,
         }
@@ -461,6 +485,23 @@ mod tests {
         assert_eq!(s.shard_ejects, 1);
         assert_eq!(s.stopped_replies, 1);
         assert_eq!(s.shard_readmits, 0);
+    }
+
+    #[test]
+    fn batch_counters_flow_into_snapshot() {
+        let r = LatencyRecorder::new();
+        let c = r.counters().clone();
+        assert_eq!(r.snapshot().batch_size_mean(), 0.0);
+        // Two batched dispatches of widths 4 and 2.
+        c.batched_infers.fetch_add(2, Ordering::Relaxed);
+        c.batched_requests.fetch_add(6, Ordering::Relaxed);
+        c.batch_size_max.fetch_max(4, Ordering::Relaxed);
+        c.batch_size_max.fetch_max(2, Ordering::Relaxed);
+        let s = r.snapshot();
+        assert_eq!(s.batched_infers, 2);
+        assert_eq!(s.batched_requests, 6);
+        assert_eq!(s.batch_size_max, 4);
+        assert!((s.batch_size_mean() - 3.0).abs() < 1e-9);
     }
 
     #[test]

@@ -33,7 +33,7 @@ mod metrics;
 mod router;
 mod shard;
 
-pub use batcher::{Batcher, BatcherPolicy};
+pub use batcher::{AdaptiveBatcher, Batcher, BatcherPolicy};
 pub use error::ServeError;
 pub use fallback::{
     BreakerConfig, BreakerEvent, BreakerState, CircuitBreaker, FallbackEngine, HealPipeline,
@@ -49,6 +49,7 @@ use crate::runtime::InferenceEngine;
 use crate::tensor::Tensor;
 use crate::util::panic_message;
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
@@ -389,6 +390,98 @@ pub(crate) fn execute_with(
             ExecOutcome::Failed
         }
     }
+}
+
+/// Execute a same-model run of ≥ 2 dequeued requests through **one**
+/// `engine.infer_batch` call — the real amortization the batched entry
+/// point exists for. Per-request semantics match [`execute_with`] exactly:
+/// stale requests shed individually before compute, every request gets
+/// exactly one reply (Drop-backstopped), and an engine error or panic
+/// fails only this batch's live requests. Returns one outcome per request,
+/// in order.
+pub(crate) fn execute_batch_with(
+    reqs: Vec<Request>,
+    engine: Arc<dyn InferenceEngine>,
+    metrics: &LatencyRecorder,
+) -> Vec<ExecOutcome> {
+    let n_total = reqs.len();
+    let mut outcomes = vec![ExecOutcome::Shed; n_total];
+    let now = Instant::now();
+
+    // Unpack, arm a reply guard per request, and shed stale frames first so
+    // the engine call covers only live work.
+    let mut live: Vec<(usize, String, Tensor, ReplyGuard, f64)> = Vec::with_capacity(n_total);
+    for (i, req) in reqs.into_iter().enumerate() {
+        let Request { model, input, reply, enqueued, deadline } = req;
+        let guard = ReplyGuard::new(reply, &model);
+        if let Some(dl) = deadline {
+            if now >= dl {
+                ServeCounters::bump(&metrics.counters().deadline_sheds);
+                let late_by_us = now.duration_since(dl).as_micros() as u64;
+                guard.send(Err(ServeError::DeadlineExceeded { model, late_by_us }));
+                continue; // outcomes[i] stays Shed
+            }
+        }
+        let queue_us = now.duration_since(enqueued).as_secs_f64() * 1e6;
+        live.push((i, model, input, guard, queue_us));
+    }
+    if live.is_empty() {
+        return outcomes;
+    }
+
+    let inputs: Vec<Tensor> = live.iter().map(|(_, _, input, _, _)| input.clone()).collect();
+    let c = metrics.counters();
+    ServeCounters::bump(&c.batched_infers);
+    c.batched_requests.fetch_add(live.len() as u64, Ordering::Relaxed);
+    c.batch_size_max.fetch_max(live.len() as u64, Ordering::Relaxed);
+
+    let t0 = Instant::now();
+    let result = catch_unwind(AssertUnwindSafe(|| engine.infer_batch(&inputs)));
+    // Per-request cost is the amortized share of the one engine call — the
+    // latency a request actually paid, and the number that makes batched
+    // vs single throughput comparable in per-model means.
+    let infer_us = t0.elapsed().as_secs_f64() * 1e6 / live.len() as f64;
+
+    match result {
+        Ok(Ok(outs)) if outs.len() == live.len() => {
+            for ((i, model, _, guard, queue_us), y) in live.into_iter().zip(outs) {
+                metrics.record(&model, queue_us, infer_us, true);
+                guard.send(Ok(y));
+                outcomes[i] = ExecOutcome::Served;
+            }
+        }
+        Ok(Ok(outs)) => {
+            // A length mismatch is an engine contract bug: no way to know
+            // which output belongs to which request, so fail them all.
+            let reason =
+                format!("batch returned {} outputs for {} inputs", outs.len(), live.len());
+            ServeCounters::bump(&c.engine_failures);
+            for (i, model, _, guard, queue_us) in live {
+                metrics.record(&model, queue_us, infer_us, false);
+                guard.send(Err(ServeError::EngineFailed { model, reason: reason.clone() }));
+                outcomes[i] = ExecOutcome::Failed;
+            }
+        }
+        Ok(Err(e)) => {
+            let reason = format!("{e:#}");
+            ServeCounters::bump(&c.engine_failures);
+            for (i, model, _, guard, queue_us) in live {
+                metrics.record(&model, queue_us, infer_us, false);
+                guard.send(Err(ServeError::EngineFailed { model, reason: reason.clone() }));
+                outcomes[i] = ExecOutcome::Failed;
+            }
+        }
+        Err(payload) => {
+            let reason = format!("engine panicked: {}", panic_message(&*payload));
+            ServeCounters::bump(&c.engine_panics);
+            for (i, model, _, guard, queue_us) in live {
+                metrics.record(&model, queue_us, infer_us, false);
+                guard.send(Err(ServeError::EngineFailed { model, reason: reason.clone() }));
+                outcomes[i] = ExecOutcome::Failed;
+            }
+        }
+    }
+    outcomes
 }
 
 #[cfg(test)]

@@ -27,7 +27,7 @@
 //! it, its backlog is served to zero) and restarts its workers with a
 //! fresh generation — zero accepted requests are dropped.
 
-use super::batcher::BatcherPolicy;
+use super::batcher::{AdaptiveBatcher, BatcherPolicy};
 use super::error::ServeError;
 use super::fallback::{BreakerConfig, BreakerEvent, CircuitBreaker};
 use super::metrics::{LatencyRecorder, MetricsSnapshot, ServeCounters, ShardStats};
@@ -58,9 +58,19 @@ pub struct ShardConfig {
     pub default_deadline: Option<Duration>,
     /// Enable work stealing between idle and backlogged shards.
     pub steal: bool,
-    /// Per-shard dequeue batching policy (`max_batch` requests are popped
-    /// per queue lock acquisition; `immediate()` pops one at a time).
+    /// Per-shard dequeue batching policy: `max_batch` requests are popped
+    /// per dequeue and same-model runs execute through one
+    /// `engine.infer_batch` call; `max_wait` is how long a dequeue lingers
+    /// for the batch to fill (`immediate()` pops one at a time, never
+    /// waiting). With [`ShardConfig::batch_adapt`] set, this is the upper
+    /// *cap* of the adaptive range instead of a fixed policy.
     pub batch: BatcherPolicy,
+    /// Adapt the effective batch width per shard between latency-first
+    /// (width 1) and the `batch` cap, widening from observed queue depth
+    /// and decaying when the queue drains (see
+    /// [`super::AdaptiveBatcher`]). Off by default: a fixed policy keeps
+    /// the single-queue-era semantics bit-compatible.
+    pub batch_adapt: bool,
     /// Shard-level breaker tuning: consecutive request failures or worker
     /// unwinds on one shard eject it from routing until a probe succeeds.
     pub breaker: BreakerConfig,
@@ -78,6 +88,7 @@ impl Default for ShardConfig {
             default_deadline: None,
             steal: true,
             batch: BatcherPolicy::immediate(),
+            batch_adapt: false,
             // Shard ejection wants more evidence than an engine-level
             // breaker: one flaky request shouldn't empty a shard pool.
             breaker: BreakerConfig { failure_threshold: 8, cooldown: Duration::from_millis(100) },
@@ -108,11 +119,24 @@ struct QueueInner {
 /// Bounded FIFO queue for one shard. Owner pops and steals both take from
 /// the *front*, so consumption order equals submission order regardless of
 /// which shard's worker does the popping.
+///
+/// The queue also owns the shard's **in-flight accounting**: `take_front`
+/// increments `in_flight` *under the queue lock*, so there is no window in
+/// which a dequeued-but-not-yet-counted batch lets a drain observe
+/// "queue empty + nothing in flight" while work is in hand. Stolen work
+/// stays charged to the queue it was taken from — draining a shard
+/// therefore waits for its stolen backlog too.
 struct ShardQueue {
     inner: Mutex<QueueInner>,
+    /// Signaled on push (wakes a dequeue waiting for work).
     cond: Condvar,
+    /// Signaled when the queue becomes empty or `in_flight` reaches zero
+    /// (wakes drain/shutdown quiescence waiters).
+    idle: Condvar,
     /// Per-model capacity.
     capacity: usize,
+    /// Dequeued-but-not-yet-replied requests charged to this queue.
+    in_flight: AtomicU64,
     stats: Arc<ShardStats>,
 }
 
@@ -121,7 +145,9 @@ impl ShardQueue {
         ShardQueue {
             inner: Mutex::new(QueueInner { deque: VecDeque::new(), per_model: HashMap::new() }),
             cond: Condvar::new(),
+            idle: Condvar::new(),
             capacity: capacity.max(1),
+            in_flight: AtomicU64::new(0),
             stats,
         }
     }
@@ -153,18 +179,51 @@ impl ShardQueue {
             }
             out.push(sr);
         }
+        // Count the batch in flight before the lock drops (see struct doc).
+        self.in_flight.fetch_add(n as u64, Ordering::SeqCst);
         self.stats.queue_len.store(q.deque.len() as u64, Ordering::Relaxed);
+        if q.deque.is_empty() && n > 0 {
+            self.idle.notify_all();
+        }
         out
     }
 
-    /// Pop up to `max_n` from the front, waiting up to `timeout` when the
-    /// queue is empty.
-    fn pop_batch(&self, max_n: usize, timeout: Duration) -> Vec<SeqReq> {
+    /// Release `n` in-flight slots (requests replied or abandoned), waking
+    /// quiescence waiters when the count reaches zero. The empty lock
+    /// acquisition orders the notify against a concurrent
+    /// [`ShardQueue::wait_quiesced`] check so the wakeup cannot be missed.
+    fn in_flight_sub(&self, n: u64) {
+        if n == 0 {
+            return;
+        }
+        let prev = self.in_flight.fetch_sub(n, Ordering::SeqCst);
+        debug_assert!(prev >= n, "in_flight underflow");
+        if prev <= n {
+            let _q = self.lock();
+            self.idle.notify_all();
+        }
+    }
+
+    /// Pop up to `max_n` from the front. `max_wait` is the configured
+    /// [`BatcherPolicy::max_wait`]: zero means *never sleep* (the
+    /// latency-first contract); otherwise the dequeue lingers until the
+    /// batch can fill to `max_n` or the wait budget runs out, returning
+    /// whatever is queued by then. Waiting happens with the work still in
+    /// the queue, so lingering requests remain visible to thieves.
+    fn pop_batch(&self, max_n: usize, max_wait: Duration) -> Vec<SeqReq> {
         let mut q = self.lock();
-        if q.deque.is_empty() {
+        if max_wait.is_zero() {
+            return self.take_front(&mut q, max_n);
+        }
+        let deadline = Instant::now() + max_wait;
+        while q.deque.len() < max_n {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
             let (guard, _) = self
                 .cond
-                .wait_timeout(q, timeout)
+                .wait_timeout(q, deadline - now)
                 .unwrap_or_else(|e| e.into_inner());
             q = guard;
         }
@@ -181,11 +240,70 @@ impl ShardQueue {
         self.lock().deque.len()
     }
 
-    /// Remove everything still queued (shutdown-deadline purge).
+    /// Park until a push arrives or `timeout` elapses (idle workers park
+    /// here instead of spinning when their policy says not to wait in
+    /// `pop_batch`).
+    fn wait_nonempty(&self, timeout: Duration) {
+        let q = self.lock();
+        if q.deque.is_empty() {
+            let _ = self.cond.wait_timeout(q, timeout);
+        }
+    }
+
+    /// Wait up to `timeout` for "queue empty and nothing in flight";
+    /// returns whether that state held when the wait ended. Callers loop:
+    /// a `true` can be stale the instant the lock drops, but drain callers
+    /// have already unrouted the shard so no new pushes arrive.
+    fn wait_quiesced(&self, timeout: Duration) -> bool {
+        let q = self.lock();
+        if q.deque.is_empty() && self.in_flight.load(Ordering::SeqCst) == 0 {
+            return true;
+        }
+        let (q, _) = self
+            .idle
+            .wait_timeout(q, timeout)
+            .unwrap_or_else(|e| e.into_inner());
+        q.deque.is_empty() && self.in_flight.load(Ordering::SeqCst) == 0
+    }
+
+    /// Remove everything still queued (shutdown-deadline purge). The
+    /// caller replies synchronously, so the in-flight charge `take_front`
+    /// added is released before returning.
     fn drain_all(&self) -> Vec<SeqReq> {
-        let mut q = self.lock();
-        let n = q.deque.len();
-        self.take_front(&mut q, n)
+        let out = {
+            let mut q = self.lock();
+            let n = q.deque.len();
+            self.take_front(&mut q, n)
+        };
+        self.in_flight_sub(out.len() as u64);
+        out
+    }
+}
+
+/// Unwind-safe release of a batch's in-flight slots: `done_one` pays down
+/// the charge as replies go out, and `Drop` releases whatever is left if a
+/// panic escapes mid-batch — without it, an unwinding worker strands
+/// `in_flight > 0` and `recycle_shard`/shutdown wait forever (the
+/// [`super::ReplyGuard`] pattern, applied to accounting).
+struct InFlightGuard<'a> {
+    queue: &'a ShardQueue,
+    remaining: u64,
+}
+
+impl InFlightGuard<'_> {
+    fn done_one(&mut self) {
+        debug_assert!(self.remaining > 0);
+        if self.remaining > 0 {
+            self.remaining -= 1;
+            self.queue.in_flight_sub(1);
+        }
+    }
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        self.queue.in_flight_sub(self.remaining);
+        self.remaining = 0;
     }
 }
 
@@ -197,12 +315,12 @@ struct Shard {
     /// Admission routes around a draining shard; its workers keep serving
     /// the backlog down to zero.
     draining: AtomicBool,
-    /// Requests popped by a worker attributing to this shard and not yet
-    /// replied (used by drain/stop to wait for quiescence).
-    in_flight: AtomicU64,
     /// Bumped by [`ShardPool::recycle_shard`]; workers of an older
     /// generation exit at the next loop iteration.
     generation: AtomicU64,
+    /// Effective dequeue policy, shared by this shard's workers; adapts to
+    /// observed queue depth when [`ShardConfig::batch_adapt`] is on.
+    batcher: AdaptiveBatcher,
     stats: Arc<ShardStats>,
 }
 
@@ -223,15 +341,26 @@ impl Shard {
                 ServeCounters::bump(&st.readmits);
             }
         }));
+        let batcher = if cfg.batch_adapt {
+            AdaptiveBatcher::adaptive(BatcherPolicy::immediate(), cfg.batch)
+        } else {
+            AdaptiveBatcher::fixed(cfg.batch)
+        };
         Arc::new(Shard {
             idx,
             queue: ShardQueue::new(cfg.queue_capacity, Arc::clone(&stats)),
             breaker,
             draining: AtomicBool::new(false),
-            in_flight: AtomicU64::new(0),
             generation: AtomicU64::new(0),
+            batcher,
             stats,
         })
+    }
+
+    /// Dequeued-but-unreplied requests charged to this shard's queue
+    /// (including work stolen from it that is still executing elsewhere).
+    fn in_flight(&self) -> u64 {
+        self.queue.in_flight.load(Ordering::SeqCst)
     }
 
     /// Report a request outcome executed by this shard's worker to the
@@ -375,8 +504,11 @@ impl ShardPool {
 
     /// Work stealing: called by a worker whose own queue is empty. Takes
     /// the oldest half of the most backlogged peer queue and executes it,
-    /// attributing outcomes to the thief shard.
-    fn try_steal(self: &Arc<Self>, thief: &Arc<Shard>) {
+    /// attributing *outcomes* to the thief shard (its breaker did the
+    /// work) while the in-flight charge stays on the victim's queue (it is
+    /// the victim's backlog being finished). Returns whether anything was
+    /// actually stolen and executed.
+    fn try_steal(self: &Arc<Self>, thief: &Arc<Shard>) -> bool {
         let mut best: Option<(usize, usize)> = None; // (len, idx)
         for (i, s) in self.shards.iter().enumerate() {
             if i == thief.idx {
@@ -387,7 +519,7 @@ impl ShardPool {
                 best = Some((len, i));
             }
         }
-        let Some((len, vidx)) = best else { return };
+        let Some((len, vidx)) = best else { return false };
         if let Some(plan) = &self.cfg.faults {
             // Widen the thief-vs-thief / thief-vs-owner race window.
             if let Some(d) = plan.maybe_delay_at(FaultSite::StealRace, thief.idx) {
@@ -397,7 +529,7 @@ impl ShardPool {
         let victim = &self.shards[vidx];
         let batch = victim.queue.steal_batch((len + 1) / 2);
         if batch.is_empty() {
-            return; // lost the race to the owner or another thief
+            return false; // lost the race to the owner or another thief
         }
         let c = self.metrics.counters();
         for _ in 0..batch.len() {
@@ -405,31 +537,54 @@ impl ShardPool {
             ServeCounters::bump(&victim.stats.stolen_from);
             ServeCounters::bump(&thief.stats.stolen_by);
         }
-        self.run_batch(thief, batch);
+        self.run_batch(thief, victim, batch);
+        true
     }
 
-    /// Execute a popped batch on `executor`'s account. Shard queues have
-    /// model affinity, so a dequeued batch is usually one model — resolve
-    /// the router once per distinct model per batch (the last lookup is
-    /// memoized) instead of taking the registry read-lock per request. A
-    /// failed lookup memoizes as `None`, and `execute_with` then re-walks
-    /// the unknown-model reply path so the per-request `ModelUnknown`
-    /// error is preserved.
-    fn run_batch(&self, executor: &Arc<Shard>, batch: Vec<SeqReq>) {
-        executor.in_flight.fetch_add(batch.len() as u64, Ordering::SeqCst);
+    /// Execute a popped batch on `executor`'s account, with its in-flight
+    /// charge on `source`'s queue (the queue `take_front` counted it on —
+    /// the thief passes the victim). Shard queues have model affinity, so
+    /// a dequeued batch is usually one model: consecutive same-model runs
+    /// with a resolvable engine dispatch through **one**
+    /// `engine.infer_batch` call ([`super::execute_batch_with`]); runs of
+    /// one, and runs whose model fails to resolve, go through the
+    /// per-request [`super::execute_with`] path so the `ModelUnknown`
+    /// reply semantics are preserved. The in-flight decrement is held by
+    /// an [`InFlightGuard`], so a panic escaping mid-batch releases the
+    /// remainder instead of stranding the drain/shutdown waiters.
+    fn run_batch(&self, executor: &Arc<Shard>, source: &Arc<Shard>, batch: Vec<SeqReq>) {
+        let mut guard = InFlightGuard { queue: &source.queue, remaining: batch.len() as u64 };
         let mut memo: Option<(String, Option<Arc<dyn InferenceEngine>>)> = None;
-        for sr in batch {
+        let mut it = batch.into_iter().map(|sr| sr.req).peekable();
+        while let Some(first) = it.next() {
+            let mut run = vec![first];
+            while it.peek().map_or(false, |r| r.model == run[0].model) {
+                run.push(it.next().expect("peeked"));
+            }
             let resolved = match &memo {
-                Some((m, e)) if *m == sr.req.model => e.clone(),
+                Some((m, e)) if *m == run[0].model => e.clone(),
                 _ => {
-                    let e = self.router.engine(&sr.req.model).ok();
-                    memo = Some((sr.req.model.clone(), e.clone()));
+                    let e = self.router.engine(&run[0].model).ok();
+                    memo = Some((run[0].model.clone(), e.clone()));
                     e
                 }
             };
-            let outcome = super::execute_with(sr.req, resolved, &self.router, &self.metrics);
-            executor.on_outcome(outcome);
-            executor.in_flight.fetch_sub(1, Ordering::SeqCst);
+            match resolved {
+                Some(engine) if run.len() >= 2 => {
+                    for outcome in super::execute_batch_with(run, engine, &self.metrics) {
+                        executor.on_outcome(outcome);
+                        guard.done_one();
+                    }
+                }
+                resolved => {
+                    for req in run {
+                        let outcome =
+                            super::execute_with(req, resolved.clone(), &self.router, &self.metrics);
+                        executor.on_outcome(outcome);
+                        guard.done_one();
+                    }
+                }
+            }
         }
     }
 
@@ -443,11 +598,13 @@ impl ShardPool {
         if shard.draining.swap(true, Ordering::SeqCst) {
             return false;
         }
-        while shard.queue.len() > 0 || shard.in_flight.load(Ordering::SeqCst) > 0 {
+        // Condvar-parked drain: woken on queue-empty and on in-flight-zero
+        // transitions instead of burning a core polling at 1 ms. The
+        // timeout is only a re-check cadence for the stop flag.
+        while !shard.queue.wait_quiesced(Duration::from_millis(20)) {
             if self.stop.load(Ordering::SeqCst) {
                 break; // shutdown takes over; its drain/purge owns the backlog
             }
-            std::thread::sleep(Duration::from_millis(1));
         }
         let new_gen = shard.generation.fetch_add(1, Ordering::SeqCst) + 1;
         let old = {
@@ -487,10 +644,8 @@ impl ShardPool {
             let busy = self
                 .shards
                 .iter()
-                .any(|s| s.queue.len() > 0 || s.in_flight.load(Ordering::SeqCst) > 0);
-            if !busy {
-                break;
-            }
+                .find(|s| s.queue.len() > 0 || s.in_flight() > 0);
+            let Some(busy) = busy else { break };
             if let Some(dl) = deadline {
                 if Instant::now() >= dl {
                     let c = self.metrics.counters();
@@ -503,7 +658,17 @@ impl ShardPool {
                     break;
                 }
             }
-            std::thread::sleep(Duration::from_millis(1));
+            // Park on the busy shard's quiescence condvar (woken by its
+            // workers' progress) instead of polling; cap the park so the
+            // deadline and the other shards get re-checked.
+            let cap = match deadline {
+                Some(dl) => dl
+                    .saturating_duration_since(Instant::now())
+                    .min(Duration::from_millis(20))
+                    .max(Duration::from_millis(1)),
+                None => Duration::from_millis(20),
+            };
+            let _ = busy.queue.wait_quiesced(cap);
         }
         let all = {
             let mut w = self.workers.lock().unwrap_or_else(|e| e.into_inner());
@@ -579,19 +744,33 @@ fn worker_loop(pool: &Arc<ShardPool>, shard: &Arc<Shard>, my_gen: u64) {
                 panic!("injected shard kill (shard {})", shard.idx);
             }
         }
-        let batch = shard
-            .queue
-            .pop_batch(pool.cfg.batch.max_batch.max(1), Duration::from_millis(5));
+        // Dequeue under the shard's *effective* policy: the configured (or
+        // adaptively widened) max_batch and — the shard.rs:584 fix — the
+        // policy's own max_wait, not a hardcoded constant. While stopping,
+        // never linger: drain what's there immediately.
+        let eff = shard.batcher.effective();
+        let max_wait = if stopping { Duration::ZERO } else { eff.max_wait };
+        let batch = shard.queue.pop_batch(eff.max_batch.max(1), max_wait);
         if batch.is_empty() {
-            if stopping && shard.queue.len() == 0 {
-                return;
+            if stopping {
+                if shard.queue.len() == 0 {
+                    return;
+                }
+                continue;
             }
-            if pool.cfg.steal && !stopping {
-                pool.try_steal(shard);
+            let stole = pool.cfg.steal && pool.try_steal(shard);
+            if !stole {
+                // Nothing anywhere: park until a push lands (or a short
+                // timeout to re-check stop/generation/steal targets)
+                // rather than spinning on a zero-wait policy.
+                shard.queue.wait_nonempty(Duration::from_millis(5));
             }
             continue;
         }
-        pool.run_batch(shard, batch);
+        // Depth the dequeue observed: what we took plus what is still
+        // queued behind it — the adaptive policy's widen/decay signal.
+        shard.batcher.observe_depth(batch.len() + shard.queue.len());
+        pool.run_batch(shard, shard, batch);
     }
 }
 
@@ -751,5 +930,123 @@ mod tests {
         assert!(cfg.steal);
         assert!(cfg.breaker.failure_threshold > 3, "shard ejection needs more evidence");
         assert_eq!(cfg.batch.max_batch, 1);
+        assert!(!cfg.batch_adapt, "adaptive batching is opt-in");
+    }
+
+    /// Regression for the shard.rs:584 bug: the dequeue must honor the
+    /// configured `max_wait`, not a hardcoded constant. A zero-wait
+    /// (immediate) policy never sleeps — empty or not — and a 50 ms
+    /// policy lingers for the batch to fill before returning short.
+    #[test]
+    fn pop_batch_honors_configured_max_wait() {
+        // Zero wait, empty queue: returns empty immediately.
+        let q = mk_queue(16);
+        let t0 = Instant::now();
+        assert!(q.pop_batch(4, Duration::ZERO).is_empty());
+        assert!(t0.elapsed() < Duration::from_millis(20), "zero-wait dequeue slept");
+
+        // Zero wait, one queued item: returns it immediately, no lingering
+        // for the batch to fill.
+        let (req, _rx) = mk_req("m");
+        q.push(SeqReq { seq: 1, req }).unwrap();
+        let t0 = Instant::now();
+        assert_eq!(q.pop_batch(4, Duration::ZERO).len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(20), "zero-wait dequeue slept");
+
+        // 50 ms wait, one queued item, room for 4: lingers for the batch
+        // to fill, then returns the short batch at the deadline.
+        let (req, _rx2) = mk_req("m");
+        q.push(SeqReq { seq: 2, req }).unwrap();
+        let t0 = Instant::now();
+        let got = q.pop_batch(4, Duration::from_millis(50));
+        assert_eq!(got.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(40), "waited {:?}", t0.elapsed());
+
+        // 500 ms wait with the batch already full: returns immediately.
+        let mut _rxs = Vec::new();
+        for seq in 3..7 {
+            let (req, rx) = mk_req("m");
+            q.push(SeqReq { seq, req }).unwrap();
+            _rxs.push(rx);
+        }
+        let t0 = Instant::now();
+        assert_eq!(q.pop_batch(4, Duration::from_millis(500)).len(), 4);
+        assert!(t0.elapsed() < Duration::from_millis(100), "full batch still lingered");
+    }
+
+    /// In-flight accounting is unwind-safe and observable: `take_front`
+    /// charges under the queue lock, `InFlightGuard::drop` releases what a
+    /// mid-batch panic left unpaid, and `wait_quiesced` wakes on the
+    /// zero transition.
+    #[test]
+    fn in_flight_guard_releases_on_drop_and_quiesce_wakes() {
+        let q = Arc::new(mk_queue(16));
+        let mut _rxs = Vec::new();
+        for seq in 0..3 {
+            let (req, rx) = mk_req("m");
+            q.push(SeqReq { seq, req }).unwrap();
+            _rxs.push(rx);
+        }
+        let batch = q.pop_batch(3, Duration::ZERO);
+        assert_eq!(batch.len(), 3);
+        assert_eq!(q.in_flight.load(Ordering::SeqCst), 3);
+        assert!(!q.wait_quiesced(Duration::from_millis(1)), "work in flight");
+
+        let mut guard = InFlightGuard { queue: &*q, remaining: 3 };
+        guard.done_one();
+        assert_eq!(q.in_flight.load(Ordering::SeqCst), 2);
+
+        // A waiter parked on quiescence is woken by the drop-release of
+        // the remaining two slots.
+        let q2 = Arc::clone(&q);
+        let waiter = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            while !q2.wait_quiesced(Duration::from_millis(200)) {
+                assert!(t0.elapsed() < Duration::from_secs(5), "quiesce never woke");
+            }
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        drop(guard); // panic-path stand-in: releases the remaining 2
+        waiter.join().unwrap();
+        assert_eq!(q.in_flight.load(Ordering::SeqCst), 0);
+    }
+
+    /// End-to-end batched dispatch: with an adaptive policy capped at 4, a
+    /// burst through one shard produces multi-request `infer_batch`
+    /// dispatches, every request still gets its own correct reply, and the
+    /// realized batch width never exceeds the cap.
+    #[test]
+    fn adaptive_batched_dispatch_serves_burst_within_cap() {
+        use crate::graph::zoo;
+        use crate::interp::InterpEngine;
+        let router = Arc::new(Router::new());
+        let engine: Arc<dyn InferenceEngine> =
+            Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(3)).unwrap());
+        router.register("tiny", engine);
+        let cfg = ShardConfig {
+            shards: 1,
+            workers_per_shard: 1,
+            batch: BatcherPolicy::batched(4, Duration::from_millis(5)),
+            batch_adapt: true,
+            ..ShardConfig::default()
+        };
+        let handle = super::super::serve_sharded(router, cfg);
+        let mut rxs = Vec::new();
+        for _ in 0..32 {
+            rxs.push(handle.submit("tiny", Tensor::zeros(&[8, 8, 1]), None).unwrap());
+        }
+        for rx in rxs {
+            let res = rx.recv().unwrap_or(Err(ServeError::Stopped));
+            let y = res.expect("burst request should be served");
+            assert_eq!(y.dims(), &[2, 2, 2]);
+        }
+        let snap = handle.stop();
+        assert_eq!(snap.total_requests, 32);
+        assert_eq!(snap.errors, 0);
+        assert!(snap.batch_size_max <= 4, "adaptive width exceeded cap: {}", snap.batch_size_max);
+        if snap.batched_infers > 0 {
+            assert!(snap.batched_requests >= 2 * snap.batched_infers);
+            assert!(snap.batch_size_mean() >= 2.0);
+        }
     }
 }

@@ -398,6 +398,27 @@ impl InferenceEngine for FaultyEngine {
         }
         self.inner.infer(input)
     }
+
+    /// Batched forwarding that keeps fault determinism: the plan's engine
+    /// sites are consulted once **per image**, exactly the sequence N single
+    /// `infer` calls would produce, so a seeded chaos run fires the same
+    /// faults whether or not batching is enabled. A fault anywhere in the
+    /// batch fails/panics the whole batch — that is the real blast radius of
+    /// a shared engine invocation, and what the chaos suite asserts.
+    fn infer_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        for _ in inputs {
+            if let Some(d) = self.plan.maybe_delay(FaultSite::LatencySpike) {
+                std::thread::sleep(d);
+            }
+            if self.plan.should_fire(FaultSite::EnginePanic) {
+                panic!("injected engine panic ({})", self.label);
+            }
+            if self.plan.should_fire(FaultSite::EngineFail) {
+                bail!("injected engine failure ({})", self.label);
+            }
+        }
+        self.inner.infer_batch(inputs)
+    }
 }
 
 #[cfg(test)]

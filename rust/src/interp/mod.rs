@@ -203,6 +203,24 @@ impl crate::runtime::InferenceEngine for InterpEngine {
     fn infer(&self, input: &Tensor) -> Result<Tensor> {
         run(&self.model, input)
     }
+
+    /// Real batch support: validate the model once, then run each image
+    /// through the same per-layer path [`run`] uses — output is
+    /// bit-identical to N single `infer` calls while skipping the repeated
+    /// per-call `Model::validate` walk.
+    fn infer_batch(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.model.validate()?;
+        let mut outs = Vec::with_capacity(inputs.len());
+        for input in inputs {
+            check_input(&self.model, input)?;
+            let mut x = input.clone();
+            for layer in &self.model.layers {
+                x = run_layer(layer, &x)?;
+            }
+            outs.push(x);
+        }
+        Ok(outs)
+    }
 }
 
 #[cfg(test)]
@@ -265,6 +283,25 @@ mod tests {
             let err = yf.max_abs_diff(&yq).unwrap();
             assert!(err < 0.5, "{name}: int8 drifted err={err}");
         }
+    }
+
+    #[test]
+    fn batch_matches_single_bit_identical() {
+        use crate::runtime::InferenceEngine;
+        let mut rng = XorShift64::new(13);
+        let eng = InterpEngine::new(zoo::ball_classifier().with_random_weights(5)).unwrap();
+        let inputs: Vec<Tensor> =
+            (0..4).map(|_| Tensor::rand(&[16, 16, 1], -1.0, 1.0, &mut rng)).collect();
+        let batched = eng.infer_batch(&inputs).unwrap();
+        assert_eq!(batched.len(), 4);
+        for (i, x) in inputs.iter().enumerate() {
+            let single = eng.infer(x).unwrap();
+            assert_eq!(single.data(), batched[i].data(), "image {i} diverged");
+        }
+        assert!(eng.infer_batch(&[]).unwrap().is_empty());
+        // A bad shape anywhere in the batch is an error, same as single.
+        let bad = vec![Tensor::zeros(&[8, 8, 1])];
+        assert!(eng.infer_batch(&bad).is_err());
     }
 
     #[test]

@@ -265,6 +265,78 @@ fn steal_races_never_drop_or_duplicate_replies() {
     assert!(snap.steals > 0, "the burst must actually have been contended");
 }
 
+/// Acceptance (PR 9): an engine panic in the middle of a *batched*
+/// `infer_batch` dispatch fails only that batch's requests — every member
+/// of the panicking batch gets exactly one typed `EngineFailed` reply,
+/// every other request is served normally, and nothing is lost or
+/// duplicated.
+#[test]
+fn mid_batch_engine_panic_fails_only_that_batch_with_one_reply_each() {
+    let batch_cap = 4usize;
+    let total = 12usize;
+    // The panic site is consulted once per image, so First(1) detonates on
+    // the first image of the first dispatched batch.
+    let plan = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::EnginePanic, FaultSpec::First(1))
+        .build();
+    let faulty: Arc<dyn InferenceEngine> =
+        Arc::new(nncg::faults::FaultyEngine::new(interp_engine(3), plan));
+    let router = Arc::new(Router::new());
+    router.register("tiny", faulty);
+    let reference = interp_engine(3);
+    let handle = serve_sharded(
+        Arc::clone(&router),
+        ShardConfig {
+            shards: 1,
+            workers_per_shard: 1,
+            queue_capacity: 4096,
+            steal: false,
+            // Fixed width-4 batches with a generous fill wait, so the
+            // burst below is dequeued as real multi-request batches.
+            batch: nncg::coordinator::BatcherPolicy::batched(batch_cap, Duration::from_millis(100)),
+            ..ShardConfig::default()
+        },
+    );
+
+    let mut rng = XorShift64::new(chaos_seed());
+    let inputs: Vec<Tensor> =
+        (0..total).map(|_| Tensor::rand(&[8, 8, 1], 0.0, 1.0, &mut rng)).collect();
+    let receivers: Vec<_> = inputs
+        .iter()
+        .map(|x| handle.submit("tiny", x.clone(), None).expect("queue sized for the burst"))
+        .collect();
+
+    let mut served = 0usize;
+    let mut failed = 0usize;
+    for (i, rx) in receivers.into_iter().enumerate() {
+        let reply = rx.recv_timeout(Duration::from_secs(30)).expect("reply lost");
+        match reply {
+            Ok(y) => {
+                let want = reference.infer(&inputs[i]).unwrap();
+                assert_eq!(y, want, "served reply {i} must be bit-identical");
+                served += 1;
+            }
+            Err(ServeError::EngineFailed { reason, .. }) => {
+                assert!(reason.contains("panicked"), "typed panic reply, got: {reason}");
+                failed += 1;
+            }
+            Err(other) => panic!("request {i}: unexpected reply {other:?}"),
+        }
+        assert!(rx.try_recv().is_err(), "no second reply for request {i}");
+    }
+
+    assert_eq!(served + failed, total, "exactly one reply per accepted request");
+    assert!(failed >= 1, "the injected panic must fail its batch");
+    assert!(failed <= batch_cap, "blast radius is one batch, {failed} > {batch_cap}");
+    let snap = handle.stop();
+    assert_eq!(snap.total_requests, total as u64);
+    assert_eq!(snap.errors, failed as u64);
+    assert_eq!(snap.engine_panics, 1, "one panicking dispatch");
+    assert!(snap.batched_infers >= 1, "the burst must dispatch real batches");
+    assert!(snap.batch_size_max <= batch_cap as u64, "width capped by policy");
+    assert_eq!(snap.worker_respawns, 0, "the panic is contained; no worker dies");
+}
+
 /// Acceptance: `stop_with_timeout` on a wedged sharded pool answers every
 /// still-queued request with a typed `Stopped` reply instead of hanging.
 #[test]
