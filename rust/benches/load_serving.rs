@@ -12,6 +12,13 @@
 //! delays via `FaultPlan`, recycles shards under live traffic, and runs
 //! background heal rebuilds through the `HealPipeline`.
 //!
+//! `NNCG_LOAD_TCP=1` puts the length-prefixed TCP front-end (`NetServer`)
+//! on loopback and drives every request through a per-client `NetClient`
+//! instead of the in-process `Submitter` — same accounting gate, with
+//! remote queue-full replies counted as sheds. `NNCG_SERVE_STEAL_POLICY`
+//! (half-length|one-length|half-age|one-age) picks the steal policy; the
+//! policy and its realized `steals` count land in the JSON.
+//!
 //! The benchmark **gates** on exactly-one-reply accounting —
 //! `submitted == replied_ok + replied_err + shed` and `lost == 0` — and
 //! exits non-zero on any violation (CI runs a 10⁴-request smoke with the
@@ -21,8 +28,8 @@
 use nncg::cc::{CcDriver, CompiledCnn};
 use nncg::codegen::CodegenOptions;
 use nncg::coordinator::{
-    home_shard, serve_sharded, BatcherPolicy, BreakerConfig, HealPipeline, LatencyHisto, Router,
-    ServeError, ShardConfig,
+    home_shard, serve_sharded, BatcherPolicy, BreakerConfig, HealPipeline, LatencyHisto, NetClient,
+    NetConfig, NetServer, Router, ServeError, ShardConfig, StealPolicy,
 };
 use nncg::faults::{FaultPlan, FaultSite, FaultSpec};
 use nncg::graph::zoo;
@@ -70,6 +77,34 @@ fn settle(inflight: &mut Pending, tally: &mut ClientTally, histo: &mut LatencyHi
     }
 }
 
+/// TCP-mode counterpart of [`settle`]: replies arrive in submission order
+/// on the connection, so the oldest in-flight send is always the next
+/// frame off the wire. A remote queue-full reply is a shed (matching the
+/// in-process submit-time `QueueFull` accounting); any other remote error
+/// is a replied error; a transport failure is a lost request — the gate
+/// requires zero of those.
+fn settle_tcp(
+    client: &mut NetClient,
+    inflight: &mut VecDeque<Instant>,
+    tally: &mut ClientTally,
+    histo: &mut LatencyHisto,
+) {
+    if let Some(t) = inflight.pop_front() {
+        match client.read_reply() {
+            Ok((_, Ok(_))) => {
+                tally.replied_ok += 1;
+                histo.record_us(t.elapsed().as_secs_f64() * 1e6);
+            }
+            Ok((_, Err(e))) if e.kind() == "queue-full" => tally.shed += 1,
+            Ok((_, Err(_))) => {
+                tally.replied_err += 1;
+                histo.record_us(t.elapsed().as_secs_f64() * 1e6);
+            }
+            Err(_) => tally.lost += 1,
+        }
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     let quick = std::env::var("NNCG_BENCH_QUICK").is_ok();
     let requests = env_usize("NNCG_LOAD_REQUESTS", if quick { 20_000 } else { 1_000_000 });
@@ -78,6 +113,13 @@ fn main() -> anyhow::Result<()> {
     let window = env_usize("NNCG_LOAD_WINDOW", 256).max(1);
     let chaos = !matches!(std::env::var("NNCG_LOAD_CHAOS").as_deref(), Ok("off") | Ok("0"));
     let seed = env_usize("NNCG_CHAOS_SEED", 1) as u64;
+    // NNCG_LOAD_TCP=1 drives the pool over loopback TCP (the length-
+    // prefixed frame protocol) instead of the in-process Submitter.
+    let tcp = matches!(std::env::var("NNCG_LOAD_TCP").as_deref(), Ok("1") | Ok("on"));
+    let steal_policy = std::env::var("NNCG_SERVE_STEAL_POLICY")
+        .ok()
+        .and_then(|v| StealPolicy::parse(v.trim()))
+        .unwrap_or_default();
 
     // The three paper models; generated-C engines when a compiler exists.
     let specs = [
@@ -146,21 +188,36 @@ fn main() -> anyhow::Result<()> {
             workers_per_shard: env_usize("NNCG_LOAD_WORKERS", 1).max(1),
             queue_capacity: 8192,
             steal: true,
+            steal_policy,
             batch,
             batch_adapt,
             breaker: BreakerConfig { failure_threshold: 16, cooldown: Duration::from_millis(50) },
-            faults: plan,
+            faults: plan.clone(),
             ..ShardConfig::default()
         },
     );
+    // Loopback TCP front-end; the per-connection window matches the client
+    // window so the socket, not the server channel, is the backpressure.
+    let net = if tcp {
+        Some(NetServer::start(
+            handle.submitter(),
+            "127.0.0.1:0",
+            NetConfig { window, faults: plan, ..NetConfig::default() },
+        )?)
+    } else {
+        None
+    };
+    let net_addr = net.as_ref().map(|s| s.local_addr());
     let heal = Arc::new(
         HealPipeline::new(Arc::clone(&router)).with_counters(Arc::clone(handle.metrics.counters())),
     );
 
     println!(
         "load_serving: {requests} requests, {shards} shards, {clients} clients, window {window}, \
-         chaos {}, engines {:?}",
+         chaos {}, transport {}, steal-policy {}, engines {:?}",
         if chaos { "on" } else { "off" },
+        if tcp { "tcp" } else { "in-process" },
+        steal_policy.name(),
         engine_kinds
     );
 
@@ -212,6 +269,36 @@ fn main() -> anyhow::Result<()> {
             let names = ["ball", "pedestrian", "robot"];
             let mut tally = ClientTally::default();
             let mut histo = LatencyHisto::new();
+            if let Some(addr) = net_addr {
+                // Wire path: one connection per client, pipelined to the
+                // same in-flight window as the in-process mode.
+                let mut client = NetClient::connect(addr).expect("connect loopback net server");
+                let mut inflight: VecDeque<Instant> = VecDeque::with_capacity(window);
+                for _ in 0..n {
+                    let pick = match rng.below(100) {
+                        0..=89 => 0,
+                        90..=97 => 1,
+                        _ => 2,
+                    };
+                    tally.submitted += 1;
+                    match client.send(names[pick], &inputs[pick]) {
+                        Ok(_) => {
+                            inflight.push_back(Instant::now());
+                            if inflight.len() >= window {
+                                settle_tcp(&mut client, &mut inflight, &mut tally, &mut histo);
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("[load] tcp send failed: {e}");
+                            tally.lost += 1;
+                        }
+                    }
+                }
+                while !inflight.is_empty() {
+                    settle_tcp(&mut client, &mut inflight, &mut tally, &mut histo);
+                }
+                return (tally, histo);
+            }
             let mut inflight: Pending = VecDeque::with_capacity(window);
             for _ in 0..n {
                 // Paper mix: ball-heavy embedded vision loop.
@@ -276,6 +363,11 @@ fn main() -> anyhow::Result<()> {
     done.store(true, Ordering::SeqCst);
     let heals_done = chaos_thread.map(|t| t.join().unwrap_or(0)).unwrap_or(0);
     let elapsed = t0.elapsed().as_secs_f64();
+    // Stop the wire before the pool so every accepted frame has its reply
+    // on the socket before the shard queues drain.
+    if let Some(server) = net {
+        server.stop();
+    }
     let snap = handle.stop();
 
     let replied = total.replied_ok + total.replied_err;
@@ -301,6 +393,17 @@ fn main() -> anyhow::Result<()> {
         snap.batch_size_mean(),
         snap.batch_size_max
     );
+    if tcp {
+        println!(
+            "net: connections={} frames={} replies={} bad-frames={} dropped-conns={} unknown-rejects={}",
+            snap.net_connections,
+            snap.net_frames,
+            snap.net_replies,
+            snap.net_bad_frames,
+            snap.net_dropped_conns,
+            snap.net_unknown_rejects
+        );
+    }
     println!(
         "chaos: steals={} respawns={} ejects={} probes={} readmits={} drains={} heals={}/{} recycles={}",
         snap.steals,
@@ -371,6 +474,10 @@ fn main() -> anyhow::Result<()> {
         ("batched_requests".to_string(), Value::Num(snap.batched_requests as f64)),
         ("batch_size_mean".to_string(), Value::Num((snap.batch_size_mean() * 100.0).round() / 100.0)),
         ("batch_size_max".to_string(), Value::Num(snap.batch_size_max as f64)),
+        ("transport".to_string(), Value::Str(if tcp { "tcp" } else { "in-process" }.to_string())),
+        ("steal_policy".to_string(), Value::Str(steal_policy.name().to_string())),
+        ("net_frames".to_string(), Value::Num(snap.net_frames as f64)),
+        ("net_replies".to_string(), Value::Num(snap.net_replies as f64)),
         ("steals".to_string(), Value::Num(snap.steals as f64)),
         ("worker_respawns".to_string(), Value::Num(snap.worker_respawns as f64)),
         ("shard_drains".to_string(), Value::Num(snap.shard_drains as f64)),

@@ -182,9 +182,11 @@ pub fn serve(args: &Args) -> Result<i32> {
     // End-to-end robot-soccer serving loop: synthetic frames → ball
     // candidates → classification via the coordinator, with the robustness
     // layer exposed: --shards N (per-model shard pools), --steal on|off
-    // (work stealing between idle and backlogged shards), --deadline-ms
-    // (shed stale patches), --queue-cap, --fallback (circuit-breaker
-    // interp fallback), --faults SPEC (or NNCG_FAULTS) for chaos drills.
+    // (work stealing between idle and backlogged shards), --steal-policy
+    // half-length|one-length|half-age|one-age, --deadline-ms (shed stale
+    // patches), --queue-cap, --fallback (circuit-breaker interp fallback),
+    // --faults SPEC (or NNCG_FAULTS) for chaos drills, --listen ADDR to
+    // serve and drive the frames over the length-prefixed TCP protocol.
     let model = load_model("ball", &weights_dir(args))?;
     let kind = EngineKind::from_name(args.get_or("engine", "nncg")).unwrap_or(EngineKind::Nncg);
     let artifacts = args.get("artifacts").map(PathBuf::from).unwrap_or_else(experiments::default_artifacts_dir);
@@ -208,12 +210,24 @@ pub fn serve(args: &Args) -> Result<i32> {
     // batching) adapts the effective width to queue depth, decaying back
     // to latency-first when the queue drains.
     let (batch, batch_adapt) = batch_policy_from_args(args)?;
+    // --steal-policy wins over NNCG_SERVE_STEAL_POLICY; both fall back to
+    // the half-length default.
+    let steal_policy = match args.get("steal-policy") {
+        Some(name) => coordinator::StealPolicy::parse(name).ok_or_else(|| {
+            anyhow::anyhow!("unknown --steal-policy {name:?} (half-length|one-length|half-age|one-age)")
+        })?,
+        None => std::env::var("NNCG_SERVE_STEAL_POLICY")
+            .ok()
+            .and_then(|v| coordinator::StealPolicy::parse(v.trim()))
+            .unwrap_or_default(),
+    };
     let cfg = coordinator::ShardConfig {
         shards: args.get_usize("shards", 1)?.max(1),
         workers_per_shard: args.get_usize("workers", 1)?.max(1),
         queue_capacity: args.get_usize("queue-cap", 1024)?,
         default_deadline: deadline,
         steal: !matches!(args.get_or("steal", "on"), "off" | "0" | "false"),
+        steal_policy,
         batch,
         batch_adapt,
         faults: faults.clone(),
@@ -233,6 +247,21 @@ pub fn serve(args: &Args) -> Result<i32> {
         router.register("ball", engine);
     }
 
+    // --listen ADDR puts the length-prefixed TCP front-end in front of the
+    // pool and drives every patch through a loopback NetClient, so the
+    // command exercises the full wire path (encode → TCP → decode → shard
+    // queue → reply frame) instead of the in-process Submitter.
+    let mut net_server = None;
+    let mut net_client = None;
+    if let Some(addr) = args.get("listen") {
+        let net_cfg = coordinator::NetConfig { faults: faults.clone(), ..coordinator::NetConfig::default() };
+        let server = coordinator::NetServer::start(handle.submitter(), addr, net_cfg)?;
+        let bound = server.local_addr();
+        eprintln!("listening on {bound} (NNCG/1 length-prefixed frames)");
+        net_client = Some(coordinator::NetClient::connect(bound).map_err(|e| anyhow::anyhow!("connect {bound}: {e}"))?);
+        net_server = Some(server);
+    }
+
     let frames = args.get_usize("frames", 30)?;
     let mut rng = XorShift64::new(99);
     let mut total_candidates = 0usize;
@@ -244,26 +273,53 @@ pub fn serve(args: &Args) -> Result<i32> {
         let cands = ball::extract_candidates(&img, &ball::BallExtractorConfig::default());
         total_candidates += cands.len();
         let patches: Vec<Tensor> = cands.iter().map(|c| ball::candidate_patch(&img, c)).collect();
-        // Per-request submit (rather than infer_burst) so shed/failed
-        // patches are counted without abandoning the rest of the frame.
-        let receivers: Vec<_> = patches
-            .into_iter()
-            .filter_map(|p| match handle.submit("ball", p, None) {
-                Ok(rx) => Some(rx),
-                Err(_) => {
-                    total_errors += 1;
-                    None
+        if let Some(client) = net_client.as_mut() {
+            // Wire path: pipeline the frame's patches (send all, then read
+            // all) so the per-connection window, not the round trip,
+            // bounds throughput. Replies arrive in submission order.
+            let mut sent = 0usize;
+            for p in &patches {
+                match client.send("ball", p) {
+                    Ok(_) => sent += 1,
+                    Err(_) => total_errors += 1,
                 }
-            })
-            .collect();
-        for rx in receivers {
-            match rx.recv().unwrap_or(Err(coordinator::ServeError::Stopped)) {
-                Ok(out) => total_balls += (out.argmax() == 1) as usize,
-                Err(_) => total_errors += 1,
+            }
+            for _ in 0..sent {
+                match client.read_reply() {
+                    Ok((_, Ok(out))) => total_balls += (out.argmax() == 1) as usize,
+                    Ok((_, Err(_))) => total_errors += 1,
+                    Err(e) => return Err(anyhow::anyhow!("serving connection lost mid-frame: {e}")),
+                }
+            }
+        } else {
+            // Per-request submit (rather than infer_burst) so shed/failed
+            // patches are counted without abandoning the rest of the frame.
+            let receivers: Vec<_> = patches
+                .into_iter()
+                .filter_map(|p| match handle.submit("ball", p, None) {
+                    Ok(rx) => Some(rx),
+                    Err(_) => {
+                        total_errors += 1;
+                        None
+                    }
+                })
+                .collect();
+            for rx in receivers {
+                match rx.recv().unwrap_or(Err(coordinator::ServeError::Stopped)) {
+                    Ok(out) => total_balls += (out.argmax() == 1) as usize,
+                    Err(_) => total_errors += 1,
+                }
             }
         }
     }
     let total_s = t0.elapsed().as_secs_f64();
+    // Close the wire before the pool: dropping the client ends its
+    // connection cleanly, stop() joins the accept/conn threads, and only
+    // then does the pool drain — so every accepted frame got its reply.
+    drop(net_client);
+    if let Some(server) = net_server.take() {
+        server.stop();
+    }
     let snap = handle.stop();
     println!(
         "frames={frames} candidates={total_candidates} classified-ball={total_balls} errors={total_errors} wall={:.3}s ({:.1} fps)",
@@ -297,6 +353,16 @@ pub fn serve(args: &Args) -> Result<i32> {
         snap.shard_readmits,
         snap.shard_drains,
         snap.stopped_replies
+    );
+    println!(
+        "net: connections={} frames={} replies={} bad-frames={} dropped-conns={} unknown-rejects={} | steal-policy={}",
+        snap.net_connections,
+        snap.net_frames,
+        snap.net_replies,
+        snap.net_bad_frames,
+        snap.net_dropped_conns,
+        snap.net_unknown_rejects,
+        steal_policy.name()
     );
     println!(
         "batching: batched-infers={} batched-requests={} batch-mean={:.2} batch-size-max={}",

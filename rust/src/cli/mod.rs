@@ -6,7 +6,7 @@
 //! nncg verify   --model ball [--trials 5]
 //! nncg run      --model ball --engine nncg|interp|xla
 //! nncg bench    --table 4|5|6|7|gpu
-//! nncg serve    --model ball --frames 50 [--shards 4 --steal on|off]
+//! nncg serve    --model ball --frames 50 [--shards 4 --steal on|off --listen 127.0.0.1:0]
 //! nncg platforms
 //! nncg export-figures [fig1|fig2|fig3|all]
 //! ```
@@ -65,8 +65,11 @@ COMMANDS:
   bench           reproduce a paper table (--table 4|5|6|7|gpu, --quick)
   serve           run the sharded serving coordinator over synthetic frames
                   (--model ball, --frames N, --engine ..., --shards N,
-                  --steal on|off, --workers N, --queue-cap N, --deadline-ms N,
-                  --fallback, --faults SPEC)
+                  --steal on|off, --steal-policy half-length|one-length|
+                  half-age|one-age (or NNCG_SERVE_STEAL_POLICY),
+                  --workers N, --queue-cap N, --deadline-ms N,
+                  --fallback, --faults SPEC, --listen ADDR to accept and
+                  drive requests over the length-prefixed TCP protocol)
   platforms       print the simulated platform models and predictions
   export-figures  write Fig. 1-3 sample images (--out DIR)
 

@@ -152,6 +152,22 @@ pub struct ServeCounters {
     pub batched_requests: AtomicU64,
     /// Largest single `infer_batch` width dispatched so far.
     pub batch_size_max: AtomicU64,
+    /// TCP connections accepted by the net front-end.
+    pub net_connections: AtomicU64,
+    /// Request frames fully decoded (accepted) off the wire. Every one of
+    /// these gets exactly one response frame attempt.
+    pub net_frames: AtomicU64,
+    /// Response frames successfully written back to clients.
+    pub net_replies: AtomicU64,
+    /// Frames rejected as protocol violations (bad magic, version skew,
+    /// oversize length, ...); the connection is closed, no reply is owed.
+    pub net_bad_frames: AtomicU64,
+    /// Connections that died mid-stream: client disconnect, slow-loris
+    /// read deadline, injected drop, or a failed response write.
+    pub net_dropped_conns: AtomicU64,
+    /// Frames for unregistered models rejected *before* pool submission
+    /// (they consume no shard-queue slot and no in-flight budget).
+    pub net_unknown_rejects: AtomicU64,
 }
 
 impl ServeCounters {
@@ -261,6 +277,13 @@ pub struct MetricsSnapshot {
     pub batched_infers: u64,
     pub batched_requests: u64,
     pub batch_size_max: u64,
+    // Net front-end counters (see [`ServeCounters`] for semantics).
+    pub net_connections: u64,
+    pub net_frames: u64,
+    pub net_replies: u64,
+    pub net_bad_frames: u64,
+    pub net_dropped_conns: u64,
+    pub net_unknown_rejects: u64,
     /// Compile-pipeline retry/timeout counts, if a [`CompileStats`] was
     /// attached (e.g. by a healing recompile path).
     pub compile_retries: u64,
@@ -393,6 +416,12 @@ impl LatencyRecorder {
             batched_infers: c.batched_infers.load(Ordering::Relaxed),
             batched_requests: c.batched_requests.load(Ordering::Relaxed),
             batch_size_max: c.batch_size_max.load(Ordering::Relaxed),
+            net_connections: c.net_connections.load(Ordering::Relaxed),
+            net_frames: c.net_frames.load(Ordering::Relaxed),
+            net_replies: c.net_replies.load(Ordering::Relaxed),
+            net_bad_frames: c.net_bad_frames.load(Ordering::Relaxed),
+            net_dropped_conns: c.net_dropped_conns.load(Ordering::Relaxed),
+            net_unknown_rejects: c.net_unknown_rejects.load(Ordering::Relaxed),
             compile_retries,
             compile_timeouts,
         }
@@ -502,6 +531,26 @@ mod tests {
         assert_eq!(s.batched_requests, 6);
         assert_eq!(s.batch_size_max, 4);
         assert!((s.batch_size_mean() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn net_counters_flow_into_snapshot() {
+        let r = LatencyRecorder::new();
+        let c = r.counters().clone();
+        ServeCounters::bump(&c.net_connections);
+        ServeCounters::bump(&c.net_frames);
+        ServeCounters::bump(&c.net_frames);
+        ServeCounters::bump(&c.net_replies);
+        ServeCounters::bump(&c.net_bad_frames);
+        ServeCounters::bump(&c.net_dropped_conns);
+        ServeCounters::bump(&c.net_unknown_rejects);
+        let s = r.snapshot();
+        assert_eq!(s.net_connections, 1);
+        assert_eq!(s.net_frames, 2);
+        assert_eq!(s.net_replies, 1);
+        assert_eq!(s.net_bad_frames, 1);
+        assert_eq!(s.net_dropped_conns, 1);
+        assert_eq!(s.net_unknown_rejects, 1);
     }
 
     #[test]

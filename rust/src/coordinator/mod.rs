@@ -30,6 +30,8 @@ mod batcher;
 mod error;
 mod fallback;
 mod metrics;
+mod net;
+pub mod proto;
 mod router;
 mod shard;
 
@@ -42,8 +44,9 @@ pub use metrics::{
     LatencyHisto, LatencyRecorder, MetricsSnapshot, ModelStats, ServeCounters, ShardSnapshot,
     ShardStats,
 };
+pub use net::{NetClient, NetConfig, NetError, NetServer, RemoteError};
 pub use router::Router;
-pub use shard::{home_shard, ShardConfig, ShardPool};
+pub use shard::{home_shard, ShardConfig, ShardPool, StealPolicy};
 
 use crate::runtime::InferenceEngine;
 use crate::tensor::Tensor;
@@ -232,6 +235,23 @@ impl Submitter {
             Err(e) => Err(e),
         }
     }
+
+    /// Whether an engine is registered under `model`. The net front-end
+    /// checks this *before* submitting so unknown-model frames never
+    /// consume a shard-queue slot.
+    pub fn has_model(&self, model: &str) -> bool {
+        self.pool.router().contains(model)
+    }
+
+    /// Registered model names, sorted (for `ModelUnknown` replies).
+    pub fn registered_models(&self) -> Vec<String> {
+        self.pool.router().models()
+    }
+
+    /// The pool's shared serving counters (net front-end instrumentation).
+    pub fn counters(&self) -> Arc<ServeCounters> {
+        Arc::clone(self.pool.metrics().counters())
+    }
 }
 
 /// Replies `EngineFailed` on drop unless defused — the exactly-once
@@ -289,6 +309,10 @@ pub fn serve_with(router: Arc<Router>, cfg: ServeConfig) -> ServerHandle {
         std::env::var("NNCG_SERVE_STEAL").as_deref().map(str::trim),
         Ok("on") | Ok("1") | Ok("true")
     );
+    let steal_policy = std::env::var("NNCG_SERVE_STEAL_POLICY")
+        .ok()
+        .and_then(|v| StealPolicy::parse(v.trim()))
+        .unwrap_or_default();
     serve_sharded(
         router,
         ShardConfig {
@@ -297,6 +321,7 @@ pub fn serve_with(router: Arc<Router>, cfg: ServeConfig) -> ServerHandle {
             queue_capacity: cfg.queue_capacity.max(1),
             default_deadline: cfg.default_deadline,
             steal,
+            steal_policy,
             faults: crate::faults::FaultPlan::from_env().ok().flatten(),
             ..ShardConfig::default()
         },

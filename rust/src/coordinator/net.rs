@@ -1,0 +1,525 @@
+//! TCP front-end over the shard pool: `std::net` only, no frameworks.
+//!
+//! [`NetServer`] accepts connections and runs a **reader thread + writer
+//! thread pair per connection**, bridged by a bounded `sync_channel` whose
+//! capacity is the per-connection in-flight window: when the window fills,
+//! the reader blocks on the channel and stops pulling bytes off the socket,
+//! so backpressure propagates to the client via TCP flow control — the
+//! server never buffers an unbounded number of requests per connection.
+//!
+//! The exactly-one-reply contract extends to the wire: every frame the
+//! reader *accepts* (decodes fully) is paired with exactly one channel
+//! entry, and the writer turns every entry into exactly one response frame
+//! — a tensor, a typed error, or `Stopped` at shutdown (the pool's
+//! `ReplyGuard` guarantees the inner receiver always yields). A frame that
+//! fails to decode is never accepted: the connection is closed without a
+//! reply, and previously accepted frames on that connection still drain
+//! through the writer.
+//!
+//! Replies on one connection are written in submission order (the channel
+//! is FIFO and the writer resolves entries in order), so a pipelining
+//! client may match replies positionally as well as by request id.
+
+use super::error::ServeError;
+use super::metrics::ServeCounters;
+use super::proto::{self, FrameError, ResponseBody};
+use super::Submitter;
+use crate::faults::{FaultPlan, FaultSite};
+use crate::tensor::Tensor;
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Poll interval for the stoppable accept loop and the idle first-byte
+/// wait: small enough that `stop()` latency is invisible, large enough
+/// that an idle server burns no measurable CPU.
+const TICK: Duration = Duration::from_millis(20);
+
+/// Tuning knobs for a [`NetServer`].
+#[derive(Clone)]
+pub struct NetConfig {
+    /// Deadline for completing one frame once its first byte arrived — a
+    /// slow-loris client that trickles a frame slower than this is
+    /// disconnected. Idle time *between* frames is not limited.
+    pub read_timeout: Duration,
+    /// Socket write timeout for response frames.
+    pub write_timeout: Duration,
+    /// Per-connection in-flight window (accepted-but-unanswered frames).
+    pub window: usize,
+    /// Optional fault plan consulted at the net fault sites
+    /// ([`FaultSite::NetDropConn`], [`FaultSite::NetPartialWrite`],
+    /// [`FaultSite::NetSlowRead`]).
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            window: 64,
+            faults: None,
+        }
+    }
+}
+
+/// Client-side failure taxonomy for [`NetClient`].
+#[derive(Debug)]
+pub enum NetError {
+    /// The byte stream violated the protocol.
+    Frame(FrameError),
+    /// A transport-level error outside framing.
+    Io(io::Error),
+    /// The server closed the connection at a frame boundary.
+    Closed,
+    /// A reply arrived for a different request id than expected.
+    IdMismatch { sent: u64, got: u64 },
+    /// The server answered with a typed error status.
+    Remote(RemoteError),
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetError::Frame(e) => write!(f, "protocol error: {e}"),
+            NetError::Io(e) => write!(f, "transport error: {e}"),
+            NetError::Closed => write!(f, "server closed the connection"),
+            NetError::IdMismatch { sent, got } => {
+                write!(f, "reply id mismatch: sent {sent}, got {got}")
+            }
+            NetError::Remote(e) => write!(f, "server error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// A typed error the server sent back: the wire status byte plus the
+/// human-readable message body.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RemoteError {
+    pub status: u8,
+    pub message: String,
+}
+
+impl RemoteError {
+    /// The `ServeError::kind` name the status byte maps to ("unknown" is
+    /// unreachable for replies produced by this crate's server).
+    pub fn kind(&self) -> &'static str {
+        proto::status_name(self.status).unwrap_or("unknown")
+    }
+}
+
+impl fmt::Display for RemoteError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.kind(), self.message)
+    }
+}
+
+/// One reply owed on a connection, queued in submission order. The
+/// channel holding these IS the in-flight window.
+enum ConnReply {
+    /// Submitted into the pool; the receiver will yield exactly one result.
+    Waiting(u64, mpsc::Receiver<Result<Tensor, ServeError>>),
+    /// Resolved before (or instead of) pool submission.
+    Ready(u64, Result<Tensor, ServeError>),
+}
+
+/// A TCP server speaking the `proto` framing over a shared [`Submitter`].
+///
+/// Dropping the server begins a stop; `stop()` joins the accept loop and
+/// every connection thread.
+pub struct NetServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and start
+    /// accepting. Connections submit into the pool behind `submitter`.
+    pub fn start(submitter: Submitter, addr: &str, cfg: NetConfig) -> anyhow::Result<NetServer> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| anyhow::anyhow!("local_addr: {e}"))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| anyhow::anyhow!("set_nonblocking: {e}"))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let counters = submitter.counters();
+        let accept = thread::Builder::new()
+            .name("nncg-net-accept".into())
+            .spawn(move || accept_loop(listener, submitter, counters, cfg, stop_flag))
+            .map_err(|e| anyhow::anyhow!("spawn accept thread: {e}"))?;
+        Ok(NetServer { addr: local, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves the ephemeral port of `"...:0"` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Flag the server to stop without waiting. Use before stopping the
+    /// pool so in-flight frames are answered `Stopped` rather than racing
+    /// new accepts against pool shutdown; follow with [`Self::stop`].
+    pub fn begin_stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Stop accepting and join the accept loop and all connection threads.
+    /// Bounded: idle connections notice within [`TICK`]; a connection
+    /// mid-frame finishes within the read deadline.
+    pub fn stop(mut self) {
+        self.begin_stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.begin_stop();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    submitter: Submitter,
+    counters: Arc<ServeCounters>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                ServeCounters::bump(&counters.net_connections);
+                let submitter = submitter.clone();
+                let counters = Arc::clone(&counters);
+                let cfg = cfg.clone();
+                let stop = Arc::clone(&stop);
+                let h = thread::Builder::new()
+                    .name("nncg-net-conn".into())
+                    .spawn(move || conn_loop(stream, submitter, counters, cfg, stop));
+                match h {
+                    Ok(h) => conns.push(h),
+                    Err(_) => { /* spawn failed: connection dropped on the floor */ }
+                }
+                conns.retain(|h| !h.is_finished());
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => thread::sleep(TICK),
+            Err(_) => thread::sleep(TICK),
+        }
+    }
+    drop(listener);
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// `Read` adapter giving one frame a hard completion deadline. The
+/// underlying stream keeps its short [`TICK`] read timeout; this loops on
+/// would-block until the deadline, then surfaces `TimedOut` — which the
+/// decoder maps to [`FrameError::TimedOut`] (the slow-loris signal).
+struct DeadlineReader<'a> {
+    stream: &'a TcpStream,
+    deadline: Instant,
+}
+
+impl Read for DeadlineReader<'_> {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        loop {
+            if Instant::now() >= self.deadline {
+                return Err(io::Error::new(io::ErrorKind::TimedOut, "frame read deadline"));
+            }
+            match (&mut self.stream).read(buf) {
+                Ok(n) => return Ok(n),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock
+                            | io::ErrorKind::TimedOut
+                            | io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    continue
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+fn conn_loop(
+    stream: TcpStream,
+    submitter: Submitter,
+    counters: Arc<ServeCounters>,
+    cfg: NetConfig,
+    stop: Arc<AtomicBool>,
+) {
+    let _ = stream.set_nodelay(true);
+    // Short tick so the idle wait can poll the stop flag; per-frame
+    // deadlines are enforced by DeadlineReader on top of this.
+    let _ = stream.set_read_timeout(Some(TICK));
+    let _ = stream.set_write_timeout(Some(cfg.write_timeout));
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => {
+            ServeCounters::bump(&counters.net_dropped_conns);
+            return;
+        }
+    };
+    let (tx, rx) = mpsc::sync_channel::<ConnReply>(cfg.window.max(1));
+    let writer_counters = Arc::clone(&counters);
+    let writer_faults = cfg.faults.clone();
+    let writer = thread::Builder::new()
+        .name("nncg-net-write".into())
+        .spawn(move || writer_loop(writer_stream, rx, writer_counters, writer_faults));
+    let writer = match writer {
+        Ok(w) => w,
+        Err(_) => {
+            ServeCounters::bump(&counters.net_dropped_conns);
+            return;
+        }
+    };
+
+    'conn: loop {
+        // Idle wait for the first byte of the next frame: no deadline, but
+        // the stop flag is polled every TICK.
+        let first = loop {
+            if stop.load(Ordering::SeqCst) {
+                break 'conn;
+            }
+            let mut b = [0u8; 1];
+            match (&stream).read(&mut b) {
+                Ok(0) => break 'conn, // clean close at a frame boundary
+                Ok(_) => break b[0],
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        io::ErrorKind::WouldBlock
+                            | io::ErrorKind::TimedOut
+                            | io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    continue
+                }
+                Err(_) => {
+                    ServeCounters::bump(&counters.net_dropped_conns);
+                    break 'conn;
+                }
+            }
+        };
+
+        // Fault seam: a frame has started arriving.
+        if let Some(plan) = &cfg.faults {
+            if let Some(d) = plan.maybe_delay(FaultSite::NetSlowRead) {
+                thread::sleep(d);
+            }
+            if plan.should_fire(FaultSite::NetDropConn) {
+                ServeCounters::bump(&counters.net_dropped_conns);
+                break 'conn;
+            }
+        }
+
+        let mut dr =
+            DeadlineReader { stream: &stream, deadline: Instant::now() + cfg.read_timeout };
+        match proto::read_request_resuming(first, &mut dr) {
+            Ok(frame) => {
+                // Frame accepted: from here it gets exactly one reply.
+                ServeCounters::bump(&counters.net_frames);
+                let id = frame.id;
+                // Pre-submission registry check: an unknown model must not
+                // consume a shard-queue slot (or count as a pool request).
+                if !submitter.has_model(&frame.model) {
+                    ServeCounters::bump(&counters.net_unknown_rejects);
+                    let err = ServeError::ModelUnknown {
+                        model: frame.model,
+                        registered: submitter.registered_models(),
+                    };
+                    if tx.send(ConnReply::Ready(id, Err(err))).is_err() {
+                        break 'conn;
+                    }
+                    continue;
+                }
+                let model = frame.model.clone();
+                let entry = match frame.into_tensor() {
+                    Ok(input) => match submitter.submit(&model, input, None) {
+                        Ok(pool_rx) => ConnReply::Waiting(id, pool_rx),
+                        Err(e) => ConnReply::Ready(id, Err(e)),
+                    },
+                    // Unreachable for frames this decoder accepted (shape
+                    // is validated); kept typed rather than panicking.
+                    Err(e) => ConnReply::Ready(
+                        id,
+                        Err(ServeError::EngineFailed { model, reason: e.to_string() }),
+                    ),
+                };
+                // Blocking send = the in-flight window; backpressure stops
+                // the reader until the writer drains a slot.
+                if tx.send(entry).is_err() {
+                    break 'conn;
+                }
+            }
+            // Mid-frame transport failures: slow-loris deadline, client
+            // disconnect, resets. The frame was never accepted, no reply.
+            Err(FrameError::TimedOut) | Err(FrameError::Truncated) | Err(FrameError::Io(_)) => {
+                ServeCounters::bump(&counters.net_dropped_conns);
+                break 'conn;
+            }
+            // Protocol violations: typed rejection, connection closed.
+            Err(_) => {
+                ServeCounters::bump(&counters.net_bad_frames);
+                break 'conn;
+            }
+        }
+    }
+
+    // Close the window; the writer drains every accepted frame (answering
+    // still-queued pool work — `Stopped` if the pool shut down) then exits.
+    drop(tx);
+    let _ = writer.join();
+    let _ = stream.shutdown(Shutdown::Both);
+}
+
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: mpsc::Receiver<ConnReply>,
+    counters: Arc<ServeCounters>,
+    faults: Option<Arc<FaultPlan>>,
+) {
+    for entry in rx.iter() {
+        let (id, result) = match entry {
+            ConnReply::Ready(id, r) => (id, r),
+            // The pool's ReplyGuard makes recv yield exactly once; a
+            // severed sender (timed-out shutdown) still maps to Stopped.
+            ConnReply::Waiting(id, pool_rx) => {
+                (id, pool_rx.recv().unwrap_or(Err(ServeError::Stopped)))
+            }
+        };
+        let buf = match &result {
+            Ok(t) => proto::encode_ok(id, t).unwrap_or_else(|e| {
+                proto::encode_err(
+                    id,
+                    &ServeError::EngineFailed {
+                        model: String::new(),
+                        reason: format!("output exceeds protocol limits: {e}"),
+                    },
+                )
+            }),
+            Err(e) => proto::encode_err(id, e),
+        };
+        let wrote = match faults
+            .as_deref()
+            .and_then(|p| p.maybe_delay(FaultSite::NetPartialWrite))
+        {
+            Some(delay) => {
+                // Write the frame in two halves with a stall between them:
+                // clients must reassemble a reply split mid-length-prefix.
+                let mid = buf.len() / 2;
+                stream.write_all(&buf[..mid]).and_then(|_| {
+                    let _ = stream.flush();
+                    thread::sleep(delay);
+                    stream.write_all(&buf[mid..])
+                })
+            }
+            None => stream.write_all(&buf),
+        };
+        match wrote {
+            Ok(()) => ServeCounters::bump(&counters.net_replies),
+            Err(_) => {
+                // Client gone: remaining window entries still must be
+                // resolved (pool receivers drained) so no reply is lost
+                // pool-side, but nothing more can be written.
+                ServeCounters::bump(&counters.net_dropped_conns);
+                for entry in rx.iter() {
+                    if let ConnReply::Waiting(_, pool_rx) = entry {
+                        let _ = pool_rx.recv();
+                    }
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Blocking client for the `proto` framing, used by tests, the load bench
+/// (`NNCG_LOAD_TCP=1`), and `nncg serve --listen`. Supports pipelining:
+/// `send` several frames, then `read_reply` each (replies arrive in
+/// submission order per connection).
+pub struct NetClient {
+    stream: TcpStream,
+    next_id: u64,
+}
+
+impl NetClient {
+    /// Connect and configure generous (30 s) transport timeouts.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<NetClient, NetError> {
+        let stream = TcpStream::connect(addr).map_err(NetError::Io)?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(30)));
+        Ok(NetClient { stream, next_id: 0 })
+    }
+
+    /// Send one request frame; returns the request id to match the reply.
+    pub fn send(&mut self, model: &str, input: &Tensor) -> Result<u64, NetError> {
+        self.next_id += 1;
+        let id = self.next_id;
+        let buf = proto::encode_request(id, model, input.dims(), input.data())
+            .map_err(NetError::Frame)?;
+        self.stream.write_all(&buf).map_err(NetError::Io)?;
+        Ok(id)
+    }
+
+    /// Read the next reply frame: `(request id, tensor or typed remote
+    /// error)`. [`NetError::Closed`] when the server hung up cleanly.
+    pub fn read_reply(&mut self) -> Result<(u64, Result<Tensor, RemoteError>), NetError> {
+        match proto::read_response(&mut self.stream) {
+            Ok(Some(f)) => match f.body {
+                ResponseBody::Tensor { dims, data } => {
+                    let t = Tensor::from_vec(&dims, data)
+                        .map_err(|e| NetError::Frame(FrameError::Io(e.to_string())))?;
+                    Ok((f.id, Ok(t)))
+                }
+                ResponseBody::Message(message) => {
+                    Ok((f.id, Err(RemoteError { status: f.status, message })))
+                }
+            },
+            Ok(None) => Err(NetError::Closed),
+            Err(e) => Err(NetError::Frame(e)),
+        }
+    }
+
+    /// One round trip: send, read, check the id echo.
+    pub fn infer(&mut self, model: &str, input: &Tensor) -> Result<Tensor, NetError> {
+        let sent = self.send(model, input)?;
+        let (got, result) = self.read_reply()?;
+        if got != sent {
+            return Err(NetError::IdMismatch { sent, got });
+        }
+        result.map_err(NetError::Remote)
+    }
+
+    /// Write raw bytes, bypassing the encoder — the torture tests use this
+    /// to send malformed and partial frames.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<(), NetError> {
+        self.stream.write_all(bytes).map_err(NetError::Io)
+    }
+
+    /// Half- or full-close the socket (mid-frame disconnect scenarios).
+    pub fn shutdown(&self, how: Shutdown) -> io::Result<()> {
+        self.stream.shutdown(how)
+    }
+}

@@ -1,0 +1,515 @@
+//! Wire protocol for the TCP serving front-end: a minimal length-prefixed
+//! binary framing, all multi-byte fields **little-endian**.
+//!
+//! Request frame:
+//!
+//! ```text
+//! offset size      field
+//! 0      4         magic "NNCG"
+//! 4      1         version (= 1)
+//! 5      8         request id (u64 LE, client-chosen, echoed in the reply)
+//! 13     2         model-name length M (u16 LE, <= MAX_MODEL_LEN)
+//! 15     M         model name (UTF-8)
+//! ..     1         ndims D (1 ..= MAX_DIMS)
+//! ..     4*D       dims (u32 LE each)
+//! ..     4         payload length N in f32 elements (u32 LE, == prod(dims),
+//!                  <= MAX_ELEMS)
+//! ..     4*N       f32 payload (LE)
+//! ```
+//!
+//! Response frame:
+//!
+//! ```text
+//! offset size      field
+//! 0      4         magic "NNCG"
+//! 4      1         version (= 1)
+//! 5      8         request id (echo)
+//! 13     1         status byte (0 = ok, else ServeError kind; see status_of)
+//! -- status == 0 --
+//! 14     1         ndims D
+//! ..     4*D       dims (u32 LE each)
+//! ..     4         payload length N in f32 elements (u32 LE)
+//! ..     4*N       f32 payload (LE)
+//! -- status != 0 --
+//! 14     4         message length (u32 LE, <= MAX_MSG_LEN)
+//! ..     ..        message (UTF-8, the error's Display text)
+//! ```
+//!
+//! Decoding works from any [`std::io::Read`] and tolerates arbitrary
+//! segmentation (1-byte reads, split length prefixes, coalesced frames):
+//! `read_exact` reassembles. Every malformed input maps to a typed
+//! [`FrameError`]; decode never panics and all lengths are bounded before
+//! allocation, so an adversarial length prefix cannot OOM the server.
+
+use super::error::ServeError;
+use crate::tensor::Tensor;
+use std::fmt;
+use std::io::{self, Read};
+
+/// Frame magic: ASCII "NNCG".
+pub const MAGIC: [u8; 4] = *b"NNCG";
+/// Protocol version; a skew is rejected with [`FrameError::BadVersion`].
+pub const VERSION: u8 = 1;
+/// Longest accepted model name, in bytes.
+pub const MAX_MODEL_LEN: usize = 256;
+/// Most accepted tensor dimensions.
+pub const MAX_DIMS: usize = 8;
+/// Largest accepted tensor payload, in f32 elements (64 MiB of data).
+pub const MAX_ELEMS: u64 = 1 << 24;
+/// Longest accepted error-message body, in bytes.
+pub const MAX_MSG_LEN: usize = 1 << 16;
+
+/// Status byte for a successful reply; error statuses are 1..=6, one per
+/// [`ServeError::kind`] (see [`status_of`] / [`status_name`]).
+pub const STATUS_OK: u8 = 0;
+
+/// The status byte a [`ServeError`] maps to on the wire.
+pub fn status_of(e: &ServeError) -> u8 {
+    match e {
+        ServeError::DeadlineExceeded { .. } => 1,
+        ServeError::QueueFull { .. } => 2,
+        ServeError::EngineFailed { .. } => 3,
+        ServeError::ModelUnknown { .. } => 4,
+        ServeError::Degraded { .. } => 5,
+        ServeError::Stopped => 6,
+    }
+}
+
+/// Stable name for a status byte ("ok" plus the `ServeError::kind` strings);
+/// `None` for a byte no release has ever emitted.
+pub fn status_name(status: u8) -> Option<&'static str> {
+    match status {
+        STATUS_OK => Some("ok"),
+        1 => Some("deadline-exceeded"),
+        2 => Some("queue-full"),
+        3 => Some("engine-failed"),
+        4 => Some("model-unknown"),
+        5 => Some("degraded"),
+        6 => Some("stopped"),
+        _ => None,
+    }
+}
+
+/// Why a byte stream failed to decode as a frame (or a frame failed to
+/// encode: the same limits apply on both sides).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The first four bytes were not [`MAGIC`].
+    BadMagic([u8; 4]),
+    /// The version byte differs from [`VERSION`].
+    BadVersion { got: u8 },
+    /// Model-name length exceeds [`MAX_MODEL_LEN`].
+    ModelTooLong { len: usize },
+    /// ndims is zero or exceeds [`MAX_DIMS`].
+    BadDims { ndims: usize },
+    /// Declared payload length exceeds [`MAX_ELEMS`].
+    Oversize { elems: u64 },
+    /// Declared payload length disagrees with the product of the dims.
+    CountMismatch { count: u64, product: u64 },
+    /// Error-message length exceeds [`MAX_MSG_LEN`].
+    MessageTooLong { len: usize },
+    /// Unknown response status byte.
+    BadStatus { got: u8 },
+    /// A name or message field was not valid UTF-8.
+    BadUtf8,
+    /// The stream ended mid-frame.
+    Truncated,
+    /// The transport's read deadline fired mid-frame (slow-loris).
+    TimedOut,
+    /// Any other transport error, by `io::ErrorKind` name.
+    Io(String),
+}
+
+impl FrameError {
+    /// Stable short name for metrics/logs.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            FrameError::BadMagic(_) => "bad-magic",
+            FrameError::BadVersion { .. } => "bad-version",
+            FrameError::ModelTooLong { .. } => "model-too-long",
+            FrameError::BadDims { .. } => "bad-dims",
+            FrameError::Oversize { .. } => "oversize",
+            FrameError::CountMismatch { .. } => "count-mismatch",
+            FrameError::MessageTooLong { .. } => "message-too-long",
+            FrameError::BadStatus { .. } => "bad-status",
+            FrameError::BadUtf8 => "bad-utf8",
+            FrameError::Truncated => "truncated",
+            FrameError::TimedOut => "timed-out",
+            FrameError::Io(_) => "io",
+        }
+    }
+
+    fn from_io(e: io::Error) -> FrameError {
+        match e.kind() {
+            io::ErrorKind::UnexpectedEof => FrameError::Truncated,
+            io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => FrameError::TimedOut,
+            kind => FrameError::Io(format!("{kind:?}")),
+        }
+    }
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:?}"),
+            FrameError::BadVersion { got } => {
+                write!(f, "protocol version skew: got {got}, want {VERSION}")
+            }
+            FrameError::ModelTooLong { len } => {
+                write!(f, "model name length {len} exceeds {MAX_MODEL_LEN}")
+            }
+            FrameError::BadDims { ndims } => {
+                write!(f, "tensor rank {ndims} outside 1..={MAX_DIMS}")
+            }
+            FrameError::Oversize { elems } => {
+                write!(f, "payload length {elems} exceeds {MAX_ELEMS} elements")
+            }
+            FrameError::CountMismatch { count, product } => {
+                write!(f, "payload length {count} != dims product {product}")
+            }
+            FrameError::MessageTooLong { len } => {
+                write!(f, "message length {len} exceeds {MAX_MSG_LEN}")
+            }
+            FrameError::BadStatus { got } => write!(f, "unknown response status {got}"),
+            FrameError::BadUtf8 => write!(f, "field is not valid UTF-8"),
+            FrameError::Truncated => write!(f, "stream ended mid-frame"),
+            FrameError::TimedOut => write!(f, "read deadline fired mid-frame"),
+            FrameError::Io(kind) => write!(f, "transport error ({kind})"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// A decoded request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    pub id: u64,
+    pub model: String,
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl RequestFrame {
+    /// Rebuild the payload tensor (the decode already validated that the
+    /// data length equals the dims product).
+    pub fn into_tensor(self) -> anyhow::Result<Tensor> {
+        Tensor::from_vec(&self.dims, self.data)
+    }
+}
+
+/// A decoded response frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseFrame {
+    pub id: u64,
+    pub status: u8,
+    pub body: ResponseBody,
+}
+
+/// Body of a response: a tensor for `STATUS_OK`, a message otherwise.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ResponseBody {
+    Tensor { dims: Vec<usize>, data: Vec<f32> },
+    Message(String),
+}
+
+fn check_shape(dims: &[usize], count: u64) -> Result<(), FrameError> {
+    if dims.is_empty() || dims.len() > MAX_DIMS {
+        return Err(FrameError::BadDims { ndims: dims.len() });
+    }
+    let mut product: u64 = 1;
+    for &d in dims {
+        product = product.saturating_mul(d as u64);
+    }
+    if product > MAX_ELEMS || count > MAX_ELEMS {
+        return Err(FrameError::Oversize { elems: product.max(count) });
+    }
+    if count != product {
+        return Err(FrameError::CountMismatch { count, product });
+    }
+    Ok(())
+}
+
+fn put_shape_and_data(buf: &mut Vec<u8>, dims: &[usize], data: &[f32]) {
+    buf.push(dims.len() as u8);
+    for &d in dims {
+        buf.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode a request frame. Fails (typed) when a field exceeds the protocol
+/// limits — the same bounds the decoder enforces.
+pub fn encode_request(
+    id: u64,
+    model: &str,
+    dims: &[usize],
+    data: &[f32],
+) -> Result<Vec<u8>, FrameError> {
+    if model.len() > MAX_MODEL_LEN {
+        return Err(FrameError::ModelTooLong { len: model.len() });
+    }
+    check_shape(dims, data.len() as u64)?;
+    let mut buf = Vec::with_capacity(15 + model.len() + 5 + 4 * dims.len() + 4 * data.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.push(VERSION);
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.extend_from_slice(&(model.len() as u16).to_le_bytes());
+    buf.extend_from_slice(model.as_bytes());
+    put_shape_and_data(&mut buf, dims, data);
+    Ok(buf)
+}
+
+/// Encode a success response carrying the output tensor.
+pub fn encode_ok(id: u64, output: &Tensor) -> Result<Vec<u8>, FrameError> {
+    check_shape(output.dims(), output.data().len() as u64)?;
+    let mut buf = Vec::with_capacity(14 + 5 + 4 * output.dims().len() + 4 * output.data().len());
+    buf.extend_from_slice(&MAGIC);
+    buf.push(VERSION);
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.push(STATUS_OK);
+    put_shape_and_data(&mut buf, output.dims(), output.data());
+    Ok(buf)
+}
+
+/// Encode a typed-error response. Infallible: the status byte comes from
+/// [`status_of`] and an over-long Display text is truncated to the limit
+/// rather than failing the reply.
+pub fn encode_err(id: u64, err: &ServeError) -> Vec<u8> {
+    let mut msg = err.to_string();
+    if msg.len() > MAX_MSG_LEN {
+        // Truncate on a char boundary so the message stays valid UTF-8.
+        let mut cut = MAX_MSG_LEN;
+        while !msg.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        msg.truncate(cut);
+    }
+    let mut buf = Vec::with_capacity(18 + msg.len());
+    buf.extend_from_slice(&MAGIC);
+    buf.push(VERSION);
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.push(status_of(err));
+    buf.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    buf.extend_from_slice(msg.as_bytes());
+    buf
+}
+
+fn read_bytes(r: &mut impl Read, buf: &mut [u8]) -> Result<(), FrameError> {
+    r.read_exact(buf).map_err(FrameError::from_io)
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16, FrameError> {
+    let mut b = [0u8; 2];
+    read_bytes(r, &mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32, FrameError> {
+    let mut b = [0u8; 4];
+    read_bytes(r, &mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64, FrameError> {
+    let mut b = [0u8; 8];
+    read_bytes(r, &mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u8(r: &mut impl Read) -> Result<u8, FrameError> {
+    let mut b = [0u8; 1];
+    read_bytes(r, &mut b)?;
+    Ok(b[0])
+}
+
+/// Read the first byte of a frame, distinguishing a clean close (`None`)
+/// from mid-stream errors. Retries `Interrupted`.
+fn read_first_byte(r: &mut impl Read) -> Result<Option<u8>, FrameError> {
+    let mut b = [0u8; 1];
+    loop {
+        match r.read(&mut b) {
+            Ok(0) => return Ok(None), // EOF at a frame boundary
+            Ok(_) => return Ok(Some(b[0])),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::from_io(e)),
+        }
+    }
+}
+
+fn read_magic_version(first: u8, r: &mut impl Read) -> Result<(), FrameError> {
+    let mut magic = [first, 0, 0, 0];
+    read_bytes(r, &mut magic[1..])?;
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let version = read_u8(r)?;
+    if version != VERSION {
+        return Err(FrameError::BadVersion { got: version });
+    }
+    Ok(())
+}
+
+/// Read `(dims, data)` — the shared tail of requests and ok-responses —
+/// validating every length before allocating.
+fn read_shape_and_data(r: &mut impl Read) -> Result<(Vec<usize>, Vec<f32>), FrameError> {
+    let ndims = read_u8(r)? as usize;
+    if ndims == 0 || ndims > MAX_DIMS {
+        return Err(FrameError::BadDims { ndims });
+    }
+    let mut dims = Vec::with_capacity(ndims);
+    for _ in 0..ndims {
+        dims.push(read_u32(r)? as usize);
+    }
+    let count = read_u32(r)? as u64;
+    check_shape(&dims, count)?;
+    let mut data = Vec::with_capacity(count as usize);
+    let mut b = [0u8; 4];
+    for _ in 0..count {
+        read_bytes(r, &mut b)?;
+        data.push(f32::from_le_bytes(b));
+    }
+    Ok((dims, data))
+}
+
+/// Decode one request frame from a reader; `Ok(None)` on a clean EOF at a
+/// frame boundary. Any short read mid-frame is [`FrameError::Truncated`].
+pub fn read_request(r: &mut impl Read) -> Result<Option<RequestFrame>, FrameError> {
+    let Some(first) = read_first_byte(r)? else { return Ok(None) };
+    read_request_resuming(first, r).map(Some)
+}
+
+/// Decode a request whose first byte was already consumed — the server
+/// peels one byte off the stream so idle waiting (no frame started, stop
+/// flag polled) is separate from the framed read deadline.
+pub fn read_request_resuming(first: u8, r: &mut impl Read) -> Result<RequestFrame, FrameError> {
+    read_magic_version(first, r)?;
+    let id = read_u64(r)?;
+    let model_len = read_u16(r)? as usize;
+    if model_len > MAX_MODEL_LEN {
+        return Err(FrameError::ModelTooLong { len: model_len });
+    }
+    let mut name = vec![0u8; model_len];
+    read_bytes(r, &mut name)?;
+    let model = String::from_utf8(name).map_err(|_| FrameError::BadUtf8)?;
+    let (dims, data) = read_shape_and_data(r)?;
+    Ok(RequestFrame { id, model, dims, data })
+}
+
+/// Decode one response frame; `Ok(None)` on a clean EOF at a frame
+/// boundary.
+pub fn read_response(r: &mut impl Read) -> Result<Option<ResponseFrame>, FrameError> {
+    let Some(first) = read_first_byte(r)? else { return Ok(None) };
+    read_magic_version(first, r)?;
+    let id = read_u64(r)?;
+    let status = read_u8(r)?;
+    if status_name(status).is_none() {
+        return Err(FrameError::BadStatus { got: status });
+    }
+    let body = if status == STATUS_OK {
+        let (dims, data) = read_shape_and_data(r)?;
+        ResponseBody::Tensor { dims, data }
+    } else {
+        let len = read_u32(r)? as usize;
+        if len > MAX_MSG_LEN {
+            return Err(FrameError::MessageTooLong { len });
+        }
+        let mut msg = vec![0u8; len];
+        read_bytes(r, &mut msg)?;
+        ResponseBody::Message(String::from_utf8(msg).map_err(|_| FrameError::BadUtf8)?)
+    };
+    Ok(Some(ResponseFrame { id, status, body }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn request_round_trips() {
+        let buf = encode_request(7, "ball", &[2, 2], &[1.0, -2.5, 0.0, 3.25]).unwrap();
+        let f = read_request(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(f.id, 7);
+        assert_eq!(f.model, "ball");
+        assert_eq!(f.dims, vec![2, 2]);
+        assert_eq!(f.data, vec![1.0, -2.5, 0.0, 3.25]);
+        // Clean EOF after the frame.
+        let mut c = Cursor::new(&buf);
+        read_request(&mut c).unwrap();
+        assert!(read_request(&mut c).unwrap().is_none());
+    }
+
+    #[test]
+    fn responses_round_trip_ok_and_err() {
+        let t = Tensor::from_vec(&[1, 2], vec![4.0, 5.0]).unwrap();
+        let buf = encode_ok(9, &t).unwrap();
+        let f = read_response(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(f.id, 9);
+        assert_eq!(f.status, STATUS_OK);
+        assert_eq!(f.body, ResponseBody::Tensor { dims: vec![1, 2], data: vec![4.0, 5.0] });
+
+        let e = ServeError::QueueFull { capacity: 3 };
+        let buf = encode_err(11, &e);
+        let f = read_response(&mut Cursor::new(&buf)).unwrap().unwrap();
+        assert_eq!(f.status, status_of(&e));
+        match f.body {
+            ResponseBody::Message(m) => assert!(m.contains("capacity 3"), "{m}"),
+            other => panic!("expected message body, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn status_bytes_match_serve_error_kinds() {
+        let errs = [
+            ServeError::DeadlineExceeded { model: "m".into(), late_by_us: 1 },
+            ServeError::QueueFull { capacity: 1 },
+            ServeError::EngineFailed { model: "m".into(), reason: "r".into() },
+            ServeError::ModelUnknown { model: "m".into(), registered: vec![] },
+            ServeError::Degraded {
+                model: "m".into(),
+                primary_error: "p".into(),
+                fallback_error: "f".into(),
+            },
+            ServeError::Stopped,
+        ];
+        for e in &errs {
+            let s = status_of(e);
+            assert_ne!(s, STATUS_OK);
+            assert_eq!(status_name(s), Some(e.kind()), "status byte names the kind");
+        }
+        assert_eq!(status_name(STATUS_OK), Some("ok"));
+        assert_eq!(status_name(200), None);
+    }
+
+    #[test]
+    fn encode_enforces_the_same_limits_as_decode() {
+        let long = "m".repeat(MAX_MODEL_LEN + 1);
+        assert_eq!(
+            encode_request(1, &long, &[1], &[0.0]),
+            Err(FrameError::ModelTooLong { len: MAX_MODEL_LEN + 1 })
+        );
+        assert!(matches!(
+            encode_request(1, "m", &[], &[]),
+            Err(FrameError::BadDims { ndims: 0 })
+        ));
+        assert!(matches!(
+            encode_request(1, "m", &[1, 2], &[0.0; 3]),
+            Err(FrameError::CountMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn oversize_message_is_truncated_not_dropped() {
+        let e = ServeError::EngineFailed { model: "m".into(), reason: "x".repeat(MAX_MSG_LEN * 2) };
+        let buf = encode_err(1, &e);
+        let f = read_response(&mut Cursor::new(&buf)).unwrap().unwrap();
+        match f.body {
+            ResponseBody::Message(m) => assert_eq!(m.len(), MAX_MSG_LEN),
+            other => panic!("expected message body, got {other:?}"),
+        }
+    }
+}

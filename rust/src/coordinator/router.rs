@@ -50,6 +50,13 @@ impl Router {
         self.engine(model)?.infer(input)
     }
 
+    /// Whether `model` has a registered engine — a lock-scoped existence
+    /// check (no `Arc` clone) for pre-admission gates like the net
+    /// front-end's unknown-model rejection.
+    pub fn contains(&self, model: &str) -> bool {
+        self.read().contains_key(model)
+    }
+
     /// Registered model names, sorted.
     pub fn models(&self) -> Vec<String> {
         let mut names: Vec<String> = self.read().keys().cloned().collect();

@@ -10,8 +10,9 @@
 //! next healthy shard only when the home shard is draining or ejected by
 //! its breaker.
 //!
-//! Work stealing: an idle worker whose own queue is empty takes the oldest
-//! half of the most backlogged peer queue. Steals pop from the queue
+//! Work stealing: an idle worker whose own queue is empty takes work from
+//! a backlogged peer queue — victim and amount per [`StealPolicy`]
+//! (default: the oldest half of the longest queue). Steals pop from the queue
 //! *front*, exactly like the owner, so a queue is always consumed in
 //! submission order no matter who pops — stealing rebalances load without
 //! reordering any submitter's dequeue sequence. (Replies can still
@@ -58,6 +59,9 @@ pub struct ShardConfig {
     pub default_deadline: Option<Duration>,
     /// Enable work stealing between idle and backlogged shards.
     pub steal: bool,
+    /// How a thief picks its victim and how much it takes per steal
+    /// (`NNCG_SERVE_STEAL_POLICY` selects this in the env-driven paths).
+    pub steal_policy: StealPolicy,
     /// Per-shard dequeue batching policy: `max_batch` requests are popped
     /// per dequeue and same-model runs execute through one
     /// `engine.infer_batch` call; `max_wait` is how long a dequeue lingers
@@ -87,6 +91,7 @@ impl Default for ShardConfig {
             queue_capacity: 1024,
             default_deadline: None,
             steal: true,
+            steal_policy: StealPolicy::default(),
             batch: BatcherPolicy::immediate(),
             batch_adapt: false,
             // Shard ejection wants more evidence than an engine-level
@@ -101,6 +106,97 @@ impl Default for ShardConfig {
 /// shard pool and per-model FIFO order.
 pub fn home_shard(model: &str, shards: usize) -> usize {
     (fxhash::hash_str(model) % shards.max(1) as u64) as usize
+}
+
+/// Work-stealing policy: victim selection × steal amount (ROADMAP 4(c)).
+///
+/// Every variant preserves the ordering contract — steals take from the
+/// *front* of the victim's FIFO, so per-submitter dequeue order is
+/// unchanged regardless of policy (pinned by the shard property test).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StealPolicy {
+    /// Victim = longest queue; take the older half of its backlog. The
+    /// historical behavior and the default.
+    #[default]
+    HalfLength,
+    /// Victim = longest queue; take one request. Minimal disruption,
+    /// more steal round-trips under sustained imbalance.
+    OneLength,
+    /// Victim = queue whose front request was admitted earliest (oldest
+    /// head-of-line); take the older half.
+    HalfAge,
+    /// Victim = oldest head-of-line; take one request. Closest to a pure
+    /// "finish the longest-waiting work first" policy.
+    OneAge,
+}
+
+impl StealPolicy {
+    /// All policies, in stable order (A/B sweeps iterate this).
+    pub const ALL: [StealPolicy; 4] = [
+        StealPolicy::HalfLength,
+        StealPolicy::OneLength,
+        StealPolicy::HalfAge,
+        StealPolicy::OneAge,
+    ];
+
+    /// Stable name (the `NNCG_SERVE_STEAL_POLICY` vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            StealPolicy::HalfLength => "half-length",
+            StealPolicy::OneLength => "one-length",
+            StealPolicy::HalfAge => "half-age",
+            StealPolicy::OneAge => "one-age",
+        }
+    }
+
+    /// Parse a policy name; `None` for unknown input (callers fall back
+    /// to the default rather than failing startup on a typo'd env var).
+    pub fn parse(s: &str) -> Option<StealPolicy> {
+        StealPolicy::ALL.iter().copied().find(|p| p.name() == s)
+    }
+
+    /// Whether the victim is chosen by front-request age rather than by
+    /// queue length.
+    pub fn by_age(self) -> bool {
+        matches!(self, StealPolicy::HalfAge | StealPolicy::OneAge)
+    }
+
+    /// How many requests to steal from a victim with `backlog` queued.
+    pub fn take_count(self, backlog: usize) -> usize {
+        match self {
+            StealPolicy::HalfLength | StealPolicy::HalfAge => (backlog + 1) / 2,
+            StealPolicy::OneLength | StealPolicy::OneAge => backlog.min(1),
+        }
+    }
+}
+
+/// Pick a steal victim among `candidates = (shard idx, queue len, front
+/// admission seq)` snapshots: by length (longest queue wins) or by age
+/// (smallest front sequence number — the oldest head-of-line — wins).
+/// Empty queues are never victims; ties keep the first candidate. Pure so
+/// the unit tests can pin the choice without building a pool.
+fn choose_victim(
+    policy: StealPolicy,
+    candidates: &[(usize, usize, Option<u64>)],
+) -> Option<usize> {
+    let mut best: Option<(usize, usize, u64)> = None; // (idx, len, front_seq)
+    for &(idx, len, front) in candidates {
+        if len == 0 {
+            continue;
+        }
+        // A non-empty snapshot without a front seq lost a race to a
+        // concurrent pop; treat it as newest so it never wins by age.
+        let front = front.unwrap_or(u64::MAX);
+        let wins = match (policy.by_age(), best) {
+            (_, None) => true,
+            (false, Some((_, bl, _))) => len > bl,
+            (true, Some((_, _, bf))) => front < bf,
+        };
+        if wins {
+            best = Some((idx, len, front));
+        }
+    }
+    best.map(|(idx, _, _)| idx)
 }
 
 /// A queued request stamped with its global admission sequence number
@@ -238,6 +334,13 @@ impl ShardQueue {
 
     fn len(&self) -> usize {
         self.lock().deque.len()
+    }
+
+    /// `(queue length, admission seq of the front request)` under one
+    /// lock — a coherent snapshot for age-based victim selection.
+    fn len_and_front_seq(&self) -> (usize, Option<u64>) {
+        let q = self.lock();
+        (q.deque.len(), q.deque.front().map(|sr| sr.seq))
     }
 
     /// Park until a push arrives or `timeout` elapses (idle workers park
@@ -432,6 +535,12 @@ impl ShardPool {
         &self.metrics
     }
 
+    /// The model registry this pool routes through (pre-admission checks,
+    /// e.g. the net front-end's unknown-model gate).
+    pub(crate) fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
     pub fn shards(&self) -> usize {
         self.shards.len()
     }
@@ -502,24 +611,26 @@ impl ShardPool {
         &self.shards[home]
     }
 
-    /// Work stealing: called by a worker whose own queue is empty. Takes
-    /// the oldest half of the most backlogged peer queue and executes it,
-    /// attributing *outcomes* to the thief shard (its breaker did the
-    /// work) while the in-flight charge stays on the victim's queue (it is
-    /// the victim's backlog being finished). Returns whether anything was
-    /// actually stolen and executed.
+    /// Work stealing: called by a worker whose own queue is empty. Picks a
+    /// victim per [`ShardConfig::steal_policy`] (longest queue or oldest
+    /// head-of-line), takes the policy's share from the *front* of its
+    /// FIFO, and executes it — attributing *outcomes* to the thief shard
+    /// (its breaker did the work) while the in-flight charge stays on the
+    /// victim's queue (it is the victim's backlog being finished). Returns
+    /// whether anything was actually stolen and executed.
     fn try_steal(self: &Arc<Self>, thief: &Arc<Shard>) -> bool {
-        let mut best: Option<(usize, usize)> = None; // (len, idx)
-        for (i, s) in self.shards.iter().enumerate() {
-            if i == thief.idx {
-                continue;
-            }
-            let len = s.queue.len();
-            if len > 0 && best.map_or(true, |(bl, _)| len > bl) {
-                best = Some((len, i));
-            }
-        }
-        let Some((len, vidx)) = best else { return false };
+        let policy = self.cfg.steal_policy;
+        let candidates: Vec<(usize, usize, Option<u64>)> = self
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != thief.idx)
+            .map(|(i, s)| {
+                let (len, front) = s.queue.len_and_front_seq();
+                (i, len, front)
+            })
+            .collect();
+        let Some(vidx) = choose_victim(policy, &candidates) else { return false };
         if let Some(plan) = &self.cfg.faults {
             // Widen the thief-vs-thief / thief-vs-owner race window.
             if let Some(d) = plan.maybe_delay_at(FaultSite::StealRace, thief.idx) {
@@ -527,7 +638,8 @@ impl ShardPool {
             }
         }
         let victim = &self.shards[vidx];
-        let batch = victim.queue.steal_batch((len + 1) / 2);
+        // Re-read the length at take time: the snapshot may be stale.
+        let batch = victim.queue.steal_batch(policy.take_count(victim.queue.len()).max(1));
         if batch.is_empty() {
             return false; // lost the race to the owner or another thief
         }
@@ -873,38 +985,92 @@ mod tests {
         assert_eq!(snap.total_requests, 9);
     }
 
-    /// The steal-order property: interleaving owner pops and steals in any
-    /// pattern consumes the queue exactly in submission (seq) order — a
-    /// steal takes the *oldest* work, so a single submitter's requests are
-    /// never dequeued out of order, and none are lost or duplicated.
+    /// The steal-order property, pinned **under every steal policy**:
+    /// interleaving owner pops and policy-sized steals in any pattern
+    /// consumes the queue exactly in submission (seq) order — a steal
+    /// takes the *oldest* work whatever the policy's amount, so a single
+    /// submitter's requests are never dequeued out of order, and none are
+    /// lost or duplicated.
     #[test]
     fn property_steals_never_reorder_dequeue_for_a_single_submitter() {
         use crate::util::XorShift64;
-        let mut rng = XorShift64::new(7);
-        for _round in 0..20 {
-            let q = mk_queue(4096);
-            let total = 64 + rng.below(64) as u64;
-            let mut _rxs = Vec::new();
-            for seq in 1..=total {
-                let (req, rx) = mk_req("tiny");
-                q.push(SeqReq { seq, req }).unwrap();
-                _rxs.push(rx);
+        for policy in StealPolicy::ALL {
+            let mut rng = XorShift64::new(7);
+            for _round in 0..20 {
+                let q = mk_queue(4096);
+                let total = 64 + rng.below(64) as u64;
+                let mut _rxs = Vec::new();
+                for seq in 1..=total {
+                    let (req, rx) = mk_req("tiny");
+                    q.push(SeqReq { seq, req }).unwrap();
+                    _rxs.push(rx);
+                }
+                let mut consumed: Vec<u64> = Vec::new();
+                while consumed.len() < total as usize {
+                    // Randomly interleave owner pops of random sizes with
+                    // steals sized by the policy under test.
+                    let batch = if rng.below(2) == 0 {
+                        q.pop_batch(1 + rng.below(5), Duration::ZERO)
+                    } else {
+                        q.steal_batch(policy.take_count(q.len()).max(1))
+                    };
+                    consumed.extend(batch.iter().map(|sr| sr.seq));
+                }
+                let expected: Vec<u64> = (1..=total).collect();
+                assert_eq!(
+                    consumed, expected,
+                    "dequeue order must equal submission order under {}",
+                    policy.name()
+                );
+                assert_eq!(q.len(), 0);
             }
-            let mut consumed: Vec<u64> = Vec::new();
-            while consumed.len() < total as usize {
-                // Randomly interleave owner pops and steals of random sizes.
-                let take = 1 + rng.below(5);
-                let batch = if rng.below(2) == 0 {
-                    q.pop_batch(take, Duration::ZERO)
-                } else {
-                    q.steal_batch(take)
-                };
-                consumed.extend(batch.iter().map(|sr| sr.seq));
-            }
-            let expected: Vec<u64> = (1..=total).collect();
-            assert_eq!(consumed, expected, "dequeue order must equal submission order");
-            assert_eq!(q.len(), 0);
         }
+    }
+
+    #[test]
+    fn steal_policy_names_round_trip_and_default_is_half_length() {
+        assert_eq!(StealPolicy::default(), StealPolicy::HalfLength);
+        for p in StealPolicy::ALL {
+            assert_eq!(StealPolicy::parse(p.name()), Some(p), "{}", p.name());
+        }
+        assert_eq!(StealPolicy::parse("steal-everything"), None);
+    }
+
+    #[test]
+    fn steal_policy_take_counts() {
+        for backlog in [0usize, 1, 2, 5, 100] {
+            assert_eq!(StealPolicy::HalfLength.take_count(backlog), (backlog + 1) / 2);
+            assert_eq!(StealPolicy::HalfAge.take_count(backlog), (backlog + 1) / 2);
+            assert_eq!(StealPolicy::OneLength.take_count(backlog), backlog.min(1));
+            assert_eq!(StealPolicy::OneAge.take_count(backlog), backlog.min(1));
+        }
+    }
+
+    #[test]
+    fn choose_victim_by_length_and_by_age() {
+        // (shard idx, queue len, front admission seq)
+        let candidates = [
+            (0, 3, Some(40u64)),
+            (1, 7, Some(90)), // longest
+            (2, 2, Some(10)), // oldest head-of-line
+            (3, 0, None),     // empty: never a victim
+        ];
+        assert_eq!(choose_victim(StealPolicy::HalfLength, &candidates), Some(1));
+        assert_eq!(choose_victim(StealPolicy::OneLength, &candidates), Some(1));
+        assert_eq!(choose_victim(StealPolicy::HalfAge, &candidates), Some(2));
+        assert_eq!(choose_victim(StealPolicy::OneAge, &candidates), Some(2));
+        // All-empty: no victim under any policy.
+        let empty = [(0, 0, None), (1, 0, None)];
+        for p in StealPolicy::ALL {
+            assert_eq!(choose_victim(p, &empty), None, "{}", p.name());
+        }
+        // A non-empty snapshot that lost its front to a racing pop is
+        // treated as newest: by age it loses to any real front.
+        let racy = [(0, 1, None), (1, 1, Some(5))];
+        assert_eq!(choose_victim(StealPolicy::OneAge, &racy), Some(1));
+        // Length ties keep the first candidate (stable choice).
+        let tied = [(0, 4, Some(2)), (1, 4, Some(1))];
+        assert_eq!(choose_victim(StealPolicy::HalfLength, &tied), Some(0));
     }
 
     #[test]

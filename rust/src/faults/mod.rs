@@ -56,10 +56,21 @@ pub enum FaultSite {
     /// after choosing a victim, widening the window where two thieves
     /// race for the same backlog.
     StealRace,
+    /// `coordinator::net`: the server drops the connection right after a
+    /// frame's first byte arrives (mid-frame disconnect from the client's
+    /// point of view; no reply for that frame, which was never accepted).
+    NetDropConn,
+    /// `coordinator::net`: a response frame is written in two halves with
+    /// the plan's delay between them (clients must reassemble a reply
+    /// split mid-length-prefix).
+    NetPartialWrite,
+    /// `coordinator::net`: the reader stalls for the plan's delay after a
+    /// frame's first byte, eating into the per-frame read deadline.
+    NetSlowRead,
 }
 
 /// All injectable sites, in stable order (indexes [`FaultPlan`] state).
-pub const ALL_SITES: [FaultSite; 9] = [
+pub const ALL_SITES: [FaultSite; 12] = [
     FaultSite::CompileFail,
     FaultSite::CompileSlow,
     FaultSite::DlopenFail,
@@ -69,6 +80,9 @@ pub const ALL_SITES: [FaultSite; 9] = [
     FaultSite::LatencySpike,
     FaultSite::ShardKill,
     FaultSite::StealRace,
+    FaultSite::NetDropConn,
+    FaultSite::NetPartialWrite,
+    FaultSite::NetSlowRead,
 ];
 
 impl FaultSite {
@@ -83,6 +97,9 @@ impl FaultSite {
             FaultSite::LatencySpike => 6,
             FaultSite::ShardKill => 7,
             FaultSite::StealRace => 8,
+            FaultSite::NetDropConn => 9,
+            FaultSite::NetPartialWrite => 10,
+            FaultSite::NetSlowRead => 11,
         }
     }
 
@@ -97,6 +114,9 @@ impl FaultSite {
             FaultSite::LatencySpike => "latency-spike",
             FaultSite::ShardKill => "shard-kill",
             FaultSite::StealRace => "steal-race",
+            FaultSite::NetDropConn => "net-drop-conn",
+            FaultSite::NetPartialWrite => "net-partial-write",
+            FaultSite::NetSlowRead => "net-slow-read",
         }
     }
 
@@ -213,7 +233,7 @@ impl FaultPlanBuilder {
     }
 
     pub fn build(self) -> Arc<FaultPlan> {
-        let mut specs = [FaultSpec::Off; 9];
+        let mut specs = [FaultSpec::Off; 12];
         for (site, spec) in &self.specs {
             specs[site.idx()] = *spec;
         }

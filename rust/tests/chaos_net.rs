@@ -1,0 +1,454 @@
+//! Socket chaos suite for the TCP serving front-end.
+//!
+//! Extends the sharded chaos contract (`chaos_sharded.rs`) across the
+//! wire: the exactly-one-reply guarantee must survive client disconnects
+//! mid-frame, slow-loris partial frames, injected connection drops and
+//! partial writes (`NNCG_FAULTS` net sites), shard kill-storms under
+//! pipelined TCP load, and a `stop_with_timeout` shutdown that answers
+//! in-flight connections with status `Stopped`. Every scenario is seeded
+//! (`NNCG_CHAOS_SEED`; CI runs 1, 2, 3) and gates on the accounting
+//! invariant: submitted == replied + shed, lost == 0.
+
+use nncg::coordinator::{
+    serve_sharded, NetClient, NetConfig, NetError, NetServer, Router, ServeError, ServerHandle,
+    ShardConfig, StealPolicy,
+};
+use nncg::faults::{FaultPlan, FaultSite, FaultSpec, FaultyEngine};
+use nncg::graph::zoo;
+use nncg::interp::InterpEngine;
+use nncg::runtime::InferenceEngine;
+use nncg::tensor::Tensor;
+use nncg::util::XorShift64;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn chaos_seed() -> u64 {
+    std::env::var("NNCG_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// The three paper models on interpreter engines (deterministic weights),
+/// plus one seeded input per model.
+fn paper_router(seed: u64) -> (Arc<Router>, Vec<(&'static str, Tensor)>) {
+    let router = Arc::new(Router::new());
+    let mut inputs = Vec::new();
+    let mut rng = XorShift64::new(seed ^ 0xB17);
+    for (name, model) in [
+        ("ball", zoo::ball_classifier().with_random_weights(11)),
+        ("pedestrian", zoo::pedestrian_classifier().with_random_weights(12)),
+        ("robot", zoo::robot_detector().with_random_weights(13)),
+    ] {
+        let dims = model.input.dims().to_vec();
+        router.register(name, Arc::new(InterpEngine::new(model).unwrap()));
+        inputs.push((name, Tensor::rand(&dims, 0.0, 1.0, &mut rng)));
+    }
+    (router, inputs)
+}
+
+fn tiny_handle(cfg: ShardConfig) -> ServerHandle {
+    let router = Arc::new(Router::new());
+    router.register(
+        "tiny",
+        Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(3)).unwrap()),
+    );
+    serve_sharded(router, cfg)
+}
+
+fn tiny_input() -> Tensor {
+    Tensor::from_vec(&[8, 8, 1], vec![0.5; 64]).unwrap()
+}
+
+/// Acceptance: loopback TCP replies are **bit-identical** to in-process
+/// `Submitter` replies for the three paper models.
+#[test]
+fn tcp_replies_bit_identical_to_in_process_for_paper_models() {
+    let (router, inputs) = paper_router(chaos_seed());
+    let handle = serve_sharded(
+        router,
+        ShardConfig { shards: 2, workers_per_shard: 1, ..ShardConfig::default() },
+    );
+    let server =
+        NetServer::start(handle.submitter(), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let submitter = handle.submitter();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    for (model, input) in &inputs {
+        let local = submitter.infer(model, input.clone()).expect("in-process reply");
+        let remote = client.infer(model, input).expect("tcp reply");
+        assert_eq!(remote, local, "{model}: TCP reply must be bit-identical");
+    }
+    server.stop();
+    let snap = handle.stop();
+    assert_eq!(snap.net_frames, inputs.len() as u64);
+    assert_eq!(snap.net_replies, inputs.len() as u64);
+    assert_eq!(snap.net_bad_frames, 0);
+    assert_eq!(snap.net_dropped_conns, 0);
+}
+
+/// Injected `net-drop-conn`: the server kills the connection right after
+/// a frame starts arriving — the frame is never accepted, never reaches
+/// the pool, and gets no reply; the next connection serves normally.
+#[test]
+fn injected_conn_drop_closes_without_reply_and_without_pool_traffic() {
+    let plan = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::NetDropConn, FaultSpec::First(1))
+        .build();
+    let handle = tiny_handle(ShardConfig::default());
+    let server = NetServer::start(
+        handle.submitter(),
+        "127.0.0.1:0",
+        NetConfig { faults: Some(Arc::clone(&plan)), ..NetConfig::default() },
+    )
+    .unwrap();
+
+    let mut victim = NetClient::connect(server.local_addr()).unwrap();
+    victim.send("tiny", &tiny_input()).unwrap();
+    match victim.read_reply() {
+        Err(_) => {} // connection died: EOF or reset, never a reply
+        Ok(r) => panic!("dropped connection must not deliver a reply, got {r:?}"),
+    }
+    assert_eq!(plan.fired(FaultSite::NetDropConn), 1);
+
+    // Fault exhausted (First(1)): a fresh connection works.
+    let mut ok = NetClient::connect(server.local_addr()).unwrap();
+    let y = ok.infer("tiny", &tiny_input()).expect("post-fault serving");
+    assert_eq!(y.dims(), &[2, 2, 2]);
+
+    server.stop();
+    let snap = handle.stop();
+    assert_eq!(snap.net_dropped_conns, 1);
+    assert_eq!(snap.net_frames, 1, "only the post-fault frame was accepted");
+    assert_eq!(snap.total_requests, 1, "the dropped frame never reached the pool");
+}
+
+/// Slow-loris: a client trickles half a frame and stalls. The per-frame
+/// read deadline disconnects it in bounded time; nothing hangs, nothing
+/// reaches the pool.
+#[test]
+fn slow_loris_partial_frame_hits_the_read_deadline() {
+    let handle = tiny_handle(ShardConfig::default());
+    let server = NetServer::start(
+        handle.submitter(),
+        "127.0.0.1:0",
+        NetConfig { read_timeout: Duration::from_millis(150), ..NetConfig::default() },
+    )
+    .unwrap();
+
+    let mut loris = NetClient::connect(server.local_addr()).unwrap();
+    let frame = nncg::coordinator::proto::encode_request(
+        1,
+        "tiny",
+        &[8, 8, 1],
+        &[0.5; 64],
+    )
+    .unwrap();
+    loris.send_raw(&frame[..frame.len() / 2]).unwrap();
+    // Do not send the rest; the server must cut us off near the deadline.
+    let t0 = Instant::now();
+    match loris.read_reply() {
+        Err(_) => {} // disconnected
+        Ok(r) => panic!("slow-loris must not be answered, got {r:?}"),
+    }
+    let waited = t0.elapsed();
+    assert!(
+        waited < Duration::from_secs(10),
+        "disconnect must be bounded by the read deadline, waited {waited:?}"
+    );
+
+    server.stop();
+    let snap = handle.stop();
+    assert_eq!(snap.net_dropped_conns, 1, "slow-loris counts as a dropped conn");
+    assert_eq!(snap.net_frames, 0, "the partial frame was never accepted");
+    assert_eq!(snap.total_requests, 0);
+}
+
+/// Injected `net-partial-write`: every response frame is written in two
+/// halves with a stall between them — the client must reassemble replies
+/// split mid-frame, bit-identically.
+#[test]
+fn partial_writes_are_reassembled_by_the_client() {
+    let plan = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::NetPartialWrite, FaultSpec::Every(1))
+        .delay(Duration::from_millis(2))
+        .build();
+    let handle = tiny_handle(ShardConfig::default());
+    let server = NetServer::start(
+        handle.submitter(),
+        "127.0.0.1:0",
+        NetConfig { faults: Some(Arc::clone(&plan)), ..NetConfig::default() },
+    )
+    .unwrap();
+    let submitter = handle.submitter();
+    let reference = submitter.infer("tiny", tiny_input()).unwrap();
+
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    for _ in 0..5 {
+        let y = client.infer("tiny", &tiny_input()).expect("split reply reassembled");
+        assert_eq!(y, reference);
+    }
+    assert_eq!(plan.fired(FaultSite::NetPartialWrite), 5);
+    server.stop();
+    let snap = handle.stop();
+    assert_eq!(snap.net_replies, 5);
+    assert_eq!(snap.net_dropped_conns, 0);
+}
+
+/// `stop_with_timeout` under a slow engine: frames still queued when the
+/// shutdown deadline fires are answered over the wire with status
+/// `Stopped` — every accepted frame gets exactly one reply, none hang.
+#[test]
+fn stop_with_timeout_answers_in_flight_frames_with_stopped_status() {
+    // A 50 ms latency spike on every inference, one worker: a pipelined
+    // burst is guaranteed to still be queued when shutdown fires.
+    let spike = FaultPlan::builder(chaos_seed())
+        .site(FaultSite::LatencySpike, FaultSpec::Every(1))
+        .delay(Duration::from_millis(50))
+        .build();
+    let router = Arc::new(Router::new());
+    let slow: Arc<dyn InferenceEngine> = Arc::new(FaultyEngine::new(
+        Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(3)).unwrap()),
+        spike,
+    ));
+    router.register("tiny", slow);
+    let handle = serve_sharded(
+        router,
+        ShardConfig { shards: 1, workers_per_shard: 1, ..ShardConfig::default() },
+    );
+    let server =
+        NetServer::start(handle.submitter(), "127.0.0.1:0", NetConfig::default()).unwrap();
+
+    let total = 10u64;
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let mut sent = Vec::new();
+    for _ in 0..total {
+        sent.push(client.send("tiny", &tiny_input()).unwrap());
+    }
+    // Wait for the first reply so the burst is definitely admitted, then
+    // shut the pool down with a deadline far shorter than the backlog.
+    let (first_id, first) = client.read_reply().unwrap();
+    assert_eq!(first_id, sent[0]);
+    assert!(first.is_ok(), "first reply should be served, got {first:?}");
+
+    server.begin_stop();
+    let snap = handle.stop_with_timeout(Duration::from_millis(1));
+
+    let mut ok = 1u64; // the first reply, already read
+    let mut stopped = 0u64;
+    for expect_id in &sent[1..] {
+        let (id, reply) = client.read_reply().expect("every accepted frame is answered");
+        assert_eq!(id, *expect_id, "replies arrive in submission order");
+        match reply {
+            Ok(_) => ok += 1,
+            Err(e) => {
+                assert_eq!(e.kind(), "stopped", "unexpected error reply: {e}");
+                stopped += 1;
+            }
+        }
+    }
+    assert_eq!(ok + stopped, total, "exactly one reply per accepted frame");
+    assert!(stopped >= 1, "a 1 ms deadline cannot drain a 50 ms/request backlog");
+    assert_eq!(
+        snap.stopped_replies, stopped,
+        "wire Stopped replies must equal the pool's purge count"
+    );
+    // After the pool stopped, the connection drains and closes.
+    server.stop();
+}
+
+/// Seeded kill-storm over TCP: shard workers die randomly under pipelined
+/// load from several connections, with net fault sites (slow reads,
+/// partial writes) exercising the wire at the same time — built from the
+/// same `NNCG_FAULTS` vocabulary CI uses. The accounting gate must hold:
+/// every submitted frame is answered exactly once (ok, or a typed shed),
+/// and nothing is lost.
+#[test]
+fn kill_storm_over_tcp_holds_the_accounting_gate() {
+    let seed = chaos_seed();
+    let plan = FaultPlan::parse(&format!(
+        "seed={seed},delay-ms=1,shard-kill=prob:0.02,net-slow-read=every:7,net-partial-write=every:5"
+    ))
+    .expect("net sites parse from the NNCG_FAULTS vocabulary");
+    let router = Arc::new(Router::new());
+    router.register(
+        "tiny",
+        Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(3)).unwrap()),
+    );
+    let handle = serve_sharded(
+        router,
+        ShardConfig {
+            shards: 4,
+            workers_per_shard: 1,
+            queue_capacity: 4096,
+            steal: true,
+            steal_policy: StealPolicy::HalfAge,
+            faults: Some(Arc::clone(&plan)),
+            ..ShardConfig::default()
+        },
+    );
+    let server = NetServer::start(
+        handle.submitter(),
+        "127.0.0.1:0",
+        NetConfig { faults: Some(Arc::clone(&plan)), ..NetConfig::default() },
+    )
+    .unwrap();
+    let addr = server.local_addr();
+
+    let clients = 4u64;
+    let per_client = 64u64;
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        joins.push(std::thread::spawn(move || {
+            let mut client = NetClient::connect(addr).expect("connect");
+            let input = tiny_input();
+            let window = 16usize;
+            let mut submitted = 0u64;
+            let mut replied_ok = 0u64;
+            let mut shed = 0u64;
+            let mut pending = std::collections::VecDeque::new();
+            let mut drain =
+                |pending: &mut std::collections::VecDeque<u64>,
+                 client: &mut NetClient,
+                 replied_ok: &mut u64,
+                 shed: &mut u64| {
+                    let expect = pending.pop_front().expect("pending");
+                    let (id, reply) =
+                        client.read_reply().expect("accepted frames are always answered");
+                    assert_eq!(id, expect, "client {c}: per-connection reply order");
+                    match reply {
+                        Ok(y) => {
+                            assert_eq!(y.dims(), &[2, 2, 2]);
+                            *replied_ok += 1;
+                        }
+                        Err(e) => {
+                            // The only acceptable error under a kill-storm
+                            // is an admission shed; kills themselves must
+                            // be absorbed by respawn + steal.
+                            assert_eq!(e.kind(), "queue-full", "client {c}: {e}");
+                            *shed += 1;
+                        }
+                    }
+                };
+            for _ in 0..per_client {
+                pending.push_back(client.send("tiny", &input).expect("send"));
+                submitted += 1;
+                if pending.len() >= window {
+                    drain(&mut pending, &mut client, &mut replied_ok, &mut shed);
+                }
+            }
+            while !pending.is_empty() {
+                drain(&mut pending, &mut client, &mut replied_ok, &mut shed);
+            }
+            (submitted, replied_ok, shed)
+        }));
+    }
+    let mut submitted = 0u64;
+    let mut replied_ok = 0u64;
+    let mut shed = 0u64;
+    for j in joins {
+        let (s, r, sh) = j.join().expect("client thread must not panic");
+        submitted += s;
+        replied_ok += r;
+        shed += sh;
+    }
+
+    server.stop();
+    let snap = handle.stop();
+    // The gate: submitted == replied + shed, lost == 0 (lost would have
+    // paniced a client thread above).
+    assert_eq!(submitted, clients * per_client);
+    assert_eq!(submitted, replied_ok + shed, "accounting gate");
+    assert_eq!(snap.net_frames, submitted, "every frame accepted");
+    assert_eq!(snap.net_replies, submitted, "every frame answered over the wire");
+    assert_eq!(snap.net_bad_frames, 0);
+    assert_eq!(snap.net_dropped_conns, 0);
+}
+
+/// Satellite regression: a storm of unknown-model frames is rejected
+/// *before* the pool — zero shard-queue slots consumed, zero pool
+/// requests executed, queues empty — and the same connection still
+/// serves a registered model afterwards.
+#[test]
+fn unknown_model_storm_leaves_queue_depth_and_in_flight_at_zero() {
+    let handle = tiny_handle(ShardConfig {
+        shards: 2,
+        workers_per_shard: 1,
+        ..ShardConfig::default()
+    });
+    let server =
+        NetServer::start(handle.submitter(), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let storm = 100u64;
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let ghost_input = Tensor::from_vec(&[2, 2], vec![0.0; 4]).unwrap();
+    let mut pending = std::collections::VecDeque::new();
+    for i in 0..storm {
+        pending.push_back(client.send(&format!("ghost-{i}"), &ghost_input).unwrap());
+        // Pipeline up to the window, then drain one.
+        if pending.len() >= 32 {
+            let expect = pending.pop_front().unwrap();
+            let (id, reply) = client.read_reply().unwrap();
+            assert_eq!(id, expect);
+            let err = reply.expect_err("unknown model must be rejected");
+            assert_eq!(err.kind(), "model-unknown");
+            assert!(err.message.contains("tiny"), "lists registered models: {}", err.message);
+        }
+    }
+    while let Some(expect) = pending.pop_front() {
+        let (id, reply) = client.read_reply().unwrap();
+        assert_eq!(id, expect);
+        assert_eq!(reply.expect_err("rejected").kind(), "model-unknown");
+    }
+
+    // Same connection, known model: still served.
+    let y = client.infer("tiny", &tiny_input()).expect("known model after storm");
+    assert_eq!(y.dims(), &[2, 2, 2]);
+
+    server.stop();
+    let snap = handle.stop();
+    assert_eq!(snap.net_unknown_rejects, storm);
+    assert_eq!(snap.total_requests, 1, "only the known-model frame reached the pool");
+    assert_eq!(snap.queue_full_sheds, 0, "no shard-queue slot was consumed");
+    for s in &snap.shards {
+        assert_eq!(s.queue_len, 0, "shard {} queue must be empty", s.idx);
+    }
+    assert_eq!(snap.net_frames, storm + 1);
+    assert_eq!(snap.net_replies, storm + 1, "every rejection is still a reply");
+}
+
+/// The submitter used by the net server correctly reports registry
+/// membership (the pre-submission gate's primitive).
+#[test]
+fn submitter_has_model_tracks_the_router() {
+    let router = Arc::new(Router::new());
+    let handle = serve_sharded(Arc::clone(&router), ShardConfig::default());
+    let submitter = handle.submitter();
+    assert!(!submitter.has_model("tiny"));
+    router.register(
+        "tiny",
+        Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(3)).unwrap()),
+    );
+    assert!(submitter.has_model("tiny"), "hot registration is visible immediately");
+    assert_eq!(submitter.registered_models(), vec!["tiny".to_string()]);
+    handle.stop();
+}
+
+/// `NetError` surfaces the remote taxonomy: an unknown model infer()
+/// returns `NetError::Remote` whose kind matches `ServeError::kind()`.
+#[test]
+fn net_error_remote_kind_matches_serve_error_kind() {
+    let handle = tiny_handle(ShardConfig::default());
+    let server =
+        NetServer::start(handle.submitter(), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let mut client = NetClient::connect(server.local_addr()).unwrap();
+    let err = client
+        .infer("ghost", &Tensor::from_vec(&[1], vec![0.0]).unwrap())
+        .expect_err("unknown model");
+    match err {
+        NetError::Remote(remote) => {
+            assert_eq!(
+                remote.kind(),
+                ServeError::ModelUnknown { model: "ghost".into(), registered: vec![] }.kind()
+            );
+        }
+        other => panic!("expected NetError::Remote, got {other:?}"),
+    }
+    server.stop();
+    handle.stop();
+}

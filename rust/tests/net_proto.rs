@@ -1,0 +1,375 @@
+//! Protocol torture tests for the TCP front-end's wire format.
+//!
+//! Two layers:
+//!
+//! 1. **Codec**: seeded random frames round-trip through encode→decode
+//!    under adversarial segmentation — 1-byte reads, random split points
+//!    (length prefixes cut mid-field), and coalesced frames (many frames
+//!    in one contiguous buffer). Malformed inputs (bad magic, version
+//!    skew, oversize lengths, truncated payloads) each yield a *typed*
+//!    [`FrameError`] — never a panic, never a hang, never an allocation
+//!    driven by an unvalidated length.
+//! 2. **Server**: each malformed byte pattern sent to a live [`NetServer`]
+//!    closes that connection (observed as EOF client-side) while the
+//!    server itself stays up and serves a fresh connection — and bumps
+//!    `net_bad_frames` instead of crashing.
+//!
+//! Seeded via `NNCG_CHAOS_SEED` (CI runs 1, 2, 3).
+
+use nncg::coordinator::proto::{
+    self, encode_err, encode_ok, encode_request, read_request, read_response, status_name,
+    status_of, FrameError, ResponseBody, MAGIC, MAX_DIMS, MAX_ELEMS, MAX_MODEL_LEN, VERSION,
+};
+use nncg::coordinator::{serve_sharded, NetClient, NetConfig, NetServer, Router, ServeError, ShardConfig};
+use nncg::graph::zoo;
+use nncg::interp::InterpEngine;
+use nncg::tensor::Tensor;
+use nncg::util::XorShift64;
+use std::io::Read;
+use std::sync::Arc;
+
+fn chaos_seed() -> u64 {
+    std::env::var("NNCG_CHAOS_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(1)
+}
+
+/// A reader that serves an in-memory buffer in adversarially small
+/// chunks: `max_chunk == 1` is the pure 1-byte-read case; larger values
+/// split the stream at seeded random points, so length prefixes and f32
+/// payloads land across read boundaries.
+struct ChunkedReader {
+    buf: Vec<u8>,
+    pos: usize,
+    rng: XorShift64,
+    max_chunk: usize,
+}
+
+impl ChunkedReader {
+    fn new(buf: Vec<u8>, seed: u64, max_chunk: usize) -> Self {
+        ChunkedReader { buf, pos: 0, rng: XorShift64::new(seed), max_chunk: max_chunk.max(1) }
+    }
+}
+
+impl Read for ChunkedReader {
+    fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+        if self.pos >= self.buf.len() {
+            return Ok(0);
+        }
+        let chunk = 1 + self.rng.below(self.max_chunk);
+        let n = chunk.min(out.len()).min(self.buf.len() - self.pos);
+        out[..n].copy_from_slice(&self.buf[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
+    }
+}
+
+fn random_request(rng: &mut XorShift64, id: u64) -> (String, Vec<usize>, Vec<f32>) {
+    let name_len = 1 + rng.below(24);
+    let model: String =
+        (0..name_len).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+    let ndims = 1 + rng.below(3);
+    let dims: Vec<usize> = (0..ndims).map(|_| 1 + rng.below(6)).collect();
+    let count: usize = dims.iter().product();
+    let data: Vec<f32> = (0..count).map(|_| rng.uniform(-100.0, 100.0) + id as f32).collect();
+    (model, dims, data)
+}
+
+/// Round-trip seeded random request frames through every segmentation
+/// regime: whole-buffer, 1-byte reads, and random chunking.
+#[test]
+fn request_frames_round_trip_under_adversarial_segmentation() {
+    let seed = chaos_seed();
+    let mut rng = XorShift64::new(seed ^ 0xA11CE);
+    for i in 0..200u64 {
+        let (model, dims, data) = random_request(&mut rng, i);
+        let buf = encode_request(i, &model, &dims, &data).expect("encodable");
+        for max_chunk in [1usize, 3, 7, buf.len()] {
+            let mut r = ChunkedReader::new(buf.clone(), seed.wrapping_add(i), max_chunk);
+            let frame = read_request(&mut r)
+                .unwrap_or_else(|e| panic!("decode failed (chunk {max_chunk}): {e}"))
+                .expect("one frame present");
+            assert_eq!(frame.id, i);
+            assert_eq!(frame.model, model);
+            assert_eq!(frame.dims, dims);
+            assert_eq!(frame.data, data, "f32 payload must be bit-identical");
+        }
+    }
+}
+
+/// Coalesced frames: many frames packed into one buffer decode back in
+/// order, under 1-byte reads, with a clean EOF after the last.
+#[test]
+fn coalesced_frames_decode_in_order() {
+    let seed = chaos_seed();
+    let mut rng = XorShift64::new(seed ^ 0xC0A1E5CE);
+    let mut buf = Vec::new();
+    let mut expected = Vec::new();
+    for i in 0..32u64 {
+        let (model, dims, data) = random_request(&mut rng, i);
+        buf.extend_from_slice(&encode_request(i, &model, &dims, &data).unwrap());
+        expected.push((model, dims, data));
+    }
+    let mut r = ChunkedReader::new(buf, seed, 1);
+    for (i, (model, dims, data)) in expected.iter().enumerate() {
+        let frame = read_request(&mut r).unwrap().expect("frame present");
+        assert_eq!(frame.id, i as u64);
+        assert_eq!(&frame.model, model);
+        assert_eq!(&frame.dims, dims);
+        assert_eq!(&frame.data, data);
+    }
+    assert!(read_request(&mut r).unwrap().is_none(), "clean EOF at the frame boundary");
+}
+
+/// Response frames (success and every error status) round-trip under
+/// random segmentation.
+#[test]
+fn response_frames_round_trip_under_segmentation() {
+    let seed = chaos_seed();
+    let mut rng = XorShift64::new(seed ^ 0x5E5F);
+    for i in 0..100u64 {
+        let dims = vec![1 + rng.below(4) as usize, 1 + rng.below(4) as usize];
+        let count: usize = dims.iter().product();
+        let data: Vec<f32> = (0..count).map(|_| rng.normal()).collect();
+        let t = Tensor::from_vec(&dims, data.clone()).unwrap();
+        let buf = encode_ok(i, &t).unwrap();
+        let mut r = ChunkedReader::new(buf, seed ^ i, 1 + (i % 5) as usize);
+        let f = read_response(&mut r).unwrap().expect("frame");
+        assert_eq!(f.id, i);
+        assert_eq!(f.status, proto::STATUS_OK);
+        assert_eq!(f.body, ResponseBody::Tensor { dims: dims.clone(), data });
+    }
+    let errors = [
+        ServeError::DeadlineExceeded { model: "m".into(), late_by_us: 12 },
+        ServeError::QueueFull { capacity: 9 },
+        ServeError::EngineFailed { model: "m".into(), reason: "boom".into() },
+        ServeError::ModelUnknown { model: "m".into(), registered: vec!["ball".into()] },
+        ServeError::Degraded {
+            model: "m".into(),
+            primary_error: "p".into(),
+            fallback_error: "f".into(),
+        },
+        ServeError::Stopped,
+    ];
+    for (i, e) in errors.iter().enumerate() {
+        let buf = encode_err(i as u64, e);
+        let mut r = ChunkedReader::new(buf, seed ^ (i as u64) << 3, 2);
+        let f = read_response(&mut r).unwrap().expect("frame");
+        assert_eq!(f.id, i as u64);
+        assert_eq!(f.status, status_of(e));
+        assert_eq!(status_name(f.status), Some(e.kind()), "status byte ↔ kind mapping");
+        match &f.body {
+            ResponseBody::Message(m) => assert_eq!(m, &e.to_string()),
+            other => panic!("expected message body, got {other:?}"),
+        }
+    }
+}
+
+/// Every malformed-input class maps to its typed error. Never a panic;
+/// oversize length prefixes are rejected *before* any allocation.
+#[test]
+fn malformed_inputs_yield_typed_errors() {
+    let good = encode_request(1, "ball", &[2, 2], &[0.0; 4]).unwrap();
+
+    // Bad magic.
+    let mut bad = good.clone();
+    bad[0] = b'X';
+    assert!(matches!(
+        read_request(&mut bad.as_slice()).unwrap_err(),
+        FrameError::BadMagic(_)
+    ));
+
+    // Version skew.
+    let mut bad = good.clone();
+    bad[4] = VERSION + 1;
+    assert_eq!(
+        read_request(&mut bad.as_slice()).unwrap_err(),
+        FrameError::BadVersion { got: VERSION + 1 }
+    );
+
+    // Oversize model-name length.
+    let mut bad = good.clone();
+    bad[13..15].copy_from_slice(&(MAX_MODEL_LEN as u16 + 1).to_le_bytes());
+    assert_eq!(
+        read_request(&mut bad.as_slice()).unwrap_err(),
+        FrameError::ModelTooLong { len: MAX_MODEL_LEN + 1 }
+    );
+
+    // Oversize dims product (a hostile length prefix claiming 2^32-1 per
+    // dim) must be rejected without allocating the claimed payload.
+    let mut bad = Vec::new();
+    bad.extend_from_slice(&MAGIC);
+    bad.push(VERSION);
+    bad.extend_from_slice(&7u64.to_le_bytes());
+    bad.extend_from_slice(&1u16.to_le_bytes());
+    bad.push(b'm');
+    bad.push(2); // ndims
+    bad.extend_from_slice(&u32::MAX.to_le_bytes());
+    bad.extend_from_slice(&u32::MAX.to_le_bytes());
+    bad.extend_from_slice(&u32::MAX.to_le_bytes()); // count
+    assert!(matches!(
+        read_request(&mut bad.as_slice()).unwrap_err(),
+        FrameError::Oversize { elems } if elems > MAX_ELEMS
+    ));
+
+    // Zero and oversize rank.
+    for ndims in [0u8, MAX_DIMS as u8 + 1] {
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&MAGIC);
+        bad.push(VERSION);
+        bad.extend_from_slice(&7u64.to_le_bytes());
+        bad.extend_from_slice(&1u16.to_le_bytes());
+        bad.push(b'm');
+        bad.push(ndims);
+        assert_eq!(
+            read_request(&mut bad.as_slice()).unwrap_err(),
+            FrameError::BadDims { ndims: ndims as usize }
+        );
+    }
+
+    // Count disagreeing with the dims product.
+    let mut bad = good.clone();
+    let count_off = good.len() - 4 * 4 - 4;
+    bad[count_off..count_off + 4].copy_from_slice(&3u32.to_le_bytes());
+    assert_eq!(
+        read_request(&mut bad.as_slice()).unwrap_err(),
+        FrameError::CountMismatch { count: 3, product: 4 }
+    );
+
+    // Non-UTF-8 model name.
+    let mut bad = good.clone();
+    bad[15] = 0xFF;
+    assert_eq!(read_request(&mut bad.as_slice()).unwrap_err(), FrameError::BadUtf8);
+
+    // Truncation at every prefix length of a valid frame.
+    for cut in 1..good.len() {
+        assert_eq!(
+            read_request(&mut good[..cut].to_vec().as_slice()).unwrap_err(),
+            FrameError::Truncated,
+            "cut at {cut}"
+        );
+    }
+
+    // Unknown response status byte.
+    let t = Tensor::from_vec(&[1], vec![1.0]).unwrap();
+    let mut bad = encode_ok(3, &t).unwrap();
+    bad[13] = 250;
+    assert_eq!(
+        read_response(&mut bad.as_slice()).unwrap_err(),
+        FrameError::BadStatus { got: 250 }
+    );
+}
+
+/// Seeded fuzz: random corruptions of valid frames either decode to the
+/// original (corruption hit the f32 payload, which has no invalid bit
+/// patterns the framing cares about) or fail with a typed error — never a
+/// panic. This is the "test suite as spec" backstop for the whole decode
+/// surface.
+#[test]
+fn random_corruptions_never_panic() {
+    let seed = chaos_seed();
+    let mut rng = XorShift64::new(seed ^ 0xF022);
+    for i in 0..500u64 {
+        let (model, dims, data) = random_request(&mut rng, i);
+        let mut buf = encode_request(i, &model, &dims, &data).unwrap();
+        // Corrupt 1-4 random bytes (or truncate).
+        if rng.below(4) == 0 {
+            let keep = rng.below(buf.len());
+            buf.truncate(keep);
+        } else {
+            for _ in 0..=rng.below(4) {
+                let at = rng.below(buf.len());
+                buf[at] ^= 1u8 << rng.below(8);
+            }
+        }
+        // Must return, Ok or typed Err — the decode cannot panic or hang.
+        let _ = read_request(&mut buf.as_slice());
+    }
+}
+
+fn tiny_pool() -> (nncg::coordinator::ServerHandle, Arc<Router>) {
+    let router = Arc::new(Router::new());
+    router.register(
+        "tiny",
+        Arc::new(InterpEngine::new(zoo::tiny_test_net().with_random_weights(3)).unwrap()),
+    );
+    let handle = serve_sharded(
+        Arc::clone(&router),
+        ShardConfig { shards: 1, workers_per_shard: 1, ..ShardConfig::default() },
+    );
+    (handle, router)
+}
+
+/// Server-level contract: every malformed byte pattern closes *that*
+/// connection (EOF client-side, no reply frame) and bumps
+/// `net_bad_frames`; the server keeps serving fresh connections.
+#[test]
+fn malformed_frames_close_the_connection_but_not_the_server() {
+    let (handle, _router) = tiny_pool();
+    let server =
+        NetServer::start(handle.submitter(), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let addr = server.local_addr();
+
+    let good = encode_request(1, "tiny", &[8, 8, 1], &[0.25; 64]).unwrap();
+    let mut bad_magic = good.clone();
+    bad_magic[0] = b'X';
+    let mut bad_version = good.clone();
+    bad_version[4] = VERSION + 9;
+    let mut oversize = good.clone();
+    oversize[13..15].copy_from_slice(&u16::MAX.to_le_bytes());
+    let malformed: Vec<Vec<u8>> = vec![bad_magic, bad_version, oversize];
+
+    for bytes in &malformed {
+        let mut client = NetClient::connect(addr).expect("connect");
+        client.send_raw(bytes).expect("raw write");
+        // The server must close the connection without replying: the next
+        // read sees EOF (Closed), not a frame and not a hang.
+        match client.read_reply() {
+            Err(_) => {}
+            Ok(reply) => panic!("malformed frame must not be answered, got {reply:?}"),
+        }
+    }
+
+    // The server survives: a fresh connection still serves inference.
+    let mut client = NetClient::connect(addr).expect("connect after abuse");
+    let x = Tensor::from_vec(&[8, 8, 1], vec![0.25; 64]).unwrap();
+    let y = client.infer("tiny", &x).expect("server still serving");
+    assert_eq!(y.dims(), &[2, 2, 2]);
+
+    server.stop();
+    let snap = handle.stop();
+    assert_eq!(snap.net_bad_frames, malformed.len() as u64);
+    assert_eq!(snap.net_connections, malformed.len() as u64 + 1);
+    // Malformed frames are never accepted, so frames == replies == 1 (the
+    // one good inference).
+    assert_eq!(snap.net_frames, 1);
+    assert_eq!(snap.net_replies, 1);
+}
+
+/// A truncated payload (client hangs up mid-frame) is a dropped
+/// connection, not a bad frame, and gets no reply.
+#[test]
+fn truncated_frame_is_a_dropped_connection() {
+    let (handle, _router) = tiny_pool();
+    let server =
+        NetServer::start(handle.submitter(), "127.0.0.1:0", NetConfig::default()).unwrap();
+    let good = encode_request(1, "tiny", &[8, 8, 1], &[0.5; 64]).unwrap();
+
+    let client = {
+        let mut c = NetClient::connect(server.local_addr()).unwrap();
+        c.send_raw(&good[..good.len() / 2]).unwrap();
+        c.shutdown(std::net::Shutdown::Write).unwrap();
+        c
+    };
+    drop(client); // full close; server sees EOF mid-frame
+
+    // Serve one good request afterwards to sequence the assertion after
+    // the server has certainly processed the truncated connection.
+    let mut c2 = NetClient::connect(server.local_addr()).unwrap();
+    let x = Tensor::from_vec(&[8, 8, 1], vec![0.5; 64]).unwrap();
+    c2.infer("tiny", &x).expect("still serving");
+
+    server.stop();
+    let snap = handle.stop();
+    assert_eq!(snap.net_dropped_conns, 1, "mid-frame EOF is a dropped conn");
+    assert_eq!(snap.net_bad_frames, 0);
+    assert_eq!(snap.net_frames, 1, "the truncated frame was never accepted");
+}
